@@ -1,0 +1,75 @@
+//! PJRT artifact-path overhead: per-phase runtime of the AOT-compiled
+//! JAX/Pallas pipeline vs the native Rust engine on identical shapes —
+//! quantifies what the HLO round-trip costs on this CPU testbed (on TPU
+//! the artifact path is the fast one; here it validates composition).
+//!
+//! Run: `cargo bench --bench artifact_runtime` (needs `make artifacts`).
+
+use std::path::Path;
+
+use emdpar::core::Metric;
+use emdpar::data::{generate_text, TextConfig};
+use emdpar::lc::{EngineParams, LcEngine, Method};
+use emdpar::runtime::{ArtifactEngine, Executor};
+use emdpar::util::stats::Bench;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    let exec = match Executor::new(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("skipping: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    println!("# PJRT platform: {}\n", exec.platform());
+
+    for profile in ["dev", "text"] {
+        let Some(spec) = exec
+            .manifest()
+            .artifacts
+            .values()
+            .find(|a| a.profile == profile && a.entry == emdpar::runtime::Entry::Fused)
+        else {
+            continue;
+        };
+        let ds = generate_text(&TextConfig {
+            n: spec.n * 2, // two tiles
+            classes: 4,
+            vocab: spec.v,
+            dim: spec.m,
+            doc_len: (spec.h / 2).max(5),
+            seed: 17,
+            ..Default::default()
+        });
+        let art = ArtifactEngine::new(&exec, &ds, profile).unwrap();
+        let native = LcEngine::new(
+            std::sync::Arc::new(ds.clone()),
+            EngineParams { metric: Metric::L2, threads: emdpar::util::threadpool::default_threads(), symmetric: false },
+        );
+        let q = ds.histogram(0);
+        let k = 2;
+        // warm the compilation cache before timing
+        art.distances(&q, k, false).unwrap();
+
+        let mut bench = Bench::quick();
+        let a = bench.run(&format!("{profile}: artifact ACT-1 query"), || {
+            std::hint::black_box(art.distances(&q, k, false).unwrap());
+        });
+        let b = bench.run(&format!("{profile}: native   ACT-1 query"), || {
+            std::hint::black_box(native.distances(&q, Method::Act { k }));
+        });
+        println!(
+            "{profile}: v={} h={} n_tile={} tiles={} -> artifact {:.3} ms vs native {:.3} ms ({:.1}x)\n",
+            spec.v,
+            spec.h,
+            spec.n,
+            art.num_tiles(),
+            a.per_iter.as_secs_f64() * 1e3,
+            b.per_iter.as_secs_f64() * 1e3,
+            a.per_iter.as_secs_f64() / b.per_iter.as_secs_f64()
+        );
+    }
+    println!("# note: CPU-interpret artifacts exist to prove composition & numerics;");
+    println!("# DESIGN.md §Hardware-Adaptation estimates the TPU tile performance.");
+}

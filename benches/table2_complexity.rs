@@ -1,0 +1,77 @@
+//! Paper Table 2: time complexity of brute-force RWMD — O(n h² m) — vs
+//! LC-RWMD — O(vhm + nh).  Sweeps the histogram size h at fixed n, v, m and
+//! prints per-query runtimes; the expected *shape* is quadratic growth for
+//! the brute force and linear for LC-RWMD, with the crossover at tiny h.
+//!
+//! Run: `cargo bench --bench table2_complexity` (EMDPAR_BENCH_FULL=1 for
+//! the full sweep).
+
+use emdpar::approx::rwmd::rwmd_directed;
+use emdpar::core::Metric;
+use emdpar::data::{generate_text, TextConfig};
+use emdpar::lc::{plan_query, rwmd_direction_a, PlanParams};
+use emdpar::util::stats::Bench;
+
+fn main() {
+    let full = std::env::var("EMDPAR_BENCH_FULL").is_ok();
+    let hs: &[usize] = if full { &[25, 50, 100, 200, 400] } else { &[25, 50, 100] };
+    let n = if full { 2000 } else { 400 };
+    let vocab = 4000;
+    let m = 64;
+    let threads = emdpar::util::threadpool::default_threads();
+
+    println!("# Table 2 — RWMD O(nh^2m) vs LC-RWMD O(vhm + nh)");
+    println!("# n={n} v={vocab} m={m} threads={threads}\n");
+    println!(
+        "{:<8} {:>16} {:>16} {:>10}",
+        "h", "RWMD/query", "LC-RWMD/query", "speedup"
+    );
+
+    let mut bench = Bench::quick();
+    for &h in hs {
+        let ds = generate_text(&TextConfig {
+            n,
+            vocab,
+            dim: m,
+            doc_len: h,
+            truncate: h,
+            classes: 10,
+            seed: 5,
+            ..Default::default()
+        });
+        let db: Vec<_> = (0..ds.len()).map(|u| ds.histogram(u)).collect();
+        let query = ds.histogram(0);
+
+        // brute-force RWMD: per-pair cost matrices (quadratic in h)
+        let brute = bench.run(&format!("rwmd-brute h={h}"), || {
+            let mut acc = 0.0f64;
+            // sample 32 database docs to keep the bench bounded; report /pair
+            for d in db.iter().take(32) {
+                acc += rwmd_directed(&ds.embeddings, d, &query, Metric::L2);
+            }
+            std::hint::black_box(acc);
+        });
+        let brute_per_query = brute.per_iter.as_secs_f64() / 32.0 * n as f64;
+
+        // LC-RWMD: one Phase-1 plan + linear sweep
+        let lc = bench.run(&format!("lc-rwmd    h={h}"), || {
+            let plan = plan_query(
+                &ds.embeddings,
+                &query,
+                PlanParams { k: 1, metric: Metric::L2, keep_d: false, threads },
+            );
+            std::hint::black_box(rwmd_direction_a(&plan, &ds.matrix, threads));
+        });
+        let lc_per_query = lc.per_iter.as_secs_f64();
+
+        println!(
+            "{:<8} {:>13.3} ms {:>13.3} ms {:>9.1}x",
+            h,
+            brute_per_query * 1e3,
+            lc_per_query * 1e3,
+            brute_per_query / lc_per_query
+        );
+    }
+    println!("\n# expectation: RWMD column grows ~quadratically in h, LC-RWMD ~linearly;");
+    println!("# speedup approaches the paper's O(h) factor as h grows.");
+}

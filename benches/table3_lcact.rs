@@ -1,0 +1,85 @@
+//! Paper Table 3: LC-ACT complexity O(vhm + nhk) — runtime must be linear
+//! in the iteration count k (Phase 2) on top of a fixed Phase-1 cost, and
+//! linear in the database size n.
+//!
+//! Run: `cargo bench --bench table3_lcact`
+
+use emdpar::core::Metric;
+use emdpar::data::{generate_text, TextConfig};
+use emdpar::lc::{act_direction_a, plan_query, PlanParams};
+use emdpar::util::stats::Bench;
+
+fn main() {
+    let full = std::env::var("EMDPAR_BENCH_FULL").is_ok();
+    let n = if full { 4000 } else { 1000 };
+    let ds = generate_text(&TextConfig {
+        n,
+        vocab: 4000,
+        dim: 64,
+        doc_len: 80,
+        classes: 10,
+        seed: 6,
+        ..Default::default()
+    });
+    let threads = emdpar::util::threadpool::default_threads();
+    let query = ds.histogram(0);
+    let mut bench = Bench::quick();
+
+    println!("# Table 3 — LC-ACT O(vhm + nhk): runtime vs k (n={n})\n");
+    println!("{:<8} {:>14} {:>14} {:>14}", "k", "phase1", "phase2", "total");
+    for k in [1usize, 2, 4, 8, 16] {
+        let p1 = bench.run(&format!("phase1 k={k}"), || {
+            std::hint::black_box(plan_query(
+                &ds.embeddings,
+                &query,
+                PlanParams { k, metric: Metric::L2, keep_d: false, threads },
+            ));
+        });
+        let plan = plan_query(
+            &ds.embeddings,
+            &query,
+            PlanParams { k, metric: Metric::L2, keep_d: false, threads },
+        );
+        let p2 = bench.run(&format!("phase2 k={k}"), || {
+            std::hint::black_box(act_direction_a(&plan, &ds.matrix, threads));
+        });
+        println!(
+            "{:<8} {:>11.3} ms {:>11.3} ms {:>11.3} ms",
+            k,
+            p1.per_iter.as_secs_f64() * 1e3,
+            p2.per_iter.as_secs_f64() * 1e3,
+            (p1.per_iter + p2.per_iter).as_secs_f64() * 1e3
+        );
+    }
+
+    println!("\n# runtime vs database size n (k=2):");
+    println!("{:<8} {:>14} {:>14}", "n", "phase2", "per-doc");
+    for frac in [4usize, 2, 1] {
+        let sub = n / frac;
+        let subds = generate_text(&TextConfig {
+            n: sub,
+            vocab: 4000,
+            dim: 64,
+            doc_len: 80,
+            classes: 10,
+            seed: 6,
+            ..Default::default()
+        });
+        let plan = plan_query(
+            &subds.embeddings,
+            &subds.histogram(0),
+            PlanParams { k: 2, metric: Metric::L2, keep_d: false, threads },
+        );
+        let p2 = bench.run(&format!("phase2 n={sub}"), || {
+            std::hint::black_box(act_direction_a(&plan, &subds.matrix, threads));
+        });
+        println!(
+            "{:<8} {:>11.3} ms {:>11.3} us",
+            sub,
+            p2.per_iter.as_secs_f64() * 1e3,
+            p2.per_iter.as_secs_f64() * 1e6 / sub as f64
+        );
+    }
+    println!("\n# expectation: phase1 ~constant in k (top-k selection is cheap),");
+    println!("# phase2 linear in k and linear in n — matching O(vhm + nhk).");
+}

@@ -1,0 +1,90 @@
+//! Quickstart: generate a small image dataset, search it with every method
+//! through the coordinator, and (when `make artifacts` has run) execute the
+//! same query through the AOT-compiled JAX/Pallas pipeline via PJRT.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use std::path::Path;
+
+use emdpar::config::{Config, DatasetSpec};
+use emdpar::coordinator::SearchEngine;
+use emdpar::data::{generate_text, TextConfig};
+use emdpar::lc::Method;
+use emdpar::runtime::{ArtifactEngine, Executor};
+
+fn main() -> anyhow::Result<()> {
+    // 1. a small synthetic digit database behind the coordinator
+    let config = Config {
+        dataset: DatasetSpec::SynthMnist { n: 500, background: 0.0, seed: 42 },
+        topl: 5,
+        ..Default::default()
+    };
+    let engine = SearchEngine::from_config(config)?;
+    let stats = engine.dataset().stats();
+    println!(
+        "dataset: {} (n={}, avg_h={:.1}, vocab={}, m={})\n",
+        engine.dataset().name, stats.n, stats.avg_h, stats.vocab_size, stats.dim
+    );
+
+    // 2. query image #0 under each distance measure
+    let query = engine.dataset().histogram(0);
+    let label = engine.dataset().labels[0];
+    println!("query: image 0, digit class {label}");
+    for method in [
+        Method::Bow,
+        Method::Wcd,
+        Method::Rwmd,
+        Method::Omr,
+        Method::Act { k: 2 },
+        Method::Act { k: 8 },
+    ] {
+        let res = engine.search(&query, method, 5)?;
+        let labels: Vec<u16> = res.labels.clone();
+        println!(
+            "  {:<6} top-5 labels {:?}  best distance {:.4}",
+            method.name(),
+            labels,
+            res.hits[0].0
+        );
+    }
+    let m = engine.metrics();
+    println!(
+        "\ncoordinator metrics: {} queries, mean latency {:.1} us",
+        m.queries.load(std::sync::atomic::Ordering::Relaxed),
+        m.mean_latency_us()
+    );
+
+    // 3. the same pipeline through the PJRT artifact path (three layers:
+    //    Pallas kernel -> JAX pipeline -> Rust runtime)
+    let artifact_dir = Path::new("artifacts");
+    match Executor::new(artifact_dir) {
+        Ok(exec) => {
+            println!("\nPJRT backend: platform '{}'", exec.platform());
+            // dev-profile-sized text dataset for the artifact demo
+            let spec = exec.manifest().artifacts.values().find(|a| a.profile == "dev").unwrap();
+            let ds = generate_text(&TextConfig {
+                n: 128,
+                classes: 4,
+                vocab: spec.v,
+                dim: spec.m,
+                doc_len: spec.h / 2,
+                seed: 3,
+                ..Default::default()
+            });
+            let art = ArtifactEngine::new(&exec, &ds, "dev")?;
+            let q = ds.histogram(0);
+            let d = art.distances(&q, 2, true)?;
+            let mut best: Vec<usize> = (0..d.len()).collect();
+            best.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+            println!(
+                "artifact ACT-1 top-5 for text doc 0 (label {}): {:?}",
+                ds.labels[0],
+                best[..5].iter().map(|&u| (u, ds.labels[u])).collect::<Vec<_>>()
+            );
+        }
+        Err(e) => println!("\n(skipping PJRT demo: {e}; run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! End-to-end serving driver: boot the coordinator + TCP server on a real
+//! (synthetic) image database, fire concurrent batched client load at it,
+//! and report latency/throughput — the "serving" proof that all three
+//! layers compose behind the request path.
+//!
+//! ```bash
+//! cargo run --release --example serve_demo -- [--n 2000] [--clients 4] [--requests 50]
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use emdpar::config::{Config, DatasetSpec};
+use emdpar::coordinator::{SearchEngine, Server};
+use emdpar::util::cli::CommandSpec;
+use emdpar::util::json::Json;
+use emdpar::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let spec = CommandSpec::new("serve_demo", "end-to-end serving load test")
+        .opt("n", "2000", "database size")
+        .opt("clients", "4", "concurrent client connections")
+        .opt("requests", "50", "requests per client")
+        .opt("method", "act-1", "distance method")
+        .opt("l", "10", "results per query");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage("cargo run --example"));
+        return Ok(());
+    }
+    let p = spec.parse(&args)?;
+    let n = p.usize("n")?;
+    let clients = p.usize("clients")?;
+    let requests = p.usize("requests")?;
+    let method = p.str("method").to_string();
+    let l = p.usize("l")?;
+
+    let config = Config {
+        dataset: DatasetSpec::SynthMnist { n, background: 0.0, seed: 42 },
+        max_batch: 8,
+        linger_ms: 1,
+        ..Default::default()
+    };
+    let engine = SearchEngine::from_config(config)?;
+    println!(
+        "database: {} docs ({}), serving '{}' top-{l}",
+        engine.dataset().len(),
+        engine.dataset().name,
+        method
+    );
+    let metrics = engine.metrics();
+    let server = Server::bind(engine, "127.0.0.1:0")?;
+    let addr = server.local_addr()?;
+
+    let accept = std::thread::spawn({
+        move || server.serve_n(clients)
+    });
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let method = method.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            let stream = TcpStream::connect(addr)?;
+            let mut reader = BufReader::new(stream.try_clone()?);
+            let mut w = stream;
+            let mut latencies = Vec::with_capacity(requests);
+            for r in 0..requests {
+                let id = (c * 7919 + r * 13) % n;
+                let req = format!(
+                    "{{\"op\": \"search_id\", \"id\": {id}, \"l\": {l}, \"method\": \"{method}\"}}\n"
+                );
+                let t = Instant::now();
+                w.write_all(req.as_bytes())?;
+                w.flush()?;
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                latencies.push(t.elapsed().as_secs_f64());
+                let json = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
+                anyhow::ensure!(
+                    json.get("ok") == Some(&Json::Bool(true)),
+                    "server error: {line}"
+                );
+            }
+            Ok(latencies)
+        }));
+    }
+
+    let mut all: Vec<f64> = Vec::new();
+    for h in handles {
+        all.extend(h.join().expect("client thread")?);
+    }
+    accept.join().expect("accept thread")?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let s = Summary::from(&all);
+    let total = clients * requests;
+    println!("\n=== load test ===");
+    println!("requests:   {total} over {clients} connections");
+    println!("throughput: {:.1} queries/s (wall {:.2}s)", total as f64 / wall, wall);
+    println!(
+        "latency:    p50 {:.2} ms   p95 {:.2} ms   max {:.2} ms",
+        s.p50 * 1e3,
+        s.p95 * 1e3,
+        s.max * 1e3
+    );
+    println!(
+        "server:     {} batches for {} queries (mean batch {:.2})",
+        metrics.batches.load(std::sync::atomic::Ordering::Relaxed),
+        metrics.queries.load(std::sync::atomic::Ordering::Relaxed),
+        metrics.queries.load(std::sync::atomic::Ordering::Relaxed) as f64
+            / metrics.batches.load(std::sync::atomic::Ordering::Relaxed).max(1) as f64
+    );
+    println!("metrics:    {}", metrics.to_json().to_string_compact());
+    Ok(())
+}

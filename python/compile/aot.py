@@ -1,0 +1,140 @@
+"""AOT compiler: lower the Layer-2 entry points to HLO **text** artifacts.
+
+HLO text (not ``serialize()``-d ``HloModuleProto``) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the Rust
+side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/load_hlo/ for the reference wiring.
+
+Every artifact has **static** shapes; the Rust runtime pads/tiles queries
+and database shards to the artifact menu recorded in ``manifest.json``.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--profile all]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Artifact shape menu.
+#
+# profile -> (v, h, m, n_tile, k list).  "dev" is the small profile used by
+# tests and the quickstart; "mnist" matches the paper's image experiments
+# (28x28 = 784-bin histograms, m=2 pixel coordinates); "text" matches the
+# synthetic 20News-scale experiments (high-m embeddings, sparse docs).
+# ---------------------------------------------------------------------------
+PROFILES = {
+    "dev": dict(v=256, h=64, m=16, n=128, ks=(1, 2, 4, 8)),
+    "mnist": dict(v=784, h=784, m=2, n=256, ks=(1, 2, 4, 8, 16)),
+    "text": dict(v=4096, h=256, m=64, n=128, ks=(1, 2, 8)),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def build_entries(profile: str, cfg: dict):
+    """Yield (name, lowered, manifest-entry) triples for one profile."""
+    v, h, m, n, ks = cfg["v"], cfg["h"], cfg["m"], cfg["n"], cfg["ks"]
+    f32 = jnp.float32
+    sv = jax.ShapeDtypeStruct((v, m), f32)
+    sq = jax.ShapeDtypeStruct((h, m), f32)
+    sqw = jax.ShapeDtypeStruct((h,), f32)
+    sx = jax.ShapeDtypeStruct((n, v), f32)
+    sd = jax.ShapeDtypeStruct((v, h), f32)
+
+    for k in ks:
+        szk = jax.ShapeDtypeStruct((v, k), f32)
+
+        name = f"{profile}_phase1_k{k}"
+        fn = jax.jit(lambda V, Q, QW, _k=k: model.phase1(V, Q, QW, _k))
+        yield name, fn.lower(sv, sq, sqw), {
+            "entry": "phase1",
+            "profile": profile,
+            "v": v, "h": h, "m": m, "n": n, "k": k,
+            "inputs": [_spec((v, m)), _spec((h, m)), _spec((h,))],
+            "outputs": [_spec((v, h)), _spec((v, k)), _spec((v, k))],
+        }
+
+        name = f"{profile}_phase2_k{k}"
+        fn = jax.jit(model.phase2)
+        yield name, fn.lower(sx, szk, szk), {
+            "entry": "phase2",
+            "profile": profile,
+            "v": v, "h": h, "m": m, "n": n, "k": k,
+            "inputs": [_spec((n, v)), _spec((v, k)), _spec((v, k))],
+            "outputs": [_spec((n,))],
+        }
+
+        name = f"{profile}_fused_k{k}"
+        fn = jax.jit(lambda V, Q, QW, X, _k=k: model.lc_act_fused(V, Q, QW, X, _k))
+        yield name, fn.lower(sv, sq, sqw, sx), {
+            "entry": "fused",
+            "profile": profile,
+            "v": v, "h": h, "m": m, "n": n, "k": k,
+            "inputs": [_spec((v, m)), _spec((h, m)), _spec((h,)), _spec((n, v))],
+            "outputs": [_spec((n,)), _spec((n,))],
+        }
+
+    name = f"{profile}_rwmd_b"
+    fn = jax.jit(model.rwmd_direction_b)
+    yield name, fn.lower(sx, sd, sqw), {
+        "entry": "rwmd_b",
+        "profile": profile,
+        "v": v, "h": h, "m": m, "n": n, "k": 1,
+        "inputs": [_spec((n, v)), _spec((v, h)), _spec((h,))],
+        "outputs": [_spec((n,))],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--profile",
+        default="all",
+        choices=[*PROFILES.keys(), "all"],
+        help="which shape profile(s) to emit",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    profiles = list(PROFILES) if args.profile == "all" else [args.profile]
+    manifest = {"format": "hlo-text-v1", "artifacts": {}}
+    for prof in profiles:
+        for name, lowered, entry in build_entries(prof, PROFILES[prof]):
+            text = to_hlo_text(lowered)
+            path = os.path.join(args.out, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            entry["file"] = f"{name}.hlo.txt"
+            manifest["artifacts"][name] = entry
+            print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for the LC-ACT pipeline.
+
+Every kernel is written for TPU-shaped execution (VMEM tiles, MXU matmuls,
+VPU element-wise maps) but lowered with ``interpret=True`` so the resulting
+HLO runs on any PJRT backend, including the Rust CPU client on the request
+path.  Correctness oracles live in :mod:`ref` and are enforced by pytest.
+"""
+
+from .distance import pairwise_distance
+from .topk import row_topk
+from .transfers import constrained_transfers, rwmd_direction_b
+
+__all__ = [
+    "pairwise_distance",
+    "row_topk",
+    "constrained_transfers",
+    "rwmd_direction_b",
+]

@@ -1,0 +1,85 @@
+"""Phase-1 kernel: row-wise top-k smallest selection with indices.
+
+For each vocabulary coordinate (row of the ``(v, h)`` distance matrix) the
+LC-ACT Phase 1 needs the k smallest distances to the query coordinates
+(``Z``) together with the query-bin indices that produced them (``S``).
+
+k is tiny (1..16), so instead of sorting each row (the GPU version uses a
+bitonic sort) the kernel performs k masked argmin passes over the row tile
+— a branchless selection that vectorizes on the VPU and needs no scratch
+beyond the (bv, h) tile itself.
+
+Tie-breaking is "lowest index first" (``jnp.argmin`` semantics); the Rust
+CPU engine mirrors this exactly so artifact and native paths agree
+bit-for-bit on ties.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_MASK = 3.0e38  # sentinel larger than any real distance (python float: do
+# not use a jnp scalar here — pallas would treat it as a captured constant)
+
+
+def _topk_kernel(d_ref, z_ref, s_ref, *, k: int):
+    d = d_ref[...].astype(jnp.float32)  # (bv, h)
+    bv, h = d.shape
+    work = d
+    rows = jnp.arange(bv)
+    zs = []
+    ss = []
+    for _ in range(k):
+        idx = jnp.argmin(work, axis=1)  # first occurrence on ties
+        val = jnp.take_along_axis(work, idx[:, None], axis=1)[:, 0]
+        zs.append(val)
+        ss.append(idx.astype(jnp.int32))
+        work = work.at[rows, idx].set(_MASK)
+    z_ref[...] = jnp.stack(zs, axis=1)
+    s_ref[...] = jnp.stack(ss, axis=1)
+
+
+def _pick_block(n: int, target: int = 128) -> int:
+    for b in range(min(n, target), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_v"))
+def row_topk(d: jax.Array, k: int, *, block_v: int | None = None):
+    """Top-k smallest entries per row of ``d``.
+
+    Args:
+      d: ``(v, h)`` float32 distance matrix.
+      k: number of smallest entries to select per row; ``k <= h``.
+      block_v: row tile height; must divide ``v``.
+
+    Returns:
+      ``(z, s)`` where ``z`` is ``(v, k)`` float32 values in ascending
+      order and ``s`` is ``(v, k)`` int32 column indices.
+    """
+    nv, h = d.shape
+    assert 1 <= k <= h, f"k={k} must be in [1, h={h}]"
+    bv = block_v if block_v is not None else _pick_block(nv)
+    assert nv % bv == 0, f"block_v={bv} must divide v={nv}"
+
+    kernel = functools.partial(_topk_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(nv // bv,),
+        in_specs=[pl.BlockSpec((bv, h), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bv, k), lambda i: (i, 0)),
+            pl.BlockSpec((bv, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nv, k), jnp.float32),
+            jax.ShapeDtypeStruct((nv, k), jnp.int32),
+        ],
+        interpret=True,
+    )(d)

@@ -1,0 +1,48 @@
+"""Shared fixtures/helpers for the kernel test-suite."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+
+def make_instance(seed: int, v: int, h: int, m: int, n: int, sparsity: float = 0.7):
+    """Random LC-ACT instance: vocab, query, normalized sparse DB tile."""
+    rng = np.random.default_rng(seed)
+    vv = rng.normal(size=(v, m)).astype(np.float32)
+    q = rng.normal(size=(h, m)).astype(np.float32)
+    qw = rng.uniform(size=h).astype(np.float32)
+    qw /= qw.sum()
+    x = rng.uniform(size=(n, v)).astype(np.float32)
+    x[x < sparsity] = 0.0
+    # keep at least one nonzero per row, then L1-normalize
+    for u in range(n):
+        if x[u].sum() == 0:
+            x[u, rng.integers(0, v)] = 1.0
+    x /= x.sum(axis=1, keepdims=True)
+    return vv, q, qw, x
+
+
+def make_pair(seed: int, h: int, m: int, overlap: float = 0.0):
+    """Random normalized histogram pair + Euclidean cost matrix.
+
+    ``overlap`` is the fraction of coordinates shared between p and q
+    (exercises the dense/overlapping failure mode of RWMD, paper Section 4).
+    """
+    rng = np.random.default_rng(seed)
+    cp = rng.normal(size=(h, m)).astype(np.float64)
+    cq = rng.normal(size=(h, m)).astype(np.float64)
+    n_shared = int(overlap * h)
+    if n_shared:
+        cq[:n_shared] = cp[:n_shared]
+    p = rng.uniform(0.05, 1.0, size=h)
+    q = rng.uniform(0.05, 1.0, size=h)
+    p /= p.sum()
+    q /= q.sum()
+    c = np.sqrt(((cp[:, None, :] - cq[None, :, :]) ** 2).sum(-1))
+    return p, q, c
+
+
+@pytest.fixture(scope="session")
+def small_instance():
+    return make_instance(0, v=64, h=16, m=8, n=32)

@@ -1,0 +1,70 @@
+"""Pallas pairwise-distance kernel vs pure-numpy oracle."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import pairwise_distance
+from compile.kernels.ref import pairwise_distance_ref
+
+
+@pytest.mark.parametrize(
+    "v,h,m",
+    [(8, 4, 2), (64, 16, 8), (128, 32, 3), (96, 7, 300), (784, 12, 2), (50, 50, 64)],
+)
+def test_matches_reference(v, h, m):
+    rng = np.random.default_rng(v * 1000 + h * 10 + m)
+    vv = rng.normal(size=(v, m)).astype(np.float32)
+    q = rng.normal(size=(h, m)).astype(np.float32)
+    out = np.asarray(pairwise_distance(vv, q))
+    assert_allclose(out, pairwise_distance_ref(vv, q), rtol=1e-4, atol=1e-5)
+
+
+def test_identical_rows_give_zero():
+    rng = np.random.default_rng(1)
+    vv = rng.normal(size=(16, 4)).astype(np.float32)
+    out = np.asarray(pairwise_distance(vv, vv))
+    assert_allclose(np.diag(out), np.zeros(16), atol=1e-5)
+
+
+def test_nonnegative_even_with_cancellation():
+    # Large-magnitude nearly-identical coordinates stress the
+    # ||v||^2 - 2vq + ||q||^2 cancellation path the kernel clamps.
+    base = np.full((32, 8), 1e3, np.float32)
+    jit = base + np.random.default_rng(2).normal(scale=1e-3, size=(32, 8)).astype(np.float32)
+    out = np.asarray(pairwise_distance(base, jit))
+    assert (out >= 0).all()
+
+
+def test_explicit_block_size():
+    rng = np.random.default_rng(3)
+    vv = rng.normal(size=(60, 5)).astype(np.float32)
+    q = rng.normal(size=(9, 5)).astype(np.float32)
+    a = np.asarray(pairwise_distance(vv, q, block_v=20))
+    b = np.asarray(pairwise_distance(vv, q, block_v=60))
+    assert_allclose(a, b, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    v=st.integers(1, 96),
+    h=st.integers(1, 48),
+    m=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(v, h, m, seed):
+    rng = np.random.default_rng(seed)
+    vv = (rng.normal(size=(v, m)) * rng.uniform(0.1, 10)).astype(np.float32)
+    q = (rng.normal(size=(h, m)) * rng.uniform(0.1, 10)).astype(np.float32)
+    out = np.asarray(pairwise_distance(vv, q))
+    ref = pairwise_distance_ref(vv, q)
+    assert out.shape == (v, h)
+    # The kernel snaps d^2 below 1e-6 * (|v|^2 + |q|^2) to exactly zero
+    # (overlap detection, see distance.py); accept 0 inside that band.
+    scale = (vv * vv).sum(1)[:, None] + (q * q).sum(1)[None, :]
+    snap_band = ref.astype(np.float64) ** 2 <= 4e-6 * scale
+    ok = np.isclose(out, ref, rtol=1e-3, atol=1e-4) | (snap_band & (out == 0.0))
+    assert ok.all()

@@ -1,0 +1,118 @@
+"""Layer-2 pipeline: composition, per-pair equivalence, paper semantics."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+from tests.conftest import make_instance
+
+
+def test_fused_matches_composed(small_instance):
+    vv, q, qw, x = small_instance
+    k = 4
+    d, z, w = model.phase1(vv, q, qw, k)
+    t_a = np.asarray(model.phase2(x, z, w))
+    t_b = np.asarray(model.rwmd_direction_b(x, d, qw))
+    fa, fb = model.lc_act_fused(vv, q, qw, x, k)
+    assert_allclose(np.asarray(fa), t_a, rtol=1e-6)
+    assert_allclose(np.asarray(fb), t_b, rtol=1e-6)
+
+
+def test_pipeline_matches_numpy_reference(small_instance):
+    vv, q, qw, x = small_instance
+    for k in (1, 2, 4, 8):
+        fa, fb = model.lc_act_fused(vv, q, qw, x, k)
+        tr, dr, *_ = ref.lc_act_ref(vv, q, qw, x, k)
+        tbr = ref.rwmd_direction_b_ref(x, dr, qw)
+        assert_allclose(np.asarray(fa), tr, rtol=1e-4, atol=1e-6)
+        assert_allclose(np.asarray(fb), tbr, rtol=1e-4, atol=1e-6)
+
+
+def test_lc_equals_per_pair_act():
+    """LC-ACT on a database tile == Algorithm 3 run pair-by-pair.
+
+    This is the core semantic claim of Section 5: the vocabulary-factored
+    batched pipeline computes exactly the per-pair ACT values.
+    """
+    vv, q, qw, x = make_instance(42, v=48, h=12, m=6, n=20)
+    c_full = ref.pairwise_distance_ref(vv, q).astype(np.float64)
+    for k in (1, 2, 4, 8):
+        t, *_ = ref.lc_act_ref(vv, q, qw, x, k)
+        fa, _ = model.lc_act_fused(vv, q, qw, x, k)
+        for u in range(x.shape[0]):
+            supp = np.nonzero(x[u])[0]
+            p = x[u][supp]
+            c = c_full[supp]
+            expected = ref.act_pair_ref(p, qw, c, k)
+            assert abs(float(t[u]) - expected) < 1e-4
+            assert abs(float(np.asarray(fa)[u]) - expected) < 1e-3
+
+
+def test_lc_rwmd_special_case():
+    """k=1 pipeline == classic RWMD direction A (nearest-coordinate dot)."""
+    vv, q, qw, x = make_instance(7, v=32, h=10, m=4, n=12)
+    fa, _ = model.lc_act_fused(vv, q, qw, x, 1)
+    c_full = ref.pairwise_distance_ref(vv, q).astype(np.float64)
+    for u in range(x.shape[0]):
+        supp = np.nonzero(x[u])[0]
+        expected = ref.rwmd_pair_ref(x[u][supp], qw, c_full[supp])
+        assert abs(float(np.asarray(fa)[u]) - expected) < 1e-4
+
+
+def test_identical_histogram_act_zero():
+    """Dense identical p==q with k>=2: every coordinate overlaps with mass
+    capacity == its own weight, so the bound is 0 — and stays 0 (sanity)."""
+    rng = np.random.default_rng(3)
+    v, m = 24, 4
+    vv = rng.normal(size=(v, m)).astype(np.float32)
+    qw = rng.uniform(0.1, 1, size=v).astype(np.float32)
+    qw /= qw.sum()
+    # query == one database row, with the query coords = whole vocab
+    x = qw[None, :].repeat(3, axis=0)
+    fa, fb = model.lc_act_fused(vv, vv, qw, x, 2)
+    assert_allclose(np.asarray(fa), 0.0, atol=1e-6)
+    assert_allclose(np.asarray(fb), 0.0, atol=1e-6)
+
+
+def test_dense_overlap_rwmd_collapses_act_does_not():
+    """Paper Fig. 3 / Table 6 failure mode: full-overlap dense histograms.
+
+    RWMD (k=1) sees cost 0 between *different* histograms; ACT-1 (k=2)
+    produces a strictly positive distance.
+    """
+    rng = np.random.default_rng(4)
+    v, m = 24, 4
+    vv = rng.normal(size=(v, m)).astype(np.float32)
+    qw = rng.uniform(0.1, 1, size=v).astype(np.float32)
+    qw /= qw.sum()
+    other = rng.uniform(0.1, 1, size=v).astype(np.float32)
+    other /= other.sum()
+    x = other[None, :]
+    rwmd_a, rwmd_b = model.lc_act_fused(vv, vv, qw, x, 1)
+    act_a, _ = model.lc_act_fused(vv, vv, qw, x, 2)
+    assert float(np.asarray(rwmd_a)[0]) < 1e-6  # RWMD: blind
+    assert float(np.asarray(rwmd_b)[0]) < 1e-6
+    assert float(np.asarray(act_a)[0]) > 1e-4  # ACT-1: separates
+
+
+def test_bound_chain_rwmd_le_act_le_ict_le_emd():
+    """Theorem 2 on the LC pipeline vs LP oracle (small instance)."""
+    vv, q, qw, x = make_instance(11, v=20, h=8, m=3, n=6)
+    c_full = ref.pairwise_distance_ref(vv, q).astype(np.float64)
+    t1, *_ = ref.lc_act_ref(vv, q, qw, x, 1)  # RWMD
+    t2, *_ = ref.lc_act_ref(vv, q, qw, x, 2)  # ACT-1
+    t4, *_ = ref.lc_act_ref(vv, q, qw, x, 4)  # ACT-3
+    for u in range(x.shape[0]):
+        supp = np.nonzero(x[u])[0]
+        p = x[u][supp]
+        c = c_full[supp]
+        ict = ref.ict_pair_ref(p, qw, c)
+        emd = ref.emd_pair_ref(p, qw, c)
+        assert t1[u] <= t2[u] + 1e-6
+        assert t2[u] <= t4[u] + 1e-6
+        assert t4[u] <= ict + 1e-5
+        assert ict <= emd + 1e-5

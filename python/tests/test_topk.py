@@ -1,0 +1,80 @@
+"""Row-wise top-k kernel: values, indices, tie-breaking, edge cases."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose, assert_array_equal
+
+from compile.kernels import row_topk
+from compile.kernels.ref import row_topk_ref
+
+
+@pytest.mark.parametrize("v,h,k", [(8, 4, 1), (64, 16, 4), (32, 50, 16), (16, 8, 8)])
+def test_matches_reference(v, h, k):
+    rng = np.random.default_rng(v + h + k)
+    d = rng.uniform(size=(v, h)).astype(np.float32)
+    z, s = row_topk(d, k)
+    zr, sr = row_topk_ref(d, k)
+    assert_allclose(np.asarray(z), zr, rtol=1e-6)
+    assert_array_equal(np.asarray(s), sr)
+
+
+def test_ascending_order():
+    rng = np.random.default_rng(7)
+    d = rng.uniform(size=(40, 30)).astype(np.float32)
+    z, _ = row_topk(d, 8)
+    z = np.asarray(z)
+    assert (np.diff(z, axis=1) >= 0).all()
+
+
+def test_tie_breaking_lowest_index_first():
+    # All-equal row: indices must come out 0,1,2,...,k-1.
+    d = np.ones((4, 10), np.float32)
+    _, s = row_topk(d, 5)
+    assert_array_equal(np.asarray(s), np.tile(np.arange(5, dtype=np.int32), (4, 1)))
+
+
+def test_k_equals_h_is_full_sort():
+    rng = np.random.default_rng(9)
+    d = rng.uniform(size=(12, 6)).astype(np.float32)
+    z, s = row_topk(d, 6)
+    assert_allclose(np.asarray(z), np.sort(d, axis=1), rtol=1e-6)
+    assert_array_equal(np.asarray(s), np.argsort(d, axis=1, kind="stable"))
+
+
+def test_k1_is_rowmin():
+    rng = np.random.default_rng(11)
+    d = rng.uniform(size=(25, 13)).astype(np.float32)
+    z, s = row_topk(d, 1)
+    assert_allclose(np.asarray(z)[:, 0], d.min(axis=1), rtol=1e-6)
+    assert_array_equal(np.asarray(s)[:, 0], d.argmin(axis=1).astype(np.int32))
+
+
+def test_duplicates_within_row_are_kept():
+    # Two zeros in one row: both must appear in the top-2.
+    d = np.full((1, 6), 5.0, np.float32)
+    d[0, 2] = 0.0
+    d[0, 4] = 0.0
+    z, s = row_topk(d, 3)
+    assert_allclose(np.asarray(z)[0], [0.0, 0.0, 5.0])
+    assert_array_equal(np.asarray(s)[0, :2], [2, 4])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    v=st.integers(1, 64),
+    h=st.integers(1, 40),
+    data=st.data(),
+)
+def test_hypothesis_sweep(v, h, data):
+    k = data.draw(st.integers(1, h))
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    # quantize to provoke ties
+    d = (rng.integers(0, 7, size=(v, h)) / 3.0).astype(np.float32)
+    z, s = row_topk(d, k)
+    zr, sr = row_topk_ref(d, k)
+    assert_allclose(np.asarray(z), zr, rtol=1e-6)
+    assert_array_equal(np.asarray(s), sr)

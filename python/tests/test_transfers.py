@@ -1,0 +1,127 @@
+"""Phase-2/3 constrained-transfer kernel and direction-B RWMD kernel."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import constrained_transfers, rwmd_direction_b
+from compile.kernels.ref import (
+    constrained_transfers_ref,
+    rwmd_direction_b_ref,
+)
+from tests.conftest import make_instance
+from compile.kernels.ref import lc_act_ref
+
+
+def _zw(seed, v, k, h):
+    """Random plausible (Z, W): ascending distances, weights in [0, 1]."""
+    rng = np.random.default_rng(seed)
+    z = np.sort(rng.uniform(0.1, 2.0, size=(v, k)), axis=1).astype(np.float32)
+    w = rng.uniform(0.0, 2.0 / h, size=(v, k)).astype(np.float32)
+    return z, w
+
+
+@pytest.mark.parametrize("n,v,k", [(8, 16, 1), (32, 64, 2), (16, 48, 8), (64, 32, 16)])
+def test_matches_reference(n, v, k):
+    rng = np.random.default_rng(n + v + k)
+    x = rng.uniform(size=(n, v)).astype(np.float32)
+    x[x < 0.6] = 0
+    x /= np.maximum(x.sum(1, keepdims=True), 1e-9)
+    z, w = _zw(n * v + k, v, k, 16)
+    out = np.asarray(constrained_transfers(x, z, w))
+    assert_allclose(out, constrained_transfers_ref(x, z, w), rtol=1e-4, atol=1e-6)
+
+
+def test_k1_is_rwmd_dot_product():
+    """With k=1 Phase 2 degenerates to LC-RWMD: t = X . z1."""
+    rng = np.random.default_rng(5)
+    n, v = 16, 32
+    x = rng.uniform(size=(n, v)).astype(np.float32)
+    z = rng.uniform(0.1, 1.0, size=(v, 1)).astype(np.float32)
+    w = rng.uniform(size=(v, 1)).astype(np.float32)
+    out = np.asarray(constrained_transfers(x, z, w))
+    assert_allclose(out, x @ z[:, 0], rtol=1e-5)
+
+
+def test_huge_capacity_reduces_to_first_distance():
+    """If w >= row mass, everything moves at the smallest distance."""
+    rng = np.random.default_rng(6)
+    n, v, k = 8, 24, 4
+    x = rng.uniform(size=(n, v)).astype(np.float32)
+    z = np.sort(rng.uniform(0.1, 2.0, size=(v, k)), axis=1).astype(np.float32)
+    w = np.full((v, k), 1e9, np.float32)
+    out = np.asarray(constrained_transfers(x, z, w))
+    assert_allclose(out, x @ z[:, 0], rtol=1e-5)
+
+
+def test_zero_capacity_charges_kth_distance():
+    """If all capacities are zero, all mass ships at the k-th distance."""
+    rng = np.random.default_rng(7)
+    n, v, k = 8, 24, 4
+    x = rng.uniform(size=(n, v)).astype(np.float32)
+    z = np.sort(rng.uniform(0.1, 2.0, size=(v, k)), axis=1).astype(np.float32)
+    w = np.zeros((v, k), np.float32)
+    out = np.asarray(constrained_transfers(x, z, w))
+    assert_allclose(out, x @ z[:, k - 1], rtol=1e-5)
+
+
+def test_padding_rows_cost_zero():
+    z, w = _zw(8, 16, 4, 8)
+    x = np.zeros((4, 16), np.float32)
+    out = np.asarray(constrained_transfers(x, z, w))
+    assert_allclose(out, np.zeros(4), atol=1e-7)
+
+
+def test_monotone_in_k_prefix():
+    """Adding an iteration can only tighten (raise) the bound when Z is
+    ascending: ACT-(k-1) <= ACT-k <= ... computed via prefix sub-matrices."""
+    vv, q, qw, x = make_instance(21, v=48, h=12, m=4, n=16)
+    ts = []
+    for k in (1, 2, 4, 8):
+        t, *_ = lc_act_ref(vv, q, qw, x, k)
+        ts.append(t.astype(np.float64))
+    for a, b in zip(ts, ts[1:]):
+        assert (b - a >= -1e-5).all()
+
+
+@pytest.mark.parametrize("n,v,h", [(8, 16, 8), (32, 64, 16), (16, 100, 7)])
+def test_rwmd_b_matches_reference(n, v, h):
+    rng = np.random.default_rng(n * v + h)
+    x = rng.uniform(size=(n, v)).astype(np.float32)
+    x[x < 0.7] = 0
+    d = rng.uniform(0.01, 3.0, size=(v, h)).astype(np.float32)
+    qw = rng.uniform(size=h).astype(np.float32)
+    qw /= qw.sum()
+    out = np.asarray(rwmd_direction_b(x, d, qw))
+    assert_allclose(out, rwmd_direction_b_ref(x, d, qw), rtol=1e-4, atol=1e-6)
+
+
+def test_rwmd_b_empty_row_is_zero():
+    rng = np.random.default_rng(3)
+    x = np.zeros((4, 16), np.float32)
+    x[0, 2] = 1.0
+    d = rng.uniform(0.5, 1.0, size=(16, 8)).astype(np.float32)
+    qw = np.full(8, 1 / 8, np.float32)
+    out = np.asarray(rwmd_direction_b(x, d, qw))
+    assert out[0] > 0
+    assert_allclose(out[1:], 0.0, atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    v=st.integers(1, 64),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_transfers_sweep(n, v, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(size=(n, v)).astype(np.float32)
+    x[x < rng.uniform(0, 0.9)] = 0
+    z = np.sort(rng.uniform(0, 3, size=(v, k)), axis=1).astype(np.float32)
+    w = rng.uniform(0, 0.5, size=(v, k)).astype(np.float32)
+    out = np.asarray(constrained_transfers(x, z, w))
+    assert_allclose(out, constrained_transfers_ref(x, z, w), rtol=1e-3, atol=1e-5)

@@ -1,0 +1,108 @@
+//! Bag-of-Words cosine baseline (paper Section 6): plain sparse dot product
+//! after L2 normalization — no embedding proximity information.  Reported
+//! as a *distance* (1 - cosine) so smaller is better, matching the other
+//! measures' orientation in the evaluation harness.
+
+use crate::core::{CsrMatrix, Histogram};
+
+/// Cosine similarity between two sparse histograms (merge join).
+pub fn cosine_similarity(a: &Histogram, b: &Histogram) -> f64 {
+    let (ai, aw) = (a.indices(), a.weights());
+    let (bi, bw) = (b.indices(), b.weights());
+    let mut dot = 0.0f64;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < ai.len() && j < bi.len() {
+        match ai[i].cmp(&bi[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                dot += aw[i] as f64 * bw[j] as f64;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    let na = aw.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    let nb = bw.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na * nb)
+}
+
+/// BoW cosine distance: `1 - cos`.
+pub fn bow_distance(a: &Histogram, b: &Histogram) -> f64 {
+    (1.0 - cosine_similarity(a, b)).max(0.0)
+}
+
+/// Batched: distances from one query to every row of the database matrix.
+/// O(nnz) with precomputed row norms.
+pub fn bow_distances_batch(query: &Histogram, db: &CsrMatrix, row_norms: &[f32]) -> Vec<f64> {
+    assert_eq!(row_norms.len(), db.nrows());
+    let qn = query
+        .weights()
+        .iter()
+        .map(|&x| (x as f64) * (x as f64))
+        .sum::<f64>()
+        .sqrt();
+    let mut out = vec![1.0f64; db.nrows()];
+    if qn == 0.0 {
+        return out;
+    }
+    // scatter the query into a dense lookup once: O(v) space, O(nnz) time
+    let mut dense_q = vec![0.0f32; db.ncols()];
+    for (i, w) in query.iter() {
+        dense_q[i as usize] = w;
+    }
+    for u in 0..db.nrows() {
+        let (idx, w) = db.row(u);
+        let mut dot = 0.0f64;
+        for (&i, &x) in idx.iter().zip(w) {
+            dot += dense_q[i as usize] as f64 * x as f64;
+        }
+        let norm = row_norms[u] as f64;
+        out[u] = if norm > 0.0 { (1.0 - dot / (qn * norm)).max(0.0) } else { 1.0 };
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_zero_distance() {
+        let h = Histogram::from_pairs(vec![(0, 0.5), (3, 0.5)]);
+        assert!((bow_distance(&h, &h)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_is_max_distance() {
+        let a = Histogram::from_pairs(vec![(0, 1.0)]);
+        let b = Histogram::from_pairs(vec![(1, 1.0)]);
+        assert!((bow_distance(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scale_invariant() {
+        let a = Histogram::from_pairs(vec![(0, 1.0), (1, 2.0)]);
+        let b = Histogram::from_pairs(vec![(0, 10.0), (1, 20.0)]);
+        assert!(bow_distance(&a, &b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_matches_pairwise() {
+        let rows = vec![
+            Histogram::from_pairs(vec![(0, 1.0), (2, 1.0)]),
+            Histogram::from_pairs(vec![(1, 1.0)]),
+            Histogram::from_pairs(vec![(0, 0.3), (1, 0.3), (2, 0.4)]),
+        ];
+        let db = CsrMatrix::from_histograms(&rows, 3);
+        let norms = db.row_l2_norms();
+        let q = Histogram::from_pairs(vec![(0, 0.6), (1, 0.4)]);
+        let batch = bow_distances_batch(&q, &db, &norms);
+        for (u, row) in rows.iter().enumerate() {
+            assert!((batch[u] - bow_distance(&q, row)).abs() < 1e-6); // f32 norms
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Per-pair EMD approximations and baselines (paper Algorithms 1-3 plus the
+//! comparison methods of Section 6).  These quadratic-per-pair forms define
+//! the semantics the linear-complexity engines in [`crate::lc`] must match.
+
+pub mod act;
+pub mod bow;
+pub mod ict;
+pub mod omr;
+pub mod rwmd;
+pub mod sinkhorn;
+pub mod wcd;
+
+pub use act::{act_directed, act_symmetric, act_with_cost};
+pub use bow::{bow_distance, bow_distances_batch, cosine_similarity};
+pub use ict::{ict_directed, ict_symmetric, ict_with_cost};
+pub use omr::{omr_directed, omr_symmetric, omr_with_cost};
+pub use rwmd::{rwmd_directed, rwmd_symmetric, rwmd_with_cost};
+pub use sinkhorn::{sinkhorn, sinkhorn_with_cost, SinkhornParams};
+pub use wcd::{centroid, centroids_batch, wcd, wcd_from_centroids};

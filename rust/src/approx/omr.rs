@@ -1,0 +1,119 @@
+//! Overlapping Mass Reduction (paper Algorithm 1): between overlapping
+//! coordinates (`C[i,j] == 0`) at most `min(p_i, q_j)` moves for free; the
+//! remainder ships to the second-closest coordinate.
+
+use crate::core::{support_cost_matrix, Embeddings, Histogram, Metric};
+
+/// Directed OMR from a normalized weight pair and a row-major cost matrix.
+pub fn omr_with_cost(p: &[f32], q: &[f32], cost: &[f32], hq: usize) -> f64 {
+    assert_eq!(cost.len(), p.len() * hq);
+    assert_eq!(q.len(), hq);
+    let mut total = 0.0f64;
+    for (i, &pi) in p.iter().enumerate() {
+        if pi == 0.0 {
+            continue;
+        }
+        let row = &cost[i * hq..(i + 1) * hq];
+        // top-2 smallest (value, index), ties -> lowest index
+        let (mut v1, mut s1, mut v2) = (f32::INFINITY, usize::MAX, f32::INFINITY);
+        for (j, &c) in row.iter().enumerate() {
+            if c < v1 {
+                v2 = v1;
+                v1 = c;
+                s1 = j;
+            } else if c < v2 {
+                v2 = c;
+            }
+        }
+        let mut pi = pi as f64;
+        if v1 == 0.0 {
+            // free transfer of the overlapping mass, remainder to 2nd-closest
+            let r = pi.min(q[s1] as f64);
+            pi -= r;
+            total += pi * if hq > 1 { v2 as f64 } else { 0.0 };
+        } else {
+            total += pi * v1 as f64;
+        }
+    }
+    total
+}
+
+/// Directed OMR between histograms over a shared vocabulary.
+pub fn omr_directed(
+    vocab: &Embeddings,
+    p: &Histogram,
+    q: &Histogram,
+    metric: Metric,
+) -> f64 {
+    let pn = p.normalized();
+    let qn = q.normalized();
+    if pn.is_empty() || qn.is_empty() {
+        return 0.0;
+    }
+    let cost = support_cost_matrix(vocab, pn.indices(), qn.indices(), metric);
+    omr_with_cost(pn.weights(), qn.weights(), &cost, qn.len())
+}
+
+/// Symmetric OMR = max of the two directions.
+pub fn omr_symmetric(
+    vocab: &Embeddings,
+    p: &Histogram,
+    q: &Histogram,
+    metric: Metric,
+) -> f64 {
+    omr_directed(vocab, p, q, metric).max(omr_directed(vocab, q, p, metric))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab_line() -> Embeddings {
+        Embeddings::new(vec![0.0, 1.0, 2.0, 3.0], 4, 1)
+    }
+
+    #[test]
+    fn no_overlap_equals_rwmd() {
+        use crate::approx::rwmd::rwmd_directed;
+        let vocab = vocab_line();
+        let p = Histogram::from_pairs(vec![(0, 0.6), (1, 0.4)]);
+        let q = Histogram::from_pairs(vec![(2, 0.5), (3, 0.5)]);
+        let omr = omr_directed(&vocab, &p, &q, Metric::L2);
+        let rwmd = rwmd_directed(&vocab, &p, &q, Metric::L2);
+        assert!((omr - rwmd).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_remainder_pays_second_closest() {
+        let vocab = vocab_line();
+        // p has 0.7 at coord 0; q has 0.3 at coord 0 and 0.7 at coord 1.
+        let p = Histogram::from_pairs(vec![(0, 0.7), (1, 0.3)]);
+        let q = Histogram::from_pairs(vec![(0, 0.3), (1, 0.7)]);
+        // row i=0: overlap at j=0 (cost 0, cap 0.3): 0.4 remains -> 2nd
+        // closest is coord 1 at distance 1 -> 0.4. row i=1: overlap at j=1
+        // cap 0.7 >= 0.3 -> free.  total 0.4
+        let omr = omr_directed(&vocab, &p, &q, Metric::L2);
+        assert!((omr - 0.4).abs() < 1e-7, "omr {omr}");
+    }
+
+    #[test]
+    fn effectiveness_theorem3() {
+        // For an effective cost (distinct coords => positive cost),
+        // OMR(p, q) == 0 implies p == q; so different weights => positive.
+        let vocab = vocab_line();
+        let p = Histogram::from_pairs(vec![(0, 0.7), (1, 0.3)]);
+        let q = Histogram::from_pairs(vec![(0, 0.3), (1, 0.7)]);
+        assert!(omr_symmetric(&vocab, &p, &q, Metric::L2) > 0.0);
+        assert_eq!(omr_symmetric(&vocab, &p, &p, Metric::L2), 0.0);
+    }
+
+    #[test]
+    fn single_target_with_overlap_is_free() {
+        // hq == 1 and full overlap: everything that fits moves free and the
+        // paper's algorithm has no "second closest" — cost 0 by convention.
+        let vocab = vocab_line();
+        let p = Histogram::from_pairs(vec![(0, 1.0)]);
+        let q = Histogram::from_pairs(vec![(0, 1.0)]);
+        assert_eq!(omr_directed(&vocab, &p, &q, Metric::L2), 0.0);
+    }
+}

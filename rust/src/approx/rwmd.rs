@@ -1,0 +1,101 @@
+//! Relaxed Word Mover's Distance (paper Section 2.1): drop the in-flow
+//! constraints entirely; every bin of `p` ships to its nearest bin of `q`.
+//! Quadratic per-pair form; the batched linear-complexity version lives in
+//! [`crate::lc`].
+
+use crate::core::{support_cost_matrix, Embeddings, Histogram, Metric};
+
+/// One-directional RWMD from a normalized weight vector and a row-major
+/// `(hp, hq)` cost matrix: `Σ_i p_i · min_j C[i, j]`.
+pub fn rwmd_with_cost(p: &[f32], cost: &[f32], hq: usize) -> f64 {
+    assert_eq!(cost.len(), p.len() * hq);
+    let mut total = 0.0f64;
+    for (i, &pi) in p.iter().enumerate() {
+        if pi == 0.0 {
+            continue;
+        }
+        let row = &cost[i * hq..(i + 1) * hq];
+        let mut min = f32::INFINITY;
+        for &c in row {
+            if c < min {
+                min = c;
+            }
+        }
+        total += pi as f64 * min as f64;
+    }
+    total
+}
+
+/// One-directional RWMD between histograms over a shared vocabulary
+/// (normalizes internally).
+pub fn rwmd_directed(
+    vocab: &Embeddings,
+    p: &Histogram,
+    q: &Histogram,
+    metric: Metric,
+) -> f64 {
+    let pn = p.normalized();
+    let qn = q.normalized();
+    if pn.is_empty() || qn.is_empty() {
+        return 0.0;
+    }
+    let cost = support_cost_matrix(vocab, pn.indices(), qn.indices(), metric);
+    rwmd_with_cost(pn.weights(), &cost, qn.len())
+}
+
+/// Symmetric RWMD = max of the two directed bounds (paper Section 2.1).
+pub fn rwmd_symmetric(
+    vocab: &Embeddings,
+    p: &Histogram,
+    q: &Histogram,
+    metric: Metric,
+) -> f64 {
+    rwmd_directed(vocab, p, q, metric).max(rwmd_directed(vocab, q, p, metric))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab_line() -> Embeddings {
+        // coords 0,1,2,3 on a line
+        Embeddings::new(vec![0.0, 1.0, 2.0, 3.0], 4, 1)
+    }
+
+    #[test]
+    fn ships_to_nearest() {
+        let vocab = vocab_line();
+        let p = Histogram::from_pairs(vec![(0, 1.0)]);
+        let q = Histogram::from_pairs(vec![(1, 0.5), (3, 0.5)]);
+        // bin 0 ships to coord 1 at distance 1 regardless of weights
+        assert!((rwmd_directed(&vocab, &p, &q, Metric::L2) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn asymmetry_and_max() {
+        let vocab = vocab_line();
+        let p = Histogram::from_pairs(vec![(0, 1.0)]);
+        let q = Histogram::from_pairs(vec![(1, 1.0), (3, 1.0)]);
+        let pq = rwmd_directed(&vocab, &p, &q, Metric::L2); // 1.0
+        let qp = rwmd_directed(&vocab, &q, &p, Metric::L2); // 0.5*1 + 0.5*3
+        assert!((pq - 1.0).abs() < 1e-9);
+        assert!((qp - 2.0).abs() < 1e-9);
+        assert!((rwmd_symmetric(&vocab, &p, &q, Metric::L2) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_overlap_collapses_to_zero() {
+        // Paper Fig. 3: identical coordinates, different weights -> 0.
+        let vocab = vocab_line();
+        let p = Histogram::from_pairs(vec![(0, 0.7), (1, 0.3)]);
+        let q = Histogram::from_pairs(vec![(0, 0.3), (1, 0.7)]);
+        assert_eq!(rwmd_symmetric(&vocab, &p, &q, Metric::L2), 0.0);
+    }
+
+    #[test]
+    fn identical_histograms_zero() {
+        let vocab = vocab_line();
+        let p = Histogram::from_pairs(vec![(0, 0.5), (2, 0.5)]);
+        assert_eq!(rwmd_symmetric(&vocab, &p, &p, Metric::L2), 0.0);
+    }
+}

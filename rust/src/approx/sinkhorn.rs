@@ -1,0 +1,173 @@
+//! Entropy-regularized optimal transport via Sinkhorn iterations
+//! (Cuturi 2013) — the GPU baseline of paper Fig. 8(b), λ = 20.
+//!
+//! K = exp(-λ C / max(C)) (the standard cost normalization Cuturi's
+//! reference implementation applies so λ is scale-free), then alternate
+//! u ← p ⊘ (K v), v ← q ⊘ (Kᵀ u) until the marginal violation drops below
+//! `tol` or `max_iters` is reached.  Returns ⟨diag(u) K diag(v), C⟩.
+
+use crate::core::{support_cost_matrix, Embeddings, Histogram, Metric};
+
+/// Sinkhorn configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SinkhornParams {
+    /// Entropic regularization strength (paper uses λ = 20).
+    pub lambda: f64,
+    pub max_iters: usize,
+    /// L1 marginal violation tolerance.
+    pub tol: f64,
+}
+
+impl Default for SinkhornParams {
+    fn default() -> Self {
+        SinkhornParams { lambda: 20.0, max_iters: 200, tol: 1e-6 }
+    }
+}
+
+/// Sinkhorn distance from normalized weights and a row-major cost matrix.
+/// Returns `(distance, iterations_used)`.
+pub fn sinkhorn_with_cost(
+    p: &[f32],
+    q: &[f32],
+    cost: &[f32],
+    hq: usize,
+    params: SinkhornParams,
+) -> (f64, usize) {
+    let hp = p.len();
+    assert_eq!(cost.len(), hp * hq);
+    assert_eq!(q.len(), hq);
+    let cmax = cost.iter().cloned().fold(0.0f32, f32::max).max(1e-30) as f64;
+
+    // Gibbs kernel; guard against full underflow with a floor.
+    let mut kmat = vec![0.0f64; hp * hq];
+    for (slot, &c) in kmat.iter_mut().zip(cost) {
+        *slot = (-(params.lambda) * c as f64 / cmax).exp().max(1e-300);
+    }
+
+    let pv: Vec<f64> = p.iter().map(|&x| x as f64).collect();
+    let qv: Vec<f64> = q.iter().map(|&x| x as f64).collect();
+    let mut u = vec![1.0f64; hp];
+    let mut v = vec![1.0f64; hq];
+    let mut kv = vec![0.0f64; hp];
+    let mut ktu = vec![0.0f64; hq];
+    let mut iters = 0;
+    for it in 0..params.max_iters {
+        iters = it + 1;
+        // u = p ./ (K v)
+        for i in 0..hp {
+            let row = &kmat[i * hq..(i + 1) * hq];
+            let mut acc = 0.0;
+            for (j, &kij) in row.iter().enumerate() {
+                acc += kij * v[j];
+            }
+            kv[i] = acc.max(1e-300);
+            u[i] = pv[i] / kv[i];
+        }
+        // v = q ./ (K^T u)
+        ktu.iter_mut().for_each(|x| *x = 0.0);
+        for i in 0..hp {
+            let row = &kmat[i * hq..(i + 1) * hq];
+            let ui = u[i];
+            for (j, &kij) in row.iter().enumerate() {
+                ktu[j] += kij * ui;
+            }
+        }
+        let mut violation = 0.0;
+        for j in 0..hq {
+            let denom = ktu[j].max(1e-300);
+            // in-marginal before update: v_j * ktu_j should equal q_j
+            violation += (v[j] * ktu[j] - qv[j]).abs();
+            v[j] = qv[j] / denom;
+        }
+        if violation < params.tol {
+            break;
+        }
+    }
+
+    // transport cost <diag(u) K diag(v), C>
+    let mut total = 0.0f64;
+    for i in 0..hp {
+        let row_k = &kmat[i * hq..(i + 1) * hq];
+        let row_c = &cost[i * hq..(i + 1) * hq];
+        let ui = u[i];
+        for j in 0..hq {
+            total += ui * row_k[j] * v[j] * row_c[j] as f64;
+        }
+    }
+    (total, iters)
+}
+
+/// Sinkhorn distance between histograms over a shared vocabulary.
+pub fn sinkhorn(
+    vocab: &Embeddings,
+    p: &Histogram,
+    q: &Histogram,
+    metric: Metric,
+    params: SinkhornParams,
+) -> f64 {
+    let pn = p.normalized();
+    let qn = q.normalized();
+    if pn.is_empty() || qn.is_empty() {
+        return 0.0;
+    }
+    let cost = support_cost_matrix(vocab, pn.indices(), qn.indices(), metric);
+    sinkhorn_with_cost(pn.weights(), qn.weights(), &cost, qn.len(), params).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exact::emd_with_cost;
+
+    #[test]
+    fn identical_histograms_near_zero() {
+        let p = [0.5f32, 0.5];
+        let cost = vec![0.0, 1.0, 1.0, 0.0];
+        let (d, _) = sinkhorn_with_cost(&p, &p, &cost, 2, SinkhornParams::default());
+        assert!(d < 0.05, "d = {d}");
+    }
+
+    #[test]
+    fn approaches_emd_as_lambda_grows() {
+        let p = [0.3f32, 0.7];
+        let q = [0.6f32, 0.4];
+        let cost = vec![0.1, 0.8, 0.9, 0.2];
+        let exact = emd_with_cost(&p, &q, &cost, 2);
+        let mut prev_err = f64::INFINITY;
+        for lambda in [5.0, 20.0, 80.0] {
+            let (d, _) = sinkhorn_with_cost(
+                &p,
+                &q,
+                &cost,
+                2,
+                SinkhornParams { lambda, max_iters: 2000, tol: 1e-10 },
+            );
+            let err = (d - exact).abs();
+            assert!(err <= prev_err + 1e-9, "λ={lambda}: err {err} > {prev_err}");
+            prev_err = err;
+        }
+        assert!(prev_err < 0.02, "sinkhorn(λ=80) error {prev_err}");
+    }
+
+    #[test]
+    fn regularized_cost_upper_bounds_loosely() {
+        // Sinkhorn's plan is feasible for the original LP, so its transport
+        // cost is >= exact EMD (up to numerical tolerance).
+        let p = [0.25f32, 0.25, 0.5];
+        let q = [0.4f32, 0.3, 0.3];
+        let cost = vec![0.1, 0.5, 0.9, 0.6, 0.2, 0.8, 0.3, 0.7, 0.4];
+        let exact = emd_with_cost(&p, &q, &cost, 3);
+        let (d, _) =
+            sinkhorn_with_cost(&p, &q, &cost, 3, SinkhornParams { lambda: 50.0, ..Default::default() });
+        assert!(d >= exact - 1e-6, "sinkhorn {d} < emd {exact}");
+    }
+
+    #[test]
+    fn converges_within_budget() {
+        let p = [0.2f32, 0.3, 0.5];
+        let q = [0.5f32, 0.25, 0.25];
+        let cost = vec![0.5, 0.1, 0.9, 0.3, 0.7, 0.2, 0.8, 0.4, 0.6];
+        let (_, iters) = sinkhorn_with_cost(&p, &q, &cost, 3, SinkhornParams::default());
+        assert!(iters < 200, "did not converge: {iters}");
+    }
+}

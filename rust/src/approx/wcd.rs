@@ -1,0 +1,91 @@
+//! Word Centroid Distance baseline (Kusner et al. 2015, used in paper
+//! Fig. 8): Euclidean distance between the weighted centroid embeddings of
+//! two documents.  O(m) per comparison once centroids are precomputed.
+
+use crate::core::{CsrMatrix, Embeddings, Histogram};
+
+/// Weighted centroid of a normalized histogram in embedding space.
+pub fn centroid(vocab: &Embeddings, h: &Histogram) -> Vec<f64> {
+    let hn = h.normalized();
+    vocab.centroid(hn.indices(), hn.weights())
+}
+
+/// Centroids for every row of a database matrix, row-major `(n, m)`.
+pub fn centroids_batch(vocab: &Embeddings, db: &CsrMatrix) -> Vec<f64> {
+    let m = vocab.dim();
+    let mut out = vec![0.0f64; db.nrows() * m];
+    for u in 0..db.nrows() {
+        let (idx, w) = db.row(u);
+        let total: f64 = w.iter().map(|&x| x as f64).sum();
+        if total == 0.0 {
+            continue;
+        }
+        let slot = &mut out[u * m..(u + 1) * m];
+        for (&i, &x) in idx.iter().zip(w) {
+            let row = vocab.row(i as usize);
+            let wgt = x as f64 / total;
+            for (acc, &e) in slot.iter_mut().zip(row) {
+                *acc += wgt * e as f64;
+            }
+        }
+    }
+    out
+}
+
+/// WCD between two precomputed centroids.
+pub fn wcd_from_centroids(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+}
+
+/// WCD between two histograms.
+pub fn wcd(vocab: &Embeddings, p: &Histogram, q: &Histogram) -> f64 {
+    wcd_from_centroids(&centroid(vocab, p), &centroid(vocab, q))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab() -> Embeddings {
+        Embeddings::new(vec![0.0, 0.0, 2.0, 0.0, 0.0, 2.0], 3, 2)
+    }
+
+    #[test]
+    fn identical_zero() {
+        let h = Histogram::from_pairs(vec![(0, 0.5), (1, 0.5)]);
+        assert_eq!(wcd(&vocab(), &h, &h), 0.0);
+    }
+
+    #[test]
+    fn centroid_of_point_mass_is_coordinate() {
+        let h = Histogram::from_pairs(vec![(1, 2.0)]);
+        assert_eq!(centroid(&vocab(), &h), vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn wcd_lower_bounds_emd_wmd_relation() {
+        // WCD <= WMD (Kusner et al.): check against exact EMD on a tiny case.
+        use crate::core::Metric;
+        use crate::exact::emd;
+        let v = vocab();
+        let p = Histogram::from_pairs(vec![(0, 0.5), (1, 0.5)]);
+        let q = Histogram::from_pairs(vec![(1, 0.5), (2, 0.5)]);
+        let wcd_d = wcd(&v, &p, &q);
+        let emd_d = emd(&v, &p, &q, Metric::L2);
+        assert!(wcd_d <= emd_d + 1e-9, "wcd {wcd_d} > emd {emd_d}");
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let rows = vec![
+            Histogram::from_pairs(vec![(0, 1.0)]),
+            Histogram::from_pairs(vec![(0, 1.0), (2, 3.0)]),
+        ];
+        let db = CsrMatrix::from_histograms(&rows, 3);
+        let cents = centroids_batch(&vocab(), &db);
+        for (u, row) in rows.iter().enumerate() {
+            let single = centroid(&vocab(), row);
+            assert_eq!(&cents[u * 2..(u + 1) * 2], single.as_slice());
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! Typed configuration system: JSON file + CLI overrides + validation.
+//!
+//! One [`Config`] drives the whole stack (dataset selection/generation,
+//! engine parameters, coordinator/server behaviour, artifact runtime).  See
+//! `examples/config.sample.json` for a template.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::core::Metric;
+use crate::lc::Method;
+use crate::util::cli::Parsed;
+use crate::util::json::Json;
+
+/// Which compute backend answers queries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Multithreaded CPU LC engine (default; fastest on this testbed).
+    Native,
+    /// AOT-compiled JAX/Pallas artifacts via PJRT.
+    Artifact,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(Backend::Native),
+            "artifact" | "pjrt" => Ok(Backend::Artifact),
+            other => bail!("unknown backend '{other}' (native|artifact)"),
+        }
+    }
+}
+
+/// Dataset source.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DatasetSpec {
+    /// Load a serialized `.bin` dataset.
+    File(PathBuf),
+    /// Generate the synthetic MNIST substitute.
+    SynthMnist { n: usize, background: f32, seed: u64 },
+    /// Generate the synthetic 20News substitute.
+    SynthText { n: usize, vocab: usize, dim: usize, seed: u64 },
+}
+
+/// Full stack configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub dataset: DatasetSpec,
+    pub method: Method,
+    pub metric: Metric,
+    pub threads: usize,
+    pub symmetric: bool,
+    pub backend: Backend,
+    pub artifact_dir: PathBuf,
+    pub artifact_profile: Option<String>,
+    /// top-ℓ to return per query
+    pub topl: usize,
+    /// server bind address
+    pub listen: String,
+    /// dynamic batcher: max queries per batch
+    pub max_batch: usize,
+    /// dynamic batcher: max linger before dispatching a partial batch
+    pub linger_ms: u64,
+    /// number of database shards for the router
+    pub shards: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            dataset: DatasetSpec::SynthMnist { n: 1000, background: 0.0, seed: 42 },
+            method: Method::Act { k: 2 },
+            metric: Metric::L2,
+            threads: crate::util::threadpool::default_threads(),
+            symmetric: true,
+            backend: Backend::Native,
+            artifact_dir: PathBuf::from("artifacts"),
+            artifact_profile: None,
+            topl: 16,
+            listen: "127.0.0.1:7878".to_string(),
+            max_batch: 8,
+            linger_ms: 2,
+            shards: 4,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON file (all fields optional; defaults fill the rest).
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading config {path:?}: {e}"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parsing config {path:?}: {e}"))?;
+        Self::from_json(&json)
+    }
+
+    pub fn from_json(json: &Json) -> Result<Config> {
+        let mut cfg = Config::default();
+        if let Some(d) = json.get("dataset") {
+            cfg.dataset = parse_dataset(d)?;
+        }
+        if let Some(s) = json.get("method").and_then(Json::as_str) {
+            cfg.method = Method::parse(s).ok_or_else(|| anyhow!("bad method '{s}'"))?;
+        }
+        if let Some(s) = json.get("metric").and_then(Json::as_str) {
+            cfg.metric = Metric::parse(s).ok_or_else(|| anyhow!("bad metric '{s}'"))?;
+        }
+        if let Some(x) = json.get("threads").and_then(Json::as_usize) {
+            cfg.threads = x.max(1);
+        }
+        if let Some(b) = json.get("symmetric").and_then(Json::as_bool) {
+            cfg.symmetric = b;
+        }
+        if let Some(s) = json.get("backend").and_then(Json::as_str) {
+            cfg.backend = Backend::parse(s)?;
+        }
+        if let Some(s) = json.get("artifact_dir").and_then(Json::as_str) {
+            cfg.artifact_dir = PathBuf::from(s);
+        }
+        if let Some(s) = json.get("artifact_profile").and_then(Json::as_str) {
+            cfg.artifact_profile = Some(s.to_string());
+        }
+        if let Some(x) = json.get("topl").and_then(Json::as_usize) {
+            cfg.topl = x.max(1);
+        }
+        if let Some(s) = json.get("listen").and_then(Json::as_str) {
+            cfg.listen = s.to_string();
+        }
+        if let Some(x) = json.get("max_batch").and_then(Json::as_usize) {
+            cfg.max_batch = x.max(1);
+        }
+        if let Some(x) = json.get("linger_ms").and_then(Json::as_usize) {
+            cfg.linger_ms = x as u64;
+        }
+        if let Some(x) = json.get("shards").and_then(Json::as_usize) {
+            cfg.shards = x.max(1);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply CLI overrides (`--method`, `--threads`, ...) from parsed args.
+    pub fn apply_cli(&mut self, args: &Parsed) -> Result<()> {
+        if let Some(s) = args.opt_str("method") {
+            if !s.is_empty() {
+                self.method = Method::parse(s).ok_or_else(|| anyhow!("bad method '{s}'"))?;
+            }
+        }
+        if let Some(s) = args.opt_str("threads") {
+            if !s.is_empty() {
+                self.threads = s.parse::<usize>().map_err(|_| anyhow!("bad --threads"))?.max(1);
+            }
+        }
+        if let Some(s) = args.opt_str("backend") {
+            if !s.is_empty() {
+                self.backend = Backend::parse(s)?;
+            }
+        }
+        if let Some(s) = args.opt_str("topl") {
+            if !s.is_empty() {
+                self.topl = s.parse::<usize>().map_err(|_| anyhow!("bad --topl"))?.max(1);
+            }
+        }
+        if let Some(s) = args.opt_str("dataset") {
+            if !s.is_empty() {
+                self.dataset = parse_dataset_str(s)?;
+            }
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.threads >= 1, "threads must be >= 1");
+        anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(self.shards >= 1, "shards must be >= 1");
+        if let Method::Act { k } = self.method {
+            anyhow::ensure!(k >= 1 && k <= 64, "ACT k must be in [1, 64], got {k}");
+        }
+        Ok(())
+    }
+
+    /// Materialize the dataset this config describes.
+    pub fn load_dataset(&self) -> Result<crate::core::Dataset> {
+        Ok(match &self.dataset {
+            DatasetSpec::File(path) => crate::data::load(path)?,
+            DatasetSpec::SynthMnist { n, background, seed } => {
+                crate::data::generate_mnist(&crate::data::MnistConfig {
+                    n: *n,
+                    background: *background,
+                    seed: *seed,
+                    ..Default::default()
+                })
+            }
+            DatasetSpec::SynthText { n, vocab, dim, seed } => {
+                crate::data::generate_text(&crate::data::TextConfig {
+                    n: *n,
+                    vocab: *vocab,
+                    dim: *dim,
+                    seed: *seed,
+                    ..Default::default()
+                })
+            }
+        })
+    }
+}
+
+fn parse_dataset(j: &Json) -> Result<DatasetSpec> {
+    if let Some(s) = j.as_str() {
+        return parse_dataset_str(s);
+    }
+    let kind = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("dataset object needs 'kind'"))?;
+    let n = j.get("n").and_then(Json::as_usize).unwrap_or(1000);
+    let seed = j.get("seed").and_then(Json::as_usize).unwrap_or(42) as u64;
+    Ok(match kind {
+        "file" => DatasetSpec::File(PathBuf::from(
+            j.get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("file dataset needs 'path'"))?,
+        )),
+        "synth-mnist" => DatasetSpec::SynthMnist {
+            n,
+            background: j.get("background").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+            seed,
+        },
+        "synth-text" => DatasetSpec::SynthText {
+            n,
+            vocab: j.get("vocab").and_then(Json::as_usize).unwrap_or(8000),
+            dim: j.get("dim").and_then(Json::as_usize).unwrap_or(64),
+            seed,
+        },
+        other => bail!("unknown dataset kind '{other}'"),
+    })
+}
+
+/// CLI shorthand: `path.bin` | `synth-mnist:<n>` | `synth-text:<n>`.
+fn parse_dataset_str(s: &str) -> Result<DatasetSpec> {
+    if let Some(rest) = s.strip_prefix("synth-mnist") {
+        let n = rest
+            .strip_prefix(':')
+            .map(|r| r.parse())
+            .transpose()
+            .map_err(|_| anyhow!("bad synth-mnist size"))?
+            .unwrap_or(1000);
+        return Ok(DatasetSpec::SynthMnist { n, background: 0.0, seed: 42 });
+    }
+    if let Some(rest) = s.strip_prefix("synth-text") {
+        let n = rest
+            .strip_prefix(':')
+            .map(|r| r.parse())
+            .transpose()
+            .map_err(|_| anyhow!("bad synth-text size"))?
+            .unwrap_or(1000);
+        return Ok(DatasetSpec::SynthText { n, vocab: 8000, dim: 64, seed: 1234 });
+    }
+    Ok(DatasetSpec::File(PathBuf::from(s)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_fields() {
+        let j = Json::parse(
+            r#"{"method": "act-3", "threads": 2, "backend": "artifact",
+                "dataset": {"kind": "synth-text", "n": 50, "vocab": 100, "dim": 8},
+                "topl": 5, "symmetric": false}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(cfg.method, Method::Act { k: 4 });
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.backend, Backend::Artifact);
+        assert_eq!(cfg.topl, 5);
+        assert!(!cfg.symmetric);
+        assert_eq!(cfg.dataset, DatasetSpec::SynthText { n: 50, vocab: 100, dim: 8, seed: 42 });
+    }
+
+    #[test]
+    fn bad_method_rejected() {
+        let j = Json::parse(r#"{"method": "magic"}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn dataset_shorthand() {
+        assert_eq!(
+            parse_dataset_str("synth-mnist:200").unwrap(),
+            DatasetSpec::SynthMnist { n: 200, background: 0.0, seed: 42 }
+        );
+        assert!(matches!(parse_dataset_str("foo.bin").unwrap(), DatasetSpec::File(_)));
+    }
+
+    #[test]
+    fn load_dataset_synth() {
+        let cfg = Config {
+            dataset: DatasetSpec::SynthText { n: 20, vocab: 100, dim: 8, seed: 1 },
+            ..Default::default()
+        };
+        let ds = cfg.load_dataset().unwrap();
+        assert_eq!(ds.len(), 20);
+    }
+}

@@ -1,0 +1,116 @@
+//! Dynamic query batcher: collect queries until `max_batch` is reached or
+//! the oldest has lingered `linger`, then dispatch the whole batch (the
+//! serving-throughput trick of vLLM-style routers, applied to similarity
+//! queries: one Phase-1 per query, Phase-2 sweeps can share database tiles).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// A queued unit of work.
+pub struct Pending<Q, R> {
+    pub query: Q,
+    pub respond: Sender<R>,
+    pub enqueued: Instant,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub linger: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, linger: Duration::from_millis(2) }
+    }
+}
+
+/// Drain one batch from `rx` according to `policy`.
+///
+/// Blocks for the first item (or returns `None` when the channel is closed),
+/// then keeps accepting items until the batch is full or the first item's
+/// linger budget expires.
+pub fn next_batch<Q, R>(
+    rx: &Receiver<Pending<Q, R>>,
+    policy: BatchPolicy,
+) -> Option<Vec<Pending<Q, R>>> {
+    let first = rx.recv().ok()?;
+    let deadline = first.enqueued + policy.linger;
+    let mut batch = vec![first];
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn pending(q: usize) -> (Pending<usize, usize>, Receiver<usize>) {
+        let (tx, rx) = channel();
+        (Pending { query: q, respond: tx, enqueued: Instant::now() }, rx)
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let (tx, rx) = channel();
+        for i in 0..5 {
+            let (p, _keep) = pending(i);
+            std::mem::forget(_keep);
+            tx.send(p).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 3, linger: Duration::from_secs(10) };
+        let t0 = Instant::now();
+        let batch = next_batch(&rx, policy).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(t0.elapsed() < Duration::from_secs(1), "should not wait for linger");
+        let batch2 = next_batch(&rx, policy).unwrap();
+        assert_eq!(batch2.len(), 2); // remaining after linger expiry
+    }
+
+    #[test]
+    fn linger_expires_partial_batch() {
+        let (tx, rx) = channel();
+        let (p, _keep) = pending(0);
+        std::mem::forget(_keep);
+        tx.send(p).unwrap();
+        let policy = BatchPolicy { max_batch: 8, linger: Duration::from_millis(10) };
+        let t0 = Instant::now();
+        let batch = next_batch(&rx, policy).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn closed_channel_returns_none() {
+        let (tx, rx) = channel::<Pending<usize, usize>>();
+        drop(tx);
+        assert!(next_batch(&rx, BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn preserves_fifo_order() {
+        let (tx, rx) = channel();
+        for i in 0..4 {
+            let (p, _keep) = pending(i);
+            std::mem::forget(_keep);
+            tx.send(p).unwrap();
+        }
+        let batch =
+            next_batch(&rx, BatchPolicy { max_batch: 4, linger: Duration::from_millis(1) })
+                .unwrap();
+        let qs: Vec<usize> = batch.iter().map(|p| p.query).collect();
+        assert_eq!(qs, vec![0, 1, 2, 3]);
+    }
+}

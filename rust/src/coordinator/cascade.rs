@@ -1,0 +1,189 @@
+//! Cascaded top-ℓ search: cheap-lower-bound prefilter → tighter rerank.
+//!
+//! The paper's Section 3 surveys how EMD lower bounds are used to prune
+//! expensive evaluations (and its WMD baseline uses exactly this trick:
+//! RWMD prefilter before FastEMD).  This module packages the idea as a
+//! coordinator feature over the LC engines: stage 1 scores the whole
+//! database with a cheap bound (LC-RWMD), keeps the `l * overfetch` best
+//! candidates, and stage 2 re-scores only those with a tighter measure
+//! (ACT-k, ICT-quality, or exact EMD).
+//!
+//! Because every stage-1 measure is a *lower bound* of every stage-2
+//! measure (Theorem 2), a candidate can only move *up* in distance during
+//! rerank — so with `overfetch` large enough the cascade is exact, and the
+//! stage-1 threshold gives a certificate: any document whose stage-1 bound
+//! exceeds the final ℓ-th distance could never have entered the top-ℓ.
+
+use anyhow::Result;
+
+use crate::core::{Histogram, Metric};
+use crate::exact::emd;
+use crate::lc::{LcEngine, Method};
+
+use super::topl::TopL;
+
+/// Rerank measure for stage 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rerank {
+    /// LC-ACT with the given k (fast, still a lower bound of EMD).
+    Act { k: usize },
+    /// Exact EMD (the paper's "WMD" quality level).
+    Exact,
+}
+
+/// Cascade outcome with work accounting.
+#[derive(Debug, Clone)]
+pub struct CascadeResult {
+    /// (distance, id) under the stage-2 measure, best first.
+    pub hits: Vec<(f32, usize)>,
+    /// Candidates rescored in stage 2.
+    pub reranked: usize,
+    /// True when the certificate held: the (overfetch·ℓ)-th stage-1 bound
+    /// was above the final ℓ-th stage-2 distance, so no pruned candidate
+    /// could have entered the result.
+    pub certified: bool,
+}
+
+/// Two-stage search: LC-RWMD prefilter, `rerank` on the survivors.
+pub fn cascade_search(
+    engine: &LcEngine,
+    query: &Histogram,
+    rerank: Rerank,
+    l: usize,
+    overfetch: usize,
+) -> Result<CascadeResult> {
+    let n = engine.dataset().len();
+    let l = l.min(n).max(1);
+    let keep = (l * overfetch.max(1)).min(n);
+
+    // stage 1: cheap lower bound over everything
+    let stage1 = engine.distances(query, Method::Rwmd);
+    let mut pre = TopL::new(keep);
+    pre.push_slice(&stage1, 0);
+    let candidates = pre.into_sorted();
+    // the tightest stage-1 bound we *discarded*; anything we return below
+    // this value is certified exact
+    let pruned_floor = if keep < n {
+        let mut rest = f32::INFINITY;
+        for (u, &d) in stage1.iter().enumerate() {
+            if !candidates.iter().any(|&(_, c)| c == u) && d < rest {
+                rest = d;
+            }
+        }
+        rest
+    } else {
+        f32::INFINITY
+    };
+
+    // stage 2: tighter measure on the survivors only
+    let mut out = TopL::new(l);
+    let mut reranked = 0usize;
+    match rerank {
+        Rerank::Act { k } => {
+            // ACT over the full DB is already linear; but here we only pay
+            // the per-pair form for the candidate set, which wins when
+            // keep << n and k is large.
+            let qn = query.normalized();
+            for &(_, u) in &candidates {
+                let doc = engine.dataset().histogram(u);
+                let d = crate::approx::act_directed(
+                    &engine.dataset().embeddings,
+                    &doc,
+                    &qn,
+                    Metric::L2,
+                    k,
+                ) as f32;
+                out.push(d, u);
+                reranked += 1;
+            }
+        }
+        Rerank::Exact => {
+            for &(lb, u) in &candidates {
+                // classic bound pruning: skip when the lower bound already
+                // exceeds the current l-th best exact distance
+                if let Some(t) = out.threshold() {
+                    if lb >= t {
+                        continue;
+                    }
+                }
+                let doc = engine.dataset().histogram(u);
+                let d = emd(&engine.dataset().embeddings, &query.normalized(), &doc, Metric::L2)
+                    as f32;
+                out.push(d, u);
+                reranked += 1;
+            }
+        }
+    }
+    let hits = out.into_sorted();
+    let certified = hits.last().map(|&(d, _)| d <= pruned_floor).unwrap_or(true);
+    Ok(CascadeResult { hits, reranked, certified })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_mnist, MnistConfig};
+    use crate::lc::EngineParams;
+    use std::sync::Arc;
+
+    fn engine() -> LcEngine {
+        let ds = Arc::new(generate_mnist(&MnistConfig { n: 60, side: 14, ..Default::default() }));
+        LcEngine::new(ds, EngineParams { threads: 2, symmetric: false, ..Default::default() })
+    }
+
+    #[test]
+    fn cascade_exact_matches_bruteforce_emd_ranking() {
+        let eng = engine();
+        let q = eng.dataset().histogram(0);
+        let res = cascade_search(&eng, &q, Rerank::Exact, 3, 8).unwrap();
+        assert_eq!(res.hits.len(), 3);
+        // brute force
+        let mut brute: Vec<(f32, usize)> = (0..eng.dataset().len())
+            .map(|u| {
+                let d = emd(
+                    &eng.dataset().embeddings,
+                    &q,
+                    &eng.dataset().histogram(u),
+                    Metric::L2,
+                ) as f32;
+                (d, u)
+            })
+            .collect();
+        brute.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if res.certified {
+            for (got, want) in res.hits.iter().zip(&brute) {
+                assert!((got.0 - want.0).abs() < 1e-5, "{:?} vs {:?}", res.hits, &brute[..3]);
+            }
+        }
+        // pruning must actually skip work on clustered data
+        assert!(res.reranked <= 3 * 8);
+    }
+
+    #[test]
+    fn cascade_act_rerank_is_tighter_than_stage1() {
+        let eng = engine();
+        let q = eng.dataset().histogram(5);
+        let stage1 = eng.distances(&q, Method::Rwmd);
+        let res = cascade_search(&eng, &q, Rerank::Act { k: 8 }, 4, 4).unwrap();
+        for &(d, u) in &res.hits {
+            assert!(d + 1e-5 >= stage1[u], "rerank must not go below the lower bound");
+        }
+    }
+
+    #[test]
+    fn overfetch_one_still_returns_l() {
+        let eng = engine();
+        let q = eng.dataset().histogram(1);
+        let res = cascade_search(&eng, &q, Rerank::Act { k: 2 }, 5, 1).unwrap();
+        assert_eq!(res.hits.len(), 5);
+        assert_eq!(res.reranked, 5);
+    }
+
+    #[test]
+    fn full_overfetch_is_always_certified() {
+        let eng = engine();
+        let q = eng.dataset().histogram(2);
+        let res = cascade_search(&eng, &q, Rerank::Act { k: 4 }, 3, usize::MAX / 4).unwrap();
+        assert!(res.certified);
+    }
+}

@@ -1,0 +1,227 @@
+//! Search-engine façade: one object that owns the dataset, answers top-ℓ
+//! queries through either backend (native CPU LC engine or the PJRT
+//! artifact runtime), and records metrics.  This is what the server, the
+//! CLI and the examples all drive.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Backend, Config};
+use crate::core::{Dataset, Histogram};
+use crate::lc::{EngineParams, LcEngine, Method};
+use crate::runtime::{ArtifactEngine, Executor};
+
+use super::metrics::Metrics;
+use super::router::Router;
+use super::topl::TopL;
+
+/// A single query's result.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// (distance, database id), best first.
+    pub hits: Vec<(f32, usize)>,
+    /// label of each hit (convenience for evaluation clients).
+    pub labels: Vec<u16>,
+}
+
+/// The coordinator-owned search engine.
+pub struct SearchEngine {
+    dataset: Arc<Dataset>,
+    config: Config,
+    metrics: Arc<Metrics>,
+    router: Router,
+    /// cached native engine (precomputed norms/centroids) — building it per
+    /// query would redo O(nnz·m) work on the request path
+    native: LcEngine,
+    executor: Option<Executor>,
+    artifact_profile: Option<String>,
+}
+
+impl SearchEngine {
+    /// Build from a config (loads/generates the dataset; connects the PJRT
+    /// runtime when `backend = artifact`).
+    pub fn from_config(config: Config) -> Result<SearchEngine> {
+        let dataset = Arc::new(config.load_dataset()?);
+        Self::with_dataset(config, dataset)
+    }
+
+    /// Build around an existing dataset (used by tests and examples).
+    pub fn with_dataset(config: Config, dataset: Arc<Dataset>) -> Result<SearchEngine> {
+        let router = Router::new(dataset.len(), config.shards);
+        let (executor, artifact_profile) = if config.backend == Backend::Artifact {
+            let exec = Executor::new(&config.artifact_dir)?;
+            let profile = match &config.artifact_profile {
+                Some(p) => p.clone(),
+                None => {
+                    // auto-select: smallest profile that fits the dataset
+                    let stats = dataset.stats();
+                    // queries can be as large as the widest histogram
+                    let hmax = (0..dataset.len())
+                        .map(|u| dataset.matrix.row(u).0.len())
+                        .max()
+                        .unwrap_or(1);
+                    exec.manifest()
+                        .fitting_profiles(stats.vocab_size, stats.dim, hmax)
+                        .into_iter()
+                        .next()
+                        .ok_or_else(|| {
+                            anyhow!(
+                                "no artifact profile fits v={} m={} h<={hmax}; \
+                                 regenerate with `make artifacts`",
+                                stats.vocab_size,
+                                stats.dim
+                            )
+                        })?
+                }
+            };
+            (Some(exec), Some(profile))
+        } else {
+            (None, None)
+        };
+        let native = LcEngine::new(
+            Arc::clone(&dataset),
+            EngineParams {
+                metric: config.metric,
+                threads: config.threads,
+                symmetric: config.symmetric,
+            },
+        );
+        Ok(SearchEngine {
+            dataset,
+            config,
+            metrics: Arc::new(Metrics::new()),
+            router,
+            native,
+            executor,
+            artifact_profile,
+        })
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.config
+    }
+
+    /// Full distance row for a query under the configured backend.
+    pub fn distances(&self, query: &Histogram, method: Method) -> Result<Vec<f32>> {
+        match self.config.backend {
+            Backend::Native => Ok(self.native.distances(query, method)),
+            Backend::Artifact => {
+                let exec = self.executor.as_ref().expect("artifact backend has executor");
+                let profile = self.artifact_profile.as_deref().unwrap();
+                let art = ArtifactEngine::new(exec, &self.dataset, profile)?;
+                let k = match method {
+                    Method::Rwmd => 1,
+                    Method::Act { k } => k,
+                    other => {
+                        anyhow::bail!(
+                            "artifact backend supports RWMD/ACT, not {}",
+                            other.name()
+                        )
+                    }
+                };
+                art.distances(query, k, self.config.symmetric)
+            }
+        }
+    }
+
+    /// Top-ℓ search with shard-merge (the request-path entry point).
+    pub fn search(&self, query: &Histogram, method: Method, l: usize) -> Result<SearchResult> {
+        let t0 = Instant::now();
+        let row = self.distances(query, method)?;
+        let mut acc = TopL::new(l);
+        // shard-wise accumulation exercises the same merge path the
+        // distributed router uses; results are shard-count-invariant
+        for shard in self.router.shards() {
+            let mut local = TopL::new(l);
+            local.push_slice(&row[shard.clone()], shard.start);
+            acc.merge(&local);
+        }
+        let hits = acc.into_sorted();
+        let labels = hits.iter().map(|&(_, id)| self.dataset.labels[id]).collect();
+        self.metrics.record_query(t0.elapsed(), row.len());
+        Ok(SearchResult { hits, labels })
+    }
+
+    /// Batched search (dispatched by the dynamic batcher / server).
+    pub fn search_batch(
+        &self,
+        queries: &[Histogram],
+        method: Method,
+        l: usize,
+    ) -> Result<Vec<SearchResult>> {
+        self.metrics.record_batch();
+        queries.iter().map(|q| self.search(q, method, l)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetSpec;
+
+    fn engine() -> SearchEngine {
+        let config = Config {
+            dataset: DatasetSpec::SynthText { n: 40, vocab: 200, dim: 8, seed: 3 },
+            threads: 2,
+            shards: 3,
+            ..Default::default()
+        };
+        SearchEngine::from_config(config).unwrap()
+    }
+
+    #[test]
+    fn search_returns_sorted_hits_excluding_nothing() {
+        let eng = engine();
+        let q = eng.dataset().histogram(0);
+        let res = eng.search(&q, Method::Act { k: 2 }, 5).unwrap();
+        assert_eq!(res.hits.len(), 5);
+        assert!(res.hits.windows(2).all(|w| w[0].0 <= w[1].0));
+        // the query is in the database: best hit must be itself at ~0
+        assert_eq!(res.hits[0].1, 0);
+        assert!(res.hits[0].0.abs() < 1e-5);
+        assert_eq!(res.labels.len(), 5);
+    }
+
+    #[test]
+    fn shard_count_does_not_change_results() {
+        let mk = |shards| {
+            let config = Config {
+                dataset: DatasetSpec::SynthText { n: 30, vocab: 150, dim: 8, seed: 4 },
+                threads: 1,
+                shards,
+                ..Default::default()
+            };
+            SearchEngine::from_config(config).unwrap()
+        };
+        let a = mk(1);
+        let b = mk(7);
+        let q = a.dataset().histogram(5);
+        let ra = a.search(&q, Method::Rwmd, 4).unwrap();
+        let rb = b.search(&q, Method::Rwmd, 4).unwrap();
+        assert_eq!(ra.hits, rb.hits);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let eng = engine();
+        let q = eng.dataset().histogram(1);
+        eng.search(&q, Method::Rwmd, 3).unwrap();
+        eng.search(&q, Method::Rwmd, 3).unwrap();
+        let m = eng.metrics();
+        assert_eq!(m.queries.load(std::sync::atomic::Ordering::Relaxed), 2);
+        assert_eq!(
+            m.distance_evals.load(std::sync::atomic::Ordering::Relaxed),
+            2 * 40
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! Lock-free coordinator metrics: counters + latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Exponential latency histogram: bucket i covers [2^i, 2^(i+1)) microseconds.
+const BUCKETS: usize = 24;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub queries: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    pub distance_evals: AtomicU64,
+    latency_us: [AtomicU64; BUCKETS],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_query(&self, latency: Duration, evals: usize) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.distance_evals.fetch_add(evals as u64, Ordering::Relaxed);
+        let us = latency.as_micros().min(u128::from(u64::MAX)) as u64;
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        let bucket = (63 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate latency percentile (upper bucket bound), microseconds.
+    pub fn latency_percentile_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> =
+            self.latency_us.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let want = ((total as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= want {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.queries.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Snapshot as JSON (served by the coordinator's `stats` command).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queries", (self.queries.load(Ordering::Relaxed) as usize).into()),
+            ("batches", (self.batches.load(Ordering::Relaxed) as usize).into()),
+            ("errors", (self.errors.load(Ordering::Relaxed) as usize).into()),
+            (
+                "distance_evals",
+                (self.distance_evals.load(Ordering::Relaxed) as usize).into(),
+            ),
+            ("mean_latency_us", self.mean_latency_us().into()),
+            ("p50_latency_us", (self.latency_percentile_us(0.5) as usize).into()),
+            ("p95_latency_us", (self.latency_percentile_us(0.95) as usize).into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let m = Metrics::new();
+        m.record_query(Duration::from_micros(100), 50);
+        m.record_query(Duration::from_micros(200), 50);
+        m.record_batch();
+        assert_eq!(m.queries.load(Ordering::Relaxed), 2);
+        assert_eq!(m.distance_evals.load(Ordering::Relaxed), 100);
+        assert!((m.mean_latency_us() - 150.0).abs() < 1e-9);
+        let p50 = m.latency_percentile_us(0.5);
+        assert!(p50 >= 128 && p50 <= 256, "p50 {p50}");
+    }
+
+    #[test]
+    fn empty_percentile_zero() {
+        assert_eq!(Metrics::new().latency_percentile_us(0.9), 0);
+    }
+
+    #[test]
+    fn json_snapshot_has_fields() {
+        let m = Metrics::new();
+        m.record_query(Duration::from_micros(10), 1);
+        let j = m.to_json();
+        assert_eq!(j.get("queries").and_then(Json::as_usize), Some(1));
+        assert!(j.get("p95_latency_us").is_some());
+    }
+}

@@ -1,0 +1,19 @@
+//! The L3 coordinator: search-engine façade, dynamic batcher, shard router,
+//! top-ℓ merging, metrics and the TCP line-protocol server.  This is the
+//! serving layer a downstream user deploys; Python never runs here.
+
+pub mod batcher;
+pub mod cascade;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod topl;
+
+pub use batcher::{next_batch, BatchPolicy, Pending};
+pub use cascade::{cascade_search, CascadeResult, Rerank};
+pub use engine::{SearchEngine, SearchResult};
+pub use metrics::Metrics;
+pub use router::Router;
+pub use server::Server;
+pub use topl::TopL;

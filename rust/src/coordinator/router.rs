@@ -1,0 +1,111 @@
+//! Database shard router: partitions the database row space into
+//! contiguous shards and fans Phase-2 work out over them.
+//!
+//! Sharding exists for two reasons: (1) it is the unit of parallel fan-out
+//! for batched queries; (2) artifact tiles have a fixed row count, so the
+//! shard boundaries align with tile boundaries when the artifact backend is
+//! active.
+
+use std::ops::Range;
+
+/// Contiguous row-range sharding.
+#[derive(Debug, Clone)]
+pub struct Router {
+    n: usize,
+    boundaries: Vec<usize>,
+}
+
+impl Router {
+    pub fn new(n: usize, shards: usize) -> Router {
+        let shards = shards.clamp(1, n.max(1));
+        let base = n / shards;
+        let extra = n % shards;
+        let mut boundaries = Vec::with_capacity(shards + 1);
+        boundaries.push(0);
+        let mut pos = 0;
+        for s in 0..shards {
+            pos += base + usize::from(s < extra);
+            boundaries.push(pos);
+        }
+        Router { n, boundaries }
+    }
+
+    /// Align shard boundaries to a tile size (artifact backend).
+    pub fn with_tile_alignment(n: usize, tile: usize) -> Router {
+        assert!(tile >= 1);
+        let mut boundaries = vec![0];
+        let mut pos = 0;
+        while pos < n {
+            pos = (pos + tile).min(n);
+            boundaries.push(pos);
+        }
+        if n == 0 {
+            boundaries.push(0);
+        }
+        Router { n, boundaries }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.boundaries.len() - 1
+    }
+
+    pub fn shard(&self, s: usize) -> Range<usize> {
+        self.boundaries[s]..self.boundaries[s + 1]
+    }
+
+    pub fn shards(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.num_shards()).map(|s| self.shard(s))
+    }
+
+    /// Which shard owns database row `id`.
+    pub fn shard_of(&self, id: usize) -> usize {
+        debug_assert!(id < self.n);
+        self.boundaries.partition_point(|&b| b <= id) - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_range_disjointly() {
+        let r = Router::new(10, 3);
+        let all: Vec<usize> = r.shards().flatten().collect();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        assert_eq!(r.num_shards(), 3);
+        // balanced: 4, 3, 3
+        assert_eq!(r.shard(0), 0..4);
+        assert_eq!(r.shard(1), 4..7);
+    }
+
+    #[test]
+    fn more_shards_than_rows_clamps() {
+        let r = Router::new(2, 8);
+        assert_eq!(r.num_shards(), 2);
+    }
+
+    #[test]
+    fn shard_of_matches_ranges() {
+        let r = Router::new(11, 4);
+        for id in 0..11 {
+            let s = r.shard_of(id);
+            assert!(r.shard(s).contains(&id), "id {id} shard {s}");
+        }
+    }
+
+    #[test]
+    fn tile_alignment() {
+        let r = Router::with_tile_alignment(10, 4);
+        let ranges: Vec<_> = r.shards().collect();
+        assert_eq!(ranges, vec![0..4, 4..8, 8..10]);
+    }
+}

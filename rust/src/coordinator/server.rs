@@ -1,0 +1,322 @@
+//! TCP line-protocol server: newline-delimited JSON requests/responses.
+//!
+//! Request:
+//! ```json
+//! {"op": "search", "method": "act-1", "l": 5,
+//!  "query": [[vocab_idx, weight], ...]}
+//! {"op": "search_id", "method": "rwmd", "l": 5, "id": 17}
+//! {"op": "stats"}
+//! {"op": "ping"}
+//! ```
+//! Response (one line): `{"ok": true, "hits": [[dist, id, label], ...]}` or
+//! `{"ok": false, "error": "..."}`.
+//!
+//! Accepted connections are handed to a worker pool; inside a connection
+//! requests are pipelined FIFO.  Queries flow through the dynamic batcher
+//! so concurrent clients share batch dispatches.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::core::Histogram;
+use crate::lc::Method;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+
+use super::batcher::{next_batch, BatchPolicy, Pending};
+use super::engine::SearchEngine;
+
+/// A search job travelling through the batcher.
+struct Job {
+    query: Histogram,
+    method: Method,
+    l: usize,
+}
+
+type JobResult = Result<Json, String>;
+
+/// The running server.
+pub struct Server {
+    engine: Arc<SearchEngine>,
+    listener: TcpListener,
+    batch_tx: Sender<Pending<Job, JobResult>>,
+    pool: ThreadPool,
+}
+
+impl Server {
+    /// Bind and spawn the batch-dispatch thread.  `addr` may use port 0 for
+    /// an ephemeral port (tests); see [`Server::local_addr`].
+    pub fn bind(engine: SearchEngine, addr: &str) -> Result<Server> {
+        let engine = Arc::new(engine);
+        let listener = TcpListener::bind(addr)?;
+        let policy = BatchPolicy {
+            max_batch: engine.config().max_batch,
+            linger: std::time::Duration::from_millis(engine.config().linger_ms),
+        };
+        let (batch_tx, batch_rx) = channel::<Pending<Job, JobResult>>();
+        {
+            let engine = Arc::clone(&engine);
+            std::thread::spawn(move || {
+                while let Some(batch) = next_batch(&batch_rx, policy) {
+                    engine.metrics().record_batch();
+                    for pending in batch {
+                        let job = pending.query;
+                        let out = engine
+                            .search(&job.query, job.method, job.l)
+                            .map(|res| {
+                                Json::Obj(
+                                    [
+                                        ("ok".to_string(), Json::Bool(true)),
+                                        (
+                                            "hits".to_string(),
+                                            Json::Arr(
+                                                res.hits
+                                                    .iter()
+                                                    .zip(&res.labels)
+                                                    .map(|(&(d, id), &lab)| {
+                                                        Json::Arr(vec![
+                                                            Json::Num(d as f64),
+                                                            Json::Num(id as f64),
+                                                            Json::Num(lab as f64),
+                                                        ])
+                                                    })
+                                                    .collect(),
+                                            ),
+                                        ),
+                                    ]
+                                    .into_iter()
+                                    .collect(),
+                                )
+                            })
+                            .map_err(|e| e.to_string());
+                        let _ = pending.respond.send(out);
+                    }
+                }
+            });
+        }
+        let pool = ThreadPool::new(engine.config().threads.max(2));
+        Ok(Server { engine, listener, batch_tx, pool })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept loop; blocks forever (run in a dedicated thread if needed).
+    pub fn serve(&self) -> Result<()> {
+        crate::log_info!(
+            "server",
+            "listening on {} (method default {})",
+            self.local_addr()?,
+            self.engine.config().method.name()
+        );
+        for stream in self.listener.incoming() {
+            let stream = stream?;
+            let engine = Arc::clone(&self.engine);
+            let tx = self.batch_tx.clone();
+            self.pool.execute(move || {
+                if let Err(e) = handle_connection(stream, engine.as_ref(), &tx) {
+                    crate::log_debug!("server", "connection ended: {e}");
+                }
+            });
+        }
+        Ok(())
+    }
+
+    /// Accept exactly `count` connections then return (test harness).
+    pub fn serve_n(&self, count: usize) -> Result<()> {
+        for _ in 0..count {
+            let (stream, _) = self.listener.accept()?;
+            let engine = Arc::clone(&self.engine);
+            let tx = self.batch_tx.clone();
+            self.pool.execute(move || {
+                let _ = handle_connection(stream, engine.as_ref(), &tx);
+            });
+        }
+        self.pool.wait_idle();
+        Ok(())
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    engine: &SearchEngine,
+    batch_tx: &Sender<Pending<Job, JobResult>>,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let response = match handle_request(trimmed, engine, batch_tx) {
+            Ok(json) => json,
+            Err(e) => {
+                engine.metrics().record_error();
+                Json::obj(vec![("ok", false.into()), ("error", e.to_string().into())])
+            }
+        };
+        writer.write_all(response.to_string_compact().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+fn handle_request(
+    line: &str,
+    engine: &SearchEngine,
+    batch_tx: &Sender<Pending<Job, JobResult>>,
+) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    match req.get("op").and_then(Json::as_str).unwrap_or("search") {
+        "ping" => Ok(Json::obj(vec![("ok", true.into()), ("pong", true.into())])),
+        "stats" => {
+            let mut j = engine.metrics().to_json();
+            if let Json::Obj(map) = &mut j {
+                map.insert("ok".into(), Json::Bool(true));
+                map.insert("n".into(), Json::Num(engine.dataset().len() as f64));
+            }
+            Ok(j)
+        }
+        "search" | "search_id" => {
+            let method = match req.get("method").and_then(Json::as_str) {
+                Some(s) => Method::parse(s).ok_or_else(|| anyhow!("bad method '{s}'"))?,
+                None => engine.config().method,
+            };
+            let l = req
+                .get("l")
+                .and_then(Json::as_usize)
+                .unwrap_or(engine.config().topl)
+                .max(1);
+            let query = if let Some(id) = req.get("id").and_then(Json::as_usize) {
+                anyhow::ensure!(id < engine.dataset().len(), "id {id} out of range");
+                engine.dataset().histogram(id)
+            } else {
+                let pairs = req
+                    .get("query")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("missing 'query' (or 'id')"))?;
+                let mut entries = Vec::with_capacity(pairs.len());
+                for p in pairs {
+                    let pair = p.as_arr().ok_or_else(|| anyhow!("query entries are [idx, w]"))?;
+                    anyhow::ensure!(pair.len() == 2, "query entries are [idx, w]");
+                    let idx = pair[0]
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("bad vocab index"))? as u32;
+                    let w = pair[1].as_f64().ok_or_else(|| anyhow!("bad weight"))? as f32;
+                    entries.push((idx, w));
+                }
+                Histogram::from_pairs(entries)
+            };
+            anyhow::ensure!(!query.is_empty(), "empty query");
+
+            // send through the dynamic batcher and wait for the reply
+            let (tx, rx) = channel();
+            batch_tx
+                .send(Pending {
+                    query: Job { query, method, l },
+                    respond: tx,
+                    enqueued: Instant::now(),
+                })
+                .map_err(|_| anyhow!("dispatcher gone"))?;
+            match rx.recv().map_err(|_| anyhow!("dispatcher dropped reply"))? {
+                Ok(json) => Ok(json),
+                Err(e) => Err(anyhow!(e)),
+            }
+        }
+        other => Err(anyhow!("unknown op '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, DatasetSpec};
+
+    fn test_engine() -> SearchEngine {
+        SearchEngine::from_config(Config {
+            dataset: DatasetSpec::SynthText { n: 30, vocab: 150, dim: 8, seed: 9 },
+            threads: 2,
+            linger_ms: 1,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn roundtrip(lines: &[String]) -> Vec<Json> {
+        let server = Server::bind(test_engine(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let lines = lines.to_vec();
+        let client = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut out = Vec::new();
+            let mut w = stream;
+            for line in lines {
+                w.write_all(line.as_bytes()).unwrap();
+                w.write_all(b"\n").unwrap();
+                w.flush().unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                out.push(Json::parse(resp.trim()).unwrap());
+            }
+            out
+        });
+        server.serve_n(1).unwrap();
+        client.join().unwrap()
+    }
+
+    #[test]
+    fn ping_and_stats() {
+        let out = roundtrip(&["{\"op\": \"ping\"}".into(), "{\"op\": \"stats\"}".into()]);
+        assert_eq!(out[0].get("pong"), Some(&Json::Bool(true)));
+        assert_eq!(out[1].get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(out[1].get("n").and_then(Json::as_usize), Some(30));
+    }
+
+    #[test]
+    fn search_by_id_returns_self_first() {
+        let out = roundtrip(&[
+            "{\"op\": \"search_id\", \"id\": 3, \"l\": 4, \"method\": \"act-1\"}".into()
+        ]);
+        let hits = out[0].get("hits").and_then(Json::as_arr).unwrap();
+        assert_eq!(hits.len(), 4);
+        let first = hits[0].as_arr().unwrap();
+        assert_eq!(first[1].as_usize(), Some(3)); // itself
+        assert!(first[0].as_f64().unwrap() < 1e-5);
+    }
+
+    #[test]
+    fn bad_request_reports_error() {
+        let out = roundtrip(&[
+            "{not json".into(),
+            "{\"op\": \"search\", \"query\": []}".into(),
+            "{\"op\": \"nope\"}".into(),
+        ]);
+        for o in &out {
+            assert_eq!(o.get("ok"), Some(&Json::Bool(false)), "{o:?}");
+            assert!(o.get("error").is_some());
+        }
+    }
+
+    #[test]
+    fn explicit_query_histogram() {
+        let out = roundtrip(&[
+            "{\"op\": \"search\", \"l\": 2, \"query\": [[0, 0.5], [3, 0.5]], \"method\": \"rwmd\"}"
+                .into(),
+        ]);
+        assert_eq!(out[0].get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(out[0].get("hits").and_then(Json::as_arr).unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,138 @@
+//! Top-ℓ result accumulation and shard merging.
+//!
+//! Each database shard produces partial results; [`TopL`] keeps the ℓ best
+//! (distance, id) pairs seen so far and merges with other accumulators.
+//! Ordering: ascending distance, ties broken by lower id — consistent with
+//! the rest of the stack so shard count never changes results.
+
+/// Bounded best-ℓ accumulator (insertion into a sorted small vec; ℓ is
+/// small so this beats a heap in practice and keeps deterministic order).
+#[derive(Debug, Clone)]
+pub struct TopL {
+    l: usize,
+    entries: Vec<(f32, usize)>,
+}
+
+impl TopL {
+    pub fn new(l: usize) -> TopL {
+        TopL { l: l.max(1), entries: Vec::with_capacity(l + 1) }
+    }
+
+    #[inline]
+    fn rank(e: &(f32, usize)) -> (f32, usize) {
+        *e
+    }
+
+    /// Offer one candidate.
+    #[inline]
+    pub fn push(&mut self, distance: f32, id: usize) {
+        let cand = (distance, id);
+        if self.entries.len() == self.l {
+            let worst = *self.entries.last().unwrap();
+            if (cand.0, cand.1) >= (worst.0, worst.1) {
+                return;
+            }
+        }
+        let pos = self
+            .entries
+            .partition_point(|e| (Self::rank(e).0, Self::rank(e).1) <= (cand.0, cand.1));
+        self.entries.insert(pos, cand);
+        if self.entries.len() > self.l {
+            self.entries.pop();
+        }
+    }
+
+    /// Offer a whole distance slice with ids `base..base+len`.
+    pub fn push_slice(&mut self, distances: &[f32], base: usize) {
+        for (off, &d) in distances.iter().enumerate() {
+            self.push(d, base + off);
+        }
+    }
+
+    /// Merge another accumulator into this one.
+    pub fn merge(&mut self, other: &TopL) {
+        for &(d, id) in &other.entries {
+            self.push(d, id);
+        }
+    }
+
+    /// Sorted (distance, id) results, best first.
+    pub fn into_sorted(self) -> Vec<(f32, usize)> {
+        self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Current worst accepted distance (pruning threshold for shards).
+    pub fn threshold(&self) -> Option<f32> {
+        if self.entries.len() == self.l {
+            self.entries.last().map(|e| e.0)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_best_l_sorted() {
+        let mut t = TopL::new(3);
+        for (d, id) in [(5.0, 0), (1.0, 1), (3.0, 2), (2.0, 3), (4.0, 4)] {
+            t.push(d, id);
+        }
+        assert_eq!(t.into_sorted(), vec![(1.0, 1), (2.0, 3), (3.0, 2)]);
+    }
+
+    #[test]
+    fn tie_break_lower_id() {
+        let mut t = TopL::new(2);
+        t.push(1.0, 7);
+        t.push(1.0, 3);
+        t.push(1.0, 5);
+        assert_eq!(t.into_sorted(), vec![(1.0, 3), (1.0, 5)]);
+    }
+
+    #[test]
+    fn merge_equals_bulk() {
+        check("topl-merge", 3, 50, |rng: &mut Rng| {
+            let n = 40;
+            let l = 5;
+            let xs: Vec<f32> = (0..n).map(|_| (rng.below(12) as f32) / 3.0).collect();
+            // sharded
+            let mut a = TopL::new(l);
+            let mut b = TopL::new(l);
+            a.push_slice(&xs[..n / 2], 0);
+            b.push_slice(&xs[n / 2..], n / 2);
+            a.merge(&b);
+            // bulk
+            let mut bulk = TopL::new(l);
+            bulk.push_slice(&xs, 0);
+            ensure(a.clone().into_sorted() == bulk.into_sorted(), || {
+                format!("shard {:?}", a.into_sorted())
+            })
+        });
+    }
+
+    #[test]
+    fn threshold_only_when_full() {
+        let mut t = TopL::new(2);
+        assert_eq!(t.threshold(), None);
+        t.push(3.0, 0);
+        assert_eq!(t.threshold(), None);
+        t.push(1.0, 1);
+        assert_eq!(t.threshold(), Some(3.0));
+        t.push(0.5, 2);
+        assert_eq!(t.threshold(), Some(1.0));
+    }
+}

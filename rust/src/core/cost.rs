@@ -1,0 +1,154 @@
+//! Ground-distance computation between embedded coordinates.
+//!
+//! The paper's cost is the Euclidean (L2) distance between embedding
+//! vectors; L1, squared-L2 and cosine are provided for ablations.  The LC
+//! engines never materialize an `h x h` cost matrix — costs are computed
+//! on the fly against the vocabulary — but the per-pair solvers (exact EMD,
+//! Sinkhorn, Algorithms 1-3) use [`cost_matrix`].
+
+use super::vocab::Embeddings;
+
+/// Ground metric between embedding vectors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// Euclidean distance (the paper's choice for both datasets).
+    L2,
+    /// Squared Euclidean (2-Wasserstein-style costs).
+    SqL2,
+    /// Manhattan distance.
+    L1,
+    /// Cosine distance `1 - cos(a, b)` (assumes non-degenerate vectors).
+    Cosine,
+}
+
+impl Metric {
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s.to_ascii_lowercase().as_str() {
+            "l2" | "euclidean" => Some(Metric::L2),
+            "sql2" | "sqeuclidean" => Some(Metric::SqL2),
+            "l1" | "manhattan" => Some(Metric::L1),
+            "cosine" => Some(Metric::Cosine),
+            _ => None,
+        }
+    }
+
+    /// Distance between two vectors of equal dimension.
+    #[inline]
+    pub fn distance(self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            Metric::L2 => sq_l2(a, b).sqrt(),
+            Metric::SqL2 => sq_l2(a, b),
+            Metric::L1 => a.iter().zip(b).map(|(&x, &y)| (x - y).abs()).sum(),
+            Metric::Cosine => {
+                let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+                for (&x, &y) in a.iter().zip(b) {
+                    dot += x as f64 * y as f64;
+                    na += x as f64 * x as f64;
+                    nb += y as f64 * y as f64;
+                }
+                let denom = (na.sqrt() * nb.sqrt()).max(1e-30);
+                (1.0 - dot / denom).max(0.0) as f32
+            }
+        }
+    }
+}
+
+#[inline]
+fn sq_l2(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Dense row-major `(hp, hq)` cost matrix between two coordinate sets
+/// (the `C` of paper eq. (1)).
+pub fn cost_matrix(p_coords: &Embeddings, q_coords: &Embeddings, metric: Metric) -> Vec<f32> {
+    let hp = p_coords.num_vectors();
+    let hq = q_coords.num_vectors();
+    let mut out = vec![0.0f32; hp * hq];
+    for i in 0..hp {
+        let a = p_coords.row(i);
+        let row = &mut out[i * hq..(i + 1) * hq];
+        for (j, slot) in row.iter_mut().enumerate() {
+            *slot = metric.distance(a, q_coords.row(j));
+        }
+    }
+    out
+}
+
+/// Cost matrix between two histograms' support coordinates drawn from a
+/// shared vocabulary.  Coordinates with equal vocabulary index get an exact
+/// 0 (the overlap OMR/ICT key off), regardless of fp rounding.
+pub fn support_cost_matrix(
+    vocab: &Embeddings,
+    p_support: &[u32],
+    q_support: &[u32],
+    metric: Metric,
+) -> Vec<f32> {
+    let hp = p_support.len();
+    let hq = q_support.len();
+    let mut out = vec![0.0f32; hp * hq];
+    for (i, &pi) in p_support.iter().enumerate() {
+        let a = vocab.row(pi as usize);
+        let row = &mut out[i * hq..(i + 1) * hq];
+        for (j, &qj) in q_support.iter().enumerate() {
+            row[j] = if pi == qj { 0.0 } else { metric.distance(a, vocab.row(qj as usize)) };
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2_matches_hand_computation() {
+        assert!((Metric::L2.distance(&[0.0, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        assert_eq!(Metric::SqL2.distance(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(Metric::L1.distance(&[0.0, 0.0], &[3.0, 4.0]), 7.0);
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        let d_same = Metric::Cosine.distance(&[1.0, 0.0], &[2.0, 0.0]);
+        let d_orth = Metric::Cosine.distance(&[1.0, 0.0], &[0.0, 1.0]);
+        let d_opp = Metric::Cosine.distance(&[1.0, 0.0], &[-1.0, 0.0]);
+        assert!(d_same.abs() < 1e-6);
+        assert!((d_orth - 1.0).abs() < 1e-6);
+        assert!((d_opp - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_metric_names() {
+        assert_eq!(Metric::parse("L2"), Some(Metric::L2));
+        assert_eq!(Metric::parse("cosine"), Some(Metric::Cosine));
+        assert_eq!(Metric::parse("nope"), None);
+    }
+
+    #[test]
+    fn cost_matrix_shape_and_values() {
+        let p = Embeddings::new(vec![0.0, 0.0, 1.0, 0.0], 2, 2);
+        let q = Embeddings::new(vec![0.0, 1.0], 1, 2);
+        let c = cost_matrix(&p, &q, Metric::L2);
+        assert_eq!(c.len(), 2);
+        assert!((c[0] - 1.0).abs() < 1e-6);
+        assert!((c[1] - (2.0f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn support_cost_exact_zero_on_shared_index() {
+        let vocab = Embeddings::new(vec![0.1, 0.2, 0.3, 0.4], 2, 2);
+        let c = support_cost_matrix(&vocab, &[0, 1], &[1, 0], Metric::L2);
+        // (i=0 -> q index 1): nonzero; (i=0 -> q index 0... wait supports are
+        // vocabulary ids: p=[0,1], q=[1,0] -> C[0][1] = 0 (both id 0)
+        assert!(c[0] > 0.0);
+        assert_eq!(c[1], 0.0);
+        assert_eq!(c[2], 0.0);
+        assert!(c[3] > 0.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! A labeled similarity-search dataset: histograms over a shared embedded
+//! vocabulary + class labels (paper Table 4 properties).
+
+use super::histogram::Histogram;
+use super::sparse::CsrMatrix;
+use super::vocab::Embeddings;
+
+/// An in-memory dataset ready for the LC engines and solvers.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// `(v, m)` vocabulary coordinates.
+    pub embeddings: Embeddings,
+    /// Database histograms in CSR form (rows L1-normalized).
+    pub matrix: CsrMatrix,
+    /// Class label per histogram.
+    pub labels: Vec<u16>,
+}
+
+/// Paper Table-4 style properties.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetStats {
+    pub n: usize,
+    pub avg_h: f64,
+    pub vocab_size: usize,
+    pub used_vocab: usize,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn new(
+        name: impl Into<String>,
+        embeddings: Embeddings,
+        histograms: &[Histogram],
+        labels: Vec<u16>,
+    ) -> Dataset {
+        assert_eq!(histograms.len(), labels.len(), "one label per histogram");
+        let normalized: Vec<Histogram> = histograms.iter().map(|h| h.normalized()).collect();
+        let matrix = CsrMatrix::from_histograms(&normalized, embeddings.num_vectors());
+        Dataset { name: name.into(), embeddings, matrix, labels }
+    }
+
+    /// Assemble from an already-built CSR matrix without re-normalizing
+    /// (used by the binary loader so weights round-trip bit-exactly).
+    pub fn from_csr(
+        name: impl Into<String>,
+        embeddings: Embeddings,
+        matrix: CsrMatrix,
+        labels: Vec<u16>,
+    ) -> Dataset {
+        assert_eq!(matrix.nrows(), labels.len(), "one label per histogram");
+        assert_eq!(matrix.ncols(), embeddings.num_vectors(), "vocab size mismatch");
+        Dataset { name: name.into(), embeddings, matrix, labels }
+    }
+
+    pub fn len(&self) -> usize {
+        self.matrix.nrows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Vocabulary entries that actually occur in some histogram (paper's
+    /// "used v").
+    pub fn used_vocab(&self) -> usize {
+        let mut used = vec![false; self.matrix.ncols()];
+        for u in 0..self.matrix.nrows() {
+            let (idx, _) = self.matrix.row(u);
+            for &i in idx {
+                used[i as usize] = true;
+            }
+        }
+        used.iter().filter(|&&b| b).count()
+    }
+
+    pub fn stats(&self) -> DatasetStats {
+        let classes = self.labels.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0);
+        DatasetStats {
+            n: self.len(),
+            avg_h: self.matrix.avg_row_nnz(),
+            vocab_size: self.matrix.ncols(),
+            used_vocab: self.used_vocab(),
+            dim: self.embeddings.dim(),
+            classes,
+        }
+    }
+
+    /// The histogram of row `u` (owned copy).
+    pub fn histogram(&self, u: usize) -> Histogram {
+        self.matrix.row_histogram(u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let emb = Embeddings::new(vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0], 3, 2);
+        let hists = vec![
+            Histogram::from_pairs(vec![(0, 2.0), (1, 2.0)]),
+            Histogram::from_pairs(vec![(2, 5.0)]),
+        ];
+        Dataset::new("tiny", emb, &hists, vec![0, 1])
+    }
+
+    #[test]
+    fn rows_are_normalized() {
+        let d = tiny();
+        let (_, w) = d.matrix.row(0);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stats_match() {
+        let d = tiny();
+        let s = d.stats();
+        assert_eq!(s.n, 2);
+        assert_eq!(s.vocab_size, 3);
+        assert_eq!(s.used_vocab, 3);
+        assert_eq!(s.dim, 2);
+        assert_eq!(s.classes, 2);
+        assert!((s.avg_h - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "one label per histogram")]
+    fn label_mismatch_panics() {
+        let emb = Embeddings::zeros(1, 2);
+        Dataset::new("bad", emb, &[], vec![0]);
+    }
+}

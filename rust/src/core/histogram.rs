@@ -1,0 +1,193 @@
+//! Histograms over a vocabulary of embedded coordinates (paper Section 2).
+//!
+//! A histogram assigns non-negative weights to a sparse subset of the
+//! vocabulary.  Weights are L1-normalized before any distance computation
+//! (the paper assumes Σp = Σq = 1 throughout).
+
+/// A sparse histogram: parallel `(vocab index, weight)` arrays with indices
+/// strictly ascending.  Invariants are enforced by the constructors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    indices: Vec<u32>,
+    weights: Vec<f32>,
+}
+
+impl Histogram {
+    /// Build from unsorted (index, weight) pairs: merges duplicate indices,
+    /// drops non-positive weights, sorts by index.
+    pub fn from_pairs(mut pairs: Vec<(u32, f32)>) -> Histogram {
+        pairs.retain(|&(_, w)| w > 0.0);
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        let mut indices = Vec::with_capacity(pairs.len());
+        let mut weights: Vec<f32> = Vec::with_capacity(pairs.len());
+        for (i, w) in pairs {
+            if indices.last() == Some(&i) {
+                *weights.last_mut().unwrap() += w;
+            } else {
+                indices.push(i);
+                weights.push(w);
+            }
+        }
+        Histogram { indices, weights }
+    }
+
+    /// Build from a dense weight vector (e.g. an image), keeping nonzeros.
+    pub fn from_dense(dense: &[f32]) -> Histogram {
+        let mut indices = Vec::new();
+        let mut weights = Vec::new();
+        for (i, &w) in dense.iter().enumerate() {
+            if w > 0.0 {
+                indices.push(i as u32);
+                weights.push(w);
+            }
+        }
+        Histogram { indices, weights }
+    }
+
+    /// Number of bins with positive weight (the paper's `h`).
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+
+    pub fn total_mass(&self) -> f64 {
+        self.weights.iter().map(|&w| w as f64).sum()
+    }
+
+    /// L1-normalize in place.  No-op on an empty histogram.
+    pub fn normalize(&mut self) {
+        let total = self.total_mass();
+        if total > 0.0 {
+            let inv = (1.0 / total) as f32;
+            for w in &mut self.weights {
+                *w *= inv;
+            }
+        }
+    }
+
+    /// A normalized copy.
+    pub fn normalized(&self) -> Histogram {
+        let mut h = self.clone();
+        h.normalize();
+        h
+    }
+
+    /// Keep only the `cap` heaviest bins (paper: 20News truncation to the
+    /// most-frequent 500 words), then restore index order.
+    pub fn truncate_top(&mut self, cap: usize) {
+        if self.len() <= cap {
+            return;
+        }
+        let mut order: Vec<usize> = (0..self.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.weights[b].partial_cmp(&self.weights[a]).unwrap().then(a.cmp(&b))
+        });
+        order.truncate(cap);
+        order.sort_unstable();
+        self.indices = order.iter().map(|&i| self.indices[i]).collect();
+        self.weights = order.iter().map(|&i| self.weights[i]).collect();
+    }
+
+    /// Scatter into a dense vector of length `v`.
+    pub fn to_dense(&self, v: usize) -> Vec<f32> {
+        let mut out = vec![0.0; v];
+        for (&i, &w) in self.indices.iter().zip(&self.weights) {
+            out[i as usize] += w;
+        }
+        out
+    }
+
+    /// Weight at a vocabulary index (0 if absent); O(log h).
+    pub fn weight_at(&self, index: u32) -> f32 {
+        match self.indices.binary_search(&index) {
+            Ok(pos) => self.weights[pos],
+            Err(_) => 0.0,
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.indices.iter().copied().zip(self.weights.iter().copied())
+    }
+
+    /// Largest vocabulary index referenced + 1 (0 when empty).
+    pub fn min_vocab_size(&self) -> usize {
+        self.indices.last().map(|&i| i as usize + 1).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_pairs_merges_and_sorts() {
+        let h = Histogram::from_pairs(vec![(5, 1.0), (2, 2.0), (5, 0.5), (9, 0.0), (1, -1.0)]);
+        assert_eq!(h.indices(), &[2, 5]);
+        assert_eq!(h.weights(), &[2.0, 1.5]);
+    }
+
+    #[test]
+    fn from_dense_keeps_nonzeros() {
+        let h = Histogram::from_dense(&[0.0, 0.5, 0.0, 0.25]);
+        assert_eq!(h.indices(), &[1, 3]);
+        assert_eq!(h.weights(), &[0.5, 0.25]);
+        assert_eq!(h.min_vocab_size(), 4);
+    }
+
+    #[test]
+    fn normalize_sums_to_one() {
+        let mut h = Histogram::from_pairs(vec![(0, 2.0), (1, 6.0)]);
+        h.normalize();
+        assert!((h.total_mass() - 1.0).abs() < 1e-7);
+        assert!((h.weights()[0] - 0.25).abs() < 1e-7);
+    }
+
+    #[test]
+    fn normalize_empty_is_noop() {
+        let mut h = Histogram::from_pairs(vec![]);
+        h.normalize();
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn truncate_keeps_heaviest_in_index_order() {
+        let mut h =
+            Histogram::from_pairs(vec![(0, 0.1), (1, 0.9), (2, 0.05), (3, 0.5), (4, 0.3)]);
+        h.truncate_top(3);
+        assert_eq!(h.indices(), &[1, 3, 4]);
+        assert_eq!(h.weights(), &[0.9, 0.5, 0.3]);
+    }
+
+    #[test]
+    fn truncate_tie_prefers_lower_index() {
+        let mut h = Histogram::from_pairs(vec![(0, 0.5), (1, 0.5), (2, 0.5)]);
+        h.truncate_top(2);
+        assert_eq!(h.indices(), &[0, 1]);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let h = Histogram::from_pairs(vec![(1, 0.5), (3, 0.5)]);
+        let d = h.to_dense(5);
+        assert_eq!(d, vec![0.0, 0.5, 0.0, 0.5, 0.0]);
+        assert_eq!(Histogram::from_dense(&d), h);
+    }
+
+    #[test]
+    fn weight_at_binary_search() {
+        let h = Histogram::from_pairs(vec![(10, 0.25), (20, 0.75)]);
+        assert_eq!(h.weight_at(10), 0.25);
+        assert_eq!(h.weight_at(15), 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Core data model: histograms, vocabulary embeddings, the CSR database
+//! matrix and ground-distance computation (paper Section 2 & 5).
+
+pub mod cost;
+pub mod dataset;
+pub mod histogram;
+pub mod sparse;
+pub mod vocab;
+
+pub use cost::{cost_matrix, support_cost_matrix, Metric};
+pub use dataset::{Dataset, DatasetStats};
+pub use histogram::Histogram;
+pub use sparse::CsrMatrix;
+pub use vocab::Embeddings;

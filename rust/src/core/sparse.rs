@@ -1,0 +1,166 @@
+//! Compressed-sparse-row database matrix **X** (paper Fig. 7): one row per
+//! database histogram over the vocabulary.
+
+use super::histogram::Histogram;
+
+/// CSR matrix of non-negative f32 weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    data: Vec<f32>,
+    ncols: usize,
+}
+
+impl CsrMatrix {
+    /// Assemble from histograms; every histogram must fit in `ncols`.
+    pub fn from_histograms(rows: &[Histogram], ncols: usize) -> CsrMatrix {
+        let nnz: usize = rows.iter().map(|h| h.len()).sum();
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut data = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for h in rows {
+            assert!(h.min_vocab_size() <= ncols, "histogram index out of vocabulary");
+            indices.extend_from_slice(h.indices());
+            data.extend_from_slice(h.weights());
+            indptr.push(indices.len());
+        }
+        CsrMatrix { indptr, indices, data, ncols }
+    }
+
+    /// Assemble from raw CSR arrays (validated); used by the binary loader.
+    pub fn from_raw(
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        data: Vec<f32>,
+        ncols: usize,
+    ) -> CsrMatrix {
+        assert!(!indptr.is_empty() && indptr[0] == 0, "indptr must start at 0");
+        assert_eq!(*indptr.last().unwrap(), indices.len(), "indptr/indices mismatch");
+        assert_eq!(indices.len(), data.len(), "indices/data mismatch");
+        assert!(indptr.windows(2).all(|w| w[0] <= w[1]), "indptr must be monotone");
+        assert!(indices.iter().all(|&i| (i as usize) < ncols), "column index out of range");
+        CsrMatrix { indptr, indices, data, ncols }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Average nonzeros per row — the paper's average histogram size h̄.
+    pub fn avg_row_nnz(&self) -> f64 {
+        if self.nrows() == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.nrows() as f64
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, u: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.indptr[u], self.indptr[u + 1]);
+        (&self.indices[a..b], &self.data[a..b])
+    }
+
+    pub fn row_histogram(&self, u: usize) -> Histogram {
+        let (idx, w) = self.row(u);
+        Histogram::from_pairs(idx.iter().copied().zip(w.iter().copied()).collect())
+    }
+
+    /// Scatter rows `[start, end)` into a dense row-major `(end-start, ncols)`
+    /// tile, zero-padding missing rows beyond `nrows` (artifact tiling).
+    pub fn to_dense_tile(&self, start: usize, end: usize, out: &mut [f32]) {
+        let rows = end - start;
+        assert_eq!(out.len(), rows * self.ncols);
+        out.fill(0.0);
+        for (r, u) in (start..end.min(self.nrows())).enumerate() {
+            let (idx, w) = self.row(u);
+            let row_out = &mut out[r * self.ncols..(r + 1) * self.ncols];
+            for (&i, &x) in idx.iter().zip(w) {
+                row_out[i as usize] = x;
+            }
+        }
+        let _ = rows;
+    }
+
+    /// L2 norm of each row (for BoW cosine).
+    pub fn row_l2_norms(&self) -> Vec<f32> {
+        (0..self.nrows())
+            .map(|u| {
+                let (_, w) = self.row(u);
+                (w.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()) as f32
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        let rows = vec![
+            Histogram::from_pairs(vec![(0, 1.0), (2, 2.0)]),
+            Histogram::from_pairs(vec![]),
+            Histogram::from_pairs(vec![(3, 0.5)]),
+        ];
+        CsrMatrix::from_histograms(&rows, 4)
+    }
+
+    #[test]
+    fn shape_and_nnz() {
+        let m = sample();
+        assert_eq!(m.nrows(), 3);
+        assert_eq!(m.ncols(), 4);
+        assert_eq!(m.nnz(), 3);
+        assert!((m.avg_row_nnz() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_access() {
+        let m = sample();
+        let (idx, w) = m.row(0);
+        assert_eq!(idx, &[0, 2]);
+        assert_eq!(w, &[1.0, 2.0]);
+        let (idx, _) = m.row(1);
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn dense_tile_with_padding() {
+        let m = sample();
+        let mut tile = vec![9.0; 2 * 4];
+        m.to_dense_tile(2, 4, &mut tile); // row 3 is past the end -> zeros
+        assert_eq!(tile, vec![0.0, 0.0, 0.0, 0.5, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn histogram_roundtrip() {
+        let m = sample();
+        assert_eq!(m.row_histogram(0).indices(), &[0, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of vocabulary")]
+    fn oversized_index_panics() {
+        let rows = vec![Histogram::from_pairs(vec![(10, 1.0)])];
+        CsrMatrix::from_histograms(&rows, 4);
+    }
+
+    #[test]
+    fn l2_norms() {
+        let m = sample();
+        let n = m.row_l2_norms();
+        assert!((n[0] - (5.0f32).sqrt()).abs() < 1e-6);
+        assert_eq!(n[1], 0.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! Vocabulary embeddings: the `(v, m)` coordinate matrix **V** of paper
+//! Section 5 (word2vec vectors for text, pixel coordinates for images).
+
+/// Row-major `(v, m)` embedding matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Embeddings {
+    data: Vec<f32>,
+    v: usize,
+    m: usize,
+}
+
+impl Embeddings {
+    pub fn new(data: Vec<f32>, v: usize, m: usize) -> Embeddings {
+        assert_eq!(data.len(), v * m, "embedding buffer size mismatch");
+        Embeddings { data, v, m }
+    }
+
+    pub fn zeros(v: usize, m: usize) -> Embeddings {
+        Embeddings { data: vec![0.0; v * m], v, m }
+    }
+
+    /// Pixel-grid embeddings for `side x side` images: vocabulary entry
+    /// `r*side + c` has coordinate `(r, c)` (paper Fig. 1(a), m = 2).
+    pub fn pixel_grid(side: usize) -> Embeddings {
+        let mut data = Vec::with_capacity(side * side * 2);
+        for r in 0..side {
+            for c in 0..side {
+                data.push(r as f32);
+                data.push(c as f32);
+            }
+        }
+        Embeddings::new(data, side * side, 2)
+    }
+
+    pub fn num_vectors(&self) -> usize {
+        self.v
+    }
+
+    pub fn dim(&self) -> usize {
+        self.m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.m..(i + 1) * self.m]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.m..(i + 1) * self.m]
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// L2-normalize every row (paper: word2vec vectors are L2-normalized).
+    /// Zero rows are left untouched.
+    pub fn l2_normalize(&mut self) {
+        for i in 0..self.v {
+            let row = self.row_mut(i);
+            let norm = row.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+            if norm > 0.0 {
+                let inv = (1.0 / norm) as f32;
+                for x in row {
+                    *x *= inv;
+                }
+            }
+        }
+    }
+
+    /// Gather rows into a new matrix (used to build the query coordinate
+    /// matrix Q from histogram support indices).
+    pub fn gather(&self, rows: &[u32]) -> Embeddings {
+        let mut data = Vec::with_capacity(rows.len() * self.m);
+        for &r in rows {
+            data.extend_from_slice(self.row(r as usize));
+        }
+        Embeddings::new(data, rows.len(), self.m)
+    }
+
+    /// Weighted centroid of a histogram's coordinates (for WCD).
+    pub fn centroid(&self, indices: &[u32], weights: &[f32]) -> Vec<f64> {
+        let mut c = vec![0.0f64; self.m];
+        for (&i, &w) in indices.iter().zip(weights) {
+            let row = self.row(i as usize);
+            for (acc, &x) in c.iter_mut().zip(row) {
+                *acc += w as f64 * x as f64;
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pixel_grid_coords() {
+        let e = Embeddings::pixel_grid(3);
+        assert_eq!(e.num_vectors(), 9);
+        assert_eq!(e.dim(), 2);
+        assert_eq!(e.row(0), &[0.0, 0.0]);
+        assert_eq!(e.row(5), &[1.0, 2.0]); // r=1, c=2
+        assert_eq!(e.row(8), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn l2_normalize_unit_rows() {
+        let mut e = Embeddings::new(vec![3.0, 4.0, 0.0, 0.0], 2, 2);
+        e.l2_normalize();
+        assert!((e.row(0)[0] - 0.6).abs() < 1e-6);
+        assert!((e.row(0)[1] - 0.8).abs() < 1e-6);
+        assert_eq!(e.row(1), &[0.0, 0.0]); // zero row untouched
+    }
+
+    #[test]
+    fn gather_selects_rows() {
+        let e = Embeddings::new((0..8).map(|x| x as f32).collect(), 4, 2);
+        let g = e.gather(&[2, 0]);
+        assert_eq!(g.row(0), &[4.0, 5.0]);
+        assert_eq!(g.row(1), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn centroid_weighted_mean() {
+        let e = Embeddings::new(vec![0.0, 0.0, 2.0, 4.0], 2, 2);
+        let c = e.centroid(&[0, 1], &[0.5, 0.5]);
+        assert_eq!(c, vec![1.0, 2.0]);
+    }
+}

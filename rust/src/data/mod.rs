@@ -1,0 +1,10 @@
+//! Dataset substrates: synthetic MNIST-like digits, synthetic
+//! 20-Newsgroups-like corpus, and binary persistence.
+
+pub mod store;
+pub mod synth_mnist;
+pub mod synth_text;
+
+pub use store::{load, save};
+pub use synth_mnist::{generate as generate_mnist, MnistConfig};
+pub use synth_text::{generate as generate_text, TextConfig};

@@ -1,0 +1,177 @@
+//! Binary dataset persistence (substrate: no serde/bincode offline).
+//!
+//! Format `EMD1` (little-endian):
+//! ```text
+//! magic "EMD1" | name_len u32 | name bytes
+//! v u64 | m u64 | embeddings f32[v*m]
+//! n u64 | labels u16[n]
+//! indptr u64[n+1] | nnz u64 | indices u32[nnz] | data f32[nnz]
+//! ```
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::core::{Dataset, Embeddings};
+
+const MAGIC: &[u8; 4] = b"EMD1";
+
+/// Save a dataset to a file.
+pub fn save(ds: &Dataset, path: &Path) -> io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    let name = ds.name.as_bytes();
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name)?;
+
+    let v = ds.embeddings.num_vectors();
+    let m = ds.embeddings.dim();
+    w.write_all(&(v as u64).to_le_bytes())?;
+    w.write_all(&(m as u64).to_le_bytes())?;
+    write_f32s(&mut w, ds.embeddings.as_slice())?;
+
+    let n = ds.len();
+    w.write_all(&(n as u64).to_le_bytes())?;
+    for &l in &ds.labels {
+        w.write_all(&l.to_le_bytes())?;
+    }
+
+    // CSR arrays via row access (keeps CsrMatrix internals private)
+    let mut indptr: Vec<u64> = Vec::with_capacity(n + 1);
+    indptr.push(0);
+    let mut indices: Vec<u32> = Vec::new();
+    let mut data: Vec<f32> = Vec::new();
+    for u in 0..n {
+        let (idx, wgt) = ds.matrix.row(u);
+        indices.extend_from_slice(idx);
+        data.extend_from_slice(wgt);
+        indptr.push(indices.len() as u64);
+    }
+    for &p in &indptr {
+        w.write_all(&p.to_le_bytes())?;
+    }
+    w.write_all(&(indices.len() as u64).to_le_bytes())?;
+    for &i in &indices {
+        w.write_all(&i.to_le_bytes())?;
+    }
+    write_f32s(&mut w, &data)?;
+    w.flush()
+}
+
+/// Load a dataset from a file.
+pub fn load(path: &Path) -> io::Result<Dataset> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic (not an EMD1 file)"));
+    }
+    let name_len = read_u32(&mut r)? as usize;
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let name = String::from_utf8(name)
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "bad name"))?;
+
+    let v = read_u64(&mut r)? as usize;
+    let m = read_u64(&mut r)? as usize;
+    let emb = read_f32s(&mut r, v * m)?;
+    let embeddings = Embeddings::new(emb, v, m);
+
+    let n = read_u64(&mut r)? as usize;
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut b = [0u8; 2];
+        r.read_exact(&mut b)?;
+        labels.push(u16::from_le_bytes(b));
+    }
+
+    let mut indptr = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        indptr.push(read_u64(&mut r)? as usize);
+    }
+    let nnz = read_u64(&mut r)? as usize;
+    let mut indices = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        indices.push(u32::from_le_bytes(b));
+    }
+    let data = read_f32s(&mut r, nnz)?;
+
+    // rebuild the CSR matrix directly: no re-normalization, weights
+    // round-trip bit-exactly
+    let matrix = crate::core::CsrMatrix::from_raw(indptr, indices, data, v);
+    Ok(Dataset::from_csr(name, embeddings, matrix, labels))
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> io::Result<()> {
+    // chunked conversion avoids a full-buffer copy
+    let mut buf = Vec::with_capacity(4096 * 4);
+    for chunk in xs.chunks(4096) {
+        buf.clear();
+        for &x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, count: usize) -> io::Result<Vec<f32>> {
+    let mut bytes = vec![0u8; count * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_text::{generate, TextConfig};
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let ds = generate(&TextConfig {
+            n: 30,
+            classes: 3,
+            vocab: 100,
+            dim: 8,
+            doc_len: 20,
+            ..Default::default()
+        });
+        let dir = std::env::temp_dir().join("emdpar_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ds.bin");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.name, ds.name);
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.matrix, ds.matrix);
+        assert_eq!(back.embeddings, ds.embeddings);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let dir = std::env::temp_dir().join("emdpar_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.bin");
+        std::fs::write(&path, b"NOPEnope").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,214 @@
+//! Synthetic 20-Newsgroups substitute: a topic-mixture corpus over a
+//! vocabulary with cluster-structured embeddings (paper substitution — see
+//! DESIGN.md).
+//!
+//! Geometry the experiments need (and that Google-News word2vec provides in
+//! the paper): words belonging to the same topic are *near* in embedding
+//! space, documents are sparse L1-normalized word histograms, and a
+//! document's class is its dominant topic.  Frequencies follow a Zipf law
+//! within each topic so histograms have realistic skew, and a shared pool
+//! of "general" words gives documents of different classes overlapping
+//! support (which is what separates WMD-family measures from BoW).
+
+use crate::core::{Dataset, Embeddings, Histogram};
+use crate::util::rng::Rng;
+
+/// Generator configuration.
+#[derive(Debug, Clone)]
+pub struct TextConfig {
+    /// Number of documents.
+    pub n: usize,
+    /// Number of classes/topics (paper: 20).
+    pub classes: usize,
+    /// Vocabulary size (paper used-v: 69682; default scaled down).
+    pub vocab: usize,
+    /// Embedding dimensionality (paper: 300).
+    pub dim: usize,
+    /// Mean words per document before truncation (paper h̄: 78.8).
+    pub doc_len: usize,
+    /// Keep only the `truncate` most frequent words per document (paper: 500).
+    pub truncate: usize,
+    /// Fraction of each document drawn from its own topic.
+    pub topic_frac: f64,
+    /// Fraction drawn from the shared general pool (rest: random topics).
+    pub general_frac: f64,
+    /// Embedding cluster spread (intra-topic noise std before L2-norm).
+    pub spread: f64,
+    pub seed: u64,
+}
+
+impl Default for TextConfig {
+    fn default() -> Self {
+        TextConfig {
+            n: 1000,
+            classes: 20,
+            vocab: 8000,
+            dim: 64,
+            doc_len: 80,
+            truncate: 500,
+            topic_frac: 0.65,
+            general_frac: 0.2,
+            spread: 0.35,
+            seed: 1234,
+        }
+    }
+}
+
+/// Word-to-topic assignment: the first `general` words are the shared pool,
+/// the rest are split evenly across topics.
+fn word_topic(word: usize, vocab: usize, classes: usize, general: usize) -> Option<usize> {
+    if word < general {
+        None
+    } else {
+        Some((word - general) * classes / (vocab - general))
+    }
+}
+
+/// Generate the corpus.
+pub fn generate(config: &TextConfig) -> Dataset {
+    let mut rng = Rng::new(config.seed);
+    let v = config.vocab;
+    let m = config.dim;
+    let t = config.classes;
+    let general = (v / 10).max(t); // ~10% shared pool
+
+    // --- embeddings: topic centers + per-word noise, L2-normalized ---------
+    let mut centers = vec![0.0f64; (t + 1) * m];
+    for c in centers.iter_mut() {
+        *c = rng.normal();
+    }
+    let mut emb = vec![0.0f32; v * m];
+    for word in 0..v {
+        let topic = word_topic(word, v, t, general);
+        let center = match topic {
+            Some(tp) => &centers[tp * m..(tp + 1) * m],
+            None => &centers[t * m..(t + 1) * m], // general pool has its own loose center
+        };
+        let spread = if topic.is_some() { config.spread } else { 1.0 };
+        for d in 0..m {
+            emb[word * m + d] = (center[d] + rng.normal_ms(0.0, spread)) as f32;
+        }
+    }
+    let mut embeddings = Embeddings::new(emb, v, m);
+    embeddings.l2_normalize(); // paper: word2vec vectors are L2-normalized
+
+    // per-topic word lists for Zipf sampling
+    let mut topic_words: Vec<Vec<u32>> = vec![Vec::new(); t];
+    let mut general_words: Vec<u32> = Vec::new();
+    for word in 0..v {
+        match word_topic(word, v, t, general) {
+            Some(tp) => topic_words[tp].push(word as u32),
+            None => general_words.push(word as u32),
+        }
+    }
+
+    // Zipf weights (rank^-1) per pool, precomputed
+    let zipf = |len: usize| -> Vec<f64> { (1..=len).map(|r| 1.0 / r as f64).collect() };
+    let topic_zipf: Vec<Vec<f64>> = topic_words.iter().map(|ws| zipf(ws.len())).collect();
+    let general_zipf = zipf(general_words.len());
+
+    // --- documents ----------------------------------------------------------
+    let mut hists = Vec::with_capacity(config.n);
+    let mut labels = Vec::with_capacity(config.n);
+    for i in 0..config.n {
+        let class = i % t;
+        let mut local = rng.fork(i as u64);
+        // document length: lognormal-ish around doc_len
+        let len = ((config.doc_len as f64) * local.range_f64(0.5, 1.7)).round().max(5.0) as usize;
+        let mut counts: std::collections::BTreeMap<u32, f32> = std::collections::BTreeMap::new();
+        for _ in 0..len {
+            let roll = local.f64();
+            let word = if roll < config.topic_frac {
+                let ws = &topic_words[class];
+                ws[local.weighted(&topic_zipf[class])]
+            } else if roll < config.topic_frac + config.general_frac {
+                general_words[local.weighted(&general_zipf)]
+            } else {
+                let other = local.below(t);
+                let ws = &topic_words[other];
+                ws[local.weighted(&topic_zipf[other])]
+            };
+            *counts.entry(word).or_insert(0.0) += 1.0;
+        }
+        let mut h = Histogram::from_pairs(counts.into_iter().collect());
+        h.truncate_top(config.truncate);
+        hists.push(h);
+        labels.push(class as u16);
+    }
+
+    Dataset::new("synth-20news", embeddings, &hists, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> TextConfig {
+        TextConfig { n: 120, classes: 4, vocab: 400, dim: 16, doc_len: 40, ..Default::default() }
+    }
+
+    #[test]
+    fn corpus_shape() {
+        let ds = generate(&small());
+        let s = ds.stats();
+        assert_eq!(s.n, 120);
+        assert_eq!(s.vocab_size, 400);
+        assert_eq!(s.dim, 16);
+        assert_eq!(s.classes, 4);
+        assert!(s.avg_h > 10.0 && s.avg_h < 60.0, "avg_h = {}", s.avg_h);
+    }
+
+    #[test]
+    fn embeddings_are_unit_norm() {
+        let ds = generate(&small());
+        for i in 0..ds.embeddings.num_vectors() {
+            let n: f64 =
+                ds.embeddings.row(i).iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+            assert!((n - 1.0).abs() < 1e-5, "word {i} norm {n}");
+        }
+    }
+
+    #[test]
+    fn same_topic_words_are_closer() {
+        let ds = generate(&small());
+        let cfg = small();
+        let general = (cfg.vocab / 10).max(cfg.classes);
+        // pick two words of topic 0 and one of topic 2
+        let t0a = general;
+        let t0b = general + 1;
+        let t2 = general + 2 * (cfg.vocab - general) / cfg.classes + 1;
+        let d = |a: usize, b: usize| {
+            crate::core::Metric::L2.distance(ds.embeddings.row(a), ds.embeddings.row(b))
+        };
+        assert!(d(t0a, t0b) < d(t0a, t2), "intra {} !< inter {}", d(t0a, t0b), d(t0a, t2));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&small());
+        let b = generate(&small());
+        assert_eq!(a.matrix, b.matrix);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn truncation_caps_histogram_size() {
+        let mut cfg = small();
+        cfg.doc_len = 300;
+        cfg.truncate = 25;
+        let ds = generate(&cfg);
+        for u in 0..ds.len() {
+            assert!(ds.histogram(u).len() <= 25);
+        }
+    }
+
+    #[test]
+    fn classes_are_balanced() {
+        let ds = generate(&small());
+        let mut counts = vec![0usize; 4];
+        for &l in &ds.labels {
+            counts[l as usize] += 1;
+        }
+        assert_eq!(counts, vec![30, 30, 30, 30]);
+    }
+}

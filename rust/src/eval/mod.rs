@@ -1,0 +1,8 @@
+//! Evaluation harness: precision@top-ℓ (the paper's accuracy metric) and
+//! runtime-vs-accuracy sweeps reproducing Fig. 8 / Tables 5-6.
+
+pub mod precision;
+pub mod sweep;
+
+pub use precision::{precision_at, precision_curve, topl_indices};
+pub use sweep::{render_markdown, sweep_all_pairs, sweep_subset, SweepRow};

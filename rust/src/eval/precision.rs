@@ -1,0 +1,150 @@
+//! Precision@top-ℓ — the paper's accuracy metric (Section 6): for each
+//! query, the fraction of its ℓ nearest neighbors (self excluded) sharing
+//! the query's label, averaged over all queries.
+
+/// Indices of the ℓ smallest entries of `row`, excluding `exclude`
+/// (usually the query itself).  Ties break to the lowest index, matching
+/// the rest of the stack.
+pub fn topl_indices(row: &[f32], l: usize, exclude: Option<usize>) -> Vec<usize> {
+    let mut vals: Vec<f32> = Vec::with_capacity(l);
+    let mut idxs: Vec<usize> = Vec::with_capacity(l);
+    for (j, &d) in row.iter().enumerate() {
+        if Some(j) == exclude {
+            continue;
+        }
+        if vals.len() < l {
+            let pos = vals.partition_point(|&v| v <= d);
+            vals.insert(pos, d);
+            idxs.insert(pos, j);
+        } else if l > 0 && d < vals[l - 1] {
+            let pos = vals.partition_point(|&v| v <= d);
+            vals.pop();
+            idxs.pop();
+            vals.insert(pos, d);
+            idxs.insert(pos, j);
+        }
+    }
+    idxs
+}
+
+/// Average precision@ℓ from a row-major `(nq, n)` distance matrix.
+///
+/// `query_labels[i]` labels row i; `db_labels[j]` labels column j.  When the
+/// query set is a prefix of the database (all-pairs evaluation), pass
+/// `exclude_diagonal = true` to skip the self match.
+pub fn precision_at(
+    distances: &[f32],
+    query_labels: &[u16],
+    db_labels: &[u16],
+    l: usize,
+    exclude_diagonal: bool,
+) -> f64 {
+    let nq = query_labels.len();
+    let n = db_labels.len();
+    assert_eq!(distances.len(), nq * n);
+    assert!(l >= 1);
+    let mut total = 0.0f64;
+    for i in 0..nq {
+        let row = &distances[i * n..(i + 1) * n];
+        let exclude = if exclude_diagonal { Some(i) } else { None };
+        let top = topl_indices(row, l, exclude);
+        let hits = top.iter().filter(|&&j| db_labels[j] == query_labels[i]).count();
+        total += hits as f64 / top.len().max(1) as f64;
+    }
+    total / nq as f64
+}
+
+/// precision@ℓ for several ℓ values at once (shares the top-ℓ_max scan).
+pub fn precision_curve(
+    distances: &[f32],
+    query_labels: &[u16],
+    db_labels: &[u16],
+    ls: &[usize],
+    exclude_diagonal: bool,
+) -> Vec<(usize, f64)> {
+    let nq = query_labels.len();
+    let n = db_labels.len();
+    assert_eq!(distances.len(), nq * n);
+    let lmax = ls.iter().copied().max().unwrap_or(1);
+    let mut acc = vec![0.0f64; ls.len()];
+    for i in 0..nq {
+        let row = &distances[i * n..(i + 1) * n];
+        let exclude = if exclude_diagonal { Some(i) } else { None };
+        let top = topl_indices(row, lmax, exclude);
+        for (slot, &l) in acc.iter_mut().zip(ls) {
+            let take = l.min(top.len());
+            let hits =
+                top[..take].iter().filter(|&&j| db_labels[j] == query_labels[i]).count();
+            *slot += hits as f64 / take.max(1) as f64;
+        }
+    }
+    ls.iter().zip(acc).map(|(&l, a)| (l, a / nq as f64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topl_basic_and_ties() {
+        let row = [0.5f32, 0.1, 0.1, 0.9];
+        assert_eq!(topl_indices(&row, 2, None), vec![1, 2]);
+        assert_eq!(topl_indices(&row, 2, Some(1)), vec![2, 0]);
+        assert_eq!(topl_indices(&row, 10, None).len(), 4);
+    }
+
+    #[test]
+    fn perfect_clustering_gives_one() {
+        // 2 classes x 3 docs; distances: same-class 0.1, cross 0.9
+        let labels = [0u16, 0, 0, 1, 1, 1];
+        let n = 6;
+        let mut d = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                d[i * n + j] = if labels[i] == labels[j] { 0.1 } else { 0.9 };
+            }
+        }
+        let p = precision_at(&d, &labels, &labels, 2, true);
+        assert!((p - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_two_class_is_about_half() {
+        // distance = index parity mismatch free; craft adversarial: all
+        // distances equal -> ties resolved by index, labels alternate
+        let labels: Vec<u16> = (0..40).map(|i| (i % 2) as u16).collect();
+        let d = vec![1.0f32; 40 * 40];
+        let p = precision_at(&d, &labels, &labels, 10, true);
+        assert!((p - 0.5).abs() < 0.08, "p = {p}");
+    }
+
+    #[test]
+    fn curve_matches_single_calls() {
+        let labels = [0u16, 1, 0, 1, 0];
+        let n = 5;
+        let mut d = vec![0.0f32; n * n];
+        let mut seed = 7u32;
+        for x in d.iter_mut() {
+            seed = seed.wrapping_mul(1664525).wrapping_add(1013904223);
+            *x = (seed >> 8) as f32 / (1u32 << 24) as f32;
+        }
+        let curve = precision_curve(&d, &labels, &labels, &[1, 3], true);
+        for &(l, p) in &curve {
+            let single = precision_at(&d, &labels, &labels, l, true);
+            assert!((p - single).abs() < 1e-12, "l={l}");
+        }
+    }
+
+    #[test]
+    fn query_subset_vs_full_db() {
+        // 2 queries against 4 docs, no diagonal exclusion
+        let qlabels = [0u16, 1];
+        let dblabels = [0u16, 0, 1, 1];
+        let d = vec![
+            0.1, 0.2, 0.8, 0.9, // query 0: nearest two are class 0
+            0.9, 0.8, 0.2, 0.1, // query 1: nearest two are class 1
+        ];
+        let p = precision_at(&d, &qlabels, &dblabels, 2, false);
+        assert!((p - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,181 @@
+//! Runtime-vs-accuracy sweeps (paper Fig. 8) and table generation
+//! (paper Tables 5-6): run a set of methods over a dataset, timing the
+//! all-pairs (or query-subset) distance computation and scoring
+//! precision@top-ℓ.
+
+use std::time::Duration;
+
+use std::sync::Arc;
+
+use crate::core::Dataset;
+use crate::lc::{EngineParams, LcEngine, Method};
+use crate::util::stats::fmt_duration;
+
+use super::precision::precision_curve;
+
+/// One method's sweep outcome.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub method: String,
+    /// Wall-clock for the full distance computation.
+    pub runtime: Duration,
+    /// Number of query-database distance evaluations performed.
+    pub pairs: usize,
+    /// (ℓ, precision@ℓ).
+    pub precision: Vec<(usize, f64)>,
+}
+
+impl SweepRow {
+    /// Distance computations per second.
+    pub fn throughput(&self) -> f64 {
+        self.pairs as f64 / self.runtime.as_secs_f64().max(1e-12)
+    }
+}
+
+/// All-pairs evaluation of `methods` on `dataset` (the Fig. 8 protocol:
+/// every document queried against every other).
+pub fn sweep_all_pairs(
+    dataset: &Arc<Dataset>,
+    methods: &[Method],
+    ls: &[usize],
+    params: EngineParams,
+) -> Vec<SweepRow> {
+    let engine = LcEngine::new(Arc::clone(dataset), params);
+    let n = dataset.len();
+    methods
+        .iter()
+        .map(|&method| {
+            let t0 = std::time::Instant::now();
+            let matrix = engine.all_pairs_symmetric(method);
+            let runtime = t0.elapsed();
+            let precision =
+                precision_curve(&matrix, &dataset.labels, &dataset.labels, ls, true);
+            SweepRow { method: method.name(), runtime, pairs: n * n, precision }
+        })
+        .collect()
+}
+
+/// Query-subset evaluation: the first `nq` documents query the full
+/// database (the paper's MNIST-subset protocol for Fig. 8(b)).
+pub fn sweep_subset(
+    dataset: &Arc<Dataset>,
+    nq: usize,
+    methods: &[Method],
+    ls: &[usize],
+    params: EngineParams,
+) -> Vec<SweepRow> {
+    let engine = LcEngine::new(Arc::clone(dataset), params);
+    let n = dataset.len();
+    let nq = nq.min(n);
+    methods
+        .iter()
+        .map(|&method| {
+            let t0 = std::time::Instant::now();
+            let mut matrix = vec![0.0f32; nq * n];
+            for i in 0..nq {
+                let q = dataset.histogram(i);
+                let row = engine.distances(&q, method);
+                matrix[i * n..(i + 1) * n].copy_from_slice(&row);
+            }
+            let runtime = t0.elapsed();
+            let qlabels = &dataset.labels[..nq];
+            let precision = precision_curve(&matrix, qlabels, &dataset.labels, ls, true);
+            SweepRow { method: method.name(), runtime, pairs: nq * n, precision }
+        })
+        .collect()
+}
+
+/// Render sweep rows as a markdown table (EXPERIMENTS.md format).
+pub fn render_markdown(title: &str, rows: &[SweepRow]) -> String {
+    let mut out = format!("### {title}\n\n");
+    if rows.is_empty() {
+        return out;
+    }
+    let ls: Vec<usize> = rows[0].precision.iter().map(|&(l, _)| l).collect();
+    out.push_str("| method | runtime | pairs/s |");
+    for l in &ls {
+        out.push_str(&format!(" p@{l} |"));
+    }
+    out.push_str("\n|---|---|---|");
+    for _ in &ls {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {:.3e} |",
+            r.method,
+            fmt_duration(r.runtime),
+            r.throughput()
+        ));
+        for &(_, p) in &r.precision {
+            out.push_str(&format!(" {p:.4} |"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_text, TextConfig};
+
+    fn tiny() -> Arc<Dataset> {
+        Arc::new(generate_text(&TextConfig {
+            n: 60,
+            classes: 3,
+            vocab: 300,
+            dim: 8,
+            doc_len: 30,
+            ..Default::default()
+        }))
+    }
+
+    #[test]
+    fn sweep_produces_sane_rows() {
+        let ds = tiny();
+        let rows = sweep_all_pairs(
+            &ds,
+            &[Method::Bow, Method::Rwmd, Method::Act { k: 2 }],
+            &[1, 4],
+            EngineParams { threads: 2, ..Default::default() },
+        );
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert_eq!(r.pairs, 60 * 60);
+            for &(_, p) in &r.precision {
+                assert!((0.0..=1.0).contains(&p), "{}: p={p}", r.method);
+                // better than random guessing over 3 classes
+                assert!(p > 1.0 / 3.0, "{}: p={p} not better than chance", r.method);
+            }
+        }
+    }
+
+    #[test]
+    fn subset_sweep_shapes() {
+        let ds = tiny();
+        let rows = sweep_subset(
+            &ds,
+            10,
+            &[Method::Rwmd],
+            &[1],
+            EngineParams { threads: 2, ..Default::default() },
+        );
+        assert_eq!(rows[0].pairs, 10 * 60);
+    }
+
+    #[test]
+    fn markdown_render_contains_methods() {
+        let ds = tiny();
+        let rows = sweep_all_pairs(
+            &ds,
+            &[Method::Bow],
+            &[1],
+            EngineParams { threads: 1, ..Default::default() },
+        );
+        let md = render_markdown("test", &rows);
+        assert!(md.contains("| BoW |"));
+        assert!(md.contains("p@1"));
+    }
+}

@@ -1,0 +1,201 @@
+//! Exact Earth Mover's Distance (paper eq. (1)-(3)) on histogram pairs.
+//!
+//! This is the ground truth the approximation chain (Theorem 2) is checked
+//! against, and the "WMD" comparator of the evaluation section: the paper's
+//! WMD = exact EMD over word histograms (computed there via FastEMD); here
+//! it is computed by the [`crate::exact::flow`] min-cost-flow solver, with
+//! the same RWMD-based pruning trick Kusner et al. use to skip full EMD
+//! computations during top-ℓ search.
+
+use crate::approx::rwmd::rwmd_symmetric;
+use crate::core::{support_cost_matrix, Embeddings, Histogram, Metric};
+
+use super::flow::solve_transport;
+
+/// Exact EMD between two histograms over a shared vocabulary.
+///
+/// Histograms need not be normalized; they are normalized internally
+/// (the paper assumes unit total mass).
+pub fn emd(vocab: &Embeddings, p: &Histogram, q: &Histogram, metric: Metric) -> f64 {
+    let pn = p.normalized();
+    let qn = q.normalized();
+    if pn.is_empty() || qn.is_empty() {
+        return 0.0;
+    }
+    let cost = support_cost_matrix(vocab, pn.indices(), qn.indices(), metric);
+    let pw: Vec<f64> = pn.weights().iter().map(|&w| w as f64).collect();
+    let qw: Vec<f64> = qn.weights().iter().map(|&w| w as f64).collect();
+    solve_transport(&pw, &qw, &cost, qw.len()).cost
+}
+
+/// Exact EMD given an explicit cost matrix (row-major `(hp, hq)`).
+pub fn emd_with_cost(p: &[f32], q: &[f32], cost: &[f32], hq: usize) -> f64 {
+    let sp: f64 = p.iter().map(|&x| x as f64).sum();
+    let sq: f64 = q.iter().map(|&x| x as f64).sum();
+    assert!(sp > 0.0 && sq > 0.0, "empty histogram");
+    let pw: Vec<f64> = p.iter().map(|&x| x as f64 / sp).collect();
+    let qw: Vec<f64> = q.iter().map(|&x| x as f64 / sq).collect();
+    solve_transport(&pw, &qw, cost, hq).cost
+}
+
+/// Prune-accelerated top-ℓ exact-EMD search (the paper's "WMD" baseline).
+///
+/// For a query against `n` candidates: compute the cheap symmetric RWMD
+/// lower bound for every candidate, seed the result heap with `l` exact
+/// EMDs, then visit remaining candidates in ascending lower-bound order and
+/// skip any whose lower bound already exceeds the current ℓ-th best exact
+/// distance.  Returns `(sorted (distance, index) top-ℓ, exact_evals)`.
+pub fn wmd_topl_pruned(
+    vocab: &Embeddings,
+    query: &Histogram,
+    database: &[Histogram],
+    metric: Metric,
+    l: usize,
+) -> (Vec<(f64, usize)>, usize) {
+    let n = database.len();
+    let l = l.min(n);
+    if l == 0 {
+        return (Vec::new(), 0);
+    }
+    let mut order: Vec<(f64, usize)> = database
+        .iter()
+        .enumerate()
+        .map(|(u, h)| (rwmd_symmetric(vocab, query, h, metric), u))
+        .collect();
+    order.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let mut exact_evals = 0usize;
+    // (distance, index) max-heap via sorted vec of size l (l is small)
+    let mut best: Vec<(f64, usize)> = Vec::with_capacity(l + 1);
+    for &(lb, u) in &order {
+        if best.len() == l && lb >= best[l - 1].0 {
+            break; // every remaining candidate is pruned by its lower bound
+        }
+        let d = emd(vocab, query, &database[u], metric);
+        exact_evals += 1;
+        let pos = best.partition_point(|&(bd, _)| bd <= d);
+        best.insert(pos, (d, u));
+        if best.len() > l {
+            best.pop();
+        }
+    }
+    (best, exact_evals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure, Prop};
+    use crate::util::rng::Rng;
+
+    fn random_vocab(rng: &mut Rng, v: usize, m: usize) -> Embeddings {
+        let data: Vec<f32> = (0..v * m).map(|_| rng.normal() as f32).collect();
+        Embeddings::new(data, v, m)
+    }
+
+    fn random_hist(rng: &mut Rng, v: usize, support: usize) -> Histogram {
+        let idx = rng.sample_indices(v, support);
+        Histogram::from_pairs(
+            idx.into_iter().map(|i| (i as u32, rng.range_f64(0.05, 1.0) as f32)).collect(),
+        )
+    }
+
+    #[test]
+    fn emd_identical_is_zero() {
+        let mut rng = Rng::new(1);
+        let vocab = random_vocab(&mut rng, 20, 3);
+        let h = random_hist(&mut rng, 20, 6);
+        assert!(emd(&vocab, &h, &h, Metric::L2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn emd_symmetric_for_l2() {
+        check("emd-symmetry", 11, 10, |rng| {
+            let vocab = random_vocab(rng, 16, 2);
+            let p = random_hist(rng, 16, 5);
+            let q = random_hist(rng, 16, 5);
+            let a = emd(&vocab, &p, &q, Metric::L2);
+            let b = emd(&vocab, &q, &p, Metric::L2);
+            // f32 costs + near-tie path selection: compare at 1e-6 relative
+            ensure((a - b).abs() < 1e-6 * a.max(b).max(1.0), || format!("{a} vs {b}"))
+        });
+    }
+
+    #[test]
+    fn emd_point_masses_is_ground_distance() {
+        let vocab = Embeddings::new(vec![0.0, 0.0, 3.0, 4.0], 2, 2);
+        let p = Histogram::from_pairs(vec![(0, 1.0)]);
+        let q = Histogram::from_pairs(vec![(1, 1.0)]);
+        assert!((emd(&vocab, &p, &q, Metric::L2) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn emd_triangleish_on_point_masses() {
+        // EMD between point masses is the ground metric, so the triangle
+        // inequality must hold exactly there.
+        let vocab = Embeddings::new(vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0], 3, 2);
+        let a = Histogram::from_pairs(vec![(0, 1.0)]);
+        let b = Histogram::from_pairs(vec![(1, 1.0)]);
+        let c = Histogram::from_pairs(vec![(2, 1.0)]);
+        let ab = emd(&vocab, &a, &b, Metric::L2);
+        let bc = emd(&vocab, &b, &c, Metric::L2);
+        let ac = emd(&vocab, &a, &c, Metric::L2);
+        assert!(ac <= ab + bc + 1e-9);
+    }
+
+    #[test]
+    fn wmd_pruned_matches_bruteforce() {
+        let mut rng = Rng::new(5);
+        let vocab = random_vocab(&mut rng, 24, 2);
+        let query = random_hist(&mut rng, 24, 6);
+        let db: Vec<Histogram> = (0..12).map(|_| random_hist(&mut rng, 24, 6)).collect();
+        let (top, evals) = wmd_topl_pruned(&vocab, &query, &db, Metric::L2, 3);
+        assert!(evals <= db.len());
+        let mut brute: Vec<(f64, usize)> = db
+            .iter()
+            .enumerate()
+            .map(|(u, h)| (emd(&vocab, &query, h, Metric::L2), u))
+            .collect();
+        brute.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (got, want) in top.iter().zip(brute.iter().take(3)) {
+            assert!((got.0 - want.0).abs() < 1e-7, "{top:?} vs {brute:?}");
+        }
+    }
+
+    #[test]
+    fn pruning_skips_work_on_separated_clusters() {
+        // Two well-separated coordinate clusters: candidates living in the
+        // far cluster have an RWMD lower bound above the ℓ-th best exact
+        // distance, so the pruned search must evaluate far fewer than n.
+        let mut rng = Rng::new(6);
+        let v = 16;
+        let mut emb = Vec::with_capacity(v * 2);
+        for i in 0..v {
+            let offset = if i < v / 2 { 0.0 } else { 100.0 };
+            emb.push(offset + rng.normal() as f32);
+            emb.push(offset + rng.normal() as f32);
+        }
+        let vocab = Embeddings::new(emb, v, 2);
+        let near: Vec<Histogram> = (0..8)
+            .map(|_| {
+                let idx = rng.sample_indices(v / 2, 3);
+                Histogram::from_pairs(idx.into_iter().map(|i| (i as u32, 1.0)).collect())
+            })
+            .collect();
+        let far: Vec<Histogram> = (0..8)
+            .map(|_| {
+                let idx = rng.sample_indices(v / 2, 3);
+                Histogram::from_pairs(
+                    idx.into_iter().map(|i| ((i + v / 2) as u32, 1.0)).collect(),
+                )
+            })
+            .collect();
+        let mut db = near.clone();
+        db.extend(far);
+        let (top, evals) = wmd_topl_pruned(&vocab, &near[0], &db, Metric::L2, 2);
+        assert_eq!(top.len(), 2);
+        assert!(evals < db.len(), "pruning evaluated everything ({evals})");
+        // the winners must come from the near cluster
+        assert!(top.iter().all(|&(_, u)| u < 8), "{top:?}");
+    }
+}

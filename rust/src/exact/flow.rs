@@ -1,0 +1,314 @@
+//! Min-cost-flow substrate for the transportation problem.
+//!
+//! Successive-shortest-paths with node potentials (Johnson reduction) and a
+//! dense Dijkstra per augmentation — the right shape for dense bipartite
+//! transportation instances (h up to ~1000).  All arithmetic in f64.
+//!
+//! Graph model: sources = bins of `p`, sinks = bins of `q`; every
+//! source-sink edge has capacity +inf and cost `C[i][j]`; residual
+//! (backward) edges carry flow that can be rerouted.  One potential value
+//! per node keeps reduced costs non-negative; after each Dijkstra the
+//! potentials are advanced by `min(dist(v), dist(target))` — the capping is
+//! what preserves feasibility for nodes the search did not reach.
+
+/// Result of solving a transportation instance.
+#[derive(Debug, Clone)]
+pub struct FlowSolution {
+    /// Row-major `(hp, hq)` optimal flow matrix.
+    pub flow: Vec<f64>,
+    /// Objective value Σ F·C.
+    pub cost: f64,
+    /// Augmentation count (diagnostics).
+    pub augmentations: usize,
+}
+
+const EPS: f64 = 1e-12;
+
+/// Solve `min Σ F C` s.t. out-flow = p, in-flow = q, F >= 0.
+///
+/// Requires Σp ≈ Σq (checked to 1e-6 relative).  `cost[i * hq + j]` is the
+/// cost of edge (i, j); costs must be non-negative and finite.
+pub fn solve_transport(p: &[f64], q: &[f64], cost: &[f32], hq: usize) -> FlowSolution {
+    let hp = p.len();
+    assert_eq!(q.len(), hq);
+    assert_eq!(cost.len(), hp * hq);
+    let sp: f64 = p.iter().sum();
+    let sq: f64 = q.iter().sum();
+    assert!(
+        (sp - sq).abs() <= 1e-6 * sp.max(sq).max(1.0),
+        "unbalanced transportation instance: {sp} vs {sq}"
+    );
+
+    let n = hp + hq;
+    let mut supply = p.to_vec();
+    // Rescale demand so Σq matches Σp *exactly*: f32-normalized inputs are
+    // only equal to ~1e-7, and any excess supply would otherwise be left
+    // with no reachable demand ("disconnected" assert).
+    let rescale = sp / sq;
+    let mut demand: Vec<f64> = q.iter().map(|&x| x * rescale).collect();
+    let mut flow = vec![0.0f64; hp * hq];
+    // phi[v]: node potential; forward edge (i, j) reduced cost is
+    // c_ij + phi[i] - phi[hp + j] >= 0 (invariant).
+    let mut phi = vec![0.0f64; n];
+    let mut augmentations = 0usize;
+
+    let mut dist = vec![0.0f64; n];
+    let mut parent = vec![usize::MAX; n];
+    let mut done = vec![false; n];
+
+    // Absolute mass-termination threshold: leaving 1e-10 of a unit of mass
+    // unshipped perturbs the objective by <= 1e-10 * max(C).
+    let stop = 1e-10 * sp.max(1.0);
+    loop {
+        let rem_supply: f64 = supply.iter().sum();
+        if rem_supply <= stop {
+            break;
+        }
+        // ---- multi-source Dijkstra over reduced costs -----------------------
+        for v in 0..n {
+            dist[v] = f64::INFINITY;
+            parent[v] = usize::MAX;
+            done[v] = false;
+        }
+        for i in 0..hp {
+            if supply[i] > 0.0 {
+                dist[i] = 0.0;
+            }
+        }
+        loop {
+            let mut best = usize::MAX;
+            let mut bd = f64::INFINITY;
+            for v in 0..n {
+                if !done[v] && dist[v] < bd {
+                    bd = dist[v];
+                    best = v;
+                }
+            }
+            if best == usize::MAX {
+                break;
+            }
+            done[best] = true;
+            if best < hp {
+                let i = best;
+                let base = i * hq;
+                for j in 0..hq {
+                    let rc = (cost[base + j] as f64 + phi[i] - phi[hp + j]).max(0.0);
+                    let nd = dist[i] + rc;
+                    if nd + EPS < dist[hp + j] {
+                        dist[hp + j] = nd;
+                        parent[hp + j] = i;
+                    }
+                }
+            } else {
+                let j = best - hp;
+                for i in 0..hp {
+                    if flow[i * hq + j] > EPS {
+                        let rc =
+                            (-(cost[i * hq + j] as f64 + phi[i] - phi[hp + j])).max(0.0);
+                        let nd = dist[hp + j] + rc;
+                        if nd + EPS < dist[i] {
+                            dist[i] = nd;
+                            parent[i] = hp + j;
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- cheapest reachable sink with remaining demand ------------------
+        let mut tgt = usize::MAX;
+        let mut td = f64::INFINITY;
+        for j in 0..hq {
+            if demand[j] > 0.0 && dist[hp + j] < td {
+                td = dist[hp + j];
+                tgt = hp + j;
+            }
+        }
+        assert!(tgt != usize::MAX, "no augmenting path; instance disconnected?");
+
+        // ---- bottleneck along the path --------------------------------------
+        let mut bottleneck = demand[tgt - hp];
+        {
+            let mut v = tgt;
+            loop {
+                let u = parent[v];
+                if u == usize::MAX {
+                    bottleneck = bottleneck.min(supply[v]);
+                    break;
+                }
+                if u >= hp {
+                    // backward edge: v is a source, u a sink; bounded by flow
+                    bottleneck = bottleneck.min(flow[v * hq + (u - hp)]);
+                }
+                v = u;
+            }
+        }
+
+        // ---- apply the augmentation -----------------------------------------
+        {
+            let mut v = tgt;
+            loop {
+                let u = parent[v];
+                if u == usize::MAX {
+                    supply[v] -= bottleneck;
+                    break;
+                }
+                if u < hp {
+                    flow[u * hq + (v - hp)] += bottleneck;
+                } else {
+                    flow[v * hq + (u - hp)] -= bottleneck;
+                }
+                v = u;
+            }
+            demand[tgt - hp] -= bottleneck;
+            // snap tiny residues so they don't linger as unreachable slivers
+            let j = tgt - hp;
+            if demand[j] < EPS {
+                demand[j] = 0.0;
+            }
+            for s in supply.iter_mut() {
+                if *s != 0.0 && *s < EPS {
+                    *s = 0.0;
+                }
+            }
+        }
+
+        // ---- advance potentials (capped at the target distance) -------------
+        for v in 0..n {
+            phi[v] += dist[v].min(td);
+        }
+        augmentations += 1;
+        assert!(
+            augmentations <= 8 * (hp + hq) * (hp + hq),
+            "augmentation budget exceeded — numerical cycling?"
+        );
+    }
+
+    let total: f64 = flow.iter().zip(cost).map(|(&f, &c)| f * c as f64).sum();
+    FlowSolution { flow, cost: total, augmentations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure, Prop};
+
+    #[test]
+    fn trivial_identity() {
+        let cost = vec![0.0, 1.0, 1.0, 0.0];
+        let s = solve_transport(&[0.5, 0.5], &[0.5, 0.5], &cost, 2);
+        assert!(s.cost.abs() < 1e-12);
+        assert!((s.flow[0] - 0.5).abs() < 1e-12);
+        assert!((s.flow[3] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forced_cross_shipment() {
+        let cost = vec![1.0, 3.0];
+        let s = solve_transport(&[1.0], &[0.25, 0.75], &cost, 2);
+        assert!((s.cost - (0.25 * 1.0 + 0.75 * 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rerouting_beats_greedy() {
+        //      snk0  snk1
+        // src0   0     1
+        // src1  10   100
+        let cost = vec![0.0, 1.0, 10.0, 100.0];
+        let s = solve_transport(&[0.5, 0.5], &[0.5, 0.5], &cost, 2);
+        // options: F00=.5,F11=.5 => 50 ; F01=.5,F10=.5 => 5.5  (optimal)
+        assert!((s.cost - 5.5).abs() < 1e-9, "cost {}", s.cost);
+    }
+
+    #[test]
+    fn mass_conservation() {
+        let p = [0.2, 0.3, 0.5];
+        let q = [0.6, 0.4];
+        let cost = vec![1.0, 2.0, 3.0, 0.5, 2.5, 1.5];
+        let s = solve_transport(&p, &q, &cost, 2);
+        for i in 0..3 {
+            let out: f64 = (0..2).map(|j| s.flow[i * 2 + j]).sum();
+            assert!((out - p[i]).abs() < 1e-9);
+        }
+        for j in 0..2 {
+            let inn: f64 = (0..3).map(|i| s.flow[i * 2 + j]).sum();
+            assert!((inn - q[j]).abs() < 1e-9);
+        }
+        assert!(s.flow.iter().all(|&f| f >= -1e-12));
+    }
+
+    /// Cross-check against brute-force enumeration on 2x2 instances, where
+    /// the optimum is min over the one-parameter family of feasible flows.
+    #[test]
+    fn optimal_on_random_2x2() {
+        check("flow-2x2-optimal", 42, 200, |rng| {
+            let p0 = rng.range_f64(0.05, 0.95);
+            let q0 = rng.range_f64(0.05, 0.95);
+            let p = [p0, 1.0 - p0];
+            let q = [q0, 1.0 - q0];
+            let c: Vec<f32> = (0..4).map(|_| rng.range_f64(0.0, 5.0) as f32).collect();
+            let s = solve_transport(&p, &q, &c, 2);
+            // F00 = t parametrizes all feasible flows:
+            // t in [max(0, p0 - q1), min(p0, q0)]
+            let lo = (p0 - (1.0 - q0)).max(0.0);
+            let hi = p0.min(q0);
+            let cost_at = |t: f64| {
+                t * c[0] as f64
+                    + (p0 - t) * c[1] as f64
+                    + (q0 - t) * c[2] as f64
+                    + ((1.0 - p0) - (q0 - t)) * c[3] as f64
+            };
+            let best = cost_at(lo).min(cost_at(hi)); // linear in t -> extreme
+            ensure(
+                (s.cost - best).abs() < 1e-7,
+                || format!("solver {} vs brute {best}", s.cost),
+            )
+        });
+    }
+
+    /// Random larger instances: optimality cross-checked by verifying
+    /// complementary slackness is achievable — here simply against a
+    /// naive O(n!) assignment on tiny equal-mass instances.
+    #[test]
+    fn matches_assignment_on_permutation_instances() {
+        check("flow-assignment", 7, 50, |rng| {
+            let h = 4usize;
+            let p = vec![1.0 / h as f64; h];
+            let q = vec![1.0 / h as f64; h];
+            let c: Vec<f32> = (0..h * h).map(|_| rng.range_f64(0.0, 3.0) as f32).collect();
+            let s = solve_transport(&p, &q, &c, h);
+            // brute force over permutations (Birkhoff: optimum at a vertex)
+            let mut best = f64::INFINITY;
+            let mut perm = [0usize, 1, 2, 3];
+            permute(&mut perm, 0, &mut |pm| {
+                let cost: f64 =
+                    pm.iter().enumerate().map(|(i, &j)| c[i * h + j] as f64 / h as f64).sum();
+                if cost < best {
+                    best = cost;
+                }
+            });
+            ensure(
+                (s.cost - best).abs() < 1e-7,
+                || format!("solver {} vs perm {best}", s.cost),
+            )
+        });
+    }
+
+    fn permute(xs: &mut [usize; 4], k: usize, f: &mut impl FnMut(&[usize; 4])) {
+        if k == 4 {
+            f(xs);
+            return;
+        }
+        for i in k..4 {
+            xs.swap(k, i);
+            permute(xs, k + 1, f);
+            xs.swap(k, i);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unbalanced")]
+    fn unbalanced_panics() {
+        solve_transport(&[1.0], &[0.5], &[0.0], 1);
+    }
+}

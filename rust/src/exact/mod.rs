@@ -1,0 +1,8 @@
+//! Exact EMD ground truth: transportation min-cost-flow solver and the
+//! pruned "WMD" top-ℓ search baseline.
+
+pub mod emd;
+pub mod flow;
+
+pub use emd::{emd, emd_with_cost, wmd_topl_pruned};
+pub use flow::{solve_transport, FlowSolution};

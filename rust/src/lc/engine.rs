@@ -1,0 +1,345 @@
+//! High-level LC engine: one-query-vs-database distance computation for
+//! every method, plus the all-pairs symmetric evaluation used by the
+//! accuracy experiments (paper Section 6).
+//!
+//! For all-pairs runs, the symmetric measure `max(m(a→b), m(b→a))` is
+//! assembled from two asymmetric direction-A sweeps (document b scores
+//! query a's sweep and vice versa), exactly how the paper evaluates — no
+//! per-pair quadratic work.
+
+use crate::approx::{bow_distances_batch, centroids_batch, wcd_from_centroids};
+use std::sync::Arc;
+
+use crate::core::{Dataset, Histogram, Metric};
+use crate::util::threadpool::{parallel_for, SyncSlice};
+
+use super::plan::{plan_query, PlanParams};
+use super::transfers::{
+    act_direction_a, omr_direction_a, rwmd_direction_a, rwmd_direction_b,
+};
+
+/// Distance measure selector for the engine / coordinator / CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// BoW cosine distance (baseline, no embeddings).
+    Bow,
+    /// Word centroid distance (baseline).
+    Wcd,
+    /// LC-RWMD (k = 1).
+    Rwmd,
+    /// LC-OMR (overlap-only capacity, top-2).
+    Omr,
+    /// LC-ACT with k-1 constrained iterations.
+    Act { k: usize },
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        let ls = s.to_ascii_lowercase();
+        match ls.as_str() {
+            "bow" => return Some(Method::Bow),
+            "wcd" => return Some(Method::Wcd),
+            "rwmd" => return Some(Method::Rwmd),
+            "omr" => return Some(Method::Omr),
+            _ => {}
+        }
+        if let Some(rest) = ls.strip_prefix("act-") {
+            // paper naming: ACT-j runs j Phase-2 iterations => k = j + 1
+            if let Ok(j) = rest.parse::<usize>() {
+                return Some(Method::Act { k: j + 1 });
+            }
+        }
+        None
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Method::Bow => "BoW".into(),
+            Method::Wcd => "WCD".into(),
+            Method::Rwmd => "RWMD".into(),
+            Method::Omr => "OMR".into(),
+            Method::Act { k } => format!("ACT-{}", k - 1),
+        }
+    }
+
+    /// Phase-1 top-k requirement (0 = no plan needed).
+    fn plan_k(&self) -> usize {
+        match self {
+            Method::Bow | Method::Wcd => 0,
+            Method::Rwmd => 1,
+            Method::Omr => 2,
+            Method::Act { k } => (*k).max(1),
+        }
+    }
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineParams {
+    pub metric: Metric,
+    pub threads: usize,
+    /// Also compute direction-B RWMD and take the max (single-query mode).
+    pub symmetric: bool,
+}
+
+impl Default for EngineParams {
+    fn default() -> Self {
+        EngineParams {
+            metric: Metric::L2,
+            threads: crate::util::threadpool::default_threads(),
+            symmetric: true,
+        }
+    }
+}
+
+/// The native (CPU data-parallel) LC engine over one database.
+///
+/// Owns a shared handle to the dataset plus the per-database precomputations
+/// (BoW row norms, WCD centroids) so constructing it once and reusing it per
+/// query is cheap — the coordinator caches one engine per dataset.
+pub struct LcEngine {
+    dataset: Arc<Dataset>,
+    params: EngineParams,
+    bow_norms: Vec<f32>,
+    centroids: Vec<f64>,
+}
+
+impl LcEngine {
+    pub fn new(dataset: Arc<Dataset>, params: EngineParams) -> LcEngine {
+        LcEngine {
+            bow_norms: dataset.matrix.row_l2_norms(),
+            centroids: centroids_batch(&dataset.embeddings, &dataset.matrix),
+            dataset,
+            params,
+        }
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    pub fn params(&self) -> &EngineParams {
+        &self.params
+    }
+
+    /// Distances from one query histogram to every database row (direction
+    /// A; plus max with direction-B RWMD when `symmetric` is set).
+    pub fn distances(&self, query: &Histogram, method: Method) -> Vec<f32> {
+        let db = &self.dataset.matrix;
+        match method {
+            Method::Bow => bow_distances_batch(query, db, &self.bow_norms)
+                .into_iter()
+                .map(|d| d as f32)
+                .collect(),
+            Method::Wcd => {
+                let qc = crate::approx::centroid(&self.dataset.embeddings, query);
+                let m = self.dataset.embeddings.dim();
+                (0..db.nrows())
+                    .map(|u| {
+                        wcd_from_centroids(&qc, &self.centroids[u * m..(u + 1) * m]) as f32
+                    })
+                    .collect()
+            }
+            _ => {
+                let keep_d = self.params.symmetric;
+                let plan = plan_query(
+                    &self.dataset.embeddings,
+                    query,
+                    PlanParams {
+                        k: method.plan_k(),
+                        metric: self.params.metric,
+                        keep_d,
+                        threads: self.params.threads,
+                    },
+                );
+                let mut t = match method {
+                    Method::Rwmd => rwmd_direction_a(&plan, db, self.params.threads),
+                    Method::Omr => omr_direction_a(&plan, db, self.params.threads),
+                    Method::Act { .. } => act_direction_a(&plan, db, self.params.threads),
+                    _ => unreachable!(),
+                };
+                if keep_d {
+                    let tb = rwmd_direction_b(&plan, db, self.params.threads);
+                    for (a, b) in t.iter_mut().zip(tb) {
+                        if b > *a {
+                            *a = b;
+                        }
+                    }
+                }
+                t
+            }
+        }
+    }
+
+    /// All-pairs asymmetric direction-A matrix `(n, n)`: row u = distances
+    /// with query u.  Parallel over queries (each query's Phase 1/2 is
+    /// itself sequential here to avoid nested parallelism).
+    pub fn all_pairs_asymmetric(&self, method: Method) -> Vec<f32> {
+        let n = self.dataset.len();
+        let db = &self.dataset.matrix;
+        let mut out = vec![0.0f32; n * n];
+        match method {
+            Method::Bow | Method::Wcd => {
+                let slots = SyncSlice::new(&mut out);
+                parallel_for(n, self.params.threads, |start, end| {
+                    for uq in start..end {
+                        let q = self.dataset.histogram(uq);
+                        let row = self.distances(&q, method);
+                        unsafe { slots.slice_mut(uq * n, (uq + 1) * n).copy_from_slice(&row) };
+                    }
+                });
+            }
+            _ => {
+                let k = method.plan_k();
+                let slots = SyncSlice::new(&mut out);
+                parallel_for(n, self.params.threads, |start, end| {
+                    for uq in start..end {
+                        let q = self.dataset.histogram(uq);
+                        let plan = plan_query(
+                            &self.dataset.embeddings,
+                            &q,
+                            PlanParams {
+                                k,
+                                metric: self.params.metric,
+                                keep_d: false,
+                                threads: 1,
+                            },
+                        );
+                        let row = match method {
+                            Method::Rwmd => rwmd_direction_a(&plan, db, 1),
+                            Method::Omr => omr_direction_a(&plan, db, 1),
+                            Method::Act { .. } => act_direction_a(&plan, db, 1),
+                            _ => unreachable!(),
+                        };
+                        unsafe { slots.slice_mut(uq * n, (uq + 1) * n).copy_from_slice(&row) };
+                    }
+                });
+            }
+        }
+        out
+    }
+
+    /// All-pairs symmetric matrix: `max(A, Aᵀ)` over the asymmetric sweep
+    /// (the paper's symmetric lower bound).  BoW/WCD are already symmetric.
+    pub fn all_pairs_symmetric(&self, method: Method) -> Vec<f32> {
+        let n = self.dataset.len();
+        let mut a = self.all_pairs_asymmetric(method);
+        if !matches!(method, Method::Bow | Method::Wcd) {
+            for u in 0..n {
+                for v in (u + 1)..n {
+                    let x = a[u * n + v].max(a[v * n + u]);
+                    a[u * n + v] = x;
+                    a[v * n + u] = x;
+                }
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Embeddings;
+    use crate::util::rng::Rng;
+
+    fn tiny_dataset(seed: u64, n: usize, v: usize, m: usize, h: usize) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..v * m).map(|_| rng.normal() as f32).collect();
+        let emb = Embeddings::new(data, v, m);
+        let hists: Vec<Histogram> = (0..n)
+            .map(|_| {
+                let idx = rng.sample_indices(v, h);
+                Histogram::from_pairs(
+                    idx.into_iter()
+                        .map(|i| (i as u32, rng.range_f64(0.1, 1.0) as f32))
+                        .collect(),
+                )
+            })
+            .collect();
+        let labels = (0..n as u16).map(|i| i % 3).collect();
+        Dataset::new("tiny", emb, &hists, labels)
+    }
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(Method::parse("bow"), Some(Method::Bow));
+        assert_eq!(Method::parse("ACT-7"), Some(Method::Act { k: 8 }));
+        assert_eq!(Method::parse("act-0"), Some(Method::Act { k: 1 }));
+        assert_eq!(Method::parse("nope"), None);
+        assert_eq!(Method::Act { k: 8 }.name(), "ACT-7");
+    }
+
+    #[test]
+    fn symmetric_matrix_is_symmetric_with_zero_diag() {
+        let ds = tiny_dataset(1, 8, 24, 3, 5);
+        let eng = LcEngine::new(std::sync::Arc::new(ds.clone()), EngineParams { threads: 2, ..Default::default() });
+        for method in [Method::Rwmd, Method::Omr, Method::Act { k: 3 }, Method::Bow] {
+            let m = eng.all_pairs_symmetric(method);
+            let n = ds.len();
+            let exact = !matches!(method, Method::Bow | Method::Wcd);
+            for u in 0..n {
+                assert!(m[u * n + u].abs() < 1e-5, "{method:?} diag {u}");
+                for v in 0..n {
+                    let (a, b) = (m[u * n + v], m[v * n + u]);
+                    if exact {
+                        // LC methods are symmetrized explicitly: bit-equal
+                        assert_eq!(a, b, "{method:?} asym {u},{v}");
+                    } else {
+                        // BoW/WCD are mathematically symmetric but computed
+                        // per-query with f32 norms: last-ulp differences ok
+                        assert!((a - b).abs() < 1e-5, "{method:?} asym {u},{v}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_rwmd_le_act_on_symmetric_matrices() {
+        let ds = tiny_dataset(2, 10, 30, 4, 6);
+        let eng = LcEngine::new(std::sync::Arc::new(ds.clone()), EngineParams { threads: 2, ..Default::default() });
+        let r = eng.all_pairs_symmetric(Method::Rwmd);
+        let a2 = eng.all_pairs_symmetric(Method::Act { k: 2 });
+        let a4 = eng.all_pairs_symmetric(Method::Act { k: 4 });
+        for i in 0..r.len() {
+            assert!(r[i] <= a2[i] + 1e-5);
+            assert!(a2[i] <= a4[i] + 1e-5);
+        }
+    }
+
+    #[test]
+    fn single_query_symmetric_uses_direction_b() {
+        let ds = tiny_dataset(3, 6, 20, 3, 4);
+        let ds = std::sync::Arc::new(ds);
+        let eng_sym = LcEngine::new(
+            std::sync::Arc::clone(&ds),
+            EngineParams { symmetric: true, threads: 1, ..Default::default() },
+        );
+        let eng_asym = LcEngine::new(
+            std::sync::Arc::clone(&ds),
+            EngineParams { symmetric: false, threads: 1, ..Default::default() },
+        );
+        let q = ds.histogram(0);
+        let sym = eng_sym.distances(&q, Method::Rwmd);
+        let asym = eng_asym.distances(&q, Method::Rwmd);
+        for (s, a) in sym.iter().zip(&asym) {
+            assert!(s >= a, "symmetric must dominate");
+        }
+    }
+
+    #[test]
+    fn distances_row_matches_all_pairs_row() {
+        let ds = tiny_dataset(4, 7, 25, 3, 5);
+        let eng = LcEngine::new(
+            std::sync::Arc::new(ds.clone()),
+            EngineParams { symmetric: false, threads: 2, ..Default::default() },
+        );
+        let all = eng.all_pairs_asymmetric(Method::Act { k: 2 });
+        let row3 = eng.distances(&ds.histogram(3), Method::Act { k: 2 });
+        let n = ds.len();
+        for v in 0..n {
+            assert!((all[3 * n + v] - row3[v]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Linear-complexity data-parallel engines (paper Section 5): LC-RWMD and
+//! LC-ACT, factored as Phase 1 (per-query, vs the vocabulary) and Phases
+//! 2+3 (per database tile).  CPU-native implementation; the PJRT artifact
+//! path in [`crate::runtime`] executes the same pipeline from AOT-compiled
+//! JAX/Pallas HLO.
+
+pub mod engine;
+pub mod plan;
+pub mod transfers;
+
+pub use engine::{EngineParams, LcEngine, Method};
+pub use plan::{plan_query, snapped_distance, PlanParams, QueryPlan};
+pub use transfers::{
+    act_direction_a, omr_direction_a, rwmd_direction_a, rwmd_direction_b,
+};

@@ -1,0 +1,277 @@
+//! LC-ACT Phase 1 (paper Fig. 6): given a query, compute against the whole
+//! vocabulary the distance matrix D (v, h), the top-k smallest distances
+//! Z (v, k), their query-bin indices S (v, k) and the gathered capacity
+//! matrix W (v, k) = qw[S].
+//!
+//! This runs once per query and is amortized across every database
+//! histogram — the redundancy elimination that takes the batched complexity
+//! from quadratic to linear (paper Section 5 / Table 3).
+//!
+//! Data-parallel over vocabulary rows via [`parallel_for`]; tie-breaking is
+//! lowest-query-bin-index first, bit-identical to the Pallas kernel and the
+//! numpy oracle.
+
+use crate::approx::act::row_topk;
+use crate::core::{Embeddings, Histogram, Metric};
+use crate::util::threadpool::{parallel_for, SyncSlice};
+
+/// Per-query preprocessing product.
+#[derive(Debug, Clone)]
+pub struct QueryPlan {
+    /// Number of transfer targets (ACT-(k-1)); k = 1 is LC-RWMD.
+    pub k: usize,
+    /// Query support size h.
+    pub h: usize,
+    /// Query weights (normalized), length h.
+    pub qw: Vec<f32>,
+    /// `(v, k)` ascending top-k distances per vocabulary coordinate.
+    pub z: Vec<f32>,
+    /// `(v, k)` query-bin index of each top-k entry.
+    pub s: Vec<u32>,
+    /// `(v, k)` capacities: `w[i, l] = qw[s[i, l]]`.
+    pub w: Vec<f32>,
+    /// Optional full `(v, h)` distance matrix (kept for direction-B RWMD).
+    pub d: Option<Vec<f32>>,
+}
+
+/// Phase-1 configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanParams {
+    pub k: usize,
+    pub metric: Metric,
+    /// Keep the full D matrix (needed by direction-B RWMD; costs v*h f32).
+    pub keep_d: bool,
+    pub threads: usize,
+}
+
+/// Vectorizable dot product: 16 independent accumulator lanes let LLVM emit
+/// packed FMAs (a plain `zip().map().sum()` is a serial f32 reduction the
+/// compiler must not reorder).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    const LANES: usize = 16;
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let ac = &a[c * LANES..c * LANES + LANES];
+        let bc = &b[c * LANES..c * LANES + LANES];
+        for l in 0..LANES {
+            acc[l] += ac[l] * bc[l];
+        }
+    }
+    let mut dot = 0.0f32;
+    for l in 0..LANES {
+        dot += acc[l];
+    }
+    for t in chunks * LANES..n {
+        dot += a[t] * b[t];
+    }
+    dot
+}
+
+/// Squared-L2 distance with the same snap-to-zero the Pallas kernel applies:
+/// values below the relative cancellation floor collapse to exact 0 so the
+/// OMR/ICT overlap rule fires deterministically.
+#[inline]
+pub fn snapped_distance(metric: Metric, a: &[f32], b: &[f32]) -> f32 {
+    match metric {
+        Metric::L2 => {
+            let mut d2 = 0.0f32;
+            let mut scale = 0.0f32;
+            for (&x, &y) in a.iter().zip(b) {
+                let diff = x - y;
+                d2 += diff * diff;
+                scale += x * x + y * y;
+            }
+            if d2 <= 1e-6 * scale {
+                0.0
+            } else {
+                d2.sqrt()
+            }
+        }
+        other => other.distance(a, b),
+    }
+}
+
+/// Build the Phase-1 plan for one query histogram.
+pub fn plan_query(
+    vocab: &Embeddings,
+    query: &Histogram,
+    params: PlanParams,
+) -> QueryPlan {
+    let qn = query.normalized();
+    let h = qn.len();
+    assert!(h > 0, "empty query histogram");
+    let k = params.k.clamp(1, h);
+    let v = vocab.num_vectors();
+    let m = vocab.dim();
+
+    // Gather the query coordinate matrix Q (h, m) once for cache locality.
+    let q_coords = vocab.gather(qn.indices());
+    let qw: Vec<f32> = qn.weights().to_vec();
+    let q_support: Vec<u32> = qn.indices().to_vec();
+
+    let mut z = vec![0.0f32; v * k];
+    let mut s = vec![0u32; v * k];
+    let mut w = vec![0.0f32; v * k];
+    let mut d = if params.keep_d { vec![0.0f32; v * h] } else { Vec::new() };
+
+    // Precompute query squared norms for the Gram expansion (L2 fast path).
+    let q_norms: Vec<f32> = (0..h)
+        .map(|j| {
+            let r = q_coords.row(j);
+            r.iter().map(|&x| x * x).sum::<f32>()
+        })
+        .collect();
+    let use_expansion = params.metric == Metric::L2;
+
+    {
+        let zs = SyncSlice::new(&mut z);
+        let ss = SyncSlice::new(&mut s);
+        let ws = SyncSlice::new(&mut w);
+        let ds = SyncSlice::new(&mut d);
+        let keep_d = params.keep_d;
+        let qw_ref = &qw;
+        let q_support_ref = &q_support;
+        let q_coords_ref = &q_coords;
+        let q_norms_ref = &q_norms;
+        parallel_for(v, params.threads, |start, end| {
+            let mut row = vec![0.0f32; h];
+            let mut vals: Vec<f32> = Vec::with_capacity(k);
+            let mut idxs: Vec<u32> = Vec::with_capacity(k);
+            for i in start..end {
+                let vi = vocab.row(i);
+                if use_expansion {
+                    // Branch-free GEMV: d²(i,j) = |v|² − 2⟨v,q_j⟩ + |q_j|²,
+                    // exactly the Pallas kernel's formulation (same snap, so
+                    // all three layers agree on overlap zeros).  The dot
+                    // loop over m autovectorizes (AVX-512: 16 f32 lanes).
+                    let vn: f32 = vi.iter().map(|&x| x * x).sum();
+                    for j in 0..h {
+                        let qj = q_coords_ref.row(j);
+                        let dot = dot_f32(vi, qj);
+                        let d2 = vn - 2.0 * dot + q_norms_ref[j];
+                        let scale = vn + q_norms_ref[j];
+                        // snap cancellation noise to an exact 0 (overlap rule)
+                        row[j] = if d2 <= 1e-6 * scale { 0.0 } else { d2.max(0.0).sqrt() };
+                    }
+                    // the query bin that *is* this vocabulary entry must be
+                    // exactly 0 regardless of rounding (indices are sorted)
+                    if let Ok(pos) = q_support_ref.binary_search(&(i as u32)) {
+                        row[pos] = 0.0;
+                    }
+                } else {
+                    for j in 0..h {
+                        row[j] = if q_support_ref[j] as usize == i {
+                            0.0
+                        } else {
+                            snapped_distance(params.metric, vi, q_coords_ref.row(j))
+                        };
+                    }
+                }
+                row_topk(&row, k, &mut vals, &mut idxs);
+                // SAFETY: row i is owned by exactly this chunk.
+                unsafe {
+                    let zrow = zs.slice_mut(i * k, (i + 1) * k);
+                    let srow = ss.slice_mut(i * k, (i + 1) * k);
+                    let wrow = ws.slice_mut(i * k, (i + 1) * k);
+                    for l in 0..k {
+                        zrow[l] = vals[l];
+                        srow[l] = idxs[l];
+                        wrow[l] = qw_ref[idxs[l] as usize];
+                    }
+                    if keep_d {
+                        ds.slice_mut(i * h, (i + 1) * h).copy_from_slice(&row);
+                    }
+                }
+            }
+        });
+        let _ = m;
+    }
+
+    QueryPlan { k, h, qw, z, s, w, d: if params.keep_d { Some(d) } else { None } }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, v: usize, h: usize, m: usize) -> (Embeddings, Histogram) {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..v * m).map(|_| rng.normal() as f32).collect();
+        let vocab = Embeddings::new(data, v, m);
+        let idx = rng.sample_indices(v, h);
+        let q = Histogram::from_pairs(
+            idx.into_iter().map(|i| (i as u32, rng.range_f64(0.1, 1.0) as f32)).collect(),
+        );
+        (vocab, q)
+    }
+
+    #[test]
+    fn z_rows_ascending_and_consistent_with_s() {
+        let (vocab, q) = setup(1, 40, 10, 4);
+        let plan = plan_query(
+            &vocab,
+            &q,
+            PlanParams { k: 4, metric: Metric::L2, keep_d: true, threads: 2 },
+        );
+        let d = plan.d.as_ref().unwrap();
+        for i in 0..40 {
+            let zrow = &plan.z[i * 4..(i + 1) * 4];
+            assert!(zrow.windows(2).all(|w| w[0] <= w[1]), "row {i} not ascending");
+            for l in 0..4 {
+                let j = plan.s[i * 4 + l] as usize;
+                assert_eq!(d[i * plan.h + j], zrow[l]);
+                assert_eq!(plan.w[i * 4 + l], plan.qw[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn own_coordinate_has_zero_distance() {
+        let (vocab, q) = setup(2, 30, 8, 3);
+        let plan = plan_query(
+            &vocab,
+            &q,
+            PlanParams { k: 1, metric: Metric::L2, keep_d: false, threads: 1 },
+        );
+        // every vocabulary coordinate that is in the query support must have
+        // top-1 distance zero (it overlaps itself)
+        let qn = q.normalized();
+        for (pos, &i) in qn.indices().iter().enumerate() {
+            assert_eq!(plan.z[i as usize * 1], 0.0, "support coord {i}");
+            assert_eq!(plan.s[i as usize * 1] as usize, pos);
+        }
+    }
+
+    #[test]
+    fn threads_do_not_change_result() {
+        let (vocab, q) = setup(3, 64, 12, 5);
+        let p1 = plan_query(
+            &vocab,
+            &q,
+            PlanParams { k: 3, metric: Metric::L2, keep_d: true, threads: 1 },
+        );
+        let p8 = plan_query(
+            &vocab,
+            &q,
+            PlanParams { k: 3, metric: Metric::L2, keep_d: true, threads: 8 },
+        );
+        assert_eq!(p1.z, p8.z);
+        assert_eq!(p1.s, p8.s);
+        assert_eq!(p1.d, p8.d);
+    }
+
+    #[test]
+    fn k_clamps_to_h() {
+        let (vocab, q) = setup(4, 20, 3, 2);
+        let plan = plan_query(
+            &vocab,
+            &q,
+            PlanParams { k: 10, metric: Metric::L2, keep_d: false, threads: 1 },
+        );
+        assert_eq!(plan.k, 3);
+    }
+}

@@ -1,0 +1,30 @@
+//! # emdpar — low-complexity data-parallel Earth Mover's Distance approximations
+//!
+//! Rust + JAX/Pallas reproduction of Atasu & Mittelholzer, *"Low-Complexity
+//! Data-Parallel Earth Mover's Distance Approximations"* (ICML 2019): the
+//! OMR / ICT / ACT lower bounds on EMD and the linear-complexity batched
+//! LC-RWMD / LC-ACT similarity-search pipeline.
+//!
+//! Layering (see DESIGN.md):
+//! * [`core`] — histograms, vocabulary embeddings, CSR database matrix.
+//! * [`exact`] — exact EMD (min-cost-flow) ground truth.
+//! * [`approx`] — per-pair approximations: RWMD, OMR, ICT, ACT, Sinkhorn,
+//!   BoW cosine, WCD.
+//! * [`lc`] — the paper's contribution: linear-complexity data-parallel
+//!   LC-RWMD / LC-ACT engines (multithreaded CPU).
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`).
+//! * [`coordinator`] — the serving layer: batching, sharding, top-ℓ search.
+//! * [`data`] — synthetic MNIST-like / 20News-like dataset generators.
+//! * [`eval`] — precision@top-ℓ evaluation and experiment harness.
+
+pub mod approx;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod eval;
+pub mod exact;
+pub mod lc;
+pub mod runtime;
+pub mod util;

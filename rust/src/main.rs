@@ -1,0 +1,280 @@
+//! `emdpar` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//! * `datasets`        generate / persist / inspect datasets (Table 4)
+//! * `search`          one query against a dataset, print top-ℓ
+//! * `eval`            reproduce the paper's accuracy tables (5, 6) & sweeps
+//! * `serve`           run the TCP search server
+//! * `artifacts-check` compile every artifact and cross-check PJRT vs native
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use emdpar::config::Config;
+use emdpar::coordinator::{SearchEngine, Server};
+use emdpar::core::Metric;
+use emdpar::data::{self, MnistConfig, TextConfig};
+use emdpar::eval::{render_markdown, sweep_all_pairs, sweep_subset};
+use emdpar::lc::{EngineParams, Method};
+use emdpar::runtime::{ArtifactEngine, Executor};
+use emdpar::util::cli::CommandSpec;
+use emdpar::util::logging;
+
+fn main() {
+    logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "--help" || args[0] == "help" {
+        print_help();
+        return;
+    }
+    let sub = args[0].clone();
+    let rest = &args[1..];
+    let result = match sub.as_str() {
+        "datasets" => cmd_datasets(rest),
+        "search" => cmd_search(rest),
+        "eval" => cmd_eval(rest),
+        "serve" => cmd_serve(rest),
+        "artifacts-check" => cmd_artifacts_check(rest),
+        other => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "emdpar — low-complexity data-parallel EMD approximations\n\n\
+         Usage: emdpar <subcommand> [options]\n\n\
+         Subcommands:\n\
+         \x20 datasets         generate/persist/inspect datasets (--help)\n\
+         \x20 search           top-ℓ query against a dataset (--help)\n\
+         \x20 eval             reproduce accuracy tables / sweeps (--help)\n\
+         \x20 serve            run the TCP search server (--help)\n\
+         \x20 artifacts-check  compile artifacts, verify PJRT == native\n"
+    );
+}
+
+fn common_opts(spec: CommandSpec) -> CommandSpec {
+    spec.opt("dataset", "synth-mnist:1000", "dataset: <file.bin> | synth-mnist[:n] | synth-text[:n]")
+        .opt("config", "", "JSON config file (CLI flags override it)")
+        .opt("method", "", "bow | wcd | rwmd | omr | act-<j>")
+        .opt("threads", "", "worker threads")
+        .opt("backend", "", "native | artifact")
+        .opt("topl", "", "results per query")
+}
+
+fn build_config(parsed: &emdpar::util::cli::Parsed) -> Result<Config> {
+    let mut cfg = match parsed.opt_str("config") {
+        Some(path) if !path.is_empty() => Config::from_file(Path::new(path))?,
+        _ => Config::default(),
+    };
+    cfg.apply_cli(parsed)?;
+    Ok(cfg)
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_datasets(args: &[String]) -> Result<()> {
+    let spec = CommandSpec::new("datasets", "generate / persist / inspect datasets")
+        .opt("kind", "mnist", "mnist | text")
+        .opt("n", "1000", "number of items")
+        .opt("background", "0", "MNIST background mass fraction (Table 6)")
+        .opt("vocab", "8000", "text vocabulary size")
+        .opt("dim", "64", "text embedding dimension")
+        .opt("seed", "42", "generator seed")
+        .opt("out", "", "write dataset to this .bin file")
+        .flag("stats", "print Table-4 style properties");
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage("emdpar"));
+        return Ok(());
+    }
+    let p = spec.parse(args)?;
+    let ds = match p.str("kind") {
+        "mnist" => data::generate_mnist(&MnistConfig {
+            n: p.usize("n")?,
+            background: p.f64("background")? as f32,
+            seed: p.usize("seed")? as u64,
+            ..Default::default()
+        }),
+        "text" => data::generate_text(&TextConfig {
+            n: p.usize("n")?,
+            vocab: p.usize("vocab")?,
+            dim: p.usize("dim")?,
+            seed: p.usize("seed")? as u64,
+            ..Default::default()
+        }),
+        other => bail!("unknown dataset kind '{other}'"),
+    };
+    let st = ds.stats();
+    println!(
+        "{}: n={} avg_h={:.1} vocab={} used_vocab={} m={} classes={}",
+        ds.name, st.n, st.avg_h, st.vocab_size, st.used_vocab, st.dim, st.classes
+    );
+    if p.flag("stats") {
+        println!(
+            "| {} | {} | {:.1} | {} | {} |   (paper Table 4 row format)",
+            ds.name, st.n, st.avg_h, st.vocab_size, st.used_vocab
+        );
+    }
+    if let Some(out) = p.opt_str("out") {
+        if !out.is_empty() {
+            data::save(&ds, Path::new(out))?;
+            println!("wrote {out}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &[String]) -> Result<()> {
+    let spec = common_opts(CommandSpec::new("search", "top-ℓ query against a dataset"))
+        .opt("id", "0", "query by database row id");
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage("emdpar"));
+        return Ok(());
+    }
+    let p = spec.parse(args)?;
+    let cfg = build_config(&p)?;
+    let method = cfg.method;
+    let l = cfg.topl;
+    let engine = SearchEngine::from_config(cfg)?;
+    let id = p.usize("id")?;
+    anyhow::ensure!(id < engine.dataset().len(), "--id out of range");
+    let query = engine.dataset().histogram(id);
+    let res = engine.search(&query, method, l)?;
+    println!(
+        "query id={id} (label {}) via {} — top-{l}:",
+        engine.dataset().labels[id],
+        method.name()
+    );
+    for (rank, (&(d, hit), &lab)) in res.hits.iter().zip(&res.labels).enumerate() {
+        println!("  #{:<3} id={hit:<6} label={lab:<4} distance={d:.6}", rank + 1);
+    }
+    let m = engine.metrics();
+    println!(
+        "latency: mean {:.1} us over {} distance evals",
+        m.mean_latency_us(),
+        m.distance_evals.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let spec = common_opts(CommandSpec::new(
+        "eval",
+        "reproduce accuracy/runtime experiments (Tables 5-6, Fig. 8 protocol)",
+    ))
+    .opt("methods", "bow,rwmd,omr,act-1,act-3,act-7", "comma-separated method list")
+    .opt("ls", "1,16,128", "comma-separated top-ℓ values")
+    .opt("subset", "0", "query only the first N docs (0 = all-pairs)");
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage("emdpar"));
+        return Ok(());
+    }
+    let p = spec.parse(args)?;
+    let cfg = build_config(&p)?;
+    let ds = std::sync::Arc::new(cfg.load_dataset()?);
+    let methods: Vec<Method> = p
+        .str("methods")
+        .split(',')
+        .map(|s| Method::parse(s.trim()).ok_or_else(|| anyhow!("bad method '{s}'")))
+        .collect::<Result<_>>()?;
+    let ls = p.usize_list("ls")?;
+    let params = EngineParams {
+        metric: Metric::L2,
+        threads: cfg.threads,
+        symmetric: cfg.symmetric,
+    };
+    let subset = p.usize("subset")?;
+    let rows = if subset > 0 {
+        sweep_subset(&ds, subset, &methods, &ls, params)
+    } else {
+        sweep_all_pairs(&ds, &methods, &ls, params)
+    };
+    println!("{}", render_markdown(&format!("{} (n={})", ds.name, ds.len()), &rows));
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let spec = common_opts(CommandSpec::new("serve", "run the TCP search server"))
+        .opt("listen", "", "bind address (default from config)");
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage("emdpar"));
+        return Ok(());
+    }
+    let p = spec.parse(args)?;
+    let mut cfg = build_config(&p)?;
+    if let Some(listen) = p.opt_str("listen") {
+        if !listen.is_empty() {
+            cfg.listen = listen.to_string();
+        }
+    }
+    let listen = cfg.listen.clone();
+    let engine = SearchEngine::from_config(cfg)?;
+    println!(
+        "dataset '{}' ({} docs) ready; listening on {listen}",
+        engine.dataset().name,
+        engine.dataset().len()
+    );
+    let server = Server::bind(engine, &listen)?;
+    server.serve()
+}
+
+fn cmd_artifacts_check(args: &[String]) -> Result<()> {
+    let spec = CommandSpec::new("artifacts-check", "compile artifacts; verify PJRT == native")
+        .opt("dir", "artifacts", "artifact directory")
+        .opt("profile", "dev", "profile to cross-check numerically");
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage("emdpar"));
+        return Ok(());
+    }
+    let p = spec.parse(args)?;
+    let exec = Executor::new(Path::new(p.str("dir")))?;
+    println!("PJRT platform: {}", exec.platform());
+    println!("manifest: {} artifacts", exec.manifest().artifacts.len());
+
+    // numeric cross-check on the requested profile
+    let profile = p.str("profile");
+    let fused = exec
+        .manifest()
+        .artifacts
+        .values()
+        .find(|a| a.profile == profile && a.entry == emdpar::runtime::Entry::Fused)
+        .ok_or_else(|| anyhow!("no fused artifact in profile '{profile}'"))?
+        .clone();
+    let ds = data::generate_text(&TextConfig {
+        n: 64,
+        classes: 4,
+        vocab: fused.v,
+        dim: fused.m,
+        doc_len: (fused.h / 2).max(5),
+        seed: 7,
+        ..Default::default()
+    });
+    let art = ArtifactEngine::new(&exec, &ds, profile)?;
+    let k = exec.manifest().ks_for(profile).into_iter().find(|&k| k >= 2).unwrap_or(1);
+    let q = ds.histogram(0);
+    let got = art.distances(&q, k, true)?;
+    let native = emdpar::lc::LcEngine::new(
+        std::sync::Arc::new(ds.clone()),
+        EngineParams { metric: Metric::L2, threads: 2, symmetric: true },
+    )
+    .distances(&q, Method::Act { k });
+    let mut max_err = 0.0f32;
+    for (g, n) in got.iter().zip(&native) {
+        max_err = max_err.max((g - n).abs());
+    }
+    println!(
+        "profile '{profile}' k={k}: max |PJRT - native| = {max_err:.2e} over {} docs",
+        got.len()
+    );
+    anyhow::ensure!(max_err < 1e-3, "artifact/native mismatch {max_err}");
+    println!("artifacts-check OK");
+    Ok(())
+}

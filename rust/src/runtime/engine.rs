@@ -1,0 +1,213 @@
+//! Artifact-backed LC engine: the same Phase-1 / Phase-2 pipeline as
+//! [`crate::lc`], but executed from the AOT-compiled JAX/Pallas HLO via
+//! PJRT.  Shapes are static per artifact, so queries and database shards
+//! are padded/tiled to the manifest's menu:
+//!
+//! * vocabulary rows beyond the dataset's v: zero coordinates — harmless,
+//!   their X columns are always zero;
+//! * query bins beyond h: coordinates pushed `PAD_OFFSET` away with weight
+//!   0, so they never enter a real top-k (enforced by `k <= h_real`);
+//! * database rows beyond n: zero rows, cost exactly 0, trimmed on return.
+
+use anyhow::{anyhow, Result};
+
+use crate::core::{Dataset, Histogram};
+
+use super::executor::Executor;
+use super::manifest::Entry;
+
+/// Far-away coordinate for padded query bins.
+const PAD_OFFSET: f32 = 1.0e4;
+
+/// A dataset bound to an artifact profile, with densified tiles.
+pub struct ArtifactEngine<'a> {
+    exec: &'a Executor,
+    dataset: &'a Dataset,
+    profile: String,
+    /// padded vocabulary buffer (v_art * m)
+    v_buf: Vec<f32>,
+    /// densified database tiles, each (n_art * v_art)
+    tiles: Vec<Vec<f32>>,
+    pub v_art: usize,
+    pub h_art: usize,
+    pub n_art: usize,
+    pub m: usize,
+}
+
+impl<'a> ArtifactEngine<'a> {
+    /// Bind `dataset` to `profile` artifacts from `exec`'s manifest.
+    pub fn new(exec: &'a Executor, dataset: &'a Dataset, profile: &str) -> Result<Self> {
+        let spec = exec
+            .manifest()
+            .artifacts
+            .values()
+            .find(|a| a.profile == profile && a.entry == Entry::Fused)
+            .ok_or_else(|| anyhow!("profile '{profile}' not in manifest"))?;
+        let (v_art, h_art, n_art, m) = (spec.v, spec.h, spec.n, spec.m);
+        let v = dataset.embeddings.num_vectors();
+        anyhow::ensure!(v <= v_art, "dataset vocab {v} exceeds artifact v {v_art}");
+        anyhow::ensure!(
+            dataset.embeddings.dim() == m,
+            "dataset dim {} != artifact m {m}",
+            dataset.embeddings.dim()
+        );
+
+        // padded vocabulary (zero rows beyond v)
+        let mut v_buf = vec![0.0f32; v_art * m];
+        v_buf[..v * m].copy_from_slice(dataset.embeddings.as_slice());
+
+        // densified database tiles
+        let n = dataset.len();
+        let tiles_needed = n.div_ceil(n_art);
+        let mut tiles = Vec::with_capacity(tiles_needed);
+        for t in 0..tiles_needed {
+            let start = t * n_art;
+            let end = start + n_art;
+            let mut tile = vec![0.0f32; n_art * v_art];
+            // scatter CSR rows into the padded-width tile
+            for (r, u) in (start..end.min(n)).enumerate() {
+                let (idx, w) = dataset.matrix.row(u);
+                let row = &mut tile[r * v_art..(r + 1) * v_art];
+                for (&i, &x) in idx.iter().zip(w) {
+                    row[i as usize] = x;
+                }
+            }
+            tiles.push(tile);
+        }
+
+        Ok(ArtifactEngine {
+            exec,
+            dataset,
+            profile: profile.to_string(),
+            v_buf,
+            tiles,
+            v_art,
+            h_art,
+            n_art,
+            m,
+        })
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Pad a query histogram to (h_art) coordinates + weights.
+    fn pad_query(&self, query: &Histogram) -> Result<(Vec<f32>, Vec<f32>, usize)> {
+        let qn = query.normalized();
+        let h = qn.len();
+        anyhow::ensure!(h > 0, "empty query");
+        anyhow::ensure!(h <= self.h_art, "query h {h} exceeds artifact h {}", self.h_art);
+        let mut q_buf = vec![PAD_OFFSET; self.h_art * self.m];
+        let mut qw_buf = vec![0.0f32; self.h_art];
+        for (j, (i, w)) in qn.iter().enumerate() {
+            q_buf[j * self.m..(j + 1) * self.m]
+                .copy_from_slice(self.dataset.embeddings.row(i as usize));
+            qw_buf[j] = w;
+        }
+        Ok((q_buf, qw_buf, h))
+    }
+
+    /// ACT-(k-1) direction-A bounds for every database row, via the
+    /// phase1-once + phase2-per-tile artifact pipeline.  With `symmetric`,
+    /// also runs the direction-B RWMD artifact and takes the max.
+    pub fn distances(&self, query: &Histogram, k: usize, symmetric: bool) -> Result<Vec<f32>> {
+        let (q_buf, qw_buf, h_real) = self.pad_query(query)?;
+        anyhow::ensure!(
+            k <= h_real,
+            "k={k} exceeds query support {h_real}; padded bins would enter the top-k"
+        );
+        let p1 = self
+            .exec
+            .manifest()
+            .find(&self.profile, Entry::Phase1, k)
+            .ok_or_else(|| anyhow!("no phase1 artifact for profile {} k={k}", self.profile))?
+            .name
+            .clone();
+        let p2 = self
+            .exec
+            .manifest()
+            .find(&self.profile, Entry::Phase2, k)
+            .ok_or_else(|| anyhow!("no phase2 artifact for profile {} k={k}", self.profile))?
+            .name
+            .clone();
+
+        let outs = self.exec.run(
+            &p1,
+            &[
+                (&self.v_buf, &[self.v_art, self.m]),
+                (&q_buf, &[self.h_art, self.m]),
+                (&qw_buf, &[self.h_art]),
+            ],
+        )?;
+        let (d, z, w) = (&outs[0], &outs[1], &outs[2]);
+
+        let n = self.dataset.len();
+        let mut result = Vec::with_capacity(n);
+        for (t, tile) in self.tiles.iter().enumerate() {
+            let ta = self.exec.run1(
+                &p2,
+                &[
+                    (tile, &[self.n_art, self.v_art]),
+                    (&z.data, &[self.v_art, k]),
+                    (&w.data, &[self.v_art, k]),
+                ],
+            )?;
+            let take = (n - t * self.n_art).min(self.n_art);
+            result.extend_from_slice(&ta.data[..take]);
+        }
+
+        if symmetric {
+            let rb = self
+                .exec
+                .manifest()
+                .find(&self.profile, Entry::RwmdB, 1)
+                .ok_or_else(|| anyhow!("no rwmd_b artifact for profile {}", self.profile))?
+                .name
+                .clone();
+            let mut pos = 0usize;
+            for tile in &self.tiles {
+                let tb = self.exec.run1(
+                    &rb,
+                    &[
+                        (tile, &[self.n_art, self.v_art]),
+                        (&d.data, &[self.v_art, self.h_art]),
+                        (&qw_buf, &[self.h_art]),
+                    ],
+                )?;
+                let take = (n - pos).min(self.n_art);
+                for (slot, &b) in result[pos..pos + take].iter_mut().zip(&tb.data[..take]) {
+                    if b > *slot {
+                        *slot = b;
+                    }
+                }
+                pos += take;
+            }
+        }
+        Ok(result)
+    }
+
+    /// Single-call fused pipeline on the first tile only — used by the
+    /// quickstart and by equivalence tests.
+    pub fn distances_fused_tile(&self, query: &Histogram, k: usize, tile: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (q_buf, qw_buf, h_real) = self.pad_query(query)?;
+        anyhow::ensure!(k <= h_real, "k={k} exceeds query support {h_real}");
+        let fused = self
+            .exec
+            .manifest()
+            .find(&self.profile, Entry::Fused, k)
+            .ok_or_else(|| anyhow!("no fused artifact for profile {} k={k}", self.profile))?
+            .name
+            .clone();
+        let outs = self.exec.run(
+            &fused,
+            &[
+                (&self.v_buf, &[self.v_art, self.m]),
+                (&q_buf, &[self.h_art, self.m]),
+                (&qw_buf, &[self.h_art]),
+                (&self.tiles[tile], &[self.n_art, self.v_art]),
+            ],
+        )?;
+        Ok((outs[0].data.clone(), outs[1].data.clone()))
+    }
+}

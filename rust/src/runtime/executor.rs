@@ -1,0 +1,142 @@
+//! PJRT executor: load HLO-text artifacts, compile them once on the CPU
+//! client, and run them with f32 buffers.
+//!
+//! This is the only module that touches the `xla` crate.  HLO **text** is
+//! the interchange format (`HloModuleProto::from_text_file` reassigns
+//! instruction ids; serialized jax>=0.5 protos are rejected by
+//! xla_extension 0.5.1 — see DESIGN.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// A compiled-executable cache over one PJRT client.
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+/// An f32 tensor result from an artifact execution.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl Executor {
+    /// Create a CPU PJRT client and attach the artifact manifest.
+    pub fn new(artifact_dir: &Path) -> Result<Executor> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Executor { client, manifest, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        {
+            let cache = self.compiled.lock().unwrap();
+            if cache.contains_key(name) {
+                return Ok(());
+            }
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = spec
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path {:?}", spec.file))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let computation = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&computation)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.compiled.lock().unwrap().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Number of artifacts compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.lock().unwrap().len()
+    }
+
+    /// Execute an artifact on f32 inputs.  `inputs` are (data, dims) pairs
+    /// matching the manifest's declared parameter order; returns the output
+    /// tuple decomposed into tensors.
+    pub fn run(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(name)?;
+        let spec = &self.manifest.artifacts[name];
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64)
+                    .with_context(|| format!("reshaping input to {dims:?}"))
+            })
+            .collect::<Result<_>>()?;
+
+        let cache = self.compiled.lock().unwrap();
+        let exe = &cache[name];
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing '{name}'"))?;
+        let mut out_lit = result[0][0]
+            .to_literal_sync()
+            .context("copying result to host")?;
+        drop(cache);
+
+        // aot.py lowers with return_tuple=True: always a tuple, even arity 1
+        let parts = out_lit.decompose_tuple().context("decomposing result tuple")?;
+        anyhow::ensure!(
+            parts.len() == spec.entry.arity(),
+            "artifact '{name}' returned {} outputs, manifest says {}",
+            parts.len(),
+            spec.entry.arity()
+        );
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape().context("result shape")?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<f32>().context("result to_vec")?;
+                Ok(Tensor { data, dims })
+            })
+            .collect()
+    }
+
+    /// Convenience: run and require exactly one output.
+    pub fn run1(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Tensor> {
+        let mut out = self.run(name, inputs)?;
+        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
+        Ok(out.remove(0))
+    }
+
+    /// Direct access to an artifact spec.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.manifest.artifacts.get(name)
+    }
+}
+
+// PJRT client handles are internally synchronized; the Mutex above guards
+// only our cache map.
+unsafe impl Sync for Executor {}
+unsafe impl Send for Executor {}

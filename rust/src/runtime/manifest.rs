@@ -1,0 +1,209 @@
+//! Artifact manifest: the shape menu `python/compile/aot.py` emits next to
+//! the HLO text files (`artifacts/manifest.json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Which pipeline stage an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Entry {
+    /// (V, Q, qw) -> (D, Z, W)
+    Phase1,
+    /// (X, Z, W) -> t
+    Phase2,
+    /// (V, Q, qw, X) -> (t_a, t_b)
+    Fused,
+    /// (X, D, qw) -> t
+    RwmdB,
+}
+
+impl Entry {
+    fn parse(s: &str) -> Result<Entry> {
+        Ok(match s {
+            "phase1" => Entry::Phase1,
+            "phase2" => Entry::Phase2,
+            "fused" => Entry::Fused,
+            "rwmd_b" => Entry::RwmdB,
+            other => bail!("unknown artifact entry kind '{other}'"),
+        })
+    }
+
+    /// Number of outputs in the result tuple.
+    pub fn arity(self) -> usize {
+        match self {
+            Entry::Phase1 => 3,
+            Entry::Phase2 | Entry::RwmdB => 1,
+            Entry::Fused => 2,
+        }
+    }
+}
+
+/// One artifact's static configuration.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub entry: Entry,
+    pub profile: String,
+    pub file: PathBuf,
+    pub v: usize,
+    pub h: usize,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        if json.get("format").and_then(Json::as_str) != Some("hlo-text-v1") {
+            bail!("unsupported manifest format in {path:?}");
+        }
+        let mut artifacts = BTreeMap::new();
+        let entries = json
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' object"))?;
+        for (name, e) in entries {
+            let get = |key: &str| -> Result<usize> {
+                e.get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("artifact '{name}' missing integer '{key}'"))
+            };
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                entry: Entry::parse(
+                    e.get("entry")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact '{name}' missing 'entry'"))?,
+                )?,
+                profile: e
+                    .get("profile")
+                    .and_then(Json::as_str)
+                    .unwrap_or("default")
+                    .to_string(),
+                file: dir.join(
+                    e.get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact '{name}' missing 'file'"))?,
+                ),
+                v: get("v")?,
+                h: get("h")?,
+                m: get("m")?,
+                n: get("n")?,
+                k: get("k")?,
+            };
+            artifacts.insert(name.clone(), spec);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find the artifact for `entry` in `profile` with the given k.
+    pub fn find(&self, profile: &str, entry: Entry, k: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .find(|a| a.profile == profile && a.entry == entry && (a.k == k || entry == Entry::RwmdB))
+    }
+
+    /// Profiles able to host a dataset of shape (v, m) with queries up to h
+    /// bins, sorted by padding waste (fewest padded vocabulary rows first).
+    pub fn fitting_profiles(&self, v: usize, m: usize, h: usize) -> Vec<String> {
+        let mut fits: Vec<(usize, String)> = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for a in self.artifacts.values() {
+            if a.entry == Entry::Fused
+                && a.v >= v
+                && a.m == m
+                && a.h >= h
+                && seen.insert(a.profile.clone())
+            {
+                fits.push((a.v - v, a.profile.clone()));
+            }
+        }
+        fits.sort();
+        fits.into_iter().map(|(_, p)| p).collect()
+    }
+
+    /// Available k values for a profile's fused/phase1 artifacts.
+    pub fn ks_for(&self, profile: &str) -> Vec<usize> {
+        let mut ks: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.profile == profile && a.entry == Entry::Fused)
+            .map(|a| a.k)
+            .collect();
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        let body = r#"{
+  "format": "hlo-text-v1",
+  "artifacts": {
+    "dev_fused_k2": {"entry": "fused", "profile": "dev", "file": "dev_fused_k2.hlo.txt",
+                      "v": 256, "h": 64, "m": 16, "n": 128, "k": 2,
+                      "inputs": [], "outputs": []},
+    "dev_phase1_k2": {"entry": "phase1", "profile": "dev", "file": "dev_phase1_k2.hlo.txt",
+                      "v": 256, "h": 64, "m": 16, "n": 128, "k": 2,
+                      "inputs": [], "outputs": []},
+    "dev_rwmd_b": {"entry": "rwmd_b", "profile": "dev", "file": "dev_rwmd_b.hlo.txt",
+                   "v": 256, "h": 64, "m": 16, "n": 128, "k": 1,
+                   "inputs": [], "outputs": []}
+  }
+}"#;
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join("emdpar_manifest_test");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.find("dev", Entry::Fused, 2).unwrap();
+        assert_eq!(a.v, 256);
+        assert!(m.find("dev", Entry::Fused, 99).is_none());
+        assert!(m.find("dev", Entry::RwmdB, 1).is_some());
+        assert_eq!(m.ks_for("dev"), vec![2]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fitting_profiles_respects_shapes() {
+        let dir = std::env::temp_dir().join("emdpar_manifest_test2");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.fitting_profiles(200, 16, 50), vec!["dev".to_string()]);
+        assert!(m.fitting_profiles(300, 16, 50).is_empty()); // v too big
+        assert!(m.fitting_profiles(200, 8, 50).is_empty()); // m mismatch
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("emdpar_manifest_none");
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

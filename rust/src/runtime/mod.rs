@@ -1,0 +1,12 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and execute the LC-ACT pipeline from Rust.
+//! Python never runs on the request path — `make artifacts` is the only
+//! Python invocation, at build time.
+
+pub mod engine;
+pub mod executor;
+pub mod manifest;
+
+pub use engine::ArtifactEngine;
+pub use executor::{Executor, Tensor};
+pub use manifest::{ArtifactSpec, Entry, Manifest};

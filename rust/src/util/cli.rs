@@ -1,0 +1,244 @@
+//! Declarative CLI argument parser (substrate: no clap offline).
+//!
+//! Supports subcommands, `--flag`, `--opt value` / `--opt=value`, typed
+//! accessors with defaults, required options, and generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+/// Specification of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub required: bool,
+    pub help: &'static str,
+}
+
+/// Specification of a (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, takes_value: false, default: None, required: false, help });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            takes_value: true,
+            default: Some(default),
+            required: false,
+            help,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, takes_value: true, default: None, required: true, help });
+        self
+    }
+
+    fn find(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    pub fn usage(&self, program: &str) -> String {
+        let mut s = format!("{}\n\nUsage: {} {} [options]\n\nOptions:\n", self.about, program, self.name);
+        for o in &self.opts {
+            let lhs = if o.takes_value {
+                format!("--{} <value>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let default = match o.default {
+                Some(d) if o.takes_value => format!(" [default: {d}]"),
+                _ if o.required => " [required]".to_string(),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  {lhs:<28} {}{}\n", o.help, default));
+        }
+        s
+    }
+
+    /// Parse an argument list (without program/subcommand names).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positional: Vec<String> = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .find(name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name} (try --help)")))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError(format!("--{name} expects a value")))?
+                            .clone(),
+                    };
+                    values.insert(name.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} does not take a value")));
+                    }
+                    flags.push(name.to_string());
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+        }
+        for o in &self.opts {
+            if o.required && !values.contains_key(o.name) {
+                return Err(CliError(format!("missing required option --{}", o.name)));
+            }
+            if let (true, Some(d)) = (o.takes_value, o.default) {
+                values.entry(o.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(Parsed { values, flags, positional })
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected an integer, got '{}'", self.str(name))))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected a number, got '{}'", self.str(name))))
+    }
+
+    /// Comma-separated list of integers, e.g. `--ks 1,2,8`.
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| CliError(format!("--{name}: bad integer '{s}'")))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CommandSpec {
+        CommandSpec::new("search", "run a search")
+            .opt("k", "8", "transfer iterations")
+            .opt("ks", "1,2", "list")
+            .req("dataset", "dataset path")
+            .flag("background", "include background pixels")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let p = spec().parse(&args(&["--dataset", "d.bin"])).unwrap();
+        assert_eq!(p.usize("k").unwrap(), 8);
+        assert_eq!(p.str("dataset"), "d.bin");
+        assert!(!p.flag("background"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(spec().parse(&args(&[])).is_err());
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let p = spec().parse(&args(&["--dataset=x", "--k=3", "--background"])).unwrap();
+        assert_eq!(p.usize("k").unwrap(), 3);
+        assert!(p.flag("background"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(spec().parse(&args(&["--nope", "--dataset", "x"])).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let p = spec().parse(&args(&["--dataset", "x", "--ks", "1,2,8,16"])).unwrap();
+        assert_eq!(p.usize_list("ks").unwrap(), vec![1, 2, 8, 16]);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let p = spec().parse(&args(&["--dataset", "x", "--k", "abc"])).unwrap();
+        assert!(p.usize("k").is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = spec().parse(&args(&["--dataset", "x", "query.png"])).unwrap();
+        assert_eq!(p.positional, vec!["query.png".to_string()]);
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = spec().usage("emdpar");
+        assert!(u.contains("--dataset"));
+        assert!(u.contains("[default: 8]"));
+        assert!(u.contains("[required]"));
+    }
+}

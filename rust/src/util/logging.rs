@@ -1,0 +1,116 @@
+//! Leveled logger with monotonic timestamps (substrate: no `log`/`env_logger`
+//! runtime wiring needed; `EMDPAR_LOG` selects the level).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn from_str(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Initialize from the `EMDPAR_LOG` environment variable (idempotent).
+pub fn init_from_env() {
+    START.get_or_init(Instant::now);
+    if let Ok(s) = std::env::var("EMDPAR_LOG") {
+        if let Some(l) = Level::from_str(&s) {
+            set_level(l);
+        }
+    }
+}
+
+pub fn set_level(l: Level) {
+    START.get_or_init(Instant::now);
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, target: &str, msg: &str) {
+    if !enabled(l) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed();
+    eprintln!("[{:>9.3}s {} {}] {}", t.as_secs_f64(), l.tag(), target, msg);
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, $target, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, $target, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, $target, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, $target, &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::from_str("DEBUG"), Some(Level::Debug));
+        assert_eq!(Level::from_str("bogus"), None);
+    }
+}

@@ -1,0 +1,11 @@
+//! Utility substrates built in-repo because the offline build environment
+//! only ships the `xla` crate's dependency closure (no rand / serde / clap /
+//! rayon / criterion / proptest).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,127 @@
+//! Property-testing mini-framework (substrate: no proptest offline).
+//!
+//! A property is a closure over a seeded [`Rng`]; the runner executes it for
+//! many derived seeds and reports the failing seed so a failure reproduces
+//! with `check_seed`.  Used by the solver and coordinator test-suites for
+//! the Theorem-2 chain, LC-engine equivalence, flow conservation, etc.
+
+use super::rng::Rng;
+
+/// Outcome of a property over one random case.
+pub enum Prop {
+    /// Property held.
+    Ok,
+    /// Property failed with an explanation.
+    Fail(String),
+    /// Case was rejected (precondition not met); not counted.
+    Discard,
+}
+
+/// Run `prop` over `cases` seeds derived from `base_seed`.  Panics with the
+/// failing seed + message on the first failure.
+pub fn check<F: FnMut(&mut Rng) -> Prop>(name: &str, base_seed: u64, cases: usize, mut prop: F) {
+    let mut ran = 0usize;
+    let mut attempts = 0usize;
+    let max_attempts = cases * 20;
+    while ran < cases && attempts < max_attempts {
+        let seed = base_seed.wrapping_add(attempts as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        attempts += 1;
+        let mut rng = Rng::new(seed);
+        match prop(&mut rng) {
+            Prop::Ok => ran += 1,
+            Prop::Discard => continue,
+            Prop::Fail(msg) => {
+                panic!("property '{name}' failed (attempt {attempts}, seed {seed:#x}): {msg}")
+            }
+        }
+    }
+    assert!(
+        ran >= cases,
+        "property '{name}': too many discards ({ran}/{cases} ran in {attempts} attempts)"
+    );
+}
+
+/// Re-run a single case with an explicit seed (reproduce a failure).
+pub fn check_seed<F: FnMut(&mut Rng) -> Prop>(name: &str, seed: u64, mut prop: F) {
+    let mut rng = Rng::new(seed);
+    if let Prop::Fail(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed at seed {seed:#x}: {msg}");
+    }
+}
+
+/// Assert-style helper: turn a boolean + message into a [`Prop`].
+pub fn ensure(cond: bool, msg: impl FnOnce() -> String) -> Prop {
+    if cond {
+        Prop::Ok
+    } else {
+        Prop::Fail(msg())
+    }
+}
+
+/// Chain several sub-checks; first failure wins.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return $crate::util::prop::Prop::Fail(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always-ok", 1, 50, |_rng| {
+            count += 1;
+            Prop::Ok
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 2, 10, |rng| {
+            let x = rng.f64();
+            ensure(x < 0.9, || format!("x = {x}"))
+        });
+    }
+
+    #[test]
+    fn discards_do_not_count() {
+        let mut ran = 0;
+        check("half-discarded", 3, 20, |rng| {
+            if rng.chance(0.5) {
+                return Prop::Discard;
+            }
+            ran += 1;
+            Prop::Ok
+        });
+        assert_eq!(ran, 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "too many discards")]
+    fn all_discards_is_an_error() {
+        check("all-discarded", 4, 10, |_| Prop::Discard);
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let mut first = Vec::new();
+        check("record", 5, 5, |rng| {
+            first.push(rng.next_u64());
+            Prop::Ok
+        });
+        let mut second = Vec::new();
+        check("record", 5, 5, |rng| {
+            second.push(rng.next_u64());
+            Prop::Ok
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,264 @@
+//! Data-parallel execution substrate (no rayon/tokio offline).
+//!
+//! Two tools:
+//! * [`parallel_for`] — scoped fork-join over an index range with atomic
+//!   chunk stealing; this is what the LC engines use to data-parallelize
+//!   over vocabulary rows / database documents (the role the GPU grid plays
+//!   in the paper).
+//! * [`ThreadPool`] — a long-lived pool with a job queue, used by the
+//!   coordinator to decouple request handling from compute.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+/// Number of worker threads to use: `EMDPAR_THREADS` env override, else
+/// available parallelism, else 4.
+pub fn default_threads() -> usize {
+    if let Ok(s) = std::env::var("EMDPAR_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` on up to `threads`
+/// workers.  Chunks are claimed with an atomic counter so imbalanced chunks
+/// do not idle workers.  `f` must be `Sync`; chunk granularity is chosen so
+/// each worker claims ~4 chunks on average (amortizes the atomic).
+pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = (n / (threads * 4)).max(1);
+    let next = AtomicUsize::new(0);
+    let f = &f;
+    let next = &next;
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(move || loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                f(start, end);
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots = SyncSlice::new(&mut out);
+        parallel_for(n, threads, |start, end| {
+            for i in start..end {
+                // SAFETY: each index is written by exactly one chunk owner.
+                unsafe { slots.write(i, f(i)) };
+            }
+        });
+    }
+    out
+}
+
+/// Shared mutable slice wrapper for disjoint-index parallel writes.
+///
+/// SAFETY contract: callers must guarantee every index is written by at most
+/// one thread.  `parallel_for`'s chunking provides that guarantee.
+pub struct SyncSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
+unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
+
+impl<'a, T> SyncSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write one element.  See the type-level SAFETY contract.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) = value };
+    }
+
+    /// Get a mutable sub-slice.  Caller must keep sub-slices disjoint.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, end: usize) -> &mut [T] {
+        debug_assert!(start <= end && end <= self.len);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), end - start) }
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A long-lived worker pool with a shared job queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            queued.fetch_sub(1, Ordering::Release);
+                        }
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), workers, queued }
+    }
+
+    /// Enqueue a job; returns the queue depth after enqueueing (for
+    /// backpressure decisions by the caller).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) -> usize {
+        let depth = self.queued.fetch_add(1, Ordering::Acquire) + 1;
+        self.tx.as_ref().expect("pool shut down").send(Box::new(job)).expect("workers alive");
+        depth
+    }
+
+    /// Jobs enqueued but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::Acquire)
+    }
+
+    /// Busy-wait (with yield) until all queued jobs have completed.
+    pub fn wait_idle(&self) {
+        while self.pending() > 0 {
+            thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_range_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(1000, 8, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_empty_and_single() {
+        parallel_for(0, 4, |_, _| panic!("should not run"));
+        let count = AtomicUsize::new(0);
+        parallel_for(1, 4, |s, e| {
+            count.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(257, 8, |i| i * i);
+        assert_eq!(out.len(), 257);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let xs: Vec<u64> = (0..10_000).collect();
+        let total = AtomicU64::new(0);
+        parallel_for(xs.len(), 6, |s, e| {
+            let part: u64 = xs[s..e].iter().sum();
+            total.fetch_add(part, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), xs.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // must join, not detach
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+}

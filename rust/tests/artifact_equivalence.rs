@@ -1,0 +1,128 @@
+//! Integration: the PJRT artifact pipeline must reproduce the native CPU
+//! LC engine bit-for-bit up to f32 tolerance, across k values, for both
+//! the split (phase1 + phase2-per-tile) and fused paths.
+//!
+//! Requires `make artifacts` (skips with a message if artifacts/ is absent).
+
+use std::path::Path;
+
+use emdpar::core::Metric;
+use emdpar::data::{generate_text, TextConfig};
+use emdpar::lc::{EngineParams, LcEngine, Method};
+use emdpar::runtime::{ArtifactEngine, Executor};
+
+fn executor() -> Option<Executor> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Executor::new(&dir) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping artifact tests: {err:#}");
+            None
+        }
+    }
+}
+
+fn dev_dataset(exec: &Executor) -> emdpar::core::Dataset {
+    let spec = exec
+        .manifest()
+        .artifacts
+        .values()
+        .find(|a| a.profile == "dev")
+        .expect("dev profile present");
+    generate_text(&TextConfig {
+        n: 300, // more than two tiles (dev n_tile = 128): exercises padding
+        classes: 5,
+        vocab: spec.v,
+        dim: spec.m,
+        doc_len: spec.h / 2,
+        seed: 11,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn artifact_matches_native_across_k() {
+    let Some(exec) = executor() else { return };
+    let ds = dev_dataset(&exec);
+    let art = ArtifactEngine::new(&exec, &ds, "dev").expect("bind dev profile");
+    let native = LcEngine::new(
+        std::sync::Arc::new(ds.clone()),
+        EngineParams { metric: Metric::L2, threads: 2, symmetric: false },
+    );
+    for k in exec.manifest().ks_for("dev") {
+        let q = ds.histogram(1);
+        let got = art.distances(&q, k, false).expect("artifact distances");
+        let want = native.distances(&q, Method::Act { k });
+        assert_eq!(got.len(), want.len());
+        for (u, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-4 + 1e-3 * w.abs(),
+                "k={k} doc={u}: pjrt {g} vs native {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn artifact_symmetric_matches_native_symmetric() {
+    let Some(exec) = executor() else { return };
+    let ds = dev_dataset(&exec);
+    let art = ArtifactEngine::new(&exec, &ds, "dev").expect("bind dev profile");
+    let native = LcEngine::new(
+        std::sync::Arc::new(ds.clone()),
+        EngineParams { metric: Metric::L2, threads: 2, symmetric: true },
+    );
+    let q = ds.histogram(7);
+    let got = art.distances(&q, 2, true).unwrap();
+    let want = native.distances(&q, Method::Act { k: 2 });
+    for (u, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-4 + 1e-3 * w.abs(),
+            "doc={u}: pjrt {g} vs native {w}"
+        );
+    }
+}
+
+#[test]
+fn fused_tile_matches_split_pipeline() {
+    let Some(exec) = executor() else { return };
+    let ds = dev_dataset(&exec);
+    let art = ArtifactEngine::new(&exec, &ds, "dev").unwrap();
+    let q = ds.histogram(3);
+    let k = 4;
+    let split = art.distances(&q, k, false).unwrap();
+    let (fused_a, _fused_b) = art.distances_fused_tile(&q, k, 0).unwrap();
+    let tile_rows = fused_a.len().min(split.len());
+    for u in 0..tile_rows {
+        assert!(
+            (split[u] - fused_a[u]).abs() < 1e-4,
+            "doc {u}: split {} vs fused {}",
+            split[u],
+            fused_a[u]
+        );
+    }
+}
+
+#[test]
+fn padded_tail_rows_cost_zero() {
+    let Some(exec) = executor() else { return };
+    let ds = dev_dataset(&exec);
+    let art = ArtifactEngine::new(&exec, &ds, "dev").unwrap();
+    // last tile has padding (300 = 2*128 + 44); results must have exactly n
+    let q = ds.histogram(0);
+    let got = art.distances(&q, 2, false).unwrap();
+    assert_eq!(got.len(), ds.len());
+    assert_eq!(art.num_tiles(), 3);
+}
+
+#[test]
+fn executor_caches_compilations() {
+    let Some(exec) = executor() else { return };
+    let ds = dev_dataset(&exec);
+    let art = ArtifactEngine::new(&exec, &ds, "dev").unwrap();
+    let q = ds.histogram(0);
+    art.distances(&q, 2, false).unwrap();
+    let after_first = exec.compiled_count();
+    art.distances(&q, 2, false).unwrap();
+    assert_eq!(exec.compiled_count(), after_first, "recompiled on second query");
+}

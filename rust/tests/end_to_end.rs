@@ -1,0 +1,148 @@
+//! End-to-end integration: coordinator + server + evaluation harness over
+//! both synthetic datasets, plus the paper's headline qualitative results
+//! at CI scale (RWMD collapse on dense histograms, ACT rescue, ACT beats
+//! BoW on text).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use emdpar::config::{Config, DatasetSpec};
+use emdpar::coordinator::{SearchEngine, Server};
+use emdpar::data::{generate_mnist, generate_text, MnistConfig, TextConfig};
+use emdpar::eval::{precision_at, sweep_all_pairs};
+use emdpar::lc::{EngineParams, LcEngine, Method};
+use emdpar::util::json::Json;
+
+#[test]
+fn text_precision_act_beats_bow_and_rwmd() {
+    // Fig. 8(a) qualitative shape at CI scale: ACT-1 > RWMD, ACT-1 > BoW.
+    // short, noisy documents over a wide vocabulary: same-class documents
+    // share few literal words, so embedding-aware measures must win
+    let ds = std::sync::Arc::new(generate_text(&TextConfig {
+        n: 240,
+        classes: 8,
+        vocab: 2400,
+        dim: 24,
+        doc_len: 20,
+        spread: 0.5,
+        topic_frac: 0.45,
+        general_frac: 0.35,
+        seed: 21,
+        ..Default::default()
+    }));
+    let rows = sweep_all_pairs(
+        &ds,
+        &[Method::Bow, Method::Rwmd, Method::Act { k: 2 }],
+        &[8],
+        EngineParams { threads: 4, ..Default::default() },
+    );
+    let p = |name: &str| {
+        rows.iter().find(|r| r.method == name).map(|r| r.precision[0].1).unwrap()
+    };
+    let (bow, rwmd, act1) = (p("BoW"), p("RWMD"), p("ACT-1"));
+    assert!(act1 > bow, "ACT-1 {act1} must beat BoW {bow}");
+    assert!(act1 >= rwmd - 0.02, "ACT-1 {act1} must not trail RWMD {rwmd}");
+    assert!(act1 > 0.5, "absolute accuracy sanity: {act1}");
+}
+
+#[test]
+fn mnist_background_breaks_rwmd_act_recovers() {
+    // Table 6 qualitative shape: with background pixels, RWMD ≈ chance
+    // (1/10), OMR and ACT recover.
+    let ds = std::sync::Arc::new(generate_mnist(&MnistConfig { n: 120, background: 0.4, ..Default::default() }));
+    let eng = LcEngine::new(std::sync::Arc::clone(&ds), EngineParams { threads: 4, ..Default::default() });
+    let l = 4;
+    let rwmd = eng.all_pairs_symmetric(Method::Rwmd);
+    let omr = eng.all_pairs_symmetric(Method::Omr);
+    let act7 = eng.all_pairs_symmetric(Method::Act { k: 8 });
+    let p_rwmd = precision_at(&rwmd, &ds.labels, &ds.labels, l, true);
+    let p_omr = precision_at(&omr, &ds.labels, &ds.labels, l, true);
+    let p_act7 = precision_at(&act7, &ds.labels, &ds.labels, l, true);
+    // full-overlap histograms: every RWMD distance is 0 -> random ranking
+    assert!(p_rwmd < 0.3, "RWMD should collapse, got {p_rwmd}");
+    assert!(p_omr > p_rwmd + 0.3, "OMR must rescue: {p_omr} vs {p_rwmd}");
+    assert!(p_act7 >= p_omr - 0.02, "ACT-7 {p_act7} must not trail OMR {p_omr}");
+}
+
+#[test]
+fn mnist_no_background_all_methods_work() {
+    // Table 5 qualitative shape: sparse digits, all methods well above chance
+    let ds = std::sync::Arc::new(generate_mnist(&MnistConfig { n: 150, ..Default::default() }));
+    let eng = LcEngine::new(std::sync::Arc::clone(&ds), EngineParams { threads: 4, ..Default::default() });
+    for method in [Method::Bow, Method::Rwmd, Method::Act { k: 2 }] {
+        let m = eng.all_pairs_symmetric(method);
+        let p = precision_at(&m, &ds.labels, &ds.labels, 4, true);
+        assert!(p > 0.5, "{}: precision {p}", method.name());
+    }
+}
+
+#[test]
+fn server_end_to_end_over_tcp() {
+    let config = Config {
+        dataset: DatasetSpec::SynthMnist { n: 80, background: 0.0, seed: 2 },
+        threads: 2,
+        linger_ms: 1,
+        max_batch: 4,
+        ..Default::default()
+    };
+    let engine = SearchEngine::from_config(config).unwrap();
+    let expect_label = engine.dataset().labels[10];
+    let server = Server::bind(engine, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+
+    let client = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut w = stream;
+        // pipeline several searches on one connection
+        let mut responses = Vec::new();
+        for id in [10usize, 11, 12] {
+            let req = format!(
+                "{{\"op\": \"search_id\", \"id\": {id}, \"l\": 3, \"method\": \"act-1\"}}\n"
+            );
+            w.write_all(req.as_bytes()).unwrap();
+        }
+        w.flush().unwrap();
+        for _ in 0..3 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            responses.push(Json::parse(line.trim()).unwrap());
+        }
+        responses
+    });
+    server.serve_n(1).unwrap();
+    let responses = client.join().unwrap();
+    assert_eq!(responses.len(), 3);
+    let first = &responses[0];
+    assert_eq!(first.get("ok"), Some(&Json::Bool(true)));
+    let hits = first.get("hits").and_then(Json::as_arr).unwrap();
+    // self-match first with its own label
+    let top = hits[0].as_arr().unwrap();
+    assert_eq!(top[1].as_usize(), Some(10));
+    assert_eq!(top[2].as_usize(), Some(expect_label as usize));
+}
+
+#[test]
+fn wmd_pruned_search_agrees_with_act_ranking_roughly() {
+    // The exact-EMD (WMD) top-1 neighbour should usually be in ACT-7's
+    // top-4: checks the approximation is faithful enough for retrieval.
+    use emdpar::core::Metric;
+    use emdpar::exact::wmd_topl_pruned;
+    let ds = std::sync::Arc::new(generate_mnist(&MnistConfig { n: 40, side: 14, ..Default::default() }));
+    let eng = LcEngine::new(std::sync::Arc::clone(&ds), EngineParams { threads: 2, ..Default::default() });
+    let db: Vec<_> = (0..ds.len()).map(|u| ds.histogram(u)).collect();
+    let mut agree = 0;
+    let queries = 6;
+    for uq in 0..queries {
+        let (top_exact, _) = wmd_topl_pruned(&ds.embeddings, &db[uq], &db, Metric::L2, 2);
+        // skip self (distance 0)
+        let exact_best = top_exact.iter().map(|&(_, u)| u).find(|&u| u != uq).unwrap();
+        let row = eng.distances(&db[uq], Method::Act { k: 8 });
+        let mut order: Vec<usize> = (0..row.len()).filter(|&u| u != uq).collect();
+        order.sort_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap());
+        if order[..4].contains(&exact_best) {
+            agree += 1;
+        }
+    }
+    assert!(agree >= queries - 1, "ACT-7 missed the exact nearest too often: {agree}/{queries}");
+}

@@ -1,0 +1,137 @@
+//! Integration: the paper's theorem properties across whole modules —
+//! Theorem 2 chain (RWMD ≤ OMR ≤ ACT-k ≤ ICT ≤ EMD), Theorem 1 (ICT is the
+//! relaxed optimum), Theorem 3 (OMR effectiveness), and the Sinkhorn / WMD
+//! comparator relationships — exercised through the public API on random
+//! histogram pairs via the in-repo property-test framework.
+
+use emdpar::approx::{
+    act_symmetric, ict_directed, ict_symmetric, omr_symmetric, rwmd_symmetric, sinkhorn,
+    SinkhornParams,
+};
+use emdpar::core::{Embeddings, Histogram, Metric};
+use emdpar::exact::emd;
+use emdpar::util::prop::{check, ensure, Prop};
+use emdpar::util::rng::Rng;
+
+fn random_vocab(rng: &mut Rng, v: usize, m: usize) -> Embeddings {
+    Embeddings::new((0..v * m).map(|_| rng.normal() as f32).collect(), v, m)
+}
+
+fn random_hist(rng: &mut Rng, v: usize, support: usize) -> Histogram {
+    let idx = rng.sample_indices(v, support);
+    Histogram::from_pairs(
+        idx.into_iter().map(|i| (i as u32, rng.range_f64(0.05, 1.0) as f32)).collect(),
+    )
+    .normalized()
+}
+
+/// Overlapping pair: q shares `overlap` of p's support.
+fn overlapping_pair(rng: &mut Rng, v: usize, h: usize, overlap: f64) -> (Histogram, Histogram) {
+    let p = random_hist(rng, v, h);
+    let n_shared = (overlap * h as f64) as usize;
+    let mut pairs: Vec<(u32, f32)> = p
+        .indices()
+        .iter()
+        .take(n_shared)
+        .map(|&i| (i, rng.range_f64(0.05, 1.0) as f32))
+        .collect();
+    while pairs.len() < h {
+        let i = rng.below(v) as u32;
+        if !pairs.iter().any(|&(j, _)| j == i) {
+            pairs.push((i, rng.range_f64(0.05, 1.0) as f32));
+        }
+    }
+    (p, Histogram::from_pairs(pairs).normalized())
+}
+
+#[test]
+fn theorem2_chain_holds_everywhere() {
+    check("thm2-chain", 0xE3D, 40, |rng| {
+        let vocab = random_vocab(rng, 24, 3);
+        let overlap = [0.0, 0.3, 0.7, 1.0][rng.below(4)];
+        let (p, q) = overlapping_pair(rng, 24, 8, overlap);
+        let rwmd = rwmd_symmetric(&vocab, &p, &q, Metric::L2);
+        let omr = omr_symmetric(&vocab, &p, &q, Metric::L2);
+        let act2 = act_symmetric(&vocab, &p, &q, Metric::L2, 2);
+        let act4 = act_symmetric(&vocab, &p, &q, Metric::L2, 4);
+        let ict = ict_symmetric(&vocab, &p, &q, Metric::L2);
+        let ex = emd(&vocab, &p, &q, Metric::L2);
+        let eps = 1e-6;
+        if rwmd > omr + eps {
+            return Prop::Fail(format!("RWMD {rwmd} > OMR {omr}"));
+        }
+        if omr > act2 + eps {
+            return Prop::Fail(format!("OMR {omr} > ACT-1 {act2}"));
+        }
+        if act2 > act4 + eps {
+            return Prop::Fail(format!("ACT-1 {act2} > ACT-3 {act4}"));
+        }
+        if act4 > ict + eps {
+            return Prop::Fail(format!("ACT-3 {act4} > ICT {ict}"));
+        }
+        ensure(ict <= ex + 1e-5, || format!("ICT {ict} > EMD {ex}"))
+    });
+}
+
+#[test]
+fn theorem3_omr_is_effective_rwmd_is_not() {
+    check("thm3-effective", 77, 30, |rng| {
+        let vocab = random_vocab(rng, 16, 3);
+        // full overlap, different weights (Fig. 3)
+        let (p, q) = overlapping_pair(rng, 16, 6, 1.0);
+        if p.weights() == q.weights() {
+            return Prop::Discard;
+        }
+        let rwmd = rwmd_symmetric(&vocab, &p, &q, Metric::L2);
+        let omr = omr_symmetric(&vocab, &p, &q, Metric::L2);
+        if rwmd != 0.0 {
+            return Prop::Fail(format!("RWMD should be blind, got {rwmd}"));
+        }
+        ensure(omr > 0.0, || "OMR failed to separate distinct histograms".to_string())
+    });
+}
+
+#[test]
+fn ict_is_exact_on_nested_singletons() {
+    // One-bin vs one-bin: every bound equals the ground distance.
+    let mut rng = Rng::new(5);
+    let vocab = random_vocab(&mut rng, 8, 2);
+    let p = Histogram::from_pairs(vec![(0, 1.0)]);
+    let q = Histogram::from_pairs(vec![(3, 1.0)]);
+    let d = Metric::L2.distance(vocab.row(0), vocab.row(3)) as f64;
+    assert!((ict_directed(&vocab, &p, &q, Metric::L2) - d).abs() < 1e-6);
+    assert!((emd(&vocab, &p, &q, Metric::L2) - d).abs() < 1e-6);
+}
+
+#[test]
+fn sinkhorn_upper_bounds_emd_and_tightens() {
+    check("sinkhorn-vs-emd", 13, 15, |rng| {
+        let vocab = random_vocab(rng, 12, 2);
+        let p = random_hist(rng, 12, 5);
+        let q = random_hist(rng, 12, 5);
+        let ex = emd(&vocab, &p, &q, Metric::L2);
+        let loose = sinkhorn(
+            &vocab, &p, &q, Metric::L2,
+            SinkhornParams { lambda: 20.0, max_iters: 1000, tol: 1e-9 },
+        );
+        ensure(loose >= ex - 1e-5, || format!("sinkhorn {loose} < emd {ex}"))
+    });
+}
+
+#[test]
+fn lc_engine_chain_on_dataset_scale() {
+    // The same chain must hold for the batched engines on a real dataset.
+    use emdpar::data::{generate_mnist, MnistConfig};
+    use emdpar::lc::{EngineParams, LcEngine, Method};
+    let ds = std::sync::Arc::new(generate_mnist(&MnistConfig { n: 60, side: 14, ..Default::default() }));
+    let eng = LcEngine::new(std::sync::Arc::clone(&ds), EngineParams { threads: 2, ..Default::default() });
+    let r = eng.all_pairs_symmetric(Method::Rwmd);
+    let o = eng.all_pairs_symmetric(Method::Omr);
+    let a1 = eng.all_pairs_symmetric(Method::Act { k: 2 });
+    let a7 = eng.all_pairs_symmetric(Method::Act { k: 8 });
+    for i in 0..r.len() {
+        assert!(r[i] <= o[i] + 1e-5, "RWMD > OMR at {i}");
+        assert!(o[i] <= a1[i] + 1e-5, "OMR > ACT-1 at {i}");
+        assert!(a1[i] <= a7[i] + 1e-5, "ACT-1 > ACT-7 at {i}");
+    }
+}
