@@ -7,9 +7,8 @@
 
 use std::path::Path;
 
-use emdpar::core::Metric;
 use emdpar::data::{generate_text, TextConfig};
-use emdpar::lc::{EngineParams, LcEngine, Method};
+use emdpar::prelude::{EngineParams, LcEngine, Method, Metric};
 use emdpar::runtime::{ArtifactEngine, Executor};
 use emdpar::util::stats::Bench;
 

@@ -7,11 +7,10 @@
 
 use std::time::Instant;
 
-use emdpar::core::Metric;
 use emdpar::data::{generate_text, TextConfig};
 use emdpar::eval::{precision_at, render_markdown, sweep_all_pairs};
 use emdpar::exact::wmd_topl_pruned;
-use emdpar::lc::{EngineParams, Method};
+use emdpar::prelude::{EngineParams, Method, Metric};
 
 fn main() {
     let full = std::env::var("EMDPAR_BENCH_FULL").is_ok();
@@ -48,7 +47,8 @@ fn main() {
         ],
         &ls,
         EngineParams { threads: emdpar::util::threadpool::default_threads(), ..Default::default() },
-    );
+    )
+    .expect("sweep");
     println!("{}", render_markdown("runtime vs accuracy (all-pairs, symmetric)", &rows));
 
     // WMD comparator on a subset

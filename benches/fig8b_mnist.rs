@@ -7,12 +7,10 @@
 
 use std::time::Instant;
 
-use emdpar::approx::{sinkhorn, SinkhornParams};
-use emdpar::core::Metric;
 use emdpar::data::{generate_mnist, MnistConfig};
 use emdpar::eval::{precision_at, render_markdown, sweep_subset};
 use emdpar::exact::wmd_topl_pruned;
-use emdpar::lc::{EngineParams, Method};
+use emdpar::prelude::{Distance, EngineParams, Method, MethodRegistry, Metric};
 use emdpar::util::threadpool::{parallel_for, SyncSlice};
 
 fn main() {
@@ -34,13 +32,17 @@ fn main() {
         &[Method::Bow, Method::Rwmd, Method::Omr, Method::Act { k: 2 }, Method::Act { k: 8 }],
         &ls,
         EngineParams { threads, ..Default::default() },
-    );
+    )
+    .expect("sweep");
     println!("{}", render_markdown("subset protocol (first nq query all n)", &rows));
 
-    // --- Sinkhorn comparator on a smaller subset (quadratic per pair) -----
+    // --- Sinkhorn comparator on a smaller subset (quadratic per pair),
+    //     resolved through the registry like every other method -----------
     let sq = if full { 8 } else { 4 };
     let sn = if full { 600 } else { 150 };
     let db: Vec<_> = (0..sn).map(|u| ds.histogram(u)).collect();
+    let sink_dist = MethodRegistry::new(Metric::L2).distance(Method::Sinkhorn);
+    let sink_dist = sink_dist.as_ref();
     let t0 = Instant::now();
     let mut sink = vec![0.0f32; sq * sn];
     {
@@ -48,13 +50,9 @@ fn main() {
         parallel_for(sq * sn, threads, |start, end| {
             for idx in start..end {
                 let (uq, u) = (idx / sn, idx % sn);
-                let d = sinkhorn(
-                    &ds.embeddings,
-                    &db[uq],
-                    &db[u],
-                    Metric::L2,
-                    SinkhornParams::default(),
-                ) as f32;
+                let d = sink_dist
+                    .distance(&ds.embeddings, &db[uq], &db[u])
+                    .unwrap_or(f64::INFINITY) as f32;
                 unsafe { slots.write(idx, d) };
             }
         });

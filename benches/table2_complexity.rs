@@ -7,9 +7,9 @@
 //! the full sweep).
 
 use emdpar::approx::rwmd::rwmd_directed;
-use emdpar::core::Metric;
 use emdpar::data::{generate_text, TextConfig};
 use emdpar::lc::{plan_query, rwmd_direction_a, PlanParams};
+use emdpar::prelude::Metric;
 use emdpar::util::stats::Bench;
 
 fn main() {

@@ -4,9 +4,9 @@
 //!
 //! Run: `cargo bench --bench table3_lcact`
 
-use emdpar::core::Metric;
 use emdpar::data::{generate_text, TextConfig};
 use emdpar::lc::{act_direction_a, plan_query, PlanParams};
+use emdpar::prelude::Metric;
 use emdpar::util::stats::Bench;
 
 fn main() {

@@ -5,9 +5,7 @@
 //!
 //! Run: `cargo bench --bench thm_chain`
 
-use emdpar::approx::{act_symmetric, ict_symmetric, omr_symmetric, rwmd_symmetric};
-use emdpar::core::{Embeddings, Histogram, Metric};
-use emdpar::exact::emd;
+use emdpar::prelude::{Distance, Embeddings, Histogram, Method, MethodRegistry, Metric};
 use emdpar::util::rng::Rng;
 
 fn random_vocab(rng: &mut Rng, v: usize, m: usize) -> Embeddings {
@@ -43,29 +41,41 @@ fn overlapping_pair(
 fn main() {
     let samples = 40;
     let (v, h, m) = (48, 12, 4);
+    // every bound resolved through the unified registry, not per-module fns
+    let registry = MethodRegistry::new(Metric::L2);
+    let chain = [
+        Method::BowAdjusted,
+        Method::Rwmd,
+        Method::Omr,
+        Method::Act { k: 2 },
+        Method::Act { k: 4 },
+        Method::Act { k: 8 },
+        Method::Ict,
+    ];
+    let bounds: Vec<_> = chain.iter().map(|&m| registry.distance(m)).collect();
+    let exact = registry.distance(Method::Exact);
+
     println!("# Theorem-2 tightness: mean bound / EMD ratio vs coordinate overlap");
     println!("# {samples} random pairs per row; v={v} h={h} m={m}\n");
-    println!(
-        "{:<10} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
-        "overlap", "RWMD", "OMR", "ACT-1", "ACT-3", "ACT-7", "ICT"
-    );
+    print!("{:<10}", "overlap");
+    for b in &bounds {
+        print!(" {:>8}", b.name());
+    }
+    println!();
     let mut rng = Rng::new(99);
     for overlap in [0.0, 0.25, 0.5, 0.75, 1.0] {
-        let mut sums = [0.0f64; 6];
+        let mut sums = vec![0.0f64; bounds.len()];
         let mut count = 0;
         for _ in 0..samples {
             let vocab = random_vocab(&mut rng, v, m);
             let (p, q) = overlapping_pair(&mut rng, v, h, overlap);
-            let ex = emd(&vocab, &p, &q, Metric::L2);
+            let ex = exact.distance(&vocab, &p, &q).unwrap();
             if ex < 1e-9 {
                 continue;
             }
-            sums[0] += rwmd_symmetric(&vocab, &p, &q, Metric::L2) / ex;
-            sums[1] += omr_symmetric(&vocab, &p, &q, Metric::L2) / ex;
-            sums[2] += act_symmetric(&vocab, &p, &q, Metric::L2, 2) / ex;
-            sums[3] += act_symmetric(&vocab, &p, &q, Metric::L2, 4) / ex;
-            sums[4] += act_symmetric(&vocab, &p, &q, Metric::L2, 8) / ex;
-            sums[5] += ict_symmetric(&vocab, &p, &q, Metric::L2) / ex;
+            for (slot, b) in sums.iter_mut().zip(&bounds) {
+                *slot += b.distance(&vocab, &p, &q).unwrap() / ex;
+            }
             count += 1;
         }
         print!("{overlap:<10}");

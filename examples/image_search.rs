@@ -8,10 +8,10 @@
 
 use emdpar::data::{generate_mnist, MnistConfig};
 use emdpar::eval::{render_markdown, sweep_all_pairs};
-use emdpar::lc::{EngineParams, Method};
+use emdpar::prelude::{EmdResult, EngineParams, Method};
 use emdpar::util::cli::CommandSpec;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> EmdResult<()> {
     let spec = CommandSpec::new("image_search", "Tables 5/6: MNIST precision@top-ℓ")
         .opt("n", "2000", "database size")
         .opt("ls", "1,16,128", "top-ℓ values")
@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         &methods,
         &ls,
         EngineParams { threads, ..Default::default() },
-    );
+    )?;
     println!("{}", render_markdown(title, &rows));
 
     if background > 0.0 {

@@ -1,6 +1,8 @@
-//! Quickstart: generate a small image dataset, search it with every method
-//! through the coordinator, and (when `make artifacts` has run) execute the
-//! same query through the AOT-compiled JAX/Pallas pipeline via PJRT.
+//! Quickstart: build the engine stack with `EngineBuilder`, search a small
+//! image database under every method through the coordinator, run a
+//! cascaded exact-EMD search, and (when `make artifacts` has run and the
+//! crate is built with `--features pjrt`) execute the same query through
+//! the AOT-compiled JAX/Pallas pipeline via PJRT.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -8,27 +10,27 @@
 
 use std::path::Path;
 
-use emdpar::config::{Config, DatasetSpec};
-use emdpar::coordinator::SearchEngine;
 use emdpar::data::{generate_text, TextConfig};
-use emdpar::lc::Method;
+use emdpar::prelude::{
+    cascade_search, DatasetSpec, Distance, EmdResult, EngineBuilder, Method, MethodRegistry,
+};
 use emdpar::runtime::{ArtifactEngine, Executor};
 
-fn main() -> anyhow::Result<()> {
-    // 1. a small synthetic digit database behind the coordinator
-    let config = Config {
-        dataset: DatasetSpec::SynthMnist { n: 500, background: 0.0, seed: 42 },
-        topl: 5,
-        ..Default::default()
-    };
-    let engine = SearchEngine::from_config(config)?;
+fn main() -> EmdResult<()> {
+    // 1. a small synthetic digit database behind the coordinator,
+    //    assembled by the builder (dataset -> params -> build)
+    let engine = EngineBuilder::new()
+        .dataset_spec(DatasetSpec::SynthMnist { n: 500, background: 0.0, seed: 42 })
+        .topl(5)
+        .build_search()?;
     let stats = engine.dataset().stats();
     println!(
         "dataset: {} (n={}, avg_h={:.1}, vocab={}, m={})\n",
         engine.dataset().name, stats.n, stats.avg_h, stats.vocab_size, stats.dim
     );
 
-    // 2. query image #0 under each distance measure
+    // 2. query image #0 under each distance measure — one canonical enum,
+    //    one search entry point
     let query = engine.dataset().histogram(0);
     let label = engine.dataset().labels[0];
     println!("query: image 0, digit class {label}");
@@ -56,7 +58,39 @@ fn main() -> anyhow::Result<()> {
         m.mean_latency_us()
     );
 
-    // 3. the same pipeline through the PJRT artifact path (three layers:
+    // 3. exact EMD through the cascade: RWMD prefilter over the database,
+    //    min-cost-flow only on the survivors (selected via MethodRegistry)
+    let lc = EngineBuilder::new()
+        .dataset_spec(DatasetSpec::SynthMnist { n: 200, background: 0.0, seed: 42 })
+        .symmetric(false)
+        .build_lc()?;
+    let q = lc.dataset().histogram(0);
+    let res = cascade_search(&lc, &q, Method::Exact, 5, 8)?;
+    println!(
+        "\ncascade (RWMD -> exact EMD): reranked {} of {} docs, certified: {}",
+        res.reranked,
+        lc.dataset().len(),
+        res.certified
+    );
+    for (rank, &(d, hit)) in res.hits.iter().enumerate() {
+        println!(
+            "  #{:<3} id={hit:<6} label={:<4} emd={d:.4}",
+            rank + 1,
+            lc.dataset().labels[hit]
+        );
+    }
+
+    // 4. per-pair trait objects from the registry: every method, including
+    //    the quadratic comparators, behind one interface
+    let registry = MethodRegistry::new(lc.params().metric);
+    let (a, b) = (lc.dataset().histogram(0), lc.dataset().histogram(1));
+    println!("\nper-pair distances, image 0 vs image 1:");
+    for method in [Method::BowAdjusted, Method::Rwmd, Method::Act { k: 4 }, Method::Ict, Method::Sinkhorn, Method::Exact] {
+        let d = registry.distance(method);
+        println!("  {:<8} {:.5}", d.name(), d.distance(&lc.dataset().embeddings, &a, &b)?);
+    }
+
+    // 5. the same pipeline through the PJRT artifact path (three layers:
     //    Pallas kernel -> JAX pipeline -> Rust runtime)
     let artifact_dir = Path::new("artifacts");
     match Executor::new(artifact_dir) {
@@ -84,7 +118,7 @@ fn main() -> anyhow::Result<()> {
                 best[..5].iter().map(|&u| (u, ds.labels[u])).collect::<Vec<_>>()
             );
         }
-        Err(e) => println!("\n(skipping PJRT demo: {e}; run `make artifacts`)"),
+        Err(e) => println!("\n(skipping PJRT demo: {e}; run `make artifacts` + `--features pjrt`)"),
     }
     Ok(())
 }

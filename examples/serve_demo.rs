@@ -11,13 +11,13 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Instant;
 
-use emdpar::config::{Config, DatasetSpec};
-use emdpar::coordinator::{SearchEngine, Server};
+use emdpar::emd_ensure;
+use emdpar::prelude::{DatasetSpec, EmdError, EmdResult, EngineBuilder, Server};
 use emdpar::util::cli::CommandSpec;
 use emdpar::util::json::Json;
 use emdpar::util::stats::Summary;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> EmdResult<()> {
     let spec = CommandSpec::new("serve_demo", "end-to-end serving load test")
         .opt("n", "2000", "database size")
         .opt("clients", "4", "concurrent client connections")
@@ -36,13 +36,11 @@ fn main() -> anyhow::Result<()> {
     let method = p.str("method").to_string();
     let l = p.usize("l")?;
 
-    let config = Config {
-        dataset: DatasetSpec::SynthMnist { n, background: 0.0, seed: 42 },
-        max_batch: 8,
-        linger_ms: 1,
-        ..Default::default()
-    };
-    let engine = SearchEngine::from_config(config)?;
+    let engine = EngineBuilder::new()
+        .dataset_spec(DatasetSpec::SynthMnist { n, background: 0.0, seed: 42 })
+        .max_batch(8)
+        .linger_ms(1)
+        .build_search()?;
     println!(
         "database: {} docs ({}), serving '{}' top-{l}",
         engine.dataset().len(),
@@ -61,7 +59,7 @@ fn main() -> anyhow::Result<()> {
     let mut handles = Vec::new();
     for c in 0..clients {
         let method = method.clone();
-        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+        handles.push(std::thread::spawn(move || -> EmdResult<Vec<f64>> {
             let stream = TcpStream::connect(addr)?;
             let mut reader = BufReader::new(stream.try_clone()?);
             let mut w = stream;
@@ -77,8 +75,8 @@ fn main() -> anyhow::Result<()> {
                 let mut line = String::new();
                 reader.read_line(&mut line)?;
                 latencies.push(t.elapsed().as_secs_f64());
-                let json = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
-                anyhow::ensure!(
+                let json = Json::parse(line.trim()).map_err(|e| EmdError::json(e.to_string()))?;
+                emd_ensure!(
                     json.get("ok") == Some(&Json::Bool(true)),
                     "server error: {line}"
                 );

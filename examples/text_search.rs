@@ -8,15 +8,14 @@
 
 use std::time::Instant;
 
-use emdpar::core::Metric;
 use emdpar::data::{generate_text, TextConfig};
 use emdpar::eval::{precision_at, render_markdown, sweep_all_pairs};
 use emdpar::exact::wmd_topl_pruned;
-use emdpar::lc::{EngineParams, Method};
+use emdpar::prelude::{EmdResult, EngineParams, Method, Metric};
 use emdpar::util::cli::CommandSpec;
 use emdpar::util::stats::fmt_duration;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> EmdResult<()> {
     let spec = CommandSpec::new("text_search", "Fig. 8(a): 20News runtime vs accuracy")
         .opt("n", "2000", "corpus size")
         .opt("vocab", "8000", "vocabulary size")
@@ -71,7 +70,7 @@ fn main() -> anyhow::Result<()> {
         &methods,
         &ls,
         EngineParams { threads, ..Default::default() },
-    );
+    )?;
     println!("{}", render_markdown("Fig. 8(a) — runtime vs accuracy (all-pairs)", &rows));
 
     // exact WMD on a query subset (the paper's 4-orders-of-magnitude foil)

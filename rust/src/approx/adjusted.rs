@@ -1,0 +1,115 @@
+//! "BoW-adjusted" lower bound: the cheapest member of the bound chain.
+//!
+//! Directed form: the mass of `p` sitting on coordinates *outside* `q`'s
+//! support (a pure bag-of-words quantity) times the minimum ground distance
+//! from any such coordinate into `q`'s support.  Since directed RWMD ships
+//! each of those bins to its *own* nearest destination at a cost at least
+//! that minimum, and overlapping bins ship for free,
+//!
+//! ```text
+//! bow_adjusted_directed(p, q) <= rwmd_directed(p, q)
+//! ```
+//!
+//! holds bin-by-bin, which extends the Theorem-2 chain downwards:
+//! BoW-adj <= RWMD <= OMR <= ACT-k <= ICT <= EMD.
+
+use crate::core::{support_cost_matrix, Embeddings, Histogram, Metric};
+
+/// One-directional BoW-adjusted bound (normalizes internally).
+pub fn bow_adjusted_directed(
+    vocab: &Embeddings,
+    p: &Histogram,
+    q: &Histogram,
+    metric: Metric,
+) -> f64 {
+    let pn = p.normalized();
+    let qn = q.normalized();
+    if pn.is_empty() || qn.is_empty() {
+        return 0.0;
+    }
+    let cost = support_cost_matrix(vocab, pn.indices(), qn.indices(), metric);
+    let hq = qn.len();
+    let qi = qn.indices();
+    let mut mass_out = 0.0f64;
+    let mut cmin = f64::INFINITY;
+    for (i, (&pi, &pw)) in pn.indices().iter().zip(pn.weights()).enumerate() {
+        if qi.binary_search(&pi).is_ok() {
+            continue; // overlapping bin: ships for free under RWMD too
+        }
+        mass_out += pw as f64;
+        for &c in &cost[i * hq..(i + 1) * hq] {
+            if (c as f64) < cmin {
+                cmin = c as f64;
+            }
+        }
+    }
+    if mass_out == 0.0 || !cmin.is_finite() {
+        0.0
+    } else {
+        mass_out * cmin
+    }
+}
+
+/// Symmetric BoW-adjusted bound = max of the two directions.
+pub fn bow_adjusted_symmetric(
+    vocab: &Embeddings,
+    p: &Histogram,
+    q: &Histogram,
+    metric: Metric,
+) -> f64 {
+    bow_adjusted_directed(vocab, p, q, metric).max(bow_adjusted_directed(vocab, q, p, metric))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::rwmd::{rwmd_directed, rwmd_symmetric};
+    use crate::util::rng::Rng;
+
+    fn vocab_line() -> Embeddings {
+        Embeddings::new(vec![0.0, 1.0, 2.0, 3.0], 4, 1)
+    }
+
+    #[test]
+    fn disjoint_singletons_equal_ground_distance() {
+        let vocab = vocab_line();
+        let p = Histogram::from_pairs(vec![(0, 1.0)]);
+        let q = Histogram::from_pairs(vec![(3, 1.0)]);
+        assert!((bow_adjusted_directed(&vocab, &p, &q, Metric::L2) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_overlap_is_zero() {
+        let vocab = vocab_line();
+        let p = Histogram::from_pairs(vec![(0, 0.7), (1, 0.3)]);
+        let q = Histogram::from_pairs(vec![(0, 0.3), (1, 0.7)]);
+        assert_eq!(bow_adjusted_symmetric(&vocab, &p, &q, Metric::L2), 0.0);
+    }
+
+    #[test]
+    fn lower_bounds_rwmd_on_random_pairs() {
+        let mut rng = Rng::new(0xB0A);
+        for case in 0..50 {
+            let v = 20;
+            let m = 3;
+            let data: Vec<f32> = (0..v * m).map(|_| rng.normal() as f32).collect();
+            let vocab = Embeddings::new(data, v, m);
+            let mk = |rng: &mut Rng| {
+                let idx = rng.sample_indices(v, 6);
+                Histogram::from_pairs(
+                    idx.into_iter()
+                        .map(|i| (i as u32, rng.range_f64(0.05, 1.0) as f32))
+                        .collect(),
+                )
+            };
+            let p = mk(&mut rng);
+            let q = mk(&mut rng);
+            let adj = bow_adjusted_directed(&vocab, &p, &q, Metric::L2);
+            let rwmd = rwmd_directed(&vocab, &p, &q, Metric::L2);
+            assert!(adj <= rwmd + 1e-9, "case {case}: adj {adj} > rwmd {rwmd}");
+            let adj_s = bow_adjusted_symmetric(&vocab, &p, &q, Metric::L2);
+            let rwmd_s = rwmd_symmetric(&vocab, &p, &q, Metric::L2);
+            assert!(adj_s <= rwmd_s + 1e-9, "case {case}: sym {adj_s} > {rwmd_s}");
+        }
+    }
+}

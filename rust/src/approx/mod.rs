@@ -3,6 +3,7 @@
 //! the semantics the linear-complexity engines in [`crate::lc`] must match.
 
 pub mod act;
+pub mod adjusted;
 pub mod bow;
 pub mod ict;
 pub mod omr;
@@ -11,6 +12,7 @@ pub mod sinkhorn;
 pub mod wcd;
 
 pub use act::{act_directed, act_symmetric, act_with_cost};
+pub use adjusted::{bow_adjusted_directed, bow_adjusted_symmetric};
 pub use bow::{bow_distance, bow_distances_batch, cosine_similarity};
 pub use ict::{ict_directed, ict_symmetric, ict_with_cost};
 pub use omr::{omr_directed, omr_symmetric, omr_with_cost};

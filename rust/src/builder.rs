@@ -1,0 +1,233 @@
+//! Fluent construction of the engine stack: dataset → params → backend →
+//! build.
+//!
+//! [`EngineBuilder`] is the one place that turns configuration into running
+//! engines, whichever layer you need:
+//!
+//! * [`EngineBuilder::build_lc`] — the batched CPU [`LcEngine`] (library /
+//!   evaluation use);
+//! * [`EngineBuilder::build_search`] — the coordinator-owned
+//!   [`SearchEngine`] (serving use, optionally PJRT-backed);
+//! * [`EngineBuilder::registry`] — the matching [`MethodRegistry`] for
+//!   per-pair trait objects.
+//!
+//! ```no_run
+//! use emdpar::prelude::*;
+//!
+//! let engine = EngineBuilder::new()
+//!     .dataset_spec(DatasetSpec::SynthMnist { n: 1000, background: 0.0, seed: 42 })
+//!     .method(Method::Act { k: 2 })
+//!     .threads(8)
+//!     .build_search()?;
+//! # Ok::<(), EmdError>(())
+//! ```
+
+use std::sync::Arc;
+
+use crate::config::{Backend, Config, DatasetSpec};
+use crate::core::{Dataset, EmdResult, Method, MethodRegistry, Metric};
+use crate::coordinator::SearchEngine;
+use crate::lc::{EngineParams, LcEngine};
+
+/// Builder for the engine stack.  Starts from [`Config::default`] (or a
+/// loaded config via [`EngineBuilder::from_config`]); every setter overrides
+/// one field; `build_*` materializes the dataset and constructs the engine.
+#[derive(Debug, Clone)]
+pub struct EngineBuilder {
+    config: Config,
+    dataset: Option<Arc<Dataset>>,
+}
+
+impl EngineBuilder {
+    pub fn new() -> EngineBuilder {
+        EngineBuilder { config: Config::default(), dataset: None }
+    }
+
+    /// Start from an existing config (e.g. loaded from JSON + CLI flags).
+    pub fn from_config(config: Config) -> EngineBuilder {
+        EngineBuilder { config, dataset: None }
+    }
+
+    /// Use an already-materialized dataset (shared, not copied).
+    pub fn dataset(mut self, dataset: Arc<Dataset>) -> EngineBuilder {
+        self.dataset = Some(dataset);
+        self
+    }
+
+    /// Describe the dataset to load/generate at build time.
+    pub fn dataset_spec(mut self, spec: DatasetSpec) -> EngineBuilder {
+        self.config.dataset = spec;
+        self.dataset = None;
+        self
+    }
+
+    pub fn method(mut self, method: Method) -> EngineBuilder {
+        self.config.method = method;
+        self
+    }
+
+    pub fn metric(mut self, metric: Metric) -> EngineBuilder {
+        self.config.metric = metric;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> EngineBuilder {
+        self.config.threads = threads.max(1);
+        self
+    }
+
+    pub fn symmetric(mut self, symmetric: bool) -> EngineBuilder {
+        self.config.symmetric = symmetric;
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> EngineBuilder {
+        self.config.backend = backend;
+        self
+    }
+
+    pub fn topl(mut self, l: usize) -> EngineBuilder {
+        self.config.topl = l.max(1);
+        self
+    }
+
+    pub fn shards(mut self, shards: usize) -> EngineBuilder {
+        self.config.shards = shards.max(1);
+        self
+    }
+
+    pub fn listen(mut self, addr: impl Into<String>) -> EngineBuilder {
+        self.config.listen = addr.into();
+        self
+    }
+
+    pub fn max_batch(mut self, max_batch: usize) -> EngineBuilder {
+        self.config.max_batch = max_batch.max(1);
+        self
+    }
+
+    pub fn linger_ms(mut self, linger_ms: u64) -> EngineBuilder {
+        self.config.linger_ms = linger_ms;
+        self
+    }
+
+    /// The effective configuration so far.
+    pub fn config(&self) -> &Config {
+        &self.config
+    }
+
+    /// A [`MethodRegistry`] matching this builder's ground metric.
+    pub fn registry(&self) -> MethodRegistry {
+        MethodRegistry::new(self.config.metric)
+    }
+
+    fn materialize(&self) -> EmdResult<Arc<Dataset>> {
+        match &self.dataset {
+            Some(ds) => Ok(Arc::clone(ds)),
+            None => Ok(Arc::new(self.config.load_dataset()?)),
+        }
+    }
+
+    /// Validate, materialize the dataset, and build the batched CPU engine.
+    pub fn build_lc(self) -> EmdResult<LcEngine> {
+        self.config.validate()?;
+        let dataset = self.materialize()?;
+        Ok(LcEngine::new(
+            dataset,
+            EngineParams {
+                metric: self.config.metric,
+                threads: self.config.threads,
+                symmetric: self.config.symmetric,
+            },
+        ))
+    }
+
+    /// Validate, materialize the dataset, and build the serving engine
+    /// (connects the PJRT runtime when `backend = artifact`).
+    pub fn build_search(self) -> EmdResult<SearchEngine> {
+        self.config.validate()?;
+        let dataset = self.materialize()?;
+        SearchEngine::with_dataset(self.config, dataset)
+    }
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Distance, Histogram};
+
+    fn spec() -> DatasetSpec {
+        DatasetSpec::SynthText { n: 24, vocab: 120, dim: 6, seed: 9 }
+    }
+
+    #[test]
+    fn builds_lc_engine_with_overrides() {
+        let eng = EngineBuilder::new()
+            .dataset_spec(spec())
+            .metric(Metric::L2)
+            .threads(2)
+            .symmetric(false)
+            .build_lc()
+            .unwrap();
+        assert_eq!(eng.dataset().len(), 24);
+        assert_eq!(eng.params().threads, 2);
+        assert!(!eng.params().symmetric);
+        let row = eng.distances(&eng.dataset().histogram(0), Method::Rwmd);
+        assert_eq!(row.len(), 24);
+    }
+
+    #[test]
+    fn builds_search_engine_and_searches() {
+        let eng = EngineBuilder::new()
+            .dataset_spec(spec())
+            .method(Method::Act { k: 2 })
+            .threads(2)
+            .topl(3)
+            .shards(2)
+            .build_search()
+            .unwrap();
+        let q = eng.dataset().histogram(1);
+        let res = eng.search(&q, eng.config().method, eng.config().topl).unwrap();
+        assert_eq!(res.hits.len(), 3);
+        assert_eq!(res.hits[0].1, 1);
+    }
+
+    #[test]
+    fn shared_dataset_is_not_copied() {
+        let ds = Arc::new(
+            Config { dataset: spec(), ..Default::default() }.load_dataset().unwrap(),
+        );
+        let eng = EngineBuilder::new().dataset(Arc::clone(&ds)).threads(1).build_lc().unwrap();
+        assert_eq!(eng.dataset().len(), ds.len());
+        // 1 here + 1 in the engine
+        assert_eq!(Arc::strong_count(&ds), 2);
+    }
+
+    #[test]
+    fn invalid_config_is_rejected_at_build() {
+        let err = EngineBuilder::new()
+            .dataset_spec(spec())
+            .method(Method::Act { k: 1000 })
+            .build_lc();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn builder_registry_serves_every_method() {
+        let b = EngineBuilder::new().dataset_spec(spec());
+        let registry = b.registry();
+        let eng = b.build_lc().unwrap();
+        let q: Histogram = eng.dataset().histogram(0);
+        for m in MethodRegistry::methods() {
+            let d = registry.distance(m);
+            let v = d.distance(&eng.dataset().embeddings, &q, &q).unwrap();
+            assert!(v.is_finite(), "{m}");
+        }
+    }
+}

@@ -2,14 +2,13 @@
 //!
 //! One [`Config`] drives the whole stack (dataset selection/generation,
 //! engine parameters, coordinator/server behaviour, artifact runtime).  See
-//! `examples/config.sample.json` for a template.
+//! `examples/config.sample.json` for a template.  Method and metric strings
+//! are parsed by the canonical implementations in [`crate::core`].
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Result};
-
-use crate::core::Metric;
-use crate::lc::Method;
+use crate::core::{EmdError, EmdResult, Method, Metric};
+use crate::emd_ensure;
 use crate::util::cli::Parsed;
 use crate::util::json::Json;
 
@@ -23,11 +22,11 @@ pub enum Backend {
 }
 
 impl Backend {
-    pub fn parse(s: &str) -> Result<Backend> {
+    pub fn parse(s: &str) -> EmdResult<Backend> {
         match s.to_ascii_lowercase().as_str() {
             "native" => Ok(Backend::Native),
             "artifact" | "pjrt" => Ok(Backend::Artifact),
-            other => bail!("unknown backend '{other}' (native|artifact)"),
+            _ => Err(EmdError::parse("backend", s, "native | artifact")),
         }
     }
 }
@@ -88,23 +87,25 @@ impl Default for Config {
 
 impl Config {
     /// Load from a JSON file (all fields optional; defaults fill the rest).
-    pub fn from_file(path: &Path) -> Result<Config> {
+    pub fn from_file(path: &Path) -> EmdResult<Config> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow!("reading config {path:?}: {e}"))?;
-        let json = Json::parse(&text).map_err(|e| anyhow!("parsing config {path:?}: {e}"))?;
+            .map_err(|e| EmdError::io(format!("reading config {path:?}: {e}")))?;
+        let json = Json::parse(&text)
+            .map_err(|e| EmdError::json(format!("parsing config {path:?}: {e}")))?;
         Self::from_json(&json)
     }
 
-    pub fn from_json(json: &Json) -> Result<Config> {
+    pub fn from_json(json: &Json) -> EmdResult<Config> {
         let mut cfg = Config::default();
         if let Some(d) = json.get("dataset") {
             cfg.dataset = parse_dataset(d)?;
         }
         if let Some(s) = json.get("method").and_then(Json::as_str) {
-            cfg.method = Method::parse(s).ok_or_else(|| anyhow!("bad method '{s}'"))?;
+            cfg.method = Method::parse(s)?;
         }
         if let Some(s) = json.get("metric").and_then(Json::as_str) {
-            cfg.metric = Metric::parse(s).ok_or_else(|| anyhow!("bad metric '{s}'"))?;
+            cfg.metric = Metric::parse(s)
+                .ok_or_else(|| EmdError::parse("metric", s, "l2 | sql2 | l1 | cosine"))?;
         }
         if let Some(x) = json.get("threads").and_then(Json::as_usize) {
             cfg.threads = x.max(1);
@@ -141,15 +142,18 @@ impl Config {
     }
 
     /// Apply CLI overrides (`--method`, `--threads`, ...) from parsed args.
-    pub fn apply_cli(&mut self, args: &Parsed) -> Result<()> {
+    pub fn apply_cli(&mut self, args: &Parsed) -> EmdResult<()> {
         if let Some(s) = args.opt_str("method") {
             if !s.is_empty() {
-                self.method = Method::parse(s).ok_or_else(|| anyhow!("bad method '{s}'"))?;
+                self.method = Method::parse(s)?;
             }
         }
         if let Some(s) = args.opt_str("threads") {
             if !s.is_empty() {
-                self.threads = s.parse::<usize>().map_err(|_| anyhow!("bad --threads"))?.max(1);
+                self.threads = s
+                    .parse::<usize>()
+                    .map_err(|_| EmdError::config(format!("bad --threads '{s}'")))?
+                    .max(1);
             }
         }
         if let Some(s) = args.opt_str("backend") {
@@ -159,7 +163,10 @@ impl Config {
         }
         if let Some(s) = args.opt_str("topl") {
             if !s.is_empty() {
-                self.topl = s.parse::<usize>().map_err(|_| anyhow!("bad --topl"))?.max(1);
+                self.topl = s
+                    .parse::<usize>()
+                    .map_err(|_| EmdError::config(format!("bad --topl '{s}'")))?
+                    .max(1);
             }
         }
         if let Some(s) = args.opt_str("dataset") {
@@ -170,18 +177,18 @@ impl Config {
         self.validate()
     }
 
-    pub fn validate(&self) -> Result<()> {
-        anyhow::ensure!(self.threads >= 1, "threads must be >= 1");
-        anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
-        anyhow::ensure!(self.shards >= 1, "shards must be >= 1");
+    pub fn validate(&self) -> EmdResult<()> {
+        emd_ensure!(self.threads >= 1, config, "threads must be >= 1");
+        emd_ensure!(self.max_batch >= 1, config, "max_batch must be >= 1");
+        emd_ensure!(self.shards >= 1, config, "shards must be >= 1");
         if let Method::Act { k } = self.method {
-            anyhow::ensure!(k >= 1 && k <= 64, "ACT k must be in [1, 64], got {k}");
+            emd_ensure!(k >= 1 && k <= 64, config, "ACT k must be in [1, 64], got {k}");
         }
         Ok(())
     }
 
     /// Materialize the dataset this config describes.
-    pub fn load_dataset(&self) -> Result<crate::core::Dataset> {
+    pub fn load_dataset(&self) -> EmdResult<crate::core::Dataset> {
         Ok(match &self.dataset {
             DatasetSpec::File(path) => crate::data::load(path)?,
             DatasetSpec::SynthMnist { n, background, seed } => {
@@ -205,21 +212,21 @@ impl Config {
     }
 }
 
-fn parse_dataset(j: &Json) -> Result<DatasetSpec> {
+fn parse_dataset(j: &Json) -> EmdResult<DatasetSpec> {
     if let Some(s) = j.as_str() {
         return parse_dataset_str(s);
     }
     let kind = j
         .get("kind")
         .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("dataset object needs 'kind'"))?;
+        .ok_or_else(|| EmdError::config("dataset object needs 'kind'"))?;
     let n = j.get("n").and_then(Json::as_usize).unwrap_or(1000);
     let seed = j.get("seed").and_then(Json::as_usize).unwrap_or(42) as u64;
     Ok(match kind {
         "file" => DatasetSpec::File(PathBuf::from(
             j.get("path")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("file dataset needs 'path'"))?,
+                .ok_or_else(|| EmdError::config("file dataset needs 'path'"))?,
         )),
         "synth-mnist" => DatasetSpec::SynthMnist {
             n,
@@ -232,18 +239,20 @@ fn parse_dataset(j: &Json) -> Result<DatasetSpec> {
             dim: j.get("dim").and_then(Json::as_usize).unwrap_or(64),
             seed,
         },
-        other => bail!("unknown dataset kind '{other}'"),
+        other => {
+            return Err(EmdError::parse("dataset kind", other, "file | synth-mnist | synth-text"))
+        }
     })
 }
 
 /// CLI shorthand: `path.bin` | `synth-mnist:<n>` | `synth-text:<n>`.
-fn parse_dataset_str(s: &str) -> Result<DatasetSpec> {
+fn parse_dataset_str(s: &str) -> EmdResult<DatasetSpec> {
     if let Some(rest) = s.strip_prefix("synth-mnist") {
         let n = rest
             .strip_prefix(':')
             .map(|r| r.parse())
             .transpose()
-            .map_err(|_| anyhow!("bad synth-mnist size"))?
+            .map_err(|_| EmdError::config("bad synth-mnist size"))?
             .unwrap_or(1000);
         return Ok(DatasetSpec::SynthMnist { n, background: 0.0, seed: 42 });
     }
@@ -252,7 +261,7 @@ fn parse_dataset_str(s: &str) -> Result<DatasetSpec> {
             .strip_prefix(':')
             .map(|r| r.parse())
             .transpose()
-            .map_err(|_| anyhow!("bad synth-text size"))?
+            .map_err(|_| EmdError::config("bad synth-text size"))?
             .unwrap_or(1000);
         return Ok(DatasetSpec::SynthText { n, vocab: 8000, dim: 64, seed: 1234 });
     }
@@ -289,6 +298,15 @@ mod tests {
     fn bad_method_rejected() {
         let j = Json::parse(r#"{"method": "magic"}"#).unwrap();
         assert!(Config::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn sinkhorn_and_exact_are_configurable() {
+        // the comparators flow through the same canonical parser
+        for (s, want) in [("sinkhorn", Method::Sinkhorn), ("emd", Method::Exact)] {
+            let j = Json::parse(&format!(r#"{{"method": "{s}"}}"#)).unwrap();
+            assert_eq!(Config::from_json(&j).unwrap().method, want);
+        }
     }
 
     #[test]

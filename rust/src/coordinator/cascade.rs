@@ -5,31 +5,24 @@
 //! RWMD prefilter before FastEMD).  This module packages the idea as a
 //! coordinator feature over the LC engines: stage 1 scores the whole
 //! database with a cheap bound (LC-RWMD), keeps the `l * overfetch` best
-//! candidates, and stage 2 re-scores only those with a tighter measure
-//! (ACT-k, ICT-quality, or exact EMD).
+//! candidates, and stage 2 re-scores only those with a tighter measure —
+//! any canonical [`Method`] that dominates RWMD (ACT-k, ICT, Sinkhorn,
+//! exact EMD), resolved through the [`MethodRegistry`] so new measures plug
+//! in without touching this file.
 //!
-//! Because every stage-1 measure is a *lower bound* of every stage-2
-//! measure (Theorem 2), a candidate can only move *up* in distance during
-//! rerank — so with `overfetch` large enough the cascade is exact, and the
-//! stage-1 threshold gives a certificate: any document whose stage-1 bound
-//! exceeds the final ℓ-th distance could never have entered the top-ℓ.
+//! For the Theorem-2 measures (OMR, ACT-k, ICT, exact EMD) the stage-1
+//! measure is a *provable lower bound* of the stage-2 measure, so a
+//! candidate can only move *up* in distance during rerank — with
+//! `overfetch` large enough the cascade is exact, and the stage-1
+//! threshold gives a certificate: any document whose stage-1 bound exceeds
+//! the final ℓ-th distance could never have entered the top-ℓ.  Sinkhorn is
+//! admissible as a rerank measure but its non-converged plans carry no
+//! bound guarantee, so it reranks every candidate and is never certified.
 
-use anyhow::Result;
-
-use crate::core::{Histogram, Metric};
-use crate::exact::emd;
-use crate::lc::{LcEngine, Method};
+use crate::core::{Distance, EmdError, EmdResult, Histogram, Method};
+use crate::lc::LcEngine;
 
 use super::topl::TopL;
-
-/// Rerank measure for stage 2.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Rerank {
-    /// LC-ACT with the given k (fast, still a lower bound of EMD).
-    Act { k: usize },
-    /// Exact EMD (the paper's "WMD" quality level).
-    Exact,
-}
 
 /// Cascade outcome with work accounting.
 #[derive(Debug, Clone)]
@@ -44,14 +37,41 @@ pub struct CascadeResult {
     pub certified: bool,
 }
 
+/// Whether `method` is admissible as a stage-2 rerank measure: it must be
+/// at least as tight as the stage-1 RWMD prefilter.
+pub fn admissible_rerank(method: Method) -> bool {
+    match method {
+        Method::Omr | Method::Act { .. } | Method::Ict | Method::Sinkhorn | Method::Exact => true,
+        Method::Bow | Method::BowAdjusted | Method::Wcd | Method::Rwmd => false,
+    }
+}
+
+/// Whether the stage-1 RWMD bound provably lower-bounds `method` pointwise
+/// (Theorem 2).  Only then are the candidate-skip prune and the exactness
+/// certificate sound.  Sinkhorn upper-bounds EMD *at convergence*, but a
+/// non-converged plan's cost carries no such guarantee, so Sinkhorn reranks
+/// every candidate and never claims a certificate.
+fn provably_dominates_rwmd(method: Method) -> bool {
+    matches!(method, Method::Omr | Method::Act { .. } | Method::Ict | Method::Exact)
+}
+
 /// Two-stage search: LC-RWMD prefilter, `rerank` on the survivors.
+///
+/// The rerank measure is looked up in the engine's [`MethodRegistry`] —
+/// Sinkhorn and exact EMD are selected exactly like ACT-k.
 pub fn cascade_search(
     engine: &LcEngine,
     query: &Histogram,
-    rerank: Rerank,
+    rerank: Method,
     l: usize,
     overfetch: usize,
-) -> Result<CascadeResult> {
+) -> EmdResult<CascadeResult> {
+    if !admissible_rerank(rerank) {
+        return Err(EmdError::unsupported(format!(
+            "rerank method {} does not dominate the RWMD prefilter bound",
+            rerank.name()
+        )));
+    }
     let n = engine.dataset().len();
     let l = l.min(n).max(1);
     let keep = (l * overfetch.max(1)).min(n);
@@ -75,54 +95,42 @@ pub fn cascade_search(
         f32::INFINITY
     };
 
-    // stage 2: tighter measure on the survivors only
+    // stage 2: tighter measure on the survivors only, via the registry's
+    // boxed per-pair Distance object
+    let lower_bounded = provably_dominates_rwmd(rerank);
+    let dist = engine.registry().distance(rerank);
+    let vocab = &engine.dataset().embeddings;
+    let qn = query.normalized();
     let mut out = TopL::new(l);
     let mut reranked = 0usize;
-    match rerank {
-        Rerank::Act { k } => {
-            // ACT over the full DB is already linear; but here we only pay
-            // the per-pair form for the candidate set, which wins when
-            // keep << n and k is large.
-            let qn = query.normalized();
-            for &(_, u) in &candidates {
-                let doc = engine.dataset().histogram(u);
-                let d = crate::approx::act_directed(
-                    &engine.dataset().embeddings,
-                    &doc,
-                    &qn,
-                    Metric::L2,
-                    k,
-                ) as f32;
-                out.push(d, u);
-                reranked += 1;
-            }
-        }
-        Rerank::Exact => {
-            for &(lb, u) in &candidates {
-                // classic bound pruning: skip when the lower bound already
-                // exceeds the current l-th best exact distance
-                if let Some(t) = out.threshold() {
-                    if lb >= t {
-                        continue;
-                    }
+    for &(lb, u) in &candidates {
+        // classic bound pruning: skip when the stage-1 lower bound already
+        // exceeds the current l-th best reranked distance — sound only for
+        // measures RWMD provably lower-bounds
+        if lower_bounded {
+            if let Some(t) = out.threshold() {
+                if lb >= t {
+                    continue;
                 }
-                let doc = engine.dataset().histogram(u);
-                let d = emd(&engine.dataset().embeddings, &query.normalized(), &doc, Metric::L2)
-                    as f32;
-                out.push(d, u);
-                reranked += 1;
             }
         }
+        let doc = engine.dataset().histogram(u);
+        let d = dist.distance(vocab, &doc, &qn)? as f32;
+        out.push(d, u);
+        reranked += 1;
     }
     let hits = out.into_sorted();
-    let certified = hits.last().map(|&(d, _)| d <= pruned_floor).unwrap_or(true);
+    let certified =
+        lower_bounded && hits.last().map(|&(d, _)| d <= pruned_floor).unwrap_or(true);
     Ok(CascadeResult { hits, reranked, certified })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::Metric;
     use crate::data::{generate_mnist, MnistConfig};
+    use crate::exact::emd;
     use crate::lc::EngineParams;
     use std::sync::Arc;
 
@@ -135,7 +143,7 @@ mod tests {
     fn cascade_exact_matches_bruteforce_emd_ranking() {
         let eng = engine();
         let q = eng.dataset().histogram(0);
-        let res = cascade_search(&eng, &q, Rerank::Exact, 3, 8).unwrap();
+        let res = cascade_search(&eng, &q, Method::Exact, 3, 8).unwrap();
         assert_eq!(res.hits.len(), 3);
         // brute force
         let mut brute: Vec<(f32, usize)> = (0..eng.dataset().len())
@@ -164,9 +172,39 @@ mod tests {
         let eng = engine();
         let q = eng.dataset().histogram(5);
         let stage1 = eng.distances(&q, Method::Rwmd);
-        let res = cascade_search(&eng, &q, Rerank::Act { k: 8 }, 4, 4).unwrap();
+        let res = cascade_search(&eng, &q, Method::Act { k: 8 }, 4, 4).unwrap();
         for &(d, u) in &res.hits {
             assert!(d + 1e-5 >= stage1[u], "rerank must not go below the lower bound");
+        }
+    }
+
+    #[test]
+    fn sinkhorn_and_ict_rerank_through_registry() {
+        let eng = engine();
+        let q = eng.dataset().histogram(3);
+        let stage1 = eng.distances(&q, Method::Rwmd);
+        for rerank in [Method::Sinkhorn, Method::Ict] {
+            let res = cascade_search(&eng, &q, rerank, 3, 4).unwrap();
+            assert_eq!(res.hits.len(), 3, "{rerank}");
+        }
+        // ICT carries the Theorem-2 guarantee: never below the prefilter
+        let res = cascade_search(&eng, &q, Method::Ict, 3, 4).unwrap();
+        for &(d, u) in &res.hits {
+            assert!(d + 1e-4 >= stage1[u], "ICT rerank below stage-1 bound");
+        }
+        // Sinkhorn has no bound guarantee: every candidate is rescored and
+        // no exactness certificate is claimed
+        let res = cascade_search(&eng, &q, Method::Sinkhorn, 3, 4).unwrap();
+        assert_eq!(res.reranked, 3 * 4);
+        assert!(!res.certified);
+    }
+
+    #[test]
+    fn non_dominating_rerank_is_rejected() {
+        let eng = engine();
+        let q = eng.dataset().histogram(4);
+        for bad in [Method::Bow, Method::Wcd, Method::Rwmd, Method::BowAdjusted] {
+            assert!(cascade_search(&eng, &q, bad, 3, 2).is_err(), "{bad}");
         }
     }
 
@@ -174,16 +212,16 @@ mod tests {
     fn overfetch_one_still_returns_l() {
         let eng = engine();
         let q = eng.dataset().histogram(1);
-        let res = cascade_search(&eng, &q, Rerank::Act { k: 2 }, 5, 1).unwrap();
+        let res = cascade_search(&eng, &q, Method::Act { k: 2 }, 5, 1).unwrap();
         assert_eq!(res.hits.len(), 5);
-        assert_eq!(res.reranked, 5);
+        assert!(res.reranked >= 5);
     }
 
     #[test]
     fn full_overfetch_is_always_certified() {
         let eng = engine();
         let q = eng.dataset().histogram(2);
-        let res = cascade_search(&eng, &q, Rerank::Act { k: 4 }, 3, usize::MAX / 4).unwrap();
+        let res = cascade_search(&eng, &q, Method::Act { k: 4 }, 3, usize::MAX / 4).unwrap();
         assert!(res.certified);
     }
 }

@@ -1,16 +1,15 @@
 //! Search-engine façade: one object that owns the dataset, answers top-ℓ
 //! queries through either backend (native CPU LC engine or the PJRT
 //! artifact runtime), and records metrics.  This is what the server, the
-//! CLI and the examples all drive.
+//! CLI and the examples all drive.  Construct it through
+//! [`crate::builder::EngineBuilder`] or from a [`Config`].
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
-
 use crate::config::{Backend, Config};
-use crate::core::{Dataset, Histogram};
-use crate::lc::{EngineParams, LcEngine, Method};
+use crate::core::{Dataset, EmdError, EmdResult, Histogram, Method, MethodRegistry};
+use crate::lc::{EngineParams, LcEngine};
 use crate::runtime::{ArtifactEngine, Executor};
 
 use super::metrics::Metrics;
@@ -34,7 +33,7 @@ pub struct SearchEngine {
     router: Router,
     /// cached native engine (precomputed norms/centroids) — building it per
     /// query would redo O(nnz·m) work on the request path
-    native: LcEngine,
+    native: Arc<LcEngine>,
     executor: Option<Executor>,
     artifact_profile: Option<String>,
 }
@@ -42,13 +41,13 @@ pub struct SearchEngine {
 impl SearchEngine {
     /// Build from a config (loads/generates the dataset; connects the PJRT
     /// runtime when `backend = artifact`).
-    pub fn from_config(config: Config) -> Result<SearchEngine> {
+    pub fn from_config(config: Config) -> EmdResult<SearchEngine> {
         let dataset = Arc::new(config.load_dataset()?);
         Self::with_dataset(config, dataset)
     }
 
     /// Build around an existing dataset (used by tests and examples).
-    pub fn with_dataset(config: Config, dataset: Arc<Dataset>) -> Result<SearchEngine> {
+    pub fn with_dataset(config: Config, dataset: Arc<Dataset>) -> EmdResult<SearchEngine> {
         let router = Router::new(dataset.len(), config.shards);
         let (executor, artifact_profile) = if config.backend == Backend::Artifact {
             let exec = Executor::new(&config.artifact_dir)?;
@@ -67,12 +66,11 @@ impl SearchEngine {
                         .into_iter()
                         .next()
                         .ok_or_else(|| {
-                            anyhow!(
+                            EmdError::artifact(format!(
                                 "no artifact profile fits v={} m={} h<={hmax}; \
                                  regenerate with `make artifacts`",
-                                stats.vocab_size,
-                                stats.dim
-                            )
+                                stats.vocab_size, stats.dim
+                            ))
                         })?
                 }
             };
@@ -80,14 +78,14 @@ impl SearchEngine {
         } else {
             (None, None)
         };
-        let native = LcEngine::new(
+        let native = Arc::new(LcEngine::new(
             Arc::clone(&dataset),
             EngineParams {
                 metric: config.metric,
                 threads: config.threads,
                 symmetric: config.symmetric,
             },
-        );
+        ));
         Ok(SearchEngine {
             dataset,
             config,
@@ -111,8 +109,18 @@ impl SearchEngine {
         &self.config
     }
 
+    /// The cached native LC engine (shared handle, e.g. for cascades).
+    pub fn native(&self) -> Arc<LcEngine> {
+        Arc::clone(&self.native)
+    }
+
+    /// A registry configured with this engine's ground metric.
+    pub fn registry(&self) -> MethodRegistry {
+        self.native.registry()
+    }
+
     /// Full distance row for a query under the configured backend.
-    pub fn distances(&self, query: &Histogram, method: Method) -> Result<Vec<f32>> {
+    pub fn distances(&self, query: &Histogram, method: Method) -> EmdResult<Vec<f32>> {
         match self.config.backend {
             Backend::Native => Ok(self.native.distances(query, method)),
             Backend::Artifact => {
@@ -123,10 +131,10 @@ impl SearchEngine {
                     Method::Rwmd => 1,
                     Method::Act { k } => k,
                     other => {
-                        anyhow::bail!(
+                        return Err(EmdError::unsupported(format!(
                             "artifact backend supports RWMD/ACT, not {}",
                             other.name()
-                        )
+                        )))
                     }
                 };
                 art.distances(query, k, self.config.symmetric)
@@ -135,7 +143,7 @@ impl SearchEngine {
     }
 
     /// Top-ℓ search with shard-merge (the request-path entry point).
-    pub fn search(&self, query: &Histogram, method: Method, l: usize) -> Result<SearchResult> {
+    pub fn search(&self, query: &Histogram, method: Method, l: usize) -> EmdResult<SearchResult> {
         let t0 = Instant::now();
         let row = self.distances(query, method)?;
         let mut acc = TopL::new(l);
@@ -158,7 +166,7 @@ impl SearchEngine {
         queries: &[Histogram],
         method: Method,
         l: usize,
-    ) -> Result<Vec<SearchResult>> {
+    ) -> EmdResult<Vec<SearchResult>> {
         self.metrics.record_batch();
         queries.iter().map(|q| self.search(q, method, l)).collect()
     }
@@ -223,5 +231,26 @@ mod tests {
             m.distance_evals.load(std::sync::atomic::Ordering::Relaxed),
             2 * 40
         );
+    }
+
+    #[test]
+    fn quadratic_comparators_are_searchable() {
+        // Sinkhorn and exact EMD answer top-ℓ queries through the same
+        // engine entry point as the LC methods.
+        let config = Config {
+            dataset: DatasetSpec::SynthText { n: 16, vocab: 100, dim: 6, seed: 5 },
+            threads: 2,
+            ..Default::default()
+        };
+        let eng = SearchEngine::from_config(config).unwrap();
+        let q = eng.dataset().histogram(3);
+        for method in [Method::Exact, Method::Sinkhorn, Method::Ict] {
+            let res = eng.search(&q, method, 4).unwrap();
+            assert_eq!(res.hits.len(), 4, "{method}");
+            assert!(res.hits.windows(2).all(|w| w[0].0 <= w[1].0), "{method}");
+        }
+        // exact EMD must rank the query itself first
+        let res = eng.search(&q, Method::Exact, 4).unwrap();
+        assert_eq!(res.hits[0].1, 3);
     }
 }

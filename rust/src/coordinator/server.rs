@@ -21,10 +21,8 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
-
-use crate::core::Histogram;
-use crate::lc::Method;
+use crate::core::{EmdError, EmdResult, Histogram, Method};
+use crate::emd_ensure;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 
@@ -51,7 +49,7 @@ pub struct Server {
 impl Server {
     /// Bind and spawn the batch-dispatch thread.  `addr` may use port 0 for
     /// an ephemeral port (tests); see [`Server::local_addr`].
-    pub fn bind(engine: SearchEngine, addr: &str) -> Result<Server> {
+    pub fn bind(engine: SearchEngine, addr: &str) -> EmdResult<Server> {
         let engine = Arc::new(engine);
         let listener = TcpListener::bind(addr)?;
         let policy = BatchPolicy {
@@ -103,12 +101,12 @@ impl Server {
         Ok(Server { engine, listener, batch_tx, pool })
     }
 
-    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+    pub fn local_addr(&self) -> EmdResult<std::net::SocketAddr> {
         Ok(self.listener.local_addr()?)
     }
 
     /// Accept loop; blocks forever (run in a dedicated thread if needed).
-    pub fn serve(&self) -> Result<()> {
+    pub fn serve(&self) -> EmdResult<()> {
         crate::log_info!(
             "server",
             "listening on {} (method default {})",
@@ -129,7 +127,7 @@ impl Server {
     }
 
     /// Accept exactly `count` connections then return (test harness).
-    pub fn serve_n(&self, count: usize) -> Result<()> {
+    pub fn serve_n(&self, count: usize) -> EmdResult<()> {
         for _ in 0..count {
             let (stream, _) = self.listener.accept()?;
             let engine = Arc::clone(&self.engine);
@@ -147,7 +145,7 @@ fn handle_connection(
     stream: TcpStream,
     engine: &SearchEngine,
     batch_tx: &Sender<Pending<Job, JobResult>>,
-) -> Result<()> {
+) -> EmdResult<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut line = String::new();
@@ -177,8 +175,8 @@ fn handle_request(
     line: &str,
     engine: &SearchEngine,
     batch_tx: &Sender<Pending<Job, JobResult>>,
-) -> Result<Json> {
-    let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+) -> EmdResult<Json> {
+    let req = Json::parse(line).map_err(|e| EmdError::protocol(format!("bad json: {e}")))?;
     match req.get("op").and_then(Json::as_str).unwrap_or("search") {
         "ping" => Ok(Json::obj(vec![("ok", true.into()), ("pong", true.into())])),
         "stats" => {
@@ -191,7 +189,7 @@ fn handle_request(
         }
         "search" | "search_id" => {
             let method = match req.get("method").and_then(Json::as_str) {
-                Some(s) => Method::parse(s).ok_or_else(|| anyhow!("bad method '{s}'"))?,
+                Some(s) => Method::parse(s)?,
                 None => engine.config().method,
             };
             let l = req
@@ -200,26 +198,29 @@ fn handle_request(
                 .unwrap_or(engine.config().topl)
                 .max(1);
             let query = if let Some(id) = req.get("id").and_then(Json::as_usize) {
-                anyhow::ensure!(id < engine.dataset().len(), "id {id} out of range");
+                emd_ensure!(id < engine.dataset().len(), protocol, "id {id} out of range");
                 engine.dataset().histogram(id)
             } else {
                 let pairs = req
                     .get("query")
                     .and_then(Json::as_arr)
-                    .ok_or_else(|| anyhow!("missing 'query' (or 'id')"))?;
+                    .ok_or_else(|| EmdError::protocol("missing 'query' (or 'id')"))?;
                 let mut entries = Vec::with_capacity(pairs.len());
                 for p in pairs {
-                    let pair = p.as_arr().ok_or_else(|| anyhow!("query entries are [idx, w]"))?;
-                    anyhow::ensure!(pair.len() == 2, "query entries are [idx, w]");
+                    let pair = p
+                        .as_arr()
+                        .ok_or_else(|| EmdError::protocol("query entries are [idx, w]"))?;
+                    emd_ensure!(pair.len() == 2, protocol, "query entries are [idx, w]");
                     let idx = pair[0]
                         .as_usize()
-                        .ok_or_else(|| anyhow!("bad vocab index"))? as u32;
-                    let w = pair[1].as_f64().ok_or_else(|| anyhow!("bad weight"))? as f32;
+                        .ok_or_else(|| EmdError::protocol("bad vocab index"))? as u32;
+                    let w =
+                        pair[1].as_f64().ok_or_else(|| EmdError::protocol("bad weight"))? as f32;
                     entries.push((idx, w));
                 }
                 Histogram::from_pairs(entries)
             };
-            anyhow::ensure!(!query.is_empty(), "empty query");
+            emd_ensure!(!query.is_empty(), protocol, "empty query");
 
             // send through the dynamic batcher and wait for the reply
             let (tx, rx) = channel();
@@ -229,13 +230,13 @@ fn handle_request(
                     respond: tx,
                     enqueued: Instant::now(),
                 })
-                .map_err(|_| anyhow!("dispatcher gone"))?;
-            match rx.recv().map_err(|_| anyhow!("dispatcher dropped reply"))? {
+                .map_err(|_| EmdError::msg("internal error: dispatcher gone"))?;
+            match rx.recv().map_err(|_| EmdError::msg("internal error: dispatcher dropped reply"))? {
                 Ok(json) => Ok(json),
-                Err(e) => Err(anyhow!(e)),
+                Err(e) => Err(EmdError::msg(e)),
             }
         }
-        other => Err(anyhow!("unknown op '{other}'")),
+        other => Err(EmdError::protocol(format!("unknown op '{other}'"))),
     }
 }
 
@@ -308,6 +309,22 @@ mod tests {
             assert_eq!(o.get("ok"), Some(&Json::Bool(false)), "{o:?}");
             assert!(o.get("error").is_some());
         }
+    }
+
+    #[test]
+    fn comparator_methods_served_over_tcp() {
+        // Sinkhorn / exact EMD are first-class protocol methods now
+        let out = roundtrip(&[
+            "{\"op\": \"search_id\", \"id\": 2, \"l\": 3, \"method\": \"emd\"}".into(),
+            "{\"op\": \"search_id\", \"id\": 2, \"l\": 3, \"method\": \"sinkhorn\"}".into(),
+        ]);
+        for o in &out {
+            assert_eq!(o.get("ok"), Some(&Json::Bool(true)), "{o:?}");
+            assert_eq!(o.get("hits").and_then(Json::as_arr).unwrap().len(), 3);
+        }
+        // exact EMD ranks the query itself first
+        let first = out[0].get("hits").and_then(Json::as_arr).unwrap()[0].as_arr().unwrap();
+        assert_eq!(first[1].as_usize(), Some(2));
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! The unified distance API: per-pair [`Distance`] objects, batched
+//! [`BatchDistance`] objects, and the [`MethodRegistry`] that maps every
+//! [`Method`] — including Sinkhorn and exact EMD — to a boxed
+//! implementation.
+//!
+//! Layering: the traits and the registry live in `core` so every layer
+//! (approx solvers, LC engines, coordinator, eval harness, CLI) dispatches
+//! through the same objects instead of calling per-module free functions
+//! with incompatible signatures.
+
+use std::sync::Arc;
+
+use super::error::{EmdError, EmdResult};
+use super::method::Method;
+use super::{Embeddings, Histogram, Metric};
+
+use crate::approx::SinkhornParams;
+
+/// A per-pair distance measure over histograms sharing a vocabulary.
+///
+/// Implementations are self-contained (metric and solver parameters are
+/// captured at construction) so `Box<dyn Distance>` objects can be handed
+/// across threads — the LC engines' per-pair fallback and the cascade's
+/// rerank stage both do.  Directed bounds are exposed in their *symmetric*
+/// form (`max` of the two directions), the form the paper evaluates and the
+/// form for which the Theorem-2 chain holds.
+pub trait Distance: Send + Sync {
+    /// Which canonical method this object computes.
+    fn method(&self) -> Method;
+
+    /// Human-readable name (defaults to the method name).
+    fn name(&self) -> String {
+        self.method().name()
+    }
+
+    /// Distance between two histograms over `vocab`.
+    fn distance(&self, vocab: &Embeddings, p: &Histogram, q: &Histogram) -> EmdResult<f64>;
+}
+
+/// A distance measure bound to a database: one query row at a time, the LC
+/// engines' native query-vs-all-rows shape.
+pub trait BatchDistance: Send + Sync {
+    /// Which canonical method this object computes.
+    fn method(&self) -> Method;
+
+    /// Number of database rows each query is scored against.
+    fn num_rows(&self) -> usize;
+
+    /// Distances from one query histogram to every database row.
+    fn distances(&self, query: &Histogram) -> EmdResult<Vec<f32>>;
+
+    /// Row-major `(n, n)` symmetric all-pairs matrix over the database
+    /// (the paper's accuracy-evaluation protocol).
+    fn all_pairs_symmetric(&self) -> EmdResult<Vec<f32>>;
+}
+
+/// Maps every [`Method`] to a boxed [`Distance`] / [`BatchDistance`].
+///
+/// The registry captures the ground metric and solver parameters once;
+/// lookups are cheap and the returned objects are `'static`, so they can be
+/// cached, boxed into collections, or moved into worker threads.
+#[derive(Debug, Clone, Copy)]
+pub struct MethodRegistry {
+    metric: Metric,
+    sinkhorn: SinkhornParams,
+}
+
+impl MethodRegistry {
+    pub fn new(metric: Metric) -> MethodRegistry {
+        MethodRegistry { metric, sinkhorn: SinkhornParams::default() }
+    }
+
+    /// Override the Sinkhorn solver parameters (λ, iteration budget, tol).
+    pub fn with_sinkhorn(mut self, params: SinkhornParams) -> MethodRegistry {
+        self.sinkhorn = params;
+        self
+    }
+
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Per-pair distance object.  Every method is available here; the
+    /// quadratic comparators (ICT, Sinkhorn, exact EMD) are exactly as
+    /// first-class as the linear-complexity bounds.
+    pub fn distance(&self, method: Method) -> Box<dyn Distance> {
+        Box::new(PairDistance { method, metric: self.metric, sinkhorn: self.sinkhorn })
+    }
+
+    /// Batched query-vs-database object, backed by an LC engine.  Linear
+    /// methods run the Phase-1/Phase-2 pipeline under the *engine's* params
+    /// (metric, threads, symmetric); per-pair fallback methods (BoW-adj,
+    /// ICT, Sinkhorn, exact EMD) evaluate through *this registry's* metric
+    /// and solver parameters.
+    pub fn batch(
+        &self,
+        engine: &Arc<crate::lc::LcEngine>,
+        method: Method,
+    ) -> Box<dyn BatchDistance> {
+        Box::new(crate::lc::LcBatch::with_registry(Arc::clone(engine), method, self))
+    }
+
+    /// The canonical method family (see [`Method::canonical`]).
+    pub fn methods() -> Vec<Method> {
+        Method::canonical()
+    }
+}
+
+/// The registry's per-pair adapter: one struct, one `match`, every method.
+struct PairDistance {
+    method: Method,
+    metric: Metric,
+    sinkhorn: SinkhornParams,
+}
+
+impl Distance for PairDistance {
+    fn method(&self) -> Method {
+        self.method
+    }
+
+    fn distance(&self, vocab: &Embeddings, p: &Histogram, q: &Histogram) -> EmdResult<f64> {
+        let m = self.metric;
+        Ok(match self.method {
+            Method::Bow => crate::approx::bow_distance(p, q),
+            Method::BowAdjusted => crate::approx::bow_adjusted_symmetric(vocab, p, q, m),
+            Method::Wcd => {
+                // WCD is the Euclidean distance between centroids; under any
+                // other ground metric it carries no relation to EMD, so
+                // refuse rather than silently compute the wrong thing.
+                if m != Metric::L2 {
+                    return Err(EmdError::unsupported(
+                        "WCD is defined for the L2 ground metric only",
+                    ));
+                }
+                crate::approx::wcd(vocab, p, q)
+            }
+            Method::Rwmd => crate::approx::rwmd_symmetric(vocab, p, q, m),
+            Method::Omr => crate::approx::omr_symmetric(vocab, p, q, m),
+            Method::Act { k } => crate::approx::act_symmetric(vocab, p, q, m, k.max(1)),
+            Method::Ict => crate::approx::ict_symmetric(vocab, p, q, m),
+            Method::Sinkhorn => crate::approx::sinkhorn(vocab, p, q, m, self.sinkhorn),
+            Method::Exact => crate::exact::emd(vocab, p, q, m),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Embeddings, Histogram, Histogram) {
+        let mut rng = Rng::new(seed);
+        let (v, m) = (16, 3);
+        let data: Vec<f32> = (0..v * m).map(|_| rng.normal() as f32).collect();
+        let vocab = Embeddings::new(data, v, m);
+        let mk = |rng: &mut Rng| {
+            let idx = rng.sample_indices(v, 5);
+            Histogram::from_pairs(
+                idx.into_iter()
+                    .map(|i| (i as u32, rng.range_f64(0.05, 1.0) as f32))
+                    .collect(),
+            )
+        };
+        let p = mk(&mut rng);
+        let q = mk(&mut rng);
+        (vocab, p, q)
+    }
+
+    #[test]
+    fn every_method_resolves_and_computes() {
+        let (vocab, p, q) = setup(1);
+        let registry = MethodRegistry::new(Metric::L2);
+        for method in MethodRegistry::methods() {
+            let d = registry.distance(method);
+            assert_eq!(d.method(), method);
+            assert_eq!(d.name(), method.name());
+            let val = d.distance(&vocab, &p, &q).unwrap();
+            assert!(val.is_finite() && val >= 0.0, "{method}: {val}");
+        }
+    }
+
+    #[test]
+    fn registry_matches_free_functions() {
+        let (vocab, p, q) = setup(2);
+        let registry = MethodRegistry::new(Metric::L2);
+        let via = |m: Method| registry.distance(m).distance(&vocab, &p, &q).unwrap();
+        assert_eq!(via(Method::Rwmd), crate::approx::rwmd_symmetric(&vocab, &p, &q, Metric::L2));
+        assert_eq!(via(Method::Ict), crate::approx::ict_symmetric(&vocab, &p, &q, Metric::L2));
+        assert_eq!(via(Method::Exact), crate::exact::emd(&vocab, &p, &q, Metric::L2));
+    }
+
+    #[test]
+    fn sinkhorn_params_are_honored() {
+        let (vocab, p, q) = setup(3);
+        let loose = MethodRegistry::new(Metric::L2)
+            .with_sinkhorn(SinkhornParams { lambda: 2.0, max_iters: 500, tol: 1e-9 });
+        let tight = MethodRegistry::new(Metric::L2)
+            .with_sinkhorn(SinkhornParams { lambda: 80.0, max_iters: 500, tol: 1e-9 });
+        let ex = crate::exact::emd(&vocab, &p, &q, Metric::L2);
+        let dl = loose.distance(Method::Sinkhorn).distance(&vocab, &p, &q).unwrap();
+        let dt = tight.distance(Method::Sinkhorn).distance(&vocab, &p, &q).unwrap();
+        assert!((dt - ex).abs() <= (dl - ex).abs() + 1e-9, "λ=80 no tighter: {dt} vs {dl} (emd {ex})");
+    }
+
+    #[test]
+    fn wcd_rejects_non_l2_metrics() {
+        let (vocab, p, q) = setup(4);
+        let registry = MethodRegistry::new(Metric::SqL2);
+        let err = registry.distance(Method::Wcd).distance(&vocab, &p, &q);
+        assert!(matches!(err, Err(EmdError::Unsupported(_))), "{err:?}");
+        // every other method computes under the configured metric
+        for method in [Method::Rwmd, Method::Ict, Method::Exact] {
+            assert!(registry.distance(method).distance(&vocab, &p, &q).is_ok(), "{method}");
+        }
+    }
+
+    #[test]
+    fn distance_objects_are_send_sync() {
+        fn assert_send_sync<T: Send + Sync + ?Sized>() {}
+        assert_send_sync::<dyn Distance>();
+        assert_send_sync::<dyn BatchDistance>();
+    }
+}

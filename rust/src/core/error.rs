@@ -1,0 +1,165 @@
+//! Crate-wide error type.
+//!
+//! Every fallible operation in `emdpar` returns [`EmdResult`]; the variants
+//! below categorize failures so callers can branch on them (the TCP server
+//! maps them to protocol error strings, the CLI prints them and exits).
+//! Replaces the earlier ad-hoc mix of `anyhow::Result`, `io::Result` and
+//! stringly-typed errors, and keeps the crate dependency-free.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type EmdResult<T> = std::result::Result<T, EmdError>;
+
+/// Unified error enum for every layer of the crate.
+#[derive(Debug)]
+pub enum EmdError {
+    /// A user-supplied string is not a known enum value.
+    /// `what` names the domain ("method", "metric", "backend", ...).
+    Parse { what: &'static str, input: String, expected: &'static str },
+    /// Invalid configuration (bad field value, failed validation).
+    Config(String),
+    /// File / socket IO, with context about what was being done.
+    Io(String),
+    /// JSON syntax or schema violation.
+    Json(String),
+    /// PJRT / artifact runtime failure (missing artifacts, shape mismatch,
+    /// or the runtime not being compiled in).
+    Artifact(String),
+    /// Malformed client request on the serving protocol.
+    Protocol(String),
+    /// The requested operation is valid but not supported by the selected
+    /// backend or method combination.
+    Unsupported(String),
+    /// Uncategorized failure.
+    Msg(String),
+}
+
+impl EmdError {
+    pub fn parse(what: &'static str, input: impl Into<String>, expected: &'static str) -> EmdError {
+        EmdError::Parse { what, input: input.into(), expected }
+    }
+
+    pub fn config(msg: impl Into<String>) -> EmdError {
+        EmdError::Config(msg.into())
+    }
+
+    pub fn io(msg: impl Into<String>) -> EmdError {
+        EmdError::Io(msg.into())
+    }
+
+    pub fn json(msg: impl Into<String>) -> EmdError {
+        EmdError::Json(msg.into())
+    }
+
+    pub fn artifact(msg: impl Into<String>) -> EmdError {
+        EmdError::Artifact(msg.into())
+    }
+
+    pub fn protocol(msg: impl Into<String>) -> EmdError {
+        EmdError::Protocol(msg.into())
+    }
+
+    pub fn unsupported(msg: impl Into<String>) -> EmdError {
+        EmdError::Unsupported(msg.into())
+    }
+
+    pub fn msg(msg: impl Into<String>) -> EmdError {
+        EmdError::Msg(msg.into())
+    }
+}
+
+impl fmt::Display for EmdError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EmdError::Parse { what, input, expected } => {
+                write!(f, "unknown {what} '{input}' (expected {expected})")
+            }
+            EmdError::Config(m) => write!(f, "config error: {m}"),
+            EmdError::Io(m) => write!(f, "io error: {m}"),
+            EmdError::Json(m) => write!(f, "json error: {m}"),
+            EmdError::Artifact(m) => write!(f, "artifact runtime: {m}"),
+            EmdError::Protocol(m) => write!(f, "bad request: {m}"),
+            EmdError::Unsupported(m) => write!(f, "unsupported: {m}"),
+            EmdError::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for EmdError {}
+
+impl From<std::io::Error> for EmdError {
+    fn from(e: std::io::Error) -> EmdError {
+        EmdError::Io(e.to_string())
+    }
+}
+
+impl From<crate::util::json::JsonError> for EmdError {
+    fn from(e: crate::util::json::JsonError) -> EmdError {
+        EmdError::Json(e.to_string())
+    }
+}
+
+impl From<crate::util::cli::CliError> for EmdError {
+    fn from(e: crate::util::cli::CliError) -> EmdError {
+        EmdError::Config(e.to_string())
+    }
+}
+
+/// Early-return with an [`EmdError::Msg`] built from a format string.
+#[macro_export]
+macro_rules! emd_bail {
+    ($($arg:tt)*) => {
+        return Err($crate::core::EmdError::msg(format!($($arg)*)))
+    };
+}
+
+/// Early-return unless the condition holds.  With a leading category
+/// identifier (`config`, `protocol`, `artifact`, ...) the error lands in
+/// the matching [`EmdError`] variant so callers can branch on it;
+/// otherwise it falls back to [`EmdError::Msg`].
+#[macro_export]
+macro_rules! emd_ensure {
+    ($cond:expr, $kind:ident, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::core::EmdError::$kind(format!($($arg)*)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::core::EmdError::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category() {
+        let e = EmdError::parse("method", "magic", "bow|rwmd|...");
+        assert!(e.to_string().contains("unknown method 'magic'"));
+        assert!(EmdError::config("x").to_string().starts_with("config error"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing");
+        let e: EmdError = io.into();
+        assert!(matches!(e, EmdError::Io(_)));
+    }
+
+    #[test]
+    fn bail_and_ensure_macros() {
+        fn f(flag: bool) -> EmdResult<u32> {
+            emd_ensure!(flag, "flag was {flag}");
+            if !flag {
+                emd_bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert!(f(false).is_err());
+    }
+}

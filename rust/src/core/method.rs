@@ -1,0 +1,244 @@
+//! The canonical distance-method selector.
+//!
+//! One `Method` enum, one `parse`, one `name`, one Phase-1 plan width —
+//! shared by the LC engines, the config system, the coordinator, the TCP
+//! protocol, the evaluation harness and the CLI.  Every method, including
+//! the quadratic comparators (ICT, Sinkhorn, exact EMD), is reachable
+//! through this enum and through [`crate::core::MethodRegistry`].
+//!
+//! Naming follows the paper: `ACT-j` runs `j` Phase-2 constrained-transfer
+//! iterations, which corresponds to `Method::Act { k: j + 1 }` (top-k
+//! nearest destinations, the last one unconstrained).
+
+use std::fmt;
+
+use super::error::{EmdError, EmdResult};
+
+/// Distance measure selector for every layer of the stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// BoW cosine distance (baseline, no embeddings).
+    Bow,
+    /// BoW-adjusted lower bound: non-overlapping mass x minimum ground
+    /// distance — the cheapest member of the bound chain.
+    BowAdjusted,
+    /// Word centroid distance (baseline).
+    Wcd,
+    /// RWMD (k = 1); batched form is LC-RWMD.
+    Rwmd,
+    /// OMR (overlap-only capacity, top-2); batched form is LC-OMR.
+    Omr,
+    /// ACT with k-1 constrained iterations; batched form is LC-ACT.
+    Act { k: usize },
+    /// ICT — the full constrained-transfer relaxation (quadratic per pair).
+    Ict,
+    /// Entropy-regularized OT via Sinkhorn iterations (quadratic per pair).
+    Sinkhorn,
+    /// Exact EMD by min-cost flow — the paper's "WMD" quality level.
+    Exact,
+}
+
+/// Accepted spellings, shown in parse errors and CLI help.
+pub const METHOD_SYNTAX: &str =
+    "bow | bow-adj | wcd | rwmd | omr | act-<j> | ict | sinkhorn | emd";
+
+impl Method {
+    /// Parse a method name (case-insensitive).  The canonical spellings are
+    /// the lowercase forms of [`Method::name`]; `exact`/`wmd` are accepted
+    /// aliases for `emd`, `bow-adjusted` for `bow-adj`.
+    pub fn parse(s: &str) -> EmdResult<Method> {
+        let ls = s.trim().to_ascii_lowercase();
+        match ls.as_str() {
+            "bow" => return Ok(Method::Bow),
+            "bow-adj" | "bow-adjusted" => return Ok(Method::BowAdjusted),
+            "wcd" => return Ok(Method::Wcd),
+            "rwmd" => return Ok(Method::Rwmd),
+            "omr" => return Ok(Method::Omr),
+            "ict" => return Ok(Method::Ict),
+            "sinkhorn" => return Ok(Method::Sinkhorn),
+            "emd" | "exact" | "wmd" => return Ok(Method::Exact),
+            _ => {}
+        }
+        if let Some(rest) = ls.strip_prefix("act-") {
+            // paper naming: ACT-j runs j Phase-2 iterations => k = j + 1.
+            // j is bounded so untrusted protocol input cannot request an
+            // arbitrarily wide Phase-1 plan (k <= 64, the validated range).
+            if let Ok(j) = rest.parse::<usize>() {
+                if j < 64 {
+                    return Ok(Method::Act { k: j + 1 });
+                }
+            }
+        }
+        Err(EmdError::parse("method", s, METHOD_SYNTAX))
+    }
+
+    /// Parse a comma-separated method list (`"bow,rwmd,act-1,sinkhorn"`).
+    pub fn parse_list(s: &str) -> EmdResult<Vec<Method>> {
+        s.split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(Method::parse)
+            .collect()
+    }
+
+    /// Display name; `parse(name)` round-trips for every method.
+    pub fn name(&self) -> String {
+        match self {
+            Method::Bow => "BoW".into(),
+            Method::BowAdjusted => "BoW-adj".into(),
+            Method::Wcd => "WCD".into(),
+            Method::Rwmd => "RWMD".into(),
+            Method::Omr => "OMR".into(),
+            Method::Act { k } => format!("ACT-{}", k.saturating_sub(1)),
+            Method::Ict => "ICT".into(),
+            Method::Sinkhorn => "Sinkhorn".into(),
+            Method::Exact => "EMD".into(),
+        }
+    }
+
+    /// Phase-1 top-k requirement for the LC engines (0 = no plan: the
+    /// method is either plan-free or computed per-pair).
+    pub fn plan_k(&self) -> usize {
+        match self {
+            Method::Rwmd => 1,
+            Method::Omr => 2,
+            Method::Act { k } => (*k).max(1),
+            _ => 0,
+        }
+    }
+
+    /// Whether the batched LC pipeline computes this method in linear time
+    /// (Phase-1 plan + database sweep).  The rest fall back to the per-pair
+    /// solvers behind the same [`crate::core::BatchDistance`] interface.
+    pub fn is_linear_complexity(&self) -> bool {
+        matches!(
+            self,
+            Method::Bow | Method::Wcd | Method::Rwmd | Method::Omr | Method::Act { .. }
+        )
+    }
+
+    /// Whether the measure is a lower bound of exact EMD under *any* ground
+    /// metric (the Theorem 2 chain plus the BoW-adjusted bound).  BoW
+    /// cosine lives on a different scale, Sinkhorn upper-bounds EMD, and
+    /// WCD lower-bounds WMD only for the L2 metric, so none of those
+    /// qualify here.
+    pub fn is_lower_bound(&self) -> bool {
+        matches!(
+            self,
+            Method::BowAdjusted | Method::Rwmd | Method::Omr | Method::Act { .. } | Method::Ict
+        )
+    }
+
+    /// The canonical method family, ordered cheapest-first (the order used
+    /// by sweeps and by the DESIGN.md quickstart).
+    pub fn canonical() -> Vec<Method> {
+        vec![
+            Method::Bow,
+            Method::BowAdjusted,
+            Method::Wcd,
+            Method::Rwmd,
+            Method::Omr,
+            Method::Act { k: 2 },
+            Method::Act { k: 4 },
+            Method::Act { k: 8 },
+            Method::Ict,
+            Method::Sinkhorn,
+            Method::Exact,
+        ]
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+impl std::str::FromStr for Method {
+    type Err = EmdError;
+
+    fn from_str(s: &str) -> EmdResult<Method> {
+        Method::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_known_names() {
+        assert_eq!(Method::parse("bow").unwrap(), Method::Bow);
+        assert_eq!(Method::parse("BoW-adj").unwrap(), Method::BowAdjusted);
+        assert_eq!(Method::parse("bow-adjusted").unwrap(), Method::BowAdjusted);
+        assert_eq!(Method::parse("WCD").unwrap(), Method::Wcd);
+        assert_eq!(Method::parse("rwmd").unwrap(), Method::Rwmd);
+        assert_eq!(Method::parse("omr").unwrap(), Method::Omr);
+        assert_eq!(Method::parse("ict").unwrap(), Method::Ict);
+        assert_eq!(Method::parse("sinkhorn").unwrap(), Method::Sinkhorn);
+        assert_eq!(Method::parse("emd").unwrap(), Method::Exact);
+        assert_eq!(Method::parse("exact").unwrap(), Method::Exact);
+        assert_eq!(Method::parse("wmd").unwrap(), Method::Exact);
+        assert_eq!(Method::parse("ACT-7").unwrap(), Method::Act { k: 8 });
+        assert_eq!(Method::parse("act-0").unwrap(), Method::Act { k: 1 });
+        assert_eq!(Method::parse("act-63").unwrap(), Method::Act { k: 64 });
+        assert!(Method::parse("nope").is_err());
+        assert!(Method::parse("act-x").is_err());
+        assert!(Method::parse("").is_err());
+        // untrusted input cannot request an unbounded plan width
+        assert!(Method::parse("act-64").is_err());
+        assert!(Method::parse("act-10000000").is_err());
+        assert!(Method::parse("act-18446744073709551615").is_err());
+    }
+
+    #[test]
+    fn name_parse_round_trip_exhaustive() {
+        let mut all = Method::canonical();
+        // ACT suffixes beyond the canonical set, including the k=1 edge
+        for k in [1usize, 2, 3, 9, 17, 64] {
+            all.push(Method::Act { k });
+        }
+        for m in all {
+            let name = m.name();
+            assert_eq!(Method::parse(&name).unwrap(), m, "round-trip {name}");
+            assert_eq!(
+                Method::parse(&name.to_ascii_lowercase()).unwrap(),
+                m,
+                "lowercase round-trip {name}"
+            );
+            assert_eq!(format!("{m}"), name, "Display = name");
+        }
+    }
+
+    #[test]
+    fn parse_list_splits_and_trims() {
+        let ms = Method::parse_list("bow, rwmd ,act-1,, sinkhorn").unwrap();
+        assert_eq!(
+            ms,
+            vec![Method::Bow, Method::Rwmd, Method::Act { k: 2 }, Method::Sinkhorn]
+        );
+        assert!(Method::parse_list("bow,nope").is_err());
+    }
+
+    #[test]
+    fn plan_k_matches_paper() {
+        assert_eq!(Method::Rwmd.plan_k(), 1);
+        assert_eq!(Method::Omr.plan_k(), 2);
+        assert_eq!(Method::Act { k: 8 }.plan_k(), 8);
+        for m in [Method::Bow, Method::BowAdjusted, Method::Wcd, Method::Ict, Method::Sinkhorn, Method::Exact] {
+            assert_eq!(m.plan_k(), 0, "{m}");
+        }
+    }
+
+    #[test]
+    fn bound_and_complexity_classification() {
+        assert!(Method::Rwmd.is_lower_bound());
+        assert!(Method::Ict.is_lower_bound());
+        assert!(!Method::Bow.is_lower_bound());
+        assert!(!Method::Wcd.is_lower_bound());
+        assert!(!Method::Sinkhorn.is_lower_bound());
+        assert!(!Method::Exact.is_lower_bound());
+        assert!(Method::Act { k: 4 }.is_linear_complexity());
+        assert!(!Method::Exact.is_linear_complexity());
+    }
+}

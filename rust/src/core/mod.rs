@@ -1,14 +1,23 @@
-//! Core data model: histograms, vocabulary embeddings, the CSR database
-//! matrix and ground-distance computation (paper Section 2 & 5).
+//! Core data model and the unified distance API: histograms, vocabulary
+//! embeddings, the CSR database matrix and ground-distance computation
+//! (paper Section 2 & 5), plus the crate-wide [`EmdError`], the canonical
+//! [`Method`] enum, the [`Distance`] / [`BatchDistance`] traits and the
+//! [`MethodRegistry`] every layer dispatches through.
 
 pub mod cost;
 pub mod dataset;
+pub mod distance;
+pub mod error;
 pub mod histogram;
+pub mod method;
 pub mod sparse;
 pub mod vocab;
 
 pub use cost::{cost_matrix, support_cost_matrix, Metric};
 pub use dataset::{Dataset, DatasetStats};
+pub use distance::{BatchDistance, Distance, MethodRegistry};
+pub use error::{EmdError, EmdResult};
 pub use histogram::Histogram;
+pub use method::{Method, METHOD_SYNTAX};
 pub use sparse::CsrMatrix;
 pub use vocab::Embeddings;

@@ -12,12 +12,12 @@ use std::fs::File;
 use std::io::{self, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use crate::core::{Dataset, Embeddings};
+use crate::core::{Dataset, Embeddings, EmdResult};
 
 const MAGIC: &[u8; 4] = b"EMD1";
 
 /// Save a dataset to a file.
-pub fn save(ds: &Dataset, path: &Path) -> io::Result<()> {
+pub fn save(ds: &Dataset, path: &Path) -> EmdResult<()> {
     let mut w = BufWriter::new(File::create(path)?);
     w.write_all(MAGIC)?;
     let name = ds.name.as_bytes();
@@ -55,16 +55,17 @@ pub fn save(ds: &Dataset, path: &Path) -> io::Result<()> {
         w.write_all(&i.to_le_bytes())?;
     }
     write_f32s(&mut w, &data)?;
-    w.flush()
+    w.flush()?;
+    Ok(())
 }
 
 /// Load a dataset from a file.
-pub fn load(path: &Path) -> io::Result<Dataset> {
+pub fn load(path: &Path) -> EmdResult<Dataset> {
     let mut r = BufReader::new(File::open(path)?);
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic (not an EMD1 file)"));
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic (not an EMD1 file)").into());
     }
     let name_len = read_u32(&mut r)? as usize;
     let mut name = vec![0u8; name_len];

@@ -2,13 +2,18 @@
 //! (paper Tables 5-6): run a set of methods over a dataset, timing the
 //! all-pairs (or query-subset) distance computation and scoring
 //! precision@top-ℓ.
+//!
+//! Method dispatch goes through [`MethodRegistry`] / [`BatchDistance`]
+//! trait objects, so the quadratic comparators (ICT, Sinkhorn, exact EMD)
+//! sweep exactly like the LC bounds — pass `Method::Sinkhorn` or
+//! `Method::Exact` in the method list and they time and score identically.
 
 use std::time::Duration;
 
 use std::sync::Arc;
 
-use crate::core::Dataset;
-use crate::lc::{EngineParams, LcEngine, Method};
+use crate::core::{BatchDistance, Dataset, EmdResult, Method, MethodRegistry};
+use crate::lc::{EngineParams, LcEngine};
 use crate::util::stats::fmt_duration;
 
 use super::precision::precision_curve;
@@ -32,6 +37,17 @@ impl SweepRow {
     }
 }
 
+/// Registry-bound batch objects for each requested method.
+fn batches(
+    dataset: &Arc<Dataset>,
+    methods: &[Method],
+    params: EngineParams,
+) -> Vec<Box<dyn BatchDistance>> {
+    let engine = Arc::new(LcEngine::new(Arc::clone(dataset), params));
+    let registry = MethodRegistry::new(params.metric);
+    methods.iter().map(|&m| registry.batch(&engine, m)).collect()
+}
+
 /// All-pairs evaluation of `methods` on `dataset` (the Fig. 8 protocol:
 /// every document queried against every other).
 pub fn sweep_all_pairs(
@@ -39,18 +55,17 @@ pub fn sweep_all_pairs(
     methods: &[Method],
     ls: &[usize],
     params: EngineParams,
-) -> Vec<SweepRow> {
-    let engine = LcEngine::new(Arc::clone(dataset), params);
+) -> EmdResult<Vec<SweepRow>> {
     let n = dataset.len();
-    methods
-        .iter()
-        .map(|&method| {
+    batches(dataset, methods, params)
+        .into_iter()
+        .map(|batch| -> EmdResult<SweepRow> {
             let t0 = std::time::Instant::now();
-            let matrix = engine.all_pairs_symmetric(method);
+            let matrix = batch.all_pairs_symmetric()?;
             let runtime = t0.elapsed();
             let precision =
                 precision_curve(&matrix, &dataset.labels, &dataset.labels, ls, true);
-            SweepRow { method: method.name(), runtime, pairs: n * n, precision }
+            Ok(SweepRow { method: batch.method().name(), runtime, pairs: n * n, precision })
         })
         .collect()
 }
@@ -63,26 +78,36 @@ pub fn sweep_subset(
     methods: &[Method],
     ls: &[usize],
     params: EngineParams,
-) -> Vec<SweepRow> {
-    let engine = LcEngine::new(Arc::clone(dataset), params);
+) -> EmdResult<Vec<SweepRow>> {
     let n = dataset.len();
     let nq = nq.min(n);
-    methods
-        .iter()
-        .map(|&method| {
+    batches(dataset, methods, params)
+        .into_iter()
+        .map(|batch| -> EmdResult<SweepRow> {
             let t0 = std::time::Instant::now();
-            let mut matrix = vec![0.0f32; nq * n];
-            for i in 0..nq {
-                let q = dataset.histogram(i);
-                let row = engine.distances(&q, method);
-                matrix[i * n..(i + 1) * n].copy_from_slice(&row);
-            }
+            let matrix = subset_matrix(dataset, batch.as_ref(), nq)?;
             let runtime = t0.elapsed();
             let qlabels = &dataset.labels[..nq];
             let precision = precision_curve(&matrix, qlabels, &dataset.labels, ls, true);
-            SweepRow { method: method.name(), runtime, pairs: nq * n, precision }
+            Ok(SweepRow { method: batch.method().name(), runtime, pairs: nq * n, precision })
         })
         .collect()
+}
+
+/// Row-major `(nq, n)` distance matrix through a [`BatchDistance`] object.
+fn subset_matrix(
+    dataset: &Arc<Dataset>,
+    batch: &dyn BatchDistance,
+    nq: usize,
+) -> EmdResult<Vec<f32>> {
+    let n = dataset.len();
+    let mut matrix = vec![0.0f32; nq * n];
+    for i in 0..nq {
+        let q = dataset.histogram(i);
+        let row = batch.distances(&q)?;
+        matrix[i * n..(i + 1) * n].copy_from_slice(&row);
+    }
+    Ok(matrix)
 }
 
 /// Render sweep rows as a markdown table (EXPERIMENTS.md format).
@@ -140,7 +165,8 @@ mod tests {
             &[Method::Bow, Method::Rwmd, Method::Act { k: 2 }],
             &[1, 4],
             EngineParams { threads: 2, ..Default::default() },
-        );
+        )
+        .unwrap();
         assert_eq!(rows.len(), 3);
         for r in &rows {
             assert_eq!(r.pairs, 60 * 60);
@@ -161,8 +187,37 @@ mod tests {
             &[Method::Rwmd],
             &[1],
             EngineParams { threads: 2, ..Default::default() },
-        );
+        )
+        .unwrap();
         assert_eq!(rows[0].pairs, 10 * 60);
+    }
+
+    #[test]
+    fn sinkhorn_and_exact_sweep_through_registry() {
+        // the comparators are selectable exactly like the LC bounds
+        let ds = Arc::new(generate_text(&TextConfig {
+            n: 24,
+            classes: 3,
+            vocab: 120,
+            dim: 6,
+            doc_len: 12,
+            ..Default::default()
+        }));
+        let rows = sweep_all_pairs(
+            &ds,
+            &[Method::Rwmd, Method::Ict, Method::Sinkhorn, Method::Exact],
+            &[2],
+            EngineParams { threads: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[1].method, "ICT");
+        assert_eq!(rows[2].method, "Sinkhorn");
+        assert_eq!(rows[3].method, "EMD");
+        for r in &rows {
+            assert_eq!(r.pairs, 24 * 24);
+            assert!((0.0..=1.0).contains(&r.precision[0].1), "{}", r.method);
+        }
     }
 
     #[test]
@@ -173,7 +228,8 @@ mod tests {
             &[Method::Bow],
             &[1],
             EngineParams { threads: 1, ..Default::default() },
-        );
+        )
+        .unwrap();
         let md = render_markdown("test", &rows);
         assert!(md.contains("| BoW |"));
         assert!(md.contains("p@1"));

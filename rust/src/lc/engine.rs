@@ -1,77 +1,30 @@
 //! High-level LC engine: one-query-vs-database distance computation for
-//! every method, plus the all-pairs symmetric evaluation used by the
+//! every [`Method`], plus the all-pairs symmetric evaluation used by the
 //! accuracy experiments (paper Section 6).
+//!
+//! Linear-complexity methods (BoW, WCD, LC-RWMD, LC-OMR, LC-ACT) run the
+//! batched Phase-1/Phase-2 pipeline.  The quadratic comparators
+//! (BoW-adjusted, ICT, Sinkhorn, exact EMD) fall back to a data-parallel
+//! per-pair sweep dispatched through [`MethodRegistry`] trait objects, so
+//! every method is reachable behind the same engine interface.
 //!
 //! For all-pairs runs, the symmetric measure `max(m(a→b), m(b→a))` is
 //! assembled from two asymmetric direction-A sweeps (document b scores
 //! query a's sweep and vice versa), exactly how the paper evaluates — no
-//! per-pair quadratic work.
+//! per-pair quadratic work for the LC family.
 
 use crate::approx::{bow_distances_batch, centroids_batch, wcd_from_centroids};
 use std::sync::Arc;
 
-use crate::core::{Dataset, Histogram, Metric};
+use crate::core::{
+    BatchDistance, Dataset, Distance, EmdResult, Histogram, Method, MethodRegistry, Metric,
+};
 use crate::util::threadpool::{parallel_for, SyncSlice};
 
 use super::plan::{plan_query, PlanParams};
 use super::transfers::{
     act_direction_a, omr_direction_a, rwmd_direction_a, rwmd_direction_b,
 };
-
-/// Distance measure selector for the engine / coordinator / CLI.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Method {
-    /// BoW cosine distance (baseline, no embeddings).
-    Bow,
-    /// Word centroid distance (baseline).
-    Wcd,
-    /// LC-RWMD (k = 1).
-    Rwmd,
-    /// LC-OMR (overlap-only capacity, top-2).
-    Omr,
-    /// LC-ACT with k-1 constrained iterations.
-    Act { k: usize },
-}
-
-impl Method {
-    pub fn parse(s: &str) -> Option<Method> {
-        let ls = s.to_ascii_lowercase();
-        match ls.as_str() {
-            "bow" => return Some(Method::Bow),
-            "wcd" => return Some(Method::Wcd),
-            "rwmd" => return Some(Method::Rwmd),
-            "omr" => return Some(Method::Omr),
-            _ => {}
-        }
-        if let Some(rest) = ls.strip_prefix("act-") {
-            // paper naming: ACT-j runs j Phase-2 iterations => k = j + 1
-            if let Ok(j) = rest.parse::<usize>() {
-                return Some(Method::Act { k: j + 1 });
-            }
-        }
-        None
-    }
-
-    pub fn name(&self) -> String {
-        match self {
-            Method::Bow => "BoW".into(),
-            Method::Wcd => "WCD".into(),
-            Method::Rwmd => "RWMD".into(),
-            Method::Omr => "OMR".into(),
-            Method::Act { k } => format!("ACT-{}", k - 1),
-        }
-    }
-
-    /// Phase-1 top-k requirement (0 = no plan needed).
-    fn plan_k(&self) -> usize {
-        match self {
-            Method::Bow | Method::Wcd => 0,
-            Method::Rwmd => 1,
-            Method::Omr => 2,
-            Method::Act { k } => (*k).max(1),
-        }
-    }
-}
 
 /// Engine configuration.
 #[derive(Debug, Clone, Copy)]
@@ -122,8 +75,15 @@ impl LcEngine {
         &self.params
     }
 
+    /// A registry configured with this engine's ground metric — the object
+    /// the per-pair fallback and the cascade's rerank stage dispatch through.
+    pub fn registry(&self) -> MethodRegistry {
+        MethodRegistry::new(self.params.metric)
+    }
+
     /// Distances from one query histogram to every database row (direction
-    /// A; plus max with direction-B RWMD when `symmetric` is set).
+    /// A; plus max with direction-B RWMD when `symmetric` is set).  Per-pair
+    /// methods always compute their symmetric form.
     pub fn distances(&self, query: &Histogram, method: Method) -> Vec<f32> {
         let db = &self.dataset.matrix;
         match method {
@@ -140,7 +100,7 @@ impl LcEngine {
                     })
                     .collect()
             }
-            _ => {
+            Method::Rwmd | Method::Omr | Method::Act { .. } => {
                 let keep_d = self.params.symmetric;
                 let plan = plan_query(
                     &self.dataset.embeddings,
@@ -155,8 +115,7 @@ impl LcEngine {
                 let mut t = match method {
                     Method::Rwmd => rwmd_direction_a(&plan, db, self.params.threads),
                     Method::Omr => omr_direction_a(&plan, db, self.params.threads),
-                    Method::Act { .. } => act_direction_a(&plan, db, self.params.threads),
-                    _ => unreachable!(),
+                    _ => act_direction_a(&plan, db, self.params.threads),
                 };
                 if keep_d {
                     let tb = rwmd_direction_b(&plan, db, self.params.threads);
@@ -168,13 +127,51 @@ impl LcEngine {
                 }
                 t
             }
+            _ => self.per_pair_row(query, method),
         }
+    }
+
+    /// Per-pair fallback: score the query against every row through the
+    /// registry's boxed [`Distance`] object, data-parallel over database
+    /// rows.
+    fn per_pair_row(&self, query: &Histogram, method: Method) -> Vec<f32> {
+        let dist = self.registry().distance(method);
+        self.per_pair_row_via(query, dist.as_ref())
+    }
+
+    /// One query row through a caller-supplied per-pair [`Distance`] object
+    /// (lets callers bring their own metric / solver parameters).  A pair
+    /// that fails to evaluate scores `+inf` so it can never fake a match.
+    pub fn per_pair_row_via(&self, query: &Histogram, dist: &dyn Distance) -> Vec<f32> {
+        let n = self.dataset.len();
+        let mut out = vec![0.0f32; n];
+        {
+            let slots = SyncSlice::new(&mut out);
+            parallel_for(n, self.params.threads, |start, end| {
+                for u in start..end {
+                    let doc = self.dataset.histogram(u);
+                    let d = match dist.distance(&self.dataset.embeddings, &doc, query) {
+                        Ok(v) => v as f32,
+                        Err(_) => f32::INFINITY,
+                    };
+                    // SAFETY: index u is owned by exactly this chunk.
+                    unsafe { slots.write(u, d) };
+                }
+            });
+        }
+        out
     }
 
     /// All-pairs asymmetric direction-A matrix `(n, n)`: row u = distances
     /// with query u.  Parallel over queries (each query's Phase 1/2 is
-    /// itself sequential here to avoid nested parallelism).
+    /// itself sequential here to avoid nested parallelism).  Per-pair
+    /// methods are symmetric by construction, so their "asymmetric" matrix
+    /// is the symmetric triangle sweep.
     pub fn all_pairs_asymmetric(&self, method: Method) -> Vec<f32> {
+        if !method.is_linear_complexity() {
+            let dist = self.registry().distance(method);
+            return self.all_pairs_symmetric_via(dist.as_ref());
+        }
         let n = self.dataset.len();
         let db = &self.dataset.matrix;
         let mut out = vec![0.0f32; n * n];
@@ -189,7 +186,7 @@ impl LcEngine {
                     }
                 });
             }
-            _ => {
+            Method::Rwmd | Method::Omr | Method::Act { .. } => {
                 let k = method.plan_k();
                 let slots = SyncSlice::new(&mut out);
                 parallel_for(n, self.params.threads, |start, end| {
@@ -208,20 +205,26 @@ impl LcEngine {
                         let row = match method {
                             Method::Rwmd => rwmd_direction_a(&plan, db, 1),
                             Method::Omr => omr_direction_a(&plan, db, 1),
-                            Method::Act { .. } => act_direction_a(&plan, db, 1),
-                            _ => unreachable!(),
+                            _ => act_direction_a(&plan, db, 1),
                         };
                         unsafe { slots.slice_mut(uq * n, (uq + 1) * n).copy_from_slice(&row) };
                     }
                 });
             }
+            _ => unreachable!("per-pair methods handled above"),
         }
         out
     }
 
     /// All-pairs symmetric matrix: `max(A, Aᵀ)` over the asymmetric sweep
-    /// (the paper's symmetric lower bound).  BoW/WCD are already symmetric.
+    /// (the paper's symmetric lower bound) for the LC methods; the per-pair
+    /// measures are symmetric by construction, so only the upper triangle
+    /// is evaluated and mirrored.
     pub fn all_pairs_symmetric(&self, method: Method) -> Vec<f32> {
+        if !method.is_linear_complexity() {
+            let dist = self.registry().distance(method);
+            return self.all_pairs_symmetric_via(dist.as_ref());
+        }
         let n = self.dataset.len();
         let mut a = self.all_pairs_asymmetric(method);
         if !matches!(method, Method::Bow | Method::Wcd) {
@@ -234,6 +237,101 @@ impl LcEngine {
             }
         }
         a
+    }
+
+    /// All-pairs matrix through a caller-supplied *symmetric* per-pair
+    /// [`Distance`] object: the upper triangle (plus diagonal) is computed
+    /// data-parallel over rows and mirrored — half the evaluations of a
+    /// full sweep, which matters for exact EMD / Sinkhorn.
+    pub fn all_pairs_symmetric_via(&self, dist: &dyn Distance) -> Vec<f32> {
+        let n = self.dataset.len();
+        let mut out = vec![0.0f32; n * n];
+        {
+            let slots = SyncSlice::new(&mut out);
+            parallel_for(n, self.params.threads, |start, end| {
+                for u in start..end {
+                    let q = self.dataset.histogram(u);
+                    for v in u..n {
+                        let doc = self.dataset.histogram(v);
+                        let d = match dist.distance(&self.dataset.embeddings, &doc, &q) {
+                            Ok(x) => x as f32,
+                            Err(_) => f32::INFINITY,
+                        };
+                        // SAFETY: cell (u, v) with v >= u and its mirror
+                        // (v, u) are written only by the worker owning row
+                        // u, and rows are disjoint across chunks.
+                        unsafe {
+                            slots.write(u * n + v, d);
+                            if v > u {
+                                slots.write(v * n + u, d);
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        out
+    }
+}
+
+/// A method bound to an [`LcEngine`] behind the [`BatchDistance`] trait —
+/// what [`MethodRegistry::batch`] hands out and what the evaluation harness
+/// iterates over.
+///
+/// Linear-complexity methods run the engine's Phase-1/Phase-2 pipeline
+/// (governed by the engine's own `EngineParams`); per-pair fallback methods
+/// evaluate through the *registry's* boxed [`Distance`] object, so a
+/// registry configured with custom `SinkhornParams` or a different metric
+/// is honored.
+pub struct LcBatch {
+    engine: Arc<LcEngine>,
+    method: Method,
+    /// `Some` for per-pair fallback methods: the registry-configured object.
+    pair: Option<Box<dyn Distance>>,
+}
+
+impl LcBatch {
+    /// Bind `method` to `engine`, using the engine's own registry for the
+    /// per-pair fallback.
+    pub fn new(engine: Arc<LcEngine>, method: Method) -> LcBatch {
+        let registry = engine.registry();
+        LcBatch::with_registry(engine, method, &registry)
+    }
+
+    /// Bind `method` to `engine`, drawing per-pair fallback objects from a
+    /// caller-configured registry.
+    pub fn with_registry(
+        engine: Arc<LcEngine>,
+        method: Method,
+        registry: &MethodRegistry,
+    ) -> LcBatch {
+        let pair =
+            if method.is_linear_complexity() { None } else { Some(registry.distance(method)) };
+        LcBatch { engine, method, pair }
+    }
+}
+
+impl BatchDistance for LcBatch {
+    fn method(&self) -> Method {
+        self.method
+    }
+
+    fn num_rows(&self) -> usize {
+        self.engine.dataset().len()
+    }
+
+    fn distances(&self, query: &Histogram) -> EmdResult<Vec<f32>> {
+        Ok(match &self.pair {
+            Some(dist) => self.engine.per_pair_row_via(query, dist.as_ref()),
+            None => self.engine.distances(query, self.method),
+        })
+    }
+
+    fn all_pairs_symmetric(&self) -> EmdResult<Vec<f32>> {
+        Ok(match &self.pair {
+            Some(dist) => self.engine.all_pairs_symmetric_via(dist.as_ref()),
+            None => self.engine.all_pairs_symmetric(self.method),
+        })
     }
 }
 
@@ -259,15 +357,6 @@ mod tests {
             .collect();
         let labels = (0..n as u16).map(|i| i % 3).collect();
         Dataset::new("tiny", emb, &hists, labels)
-    }
-
-    #[test]
-    fn method_parsing() {
-        assert_eq!(Method::parse("bow"), Some(Method::Bow));
-        assert_eq!(Method::parse("ACT-7"), Some(Method::Act { k: 8 }));
-        assert_eq!(Method::parse("act-0"), Some(Method::Act { k: 1 }));
-        assert_eq!(Method::parse("nope"), None);
-        assert_eq!(Method::Act { k: 8 }.name(), "ACT-7");
     }
 
     #[test]
@@ -341,5 +430,80 @@ mod tests {
         for v in 0..n {
             assert!((all[3 * n + v] - row3[v]).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn per_pair_methods_run_through_the_engine() {
+        let ds = tiny_dataset(5, 6, 20, 3, 4);
+        let ds = std::sync::Arc::new(ds);
+        let eng = LcEngine::new(std::sync::Arc::clone(&ds), EngineParams { threads: 2, ..Default::default() });
+        let n = ds.len();
+        for method in [Method::BowAdjusted, Method::Ict, Method::Sinkhorn, Method::Exact] {
+            let row = eng.distances(&ds.histogram(0), method);
+            assert_eq!(row.len(), n, "{method}");
+            assert!(row.iter().all(|d| d.is_finite() && *d >= 0.0), "{method}");
+        }
+        // per-pair engine rows must agree with the registry's pair objects
+        let registry = eng.registry();
+        let exact = registry.distance(Method::Exact);
+        let row = eng.distances(&ds.histogram(1), Method::Exact);
+        for u in 0..n {
+            let want = exact
+                .distance(&ds.embeddings, &ds.histogram(u), &ds.histogram(1))
+                .unwrap() as f32;
+            assert!((row[u] - want).abs() < 1e-6, "doc {u}");
+        }
+    }
+
+    #[test]
+    fn per_pair_all_pairs_chain_vs_lc_bounds() {
+        // ICT through the fallback must dominate LC-ACT which dominates
+        // LC-RWMD, elementwise, on the symmetric matrices.
+        let ds = tiny_dataset(6, 8, 24, 3, 5);
+        let eng = LcEngine::new(std::sync::Arc::new(ds), EngineParams { threads: 2, ..Default::default() });
+        let r = eng.all_pairs_symmetric(Method::Rwmd);
+        let a = eng.all_pairs_symmetric(Method::Act { k: 3 });
+        let i = eng.all_pairs_symmetric(Method::Ict);
+        let e = eng.all_pairs_symmetric(Method::Exact);
+        for x in 0..r.len() {
+            assert!(r[x] <= a[x] + 1e-5, "RWMD > ACT at {x}");
+            assert!(a[x] <= i[x] + 1e-5, "ACT > ICT at {x}");
+            assert!(i[x] <= e[x] + 1e-4, "ICT > EMD at {x}");
+        }
+    }
+
+    #[test]
+    fn batch_honors_registry_sinkhorn_params() {
+        use crate::approx::SinkhornParams;
+        let ds = std::sync::Arc::new(tiny_dataset(8, 6, 20, 3, 4));
+        let eng = std::sync::Arc::new(LcEngine::new(
+            std::sync::Arc::clone(&ds),
+            EngineParams { threads: 1, ..Default::default() },
+        ));
+        let loose = MethodRegistry::new(Metric::L2)
+            .with_sinkhorn(SinkhornParams { lambda: 2.0, max_iters: 300, tol: 1e-9 });
+        let tight = MethodRegistry::new(Metric::L2)
+            .with_sinkhorn(SinkhornParams { lambda: 80.0, max_iters: 300, tol: 1e-9 });
+        let q = ds.histogram(0);
+        let rl = loose.batch(&eng, Method::Sinkhorn).distances(&q).unwrap();
+        let rt = tight.batch(&eng, Method::Sinkhorn).distances(&q).unwrap();
+        assert_ne!(rl, rt, "custom SinkhornParams must flow through batch objects");
+    }
+
+    #[test]
+    fn lc_batch_implements_batch_distance() {
+        let ds = std::sync::Arc::new(tiny_dataset(7, 6, 20, 3, 4));
+        let eng = std::sync::Arc::new(LcEngine::new(
+            std::sync::Arc::clone(&ds),
+            EngineParams { threads: 2, ..Default::default() },
+        ));
+        let registry = MethodRegistry::new(Metric::L2);
+        let batch = registry.batch(&eng, Method::Act { k: 2 });
+        assert_eq!(batch.method(), Method::Act { k: 2 });
+        assert_eq!(batch.num_rows(), 6);
+        let row = batch.distances(&ds.histogram(2)).unwrap();
+        assert_eq!(row, eng.distances(&ds.histogram(2), Method::Act { k: 2 }));
+        let m = batch.all_pairs_symmetric().unwrap();
+        assert_eq!(m.len(), 36);
     }
 }

@@ -3,12 +3,17 @@
 //! 2+3 (per database tile).  CPU-native implementation; the PJRT artifact
 //! path in [`crate::runtime`] executes the same pipeline from AOT-compiled
 //! JAX/Pallas HLO.
+//!
+//! Method selection uses the canonical [`crate::core::Method`] enum
+//! (re-exported here for convenience); the engine also serves the per-pair
+//! comparators through the same interface via [`crate::core::MethodRegistry`].
 
 pub mod engine;
 pub mod plan;
 pub mod transfers;
 
-pub use engine::{EngineParams, LcEngine, Method};
+pub use crate::core::Method;
+pub use engine::{EngineParams, LcBatch, LcEngine};
 pub use plan::{plan_query, snapped_distance, PlanParams, QueryPlan};
 pub use transfers::{
     act_direction_a, omr_direction_a, rwmd_direction_a, rwmd_direction_b,

@@ -5,20 +5,34 @@
 //! OMR / ICT / ACT lower bounds on EMD and the linear-complexity batched
 //! LC-RWMD / LC-ACT similarity-search pipeline.
 //!
+//! Start with [`prelude`]: it re-exports the unified distance API — the
+//! canonical [`core::Method`] enum, the [`core::Distance`] /
+//! [`core::BatchDistance`] traits, the [`core::MethodRegistry`] that maps
+//! every method (including Sinkhorn and exact EMD) to boxed trait objects,
+//! the crate-wide [`core::EmdError`], and the [`builder::EngineBuilder`]
+//! that assembles the engine stack (dataset → params → backend → build).
+//!
 //! Layering (see DESIGN.md):
-//! * [`core`] — histograms, vocabulary embeddings, CSR database matrix.
+//! * [`core`] — histograms, vocabulary embeddings, CSR database matrix,
+//!   and the unified distance API (`Method`, `Distance`, `BatchDistance`,
+//!   `MethodRegistry`, `EmdError`).
 //! * [`exact`] — exact EMD (min-cost-flow) ground truth.
-//! * [`approx`] — per-pair approximations: RWMD, OMR, ICT, ACT, Sinkhorn,
-//!   BoW cosine, WCD.
+//! * [`approx`] — per-pair approximations: BoW-adjusted, RWMD, OMR, ICT,
+//!   ACT, Sinkhorn, BoW cosine, WCD.
 //! * [`lc`] — the paper's contribution: linear-complexity data-parallel
-//!   LC-RWMD / LC-ACT engines (multithreaded CPU).
+//!   LC-RWMD / LC-ACT engines (multithreaded CPU), with per-pair fallback
+//!   so every method serves through one interface.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`).
-//! * [`coordinator`] — the serving layer: batching, sharding, top-ℓ search.
+//!   artifacts (`artifacts/*.hlo.txt`); gated behind the `pjrt` feature.
+//! * [`coordinator`] — the serving layer: batching, sharding, cascades,
+//!   top-ℓ search.
+//! * [`builder`] — `EngineBuilder`, the one place configuration becomes
+//!   running engines.
 //! * [`data`] — synthetic MNIST-like / 20News-like dataset generators.
 //! * [`eval`] — precision@top-ℓ evaluation and experiment harness.
 
 pub mod approx;
+pub mod builder;
 pub mod config;
 pub mod coordinator;
 pub mod core;
@@ -28,3 +42,18 @@ pub mod exact;
 pub mod lc;
 pub mod runtime;
 pub mod util;
+
+/// The unified API surface: everything needed to select a method, build an
+/// engine, and run searches.
+pub mod prelude {
+    pub use crate::builder::EngineBuilder;
+    pub use crate::config::{Backend, Config, DatasetSpec};
+    pub use crate::coordinator::{
+        cascade_search, CascadeResult, SearchEngine, SearchResult, Server,
+    };
+    pub use crate::core::{
+        BatchDistance, Dataset, Distance, EmdError, EmdResult, Embeddings, Histogram, Method,
+        MethodRegistry, Metric, METHOD_SYNTAX,
+    };
+    pub use crate::lc::{EngineParams, LcBatch, LcEngine};
+}

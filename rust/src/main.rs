@@ -3,20 +3,22 @@
 //! Subcommands:
 //! * `datasets`        generate / persist / inspect datasets (Table 4)
 //! * `search`          one query against a dataset, print top-ℓ
+//! * `cascade`         two-stage search: RWMD prefilter + tighter rerank
 //! * `eval`            reproduce the paper's accuracy tables (5, 6) & sweeps
 //! * `serve`           run the TCP search server
 //! * `artifacts-check` compile every artifact and cross-check PJRT vs native
+//!
+//! All method dispatch goes through the canonical [`Method`] enum and the
+//! [`EngineBuilder`] from `emdpar::prelude`.
 
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Result};
-
-use emdpar::config::Config;
-use emdpar::coordinator::{SearchEngine, Server};
-use emdpar::core::Metric;
 use emdpar::data::{self, MnistConfig, TextConfig};
 use emdpar::eval::{render_markdown, sweep_all_pairs, sweep_subset};
-use emdpar::lc::{EngineParams, Method};
+use emdpar::prelude::{
+    cascade_search, Config, EmdError, EmdResult, EngineBuilder, EngineParams, LcEngine, Method,
+    Metric, Server, METHOD_SYNTAX,
+};
 use emdpar::runtime::{ArtifactEngine, Executor};
 use emdpar::util::cli::CommandSpec;
 use emdpar::util::logging;
@@ -33,6 +35,7 @@ fn main() {
     let result = match sub.as_str() {
         "datasets" => cmd_datasets(rest),
         "search" => cmd_search(rest),
+        "cascade" => cmd_cascade(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
         "artifacts-check" => cmd_artifacts_check(rest),
@@ -43,7 +46,7 @@ fn main() {
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
@@ -55,6 +58,7 @@ fn print_help() {
          Subcommands:\n\
          \x20 datasets         generate/persist/inspect datasets (--help)\n\
          \x20 search           top-ℓ query against a dataset (--help)\n\
+         \x20 cascade          RWMD prefilter + tighter rerank search (--help)\n\
          \x20 eval             reproduce accuracy tables / sweeps (--help)\n\
          \x20 serve            run the TCP search server (--help)\n\
          \x20 artifacts-check  compile artifacts, verify PJRT == native\n"
@@ -64,13 +68,13 @@ fn print_help() {
 fn common_opts(spec: CommandSpec) -> CommandSpec {
     spec.opt("dataset", "synth-mnist:1000", "dataset: <file.bin> | synth-mnist[:n] | synth-text[:n]")
         .opt("config", "", "JSON config file (CLI flags override it)")
-        .opt("method", "", "bow | wcd | rwmd | omr | act-<j>")
+        .opt("method", "", METHOD_SYNTAX)
         .opt("threads", "", "worker threads")
         .opt("backend", "", "native | artifact")
         .opt("topl", "", "results per query")
 }
 
-fn build_config(parsed: &emdpar::util::cli::Parsed) -> Result<Config> {
+fn build_config(parsed: &emdpar::util::cli::Parsed) -> EmdResult<Config> {
     let mut cfg = match parsed.opt_str("config") {
         Some(path) if !path.is_empty() => Config::from_file(Path::new(path))?,
         _ => Config::default(),
@@ -81,7 +85,7 @@ fn build_config(parsed: &emdpar::util::cli::Parsed) -> Result<Config> {
 
 // ---------------------------------------------------------------------------
 
-fn cmd_datasets(args: &[String]) -> Result<()> {
+fn cmd_datasets(args: &[String]) -> EmdResult<()> {
     let spec = CommandSpec::new("datasets", "generate / persist / inspect datasets")
         .opt("kind", "mnist", "mnist | text")
         .opt("n", "1000", "number of items")
@@ -110,7 +114,7 @@ fn cmd_datasets(args: &[String]) -> Result<()> {
             seed: p.usize("seed")? as u64,
             ..Default::default()
         }),
-        other => bail!("unknown dataset kind '{other}'"),
+        other => return Err(EmdError::parse("dataset kind", other, "mnist | text")),
     };
     let st = ds.stats();
     println!(
@@ -132,7 +136,7 @@ fn cmd_datasets(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_search(args: &[String]) -> Result<()> {
+fn cmd_search(args: &[String]) -> EmdResult<()> {
     let spec = common_opts(CommandSpec::new("search", "top-ℓ query against a dataset"))
         .opt("id", "0", "query by database row id");
     if args.iter().any(|a| a == "--help") {
@@ -143,9 +147,9 @@ fn cmd_search(args: &[String]) -> Result<()> {
     let cfg = build_config(&p)?;
     let method = cfg.method;
     let l = cfg.topl;
-    let engine = SearchEngine::from_config(cfg)?;
+    let engine = EngineBuilder::from_config(cfg).build_search()?;
     let id = p.usize("id")?;
-    anyhow::ensure!(id < engine.dataset().len(), "--id out of range");
+    emdpar::emd_ensure!(id < engine.dataset().len(), "--id out of range");
     let query = engine.dataset().histogram(id);
     let res = engine.search(&query, method, l)?;
     println!(
@@ -165,12 +169,61 @@ fn cmd_search(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_eval(args: &[String]) -> Result<()> {
+fn cmd_cascade(args: &[String]) -> EmdResult<()> {
+    // deliberately NOT common_opts: stage 1 is always LC-RWMD on the native
+    // engine, so --method/--backend would be accepted-but-ignored noise
+    let spec = CommandSpec::new(
+        "cascade",
+        "two-stage search: LC-RWMD prefilter, tighter rerank on survivors",
+    )
+    .opt("dataset", "synth-mnist:1000", "dataset: <file.bin> | synth-mnist[:n] | synth-text[:n]")
+    .opt("config", "", "JSON config file (CLI flags override it)")
+    .opt("threads", "", "worker threads")
+    .opt("topl", "", "results per query")
+    .opt("id", "0", "query by database row id")
+    .opt("rerank", "emd", "stage-2 measure: omr | act-<j> | ict | sinkhorn | emd")
+    .opt("overfetch", "8", "stage-1 candidates = overfetch x topl");
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage("emdpar"));
+        return Ok(());
+    }
+    let p = spec.parse(args)?;
+    let cfg = build_config(&p)?;
+    let l = cfg.topl;
+    let rerank = Method::parse(p.str("rerank"))?;
+    let overfetch = p.usize("overfetch")?.max(1);
+    let engine: LcEngine = EngineBuilder::from_config(cfg).symmetric(false).build_lc()?;
+    let id = p.usize("id")?;
+    emdpar::emd_ensure!(id < engine.dataset().len(), "--id out of range");
+    let query = engine.dataset().histogram(id);
+    let res = cascade_search(&engine, &query, rerank, l, overfetch)?;
+    println!(
+        "cascade: RWMD prefilter -> {} rerank, top-{l} (overfetch {overfetch}, \
+         reranked {}, certified: {})",
+        rerank.name(),
+        res.reranked,
+        res.certified
+    );
+    for (rank, &(d, hit)) in res.hits.iter().enumerate() {
+        println!(
+            "  #{:<3} id={hit:<6} label={:<4} distance={d:.6}",
+            rank + 1,
+            engine.dataset().labels[hit]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> EmdResult<()> {
     let spec = common_opts(CommandSpec::new(
         "eval",
         "reproduce accuracy/runtime experiments (Tables 5-6, Fig. 8 protocol)",
     ))
-    .opt("methods", "bow,rwmd,omr,act-1,act-3,act-7", "comma-separated method list")
+    .opt(
+        "methods",
+        "bow,rwmd,omr,act-1,act-3,act-7",
+        "comma-separated method list (sinkhorn and emd are valid too)",
+    )
     .opt("ls", "1,16,128", "comma-separated top-ℓ values")
     .opt("subset", "0", "query only the first N docs (0 = all-pairs)");
     if args.iter().any(|a| a == "--help") {
@@ -180,11 +233,7 @@ fn cmd_eval(args: &[String]) -> Result<()> {
     let p = spec.parse(args)?;
     let cfg = build_config(&p)?;
     let ds = std::sync::Arc::new(cfg.load_dataset()?);
-    let methods: Vec<Method> = p
-        .str("methods")
-        .split(',')
-        .map(|s| Method::parse(s.trim()).ok_or_else(|| anyhow!("bad method '{s}'")))
-        .collect::<Result<_>>()?;
+    let methods = Method::parse_list(p.str("methods"))?;
     let ls = p.usize_list("ls")?;
     let params = EngineParams {
         metric: Metric::L2,
@@ -193,15 +242,15 @@ fn cmd_eval(args: &[String]) -> Result<()> {
     };
     let subset = p.usize("subset")?;
     let rows = if subset > 0 {
-        sweep_subset(&ds, subset, &methods, &ls, params)
+        sweep_subset(&ds, subset, &methods, &ls, params)?
     } else {
-        sweep_all_pairs(&ds, &methods, &ls, params)
+        sweep_all_pairs(&ds, &methods, &ls, params)?
     };
     println!("{}", render_markdown(&format!("{} (n={})", ds.name, ds.len()), &rows));
     Ok(())
 }
 
-fn cmd_serve(args: &[String]) -> Result<()> {
+fn cmd_serve(args: &[String]) -> EmdResult<()> {
     let spec = common_opts(CommandSpec::new("serve", "run the TCP search server"))
         .opt("listen", "", "bind address (default from config)");
     if args.iter().any(|a| a == "--help") {
@@ -216,7 +265,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
     }
     let listen = cfg.listen.clone();
-    let engine = SearchEngine::from_config(cfg)?;
+    let engine = EngineBuilder::from_config(cfg).build_search()?;
     println!(
         "dataset '{}' ({} docs) ready; listening on {listen}",
         engine.dataset().name,
@@ -226,7 +275,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     server.serve()
 }
 
-fn cmd_artifacts_check(args: &[String]) -> Result<()> {
+fn cmd_artifacts_check(args: &[String]) -> EmdResult<()> {
     let spec = CommandSpec::new("artifacts-check", "compile artifacts; verify PJRT == native")
         .opt("dir", "artifacts", "artifact directory")
         .opt("profile", "dev", "profile to cross-check numerically");
@@ -246,7 +295,7 @@ fn cmd_artifacts_check(args: &[String]) -> Result<()> {
         .artifacts
         .values()
         .find(|a| a.profile == profile && a.entry == emdpar::runtime::Entry::Fused)
-        .ok_or_else(|| anyhow!("no fused artifact in profile '{profile}'"))?
+        .ok_or_else(|| EmdError::artifact(format!("no fused artifact in profile '{profile}'")))?
         .clone();
     let ds = data::generate_text(&TextConfig {
         n: 64,
@@ -261,7 +310,7 @@ fn cmd_artifacts_check(args: &[String]) -> Result<()> {
     let k = exec.manifest().ks_for(profile).into_iter().find(|&k| k >= 2).unwrap_or(1);
     let q = ds.histogram(0);
     let got = art.distances(&q, k, true)?;
-    let native = emdpar::lc::LcEngine::new(
+    let native = LcEngine::new(
         std::sync::Arc::new(ds.clone()),
         EngineParams { metric: Metric::L2, threads: 2, symmetric: true },
     )
@@ -274,7 +323,7 @@ fn cmd_artifacts_check(args: &[String]) -> Result<()> {
         "profile '{profile}' k={k}: max |PJRT - native| = {max_err:.2e} over {} docs",
         got.len()
     );
-    anyhow::ensure!(max_err < 1e-3, "artifact/native mismatch {max_err}");
+    emdpar::emd_ensure!(max_err < 1e-3, "artifact/native mismatch {max_err}");
     println!("artifacts-check OK");
     Ok(())
 }

@@ -9,9 +9,8 @@
 //!   0, so they never enter a real top-k (enforced by `k <= h_real`);
 //! * database rows beyond n: zero rows, cost exactly 0, trimmed on return.
 
-use anyhow::{anyhow, Result};
-
-use crate::core::{Dataset, Histogram};
+use crate::core::{Dataset, EmdError, EmdResult, Histogram};
+use crate::emd_ensure;
 
 use super::executor::Executor;
 use super::manifest::Entry;
@@ -36,18 +35,19 @@ pub struct ArtifactEngine<'a> {
 
 impl<'a> ArtifactEngine<'a> {
     /// Bind `dataset` to `profile` artifacts from `exec`'s manifest.
-    pub fn new(exec: &'a Executor, dataset: &'a Dataset, profile: &str) -> Result<Self> {
+    pub fn new(exec: &'a Executor, dataset: &'a Dataset, profile: &str) -> EmdResult<Self> {
         let spec = exec
             .manifest()
             .artifacts
             .values()
             .find(|a| a.profile == profile && a.entry == Entry::Fused)
-            .ok_or_else(|| anyhow!("profile '{profile}' not in manifest"))?;
+            .ok_or_else(|| EmdError::artifact(format!("profile '{profile}' not in manifest")))?;
         let (v_art, h_art, n_art, m) = (spec.v, spec.h, spec.n, spec.m);
         let v = dataset.embeddings.num_vectors();
-        anyhow::ensure!(v <= v_art, "dataset vocab {v} exceeds artifact v {v_art}");
-        anyhow::ensure!(
+        emd_ensure!(v <= v_art, artifact, "dataset vocab {v} exceeds artifact v {v_art}");
+        emd_ensure!(
             dataset.embeddings.dim() == m,
+            artifact,
             "dataset dim {} != artifact m {m}",
             dataset.embeddings.dim()
         );
@@ -93,11 +93,11 @@ impl<'a> ArtifactEngine<'a> {
     }
 
     /// Pad a query histogram to (h_art) coordinates + weights.
-    fn pad_query(&self, query: &Histogram) -> Result<(Vec<f32>, Vec<f32>, usize)> {
+    fn pad_query(&self, query: &Histogram) -> EmdResult<(Vec<f32>, Vec<f32>, usize)> {
         let qn = query.normalized();
         let h = qn.len();
-        anyhow::ensure!(h > 0, "empty query");
-        anyhow::ensure!(h <= self.h_art, "query h {h} exceeds artifact h {}", self.h_art);
+        emd_ensure!(h > 0, artifact, "empty query");
+        emd_ensure!(h <= self.h_art, artifact, "query h {h} exceeds artifact h {}", self.h_art);
         let mut q_buf = vec![PAD_OFFSET; self.h_art * self.m];
         let mut qw_buf = vec![0.0f32; self.h_art];
         for (j, (i, w)) in qn.iter().enumerate() {
@@ -111,24 +111,29 @@ impl<'a> ArtifactEngine<'a> {
     /// ACT-(k-1) direction-A bounds for every database row, via the
     /// phase1-once + phase2-per-tile artifact pipeline.  With `symmetric`,
     /// also runs the direction-B RWMD artifact and takes the max.
-    pub fn distances(&self, query: &Histogram, k: usize, symmetric: bool) -> Result<Vec<f32>> {
+    pub fn distances(&self, query: &Histogram, k: usize, symmetric: bool) -> EmdResult<Vec<f32>> {
         let (q_buf, qw_buf, h_real) = self.pad_query(query)?;
-        anyhow::ensure!(
+        emd_ensure!(
             k <= h_real,
+            artifact,
             "k={k} exceeds query support {h_real}; padded bins would enter the top-k"
         );
         let p1 = self
             .exec
             .manifest()
             .find(&self.profile, Entry::Phase1, k)
-            .ok_or_else(|| anyhow!("no phase1 artifact for profile {} k={k}", self.profile))?
+            .ok_or_else(|| {
+                EmdError::artifact(format!("no phase1 artifact for profile {} k={k}", self.profile))
+            })?
             .name
             .clone();
         let p2 = self
             .exec
             .manifest()
             .find(&self.profile, Entry::Phase2, k)
-            .ok_or_else(|| anyhow!("no phase2 artifact for profile {} k={k}", self.profile))?
+            .ok_or_else(|| {
+                EmdError::artifact(format!("no phase2 artifact for profile {} k={k}", self.profile))
+            })?
             .name
             .clone();
 
@@ -162,7 +167,9 @@ impl<'a> ArtifactEngine<'a> {
                 .exec
                 .manifest()
                 .find(&self.profile, Entry::RwmdB, 1)
-                .ok_or_else(|| anyhow!("no rwmd_b artifact for profile {}", self.profile))?
+                .ok_or_else(|| {
+                    EmdError::artifact(format!("no rwmd_b artifact for profile {}", self.profile))
+                })?
                 .name
                 .clone();
             let mut pos = 0usize;
@@ -189,14 +196,21 @@ impl<'a> ArtifactEngine<'a> {
 
     /// Single-call fused pipeline on the first tile only — used by the
     /// quickstart and by equivalence tests.
-    pub fn distances_fused_tile(&self, query: &Histogram, k: usize, tile: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+    pub fn distances_fused_tile(
+        &self,
+        query: &Histogram,
+        k: usize,
+        tile: usize,
+    ) -> EmdResult<(Vec<f32>, Vec<f32>)> {
         let (q_buf, qw_buf, h_real) = self.pad_query(query)?;
-        anyhow::ensure!(k <= h_real, "k={k} exceeds query support {h_real}");
+        emd_ensure!(k <= h_real, artifact, "k={k} exceeds query support {h_real}");
         let fused = self
             .exec
             .manifest()
             .find(&self.profile, Entry::Fused, k)
-            .ok_or_else(|| anyhow!("no fused artifact for profile {} k={k}", self.profile))?
+            .ok_or_else(|| {
+                EmdError::artifact(format!("no fused artifact for profile {} k={k}", self.profile))
+            })?
             .name
             .clone();
         let outs = self.exec.run(

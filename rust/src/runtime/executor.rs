@@ -1,25 +1,22 @@
 //! PJRT executor: load HLO-text artifacts, compile them once on the CPU
 //! client, and run them with f32 buffers.
 //!
-//! This is the only module that touches the `xla` crate.  HLO **text** is
-//! the interchange format (`HloModuleProto::from_text_file` reassigns
-//! instruction ids; serialized jax>=0.5 protos are rejected by
+//! This is the only module that touches the `xla` crate, and the dependency
+//! is gated behind the **`pjrt` cargo feature** so the default build is
+//! dependency-free (the driver/CI environment has no crates.io access).
+//! Without the feature, [`Executor::new`] validates the artifact directory
+//! and then reports [`crate::core::EmdError::Artifact`]; every caller in
+//! the stack already degrades gracefully (skips the artifact path with a
+//! message).  To use the real runtime, add the vendored `xla` crate as a
+//! dependency and build with `--features pjrt`.
+//!
+//! HLO **text** is the interchange format (`HloModuleProto::from_text_file`
+//! reassigns instruction ids; serialized jax>=0.5 protos are rejected by
 //! xla_extension 0.5.1 — see DESIGN.md).
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
-
-use anyhow::{anyhow, Context, Result};
+use crate::core::{EmdError, EmdResult};
 
 use super::manifest::{ArtifactSpec, Manifest};
-
-/// A compiled-executable cache over one PJRT client.
-pub struct Executor {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
-}
 
 /// An f32 tensor result from an artifact execution.
 #[derive(Debug, Clone)]
@@ -28,115 +25,207 @@ pub struct Tensor {
     pub dims: Vec<usize>,
 }
 
-impl Executor {
-    /// Create a CPU PJRT client and attach the artifact manifest.
-    pub fn new(artifact_dir: &Path) -> Result<Executor> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Executor { client, manifest, compiled: Mutex::new(HashMap::new()) })
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::Mutex;
+
+    use super::{ArtifactSpec, EmdError, EmdResult, Manifest, Tensor};
+
+    /// A compiled-executable cache over one PJRT client.
+    pub struct Executor {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) an artifact by name.
-    fn ensure_compiled(&self, name: &str) -> Result<()> {
-        {
-            let cache = self.compiled.lock().unwrap();
-            if cache.contains_key(name) {
-                return Ok(());
-            }
+    impl Executor {
+        /// Create a CPU PJRT client and attach the artifact manifest.
+        pub fn new(artifact_dir: &Path) -> EmdResult<Executor> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| EmdError::artifact(format!("creating PJRT CPU client: {e}")))?;
+            Ok(Executor { client, manifest, compiled: Mutex::new(HashMap::new()) })
         }
-        let spec = self
-            .manifest
-            .artifacts
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
-        let path = spec
-            .file
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 artifact path {:?}", spec.file))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
-        let computation = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&computation)
-            .with_context(|| format!("compiling artifact '{name}'"))?;
-        self.compiled.lock().unwrap().insert(name.to_string(), exe);
-        Ok(())
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch from cache) an artifact by name.
+        fn ensure_compiled(&self, name: &str) -> EmdResult<()> {
+            {
+                let cache = self.compiled.lock().unwrap();
+                if cache.contains_key(name) {
+                    return Ok(());
+                }
+            }
+            let spec = self
+                .manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| EmdError::artifact(format!("unknown artifact '{name}'")))?;
+            let path = spec
+                .file
+                .to_str()
+                .ok_or_else(|| EmdError::artifact(format!("non-utf8 artifact path {:?}", spec.file)))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| EmdError::artifact(format!("parsing HLO text {path}: {e}")))?;
+            let computation = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&computation)
+                .map_err(|e| EmdError::artifact(format!("compiling artifact '{name}': {e}")))?;
+            self.compiled.lock().unwrap().insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        /// Number of artifacts compiled so far (diagnostics).
+        pub fn compiled_count(&self) -> usize {
+            self.compiled.lock().unwrap().len()
+        }
+
+        /// Execute an artifact on f32 inputs.  `inputs` are (data, dims)
+        /// pairs matching the manifest's declared parameter order; returns
+        /// the output tuple decomposed into tensors.
+        pub fn run(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> EmdResult<Vec<Tensor>> {
+            self.ensure_compiled(name)?;
+            let spec = &self.manifest.artifacts[name];
+
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    let lit = xla::Literal::vec1(data);
+                    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims_i64)
+                        .map_err(|e| EmdError::artifact(format!("reshaping input to {dims:?}: {e}")))
+                })
+                .collect::<EmdResult<_>>()?;
+
+            let cache = self.compiled.lock().unwrap();
+            let exe = &cache[name];
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| EmdError::artifact(format!("executing '{name}': {e}")))?;
+            let mut out_lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| EmdError::artifact(format!("copying result to host: {e}")))?;
+            drop(cache);
+
+            // aot.py lowers with return_tuple=True: always a tuple, even arity 1
+            let parts = out_lit
+                .decompose_tuple()
+                .map_err(|e| EmdError::artifact(format!("decomposing result tuple: {e}")))?;
+            if parts.len() != spec.entry.arity() {
+                return Err(EmdError::artifact(format!(
+                    "artifact '{name}' returned {} outputs, manifest says {}",
+                    parts.len(),
+                    spec.entry.arity()
+                )));
+            }
+            parts
+                .into_iter()
+                .map(|lit| {
+                    let shape = lit
+                        .array_shape()
+                        .map_err(|e| EmdError::artifact(format!("result shape: {e}")))?;
+                    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                    let data = lit
+                        .to_vec::<f32>()
+                        .map_err(|e| EmdError::artifact(format!("result to_vec: {e}")))?;
+                    Ok(Tensor { data, dims })
+                })
+                .collect()
+        }
+
+        /// Convenience: run and require exactly one output.
+        pub fn run1(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> EmdResult<Tensor> {
+            let mut out = self.run(name, inputs)?;
+            if out.len() != 1 {
+                return Err(EmdError::artifact(format!("expected 1 output, got {}", out.len())));
+            }
+            Ok(out.remove(0))
+        }
+
+        /// Direct access to an artifact spec.
+        pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+            self.manifest.artifacts.get(name)
+        }
     }
 
-    /// Number of artifacts compiled so far (diagnostics).
-    pub fn compiled_count(&self) -> usize {
-        self.compiled.lock().unwrap().len()
+    // PJRT client handles are internally synchronized; the Mutex above
+    // guards only our cache map.
+    unsafe impl Sync for Executor {}
+    unsafe impl Send for Executor {}
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::Path;
+
+    use super::{ArtifactSpec, EmdError, EmdResult, Manifest, Tensor};
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime not compiled in: rebuild with `--features pjrt` (requires the `xla` crate)";
+
+    /// Offline stub: validates the artifact directory, then reports the
+    /// runtime as unavailable.  Keeps the public surface identical so the
+    /// rest of the stack compiles unchanged.
+    pub struct Executor {
+        manifest: Manifest,
     }
 
-    /// Execute an artifact on f32 inputs.  `inputs` are (data, dims) pairs
-    /// matching the manifest's declared parameter order; returns the output
-    /// tuple decomposed into tensors.
-    pub fn run(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Tensor>> {
-        self.ensure_compiled(name)?;
-        let spec = &self.manifest.artifacts[name];
+    impl Executor {
+        pub fn new(artifact_dir: &Path) -> EmdResult<Executor> {
+            // still surface manifest problems first — the more actionable error
+            let _manifest = Manifest::load(artifact_dir)?;
+            Err(EmdError::artifact(UNAVAILABLE))
+        }
 
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                let lit = xla::Literal::vec1(data);
-                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims_i64)
-                    .with_context(|| format!("reshaping input to {dims:?}"))
-            })
-            .collect::<Result<_>>()?;
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
 
-        let cache = self.compiled.lock().unwrap();
-        let exe = &cache[name];
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing '{name}'"))?;
-        let mut out_lit = result[0][0]
-            .to_literal_sync()
-            .context("copying result to host")?;
-        drop(cache);
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
 
-        // aot.py lowers with return_tuple=True: always a tuple, even arity 1
-        let parts = out_lit.decompose_tuple().context("decomposing result tuple")?;
-        anyhow::ensure!(
-            parts.len() == spec.entry.arity(),
-            "artifact '{name}' returned {} outputs, manifest says {}",
-            parts.len(),
-            spec.entry.arity()
-        );
-        parts
-            .into_iter()
-            .map(|lit| {
-                let shape = lit.array_shape().context("result shape")?;
-                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-                let data = lit.to_vec::<f32>().context("result to_vec")?;
-                Ok(Tensor { data, dims })
-            })
-            .collect()
-    }
+        pub fn compiled_count(&self) -> usize {
+            0
+        }
 
-    /// Convenience: run and require exactly one output.
-    pub fn run1(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Tensor> {
-        let mut out = self.run(name, inputs)?;
-        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
-        Ok(out.remove(0))
-    }
+        pub fn run(&self, _name: &str, _inputs: &[(&[f32], &[usize])]) -> EmdResult<Vec<Tensor>> {
+            Err(EmdError::artifact(UNAVAILABLE))
+        }
 
-    /// Direct access to an artifact spec.
-    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
-        self.manifest.artifacts.get(name)
+        pub fn run1(&self, _name: &str, _inputs: &[(&[f32], &[usize])]) -> EmdResult<Tensor> {
+            Err(EmdError::artifact(UNAVAILABLE))
+        }
+
+        pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+            self.manifest.artifacts.get(name)
+        }
     }
 }
 
-// PJRT client handles are internally synchronized; the Mutex above guards
-// only our cache map.
-unsafe impl Sync for Executor {}
-unsafe impl Send for Executor {}
+pub use imp::Executor;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_dir_is_an_error_not_a_panic() {
+        let dir = std::env::temp_dir().join("emdpar_no_artifacts_here");
+        std::fs::remove_dir_all(&dir).ok();
+        let Err(err) = Executor::new(&dir) else {
+            panic!("must fail without artifacts");
+        };
+        assert!(matches!(err, EmdError::Artifact(_)), "{err}");
+    }
+}

@@ -4,8 +4,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::core::{EmdError, EmdResult};
 use crate::util::json::Json;
 
 /// Which pipeline stage an artifact implements.
@@ -22,14 +21,16 @@ pub enum Entry {
 }
 
 impl Entry {
-    fn parse(s: &str) -> Result<Entry> {
-        Ok(match s {
-            "phase1" => Entry::Phase1,
-            "phase2" => Entry::Phase2,
-            "fused" => Entry::Fused,
-            "rwmd_b" => Entry::RwmdB,
-            other => bail!("unknown artifact entry kind '{other}'"),
-        })
+    fn parse(s: &str) -> EmdResult<Entry> {
+        match s {
+            "phase1" => Ok(Entry::Phase1),
+            "phase2" => Ok(Entry::Phase2),
+            "fused" => Ok(Entry::Fused),
+            "rwmd_b" => Ok(Entry::RwmdB),
+            other => {
+                Err(EmdError::parse("artifact entry kind", other, "phase1 | phase2 | fused | rwmd_b"))
+            }
+        }
     }
 
     /// Number of outputs in the result tuple.
@@ -65,31 +66,33 @@ pub struct Manifest {
 
 impl Manifest {
     /// Load `<dir>/manifest.json`.
-    pub fn load(dir: &Path) -> Result<Manifest> {
+    pub fn load(dir: &Path) -> EmdResult<Manifest> {
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
-        let json = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            EmdError::artifact(format!("reading {path:?} (run `make artifacts`): {e}"))
+        })?;
+        let json =
+            Json::parse(&text).map_err(|e| EmdError::json(format!("parsing {path:?}: {e}")))?;
         if json.get("format").and_then(Json::as_str) != Some("hlo-text-v1") {
-            bail!("unsupported manifest format in {path:?}");
+            return Err(EmdError::artifact(format!("unsupported manifest format in {path:?}")));
         }
         let mut artifacts = BTreeMap::new();
         let entries = json
             .get("artifacts")
             .and_then(Json::as_obj)
-            .ok_or_else(|| anyhow!("manifest missing 'artifacts' object"))?;
+            .ok_or_else(|| EmdError::artifact("manifest missing 'artifacts' object"))?;
         for (name, e) in entries {
-            let get = |key: &str| -> Result<usize> {
-                e.get(key)
-                    .and_then(Json::as_usize)
-                    .ok_or_else(|| anyhow!("artifact '{name}' missing integer '{key}'"))
+            let get = |key: &str| -> EmdResult<usize> {
+                e.get(key).and_then(Json::as_usize).ok_or_else(|| {
+                    EmdError::artifact(format!("artifact '{name}' missing integer '{key}'"))
+                })
             };
             let spec = ArtifactSpec {
                 name: name.clone(),
                 entry: Entry::parse(
                     e.get("entry")
                         .and_then(Json::as_str)
-                        .ok_or_else(|| anyhow!("artifact '{name}' missing 'entry'"))?,
+                        .ok_or_else(|| EmdError::artifact(format!("artifact '{name}' missing 'entry'")))?,
                 )?,
                 profile: e
                     .get("profile")
@@ -99,7 +102,7 @@ impl Manifest {
                 file: dir.join(
                     e.get("file")
                         .and_then(Json::as_str)
-                        .ok_or_else(|| anyhow!("artifact '{name}' missing 'file'"))?,
+                        .ok_or_else(|| EmdError::artifact(format!("artifact '{name}' missing 'file'")))?,
                 ),
                 v: get("v")?,
                 h: get("h")?,

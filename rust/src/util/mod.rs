@@ -1,6 +1,7 @@
 //! Utility substrates built in-repo because the offline build environment
-//! only ships the `xla` crate's dependency closure (no rand / serde / clap /
-//! rayon / criterion / proptest).
+//! has no crates.io access (no rand / serde / clap / rayon / criterion /
+//! proptest / anyhow) — the default build is dependency-free; even the
+//! `xla` crate is gated behind the `pjrt` feature.
 
 pub mod cli;
 pub mod json;

@@ -35,7 +35,8 @@ fn text_precision_act_beats_bow_and_rwmd() {
         &[Method::Bow, Method::Rwmd, Method::Act { k: 2 }],
         &[8],
         EngineParams { threads: 4, ..Default::default() },
-    );
+    )
+    .unwrap();
     let p = |name: &str| {
         rows.iter().find(|r| r.method == name).map(|r| r.precision[0].1).unwrap()
     };

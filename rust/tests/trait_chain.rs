@@ -1,0 +1,200 @@
+//! Integration: the theorem chain through the *unified distance API* —
+//! every bound obtained via `MethodRegistry` lookup (boxed `Distance` /
+//! `BatchDistance` trait objects), never by calling the per-module free
+//! functions directly.  On random datasets the chain
+//!
+//! ```text
+//! BoW-adjusted <= RWMD <= OMR <= ACT-k <= ACT-k' (k' > k) <= ICT <= EMD
+//! ```
+//!
+//! must hold pairwise, Sinkhorn must upper-bound exact EMD, and the batched
+//! `BatchDistance` objects must agree with the per-pair objects.
+
+use std::sync::Arc;
+
+use emdpar::data::{generate_text, TextConfig};
+use emdpar::prelude::{
+    BatchDistance, Distance, Embeddings, EngineBuilder, EngineParams, Histogram, LcEngine,
+    Method, MethodRegistry, Metric,
+};
+use emdpar::util::prop::{check, ensure, Prop};
+use emdpar::util::rng::Rng;
+
+fn random_vocab(rng: &mut Rng, v: usize, m: usize) -> Embeddings {
+    Embeddings::new((0..v * m).map(|_| rng.normal() as f32).collect(), v, m)
+}
+
+fn random_hist(rng: &mut Rng, v: usize, support: usize) -> Histogram {
+    let idx = rng.sample_indices(v, support);
+    Histogram::from_pairs(
+        idx.into_iter().map(|i| (i as u32, rng.range_f64(0.05, 1.0) as f32)).collect(),
+    )
+    .normalized()
+}
+
+/// Overlapping pair: q shares `overlap` of p's support.
+fn overlapping_pair(rng: &mut Rng, v: usize, h: usize, overlap: f64) -> (Histogram, Histogram) {
+    let p = random_hist(rng, v, h);
+    let n_shared = (overlap * h as f64) as usize;
+    let mut pairs: Vec<(u32, f32)> = p
+        .indices()
+        .iter()
+        .take(n_shared)
+        .map(|&i| (i, rng.range_f64(0.05, 1.0) as f32))
+        .collect();
+    while pairs.len() < h {
+        let i = rng.below(v) as u32;
+        if !pairs.iter().any(|&(j, _)| j == i) {
+            pairs.push((i, rng.range_f64(0.05, 1.0) as f32));
+        }
+    }
+    (p, Histogram::from_pairs(pairs).normalized())
+}
+
+/// The chain, cheapest first, as registry lookups.
+fn chain_methods() -> Vec<Method> {
+    vec![
+        Method::BowAdjusted,
+        Method::Rwmd,
+        Method::Omr,
+        Method::Act { k: 2 },
+        Method::Act { k: 4 },
+        Method::Ict,
+        Method::Exact,
+    ]
+}
+
+#[test]
+fn theorem_chain_through_registry_objects() {
+    let registry = MethodRegistry::new(Metric::L2);
+    let bounds: Vec<Box<dyn Distance>> =
+        chain_methods().into_iter().map(|m| registry.distance(m)).collect();
+    check("trait-chain", 0x7C4A1, 40, |rng| {
+        let vocab = random_vocab(rng, 24, 3);
+        let overlap = [0.0, 0.3, 0.7, 1.0][rng.below(4)];
+        let (p, q) = overlapping_pair(rng, 24, 8, overlap);
+        let vals: Vec<f64> =
+            bounds.iter().map(|b| b.distance(&vocab, &p, &q).unwrap()).collect();
+        for w in 0..vals.len() - 1 {
+            if vals[w] > vals[w + 1] + 1e-5 {
+                return Prop::Fail(format!(
+                    "{} = {} > {} = {} (overlap {overlap})",
+                    bounds[w].name(),
+                    vals[w],
+                    bounds[w + 1].name(),
+                    vals[w + 1]
+                ));
+            }
+        }
+        Prop::Ok
+    });
+}
+
+#[test]
+fn sinkhorn_upper_bounds_exact_through_registry() {
+    let registry = MethodRegistry::new(Metric::L2);
+    let sinkhorn = registry.distance(Method::Sinkhorn);
+    let exact = registry.distance(Method::Exact);
+    check("trait-sinkhorn", 0x51AC, 15, |rng| {
+        let vocab = random_vocab(rng, 12, 2);
+        let p = random_hist(rng, 12, 5);
+        let q = random_hist(rng, 12, 5);
+        let s = sinkhorn.distance(&vocab, &p, &q).unwrap();
+        let e = exact.distance(&vocab, &p, &q).unwrap();
+        ensure(s >= e - 1e-5, || format!("sinkhorn {s} < emd {e}"))
+    });
+}
+
+#[test]
+fn batch_objects_agree_with_pair_objects() {
+    // the LC engines' batched rows must match the per-pair trait objects
+    // for the symmetric measures (symmetric engine mode)
+    let ds = Arc::new(generate_text(&TextConfig {
+        n: 14,
+        classes: 3,
+        vocab: 90,
+        dim: 6,
+        doc_len: 8,
+        seed: 77,
+        ..Default::default()
+    }));
+    let engine = Arc::new(LcEngine::new(
+        Arc::clone(&ds),
+        EngineParams { metric: Metric::L2, threads: 2, symmetric: true },
+    ));
+    let registry = MethodRegistry::new(Metric::L2);
+    for method in [Method::BowAdjusted, Method::Ict, Method::Exact] {
+        let batch = registry.batch(&engine, method);
+        let pair = registry.distance(method);
+        let q = ds.histogram(2);
+        let row = batch.distances(&q).unwrap();
+        assert_eq!(row.len(), ds.len());
+        for u in 0..ds.len() {
+            let want = pair.distance(&ds.embeddings, &ds.histogram(u), &q).unwrap() as f32;
+            assert!(
+                (row[u] - want).abs() < 1e-5,
+                "{method} doc {u}: batch {} vs pair {want}",
+                row[u]
+            );
+        }
+    }
+}
+
+#[test]
+fn dataset_scale_chain_via_batch_objects() {
+    // the chain must also hold elementwise on whole all-pairs matrices
+    // computed through BatchDistance objects on a generated dataset
+    let ds = Arc::new(generate_text(&TextConfig {
+        n: 16,
+        classes: 4,
+        vocab: 100,
+        dim: 6,
+        doc_len: 8,
+        seed: 5,
+        ..Default::default()
+    }));
+    let engine = Arc::new(LcEngine::new(
+        Arc::clone(&ds),
+        EngineParams { metric: Metric::L2, threads: 2, symmetric: true },
+    ));
+    let registry = MethodRegistry::new(Metric::L2);
+    let matrices: Vec<(Method, Vec<f32>)> = chain_methods()
+        .into_iter()
+        .map(|m| (m, registry.batch(&engine, m).all_pairs_symmetric().unwrap()))
+        .collect();
+    for w in 0..matrices.len() - 1 {
+        let (ma, a) = &matrices[w];
+        let (mb, b) = &matrices[w + 1];
+        for i in 0..a.len() {
+            assert!(
+                a[i] <= b[i] + 1e-4,
+                "{ma} = {} > {mb} = {} at {i}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn builder_and_registry_compose() {
+    // end-to-end: builder-constructed engine + registry lookup of the
+    // comparators — the ISSUE's acceptance path
+    let engine = EngineBuilder::new()
+        .dataset_spec(emdpar::prelude::DatasetSpec::SynthText {
+            n: 12,
+            vocab: 80,
+            dim: 6,
+            seed: 3,
+        })
+        .threads(2)
+        .build_lc()
+        .unwrap();
+    let engine = Arc::new(engine);
+    let registry = engine.registry();
+    for method in [Method::Sinkhorn, Method::Exact] {
+        let batch = registry.batch(&engine, method);
+        let row = batch.distances(&engine.dataset().histogram(0)).unwrap();
+        assert_eq!(row.len(), 12, "{method}");
+    }
+}
