@@ -44,7 +44,7 @@ fn main() {
         let art = ArtifactEngine::new(&exec, &ds, profile).unwrap();
         let native = LcEngine::new(
             std::sync::Arc::new(ds.clone()),
-            EngineParams { metric: Metric::L2, threads: emdpar::util::threadpool::default_threads(), symmetric: false },
+            EngineParams { metric: Metric::L2, threads: emdpar::util::threadpool::default_threads(), symmetric: false, ..Default::default() },
         );
         let q = ds.histogram(0);
         let k = 2;

@@ -1,0 +1,136 @@
+//! Phase-1 micro-benchmark: per-query planning (`plan_query`, the seed's
+//! all-pairs inner loop) vs the batched multi-query kernel
+//! (`BatchPlanner::plan_rows_into`, blocks of B queries per vocabulary
+//! pass).  Both sides run the same outer data-parallel sweep the all-pairs
+//! path uses (parallel over queries / query blocks, serial inside), so the
+//! ratio is the real Phase-1 throughput change an all-pairs sweep sees.
+//!
+//! Emits a machine-readable `BENCH_phase1.json` in the working directory
+//! (the repo root under `cargo bench`) so later PRs have a perf trajectory
+//! to compare against.
+//!
+//! Run: `cargo bench --bench phase1_batch` (EMDPAR_BENCH_FULL=1 for the
+//! bigger 20NG-scale workload).
+
+use std::io::Write;
+
+use emdpar::data::{generate_text, TextConfig};
+use emdpar::lc::{plan_query, BatchPlanner, PlanParams, PlanScratch, QueryPlan};
+use emdpar::prelude::Metric;
+use emdpar::util::json::Json;
+use emdpar::util::stats::Bench;
+use emdpar::util::threadpool::parallel_for;
+
+fn main() {
+    let full = std::env::var("EMDPAR_BENCH_FULL").is_ok();
+    // synthetic 20NG-like workload: word-embedding-sized vocabulary so the
+    // coordinate matrix far exceeds L2 cache and Phase 1 is stream-bound —
+    // the regime the paper's batching argument targets
+    let (v, m, h, nq) =
+        if full { (30_000, 256, 80, 64) } else { (8_000, 128, 64, 32) };
+    let k = 2; // ACT-1, the paper's default operating point
+    let batch_block = 8;
+    let threads = emdpar::util::threadpool::default_threads();
+
+    println!("# Phase-1 batching: per-query vs multi-query kernel");
+    println!("# v={v} m={m} h={h} queries={nq} k={k} B={batch_block} threads={threads}\n");
+
+    let ds = generate_text(&TextConfig {
+        n: nq,
+        classes: 4,
+        vocab: v,
+        dim: m,
+        doc_len: h,
+        seed: 20,
+        ..Default::default()
+    });
+    let vn = ds.embeddings.row_sq_norms();
+    let params = PlanParams { k, metric: Metric::L2, keep_d: false, threads: 1 };
+    let n = ds.len();
+
+    let mut bench = Bench::quick();
+
+    // ---- baseline: one plan_query per query, parallel over queries (the
+    // seed's all-pairs structure) ----
+    let per_query = bench.run("phase1 per-query sweep", || {
+        parallel_for(n, threads, |start, end| {
+            for u in start..end {
+                let q = ds.histogram(u);
+                std::hint::black_box(plan_query(&ds.embeddings, &vn, &q, params));
+            }
+        });
+    });
+
+    // ---- batched: blocks of B queries per vocabulary pass, parallel over
+    // blocks, one scratch arena per worker chunk ----
+    let planner = BatchPlanner::new(&ds.embeddings, &vn);
+    let batched = bench.run("phase1 batched sweep  ", || {
+        parallel_for(n, threads, |start, end| {
+            let mut scratch = PlanScratch::new();
+            let mut plans: Vec<QueryPlan> = Vec::new();
+            let mut block: Vec<(&[u32], &[f32])> = Vec::with_capacity(batch_block);
+            let mut u0 = start;
+            while u0 < end {
+                let u1 = (u0 + batch_block).min(end);
+                block.clear();
+                for u in u0..u1 {
+                    block.push(ds.matrix.row(u));
+                }
+                planner.plan_rows_into(&block, params, &mut scratch, &mut plans);
+                std::hint::black_box(&plans);
+                u0 = u1;
+            }
+        });
+    });
+
+    let per_query_qps = n as f64 / per_query.per_iter.as_secs_f64();
+    let batched_qps = n as f64 / batched.per_iter.as_secs_f64();
+    let speedup = batched_qps / per_query_qps;
+
+    println!("\nper-query  : {:>10.1} plans/s", per_query_qps);
+    println!("batched    : {:>10.1} plans/s", batched_qps);
+    println!("speedup    : {:>10.2}x  (target: >= 2x)", speedup);
+
+    let json = Json::obj(vec![
+        ("bench", "phase1_batch".into()),
+        ("status", "measured".into()),
+        (
+            "workload",
+            Json::obj(vec![
+                ("v", v.into()),
+                ("m", m.into()),
+                ("h", h.into()),
+                ("queries", nq.into()),
+                ("k", k.into()),
+                ("batch_block", batch_block.into()),
+                ("threads", threads.into()),
+                ("full", full.into()),
+            ]),
+        ),
+        ("per_query_plans_per_s", per_query_qps.into()),
+        ("batched_plans_per_s", batched_qps.into()),
+        ("speedup", speedup.into()),
+        ("regenerate_with", "cargo bench --bench phase1_batch".into()),
+    ]);
+    let path = "BENCH_phase1.json";
+    match std::fs::File::create(path)
+        .and_then(|mut f| writeln!(f, "{}", json.to_string_pretty()))
+    {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+
+    // Optional enforcement: EMDPAR_BENCH_MIN_SPEEDUP=<x> fails the run if
+    // the batched kernel does not beat the per-query baseline by x — CI
+    // uses 1.0 as a can't-regress floor (the 2x acceptance target is judged
+    // on dedicated hardware, not shared runners).
+    if let Ok(s) = std::env::var("EMDPAR_BENCH_MIN_SPEEDUP") {
+        if let Ok(min) = s.parse::<f64>() {
+            if speedup < min {
+                eprintln!("FAIL: speedup {speedup:.2}x below required {min:.2}x");
+                std::process::exit(1);
+            }
+            println!("speedup {speedup:.2}x meets the required {min:.2}x floor");
+        }
+    }
+}

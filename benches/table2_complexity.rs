@@ -54,9 +54,11 @@ fn main() {
         let brute_per_query = brute.per_iter.as_secs_f64() / 32.0 * n as f64;
 
         // LC-RWMD: one Phase-1 plan + linear sweep
+        let vn = ds.embeddings.row_sq_norms();
         let lc = bench.run(&format!("lc-rwmd    h={h}"), || {
             let plan = plan_query(
                 &ds.embeddings,
+                &vn,
                 &query,
                 PlanParams { k: 1, metric: Metric::L2, keep_d: false, threads },
             );

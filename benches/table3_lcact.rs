@@ -22,6 +22,7 @@ fn main() {
         ..Default::default()
     });
     let threads = emdpar::util::threadpool::default_threads();
+    let vn = ds.embeddings.row_sq_norms();
     let query = ds.histogram(0);
     let mut bench = Bench::quick();
 
@@ -31,12 +32,14 @@ fn main() {
         let p1 = bench.run(&format!("phase1 k={k}"), || {
             std::hint::black_box(plan_query(
                 &ds.embeddings,
+                &vn,
                 &query,
                 PlanParams { k, metric: Metric::L2, keep_d: false, threads },
             ));
         });
         let plan = plan_query(
             &ds.embeddings,
+            &vn,
             &query,
             PlanParams { k, metric: Metric::L2, keep_d: false, threads },
         );
@@ -67,6 +70,7 @@ fn main() {
         });
         let plan = plan_query(
             &subds.embeddings,
+            &subds.embeddings.row_sq_norms(),
             &subds.histogram(0),
             PlanParams { k: 2, metric: Metric::L2, keep_d: false, threads },
         );

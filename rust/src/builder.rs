@@ -81,6 +81,12 @@ impl EngineBuilder {
         self
     }
 
+    /// Phase-1 block size `B` for the batched multi-query kernel.
+    pub fn batch_block(mut self, batch_block: usize) -> EngineBuilder {
+        self.config.batch_block = batch_block.max(1);
+        self
+    }
+
     pub fn backend(mut self, backend: Backend) -> EngineBuilder {
         self.config.backend = backend;
         self
@@ -138,6 +144,7 @@ impl EngineBuilder {
                 metric: self.config.metric,
                 threads: self.config.threads,
                 symmetric: self.config.symmetric,
+                batch_block: self.config.batch_block,
             },
         ))
     }

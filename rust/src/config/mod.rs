@@ -50,6 +50,8 @@ pub struct Config {
     pub metric: Metric,
     pub threads: usize,
     pub symmetric: bool,
+    /// Phase-1 block size `B` for the batched multi-query kernel.
+    pub batch_block: usize,
     pub backend: Backend,
     pub artifact_dir: PathBuf,
     pub artifact_profile: Option<String>,
@@ -73,6 +75,7 @@ impl Default for Config {
             metric: Metric::L2,
             threads: crate::util::threadpool::default_threads(),
             symmetric: true,
+            batch_block: crate::lc::DEFAULT_BATCH_BLOCK,
             backend: Backend::Native,
             artifact_dir: PathBuf::from("artifacts"),
             artifact_profile: None,
@@ -112,6 +115,9 @@ impl Config {
         }
         if let Some(b) = json.get("symmetric").and_then(Json::as_bool) {
             cfg.symmetric = b;
+        }
+        if let Some(x) = json.get("batch_block").and_then(Json::as_usize) {
+            cfg.batch_block = x.max(1);
         }
         if let Some(s) = json.get("backend").and_then(Json::as_str) {
             cfg.backend = Backend::parse(s)?;
@@ -179,6 +185,7 @@ impl Config {
 
     pub fn validate(&self) -> EmdResult<()> {
         emd_ensure!(self.threads >= 1, config, "threads must be >= 1");
+        emd_ensure!(self.batch_block >= 1, config, "batch_block must be >= 1");
         emd_ensure!(self.max_batch >= 1, config, "max_batch must be >= 1");
         emd_ensure!(self.shards >= 1, config, "shards must be >= 1");
         if let Method::Act { k } = self.method {

@@ -84,6 +84,7 @@ impl SearchEngine {
                 metric: config.metric,
                 threads: config.threads,
                 symmetric: config.symmetric,
+                batch_block: config.batch_block,
             },
         ));
         Ok(SearchEngine {
@@ -142,13 +143,11 @@ impl SearchEngine {
         }
     }
 
-    /// Top-ℓ search with shard-merge (the request-path entry point).
-    pub fn search(&self, query: &Histogram, method: Method, l: usize) -> EmdResult<SearchResult> {
-        let t0 = Instant::now();
-        let row = self.distances(query, method)?;
+    /// Rank one distance row: top-ℓ with shard-merge.  The shard-wise
+    /// accumulation exercises the same merge path the distributed router
+    /// uses; results are shard-count-invariant.
+    fn rank_row(&self, row: &[f32], l: usize) -> SearchResult {
         let mut acc = TopL::new(l);
-        // shard-wise accumulation exercises the same merge path the
-        // distributed router uses; results are shard-count-invariant
         for shard in self.router.shards() {
             let mut local = TopL::new(l);
             local.push_slice(&row[shard.clone()], shard.start);
@@ -156,11 +155,23 @@ impl SearchEngine {
         }
         let hits = acc.into_sorted();
         let labels = hits.iter().map(|&(_, id)| self.dataset.labels[id]).collect();
-        self.metrics.record_query(t0.elapsed(), row.len());
-        Ok(SearchResult { hits, labels })
+        SearchResult { hits, labels }
     }
 
-    /// Batched search (dispatched by the dynamic batcher / server).
+    /// Top-ℓ search with shard-merge (the request-path entry point).
+    pub fn search(&self, query: &Histogram, method: Method, l: usize) -> EmdResult<SearchResult> {
+        let t0 = Instant::now();
+        let row = self.distances(query, method)?;
+        let result = self.rank_row(&row, l);
+        self.metrics.record_query(t0.elapsed(), row.len());
+        Ok(result)
+    }
+
+    /// Batched search (dispatched by the dynamic batcher / server).  On the
+    /// native backend the whole batch flows through the engine's multi-query
+    /// Phase-1 kernel ([`LcEngine::distances_batch`]) — one vocabulary pass
+    /// per query block instead of one per query; results are bit-identical
+    /// to per-query [`SearchEngine::search`].
     pub fn search_batch(
         &self,
         queries: &[Histogram],
@@ -168,7 +179,30 @@ impl SearchEngine {
         l: usize,
     ) -> EmdResult<Vec<SearchResult>> {
         self.metrics.record_batch();
-        queries.iter().map(|q| self.search(q, method, l)).collect()
+        if queries.is_empty() {
+            return Ok(Vec::new());
+        }
+        match self.config.backend {
+            Backend::Native => {
+                let t0 = Instant::now();
+                let n = self.dataset.len();
+                let flat = self.native.distances_batch(queries, method);
+                let results: Vec<SearchResult> = (0..queries.len())
+                    .map(|i| self.rank_row(&flat[i * n..(i + 1) * n], l))
+                    .collect();
+                // per-query latency = the batch's amortized share of the
+                // full dispatch (distances + ranking), comparable to the
+                // per-query path's measurement
+                let per_query = t0.elapsed() / queries.len() as u32;
+                for _ in 0..queries.len() {
+                    self.metrics.record_query(per_query, n);
+                }
+                Ok(results)
+            }
+            // the artifact runtime plans per query; fall back to the
+            // single-query path
+            Backend::Artifact => queries.iter().map(|q| self.search(q, method, l)).collect(),
+        }
     }
 }
 

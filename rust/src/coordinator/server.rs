@@ -61,38 +61,50 @@ impl Server {
             let engine = Arc::clone(&engine);
             std::thread::spawn(move || {
                 while let Some(batch) = next_batch(&batch_rx, policy) {
-                    engine.metrics().record_batch();
+                    // group the drained batch by (method, l) so each group
+                    // flows through the engine's multi-query kernel in one
+                    // dispatch (SearchEngine::search_batch); responses go
+                    // back per-job over their own channels, so grouping
+                    // never reorders anything a client can observe.  Note:
+                    // Metrics::batches now counts dispatch groups (one per
+                    // (method, l) per drained batch), not drained batches
+                    let mut groups: Vec<((Method, usize), Vec<Pending<Job, JobResult>>)> =
+                        Vec::new();
                     for pending in batch {
-                        let job = pending.query;
-                        let out = engine
-                            .search(&job.query, job.method, job.l)
-                            .map(|res| {
-                                Json::Obj(
-                                    [
-                                        ("ok".to_string(), Json::Bool(true)),
-                                        (
-                                            "hits".to_string(),
-                                            Json::Arr(
-                                                res.hits
-                                                    .iter()
-                                                    .zip(&res.labels)
-                                                    .map(|(&(d, id), &lab)| {
-                                                        Json::Arr(vec![
-                                                            Json::Num(d as f64),
-                                                            Json::Num(id as f64),
-                                                            Json::Num(lab as f64),
-                                                        ])
-                                                    })
-                                                    .collect(),
-                                            ),
-                                        ),
-                                    ]
-                                    .into_iter()
-                                    .collect(),
-                                )
-                            })
-                            .map_err(|e| e.to_string());
-                        let _ = pending.respond.send(out);
+                        let key = (pending.query.method, pending.query.l);
+                        match groups.iter_mut().find(|(k, _)| *k == key) {
+                            Some((_, members)) => members.push(pending),
+                            None => groups.push((key, vec![pending])),
+                        }
+                    }
+                    for ((method, l), members) in groups {
+                        let (queries, responders): (Vec<Histogram>, Vec<_>) = members
+                            .into_iter()
+                            .map(|p| (p.query.query, p.respond))
+                            .unzip();
+                        match engine.search_batch(&queries, method, l) {
+                            Ok(results) => {
+                                for (res, respond) in results.into_iter().zip(responders) {
+                                    let _ = respond.send(Ok(search_result_json(&res)));
+                                }
+                            }
+                            // a grouped dispatch failed (e.g. one artifact
+                            // query out of profile): fall back to per-job
+                            // evaluation so one bad query cannot fail its
+                            // batchmates — same isolation as the old
+                            // per-pending loop.  Batchmates evaluated before
+                            // the failure are re-run; acceptable because this
+                            // path only fires on errors
+                            Err(_) => {
+                                for (q, respond) in queries.iter().zip(responders) {
+                                    let out = engine
+                                        .search(q, method, l)
+                                        .map(|res| search_result_json(&res))
+                                        .map_err(|e| e.to_string());
+                                    let _ = respond.send(out);
+                                }
+                            }
+                        }
                     }
                 }
             });
@@ -139,6 +151,33 @@ impl Server {
         self.pool.wait_idle();
         Ok(())
     }
+}
+
+/// Serialize one search result as the protocol's success payload.
+fn search_result_json(res: &super::engine::SearchResult) -> Json {
+    Json::Obj(
+        [
+            ("ok".to_string(), Json::Bool(true)),
+            (
+                "hits".to_string(),
+                Json::Arr(
+                    res.hits
+                        .iter()
+                        .zip(&res.labels)
+                        .map(|(&(d, id), &lab)| {
+                            Json::Arr(vec![
+                                Json::Num(d as f64),
+                                Json::Num(id as f64),
+                                Json::Num(lab as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]
+        .into_iter()
+        .collect(),
+    )
 }
 
 fn handle_connection(

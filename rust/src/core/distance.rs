@@ -49,6 +49,20 @@ pub trait BatchDistance: Send + Sync {
     /// Distances from one query histogram to every database row.
     fn distances(&self, query: &Histogram) -> EmdResult<Vec<f32>>;
 
+    /// Row-major `(queries.len(), num_rows)` distances for a block of
+    /// queries — the multi-query entry point the dynamic batcher and the
+    /// evaluation sweeps dispatch through.  The default maps the
+    /// single-query method; engines with a batched Phase-1 kernel (see
+    /// [`crate::lc::BatchPlanner`]) override it with a one-pass block
+    /// pipeline that produces bit-identical rows faster.
+    fn distances_batch(&self, queries: &[Histogram]) -> EmdResult<Vec<f32>> {
+        let mut out = Vec::with_capacity(queries.len() * self.num_rows());
+        for q in queries {
+            out.extend_from_slice(&self.distances(q)?);
+        }
+        Ok(out)
+    }
+
     /// Row-major `(n, n)` symmetric all-pairs matrix over the database
     /// (the paper's accuracy-evaluation protocol).
     fn all_pairs_symmetric(&self) -> EmdResult<Vec<f32>>;

@@ -79,6 +79,15 @@ impl Embeddings {
         Embeddings::new(data, rows.len(), self.m)
     }
 
+    /// Squared L2 norm of every row, in row order.  The Phase-1 Gram
+    /// expansion consumes these; computing them once per dataset (instead of
+    /// per row per `plan_query` call) removes an `O(n·v·m)` term from
+    /// all-pairs sweeps.  The per-row summation order matches the serial
+    /// `Σ x²` the kernels used inline, so downstream results are bit-equal.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.v).map(|i| self.row(i).iter().map(|&x| x * x).sum::<f32>()).collect()
+    }
+
     /// Weighted centroid of a histogram's coordinates (for WCD).
     pub fn centroid(&self, indices: &[u32], weights: &[f32]) -> Vec<f64> {
         let mut c = vec![0.0f64; self.m];

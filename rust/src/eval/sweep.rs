@@ -94,20 +94,15 @@ pub fn sweep_subset(
         .collect()
 }
 
-/// Row-major `(nq, n)` distance matrix through a [`BatchDistance`] object.
+/// Row-major `(nq, n)` distance matrix through a [`BatchDistance`] object —
+/// one multi-query dispatch, so LC methods run the batched Phase-1 kernel.
 fn subset_matrix(
     dataset: &Arc<Dataset>,
     batch: &dyn BatchDistance,
     nq: usize,
 ) -> EmdResult<Vec<f32>> {
-    let n = dataset.len();
-    let mut matrix = vec![0.0f32; nq * n];
-    for i in 0..nq {
-        let q = dataset.histogram(i);
-        let row = batch.distances(&q)?;
-        matrix[i * n..(i + 1) * n].copy_from_slice(&row);
-    }
-    Ok(matrix)
+    let queries: Vec<_> = (0..nq).map(|i| dataset.histogram(i)).collect();
+    batch.distances_batch(&queries)
 }
 
 /// Render sweep rows as a markdown table (EXPERIMENTS.md format).

@@ -1,0 +1,592 @@
+//! Batched multi-query Phase 1 (paper Fig. 6 / Table 3): plan a block of
+//! `B` queries against the vocabulary in **one** tiled pass, so every
+//! vocabulary row is streamed from memory once per *block* instead of once
+//! per query — the matrix-matrix reformulation that gives the paper its
+//! headline throughput.
+//!
+//! Structure of the kernel: the `B` queries' support columns are
+//! concatenated into one `(Σh, m)` coordinate block; the `V×m · m×Σh`
+//! product is then walked in 2×2 register tiles ([`dot2x2`]) that load each
+//! vocabulary row and each query column once per tile instead of once per
+//! dot product — halving load traffic per FMA versus the per-pair
+//! [`dot_f32`] loop — with the per-(row, query) top-k selection fused
+//! directly behind each tile.
+//!
+//! Bit-identity contract: every scalar this kernel produces is computed
+//! with the *same* lane-chunked accumulation, the same reduction order, the
+//! same Gram-expansion snap ([`l2_snap`]) and the same normalization
+//! arithmetic as the single-query [`plan_query`] path, so batched plans are
+//! bit-equal to single-query plans for every `k`, thread count and block
+//! size (asserted by `rust/tests/batch_equivalence.rs`).
+//!
+//! Allocation discipline: all intermediate buffers live in a caller-owned
+//! [`PlanScratch`] arena and plan output buffers are recycled through it,
+//! so a steady-state all-pairs sweep performs zero per-query heap
+//! allocations.
+
+use crate::approx::act::row_topk;
+use crate::core::{Embeddings, Histogram, Metric};
+use crate::util::threadpool::{parallel_for, SyncSlice};
+
+use super::plan::{dot_f32, l2_snap, snapped_distance, PlanParams, QueryPlan};
+
+/// Default number of queries planned per Phase-1 block (`B`).  Large enough
+/// to amortize vocabulary streaming across the block, small enough that the
+/// `(Σh, m)` query block and the per-row distance tile stay cache-resident.
+pub const DEFAULT_BATCH_BLOCK: usize = 8;
+
+/// Reusable Phase-1 arena: recycled plan output buffers plus every
+/// intermediate the block kernel needs.  One scratch per worker; feeding
+/// consecutive blocks through the same scratch reuses all capacity.
+#[derive(Debug, Default)]
+pub struct PlanScratch {
+    /// Recycled [`QueryPlan`] output buffers (capacity preserved).
+    free: Vec<QueryPlan>,
+    /// Recycled full-D buffers (only used when `keep_d` plans cycle).
+    free_d: Vec<Vec<f32>>,
+    /// Concatenated normalized query weights (Σh).
+    qw: Vec<f32>,
+    /// Concatenated support indices (Σh; ascending within each query).
+    support: Vec<u32>,
+    /// Concatenated query squared norms (Σh), gathered from the vocab table.
+    qnorms: Vec<f32>,
+    /// Concatenated gathered query coordinates (Σh, m), row-major.
+    coords: Vec<f32>,
+    /// Per-query segment descriptors for the current block.
+    segs: Vec<QuerySeg>,
+    /// Two-row distance tile (2 × Σh) for the serial kernel path.
+    tile: Vec<f32>,
+    /// Top-k selection buffers for the serial kernel path.
+    vals: Vec<f32>,
+    idxs: Vec<u32>,
+}
+
+impl PlanScratch {
+    pub fn new() -> PlanScratch {
+        PlanScratch::default()
+    }
+
+    /// Return a block of plans to the arena; their buffers (including any
+    /// full-D matrices) are reused by the next `plan_*` call.
+    pub fn recycle(&mut self, plans: &mut Vec<QueryPlan>) {
+        for mut p in plans.drain(..) {
+            if let Some(d) = p.d.take() {
+                self.free_d.push(d);
+            }
+            self.free.push(p);
+        }
+    }
+}
+
+/// One query's column range inside the concatenated block.
+#[derive(Debug, Clone, Copy)]
+struct QuerySeg {
+    /// First column of this query in the concatenated arrays.
+    off: usize,
+    /// Support size h.
+    h: usize,
+    /// Clamped plan width.
+    k: usize,
+}
+
+/// The batched Phase-1 planner: borrows the vocabulary and its precomputed
+/// row squared-norm table (see [`Embeddings::row_sq_norms`]) and plans one
+/// or many queries per call.  Construction is free — [`crate::lc::LcEngine`]
+/// materializes one per operation on top of its cached norm table.
+pub struct BatchPlanner<'a> {
+    vocab: &'a Embeddings,
+    vn: &'a [f32],
+}
+
+impl<'a> BatchPlanner<'a> {
+    pub fn new(vocab: &'a Embeddings, vn: &'a [f32]) -> BatchPlanner<'a> {
+        assert_eq!(vn.len(), vocab.num_vectors(), "vocab norm table size mismatch");
+        BatchPlanner { vocab, vn }
+    }
+
+    /// Plan a block of query histograms (allocating convenience wrapper
+    /// around [`BatchPlanner::plan_rows_into`]).
+    pub fn plan_block(
+        &self,
+        queries: &[Histogram],
+        params: PlanParams,
+        scratch: &mut PlanScratch,
+    ) -> Vec<QueryPlan> {
+        let mut out = Vec::with_capacity(queries.len());
+        self.plan_block_into(queries, params, scratch, &mut out);
+        out
+    }
+
+    /// Plan a block of query histograms into a reusable output vector.
+    pub fn plan_block_into(
+        &self,
+        queries: &[Histogram],
+        params: PlanParams,
+        scratch: &mut PlanScratch,
+        out: &mut Vec<QueryPlan>,
+    ) {
+        let rows: Vec<(&[u32], &[f32])> =
+            queries.iter().map(|q| (q.indices(), q.weights())).collect();
+        self.plan_rows_into(&rows, params, scratch, out);
+    }
+
+    /// Plan a block of raw `(indices, weights)` query rows — the zero-copy
+    /// entry point the all-pairs sweep feeds CSR rows through.  Weights are
+    /// L1-normalized inside the kernel with the same arithmetic as
+    /// [`Histogram::normalize`], so results match
+    /// `plan_query(vocab, vn, &histogram, params)` bit-for-bit.
+    ///
+    /// `out` is cleared (previous plans are recycled into `scratch`) and
+    /// refilled with one plan per input row, in order.
+    pub fn plan_rows_into(
+        &self,
+        rows: &[(&[u32], &[f32])],
+        params: PlanParams,
+        scratch: &mut PlanScratch,
+        out: &mut Vec<QueryPlan>,
+    ) {
+        let vocab = self.vocab;
+        let vn = self.vn;
+        let v = vocab.num_vectors();
+        let m = vocab.dim();
+
+        scratch.recycle(out);
+        if rows.is_empty() {
+            return;
+        }
+
+        let PlanScratch { free, free_d, qw, support, qnorms, coords, segs, tile, vals, idxs } =
+            scratch;
+
+        // ---- prepare: one concatenated, normalized query block ----
+        qw.clear();
+        support.clear();
+        qnorms.clear();
+        coords.clear();
+        segs.clear();
+        for &(idx, w) in rows {
+            let h = idx.len();
+            assert!(h > 0, "empty query histogram");
+            // same normalization arithmetic as Histogram::normalize, so the
+            // batched plan is bit-identical to plan_query(query.normalized())
+            let total: f64 = w.iter().map(|&x| x as f64).sum();
+            let inv = if total > 0.0 { (1.0 / total) as f32 } else { 1.0 };
+            let off = support.len();
+            for (&i, &x) in idx.iter().zip(w) {
+                support.push(i);
+                qw.push(x * inv);
+                qnorms.push(vn[i as usize]);
+                coords.extend_from_slice(vocab.row(i as usize));
+            }
+            segs.push(QuerySeg { off, h, k: params.k.clamp(1, h) });
+        }
+        let total_h = support.len();
+
+        // ---- take recycled output buffers ----
+        for seg in segs.iter() {
+            let mut p = free.pop().unwrap_or_default();
+            p.k = seg.k;
+            p.h = seg.h;
+            p.qw.clear();
+            p.qw.extend_from_slice(&qw[seg.off..seg.off + seg.h]);
+            // every element is overwritten by the kernel, so plain resize
+            // (which keeps capacity) is enough
+            p.z.resize(v * seg.k, 0.0);
+            p.s.resize(v * seg.k, 0);
+            p.w.resize(v * seg.k, 0.0);
+            p.d = if params.keep_d {
+                let mut dbuf = free_d.pop().unwrap_or_default();
+                dbuf.resize(v * seg.h, 0.0);
+                Some(dbuf)
+            } else {
+                None
+            };
+            out.push(p);
+        }
+
+        // ---- disjoint-write views over the plan buffers ----
+        let mut zs: Vec<SyncSlice<f32>> = Vec::with_capacity(out.len());
+        let mut ss: Vec<SyncSlice<u32>> = Vec::with_capacity(out.len());
+        let mut ws: Vec<SyncSlice<f32>> = Vec::with_capacity(out.len());
+        let mut ds: Vec<Option<SyncSlice<f32>>> = Vec::with_capacity(out.len());
+        for p in out.iter_mut() {
+            zs.push(SyncSlice::new(&mut p.z));
+            ss.push(SyncSlice::new(&mut p.s));
+            ws.push(SyncSlice::new(&mut p.w));
+            ds.push(p.d.as_mut().map(|d| SyncSlice::new(d)));
+        }
+
+        let ctx = KernelCtx {
+            vocab,
+            vn,
+            metric: params.metric,
+            m,
+            total_h,
+            support: &support[..],
+            qw: &qw[..],
+            qnorms: &qnorms[..],
+            coords: &coords[..],
+            segs: &segs[..],
+            z: &zs,
+            s: &ss,
+            w: &ws,
+            d: &ds,
+        };
+
+        if params.threads <= 1 {
+            // serial: run on the scratch buffers — zero allocations
+            tile.resize(2 * total_h, 0.0);
+            ctx.run(0, v, tile, vals, idxs);
+        } else {
+            parallel_for(v, params.threads, |r0, r1| {
+                let mut tile = vec![0.0f32; 2 * total_h];
+                let mut vals: Vec<f32> = Vec::new();
+                let mut idxs: Vec<u32> = Vec::new();
+                ctx.run(r0, r1, &mut tile, &mut vals, &mut idxs);
+            });
+        }
+    }
+}
+
+/// Everything the block kernel reads, plus the disjoint-write output views.
+struct KernelCtx<'v, 'o> {
+    vocab: &'v Embeddings,
+    vn: &'v [f32],
+    metric: Metric,
+    m: usize,
+    total_h: usize,
+    support: &'v [u32],
+    qw: &'v [f32],
+    qnorms: &'v [f32],
+    coords: &'v [f32],
+    segs: &'v [QuerySeg],
+    z: &'v [SyncSlice<'o, f32>],
+    s: &'v [SyncSlice<'o, u32>],
+    w: &'v [SyncSlice<'o, f32>],
+    d: &'v [Option<SyncSlice<'o, f32>>],
+}
+
+impl KernelCtx<'_, '_> {
+    /// Process vocabulary rows `[r0, r1)` with caller-owned buffers.
+    /// Row values are independent of tiling boundaries (each (row, column)
+    /// distance is computed by the same arithmetic wherever it lands), so
+    /// chunk shapes chosen by `parallel_for` never change results.
+    fn run(&self, r0: usize, r1: usize, tile: &mut [f32], vals: &mut Vec<f32>, idxs: &mut Vec<u32>) {
+        match self.metric {
+            Metric::L2 => self.run_l2(r0, r1, tile, vals, idxs),
+            _ => self.run_generic(r0, r1, tile, vals, idxs),
+        }
+    }
+
+    /// L2 fast path: Gram expansion over 2×2 register tiles.
+    fn run_l2(
+        &self,
+        r0: usize,
+        r1: usize,
+        tile: &mut [f32],
+        vals: &mut Vec<f32>,
+        idxs: &mut Vec<u32>,
+    ) {
+        let th = self.total_h;
+        let m = self.m;
+        let mut i0 = r0;
+        while i0 < r1 {
+            if i0 + 1 < r1 {
+                let (v0, v1) = (self.vocab.row(i0), self.vocab.row(i0 + 1));
+                let (vn0, vn1) = (self.vn[i0], self.vn[i0 + 1]);
+                let (t0, rest) = tile.split_at_mut(th);
+                let t1 = &mut rest[..th];
+                let mut c = 0;
+                while c + 1 < th {
+                    let q0 = &self.coords[c * m..(c + 1) * m];
+                    let q1 = &self.coords[(c + 1) * m..(c + 2) * m];
+                    let dots = dot2x2(v0, v1, q0, q1, m);
+                    t0[c] = l2_snap(vn0, dots[0], self.qnorms[c]);
+                    t0[c + 1] = l2_snap(vn0, dots[1], self.qnorms[c + 1]);
+                    t1[c] = l2_snap(vn1, dots[2], self.qnorms[c]);
+                    t1[c + 1] = l2_snap(vn1, dots[3], self.qnorms[c + 1]);
+                    c += 2;
+                }
+                if c < th {
+                    let qc = &self.coords[c * m..(c + 1) * m];
+                    t0[c] = l2_snap(vn0, dot_f32(v0, qc), self.qnorms[c]);
+                    t1[c] = l2_snap(vn1, dot_f32(v1, qc), self.qnorms[c]);
+                }
+                self.snap_own_coordinate(i0, t0);
+                self.snap_own_coordinate(i0 + 1, t1);
+                self.select(i0, &tile[..th], vals, idxs);
+                self.select(i0 + 1, &tile[th..2 * th], vals, idxs);
+                i0 += 2;
+            } else {
+                let vi = self.vocab.row(i0);
+                let vni = self.vn[i0];
+                for c in 0..th {
+                    let qc = &self.coords[c * m..(c + 1) * m];
+                    tile[c] = l2_snap(vni, dot_f32(vi, qc), self.qnorms[c]);
+                }
+                self.snap_own_coordinate(i0, &mut tile[..th]);
+                self.select(i0, &tile[..th], vals, idxs);
+                i0 += 1;
+            }
+        }
+    }
+
+    /// Any-metric fallback: per-pair snapped distances, same loop the
+    /// single-query kernel runs (no Gram expansion to tile).
+    fn run_generic(
+        &self,
+        r0: usize,
+        r1: usize,
+        tile: &mut [f32],
+        vals: &mut Vec<f32>,
+        idxs: &mut Vec<u32>,
+    ) {
+        let th = self.total_h;
+        let m = self.m;
+        for i in r0..r1 {
+            let vi = self.vocab.row(i);
+            for c in 0..th {
+                tile[c] = if self.support[c] as usize == i {
+                    0.0
+                } else {
+                    snapped_distance(self.metric, vi, &self.coords[c * m..(c + 1) * m])
+                };
+            }
+            self.select(i, &tile[..th], vals, idxs);
+        }
+    }
+
+    /// The query bin that *is* vocabulary entry `i` must be exactly 0
+    /// regardless of rounding (support indices are ascending per query).
+    fn snap_own_coordinate(&self, i: usize, row: &mut [f32]) {
+        for seg in self.segs {
+            if let Ok(pos) =
+                self.support[seg.off..seg.off + seg.h].binary_search(&(i as u32))
+            {
+                row[seg.off + pos] = 0.0;
+            }
+        }
+    }
+
+    /// Fused per-tile top-k: select and write z/s/w (and optionally D) for
+    /// vocabulary row `i` across every query in the block.
+    fn select(&self, i: usize, row: &[f32], vals: &mut Vec<f32>, idxs: &mut Vec<u32>) {
+        for (q, seg) in self.segs.iter().enumerate() {
+            let seg_row = &row[seg.off..seg.off + seg.h];
+            row_topk(seg_row, seg.k, vals, idxs);
+            // SAFETY: vocab row i is owned by exactly one worker chunk, and
+            // each plan's row-i slices are disjoint from every other row's.
+            unsafe {
+                let zrow = self.z[q].slice_mut(i * seg.k, (i + 1) * seg.k);
+                let srow = self.s[q].slice_mut(i * seg.k, (i + 1) * seg.k);
+                let wrow = self.w[q].slice_mut(i * seg.k, (i + 1) * seg.k);
+                for l in 0..seg.k {
+                    zrow[l] = vals[l];
+                    srow[l] = idxs[l];
+                    wrow[l] = self.qw[seg.off + idxs[l] as usize];
+                }
+                if let Some(dview) = &self.d[q] {
+                    dview.slice_mut(i * seg.h, (i + 1) * seg.h).copy_from_slice(seg_row);
+                }
+            }
+        }
+    }
+}
+
+/// 2×2 register-tiled dot products: `out = [a0·b0, a0·b1, a1·b0, a1·b1]`.
+///
+/// Each operand is loaded once per tile instead of once per dot product
+/// (0.5 loads per FMA versus [`dot_f32`]'s 2), and the four lane reductions
+/// are independent, so the CPU overlaps them.  Per pair, the arithmetic —
+/// lane-chunked partial sums, reduction order, scalar tail — is *exactly*
+/// [`dot_f32`]'s, which is what makes the batched kernel bit-identical to
+/// the single-query kernel.
+#[inline]
+fn dot2x2(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32], n: usize) -> [f32; 4] {
+    const LANES: usize = 16;
+    let chunks = n / LANES;
+    let mut acc00 = [0.0f32; LANES];
+    let mut acc01 = [0.0f32; LANES];
+    let mut acc10 = [0.0f32; LANES];
+    let mut acc11 = [0.0f32; LANES];
+    for c in 0..chunks {
+        let o = c * LANES;
+        let x0 = &a0[o..o + LANES];
+        let x1 = &a1[o..o + LANES];
+        let y0 = &b0[o..o + LANES];
+        let y1 = &b1[o..o + LANES];
+        for l in 0..LANES {
+            acc00[l] += x0[l] * y0[l];
+            acc01[l] += x0[l] * y1[l];
+            acc10[l] += x1[l] * y0[l];
+            acc11[l] += x1[l] * y1[l];
+        }
+    }
+    let mut out = [0.0f32; 4];
+    for (slot, acc) in out.iter_mut().zip([&acc00, &acc01, &acc10, &acc11]) {
+        let mut dot = 0.0f32;
+        for l in 0..LANES {
+            dot += acc[l];
+        }
+        *slot = dot;
+    }
+    for t in chunks * LANES..n {
+        out[0] += a0[t] * b0[t];
+        out[1] += a0[t] * b1[t];
+        out[2] += a1[t] * b0[t];
+        out[3] += a1[t] * b1[t];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lc::plan::plan_query;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, v: usize, m: usize, hs: &[usize]) -> (Embeddings, Vec<Histogram>) {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..v * m).map(|_| rng.normal() as f32).collect();
+        let vocab = Embeddings::new(data, v, m);
+        let queries = hs
+            .iter()
+            .map(|&h| {
+                let idx = rng.sample_indices(v, h);
+                Histogram::from_pairs(
+                    idx.into_iter()
+                        .map(|i| (i as u32, rng.range_f64(0.1, 1.0) as f32))
+                        .collect(),
+                )
+            })
+            .collect();
+        (vocab, queries)
+    }
+
+    fn assert_plans_equal(a: &QueryPlan, b: &QueryPlan, tag: &str) {
+        assert_eq!(a.k, b.k, "{tag}: k");
+        assert_eq!(a.h, b.h, "{tag}: h");
+        assert_eq!(a.qw, b.qw, "{tag}: qw");
+        assert_eq!(a.z, b.z, "{tag}: z");
+        assert_eq!(a.s, b.s, "{tag}: s");
+        assert_eq!(a.w, b.w, "{tag}: w");
+        assert_eq!(a.d, b.d, "{tag}: d");
+    }
+
+    #[test]
+    fn dot2x2_matches_dot_f32_bitwise() {
+        let mut rng = Rng::new(7);
+        // cover tail lengths around the 16-lane boundary
+        for n in [1usize, 5, 15, 16, 17, 31, 32, 33, 64, 100] {
+            let mk = |rng: &mut Rng| -> Vec<f32> {
+                (0..n).map(|_| rng.normal() as f32).collect()
+            };
+            let (a0, a1, b0, b1) = (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+            let t = dot2x2(&a0, &a1, &b0, &b1, n);
+            assert_eq!(t[0], dot_f32(&a0, &b0), "n={n}");
+            assert_eq!(t[1], dot_f32(&a0, &b1), "n={n}");
+            assert_eq!(t[2], dot_f32(&a1, &b0), "n={n}");
+            assert_eq!(t[3], dot_f32(&a1, &b1), "n={n}");
+        }
+    }
+
+    #[test]
+    fn block_plans_match_single_query_plans_bitwise() {
+        // odd v (row tail), ragged h (column tails + ragged segments)
+        let (vocab, queries) = setup(1, 45, 7, &[9, 4, 12, 1, 8]);
+        let vn = vocab.row_sq_norms();
+        let planner = BatchPlanner::new(&vocab, &vn);
+        for k in [1usize, 2, 4, 8] {
+            for keep_d in [false, true] {
+                for threads in [1usize, 4] {
+                    let params =
+                        PlanParams { k, metric: Metric::L2, keep_d, threads };
+                    let mut scratch = PlanScratch::new();
+                    let plans = planner.plan_block(&queries, params, &mut scratch);
+                    assert_eq!(plans.len(), queries.len());
+                    for (q, plan) in queries.iter().zip(&plans) {
+                        let single = plan_query(&vocab, &vn, q, params);
+                        assert_plans_equal(plan, &single, &format!("k={k} keep_d={keep_d} threads={threads}"));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_l2_block_plans_match_single_query() {
+        let (vocab, queries) = setup(2, 30, 5, &[6, 3, 10]);
+        let vn = vocab.row_sq_norms();
+        let planner = BatchPlanner::new(&vocab, &vn);
+        for metric in [Metric::L1, Metric::Cosine, Metric::SqL2] {
+            let params = PlanParams { k: 2, metric, keep_d: true, threads: 2 };
+            let mut scratch = PlanScratch::new();
+            let plans = planner.plan_block(&queries, params, &mut scratch);
+            for (q, plan) in queries.iter().zip(&plans) {
+                let single = plan_query(&vocab, &vn, q, params);
+                assert_plans_equal(plan, &single, &format!("{metric:?}"));
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        // consecutive blocks through ONE scratch give identical results to
+        // fresh-scratch planning (buffers fully overwritten, no leakage)
+        let (vocab, queries) = setup(3, 40, 6, &[8, 5, 11, 2]);
+        let vn = vocab.row_sq_norms();
+        let planner = BatchPlanner::new(&vocab, &vn);
+        let params = PlanParams { k: 3, metric: Metric::L2, keep_d: true, threads: 1 };
+
+        let mut fresh = PlanScratch::new();
+        let want_a = planner.plan_block(&queries[..2], params, &mut fresh);
+        let mut fresh_b = PlanScratch::new();
+        let want_b = planner.plan_block(&queries[2..], params, &mut fresh_b);
+
+        let mut reused = PlanScratch::new();
+        // warm the arena with a differently-shaped block, then recycle
+        let mut warm = planner.plan_block(
+            &queries[1..],
+            PlanParams { k: 8, metric: Metric::L2, keep_d: false, threads: 1 },
+            &mut reused,
+        );
+        reused.recycle(&mut warm);
+        let got_a = planner.plan_block(&queries[..2], params, &mut reused);
+        for (g, w) in got_a.iter().zip(&want_a) {
+            assert_plans_equal(g, w, "first reused batch");
+        }
+        let mut got_a = got_a;
+        reused.recycle(&mut got_a);
+        let got_b = planner.plan_block(&queries[2..], params, &mut reused);
+        for (g, w) in got_b.iter().zip(&want_b) {
+            assert_plans_equal(g, w, "second reused batch");
+        }
+    }
+
+    #[test]
+    fn single_query_block_is_supported() {
+        let (vocab, queries) = setup(4, 25, 4, &[7]);
+        let vn = vocab.row_sq_norms();
+        let planner = BatchPlanner::new(&vocab, &vn);
+        let params = PlanParams { k: 2, metric: Metric::L2, keep_d: false, threads: 1 };
+        let mut scratch = PlanScratch::new();
+        let plans = planner.plan_block(&queries, params, &mut scratch);
+        assert_plans_equal(&plans[0], &plan_query(&vocab, &vn, &queries[0], params), "B=1");
+    }
+
+    #[test]
+    fn empty_block_yields_no_plans() {
+        let (vocab, _) = setup(5, 10, 3, &[]);
+        let vn = vocab.row_sq_norms();
+        let planner = BatchPlanner::new(&vocab, &vn);
+        let mut scratch = PlanScratch::new();
+        let mut out = vec![QueryPlan::default()];
+        planner.plan_rows_into(
+            &[],
+            PlanParams { k: 1, metric: Metric::L2, keep_d: false, threads: 1 },
+            &mut scratch,
+            &mut out,
+        );
+        assert!(out.is_empty());
+    }
+}

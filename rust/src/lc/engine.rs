@@ -19,11 +19,12 @@ use std::sync::Arc;
 use crate::core::{
     BatchDistance, Dataset, Distance, EmdResult, Histogram, Method, MethodRegistry, Metric,
 };
-use crate::util::threadpool::{parallel_for, SyncSlice};
+use crate::util::threadpool::{parallel_for, parallel_map, SyncSlice};
 
-use super::plan::{plan_query, PlanParams};
+use super::batch_plan::{BatchPlanner, PlanScratch, DEFAULT_BATCH_BLOCK};
+use super::plan::{plan_query, PlanParams, QueryPlan};
 use super::transfers::{
-    act_direction_a, omr_direction_a, rwmd_direction_a, rwmd_direction_b,
+    act_direction_a_into, omr_direction_a_into, rwmd_direction_a_into, rwmd_direction_b_into,
 };
 
 /// Engine configuration.
@@ -33,6 +34,16 @@ pub struct EngineParams {
     pub threads: usize,
     /// Also compute direction-B RWMD and take the max (single-query mode).
     pub symmetric: bool,
+    /// Phase-1 block size `B`: how many queries the batched multi-query
+    /// kernel plans per vocabulary pass (all-pairs sweeps and
+    /// [`LcEngine::distances_batch`]).
+    ///
+    /// Memory note: in symmetric mode each in-flight plan keeps a full
+    /// `(v, h)` direction-B matrix, so `distances_batch` holds up to
+    /// `B · v · h` f32 at once — size `B` accordingly for large
+    /// vocabularies (all-pairs sweeps run with `keep_d: false` and are
+    /// unaffected).
+    pub batch_block: usize,
 }
 
 impl Default for EngineParams {
@@ -41,6 +52,7 @@ impl Default for EngineParams {
             metric: Metric::L2,
             threads: crate::util::threadpool::default_threads(),
             symmetric: true,
+            batch_block: DEFAULT_BATCH_BLOCK,
         }
     }
 }
@@ -48,13 +60,20 @@ impl Default for EngineParams {
 /// The native (CPU data-parallel) LC engine over one database.
 ///
 /// Owns a shared handle to the dataset plus the per-database precomputations
-/// (BoW row norms, WCD centroids) so constructing it once and reusing it per
-/// query is cheap — the coordinator caches one engine per dataset.
+/// (BoW row norms, WCD centroids, vocabulary squared norms for the Phase-1
+/// Gram expansion) so constructing it once and reusing it per query is cheap
+/// — the coordinator caches one engine per dataset.
 pub struct LcEngine {
     dataset: Arc<Dataset>,
     params: EngineParams,
     bow_norms: Vec<f32>,
     centroids: Vec<f64>,
+    /// `|v_i|²` per vocabulary row, shared by every Phase-1 plan (computing
+    /// this per `plan_query` call was an `O(n·v·m)` term in all-pairs mode).
+    vocab_sq_norms: Vec<f32>,
+    /// Built once in `new` (the seed rebuilt a registry on every
+    /// per-pair call).
+    registry: MethodRegistry,
 }
 
 impl LcEngine {
@@ -62,6 +81,8 @@ impl LcEngine {
         LcEngine {
             bow_norms: dataset.matrix.row_l2_norms(),
             centroids: centroids_batch(&dataset.embeddings, &dataset.matrix),
+            vocab_sq_norms: dataset.embeddings.row_sq_norms(),
+            registry: MethodRegistry::new(params.metric),
             dataset,
             params,
         }
@@ -75,10 +96,15 @@ impl LcEngine {
         &self.params
     }
 
-    /// A registry configured with this engine's ground metric — the object
+    /// The precomputed vocabulary row squared-norm table (Phase-1 input).
+    pub fn vocab_sq_norms(&self) -> &[f32] {
+        &self.vocab_sq_norms
+    }
+
+    /// The registry configured with this engine's ground metric — the object
     /// the per-pair fallback and the cascade's rerank stage dispatch through.
     pub fn registry(&self) -> MethodRegistry {
-        MethodRegistry::new(self.params.metric)
+        self.registry
     }
 
     /// Distances from one query histogram to every database row (direction
@@ -94,16 +120,16 @@ impl LcEngine {
             Method::Wcd => {
                 let qc = crate::approx::centroid(&self.dataset.embeddings, query);
                 let m = self.dataset.embeddings.dim();
-                (0..db.nrows())
-                    .map(|u| {
-                        wcd_from_centroids(&qc, &self.centroids[u * m..(u + 1) * m]) as f32
-                    })
-                    .collect()
+                // data-parallel over database rows, like every other method
+                parallel_map(db.nrows(), self.params.threads, |u| {
+                    wcd_from_centroids(&qc, &self.centroids[u * m..(u + 1) * m]) as f32
+                })
             }
             Method::Rwmd | Method::Omr | Method::Act { .. } => {
                 let keep_d = self.params.symmetric;
                 let plan = plan_query(
                     &self.dataset.embeddings,
+                    &self.vocab_sq_norms,
                     query,
                     PlanParams {
                         k: method.plan_k(),
@@ -112,23 +138,85 @@ impl LcEngine {
                         threads: self.params.threads,
                     },
                 );
-                let mut t = match method {
-                    Method::Rwmd => rwmd_direction_a(&plan, db, self.params.threads),
-                    Method::Omr => omr_direction_a(&plan, db, self.params.threads),
-                    _ => act_direction_a(&plan, db, self.params.threads),
-                };
-                if keep_d {
-                    let tb = rwmd_direction_b(&plan, db, self.params.threads);
-                    for (a, b) in t.iter_mut().zip(tb) {
-                        if b > *a {
-                            *a = b;
-                        }
-                    }
-                }
+                let mut t = vec![0.0f32; db.nrows()];
+                let mut tb = Vec::new();
+                self.phase2_into(method, &plan, &mut t, self.params.threads, &mut tb);
                 t
             }
             _ => self.per_pair_row(query, method),
         }
+    }
+
+    /// Phase 2 (+ direction-B max when the engine is symmetric) for one
+    /// plan, written into a caller-owned row.  `tb` is a reusable scratch
+    /// row for the direction-B sweep, so batched callers pay zero per-query
+    /// allocations here too.
+    fn phase2_into(
+        &self,
+        method: Method,
+        plan: &QueryPlan,
+        out: &mut [f32],
+        threads: usize,
+        tb: &mut Vec<f32>,
+    ) {
+        let db = &self.dataset.matrix;
+        match method {
+            Method::Rwmd => rwmd_direction_a_into(plan, db, threads, out),
+            Method::Omr => omr_direction_a_into(plan, db, threads, out),
+            _ => act_direction_a_into(plan, db, threads, out),
+        }
+        if plan.d.is_some() {
+            tb.resize(db.nrows(), 0.0);
+            rwmd_direction_b_into(plan, db, threads, tb);
+            for (a, &b) in out.iter_mut().zip(tb.iter()) {
+                if b > *a {
+                    *a = b;
+                }
+            }
+        }
+    }
+
+    /// Row-major `(queries.len(), n)` distances for a block of queries —
+    /// the multi-query fast path.  The LC plan methods (RWMD/OMR/ACT) are
+    /// planned in blocks of [`EngineParams::batch_block`] through the tiled
+    /// multi-query Phase-1 kernel ([`BatchPlanner`]), reusing one
+    /// [`PlanScratch`] arena across the whole call; rows are bit-identical
+    /// to per-query [`LcEngine::distances`].  Plan-free and per-pair
+    /// methods evaluate row by row.
+    pub fn distances_batch(&self, queries: &[Histogram], method: Method) -> Vec<f32> {
+        let n = self.dataset.len();
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        if !matches!(method, Method::Rwmd | Method::Omr | Method::Act { .. }) {
+            let mut out = Vec::with_capacity(queries.len() * n);
+            for q in queries {
+                out.extend_from_slice(&self.distances(q, method));
+            }
+            return out;
+        }
+        let keep_d = self.params.symmetric;
+        let bb = self.params.batch_block.max(1);
+        let threads = self.params.threads;
+        let params = PlanParams {
+            k: method.plan_k(),
+            metric: self.params.metric,
+            keep_d,
+            threads,
+        };
+        let planner = BatchPlanner::new(&self.dataset.embeddings, &self.vocab_sq_norms);
+        let mut scratch = PlanScratch::new();
+        let mut plans: Vec<QueryPlan> = Vec::new();
+        let mut out = vec![0.0f32; queries.len() * n];
+        let mut tb = Vec::new();
+        for (b, block) in queries.chunks(bb).enumerate() {
+            planner.plan_block_into(block, params, &mut scratch, &mut plans);
+            for (i, plan) in plans.iter().enumerate() {
+                let q = b * bb + i;
+                self.phase2_into(method, plan, &mut out[q * n..(q + 1) * n], threads, &mut tb);
+            }
+        }
+        out
     }
 
     /// Per-pair fallback: score the query against every row through the
@@ -163,10 +251,14 @@ impl LcEngine {
     }
 
     /// All-pairs asymmetric direction-A matrix `(n, n)`: row u = distances
-    /// with query u.  Parallel over queries (each query's Phase 1/2 is
-    /// itself sequential here to avoid nested parallelism).  Per-pair
-    /// methods are symmetric by construction, so their "asymmetric" matrix
-    /// is the symmetric triangle sweep.
+    /// with query u.  Parallel over query blocks: each worker feeds blocks
+    /// of [`EngineParams::batch_block`] CSR rows through the tiled
+    /// multi-query Phase-1 kernel (vocabulary streamed once per block, not
+    /// once per query) with a chunk-local [`PlanScratch`], then writes
+    /// Phase-2 rows straight into the matrix — zero per-query heap
+    /// allocations in steady state.  Per-pair methods are symmetric by
+    /// construction, so their "asymmetric" matrix is the symmetric triangle
+    /// sweep.
     pub fn all_pairs_asymmetric(&self, method: Method) -> Vec<f32> {
         if !method.is_linear_complexity() {
             let dist = self.registry().distance(method);
@@ -177,37 +269,70 @@ impl LcEngine {
         let mut out = vec![0.0f32; n * n];
         match method {
             Method::Bow | Method::Wcd => {
+                let m = self.dataset.embeddings.dim();
                 let slots = SyncSlice::new(&mut out);
                 parallel_for(n, self.params.threads, |start, end| {
                     for uq in start..end {
                         let q = self.dataset.histogram(uq);
-                        let row = self.distances(&q, method);
+                        // per-query rows computed serially inside the outer
+                        // parallel sweep (no nested parallelism)
+                        let row: Vec<f32> = match method {
+                            Method::Bow => bow_distances_batch(&q, db, &self.bow_norms)
+                                .into_iter()
+                                .map(|d| d as f32)
+                                .collect(),
+                            _ => {
+                                let qc =
+                                    crate::approx::centroid(&self.dataset.embeddings, &q);
+                                (0..n)
+                                    .map(|u| {
+                                        wcd_from_centroids(
+                                            &qc,
+                                            &self.centroids[u * m..(u + 1) * m],
+                                        )
+                                            as f32
+                                    })
+                                    .collect()
+                            }
+                        };
                         unsafe { slots.slice_mut(uq * n, (uq + 1) * n).copy_from_slice(&row) };
                     }
                 });
             }
             Method::Rwmd | Method::Omr | Method::Act { .. } => {
-                let k = method.plan_k();
+                let params = PlanParams {
+                    k: method.plan_k(),
+                    metric: self.params.metric,
+                    keep_d: false,
+                    threads: 1,
+                };
+                let bb = self.params.batch_block.max(1);
+                let planner =
+                    BatchPlanner::new(&self.dataset.embeddings, &self.vocab_sq_norms);
                 let slots = SyncSlice::new(&mut out);
                 parallel_for(n, self.params.threads, |start, end| {
-                    for uq in start..end {
-                        let q = self.dataset.histogram(uq);
-                        let plan = plan_query(
-                            &self.dataset.embeddings,
-                            &q,
-                            PlanParams {
-                                k,
-                                metric: self.params.metric,
-                                keep_d: false,
-                                threads: 1,
-                            },
-                        );
-                        let row = match method {
-                            Method::Rwmd => rwmd_direction_a(&plan, db, 1),
-                            Method::Omr => omr_direction_a(&plan, db, 1),
-                            _ => act_direction_a(&plan, db, 1),
-                        };
-                        unsafe { slots.slice_mut(uq * n, (uq + 1) * n).copy_from_slice(&row) };
+                    let mut scratch = PlanScratch::new();
+                    let mut plans: Vec<QueryPlan> = Vec::new();
+                    let mut block: Vec<(&[u32], &[f32])> = Vec::with_capacity(bb);
+                    let mut u0 = start;
+                    while u0 < end {
+                        let u1 = (u0 + bb).min(end);
+                        block.clear();
+                        for u in u0..u1 {
+                            block.push(db.row(u));
+                        }
+                        planner.plan_rows_into(&block, params, &mut scratch, &mut plans);
+                        for (i, plan) in plans.iter().enumerate() {
+                            let uq = u0 + i;
+                            // SAFETY: row uq is owned by exactly this chunk.
+                            let row = unsafe { slots.slice_mut(uq * n, (uq + 1) * n) };
+                            match method {
+                                Method::Rwmd => rwmd_direction_a_into(plan, db, 1, row),
+                                Method::Omr => omr_direction_a_into(plan, db, 1, row),
+                                _ => act_direction_a_into(plan, db, 1, row),
+                            }
+                        }
+                        u0 = u1;
                     }
                 });
             }
@@ -228,13 +353,23 @@ impl LcEngine {
         let n = self.dataset.len();
         let mut a = self.all_pairs_asymmetric(method);
         if !matches!(method, Method::Bow | Method::Wcd) {
-            for u in 0..n {
-                for v in (u + 1)..n {
-                    let x = a[u * n + v].max(a[v * n + u]);
-                    a[u * n + v] = x;
-                    a[v * n + u] = x;
+            // Data-parallel O(n²) symmetrization.  Safe partition: the cell
+            // pair {(u,v), (v,u)} is read and written only by the worker
+            // that owns row min(u,v), and rows are disjoint across chunks.
+            // parallel_for's chunk stealing (~4 small chunks per worker)
+            // absorbs the triangular row-length skew.
+            let slots = SyncSlice::new(&mut a);
+            parallel_for(n, self.params.threads, |start, end| {
+                for u in start..end {
+                    for v in (u + 1)..n {
+                        unsafe {
+                            let x = slots.get(u * n + v).max(slots.get(v * n + u));
+                            slots.write(u * n + v, x);
+                            slots.write(v * n + u, x);
+                        }
+                    }
                 }
-            }
+            });
         }
         a
     }
@@ -324,6 +459,21 @@ impl BatchDistance for LcBatch {
         Ok(match &self.pair {
             Some(dist) => self.engine.per_pair_row_via(query, dist.as_ref()),
             None => self.engine.distances(query, self.method),
+        })
+    }
+
+    fn distances_batch(&self, queries: &[Histogram]) -> EmdResult<Vec<f32>> {
+        Ok(match &self.pair {
+            // per-pair fallback: registry-configured object, row by row
+            Some(dist) => {
+                let mut out = Vec::with_capacity(queries.len() * self.num_rows());
+                for q in queries {
+                    out.extend_from_slice(&self.engine.per_pair_row_via(q, dist.as_ref()));
+                }
+                out
+            }
+            // LC methods: the engine's batched Phase-1 block pipeline
+            None => self.engine.distances_batch(queries, self.method),
         })
     }
 

@@ -8,13 +8,16 @@
 //! (re-exported here for convenience); the engine also serves the per-pair
 //! comparators through the same interface via [`crate::core::MethodRegistry`].
 
+pub mod batch_plan;
 pub mod engine;
 pub mod plan;
 pub mod transfers;
 
 pub use crate::core::Method;
+pub use batch_plan::{BatchPlanner, PlanScratch, DEFAULT_BATCH_BLOCK};
 pub use engine::{EngineParams, LcBatch, LcEngine};
 pub use plan::{plan_query, snapped_distance, PlanParams, QueryPlan};
 pub use transfers::{
-    act_direction_a, omr_direction_a, rwmd_direction_a, rwmd_direction_b,
+    act_direction_a, act_direction_a_into, omr_direction_a, omr_direction_a_into,
+    rwmd_direction_a, rwmd_direction_a_into, rwmd_direction_b, rwmd_direction_b_into,
 };

@@ -16,7 +16,7 @@ use crate::core::{Embeddings, Histogram, Metric};
 use crate::util::threadpool::{parallel_for, SyncSlice};
 
 /// Per-query preprocessing product.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct QueryPlan {
     /// Number of transfer targets (ACT-(k-1)); k = 1 is LC-RWMD.
     pub k: usize,
@@ -70,6 +70,22 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     dot
 }
 
+/// The Gram-expansion form of the snapped distance: `d²(i,j) = |v|² −
+/// 2⟨v,q_j⟩ + |q_j|²` with cancellation noise below the relative floor
+/// collapsed to an exact 0 (the overlap rule).  One function shared by the
+/// single-query kernel and the batched multi-query kernel so the two paths
+/// are bit-identical by construction.
+#[inline]
+pub(crate) fn l2_snap(vn: f32, dot: f32, qn: f32) -> f32 {
+    let d2 = vn - 2.0 * dot + qn;
+    let scale = vn + qn;
+    if d2 <= 1e-6 * scale {
+        0.0
+    } else {
+        d2.max(0.0).sqrt()
+    }
+}
+
 /// Squared-L2 distance with the same snap-to-zero the Pallas kernel applies:
 /// values below the relative cancellation floor collapse to exact 0 so the
 /// OMR/ICT overlap rule fires deterministically.
@@ -95,17 +111,23 @@ pub fn snapped_distance(metric: Metric, a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// Build the Phase-1 plan for one query histogram.
+///
+/// `vn` is the vocabulary row squared-norm table
+/// ([`crate::core::Embeddings::row_sq_norms`]), computed once per dataset —
+/// [`crate::lc::LcEngine`] owns it, so all-pairs sweeps no longer redo the
+/// `O(v·m)` reduction per query (an `O(n·v·m)` waste at the seed).
 pub fn plan_query(
     vocab: &Embeddings,
+    vn: &[f32],
     query: &Histogram,
     params: PlanParams,
 ) -> QueryPlan {
+    assert_eq!(vn.len(), vocab.num_vectors(), "vocab norm table size mismatch");
     let qn = query.normalized();
     let h = qn.len();
     assert!(h > 0, "empty query histogram");
     let k = params.k.clamp(1, h);
     let v = vocab.num_vectors();
-    let m = vocab.dim();
 
     // Gather the query coordinate matrix Q (h, m) once for cache locality.
     let q_coords = vocab.gather(qn.indices());
@@ -117,13 +139,9 @@ pub fn plan_query(
     let mut w = vec![0.0f32; v * k];
     let mut d = if params.keep_d { vec![0.0f32; v * h] } else { Vec::new() };
 
-    // Precompute query squared norms for the Gram expansion (L2 fast path).
-    let q_norms: Vec<f32> = (0..h)
-        .map(|j| {
-            let r = q_coords.row(j);
-            r.iter().map(|&x| x * x).sum::<f32>()
-        })
-        .collect();
+    // Query squared norms gathered from the precomputed table (bit-equal to
+    // re-summing the gathered rows: same values, same order).
+    let q_norms: Vec<f32> = qn.indices().iter().map(|&i| vn[i as usize]).collect();
     let use_expansion = params.metric == Metric::L2;
 
     {
@@ -147,14 +165,10 @@ pub fn plan_query(
                     // exactly the Pallas kernel's formulation (same snap, so
                     // all three layers agree on overlap zeros).  The dot
                     // loop over m autovectorizes (AVX-512: 16 f32 lanes).
-                    let vn: f32 = vi.iter().map(|&x| x * x).sum();
+                    let vni = vn[i];
                     for j in 0..h {
                         let qj = q_coords_ref.row(j);
-                        let dot = dot_f32(vi, qj);
-                        let d2 = vn - 2.0 * dot + q_norms_ref[j];
-                        let scale = vn + q_norms_ref[j];
-                        // snap cancellation noise to an exact 0 (overlap rule)
-                        row[j] = if d2 <= 1e-6 * scale { 0.0 } else { d2.max(0.0).sqrt() };
+                        row[j] = l2_snap(vni, dot_f32(vi, qj), q_norms_ref[j]);
                     }
                     // the query bin that *is* this vocabulary entry must be
                     // exactly 0 regardless of rounding (indices are sorted)
@@ -187,7 +201,6 @@ pub fn plan_query(
                 }
             }
         });
-        let _ = m;
     }
 
     QueryPlan { k, h, qw, z, s, w, d: if params.keep_d { Some(d) } else { None } }
@@ -214,6 +227,7 @@ mod tests {
         let (vocab, q) = setup(1, 40, 10, 4);
         let plan = plan_query(
             &vocab,
+            &vocab.row_sq_norms(),
             &q,
             PlanParams { k: 4, metric: Metric::L2, keep_d: true, threads: 2 },
         );
@@ -234,6 +248,7 @@ mod tests {
         let (vocab, q) = setup(2, 30, 8, 3);
         let plan = plan_query(
             &vocab,
+            &vocab.row_sq_norms(),
             &q,
             PlanParams { k: 1, metric: Metric::L2, keep_d: false, threads: 1 },
         );
@@ -249,13 +264,16 @@ mod tests {
     #[test]
     fn threads_do_not_change_result() {
         let (vocab, q) = setup(3, 64, 12, 5);
+        let vn = vocab.row_sq_norms();
         let p1 = plan_query(
             &vocab,
+            &vn,
             &q,
             PlanParams { k: 3, metric: Metric::L2, keep_d: true, threads: 1 },
         );
         let p8 = plan_query(
             &vocab,
+            &vn,
             &q,
             PlanParams { k: 3, metric: Metric::L2, keep_d: true, threads: 8 },
         );
@@ -269,6 +287,7 @@ mod tests {
         let (vocab, q) = setup(4, 20, 3, 2);
         let plan = plan_query(
             &vocab,
+            &vocab.row_sq_norms(),
             &q,
             PlanParams { k: 10, metric: Metric::L2, keep_d: false, threads: 1 },
         );

@@ -12,139 +12,160 @@ use crate::util::threadpool::{parallel_for, SyncSlice};
 
 use super::plan::QueryPlan;
 
-/// ACT-(k-1) direction-A bounds: cost of moving every database histogram
-/// into the query (eq. (6)-(9), CSR form).
+/// ACT-(k-1) direction-A bounds written into a caller-owned slice (the
+/// zero-allocation form the batched all-pairs sweep writes matrix rows
+/// through): cost of moving every database histogram into the query
+/// (eq. (6)-(9), CSR form).
+pub fn act_direction_a_into(plan: &QueryPlan, db: &CsrMatrix, threads: usize, out: &mut [f32]) {
+    let n = db.nrows();
+    assert_eq!(out.len(), n, "output row length mismatch");
+    let k = plan.k;
+    let slots = SyncSlice::new(out);
+    parallel_for(n, threads, |start, end| {
+        for u in start..end {
+            let (idx, w) = db.row(u);
+            let mut t = 0.0f64;
+            for (&i, &xw) in idx.iter().zip(w) {
+                let base = i as usize * k;
+                let zrow = &plan.z[base..base + k];
+                let wrow = &plan.w[base..base + k];
+                let mut pi = xw as f64;
+                for l in 0..k - 1 {
+                    let r = pi.min(wrow[l] as f64);
+                    pi -= r;
+                    t += r * zrow[l] as f64;
+                }
+                t += pi * zrow[k - 1] as f64;
+            }
+            // SAFETY: row u owned by this chunk.
+            unsafe { slots.write(u, t as f32) };
+        }
+    });
+}
+
+/// Allocating wrapper around [`act_direction_a_into`].
 pub fn act_direction_a(plan: &QueryPlan, db: &CsrMatrix, threads: usize) -> Vec<f32> {
-    let n = db.nrows();
-    let k = plan.k;
-    let mut out = vec![0.0f32; n];
-    {
-        let slots = SyncSlice::new(&mut out);
-        parallel_for(n, threads, |start, end| {
-            for u in start..end {
-                let (idx, w) = db.row(u);
-                let mut t = 0.0f64;
-                for (&i, &xw) in idx.iter().zip(w) {
-                    let base = i as usize * k;
-                    let zrow = &plan.z[base..base + k];
-                    let wrow = &plan.w[base..base + k];
-                    let mut pi = xw as f64;
-                    for l in 0..k - 1 {
-                        let r = pi.min(wrow[l] as f64);
-                        pi -= r;
-                        t += r * zrow[l] as f64;
-                    }
-                    t += pi * zrow[k - 1] as f64;
-                }
-                // SAFETY: row u owned by this chunk.
-                unsafe { slots.write(u, t as f32) };
-            }
-        });
-    }
+    let mut out = vec![0.0f32; db.nrows()];
+    act_direction_a_into(plan, db, threads, &mut out);
     out
 }
 
-/// LC-RWMD (paper Atasu et al. 2017): k=1 special case — every coordinate's
-/// whole weight ships at the nearest-query-coordinate distance.
+/// LC-RWMD (paper Atasu et al. 2017) into a caller-owned slice: k=1 special
+/// case — every coordinate's whole weight ships at the
+/// nearest-query-coordinate distance.
+pub fn rwmd_direction_a_into(plan: &QueryPlan, db: &CsrMatrix, threads: usize, out: &mut [f32]) {
+    let n = db.nrows();
+    assert_eq!(out.len(), n, "output row length mismatch");
+    let k = plan.k;
+    let slots = SyncSlice::new(out);
+    parallel_for(n, threads, |start, end| {
+        for u in start..end {
+            let (idx, w) = db.row(u);
+            let mut t = 0.0f64;
+            for (&i, &xw) in idx.iter().zip(w) {
+                t += xw as f64 * plan.z[i as usize * k] as f64;
+            }
+            unsafe { slots.write(u, t as f32) };
+        }
+    });
+}
+
+/// Allocating wrapper around [`rwmd_direction_a_into`].
 pub fn rwmd_direction_a(plan: &QueryPlan, db: &CsrMatrix, threads: usize) -> Vec<f32> {
-    let n = db.nrows();
-    let k = plan.k;
-    let mut out = vec![0.0f32; n];
-    {
-        let slots = SyncSlice::new(&mut out);
-        parallel_for(n, threads, |start, end| {
-            for u in start..end {
-                let (idx, w) = db.row(u);
-                let mut t = 0.0f64;
-                for (&i, &xw) in idx.iter().zip(w) {
-                    t += xw as f64 * plan.z[i as usize * k] as f64;
-                }
-                unsafe { slots.write(u, t as f32) };
-            }
-        });
-    }
+    let mut out = vec![0.0f32; db.nrows()];
+    rwmd_direction_a_into(plan, db, threads, &mut out);
     out
 }
 
-/// LC-OMR (Algorithm 1, batched): free transfer only between *overlapping*
-/// coordinates (z1 == 0), capacity `min(x, w1)`; remainder to the second
-/// closest.  Requires a plan with k >= 2 (k == 1 degenerates to LC-RWMD).
-pub fn omr_direction_a(plan: &QueryPlan, db: &CsrMatrix, threads: usize) -> Vec<f32> {
+/// LC-OMR (Algorithm 1, batched) into a caller-owned slice: free transfer
+/// only between *overlapping* coordinates (z1 == 0), capacity `min(x, w1)`;
+/// remainder to the second closest.  Requires a plan with k >= 2 (k == 1
+/// degenerates to LC-RWMD).
+pub fn omr_direction_a_into(plan: &QueryPlan, db: &CsrMatrix, threads: usize, out: &mut [f32]) {
     let n = db.nrows();
+    assert_eq!(out.len(), n, "output row length mismatch");
     let k = plan.k;
     if k < 2 {
-        return rwmd_direction_a(plan, db, threads);
+        rwmd_direction_a_into(plan, db, threads, out);
+        return;
     }
-    let mut out = vec![0.0f32; n];
-    {
-        let slots = SyncSlice::new(&mut out);
-        parallel_for(n, threads, |start, end| {
-            for u in start..end {
-                let (idx, w) = db.row(u);
-                let mut t = 0.0f64;
-                for (&i, &xw) in idx.iter().zip(w) {
-                    let base = i as usize * k;
-                    let z1 = plan.z[base];
-                    if z1 == 0.0 {
-                        let cap = plan.w[base] as f64;
-                        let rest = (xw as f64 - cap).max(0.0);
-                        t += rest * plan.z[base + 1] as f64;
-                    } else {
-                        t += xw as f64 * z1 as f64;
-                    }
+    let slots = SyncSlice::new(out);
+    parallel_for(n, threads, |start, end| {
+        for u in start..end {
+            let (idx, w) = db.row(u);
+            let mut t = 0.0f64;
+            for (&i, &xw) in idx.iter().zip(w) {
+                let base = i as usize * k;
+                let z1 = plan.z[base];
+                if z1 == 0.0 {
+                    let cap = plan.w[base] as f64;
+                    let rest = (xw as f64 - cap).max(0.0);
+                    t += rest * plan.z[base + 1] as f64;
+                } else {
+                    t += xw as f64 * z1 as f64;
                 }
-                unsafe { slots.write(u, t as f32) };
             }
-        });
-    }
+            unsafe { slots.write(u, t as f32) };
+        }
+    });
+}
+
+/// Allocating wrapper around [`omr_direction_a_into`].
+pub fn omr_direction_a(plan: &QueryPlan, db: &CsrMatrix, threads: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; db.nrows()];
+    omr_direction_a_into(plan, db, threads, &mut out);
     out
 }
 
-/// Direction-B RWMD: cost of moving the query into each database histogram
-/// — `Σ_j qw_j · min_{i ∈ supp(x_u)} D[i, j]` (masked min-plus product).
-/// Needs the plan's full D matrix (`keep_d: true`).
-pub fn rwmd_direction_b(plan: &QueryPlan, db: &CsrMatrix, threads: usize) -> Vec<f32> {
+/// Direction-B RWMD into a caller-owned slice: cost of moving the query
+/// into each database histogram — `Σ_j qw_j · min_{i ∈ supp(x_u)} D[i, j]`
+/// (masked min-plus product).  Needs the plan's full D matrix
+/// (`keep_d: true`).
+pub fn rwmd_direction_b_into(plan: &QueryPlan, db: &CsrMatrix, threads: usize, out: &mut [f32]) {
     let d = plan
         .d
         .as_ref()
         .expect("direction-B RWMD needs plan_query(.., keep_d: true)");
     let h = plan.h;
     let n = db.nrows();
-    let mut out = vec![0.0f32; n];
-    {
-        let slots = SyncSlice::new(&mut out);
-        parallel_for(n, threads, |start, end| {
-            let mut r = vec![0.0f32; h];
-            for u in start..end {
-                let (idx, _) = db.row(u);
-                if idx.is_empty() {
-                    unsafe { slots.write(u, 0.0) };
-                    continue;
-                }
-                r.copy_from_slice(&d[idx[0] as usize * h..(idx[0] as usize + 1) * h]);
-                for &i in &idx[1..] {
-                    let drow = &d[i as usize * h..(i as usize + 1) * h];
-                    // lane-chunked min: compiles to packed vminps (the
-                    // branchy form defeats vectorization on some LLVMs)
-                    const LANES: usize = 16;
-                    let chunks = h / LANES;
-                    for c in 0..chunks {
-                        let rs = &mut r[c * LANES..c * LANES + LANES];
-                        let ds_ = &drow[c * LANES..c * LANES + LANES];
-                        for l in 0..LANES {
-                            rs[l] = rs[l].min(ds_[l]);
-                        }
-                    }
-                    for t in chunks * LANES..h {
-                        r[t] = r[t].min(drow[t]);
-                    }
-                }
-                let t: f64 =
-                    r.iter().zip(&plan.qw).map(|(&c, &w)| c as f64 * w as f64).sum();
-                unsafe { slots.write(u, t as f32) };
+    assert_eq!(out.len(), n, "output row length mismatch");
+    let slots = SyncSlice::new(out);
+    parallel_for(n, threads, |start, end| {
+        let mut r = vec![0.0f32; h];
+        for u in start..end {
+            let (idx, _) = db.row(u);
+            if idx.is_empty() {
+                unsafe { slots.write(u, 0.0) };
+                continue;
             }
-        });
-    }
+            r.copy_from_slice(&d[idx[0] as usize * h..(idx[0] as usize + 1) * h]);
+            for &i in &idx[1..] {
+                let drow = &d[i as usize * h..(i as usize + 1) * h];
+                // lane-chunked min: compiles to packed vminps (the
+                // branchy form defeats vectorization on some LLVMs)
+                const LANES: usize = 16;
+                let chunks = h / LANES;
+                for c in 0..chunks {
+                    let rs = &mut r[c * LANES..c * LANES + LANES];
+                    let ds_ = &drow[c * LANES..c * LANES + LANES];
+                    for l in 0..LANES {
+                        rs[l] = rs[l].min(ds_[l]);
+                    }
+                }
+                for t in chunks * LANES..h {
+                    r[t] = r[t].min(drow[t]);
+                }
+            }
+            let t: f64 = r.iter().zip(&plan.qw).map(|(&c, &w)| c as f64 * w as f64).sum();
+            unsafe { slots.write(u, t as f32) };
+        }
+    });
+}
+
+/// Allocating wrapper around [`rwmd_direction_b_into`].
+pub fn rwmd_direction_b(plan: &QueryPlan, db: &CsrMatrix, threads: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; db.nrows()];
+    rwmd_direction_b_into(plan, db, threads, &mut out);
     out
 }
 
@@ -188,6 +209,7 @@ mod tests {
         for k in [1usize, 2, 4, 8] {
             let plan = plan_query(
                 &vocab,
+                &vocab.row_sq_norms(),
                 &q,
                 PlanParams { k, metric: Metric::L2, keep_d: true, threads: 3 },
             );
@@ -231,6 +253,7 @@ mod tests {
         let (vocab, q, _, db) = setup(2, 32, 8, 3, 10);
         let plan = plan_query(
             &vocab,
+            &vocab.row_sq_norms(),
             &q,
             PlanParams { k: 1, metric: Metric::L2, keep_d: false, threads: 2 },
         );
@@ -248,6 +271,7 @@ mod tests {
         for k in [1usize, 2, 4, 8] {
             let plan = plan_query(
                 &vocab,
+                &vocab.row_sq_norms(),
                 &q,
                 PlanParams { k, metric: Metric::L2, keep_d: false, threads: 2 },
             );
@@ -267,6 +291,7 @@ mod tests {
         let db = CsrMatrix::from_histograms(&docs, 30);
         let plan = plan_query(
             &vocab,
+            &vocab.row_sq_norms(),
             &q,
             PlanParams { k: 2, metric: Metric::L2, keep_d: false, threads: 1 },
         );
@@ -281,6 +306,7 @@ mod tests {
         let db = CsrMatrix::from_histograms(&docs, 30);
         let plan = plan_query(
             &vocab,
+            &vocab.row_sq_norms(),
             &q,
             PlanParams { k: 2, metric: Metric::L2, keep_d: true, threads: 1 },
         );

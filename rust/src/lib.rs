@@ -55,5 +55,5 @@ pub mod prelude {
         BatchDistance, Dataset, Distance, EmdError, EmdResult, Embeddings, Histogram, Method,
         MethodRegistry, Metric, METHOD_SYNTAX,
     };
-    pub use crate::lc::{EngineParams, LcBatch, LcEngine};
+    pub use crate::lc::{BatchPlanner, EngineParams, LcBatch, LcEngine, PlanScratch};
 }

@@ -239,6 +239,7 @@ fn cmd_eval(args: &[String]) -> EmdResult<()> {
         metric: Metric::L2,
         threads: cfg.threads,
         symmetric: cfg.symmetric,
+        batch_block: cfg.batch_block,
     };
     let subset = p.usize("subset")?;
     let rows = if subset > 0 {
@@ -312,7 +313,7 @@ fn cmd_artifacts_check(args: &[String]) -> EmdResult<()> {
     let got = art.distances(&q, k, true)?;
     let native = LcEngine::new(
         std::sync::Arc::new(ds.clone()),
-        EngineParams { metric: Metric::L2, threads: 2, symmetric: true },
+        EngineParams { metric: Metric::L2, threads: 2, symmetric: true, ..Default::default() },
     )
     .distances(&q, Method::Act { k });
     let mut max_err = 0.0f32;

@@ -111,6 +111,18 @@ impl<'a, T> SyncSlice<'a, T> {
         unsafe { *self.ptr.add(i) = value };
     }
 
+    /// Read one element.  SAFETY: the caller must guarantee no other thread
+    /// writes index `i` concurrently (e.g. index-ownership partitions where
+    /// each cell's reader is also its only potential writer).
+    #[inline]
+    pub unsafe fn get(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) }
+    }
+
     /// Get a mutable sub-slice.  Caller must keep sub-slices disjoint.
     #[inline]
     #[allow(clippy::mut_from_ref)]

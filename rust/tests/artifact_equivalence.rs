@@ -47,7 +47,7 @@ fn artifact_matches_native_across_k() {
     let art = ArtifactEngine::new(&exec, &ds, "dev").expect("bind dev profile");
     let native = LcEngine::new(
         std::sync::Arc::new(ds.clone()),
-        EngineParams { metric: Metric::L2, threads: 2, symmetric: false },
+        EngineParams { metric: Metric::L2, threads: 2, symmetric: false, ..Default::default() },
     );
     for k in exec.manifest().ks_for("dev") {
         let q = ds.histogram(1);
@@ -70,7 +70,7 @@ fn artifact_symmetric_matches_native_symmetric() {
     let art = ArtifactEngine::new(&exec, &ds, "dev").expect("bind dev profile");
     let native = LcEngine::new(
         std::sync::Arc::new(ds.clone()),
-        EngineParams { metric: Metric::L2, threads: 2, symmetric: true },
+        EngineParams { metric: Metric::L2, threads: 2, symmetric: true, ..Default::default() },
     );
     let q = ds.histogram(7);
     let got = art.distances(&q, 2, true).unwrap();

@@ -1,0 +1,214 @@
+//! Batched-vs-single equivalence: the multi-query Phase-1 pipeline
+//! (`LcEngine::distances_batch`, the blocked all-pairs sweep, the batched
+//! `BatchDistance` entry point and the server-side grouped dispatch) must be
+//! **bit-identical** to the single-query path for every LC method, every
+//! plan width, every thread count and every block size — and two
+//! consecutive batches through one `PlanScratch` must give identical
+//! results (no state leaks through the recycled arena).
+
+use std::sync::Arc;
+
+use emdpar::core::{BatchDistance, Dataset, Histogram, Method, MethodRegistry, Metric};
+use emdpar::data::{generate_text, TextConfig};
+use emdpar::lc::{BatchPlanner, EngineParams, LcEngine, PlanParams, PlanScratch};
+
+fn dataset(n: usize) -> Arc<Dataset> {
+    Arc::new(generate_text(&TextConfig {
+        n,
+        classes: 3,
+        vocab: 220,
+        dim: 7, // odd: exercises the dot-product tail lanes
+        doc_len: 18,
+        seed: 42,
+        ..Default::default()
+    }))
+}
+
+fn engine(ds: &Arc<Dataset>, threads: usize, symmetric: bool, batch_block: usize) -> LcEngine {
+    LcEngine::new(
+        Arc::clone(ds),
+        EngineParams { metric: Metric::L2, threads, symmetric, batch_block },
+    )
+}
+
+fn lc_methods() -> Vec<Method> {
+    vec![
+        Method::Rwmd,
+        Method::Omr,
+        Method::Act { k: 1 },
+        Method::Act { k: 2 },
+        Method::Act { k: 4 },
+        Method::Act { k: 8 },
+    ]
+}
+
+/// The headline acceptance test: `distances_batch` == per-query
+/// `distances`, bitwise, for every LC method × k ∈ {1,2,4,8} × thread
+/// counts × block sizes, in both asymmetric and symmetric engine modes.
+#[test]
+fn batched_rows_bit_equal_single_query_rows() {
+    let ds = dataset(30);
+    let queries: Vec<Histogram> = (0..13).map(|u| ds.histogram(u)).collect();
+    for symmetric in [false, true] {
+        for threads in [1usize, 2, 5] {
+            for batch_block in [1usize, 3, 8, 16] {
+                let eng = engine(&ds, threads, symmetric, batch_block);
+                for method in lc_methods() {
+                    let flat = eng.distances_batch(&queries, method);
+                    assert_eq!(flat.len(), queries.len() * ds.len());
+                    for (i, q) in queries.iter().enumerate() {
+                        let single = eng.distances(q, method);
+                        let got = &flat[i * ds.len()..(i + 1) * ds.len()];
+                        assert_eq!(
+                            got, &single[..],
+                            "{method} sym={symmetric} threads={threads} B={batch_block} q={i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Plan-free and per-pair methods also satisfy the batched contract
+/// (row-by-row path), so every canonical method is batch-dispatchable.
+#[test]
+fn non_plan_methods_batch_equal_single() {
+    let ds = dataset(12);
+    let eng = engine(&ds, 2, true, 4);
+    let queries: Vec<Histogram> = (0..5).map(|u| ds.histogram(u)).collect();
+    for method in [Method::Bow, Method::Wcd, Method::BowAdjusted, Method::Ict] {
+        let flat = eng.distances_batch(&queries, method);
+        for (i, q) in queries.iter().enumerate() {
+            let single = eng.distances(q, method);
+            assert_eq!(&flat[i * ds.len()..(i + 1) * ds.len()], &single[..], "{method} q={i}");
+        }
+    }
+}
+
+/// The blocked all-pairs sweep must reproduce the per-query rows bitwise
+/// (row u of the asymmetric matrix == `distances(histogram(u))` with an
+/// asymmetric engine), across thread counts and block sizes.
+#[test]
+fn blocked_all_pairs_bit_equal_per_query_rows() {
+    let ds = dataset(26);
+    let n = ds.len();
+    let reference = engine(&ds, 1, false, 1);
+    for threads in [1usize, 4] {
+        for batch_block in [1usize, 4, 8, 32] {
+            let eng = engine(&ds, threads, false, batch_block);
+            for method in [Method::Rwmd, Method::Omr, Method::Act { k: 3 }] {
+                let matrix = eng.all_pairs_asymmetric(method);
+                for u in 0..n {
+                    let row = reference.distances(&ds.histogram(u), method);
+                    assert_eq!(
+                        &matrix[u * n..(u + 1) * n],
+                        &row[..],
+                        "{method} threads={threads} B={batch_block} row={u}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The parallel O(n²) symmetrization must agree with a serial max-mirror.
+#[test]
+fn parallel_symmetrization_matches_serial() {
+    let ds = dataset(24);
+    let n = ds.len();
+    for method in [Method::Rwmd, Method::Act { k: 2 }] {
+        let eng = engine(&ds, 4, false, 8);
+        let asym = eng.all_pairs_asymmetric(method);
+        let sym = eng.all_pairs_symmetric(method);
+        for u in 0..n {
+            for v in 0..n {
+                let want = asym[u * n + v].max(asym[v * n + u]);
+                assert_eq!(sym[u * n + v], want, "{method} ({u},{v})");
+            }
+        }
+    }
+}
+
+/// Two consecutive batches through ONE `PlanScratch` give identical results
+/// to fresh-scratch planning — the recycled arena leaks no state.
+#[test]
+fn scratch_reuse_across_batches_is_identical() {
+    let ds = dataset(20);
+    let vn = ds.embeddings.row_sq_norms();
+    let planner = BatchPlanner::new(&ds.embeddings, &vn);
+    let params = PlanParams { k: 3, metric: Metric::L2, keep_d: true, threads: 2 };
+    let batch_a: Vec<Histogram> = (0..6).map(|u| ds.histogram(u)).collect();
+    let batch_b: Vec<Histogram> = (6..14).map(|u| ds.histogram(u)).collect();
+
+    // fresh scratch per batch = reference
+    let want_a = planner.plan_block(&batch_a, params, &mut PlanScratch::new());
+    let want_b = planner.plan_block(&batch_b, params, &mut PlanScratch::new());
+
+    // one scratch across both batches
+    let mut shared = PlanScratch::new();
+    let mut got_a = planner.plan_block(&batch_a, params, &mut shared);
+    for (g, w) in got_a.iter().zip(&want_a) {
+        assert_eq!((g.k, g.h), (w.k, w.h));
+        assert_eq!(g.qw, w.qw);
+        assert_eq!(g.z, w.z);
+        assert_eq!(g.s, w.s);
+        assert_eq!(g.w, w.w);
+        assert_eq!(g.d, w.d);
+    }
+    shared.recycle(&mut got_a);
+    let got_b = planner.plan_block(&batch_b, params, &mut shared);
+    for (g, w) in got_b.iter().zip(&want_b) {
+        assert_eq!((g.k, g.h), (w.k, w.h));
+        assert_eq!(g.qw, w.qw);
+        assert_eq!(g.z, w.z);
+        assert_eq!(g.s, w.s);
+        assert_eq!(g.w, w.w);
+        assert_eq!(g.d, w.d);
+    }
+}
+
+/// The `BatchDistance` trait's multi-query entry point: the LC override and
+/// the default row-by-row implementation agree for every canonical method.
+#[test]
+fn trait_distances_batch_matches_per_query() {
+    let ds = dataset(14);
+    let eng = Arc::new(engine(&ds, 2, true, 4));
+    let registry = MethodRegistry::new(Metric::L2);
+    let queries: Vec<Histogram> = (0..6).map(|u| ds.histogram(u)).collect();
+    for method in [Method::Rwmd, Method::Act { k: 2 }, Method::Bow, Method::Sinkhorn] {
+        let batch = registry.batch(&eng, method);
+        let flat = batch.distances_batch(&queries).unwrap();
+        assert_eq!(flat.len(), queries.len() * ds.len());
+        for (i, q) in queries.iter().enumerate() {
+            let single = batch.distances(q).unwrap();
+            assert_eq!(&flat[i * ds.len()..(i + 1) * ds.len()], &single[..], "{method} q={i}");
+        }
+    }
+}
+
+/// End-to-end: the coordinator's batched search returns the same hits as
+/// per-query search (the server's grouped dispatch rides on this).
+#[test]
+fn search_batch_matches_single_search() {
+    use emdpar::config::{Config, DatasetSpec};
+    use emdpar::coordinator::SearchEngine;
+    let config = Config {
+        dataset: DatasetSpec::SynthText { n: 32, vocab: 180, dim: 8, seed: 11 },
+        threads: 2,
+        shards: 3,
+        batch_block: 4,
+        ..Default::default()
+    };
+    let eng = SearchEngine::from_config(config).unwrap();
+    let queries: Vec<Histogram> = (0..7).map(|u| eng.dataset().histogram(u)).collect();
+    for method in [Method::Rwmd, Method::Act { k: 2 }] {
+        let batched = eng.search_batch(&queries, method, 5).unwrap();
+        assert_eq!(batched.len(), queries.len());
+        for (q, res) in queries.iter().zip(&batched) {
+            let single = eng.search(q, method, 5).unwrap();
+            assert_eq!(res.hits, single.hits, "{method}");
+            assert_eq!(res.labels, single.labels, "{method}");
+        }
+    }
+}

@@ -120,7 +120,7 @@ fn batch_objects_agree_with_pair_objects() {
     }));
     let engine = Arc::new(LcEngine::new(
         Arc::clone(&ds),
-        EngineParams { metric: Metric::L2, threads: 2, symmetric: true },
+        EngineParams { metric: Metric::L2, threads: 2, symmetric: true, ..Default::default() },
     ));
     let registry = MethodRegistry::new(Metric::L2);
     for method in [Method::BowAdjusted, Method::Ict, Method::Exact] {
@@ -155,7 +155,7 @@ fn dataset_scale_chain_via_batch_objects() {
     }));
     let engine = Arc::new(LcEngine::new(
         Arc::clone(&ds),
-        EngineParams { metric: Metric::L2, threads: 2, symmetric: true },
+        EngineParams { metric: Metric::L2, threads: 2, symmetric: true, ..Default::default() },
     ));
     let registry = MethodRegistry::new(Metric::L2);
     let matrices: Vec<(Method, Vec<f32>)> = chain_methods()
