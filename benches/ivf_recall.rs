@@ -1,0 +1,176 @@
+//! IVF pruning sweep: candidates-scored fraction vs recall@ℓ vs speedup
+//! over exhaustive batched search, across `nprobe`.
+//!
+//! Emits machine-readable `BENCH_ivf.json` in the working directory (the
+//! repo root under `cargo bench`), the pruning companion of
+//! `BENCH_phase1.json`.
+//!
+//! Run: `cargo bench --bench ivf_recall` (EMDPAR_BENCH_FULL=1 for the
+//! bigger workload).
+
+use std::io::Write;
+use std::sync::Arc;
+
+use emdpar::config::IndexParams;
+use emdpar::data::{generate_text, TextConfig};
+use emdpar::eval::recall_at;
+use emdpar::index::{dataset_fingerprint, pruned_search_batch, IvfIndex};
+use emdpar::prelude::{EngineParams, Histogram, LcEngine, Method};
+use emdpar::util::json::Json;
+use emdpar::util::stats::timed;
+
+fn main() {
+    let full = std::env::var("EMDPAR_BENCH_FULL").is_ok();
+    let (n, v, m, doc_len, nq, nlist) =
+        if full { (8000, 8000, 64, 60, 64, 64) } else { (1500, 2000, 32, 40, 24, 32) };
+    let method = Method::Act { k: 2 };
+    let l = 10;
+    let threads = emdpar::util::threadpool::default_threads();
+
+    println!("# IVF pruning: recall@{l} vs candidate fraction vs speedup");
+    println!("# n={n} v={v} m={m} doc_len={doc_len} queries={nq} nlist={nlist} threads={threads}\n");
+
+    let ds = Arc::new(generate_text(&TextConfig {
+        n,
+        vocab: v,
+        dim: m,
+        doc_len,
+        // clustered regime (the workload an IVF index serves): topic words
+        // dominate, so centroids separate and the sweep shows a clean
+        // recall-vs-fraction frontier
+        topic_frac: 0.75,
+        spread: 0.3,
+        seed: 31,
+        ..Default::default()
+    }));
+    let eng = LcEngine::new(
+        Arc::clone(&ds),
+        EngineParams { threads, symmetric: false, ..Default::default() },
+    );
+    let fp = dataset_fingerprint(&ds);
+    let (ix, t_train) = timed(|| {
+        IvfIndex::train(
+            eng.wcd_centroids(),
+            m,
+            &IndexParams { nlist, nprobe: 1, train_iters: 10, seed: 7, min_points_per_list: 2 },
+            threads,
+            fp,
+        )
+        .unwrap()
+    });
+    println!(
+        "trained {} lists over {n} docs in {:.2}s\n",
+        ix.nlist(),
+        t_train.as_secs_f64()
+    );
+
+    let queries: Vec<Histogram> = (0..nq).map(|i| ds.histogram(i * n / nq)).collect();
+
+    // exhaustive truth + baseline timing
+    let (flat, t_exh) = timed(|| eng.distances_batch(&queries, method));
+    let truth: Vec<Vec<usize>> = (0..nq)
+        .map(|qi| {
+            let row = &flat[qi * n..(qi + 1) * n];
+            let mut top = emdpar::coordinator::TopL::new(l);
+            top.push_slice(row, 0);
+            top.into_sorted().into_iter().map(|(_, id)| id).collect()
+        })
+        .collect();
+    println!(
+        "exhaustive: {:.1} queries/s ({} docs scored per query)",
+        nq as f64 / t_exh.as_secs_f64(),
+        n
+    );
+    println!(
+        "\n{:>6} {:>10} {:>10} {:>10} {:>10}",
+        "nprobe", "cand_frac", "recall", "qps", "speedup"
+    );
+
+    let mut rows = Vec::new();
+    for &nprobe in &[1usize, 2, 4, 8, 16, 32, 64] {
+        if nprobe > ix.nlist() {
+            continue;
+        }
+        let (pruned, t) =
+            timed(|| pruned_search_batch(&eng, &ix, &queries, method, l, nprobe).unwrap());
+        let mut recall = 0.0f64;
+        let mut frac = 0.0f64;
+        for (t_ids, pr) in truth.iter().zip(&pruned) {
+            let got: Vec<usize> = pr.hits.iter().map(|&(_, id)| id).collect();
+            recall += recall_at(t_ids, &got);
+            frac += pr.candidates as f64 / n as f64;
+        }
+        recall /= nq as f64;
+        frac /= nq as f64;
+        let qps = nq as f64 / t.as_secs_f64();
+        let speedup = t_exh.as_secs_f64() / t.as_secs_f64();
+        println!("{nprobe:>6} {frac:>10.3} {recall:>10.3} {qps:>10.1} {speedup:>9.2}x");
+        rows.push(Json::obj(vec![
+            ("nprobe", nprobe.into()),
+            ("candidate_fraction", frac.into()),
+            ("recall", recall.into()),
+            ("queries_per_s", qps.into()),
+            ("speedup_vs_exhaustive", speedup.into()),
+        ]));
+    }
+
+    let best_cheap_recall = rows_best_recall(&rows);
+    let json = Json::obj(vec![
+        ("bench", "ivf_recall".into()),
+        ("status", "measured".into()),
+        (
+            "workload",
+            Json::obj(vec![
+                ("n", n.into()),
+                ("v", v.into()),
+                ("m", m.into()),
+                ("doc_len", doc_len.into()),
+                ("queries", nq.into()),
+                ("nlist", ix.nlist().into()),
+                ("method", method.name().into()),
+                ("l", l.into()),
+                ("threads", threads.into()),
+                ("full", full.into()),
+            ]),
+        ),
+        ("train_seconds", t_train.as_secs_f64().into()),
+        ("exhaustive_queries_per_s", (nq as f64 / t_exh.as_secs_f64()).into()),
+        ("sweep", Json::Arr(rows)),
+        ("regenerate_with", "cargo bench --bench ivf_recall".into()),
+    ]);
+    let path = "BENCH_ivf.json";
+    match std::fs::File::create(path)
+        .and_then(|mut f| writeln!(f, "{}", json.to_string_pretty()))
+    {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+
+    // Optional enforcement: CI uses a modest floor so a broken index (zero
+    // recall or no pruning win) fails the push while shared-runner noise
+    // does not.  EMDPAR_IVF_MIN_RECALL applies to the highest-recall sweep
+    // point with candidate_fraction <= 0.5.
+    if let Ok(s) = std::env::var("EMDPAR_IVF_MIN_RECALL") {
+        if let Ok(min) = s.parse::<f64>() {
+            if best_cheap_recall < min {
+                eprintln!(
+                    "FAIL: best cheap recall {best_cheap_recall:.3} below required {min:.3}"
+                );
+                std::process::exit(1);
+            }
+            println!(
+                "best cheap recall {best_cheap_recall:.3} meets the required {min:.3} floor"
+            );
+        }
+    }
+}
+
+/// Best recall among sweep points that scored at most half the database.
+fn rows_best_recall(rows: &[Json]) -> f64 {
+    rows.iter()
+        .filter(|r| {
+            r.get("candidate_fraction").and_then(Json::as_f64).unwrap_or(1.0) <= 0.5
+        })
+        .filter_map(|r| r.get("recall").and_then(Json::as_f64))
+        .fold(0.0, f64::max)
+}

@@ -12,7 +12,7 @@ use std::net::TcpStream;
 use std::time::Instant;
 
 use emdpar::emd_ensure;
-use emdpar::prelude::{DatasetSpec, EmdError, EmdResult, EngineBuilder, Server};
+use emdpar::prelude::{DatasetSpec, EmdError, EmdResult, EngineBuilder, IndexParams, Server};
 use emdpar::util::cli::CommandSpec;
 use emdpar::util::json::Json;
 use emdpar::util::stats::Summary;
@@ -23,7 +23,9 @@ fn main() -> EmdResult<()> {
         .opt("clients", "4", "concurrent client connections")
         .opt("requests", "50", "requests per client")
         .opt("method", "act-1", "distance method")
-        .opt("l", "10", "results per query");
+        .opt("l", "10", "results per query")
+        .opt("nlist", "32", "IVF index lists (0 disables the index)")
+        .opt("nprobe", "4", "IVF lists probed per query");
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.iter().any(|a| a == "--help") {
         println!("{}", spec.usage("cargo run --example"));
@@ -35,18 +37,37 @@ fn main() -> EmdResult<()> {
     let requests = p.usize("requests")?;
     let method = p.str("method").to_string();
     let l = p.usize("l")?;
+    let nlist = p.usize("nlist")?;
+    let nprobe = p.usize("nprobe")?;
 
-    let engine = EngineBuilder::new()
+    let mut builder = EngineBuilder::new()
         .dataset_spec(DatasetSpec::SynthMnist { n, background: 0.0, seed: 42 })
         .max_batch(8)
-        .linger_ms(1)
-        .build_search()?;
+        .linger_ms(1);
+    if nlist > 0 {
+        // the IVF pruning index: queries score only the probed lists'
+        // candidates instead of all n documents
+        builder = builder.index(IndexParams {
+            nlist,
+            nprobe: nprobe.max(1),
+            ..Default::default()
+        });
+    }
+    let engine = builder.build_search()?;
     println!(
         "database: {} docs ({}), serving '{}' top-{l}",
         engine.dataset().len(),
         engine.dataset().name,
         method
     );
+    match engine.index() {
+        Some(ix) => println!(
+            "index:      {} lists, probing {} per query (exhaustive when nprobe >= nlist)",
+            ix.nlist(),
+            nprobe
+        ),
+        None => println!("index:      disabled (exhaustive search)"),
+    }
     let metrics = engine.metrics();
     let server = Server::bind(engine, "127.0.0.1:0")?;
     let addr = server.local_addr()?;
@@ -110,6 +131,16 @@ fn main() -> EmdResult<()> {
         metrics.queries.load(std::sync::atomic::Ordering::Relaxed) as f64
             / metrics.batches.load(std::sync::atomic::Ordering::Relaxed).max(1) as f64
     );
+    let index_queries = metrics.index_queries.load(std::sync::atomic::Ordering::Relaxed);
+    if index_queries > 0 {
+        println!(
+            "pruning:    {index_queries} queries through the index, {} lists probed, \
+             {} candidates scored ({:.1}% of the database pruned)",
+            metrics.lists_probed.load(std::sync::atomic::Ordering::Relaxed),
+            metrics.candidates_scored.load(std::sync::atomic::Ordering::Relaxed),
+            100.0 * metrics.pruned_fraction()
+        );
+    }
     println!("metrics:    {}", metrics.to_json().to_string_compact());
     Ok(())
 }

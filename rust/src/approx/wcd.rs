@@ -3,6 +3,7 @@
 //! two documents.  O(m) per comparison once centroids are precomputed.
 
 use crate::core::{CsrMatrix, Embeddings, Histogram};
+use crate::util::threadpool::{parallel_for, SyncSlice};
 
 /// Weighted centroid of a normalized histogram in embedding space.
 pub fn centroid(vocab: &Embeddings, h: &Histogram) -> Vec<f64> {
@@ -10,24 +11,35 @@ pub fn centroid(vocab: &Embeddings, h: &Histogram) -> Vec<f64> {
     vocab.centroid(hn.indices(), hn.weights())
 }
 
-/// Centroids for every row of a database matrix, row-major `(n, m)`.
-pub fn centroids_batch(vocab: &Embeddings, db: &CsrMatrix) -> Vec<f64> {
+/// Centroids for every row of a database matrix, row-major `(n, m)`,
+/// data-parallel over database rows.  This `O(nnz·m)` pass sits on the
+/// engine-build path and is the training input of the IVF pruning index,
+/// so it no longer runs serially.  Each row's accumulation order is
+/// unchanged, so any thread count produces bit-identical output.
+pub fn centroids_batch(vocab: &Embeddings, db: &CsrMatrix, threads: usize) -> Vec<f64> {
     let m = vocab.dim();
-    let mut out = vec![0.0f64; db.nrows() * m];
-    for u in 0..db.nrows() {
-        let (idx, w) = db.row(u);
-        let total: f64 = w.iter().map(|&x| x as f64).sum();
-        if total == 0.0 {
-            continue;
-        }
-        let slot = &mut out[u * m..(u + 1) * m];
-        for (&i, &x) in idx.iter().zip(w) {
-            let row = vocab.row(i as usize);
-            let wgt = x as f64 / total;
-            for (acc, &e) in slot.iter_mut().zip(row) {
-                *acc += wgt * e as f64;
+    let n = db.nrows();
+    let mut out = vec![0.0f64; n * m];
+    {
+        let slots = SyncSlice::new(&mut out);
+        parallel_for(n, threads, |start, end| {
+            for u in start..end {
+                let (idx, w) = db.row(u);
+                let total: f64 = w.iter().map(|&x| x as f64).sum();
+                if total == 0.0 {
+                    continue;
+                }
+                // SAFETY: row u is owned by exactly this chunk.
+                let slot = unsafe { slots.slice_mut(u * m, (u + 1) * m) };
+                for (&i, &x) in idx.iter().zip(w) {
+                    let row = vocab.row(i as usize);
+                    let wgt = x as f64 / total;
+                    for (acc, &e) in slot.iter_mut().zip(row) {
+                        *acc += wgt * e as f64;
+                    }
+                }
             }
-        }
+        });
     }
     out
 }
@@ -82,10 +94,34 @@ mod tests {
             Histogram::from_pairs(vec![(0, 1.0), (2, 3.0)]),
         ];
         let db = CsrMatrix::from_histograms(&rows, 3);
-        let cents = centroids_batch(&vocab(), &db);
+        let cents = centroids_batch(&vocab(), &db, 2);
         for (u, row) in rows.iter().enumerate() {
             let single = centroid(&vocab(), row);
             assert_eq!(&cents[u * 2..(u + 1) * 2], single.as_slice());
+        }
+    }
+
+    #[test]
+    fn parallel_centroids_match_serial_bit_exactly() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(17);
+        let v = 64;
+        let m = 7;
+        let emb = Embeddings::new((0..v * m).map(|_| rng.normal() as f32).collect(), v, m);
+        let rows: Vec<Histogram> = (0..97)
+            .map(|_| {
+                let idx = rng.sample_indices(v, 9);
+                Histogram::from_pairs(
+                    idx.into_iter()
+                        .map(|i| (i as u32, rng.range_f64(0.1, 1.0) as f32))
+                        .collect(),
+                )
+            })
+            .collect();
+        let db = CsrMatrix::from_histograms(&rows, v);
+        let serial = centroids_batch(&emb, &db, 1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(centroids_batch(&emb, &db, threads), serial, "threads {threads}");
         }
     }
 }

@@ -24,7 +24,7 @@
 
 use std::sync::Arc;
 
-use crate::config::{Backend, Config, DatasetSpec};
+use crate::config::{Backend, Config, DatasetSpec, IndexParams};
 use crate::core::{Dataset, EmdResult, Method, MethodRegistry, Metric};
 use crate::coordinator::SearchEngine;
 use crate::lc::{EngineParams, LcEngine};
@@ -89,6 +89,13 @@ impl EngineBuilder {
 
     pub fn backend(mut self, backend: Backend) -> EngineBuilder {
         self.config.backend = backend;
+        self
+    }
+
+    /// Enable the IVF pruning index (trained at
+    /// [`EngineBuilder::build_search`] time; see `crate::index`).
+    pub fn index(mut self, params: IndexParams) -> EngineBuilder {
+        self.config.index = Some(params);
         self
     }
 

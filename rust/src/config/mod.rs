@@ -31,6 +31,31 @@ impl Backend {
     }
 }
 
+/// IVF pruning-index configuration: the coarse quantizer over document WCD
+/// centroids that fronts the LC engines (see DESIGN.md "IVF pruning
+/// index").  `None` in [`Config::index`] means exhaustive search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IndexParams {
+    /// Number of inverted lists (k-means cells).
+    pub nlist: usize,
+    /// Default lists probed per query; `>= nlist` means exhaustive.
+    /// Clients can override per request (`"nprobe"` on the TCP protocol).
+    pub nprobe: usize,
+    /// Lloyd iterations when training.
+    pub train_iters: usize,
+    /// k-means++ seed (index training is deterministic per seed).
+    pub seed: u64,
+    /// Training caps `nlist` so the average list keeps at least this many
+    /// documents.
+    pub min_points_per_list: usize,
+}
+
+impl Default for IndexParams {
+    fn default() -> Self {
+        IndexParams { nlist: 64, nprobe: 8, train_iters: 10, seed: 42, min_points_per_list: 2 }
+    }
+}
+
 /// Dataset source.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DatasetSpec {
@@ -65,6 +90,8 @@ pub struct Config {
     pub linger_ms: u64,
     /// number of database shards for the router
     pub shards: usize,
+    /// IVF pruning index in front of the native engine (None = exhaustive)
+    pub index: Option<IndexParams>,
 }
 
 impl Default for Config {
@@ -84,6 +111,7 @@ impl Default for Config {
             max_batch: 8,
             linger_ms: 2,
             shards: 4,
+            index: None,
         }
     }
 }
@@ -143,6 +171,9 @@ impl Config {
         if let Some(x) = json.get("shards").and_then(Json::as_usize) {
             cfg.shards = x.max(1);
         }
+        if let Some(j) = json.get("index") {
+            cfg.index = Some(parse_index(j)?);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -180,6 +211,43 @@ impl Config {
                 self.dataset = parse_dataset_str(s)?;
             }
         }
+        // --nlist enables the index (or resizes a configured one); 0
+        // disables it entirely (the serve_demo convention); --nprobe
+        // adjusts the default probe width
+        if let Some(s) = args.opt_str("nlist") {
+            if !s.is_empty() {
+                let nlist = s
+                    .parse::<usize>()
+                    .map_err(|_| EmdError::config(format!("bad --nlist '{s}'")))?;
+                if nlist == 0 {
+                    self.index = None;
+                } else {
+                    let mut p = self.index.unwrap_or_default();
+                    p.nlist = nlist;
+                    self.index = Some(p);
+                }
+            }
+        }
+        if let Some(s) = args.opt_str("nprobe") {
+            if !s.is_empty() {
+                let nprobe = s
+                    .parse::<usize>()
+                    .map_err(|_| EmdError::config(format!("bad --nprobe '{s}'")))?
+                    .max(1);
+                // only tunes an index that is already configured — silently
+                // enabling approximate search from a probe-width flag alone
+                // would change result semantics the user never opted into
+                match &mut self.index {
+                    Some(p) => p.nprobe = nprobe,
+                    None => {
+                        return Err(EmdError::config(
+                            "--nprobe requires an IVF index (pass --nlist or set \
+                             'index' in the config file)",
+                        ))
+                    }
+                }
+            }
+        }
         self.validate()
     }
 
@@ -190,6 +258,16 @@ impl Config {
         emd_ensure!(self.shards >= 1, config, "shards must be >= 1");
         if let Method::Act { k } = self.method {
             emd_ensure!(k >= 1 && k <= 64, config, "ACT k must be in [1, 64], got {k}");
+        }
+        if let Some(ix) = &self.index {
+            emd_ensure!(ix.nlist >= 1, config, "index nlist must be >= 1");
+            emd_ensure!(ix.nprobe >= 1, config, "index nprobe must be >= 1");
+            emd_ensure!(ix.train_iters >= 1, config, "index train_iters must be >= 1");
+            emd_ensure!(
+                ix.min_points_per_list >= 1,
+                config,
+                "index min_points_per_list must be >= 1"
+            );
         }
         Ok(())
     }
@@ -217,6 +295,26 @@ impl Config {
             }
         })
     }
+}
+
+fn parse_index(j: &Json) -> EmdResult<IndexParams> {
+    let mut p = IndexParams::default();
+    if let Some(x) = j.get("nlist").and_then(Json::as_usize) {
+        p.nlist = x;
+    }
+    if let Some(x) = j.get("nprobe").and_then(Json::as_usize) {
+        p.nprobe = x;
+    }
+    if let Some(x) = j.get("train_iters").and_then(Json::as_usize) {
+        p.train_iters = x;
+    }
+    if let Some(x) = j.get("seed").and_then(Json::as_usize) {
+        p.seed = x as u64;
+    }
+    if let Some(x) = j.get("min_points_per_list").and_then(Json::as_usize) {
+        p.min_points_per_list = x;
+    }
+    Ok(p)
 }
 
 fn parse_dataset(j: &Json) -> EmdResult<DatasetSpec> {
@@ -323,6 +421,63 @@ mod tests {
             DatasetSpec::SynthMnist { n: 200, background: 0.0, seed: 42 }
         );
         assert!(matches!(parse_dataset_str("foo.bin").unwrap(), DatasetSpec::File(_)));
+    }
+
+    #[test]
+    fn index_params_from_json_and_validation() {
+        let j = Json::parse(
+            r#"{"index": {"nlist": 32, "nprobe": 4, "train_iters": 6, "seed": 7,
+                "min_points_per_list": 3}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(
+            cfg.index,
+            Some(IndexParams {
+                nlist: 32,
+                nprobe: 4,
+                train_iters: 6,
+                seed: 7,
+                min_points_per_list: 3
+            })
+        );
+        // partial objects fill from defaults
+        let j = Json::parse(r#"{"index": {"nlist": 16}}"#).unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(cfg.index.unwrap().nlist, 16);
+        assert_eq!(cfg.index.unwrap().nprobe, IndexParams::default().nprobe);
+        // zero nprobe is rejected
+        let j = Json::parse(r#"{"index": {"nprobe": 0}}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+        // no index object -> exhaustive
+        assert_eq!(Config::default().index, None);
+    }
+
+    #[test]
+    fn nprobe_flag_requires_an_index() {
+        use crate::util::cli::CommandSpec;
+        let spec = CommandSpec::new("t", "")
+            .opt("nlist", "", "")
+            .opt("nprobe", "", "");
+        let parse = |args: &[&str]| {
+            spec.parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+        };
+        // --nprobe alone must not silently enable approximate search
+        let mut cfg = Config::default();
+        assert!(cfg.apply_cli(&parse(&["--nprobe", "4"])).is_err());
+        // --nlist 0 disables a configured index
+        let mut cfg = Config { index: Some(IndexParams::default()), ..Default::default() };
+        cfg.apply_cli(&parse(&["--nlist", "0"])).unwrap();
+        assert_eq!(cfg.index, None);
+        // --nlist enables the index; --nprobe then tunes it
+        let mut cfg = Config::default();
+        cfg.apply_cli(&parse(&["--nlist", "32", "--nprobe", "4"])).unwrap();
+        let p = cfg.index.unwrap();
+        assert_eq!((p.nlist, p.nprobe), (32, 4));
+        // a config-file index is tunable from the flag too
+        let mut cfg = Config { index: Some(IndexParams::default()), ..Default::default() };
+        cfg.apply_cli(&parse(&["--nprobe", "3"])).unwrap();
+        assert_eq!(cfg.index.unwrap().nprobe, 3);
     }
 
     #[test]

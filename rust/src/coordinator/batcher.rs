@@ -93,6 +93,49 @@ mod tests {
     }
 
     #[test]
+    fn expired_linger_dispatches_immediately() {
+        // the first drained item's linger budget is already spent (it sat in
+        // the channel longer than the policy allows): the batch must
+        // dispatch at once, without waiting on the queued followers
+        let (tx, rx) = channel();
+        let (mut first, _keep) = pending(0);
+        std::mem::forget(_keep);
+        first.enqueued = Instant::now() - Duration::from_millis(50);
+        tx.send(first).unwrap();
+        for i in 1..4 {
+            let (p, keep) = pending(i);
+            std::mem::forget(keep);
+            tx.send(p).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 8, linger: Duration::from_millis(10) };
+        let t0 = Instant::now();
+        let batch = next_batch(&rx, policy).unwrap();
+        assert_eq!(batch.len(), 1, "expired first item dispatches alone");
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "expired deadline must not linger again"
+        );
+        // the followers are still queued for the next drain
+        let rest = next_batch(&rx, policy).unwrap();
+        assert_eq!(rest.len(), 3);
+    }
+
+    #[test]
+    fn max_batch_one_never_lingers() {
+        let (tx, rx) = channel();
+        let (p, _keep) = pending(7);
+        std::mem::forget(_keep);
+        tx.send(p).unwrap();
+        // a 10s linger would blow the assertion below if max_batch = 1
+        // waited at all
+        let policy = BatchPolicy { max_batch: 1, linger: Duration::from_secs(10) };
+        let t0 = Instant::now();
+        let batch = next_batch(&rx, policy).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(1), "max_batch=1 must dispatch immediately");
+    }
+
+    #[test]
     fn closed_channel_returns_none() {
         let (tx, rx) = channel::<Pending<usize, usize>>();
         drop(tx);

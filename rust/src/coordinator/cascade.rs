@@ -20,6 +20,7 @@
 //! bound guarantee, so it reranks every candidate and is never certified.
 
 use crate::core::{Distance, EmdError, EmdResult, Histogram, Method};
+use crate::index::IvfIndex;
 use crate::lc::LcEngine;
 
 use super::topl::TopL;
@@ -95,15 +96,32 @@ pub fn cascade_search(
         f32::INFINITY
     };
 
-    // stage 2: tighter measure on the survivors only, via the registry's
-    // boxed per-pair Distance object
+    // stage 2 on the survivors; stage 1 covered the whole database
+    rerank_survivors(engine, query, rerank, l, &candidates, pruned_floor, true)
+}
+
+/// Stage 2 shared by the full and index-pruned cascades: rerank the stage-1
+/// survivors through the registry's boxed [`Distance`] object, bound-prune
+/// when the rerank measure provably dominates RWMD, and compute the
+/// exactness certificate against the tightest discarded stage-1 bound.
+/// `covers_database` is whether stage 1 saw every database row — only then
+/// can the certificate claim global exactness.
+fn rerank_survivors(
+    engine: &LcEngine,
+    query: &Histogram,
+    rerank: Method,
+    l: usize,
+    candidates: &[(f32, usize)],
+    pruned_floor: f32,
+    covers_database: bool,
+) -> EmdResult<CascadeResult> {
     let lower_bounded = provably_dominates_rwmd(rerank);
     let dist = engine.registry().distance(rerank);
     let vocab = &engine.dataset().embeddings;
     let qn = query.normalized();
     let mut out = TopL::new(l);
     let mut reranked = 0usize;
-    for &(lb, u) in &candidates {
+    for &(lb, u) in candidates {
         // classic bound pruning: skip when the stage-1 lower bound already
         // exceeds the current l-th best reranked distance — sound only for
         // measures RWMD provably lower-bounds
@@ -120,9 +138,69 @@ pub fn cascade_search(
         reranked += 1;
     }
     let hits = out.into_sorted();
-    let certified =
-        lower_bounded && hits.last().map(|&(d, _)| d <= pruned_floor).unwrap_or(true);
+    let certified = lower_bounded
+        && covers_database
+        && hits.last().map(|&(d, _)| d <= pruned_floor).unwrap_or(true);
     Ok(CascadeResult { hits, reranked, certified })
+}
+
+/// The cascade composed with the IVF pruning index: probe the index for a
+/// shortlist, LC-RWMD on the shortlist only, then the tighter rerank on
+/// the survivors.  Stage-1 values are bit-identical to the full-sweep
+/// cascade for the same pairs ([`LcEngine::distances_batch_subset`]).
+///
+/// Certificate semantics: the Theorem-2 bound prune is sound *within the
+/// probed candidate set*, but a true neighbor in an unprobed list is
+/// invisible to both stages — so `certified` is only claimed when the
+/// candidate set covered the whole database (`nprobe >= nlist`), in which
+/// case this is exactly [`cascade_search`].
+pub fn cascade_search_pruned(
+    engine: &LcEngine,
+    index: &IvfIndex,
+    query: &Histogram,
+    rerank: Method,
+    l: usize,
+    overfetch: usize,
+    nprobe: usize,
+) -> EmdResult<CascadeResult> {
+    if !admissible_rerank(rerank) {
+        return Err(EmdError::unsupported(format!(
+            "rerank method {} does not dominate the RWMD prefilter bound",
+            rerank.name()
+        )));
+    }
+    let n = engine.dataset().len();
+    // validation + probe via the shared helper, so the cascade can never
+    // diverge from pruned_search's probe semantics
+    let cands = crate::index::probe_candidates(engine, index, query, nprobe)?;
+    let l = l.min(n).max(1);
+    let keep = (l * overfetch.max(1)).min(cands.len()).max(1);
+
+    // stage 1: cheap lower bound over the shortlist only
+    let stage1 =
+        engine.distances_batch_subset(std::slice::from_ref(query), Method::Rwmd, &cands);
+    let mut pre = TopL::new(keep);
+    for (pos, &id) in cands.iter().enumerate() {
+        pre.push(stage1[pos], id as usize);
+    }
+    let candidates = pre.into_sorted();
+    let pruned_floor = if keep < cands.len() {
+        let mut rest = f32::INFINITY;
+        for (pos, &id) in cands.iter().enumerate() {
+            let id = id as usize;
+            if !candidates.iter().any(|&(_, c)| c == id) && stage1[pos] < rest {
+                rest = stage1[pos];
+            }
+        }
+        rest
+    } else {
+        f32::INFINITY
+    };
+
+    // stage 2: identical to the full cascade, on the shortlist survivors;
+    // a global certificate is only possible when the shortlist covered the
+    // whole database
+    rerank_survivors(engine, query, rerank, l, &candidates, pruned_floor, cands.len() == n)
 }
 
 #[cfg(test)]
@@ -206,6 +284,40 @@ mod tests {
         for bad in [Method::Bow, Method::Wcd, Method::Rwmd, Method::BowAdjusted] {
             assert!(cascade_search(&eng, &q, bad, 3, 2).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn pruned_cascade_with_full_probe_equals_cascade() {
+        use crate::config::IndexParams;
+        use crate::index::{dataset_fingerprint, IvfIndex};
+        let eng = engine();
+        let ix = IvfIndex::train(
+            eng.wcd_centroids(),
+            eng.dataset().embeddings.dim(),
+            &IndexParams { nlist: 5, nprobe: 2, train_iters: 6, seed: 9, min_points_per_list: 1 },
+            2,
+            dataset_fingerprint(eng.dataset()),
+        )
+        .unwrap();
+        let q = eng.dataset().histogram(7);
+        let full = cascade_search(&eng, &q, Method::Act { k: 4 }, 3, 4).unwrap();
+        let pruned =
+            cascade_search_pruned(&eng, &ix, &q, Method::Act { k: 4 }, 3, 4, ix.nlist())
+                .unwrap();
+        assert_eq!(pruned.hits, full.hits);
+        assert_eq!(pruned.certified, full.certified);
+
+        // narrow probe: results respect the stage-1 bound and never claim a
+        // global certificate
+        let narrow =
+            cascade_search_pruned(&eng, &ix, &q, Method::Act { k: 4 }, 3, 4, 2).unwrap();
+        assert!(!narrow.certified);
+        let stage1 = eng.distances(&q, Method::Rwmd);
+        for &(d, u) in &narrow.hits {
+            assert!(d + 1e-5 >= stage1[u], "rerank below the lower bound");
+        }
+        // a database query still finds itself through its own list
+        assert_eq!(narrow.hits[0].1, 7);
     }
 
     #[test]

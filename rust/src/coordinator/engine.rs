@@ -7,8 +7,11 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::config::{Backend, Config};
+use crate::config::{Backend, Config, DatasetSpec, IndexParams};
 use crate::core::{Dataset, EmdError, EmdResult, Histogram, Method, MethodRegistry};
+use crate::index::{
+    dataset_fingerprint, load_index_for, pruned_search_batch, sidecar_path, IvfIndex,
+};
 use crate::lc::{EngineParams, LcEngine};
 use crate::runtime::{ArtifactEngine, Executor};
 
@@ -34,6 +37,10 @@ pub struct SearchEngine {
     /// cached native engine (precomputed norms/centroids) — building it per
     /// query would redo O(nnz·m) work on the request path
     native: Arc<LcEngine>,
+    /// trained IVF pruning index (native backend with `config.index` set);
+    /// loaded from the dataset's `EMDX` sidecar when one matches, trained
+    /// from the engine's WCD centroids otherwise
+    index: Option<Arc<IvfIndex>>,
     executor: Option<Executor>,
     artifact_profile: Option<String>,
 }
@@ -87,15 +94,61 @@ impl SearchEngine {
                 batch_block: config.batch_block,
             },
         ));
+        let index = match (&config.index, config.backend) {
+            (Some(params), Backend::Native) => {
+                Some(Arc::new(Self::build_index(&config, params, &dataset, &native)?))
+            }
+            _ => None,
+        };
         Ok(SearchEngine {
             dataset,
             config,
             metrics: Arc::new(Metrics::new()),
             router,
             native,
+            index,
             executor,
             artifact_profile,
         })
+    }
+
+    /// Load the dataset's `EMDX` sidecar when it exists and matches the
+    /// dataset's fingerprint; otherwise train a fresh index from the native
+    /// engine's WCD centroid table.
+    fn build_index(
+        config: &Config,
+        params: &IndexParams,
+        dataset: &Dataset,
+        native: &LcEngine,
+    ) -> EmdResult<IvfIndex> {
+        let fingerprint = dataset_fingerprint(dataset);
+        if let DatasetSpec::File(path) = &config.dataset {
+            let sidecar = sidecar_path(path);
+            if sidecar.exists() {
+                match load_index_for(&sidecar, fingerprint) {
+                    Ok(ix) => {
+                        crate::log_info!(
+                            "index",
+                            "loaded {:?}: {} lists over {} docs",
+                            sidecar,
+                            ix.nlist(),
+                            ix.num_points()
+                        );
+                        return Ok(ix);
+                    }
+                    Err(e) => {
+                        crate::log_info!("index", "sidecar {sidecar:?} rejected ({e}); retraining")
+                    }
+                }
+            }
+        }
+        IvfIndex::train(
+            native.wcd_centroids(),
+            dataset.embeddings.dim(),
+            params,
+            config.threads,
+            fingerprint,
+        )
     }
 
     pub fn dataset(&self) -> &Dataset {
@@ -113,6 +166,41 @@ impl SearchEngine {
     /// The cached native LC engine (shared handle, e.g. for cascades).
     pub fn native(&self) -> Arc<LcEngine> {
         Arc::clone(&self.native)
+    }
+
+    /// The trained IVF pruning index, when one is configured.
+    pub fn index(&self) -> Option<Arc<IvfIndex>> {
+        self.index.clone()
+    }
+
+    /// Resolve a request's probe width to its effective value: the
+    /// configured default fills a missing value, and anything `>= nlist`
+    /// collapses to exactly `nlist` (the exhaustive route).  `None` when no
+    /// index is configured.  The single source of truth for nprobe
+    /// semantics — the server's batch-grouping key uses it too, so TCP
+    /// clients and direct API callers always route identically.
+    pub fn effective_nprobe(&self, nprobe: Option<usize>) -> Option<usize> {
+        let index = self.index.as_deref()?;
+        Some(
+            nprobe
+                .or_else(|| self.config.index.as_ref().map(|p| p.nprobe))
+                .unwrap_or(1)
+                .max(1)
+                .min(index.nlist()),
+        )
+    }
+
+    /// Resolve the pruning route for a request: the index plus the
+    /// effective probe width.  `None` means exhaustive — no index, or the
+    /// effective `nprobe` covers every list anyway.
+    fn pruning_route(&self, nprobe: Option<usize>) -> Option<(&IvfIndex, usize)> {
+        let np = self.effective_nprobe(nprobe)?;
+        let index = self.index.as_deref()?;
+        if np >= index.nlist() {
+            None
+        } else {
+            Some((index, np))
+        }
     }
 
     /// A registry configured with this engine's ground metric.
@@ -158,8 +246,41 @@ impl SearchEngine {
         SearchResult { hits, labels }
     }
 
-    /// Top-ℓ search with shard-merge (the request-path entry point).
+    /// Top-ℓ search with shard-merge (the request-path entry point).  Goes
+    /// through the IVF pruning index when one is configured; see
+    /// [`SearchEngine::search_opts`] for per-request probe control.
     pub fn search(&self, query: &Histogram, method: Method, l: usize) -> EmdResult<SearchResult> {
+        self.search_opts(query, method, l, None)
+    }
+
+    /// Top-ℓ search with an optional per-request probe width.
+    /// `nprobe = None` uses the configured index default; `Some(np)` with
+    /// `np >= nlist` (or no index at all) falls back to the exhaustive
+    /// sweep.  Pruned candidate distances are bit-identical to the
+    /// exhaustive values for the same pairs.
+    pub fn search_opts(
+        &self,
+        query: &Histogram,
+        method: Method,
+        l: usize,
+        nprobe: Option<usize>,
+    ) -> EmdResult<SearchResult> {
+        if let Some((index, np)) = self.pruning_route(nprobe) {
+            let t0 = Instant::now();
+            let pruned = pruned_search_batch(
+                &self.native,
+                index,
+                std::slice::from_ref(query),
+                method,
+                l,
+                np,
+            )?;
+            let pr = pruned.into_iter().next().expect("one query in, one result out");
+            self.metrics.record_probe(pr.lists_probed, pr.candidates, self.dataset.len());
+            self.metrics.record_query(t0.elapsed(), pr.candidates);
+            let labels = pr.hits.iter().map(|&(_, id)| self.dataset.labels[id]).collect();
+            return Ok(SearchResult { hits: pr.hits, labels });
+        }
         let t0 = Instant::now();
         let row = self.distances(query, method)?;
         let result = self.rank_row(&row, l);
@@ -178,6 +299,21 @@ impl SearchEngine {
         method: Method,
         l: usize,
     ) -> EmdResult<Vec<SearchResult>> {
+        self.search_batch_opts(queries, method, l, None)
+    }
+
+    /// Batched search with an optional per-request probe width (the
+    /// index-routed sibling of [`SearchEngine::search_opts`]).  On the
+    /// pruned path the whole batch shares one candidate-union scoring
+    /// dispatch, and each query ranks only its own candidates — results
+    /// equal per-query pruned search exactly.
+    pub fn search_batch_opts(
+        &self,
+        queries: &[Histogram],
+        method: Method,
+        l: usize,
+        nprobe: Option<usize>,
+    ) -> EmdResult<Vec<SearchResult>> {
         self.metrics.record_batch();
         if queries.is_empty() {
             return Ok(Vec::new());
@@ -186,22 +322,74 @@ impl SearchEngine {
             Backend::Native => {
                 let t0 = Instant::now();
                 let n = self.dataset.len();
-                let flat = self.native.distances_batch(queries, method);
-                let results: Vec<SearchResult> = (0..queries.len())
-                    .map(|i| self.rank_row(&flat[i * n..(i + 1) * n], l))
-                    .collect();
+                let (results, evals): (Vec<SearchResult>, Vec<usize>) =
+                    if let Some((index, np)) = self.pruning_route(nprobe) {
+                        pruned_search_batch(&self.native, index, queries, method, l, np)?
+                            .into_iter()
+                            .map(|pr| {
+                                self.metrics.record_probe(pr.lists_probed, pr.candidates, n);
+                                let labels = pr
+                                    .hits
+                                    .iter()
+                                    .map(|&(_, id)| self.dataset.labels[id])
+                                    .collect();
+                                (SearchResult { hits: pr.hits, labels }, pr.candidates)
+                            })
+                            .unzip()
+                    } else {
+                        let flat = self.native.distances_batch(queries, method);
+                        (0..queries.len())
+                            .map(|i| (self.rank_row(&flat[i * n..(i + 1) * n], l), n))
+                            .unzip()
+                    };
                 // per-query latency = the batch's amortized share of the
                 // full dispatch (distances + ranking), comparable to the
                 // per-query path's measurement
                 let per_query = t0.elapsed() / queries.len() as u32;
-                for _ in 0..queries.len() {
-                    self.metrics.record_query(per_query, n);
+                for e in evals {
+                    self.metrics.record_query(per_query, e);
                 }
                 Ok(results)
             }
             // the artifact runtime plans per query; fall back to the
             // single-query path
             Backend::Artifact => queries.iter().map(|q| self.search(q, method, l)).collect(),
+        }
+    }
+
+    /// Per-job batched search for the server's grouped dispatch: every job
+    /// is evaluated **at most once**, and each job's outcome lands in its
+    /// own slot of the returned buffer.  The native backend flows the whole
+    /// group through the multi-query kernel (its grouped call either
+    /// succeeds for everyone or fails before any query is scored, in which
+    /// case each job is evaluated individually once); the artifact backend
+    /// evaluates per query from the start, so one query outside the
+    /// compiled profile fails alone instead of discarding and re-running
+    /// its batchmates.
+    pub fn search_batch_results(
+        &self,
+        queries: &[Histogram],
+        method: Method,
+        l: usize,
+        nprobe: Option<usize>,
+    ) -> Vec<EmdResult<SearchResult>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        match self.config.backend {
+            Backend::Native => match self.search_batch_opts(queries, method, l, nprobe) {
+                Ok(results) => results.into_iter().map(Ok).collect(),
+                // the grouped dispatch failed as a whole before scoring
+                // anything (e.g. an empty query in the probe stage):
+                // evaluate per job into the results buffer
+                Err(_) => {
+                    queries.iter().map(|q| self.search_opts(q, method, l, nprobe)).collect()
+                }
+            },
+            Backend::Artifact => {
+                self.metrics.record_batch();
+                queries.iter().map(|q| self.search(q, method, l)).collect()
+            }
         }
     }
 }
@@ -265,6 +453,66 @@ mod tests {
             m.distance_evals.load(std::sync::atomic::Ordering::Relaxed),
             2 * 40
         );
+    }
+
+    #[test]
+    fn index_routes_and_falls_back_consistently() {
+        let mk = |index: Option<IndexParams>| {
+            let config = Config {
+                dataset: DatasetSpec::SynthText { n: 60, vocab: 250, dim: 10, seed: 8 },
+                threads: 2,
+                index,
+                ..Default::default()
+            };
+            SearchEngine::from_config(config).unwrap()
+        };
+        let plain = mk(None);
+        assert!(plain.index().is_none());
+        let indexed = mk(Some(IndexParams {
+            nlist: 6,
+            nprobe: 2,
+            train_iters: 6,
+            seed: 3,
+            min_points_per_list: 1,
+        }));
+        let ix = indexed.index().expect("index trained");
+        assert_eq!(ix.num_points(), 60);
+
+        let q = plain.dataset().histogram(4);
+        // nprobe >= nlist falls back to the exhaustive sweep: identical hits
+        let exhaustive = plain.search(&q, Method::Rwmd, 5).unwrap();
+        let full_probe = indexed.search_opts(&q, Method::Rwmd, 5, Some(ix.nlist())).unwrap();
+        assert_eq!(exhaustive.hits, full_probe.hits);
+
+        // the pruned route scores fewer candidates and records probe metrics
+        let pruned = indexed.search_opts(&q, Method::Rwmd, 5, Some(2)).unwrap();
+        assert_eq!(pruned.hits.len(), 5);
+        assert_eq!(pruned.hits[0].1, 4, "a database query finds itself");
+        let m = indexed.metrics();
+        assert_eq!(m.index_queries.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert!(m.pruned_fraction() > 0.0, "nprobe 2 of 6 lists must prune");
+
+        // batched pruned search equals per-query pruned search
+        let queries: Vec<_> = (0..4).map(|u| plain.dataset().histogram(u)).collect();
+        let batch = indexed
+            .search_batch_opts(&queries, Method::Act { k: 2 }, 4, Some(2))
+            .unwrap();
+        for (q, got) in queries.iter().zip(&batch) {
+            let single = indexed.search_opts(q, Method::Act { k: 2 }, 4, Some(2)).unwrap();
+            assert_eq!(got.hits, single.hits);
+        }
+    }
+
+    #[test]
+    fn search_batch_results_buffers_per_job() {
+        let eng = engine();
+        let queries: Vec<_> = (0..3).map(|u| eng.dataset().histogram(u)).collect();
+        let results = eng.search_batch_results(&queries, Method::Rwmd, 4, None);
+        assert_eq!(results.len(), 3);
+        for (q, r) in queries.iter().zip(results) {
+            let want = eng.search(q, Method::Rwmd, 4).unwrap();
+            assert_eq!(r.unwrap().hits, want.hits);
+        }
     }
 
     #[test]

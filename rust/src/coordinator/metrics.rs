@@ -14,6 +14,15 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub errors: AtomicU64,
     pub distance_evals: AtomicU64,
+    /// Queries routed through the IVF pruning index.
+    pub index_queries: AtomicU64,
+    /// Inverted lists visited by index-routed queries.
+    pub lists_probed: AtomicU64,
+    /// Candidates actually scored by index-routed queries.
+    pub candidates_scored: AtomicU64,
+    /// What exhaustive search would have scored for the same queries
+    /// (denominator of the pruned fraction).
+    index_possible: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -38,6 +47,26 @@ impl Metrics {
 
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one index-routed query: `lists` probed, `candidates` scored,
+    /// out of `possible` (the full database size).
+    pub fn record_probe(&self, lists: usize, candidates: usize, possible: usize) {
+        self.index_queries.fetch_add(1, Ordering::Relaxed);
+        self.lists_probed.fetch_add(lists as u64, Ordering::Relaxed);
+        self.candidates_scored.fetch_add(candidates as u64, Ordering::Relaxed);
+        self.index_possible.fetch_add(possible as u64, Ordering::Relaxed);
+    }
+
+    /// Fraction of the database index-routed queries did *not* score
+    /// (0.0 when no query went through the index).
+    pub fn pruned_fraction(&self) -> f64 {
+        let possible = self.index_possible.load(Ordering::Relaxed);
+        if possible == 0 {
+            return 0.0;
+        }
+        let scored = self.candidates_scored.load(Ordering::Relaxed);
+        1.0 - scored as f64 / possible as f64
     }
 
     /// Approximate latency percentile (upper bucket bound), microseconds.
@@ -78,6 +107,19 @@ impl Metrics {
                 "distance_evals",
                 (self.distance_evals.load(Ordering::Relaxed) as usize).into(),
             ),
+            (
+                "index_queries",
+                (self.index_queries.load(Ordering::Relaxed) as usize).into(),
+            ),
+            (
+                "lists_probed",
+                (self.lists_probed.load(Ordering::Relaxed) as usize).into(),
+            ),
+            (
+                "candidates_scored",
+                (self.candidates_scored.load(Ordering::Relaxed) as usize).into(),
+            ),
+            ("pruned_fraction", self.pruned_fraction().into()),
             ("mean_latency_us", self.mean_latency_us().into()),
             ("p50_latency_us", (self.latency_percentile_us(0.5) as usize).into()),
             ("p95_latency_us", (self.latency_percentile_us(0.95) as usize).into()),
@@ -114,5 +156,20 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("queries").and_then(Json::as_usize), Some(1));
         assert!(j.get("p95_latency_us").is_some());
+        assert!(j.get("pruned_fraction").is_some());
+    }
+
+    #[test]
+    fn probe_counters_and_pruned_fraction() {
+        let m = Metrics::new();
+        assert_eq!(m.pruned_fraction(), 0.0);
+        m.record_probe(4, 25, 100);
+        m.record_probe(4, 25, 100);
+        assert_eq!(m.index_queries.load(Ordering::Relaxed), 2);
+        assert_eq!(m.lists_probed.load(Ordering::Relaxed), 8);
+        assert_eq!(m.candidates_scored.load(Ordering::Relaxed), 50);
+        assert!((m.pruned_fraction() - 0.75).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.get("candidates_scored").and_then(Json::as_usize), Some(50));
     }
 }

@@ -11,7 +11,7 @@ pub mod server;
 pub mod topl;
 
 pub use batcher::{next_batch, BatchPolicy, Pending};
-pub use cascade::{admissible_rerank, cascade_search, CascadeResult};
+pub use cascade::{admissible_rerank, cascade_search, cascade_search_pruned, CascadeResult};
 pub use engine::{SearchEngine, SearchResult};
 pub use metrics::Metrics;
 pub use router::Router;

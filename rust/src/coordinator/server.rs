@@ -4,10 +4,14 @@
 //! ```json
 //! {"op": "search", "method": "act-1", "l": 5,
 //!  "query": [[vocab_idx, weight], ...]}
-//! {"op": "search_id", "method": "rwmd", "l": 5, "id": 17}
+//! {"op": "search_id", "method": "rwmd", "l": 5, "id": 17, "nprobe": 4}
 //! {"op": "stats"}
 //! {"op": "ping"}
 //! ```
+//! `"nprobe"` is optional: with an IVF index configured it overrides the
+//! per-request probe width (`nprobe >= nlist` forces an exhaustive sweep);
+//! without an index it is ignored.  `{"op": "stats"}` reports the index
+//! shape plus pruning counters when an index is active.
 //! Response (one line): `{"ok": true, "hits": [[dist, id, label], ...]}` or
 //! `{"ok": false, "error": "..."}`.
 //!
@@ -34,9 +38,15 @@ struct Job {
     query: Histogram,
     method: Method,
     l: usize,
+    /// Per-request IVF probe width (None = configured default).
+    nprobe: Option<usize>,
 }
 
 type JobResult = Result<Json, String>;
+
+/// Grouping key for the batch dispatcher: jobs sharing it flow through one
+/// multi-query engine dispatch.
+type GroupKey = (Method, usize, Option<usize>);
 
 /// The running server.
 pub struct Server {
@@ -61,49 +71,38 @@ impl Server {
             let engine = Arc::clone(&engine);
             std::thread::spawn(move || {
                 while let Some(batch) = next_batch(&batch_rx, policy) {
-                    // group the drained batch by (method, l) so each group
-                    // flows through the engine's multi-query kernel in one
-                    // dispatch (SearchEngine::search_batch); responses go
-                    // back per-job over their own channels, so grouping
-                    // never reorders anything a client can observe.  Note:
-                    // Metrics::batches now counts dispatch groups (one per
-                    // (method, l) per drained batch), not drained batches
-                    let mut groups: Vec<((Method, usize), Vec<Pending<Job, JobResult>>)> =
-                        Vec::new();
+                    // group the drained batch by (method, l, nprobe) so each
+                    // group flows through the engine's multi-query kernel in
+                    // one dispatch; responses go back per-job over their own
+                    // channels, so grouping never reorders anything a client
+                    // can observe.  Note: Metrics::batches counts dispatch
+                    // groups (one per key per drained batch), not drained
+                    // batches
+                    let mut groups: Vec<(GroupKey, Vec<Pending<Job, JobResult>>)> = Vec::new();
                     for pending in batch {
-                        let key = (pending.query.method, pending.query.l);
+                        let key =
+                            (pending.query.method, pending.query.l, pending.query.nprobe);
                         match groups.iter_mut().find(|(k, _)| *k == key) {
                             Some((_, members)) => members.push(pending),
                             None => groups.push((key, vec![pending])),
                         }
                     }
-                    for ((method, l), members) in groups {
+                    for ((method, l, nprobe), members) in groups {
                         let (queries, responders): (Vec<Histogram>, Vec<_>) = members
                             .into_iter()
                             .map(|p| (p.query.query, p.respond))
                             .unzip();
-                        match engine.search_batch(&queries, method, l) {
-                            Ok(results) => {
-                                for (res, respond) in results.into_iter().zip(responders) {
-                                    let _ = respond.send(Ok(search_result_json(&res)));
-                                }
-                            }
-                            // a grouped dispatch failed (e.g. one artifact
-                            // query out of profile): fall back to per-job
-                            // evaluation so one bad query cannot fail its
-                            // batchmates — same isolation as the old
-                            // per-pending loop.  Batchmates evaluated before
-                            // the failure are re-run; acceptable because this
-                            // path only fires on errors
-                            Err(_) => {
-                                for (q, respond) in queries.iter().zip(responders) {
-                                    let out = engine
-                                        .search(q, method, l)
-                                        .map(|res| search_result_json(&res))
-                                        .map_err(|e| e.to_string());
-                                    let _ = respond.send(out);
-                                }
-                            }
+                        // per-job results buffer: the engine evaluates each
+                        // job at most once (grouped kernel when it can,
+                        // per-query otherwise), so one failing query neither
+                        // fails its batchmates nor forces already-evaluated
+                        // ones to be re-run
+                        let results = engine.search_batch_results(&queries, method, l, nprobe);
+                        for (out, respond) in results.into_iter().zip(responders) {
+                            let _ = respond.send(
+                                out.map(|res| search_result_json(&res))
+                                    .map_err(|e| e.to_string()),
+                            );
                         }
                     }
                 }
@@ -223,6 +222,34 @@ fn handle_request(
             if let Json::Obj(map) = &mut j {
                 map.insert("ok".into(), Json::Bool(true));
                 map.insert("n".into(), Json::Num(engine.dataset().len() as f64));
+                if let Some(ix) = engine.index() {
+                    let sizes = ix.list_sizes();
+                    map.insert(
+                        "index".into(),
+                        Json::obj(vec![
+                            ("nlist", ix.nlist().into()),
+                            ("points", ix.num_points().into()),
+                            ("dim", ix.dim().into()),
+                            (
+                                "nprobe_default",
+                                engine
+                                    .config()
+                                    .index
+                                    .map(|p| p.nprobe)
+                                    .unwrap_or(0)
+                                    .into(),
+                            ),
+                            (
+                                "max_list",
+                                sizes.iter().copied().max().unwrap_or(0).into(),
+                            ),
+                            (
+                                "min_list",
+                                sizes.iter().copied().min().unwrap_or(0).into(),
+                            ),
+                        ]),
+                    );
+                }
             }
             Ok(j)
         }
@@ -260,12 +287,18 @@ fn handle_request(
                 Histogram::from_pairs(entries)
             };
             emd_ensure!(!query.is_empty(), protocol, "empty query");
+            // normalize to the effective probe width
+            // (SearchEngine::effective_nprobe, the single source of truth)
+            // so batchmates that resolve to the same route share one
+            // grouped dispatch
+            let nprobe =
+                engine.effective_nprobe(req.get("nprobe").and_then(Json::as_usize));
 
             // send through the dynamic batcher and wait for the reply
             let (tx, rx) = channel();
             batch_tx
                 .send(Pending {
-                    query: Job { query, method, l },
+                    query: Job { query, method, l, nprobe },
                     respond: tx,
                     enqueued: Instant::now(),
                 })
@@ -364,6 +397,64 @@ mod tests {
         // exact EMD ranks the query itself first
         let first = out[0].get("hits").and_then(Json::as_arr).unwrap()[0].as_arr().unwrap();
         assert_eq!(first[1].as_usize(), Some(2));
+    }
+
+    #[test]
+    fn nprobe_request_and_index_stats() {
+        use crate::config::IndexParams;
+        let engine = SearchEngine::from_config(Config {
+            dataset: DatasetSpec::SynthText { n: 48, vocab: 200, dim: 8, seed: 12 },
+            threads: 2,
+            linger_ms: 1,
+            index: Some(IndexParams {
+                nlist: 6,
+                nprobe: 2,
+                train_iters: 6,
+                seed: 4,
+                min_points_per_list: 1,
+            }),
+            ..Default::default()
+        })
+        .unwrap();
+        let server = Server::bind(engine, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut out = Vec::new();
+            let mut w = stream;
+            for line in [
+                // pruned (configured default nprobe = 2)
+                "{\"op\": \"search_id\", \"id\": 5, \"l\": 3, \"method\": \"rwmd\"}",
+                // per-request exhaustive override
+                "{\"op\": \"search_id\", \"id\": 5, \"l\": 3, \"method\": \"rwmd\", \"nprobe\": 6}",
+                "{\"op\": \"stats\"}",
+            ] {
+                w.write_all(line.as_bytes()).unwrap();
+                w.write_all(b"\n").unwrap();
+                w.flush().unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                out.push(Json::parse(resp.trim()).unwrap());
+            }
+            out
+        });
+        server.serve_n(1).unwrap();
+        let out = client.join().unwrap();
+        for o in &out[..2] {
+            assert_eq!(o.get("ok"), Some(&Json::Bool(true)), "{o:?}");
+            let hits = o.get("hits").and_then(Json::as_arr).unwrap();
+            assert_eq!(hits.len(), 3);
+            // the query is a database row: itself first on both routes
+            assert_eq!(hits[0].as_arr().unwrap()[1].as_usize(), Some(5));
+        }
+        let stats = &out[2];
+        let index = stats.get("index").expect("stats reports the index shape");
+        assert_eq!(index.get("nlist").and_then(Json::as_usize), Some(6));
+        assert_eq!(index.get("points").and_then(Json::as_usize), Some(48));
+        // exactly one of the two searches went through the pruned route
+        assert_eq!(stats.get("index_queries").and_then(Json::as_usize), Some(1));
+        assert!(stats.get("pruned_fraction").and_then(Json::as_f64).unwrap() > 0.0);
     }
 
     #[test]

@@ -27,6 +27,19 @@ pub fn topl_indices(row: &[f32], l: usize, exclude: Option<usize>) -> Vec<usize>
     idxs
 }
 
+/// Recall@ℓ of an approximate result list against the exhaustive truth:
+/// the fraction of the true top-ℓ ids the approximate search retrieved
+/// (order ignored).  The denominator is `truth.len()`, so a shorter
+/// approximate list caps recall accordingly.  Used by the IVF pruning
+/// index's evaluation (`rust/tests/index_pruning.rs`, `benches/ivf_recall`).
+pub fn recall_at(truth: &[usize], approx: &[usize]) -> f64 {
+    if truth.is_empty() {
+        return 1.0;
+    }
+    let hits = truth.iter().filter(|t| approx.contains(t)).count();
+    hits as f64 / truth.len() as f64
+}
+
 /// Average precision@ℓ from a row-major `(nq, n)` distance matrix.
 ///
 /// `query_labels[i]` labels row i; `db_labels[j]` labels column j.  When the
@@ -84,6 +97,14 @@ pub fn precision_curve(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn recall_counts_overlap() {
+        assert_eq!(recall_at(&[1, 2, 3, 4], &[4, 2, 9, 1]), 0.75);
+        assert_eq!(recall_at(&[1, 2], &[1, 2]), 1.0);
+        assert_eq!(recall_at(&[1, 2], &[]), 0.0);
+        assert_eq!(recall_at(&[], &[5]), 1.0);
+    }
 
     #[test]
     fn topl_basic_and_ties() {

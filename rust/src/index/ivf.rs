@@ -1,0 +1,405 @@
+//! The trained IVF coarse quantizer: a centroid table over document WCD
+//! centroids plus CSR-style inverted lists mapping each k-means cell to the
+//! database rows it contains.
+//!
+//! The index answers `probe(query_centroid, nprobe)` with the nearest
+//! `nprobe` lists (ties to the lower list id) and
+//! [`IvfIndex::candidates`] with the merged, ascending row-id union of a
+//! probed list set — the shortlist the pruned search layer scores through
+//! the LC engines.  A content fingerprint of the training dataset travels
+//! with the index so a persisted (`EMDX`) index can be rejected when the
+//! dataset underneath it changed.
+
+use crate::config::IndexParams;
+use crate::core::{Dataset, EmdResult};
+use crate::emd_ensure;
+
+use super::kmeans::kmeans;
+
+/// A trained IVF index over one dataset's WCD centroid matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IvfIndex {
+    dim: usize,
+    /// Row-major `(nlist, dim)` list centroid table.
+    centroids: Vec<f64>,
+    /// CSR offsets into `list_ids`, length `nlist + 1`.
+    list_ptr: Vec<usize>,
+    /// Database row ids, ascending within each list; length = dataset size.
+    list_ids: Vec<u32>,
+    /// Per-list stats: max member-centroid-to-list-centroid distance.
+    list_radius: Vec<f64>,
+    /// Fingerprint of the dataset the index was trained on.
+    fingerprint: u64,
+}
+
+/// The list count training actually uses: `nlist` capped so the average
+/// list keeps at least `min_points_per_list` members (and never exceeds the
+/// point count).
+pub fn effective_nlist(params: &IndexParams, n: usize) -> usize {
+    let cap = n / params.min_points_per_list.max(1);
+    params.nlist.min(cap.max(1)).min(n.max(1)).max(1)
+}
+
+impl IvfIndex {
+    /// Train on a row-major `(n, m)` centroid matrix (the output of
+    /// [`crate::approx::centroids_batch`], owned by the LC engine as its
+    /// WCD table).  `fingerprint` should come from [`dataset_fingerprint`]
+    /// of the dataset those centroids describe.
+    pub fn train(
+        points: &[f64],
+        m: usize,
+        params: &IndexParams,
+        threads: usize,
+        fingerprint: u64,
+    ) -> EmdResult<IvfIndex> {
+        emd_ensure!(m >= 1, config, "index dim must be >= 1");
+        emd_ensure!(
+            !points.is_empty() && points.len() % m == 0,
+            config,
+            "centroid matrix shape mismatch (len {} vs dim {m})",
+            points.len()
+        );
+        let n = points.len() / m;
+        let nlist = effective_nlist(params, n);
+        let km = kmeans(points, m, nlist, params.train_iters.max(1), params.seed, threads);
+        let nlist = km.k;
+
+        // CSR inverted lists; iterating rows in order keeps each list's ids
+        // ascending (the candidate-merge and tie-break contract).
+        let mut counts = vec![0usize; nlist];
+        for &a in &km.assignments {
+            counts[a as usize] += 1;
+        }
+        let mut list_ptr = vec![0usize; nlist + 1];
+        for c in 0..nlist {
+            list_ptr[c + 1] = list_ptr[c] + counts[c];
+        }
+        let mut cursor = list_ptr.clone();
+        let mut list_ids = vec![0u32; n];
+        for (u, &a) in km.assignments.iter().enumerate() {
+            list_ids[cursor[a as usize]] = u as u32;
+            cursor[a as usize] += 1;
+        }
+        let mut list_radius = vec![0.0f64; nlist];
+        for (u, &a) in km.assignments.iter().enumerate() {
+            let a = a as usize;
+            let d = euclid(&points[u * m..(u + 1) * m], &km.centroids[a * m..(a + 1) * m]);
+            if d > list_radius[a] {
+                list_radius[a] = d;
+            }
+        }
+        Ok(IvfIndex {
+            dim: m,
+            centroids: km.centroids,
+            list_ptr,
+            list_ids,
+            list_radius,
+            fingerprint,
+        })
+    }
+
+    /// Reassemble from raw parts (the persistence loader); validates the
+    /// CSR structure and that every database row appears exactly once.
+    pub fn from_raw(
+        dim: usize,
+        centroids: Vec<f64>,
+        list_ptr: Vec<usize>,
+        list_ids: Vec<u32>,
+        list_radius: Vec<f64>,
+        fingerprint: u64,
+    ) -> EmdResult<IvfIndex> {
+        emd_ensure!(dim >= 1, config, "index dim must be >= 1");
+        emd_ensure!(
+            !list_ptr.is_empty() && list_ptr[0] == 0,
+            config,
+            "index list_ptr must start at 0"
+        );
+        let nlist = list_ptr.len() - 1;
+        emd_ensure!(nlist >= 1, config, "index needs at least one list");
+        emd_ensure!(
+            centroids.len() == nlist * dim,
+            config,
+            "index centroid table shape mismatch"
+        );
+        emd_ensure!(list_radius.len() == nlist, config, "index list stats length mismatch");
+        emd_ensure!(
+            list_ptr.windows(2).all(|w| w[0] <= w[1]),
+            config,
+            "index list_ptr must be monotone"
+        );
+        emd_ensure!(
+            *list_ptr.last().unwrap() == list_ids.len(),
+            config,
+            "index list_ptr/list_ids mismatch"
+        );
+        let n = list_ids.len();
+        let mut seen = vec![false; n];
+        for &u in &list_ids {
+            emd_ensure!((u as usize) < n, config, "index row id {u} out of range");
+            emd_ensure!(!seen[u as usize], config, "index row id {u} appears twice");
+            seen[u as usize] = true;
+        }
+        Ok(IvfIndex { dim, centroids, list_ptr, list_ids, list_radius, fingerprint })
+    }
+
+    pub fn nlist(&self) -> usize {
+        self.list_ptr.len() - 1
+    }
+
+    /// Number of indexed database rows.
+    pub fn num_points(&self) -> usize {
+        self.list_ids.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// The centroid of list `c`.
+    pub fn centroid(&self, c: usize) -> &[f64] {
+        &self.centroids[c * self.dim..(c + 1) * self.dim]
+    }
+
+    /// The (ascending) database row ids of list `c`.
+    pub fn list(&self, c: usize) -> &[u32] {
+        &self.list_ids[self.list_ptr[c]..self.list_ptr[c + 1]]
+    }
+
+    /// Max member-to-centroid distance of list `c`.
+    pub fn list_radius(&self, c: usize) -> f64 {
+        self.list_radius[c]
+    }
+
+    /// Member count per list (shape reporting).
+    pub fn list_sizes(&self) -> Vec<usize> {
+        (0..self.nlist()).map(|c| self.list_ptr[c + 1] - self.list_ptr[c]).collect()
+    }
+
+    /// The nearest list to a centroid vector (the training assignment rule:
+    /// ties to the lower list id).
+    pub fn assign(&self, centroid: &[f64]) -> usize {
+        self.probe(centroid, 1)[0]
+    }
+
+    /// The `nprobe` nearest lists to `query_centroid`, nearest first (ties
+    /// to the lower list id).  `nprobe` is clamped to `[1, nlist]`.
+    pub fn probe(&self, query_centroid: &[f64], nprobe: usize) -> Vec<usize> {
+        assert_eq!(query_centroid.len(), self.dim, "query centroid dim mismatch");
+        let nlist = self.nlist();
+        let nprobe = nprobe.clamp(1, nlist);
+        let mut order: Vec<(f64, usize)> = (0..nlist)
+            .map(|c| (euclid(query_centroid, self.centroid(c)), c))
+            .collect();
+        order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        order.truncate(nprobe);
+        order.into_iter().map(|(_, c)| c).collect()
+    }
+
+    /// Merged candidate row ids of a probed list set, ascending.  Lists are
+    /// disjoint, so this is a plain sorted merge with no duplicates.
+    pub fn candidates(&self, lists: &[usize]) -> Vec<u32> {
+        let total: usize = lists.iter().map(|&c| self.list(c).len()).sum();
+        let mut out = Vec::with_capacity(total);
+        for &c in lists {
+            out.extend_from_slice(self.list(c));
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Destructure into raw parts (the persistence writer's view).
+    pub fn raw_parts(&self) -> (usize, &[f64], &[usize], &[u32], &[f64], u64) {
+        (
+            self.dim,
+            &self.centroids,
+            &self.list_ptr,
+            &self.list_ids,
+            &self.list_radius,
+            self.fingerprint,
+        )
+    }
+}
+
+#[inline]
+fn euclid(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s.sqrt()
+}
+
+/// FNV-1a content fingerprint of a dataset: embeddings, labels and the CSR
+/// histogram matrix all contribute, so any change to the data a persisted
+/// index was trained on invalidates it.
+pub fn dataset_fingerprint(ds: &Dataset) -> u64 {
+    let mut h = Fnv::new();
+    h.write_u64(ds.len() as u64);
+    h.write_u64(ds.embeddings.num_vectors() as u64);
+    h.write_u64(ds.embeddings.dim() as u64);
+    for &x in ds.embeddings.as_slice() {
+        h.write_u32(x.to_bits());
+    }
+    for &l in &ds.labels {
+        h.write_u32(l as u32);
+    }
+    for u in 0..ds.len() {
+        let (idx, w) = ds.matrix.row(u);
+        h.write_u64(idx.len() as u64);
+        for &i in idx {
+            h.write_u32(i);
+        }
+        for &x in w {
+            h.write_u32(x.to_bits());
+        }
+    }
+    h.finish()
+}
+
+/// Minimal FNV-1a 64-bit hasher (substrate: no external hash crates).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    #[inline]
+    fn write_u8(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x100000001b3);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, x: u32) {
+        for b in x.to_le_bytes() {
+            self.write_u8(b);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.write_u8(b);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_text, TextConfig};
+    use crate::util::rng::Rng;
+
+    fn params(nlist: usize) -> IndexParams {
+        IndexParams { nlist, nprobe: 2, train_iters: 8, seed: 11, min_points_per_list: 1 }
+    }
+
+    fn grid_points(n: usize, m: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n * m).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn lists_partition_the_database() {
+        let pts = grid_points(50, 3, 1);
+        let ix = IvfIndex::train(&pts, 3, &params(6), 2, 99).unwrap();
+        assert_eq!(ix.num_points(), 50);
+        assert_eq!(ix.fingerprint(), 99);
+        let all = ix.candidates(&(0..ix.nlist()).collect::<Vec<_>>());
+        assert_eq!(all, (0..50u32).collect::<Vec<_>>());
+        for c in 0..ix.nlist() {
+            assert!(ix.list(c).windows(2).all(|w| w[0] < w[1]), "list {c} not ascending");
+            assert!(ix.list_radius(c) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn probe_returns_nearest_lists_first() {
+        let pts = grid_points(60, 2, 2);
+        let ix = IvfIndex::train(&pts, 2, &params(5), 1, 0).unwrap();
+        let q = &pts[0..2];
+        let order = ix.probe(q, ix.nlist());
+        assert_eq!(order.len(), ix.nlist());
+        let mut prev = -1.0f64;
+        for &c in &order {
+            let d = {
+                let cc = ix.centroid(c);
+                ((q[0] - cc[0]).powi(2) + (q[1] - cc[1]).powi(2)).sqrt()
+            };
+            assert!(d >= prev, "probe order not ascending");
+            prev = d;
+        }
+        // the nearest list is what assign() picks
+        assert_eq!(ix.assign(q), order[0]);
+        // point 0's own list must be its nearest list
+        let own = (0..ix.nlist()).find(|&c| ix.list(c).contains(&0)).unwrap();
+        assert_eq!(own, order[0]);
+    }
+
+    #[test]
+    fn min_points_per_list_caps_nlist() {
+        let pts = grid_points(40, 2, 3);
+        let p = IndexParams { nlist: 1000, min_points_per_list: 10, ..params(1000) };
+        assert_eq!(effective_nlist(&p, 40), 4);
+        let ix = IvfIndex::train(&pts, 2, &p, 1, 0).unwrap();
+        assert!(ix.nlist() <= 4);
+    }
+
+    #[test]
+    fn from_raw_validates() {
+        let pts = grid_points(20, 2, 4);
+        let ix = IvfIndex::train(&pts, 2, &params(3), 1, 5).unwrap();
+        let (dim, c, p, ids, r, fp) = ix.raw_parts();
+        let ok = IvfIndex::from_raw(dim, c.to_vec(), p.to_vec(), ids.to_vec(), r.to_vec(), fp)
+            .unwrap();
+        assert_eq!(ok, ix);
+        // duplicated row id is rejected
+        let mut bad = ids.to_vec();
+        bad[0] = bad[1];
+        assert!(IvfIndex::from_raw(dim, c.to_vec(), p.to_vec(), bad, r.to_vec(), fp).is_err());
+        // truncated centroid table is rejected
+        assert!(IvfIndex::from_raw(
+            dim,
+            c[..c.len() - 1].to_vec(),
+            p.to_vec(),
+            ids.to_vec(),
+            r.to_vec(),
+            fp
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let a = generate_text(&TextConfig {
+            n: 20,
+            classes: 2,
+            vocab: 80,
+            dim: 8,
+            doc_len: 15,
+            seed: 1,
+            ..Default::default()
+        });
+        let b = generate_text(&TextConfig {
+            n: 20,
+            classes: 2,
+            vocab: 80,
+            dim: 8,
+            doc_len: 15,
+            seed: 2,
+            ..Default::default()
+        });
+        assert_eq!(dataset_fingerprint(&a), dataset_fingerprint(&a));
+        assert_ne!(dataset_fingerprint(&a), dataset_fingerprint(&b));
+    }
+}

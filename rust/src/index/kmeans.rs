@@ -1,0 +1,292 @@
+//! Data-parallel Lloyd's k-means over document centroid vectors — the
+//! coarse quantizer behind the IVF pruning index.
+//!
+//! k-means++ seeding draws from [`crate::util::rng::Rng`] so training is
+//! deterministic from its seed; the assignment step (the `O(n·k·m)` hot
+//! loop) is data-parallel over points via
+//! [`crate::util::threadpool::parallel_for`] with disjoint-index writes, so
+//! the result is bit-identical for every thread count.  The update step is
+//! a serial `O(n·m)` accumulation, which keeps the centroid sums in one
+//! deterministic order.
+
+use crate::util::rng::Rng;
+use crate::util::threadpool::{parallel_for, SyncSlice};
+
+/// Trained quantizer: `(k, dim)` centroids plus the final assignment of
+/// every input point to its nearest centroid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KmeansResult {
+    /// Number of centroids actually trained (clamped to the point count).
+    pub k: usize,
+    /// Vector dimensionality.
+    pub dim: usize,
+    /// Row-major `(k, dim)` centroid table.
+    pub centroids: Vec<f64>,
+    /// Nearest-centroid id per input point (ties break to the lower id).
+    pub assignments: Vec<u32>,
+    /// Lloyd rounds actually run (early exit when assignments stabilize).
+    pub iters_run: usize,
+}
+
+#[inline]
+fn dist_sq(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Lower `d2[i]` to the squared distance from point `i` to `center` when
+/// that is smaller (the k-means++ seeding update), parallel over points.
+fn min_d2_update(points: &[f64], m: usize, center: &[f64], d2: &mut [f64], threads: usize) {
+    let slots = SyncSlice::new(d2);
+    parallel_for(slots.len(), threads, |start, end| {
+        for i in start..end {
+            let d = dist_sq(&points[i * m..(i + 1) * m], center);
+            // SAFETY: index i is owned by exactly this chunk.
+            unsafe {
+                if d < slots.get(i) {
+                    slots.write(i, d);
+                }
+            }
+        }
+    });
+}
+
+/// Assign every point to its nearest centroid (ties to the lower id),
+/// recording the squared distance; returns whether any assignment changed.
+fn assign(
+    points: &[f64],
+    m: usize,
+    centroids: &[f64],
+    assignments: &mut [u32],
+    d2: &mut [f64],
+    threads: usize,
+) -> bool {
+    let n = assignments.len();
+    let k = centroids.len() / m;
+    let changed = std::sync::atomic::AtomicUsize::new(0);
+    {
+        let aslots = SyncSlice::new(assignments);
+        let dslots = SyncSlice::new(d2);
+        let changed = &changed;
+        parallel_for(n, threads, |start, end| {
+            for i in start..end {
+                let p = &points[i * m..(i + 1) * m];
+                let mut best = 0usize;
+                let mut bd = f64::INFINITY;
+                for c in 0..k {
+                    let d = dist_sq(p, &centroids[c * m..(c + 1) * m]);
+                    if d < bd {
+                        bd = d;
+                        best = c;
+                    }
+                }
+                // SAFETY: index i is owned by exactly this chunk.
+                unsafe {
+                    if aslots.get(i) != best as u32 {
+                        changed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    aslots.write(i, best as u32);
+                    dslots.write(i, bd);
+                }
+            }
+        });
+    }
+    changed.load(std::sync::atomic::Ordering::Relaxed) > 0
+}
+
+/// k-means++ seeding: first centroid uniform, the rest D²-weighted.
+fn seed_centroids(points: &[f64], m: usize, k: usize, rng: &mut Rng, threads: usize) -> Vec<f64> {
+    let n = points.len() / m;
+    let mut centroids = vec![0.0f64; k * m];
+    let first = rng.below(n);
+    centroids[..m].copy_from_slice(&points[first * m..(first + 1) * m]);
+    let mut d2 = vec![f64::INFINITY; n];
+    min_d2_update(points, m, &centroids[..m], &mut d2, threads);
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let pick = if total > 0.0 {
+            // cumulative scan (the weights change every round, so the
+            // linear pass is the whole cost anyway)
+            let mut u = rng.f64() * total;
+            let mut chosen = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                u -= w;
+                if u <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        } else {
+            // all remaining points coincide with a chosen centroid
+            rng.below(n)
+        };
+        centroids[c * m..(c + 1) * m].copy_from_slice(&points[pick * m..(pick + 1) * m]);
+        min_d2_update(points, m, &centroids[c * m..(c + 1) * m], &mut d2, threads);
+    }
+    centroids
+}
+
+/// Cluster the row-major `(n, m)` matrix `points` into `k` centroids with
+/// up to `iters` Lloyd rounds.  `k` is clamped to `[1, n]`.  Empty clusters
+/// are reseeded deterministically to the point currently farthest from its
+/// assigned centroid.
+pub fn kmeans(
+    points: &[f64],
+    m: usize,
+    k: usize,
+    iters: usize,
+    seed: u64,
+    threads: usize,
+) -> KmeansResult {
+    assert!(m >= 1, "kmeans dim must be >= 1");
+    assert!(!points.is_empty() && points.len() % m == 0, "kmeans point matrix shape mismatch");
+    let n = points.len() / m;
+    let k = k.clamp(1, n);
+    let mut rng = Rng::new(seed);
+    let mut centroids = seed_centroids(points, m, k, &mut rng, threads);
+
+    let mut assignments = vec![0u32; n];
+    let mut d2 = vec![0.0f64; n];
+    assign(points, m, &centroids, &mut assignments, &mut d2, threads);
+
+    let mut iters_run = 0usize;
+    for _ in 0..iters.max(1) {
+        iters_run += 1;
+        // update: centroid = mean of its members (serial, deterministic)
+        let mut sums = vec![0.0f64; k * m];
+        let mut counts = vec![0usize; k];
+        for (i, &a) in assignments.iter().enumerate() {
+            let a = a as usize;
+            counts[a] += 1;
+            for (acc, &x) in sums[a * m..(a + 1) * m].iter_mut().zip(&points[i * m..(i + 1) * m])
+            {
+                *acc += x;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                let inv = 1.0 / counts[c] as f64;
+                for (slot, &s) in
+                    centroids[c * m..(c + 1) * m].iter_mut().zip(&sums[c * m..(c + 1) * m])
+                {
+                    *slot = s * inv;
+                }
+            }
+        }
+        // empty clusters: reseed to the point farthest from its assigned
+        // centroid (ties to the lowest index), each empty cluster taking a
+        // distinct point
+        for c in 0..k {
+            if counts[c] == 0 {
+                let mut best = 0usize;
+                let mut bd = -1.0f64;
+                for (i, &d) in d2.iter().enumerate() {
+                    if d > bd {
+                        bd = d;
+                        best = i;
+                    }
+                }
+                centroids[c * m..(c + 1) * m]
+                    .copy_from_slice(&points[best * m..(best + 1) * m]);
+                d2[best] = 0.0;
+            }
+        }
+        let changed = assign(points, m, &centroids, &mut assignments, &mut d2, threads);
+        if !changed {
+            break;
+        }
+    }
+    KmeansResult { k, dim: m, centroids, assignments, iters_run }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated 2-D blobs (spread ≪ separation, so D²-weighted
+    /// seeding lands one centroid per blob for any seed in practice).
+    fn blobs(seed: u64, per: usize) -> Vec<f64> {
+        let centers = [(0.0, 0.0), (10.0, 0.0), (0.0, 10.0)];
+        let mut rng = Rng::new(seed);
+        let mut pts = Vec::with_capacity(3 * per * 2);
+        for &(cx, cy) in &centers {
+            for _ in 0..per {
+                pts.push(cx + rng.normal_ms(0.0, 0.05));
+                pts.push(cy + rng.normal_ms(0.0, 0.05));
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let per = 20;
+        let pts = blobs(1, per);
+        let km = kmeans(&pts, 2, 3, 20, 7, 2);
+        assert_eq!(km.k, 3);
+        // each blob maps to exactly one cluster, and the three differ
+        let mut blob_cluster = Vec::new();
+        for b in 0..3 {
+            let first = km.assignments[b * per];
+            assert!(
+                km.assignments[b * per..(b + 1) * per].iter().all(|&a| a == first),
+                "blob {b} split across clusters"
+            );
+            blob_cluster.push(first);
+        }
+        blob_cluster.sort_unstable();
+        blob_cluster.dedup();
+        assert_eq!(blob_cluster.len(), 3);
+    }
+
+    #[test]
+    fn deterministic_and_thread_invariant() {
+        let pts = blobs(2, 15);
+        let a = kmeans(&pts, 2, 4, 10, 3, 1);
+        let b = kmeans(&pts, 2, 4, 10, 3, 8);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.assignments, b.assignments);
+        let c = kmeans(&pts, 2, 4, 10, 3, 1);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn k_clamps_to_point_count() {
+        let pts = vec![0.0, 0.0, 1.0, 1.0]; // 2 points in 2-D
+        let km = kmeans(&pts, 2, 10, 5, 1, 1);
+        assert_eq!(km.k, 2);
+        assert_eq!(km.assignments.len(), 2);
+    }
+
+    #[test]
+    fn identical_points_do_not_panic() {
+        let pts = vec![1.0f64; 5 * 3]; // 5 identical 3-D points
+        let km = kmeans(&pts, 3, 3, 10, 1, 2);
+        assert_eq!(km.assignments.len(), 5);
+        assert!(km.centroids.iter().all(|c| c.is_finite()));
+    }
+
+    #[test]
+    fn assignments_are_nearest_final_centroid() {
+        let pts = blobs(4, 10);
+        let km = kmeans(&pts, 2, 3, 8, 5, 2);
+        for i in 0..30 {
+            let p = &pts[i * 2..(i + 1) * 2];
+            let mut best = 0usize;
+            let mut bd = f64::INFINITY;
+            for c in 0..km.k {
+                let d = dist_sq(p, &km.centroids[c * 2..(c + 1) * 2]);
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            assert_eq!(km.assignments[i] as usize, best, "point {i}");
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! IVF-style centroid pruning index: sublinear candidate selection in
+//! front of the LC engines.
+//!
+//! Every serving path used to score all `n` database rows per query; this
+//! subsystem puts a coarse quantizer in front of Phase 2 so only a
+//! candidate shortlist is scored.  The geometry is the WCD centroid of each
+//! document (the `(n, m)` matrix [`crate::approx::centroids_batch`] already
+//! computes for the engine's WCD path): documents whose centroids are close
+//! are the ones cheap bounds would keep anyway, so clustering that space
+//! yields a high-recall shortlist at a fraction of the scoring work — the
+//! nearest-neighbor-search framing of EMD approximation (arXiv 2401.07378)
+//! and the data-dependent clustering bound (arXiv 2002.12354) applied to
+//! this codebase's engines.
+//!
+//! Layout:
+//! * [`kmeans`] — data-parallel Lloyd's k-means with k-means++ seeding
+//!   (deterministic per seed, thread-count invariant).
+//! * [`ivf`] — the trained [`IvfIndex`]: centroid table + CSR inverted
+//!   lists + per-list stats, `train`/`assign`/`probe`, and the dataset
+//!   fingerprint that ties an index to its data.
+//! * [`search`] — pruned top-ℓ through
+//!   [`crate::lc::LcEngine::distances_batch_subset`] (bit-identical
+//!   candidate distances; `nprobe = nlist` reproduces exhaustive search
+//!   exactly).
+//! * [`persist`] — the `EMDX` sidecar format with stale-index rejection.
+//!
+//! The coordinator ([`crate::coordinator::SearchEngine`]) owns an optional
+//! trained index and routes `search`/`search_batch` through it; the
+//! cascade composes via
+//! [`crate::coordinator::cascade::cascade_search_pruned`].
+
+pub mod ivf;
+pub mod kmeans;
+pub mod persist;
+pub mod search;
+
+pub use ivf::{dataset_fingerprint, effective_nlist, IvfIndex};
+pub use kmeans::{kmeans, KmeansResult};
+pub use persist::{
+    load as load_index, load_for as load_index_for, save as save_index, sidecar_path,
+};
+pub use search::{probe_candidates, pruned_search, pruned_search_batch, PrunedSearch};

@@ -1,0 +1,235 @@
+//! Binary persistence for the trained IVF index (substrate: no serde).
+//!
+//! Format `EMDX` (little-endian), the sidecar companion of the `EMD1`
+//! dataset format in [`crate::data::store`]:
+//! ```text
+//! magic "EMDX" | version u32 = 1
+//! fingerprint u64           (dataset_fingerprint of the training data)
+//! dim u64 | nlist u64 | npoints u64
+//! centroids f64[nlist*dim]
+//! list_ptr u64[nlist+1]
+//! list_ids u32[npoints]
+//! list_radius f64[nlist]
+//! ```
+//! [`load_for`] rejects an index whose embedded fingerprint does not match
+//! the dataset it is being attached to, so a stale sidecar can never route
+//! queries against data it was not trained on.
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::core::{EmdError, EmdResult};
+
+use super::ivf::IvfIndex;
+
+const MAGIC: &[u8; 4] = b"EMDX";
+const VERSION: u32 = 1;
+
+/// The conventional sidecar path for a dataset file: `ds.bin` → `ds.emdx`.
+pub fn sidecar_path(dataset_path: &Path) -> PathBuf {
+    dataset_path.with_extension("emdx")
+}
+
+/// Save a trained index.
+pub fn save(ix: &IvfIndex, path: &Path) -> EmdResult<()> {
+    let (dim, centroids, list_ptr, list_ids, list_radius, fingerprint) = ix.raw_parts();
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&fingerprint.to_le_bytes())?;
+    w.write_all(&(dim as u64).to_le_bytes())?;
+    w.write_all(&(ix.nlist() as u64).to_le_bytes())?;
+    w.write_all(&(ix.num_points() as u64).to_le_bytes())?;
+    for &x in centroids {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    for &p in list_ptr {
+        w.write_all(&(p as u64).to_le_bytes())?;
+    }
+    for &u in list_ids {
+        w.write_all(&u.to_le_bytes())?;
+    }
+    for &r in list_radius {
+        w.write_all(&r.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load an index without checking what dataset it belongs to (inspection
+/// use; serving paths should use [`load_for`]).
+pub fn load(path: &Path) -> EmdResult<IvfIndex> {
+    let file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(
+            io::Error::new(io::ErrorKind::InvalidData, "bad magic (not an EMDX file)").into()
+        );
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        return Err(EmdError::config(format!(
+            "unsupported EMDX version {version} (expected {VERSION})"
+        )));
+    }
+    let fingerprint = read_u64(&mut r)?;
+    let dim = read_u64(&mut r)? as usize;
+    let nlist = read_u64(&mut r)? as usize;
+    let npoints = read_u64(&mut r)? as usize;
+    // the format is fixed-size given the header, so a corrupt header (e.g.
+    // an absurd nlist) is caught against the file length *before* any
+    // allocation is sized from it — load must fail with a clean error the
+    // engine's log-and-retrain fallback can catch, never abort
+    let expected = 40u128 // magic + version + fingerprint + three u64 dims
+        + (nlist as u128) * (dim as u128) * 8
+        + (nlist as u128 + 1) * 8
+        + (npoints as u128) * 4
+        + (nlist as u128) * 8;
+    if expected != file_len as u128 {
+        return Err(EmdError::config(format!(
+            "corrupt EMDX header in {path:?}: dim {dim} / nlist {nlist} / npoints {npoints} \
+             imply {expected} bytes but the file has {file_len}"
+        )));
+    }
+    let mut centroids = Vec::with_capacity(nlist * dim);
+    for _ in 0..nlist * dim {
+        centroids.push(read_f64(&mut r)?);
+    }
+    let mut list_ptr = Vec::with_capacity(nlist + 1);
+    for _ in 0..=nlist {
+        list_ptr.push(read_u64(&mut r)? as usize);
+    }
+    let mut list_ids = Vec::with_capacity(npoints);
+    for _ in 0..npoints {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        list_ids.push(u32::from_le_bytes(b));
+    }
+    let mut list_radius = Vec::with_capacity(nlist);
+    for _ in 0..nlist {
+        list_radius.push(read_f64(&mut r)?);
+    }
+    IvfIndex::from_raw(dim, centroids, list_ptr, list_ids, list_radius, fingerprint)
+}
+
+/// Load an index for a specific dataset, rejecting a stale sidecar whose
+/// embedded fingerprint does not match `expected_fingerprint`.
+pub fn load_for(path: &Path, expected_fingerprint: u64) -> EmdResult<IvfIndex> {
+    let ix = load(path)?;
+    if ix.fingerprint() != expected_fingerprint {
+        return Err(EmdError::config(format!(
+            "stale index {path:?}: fingerprint {:#018x} does not match dataset {:#018x} — \
+             rebuild with `emdpar index --op build`",
+            ix.fingerprint(),
+            expected_fingerprint
+        )));
+    }
+    Ok(ix)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f64<R: Read>(r: &mut R) -> io::Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IndexParams;
+    use crate::util::rng::Rng;
+
+    fn index(seed: u64) -> IvfIndex {
+        let mut rng = Rng::new(seed);
+        let pts: Vec<f64> = (0..40 * 3).map(|_| rng.normal()).collect();
+        IvfIndex::train(
+            &pts,
+            3,
+            &IndexParams { nlist: 5, nprobe: 2, train_iters: 6, seed: 3, min_points_per_list: 1 },
+            2,
+            0xfeed,
+        )
+        .unwrap()
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("emdpar_index_persist_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let ix = index(1);
+        let path = tmp("roundtrip.emdx");
+        save(&ix, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back, ix);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stale_fingerprint_rejected() {
+        let ix = index(2);
+        let path = tmp("stale.emdx");
+        save(&ix, &path).unwrap();
+        assert!(load_for(&path, 0xfeed).is_ok());
+        let err = load_for(&path, 0xdead).unwrap_err();
+        assert!(err.to_string().contains("stale index"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmp("junk.emdx");
+        std::fs::write(&path, b"NOPEnopenope").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_header_rejected_before_allocation() {
+        // valid magic/version but an absurd nlist: the length check must
+        // reject it cleanly (no multi-TB Vec::with_capacity)
+        let path = tmp("corrupt.emdx");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"EMDX");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // fingerprint
+        bytes.extend_from_slice(&8u64.to_le_bytes()); // dim
+        bytes.extend_from_slice(&(1u64 << 40).to_le_bytes()); // nlist: bogus
+        bytes.extend_from_slice(&10u64.to_le_bytes()); // npoints
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("corrupt EMDX header"), "{err}");
+        // a truncated but otherwise sane file is also a clean error
+        let ix = index(3);
+        save(&ix, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sidecar_path_swaps_extension() {
+        assert_eq!(sidecar_path(Path::new("data/ds.bin")), PathBuf::from("data/ds.emdx"));
+        assert_eq!(sidecar_path(Path::new("plain")), PathBuf::from("plain.emdx"));
+    }
+}

@@ -1,0 +1,242 @@
+//! Pruned top-ℓ search: probe the IVF index, score only the shortlist.
+//!
+//! The scoring half rides the existing engine machinery —
+//! [`crate::lc::LcEngine::distances_batch_subset`] gathers the candidate
+//! rows into a sub-CSR matrix and runs the same batched Phase-1/Phase-2
+//! pipeline as a full sweep, so every candidate's distance is bit-identical
+//! to the value exhaustive search would have produced.  With
+//! `nprobe = nlist` the candidate set is the whole database and the pruned
+//! result equals exhaustive search exactly; smaller `nprobe` trades recall
+//! for a sublinear number of scored candidates.
+//!
+//! For a multi-query batch the candidate sets are merged into one sorted
+//! union, scored in a single engine dispatch (one Phase-1 block pipeline,
+//! shared sub-CSR), and each query then ranks only its own candidates — so
+//! batched pruned search returns exactly what per-query pruned search
+//! returns.
+
+use crate::core::{EmdResult, Histogram, Method};
+use crate::coordinator::TopL;
+use crate::emd_ensure;
+use crate::lc::LcEngine;
+
+use super::ivf::IvfIndex;
+
+/// One pruned query's outcome with pruning work accounting.
+#[derive(Debug, Clone)]
+pub struct PrunedSearch {
+    /// (distance, database id) under `method`, best first — distances are
+    /// bit-identical to the exhaustive values for the same pairs.
+    pub hits: Vec<(f32, usize)>,
+    /// Inverted lists visited for this query.
+    pub lists_probed: usize,
+    /// Database rows actually scored (this query's candidate-set size).
+    pub candidates: usize,
+}
+
+/// Pruned top-ℓ for one query.
+pub fn pruned_search(
+    engine: &LcEngine,
+    index: &IvfIndex,
+    query: &Histogram,
+    method: Method,
+    l: usize,
+    nprobe: usize,
+) -> EmdResult<PrunedSearch> {
+    let mut out =
+        pruned_search_batch(engine, index, std::slice::from_ref(query), method, l, nprobe)?;
+    Ok(out.pop().expect("one query in, one result out"))
+}
+
+/// Validate the (engine, index) pairing and probe one query: WCD centroid
+/// → `nprobe` nearest lists → merged ascending candidate row ids.  The one
+/// probe-path entry point, shared by pruned search and the pruned cascade
+/// ([`crate::coordinator::cascade_search_pruned`]) so validation and probe
+/// semantics cannot diverge.
+pub fn probe_candidates(
+    engine: &LcEngine,
+    index: &IvfIndex,
+    query: &Histogram,
+    nprobe: usize,
+) -> EmdResult<Vec<u32>> {
+    emd_ensure!(
+        index.num_points() == engine.dataset().len(),
+        config,
+        "index covers {} rows but the dataset has {}",
+        index.num_points(),
+        engine.dataset().len()
+    );
+    emd_ensure!(
+        index.dim() == engine.dataset().embeddings.dim(),
+        config,
+        "index centroid dim {} does not match embedding dim {}",
+        index.dim(),
+        engine.dataset().embeddings.dim()
+    );
+    emd_ensure!(!query.is_empty(), config, "empty query histogram");
+    let qc = crate::approx::centroid(&engine.dataset().embeddings, query);
+    let lists = index.probe(&qc, nprobe.clamp(1, index.nlist()));
+    Ok(index.candidates(&lists))
+}
+
+/// Pruned top-ℓ for a batch of queries: one probe per query, one engine
+/// dispatch over the batch's candidate union.
+pub fn pruned_search_batch(
+    engine: &LcEngine,
+    index: &IvfIndex,
+    queries: &[Histogram],
+    method: Method,
+    l: usize,
+    nprobe: usize,
+) -> EmdResult<Vec<PrunedSearch>> {
+    if queries.is_empty() {
+        return Ok(Vec::new());
+    }
+    let nprobe = nprobe.clamp(1, index.nlist());
+    let mut per_query: Vec<Vec<u32>> = Vec::with_capacity(queries.len());
+    for q in queries {
+        per_query.push(probe_candidates(engine, index, q, nprobe)?);
+    }
+
+    // candidate union across the batch (lists are disjoint per query but
+    // overlap across queries)
+    let union: Vec<u32> = if queries.len() == 1 {
+        per_query[0].clone()
+    } else {
+        let mut u: Vec<u32> = per_query.iter().flat_map(|c| c.iter().copied()).collect();
+        u.sort_unstable();
+        u.dedup();
+        u
+    };
+
+    // one engine dispatch: (queries, union) distance block through the
+    // batched Phase-1 pipeline
+    let flat = engine.distances_batch_subset(queries, method, &union);
+    let cols = union.len();
+
+    let results = queries
+        .iter()
+        .enumerate()
+        .map(|(qi, _)| {
+            let row = &flat[qi * cols..(qi + 1) * cols];
+            let mut top = TopL::new(l.max(1));
+            for &id in &per_query[qi] {
+                let pos = union.binary_search(&id).expect("candidate present in union");
+                top.push(row[pos], id as usize);
+            }
+            PrunedSearch {
+                hits: top.into_sorted(),
+                lists_probed: nprobe,
+                candidates: per_query[qi].len(),
+            }
+        })
+        .collect();
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IndexParams;
+    use crate::data::{generate_text, TextConfig};
+    use crate::index::dataset_fingerprint;
+    use crate::lc::EngineParams;
+    use std::sync::Arc;
+
+    fn setup(nlist: usize) -> (Arc<crate::core::Dataset>, LcEngine, IvfIndex) {
+        let ds = Arc::new(generate_text(&TextConfig {
+            n: 80,
+            classes: 4,
+            vocab: 300,
+            dim: 12,
+            doc_len: 30,
+            seed: 21,
+            ..Default::default()
+        }));
+        let eng = LcEngine::new(Arc::clone(&ds), EngineParams { threads: 2, ..Default::default() });
+        let fp = dataset_fingerprint(&ds);
+        let ix = IvfIndex::train(
+            eng.wcd_centroids(),
+            ds.embeddings.dim(),
+            &IndexParams {
+                nlist,
+                nprobe: 2,
+                train_iters: 8,
+                seed: 5,
+                min_points_per_list: 1,
+            },
+            2,
+            fp,
+        )
+        .unwrap();
+        (ds, eng, ix)
+    }
+
+    #[test]
+    fn full_probe_equals_exhaustive_topl() {
+        let (ds, eng, ix) = setup(6);
+        let q = ds.histogram(3);
+        for method in [Method::Rwmd, Method::Act { k: 2 }, Method::Wcd] {
+            let pruned = pruned_search(&eng, &ix, &q, method, 7, ix.nlist()).unwrap();
+            let row = eng.distances(&q, method);
+            let mut want = TopL::new(7);
+            want.push_slice(&row, 0);
+            assert_eq!(pruned.hits, want.into_sorted(), "{method}");
+            assert_eq!(pruned.candidates, ds.len());
+        }
+    }
+
+    #[test]
+    fn batch_equals_single_query_pruned() {
+        let (ds, eng, ix) = setup(8);
+        let queries: Vec<Histogram> =
+            [0usize, 13, 40, 41].iter().map(|&u| ds.histogram(u)).collect();
+        for nprobe in [1usize, 2, 4] {
+            let batch =
+                pruned_search_batch(&eng, &ix, &queries, Method::Rwmd, 5, nprobe).unwrap();
+            for (q, got) in queries.iter().zip(&batch) {
+                let single = pruned_search(&eng, &ix, q, Method::Rwmd, 5, nprobe).unwrap();
+                assert_eq!(got.hits, single.hits, "nprobe {nprobe}");
+                assert_eq!(got.candidates, single.candidates);
+            }
+        }
+    }
+
+    #[test]
+    fn pruning_reduces_scored_candidates() {
+        let (ds, eng, ix) = setup(8);
+        let q = ds.histogram(0);
+        let res = pruned_search(&eng, &ix, &q, Method::Rwmd, 5, 2).unwrap();
+        assert!(res.candidates < ds.len(), "nprobe 2 of 8 lists must prune");
+        assert_eq!(res.lists_probed, 2);
+        // a database query always finds itself: its own list is probed first
+        assert_eq!(res.hits[0].1, 0);
+        assert!(res.hits[0].0.abs() < 1e-5);
+    }
+
+    #[test]
+    fn mismatched_index_is_rejected() {
+        let (_, eng, _) = setup(4);
+        let other = generate_text(&TextConfig {
+            n: 30,
+            classes: 2,
+            vocab: 300,
+            dim: 12,
+            doc_len: 20,
+            seed: 9,
+            ..Default::default()
+        });
+        let other_eng =
+            LcEngine::new(Arc::new(other), EngineParams { threads: 1, ..Default::default() });
+        let ix = IvfIndex::train(
+            other_eng.wcd_centroids(),
+            12,
+            &IndexParams { nlist: 4, nprobe: 1, train_iters: 4, seed: 1, min_points_per_list: 1 },
+            1,
+            0,
+        )
+        .unwrap();
+        let q = eng.dataset().histogram(0);
+        assert!(pruned_search(&eng, &ix, &q, Method::Rwmd, 3, 1).is_err());
+    }
+}

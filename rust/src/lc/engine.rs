@@ -17,7 +17,8 @@ use crate::approx::{bow_distances_batch, centroids_batch, wcd_from_centroids};
 use std::sync::Arc;
 
 use crate::core::{
-    BatchDistance, Dataset, Distance, EmdResult, Histogram, Method, MethodRegistry, Metric,
+    BatchDistance, CsrMatrix, Dataset, Distance, EmdResult, Histogram, Method, MethodRegistry,
+    Metric,
 };
 use crate::util::threadpool::{parallel_for, parallel_map, SyncSlice};
 
@@ -80,7 +81,7 @@ impl LcEngine {
     pub fn new(dataset: Arc<Dataset>, params: EngineParams) -> LcEngine {
         LcEngine {
             bow_norms: dataset.matrix.row_l2_norms(),
-            centroids: centroids_batch(&dataset.embeddings, &dataset.matrix),
+            centroids: centroids_batch(&dataset.embeddings, &dataset.matrix, params.threads),
             vocab_sq_norms: dataset.embeddings.row_sq_norms(),
             registry: MethodRegistry::new(params.metric),
             dataset,
@@ -99,6 +100,13 @@ impl LcEngine {
     /// The precomputed vocabulary row squared-norm table (Phase-1 input).
     pub fn vocab_sq_norms(&self) -> &[f32] {
         &self.vocab_sq_norms
+    }
+
+    /// The precomputed per-document WCD centroid matrix, row-major `(n, m)`
+    /// — the WCD fast path's table and the training input of the IVF
+    /// pruning index ([`crate::index::IvfIndex::train`]).
+    pub fn wcd_centroids(&self) -> &[f64] {
+        &self.centroids
     }
 
     /// The registry configured with this engine's ground metric — the object
@@ -140,7 +148,7 @@ impl LcEngine {
                 );
                 let mut t = vec![0.0f32; db.nrows()];
                 let mut tb = Vec::new();
-                self.phase2_into(method, &plan, &mut t, self.params.threads, &mut tb);
+                self.phase2_into(method, &plan, db, &mut t, self.params.threads, &mut tb);
                 t
             }
             _ => self.per_pair_row(query, method),
@@ -148,18 +156,22 @@ impl LcEngine {
     }
 
     /// Phase 2 (+ direction-B max when the engine is symmetric) for one
-    /// plan, written into a caller-owned row.  `tb` is a reusable scratch
-    /// row for the direction-B sweep, so batched callers pay zero per-query
-    /// allocations here too.
+    /// plan, written into a caller-owned row.  `db` is the CSR matrix to
+    /// sweep — the full database, or a gathered candidate subset
+    /// ([`LcEngine::distances_batch_subset`]): each row's transfer cost is
+    /// independent of the other rows, so subset values are bit-identical to
+    /// the full sweep's.  `tb` is a reusable scratch row for the
+    /// direction-B sweep, so batched callers pay zero per-query allocations
+    /// here too.
     fn phase2_into(
         &self,
         method: Method,
         plan: &QueryPlan,
+        db: &CsrMatrix,
         out: &mut [f32],
         threads: usize,
         tb: &mut Vec<f32>,
     ) {
-        let db = &self.dataset.matrix;
         match method {
             Method::Rwmd => rwmd_direction_a_into(plan, db, threads, out),
             Method::Omr => omr_direction_a_into(plan, db, threads, out),
@@ -213,10 +225,140 @@ impl LcEngine {
             planner.plan_block_into(block, params, &mut scratch, &mut plans);
             for (i, plan) in plans.iter().enumerate() {
                 let q = b * bb + i;
-                self.phase2_into(method, plan, &mut out[q * n..(q + 1) * n], threads, &mut tb);
+                self.phase2_into(
+                    method,
+                    plan,
+                    &self.dataset.matrix,
+                    &mut out[q * n..(q + 1) * n],
+                    threads,
+                    &mut tb,
+                );
             }
         }
         out
+    }
+
+    /// Row-major `(queries.len(), ids.len())` distances restricted to the
+    /// database rows `ids` (ascending, unique) — the scoring half of
+    /// IVF-pruned search ([`crate::index::search`]).  The candidate rows
+    /// are gathered into a sub-CSR matrix once per call and the queries
+    /// flow through the same batched Phase-1 block pipeline as
+    /// [`LcEngine::distances_batch`]; because every Phase-2 row cost is
+    /// independent of its neighbors, each value is bit-identical to the
+    /// corresponding entry of the full sweep.
+    pub fn distances_batch_subset(
+        &self,
+        queries: &[Histogram],
+        method: Method,
+        ids: &[u32],
+    ) -> Vec<f32> {
+        if queries.is_empty() || ids.is_empty() {
+            return Vec::new();
+        }
+        debug_assert!(ids.windows(2).all(|w| w[0] < w[1]), "candidate ids must be ascending");
+        debug_assert!(
+            ids.iter().all(|&u| (u as usize) < self.dataset.len()),
+            "candidate id out of range"
+        );
+        let cols = ids.len();
+        match method {
+            Method::Bow => {
+                let sub = self.gather_rows(ids);
+                let norms: Vec<f32> = ids.iter().map(|&u| self.bow_norms[u as usize]).collect();
+                let mut out = Vec::with_capacity(queries.len() * cols);
+                for q in queries {
+                    out.extend(
+                        bow_distances_batch(q, &sub, &norms).into_iter().map(|d| d as f32),
+                    );
+                }
+                out
+            }
+            Method::Wcd => {
+                let m = self.dataset.embeddings.dim();
+                let mut out = Vec::with_capacity(queries.len() * cols);
+                for q in queries {
+                    let qc = crate::approx::centroid(&self.dataset.embeddings, q);
+                    out.extend(ids.iter().map(|&u| {
+                        let u = u as usize;
+                        wcd_from_centroids(&qc, &self.centroids[u * m..(u + 1) * m]) as f32
+                    }));
+                }
+                out
+            }
+            Method::Rwmd | Method::Omr | Method::Act { .. } => {
+                let sub = self.gather_rows(ids);
+                let keep_d = self.params.symmetric;
+                let bb = self.params.batch_block.max(1);
+                let threads = self.params.threads;
+                let params = PlanParams {
+                    k: method.plan_k(),
+                    metric: self.params.metric,
+                    keep_d,
+                    threads,
+                };
+                let planner = BatchPlanner::new(&self.dataset.embeddings, &self.vocab_sq_norms);
+                let mut scratch = PlanScratch::new();
+                let mut plans: Vec<QueryPlan> = Vec::new();
+                let mut out = vec![0.0f32; queries.len() * cols];
+                let mut tb = Vec::new();
+                for (b, block) in queries.chunks(bb).enumerate() {
+                    planner.plan_block_into(block, params, &mut scratch, &mut plans);
+                    for (i, plan) in plans.iter().enumerate() {
+                        let q = b * bb + i;
+                        self.phase2_into(
+                            method,
+                            plan,
+                            &sub,
+                            &mut out[q * cols..(q + 1) * cols],
+                            threads,
+                            &mut tb,
+                        );
+                    }
+                }
+                out
+            }
+            _ => {
+                // per-pair fallback through the registry's boxed object,
+                // data-parallel over the candidate rows
+                let dist = self.registry().distance(method);
+                let mut out = vec![0.0f32; queries.len() * cols];
+                {
+                    let slots = SyncSlice::new(&mut out);
+                    for (qi, q) in queries.iter().enumerate() {
+                        parallel_for(cols, self.params.threads, |start, end| {
+                            for c in start..end {
+                                let doc = self.dataset.histogram(ids[c] as usize);
+                                let d = match dist.distance(&self.dataset.embeddings, &doc, q) {
+                                    Ok(v) => v as f32,
+                                    Err(_) => f32::INFINITY,
+                                };
+                                // SAFETY: cell (qi, c) is owned by exactly
+                                // this chunk.
+                                unsafe { slots.write(qi * cols + c, d) };
+                            }
+                        });
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Gather database rows `ids` into a standalone sub-CSR matrix (weights
+    /// copied verbatim, so downstream sweeps are bit-identical).
+    fn gather_rows(&self, ids: &[u32]) -> CsrMatrix {
+        let db = &self.dataset.matrix;
+        let mut indptr = Vec::with_capacity(ids.len() + 1);
+        indptr.push(0usize);
+        let mut indices: Vec<u32> = Vec::new();
+        let mut data: Vec<f32> = Vec::new();
+        for &u in ids {
+            let (idx, w) = db.row(u as usize);
+            indices.extend_from_slice(idx);
+            data.extend_from_slice(w);
+            indptr.push(indices.len());
+        }
+        CsrMatrix::from_raw(indptr, indices, data, db.ncols())
     }
 
     /// Per-pair fallback: score the query against every row through the
@@ -638,6 +780,43 @@ mod tests {
         let rl = loose.batch(&eng, Method::Sinkhorn).distances(&q).unwrap();
         let rt = tight.batch(&eng, Method::Sinkhorn).distances(&q).unwrap();
         assert_ne!(rl, rt, "custom SinkhornParams must flow through batch objects");
+    }
+
+    #[test]
+    fn subset_distances_match_full_sweep_bit_exactly() {
+        let ds = std::sync::Arc::new(tiny_dataset(9, 12, 30, 4, 5));
+        let eng = LcEngine::new(
+            std::sync::Arc::clone(&ds),
+            EngineParams { threads: 2, batch_block: 2, ..Default::default() },
+        );
+        let queries: Vec<Histogram> = (0..3).map(|u| ds.histogram(u)).collect();
+        let ids: Vec<u32> = vec![1, 4, 5, 9, 11];
+        let n = ds.len();
+        for method in [
+            Method::Rwmd,
+            Method::Omr,
+            Method::Act { k: 3 },
+            Method::Bow,
+            Method::Wcd,
+            Method::Ict,
+        ] {
+            let full = eng.distances_batch(&queries, method);
+            let sub = eng.distances_batch_subset(&queries, method, &ids);
+            assert_eq!(sub.len(), queries.len() * ids.len(), "{method}");
+            for qi in 0..queries.len() {
+                for (c, &u) in ids.iter().enumerate() {
+                    assert_eq!(
+                        sub[qi * ids.len() + c],
+                        full[qi * n + u as usize],
+                        "{method} query {qi} doc {u}"
+                    );
+                }
+            }
+        }
+        // full id range reproduces the whole matrix
+        let all: Vec<u32> = (0..n as u32).collect();
+        let full = eng.distances_batch(&queries, Method::Act { k: 2 });
+        assert_eq!(eng.distances_batch_subset(&queries, Method::Act { k: 2 }, &all), full);
     }
 
     #[test]

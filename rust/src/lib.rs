@@ -24,8 +24,10 @@
 //!   so every method serves through one interface.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); gated behind the `pjrt` feature.
+//! * [`index`] — IVF pruning index over document WCD centroids: sublinear
+//!   candidate selection in front of the LC engines (`EMDX` persistence).
 //! * [`coordinator`] — the serving layer: batching, sharding, cascades,
-//!   top-ℓ search.
+//!   index-pruned top-ℓ search.
 //! * [`builder`] — `EngineBuilder`, the one place configuration becomes
 //!   running engines.
 //! * [`data`] — synthetic MNIST-like / 20News-like dataset generators.
@@ -39,6 +41,7 @@ pub mod core;
 pub mod data;
 pub mod eval;
 pub mod exact;
+pub mod index;
 pub mod lc;
 pub mod runtime;
 pub mod util;
@@ -47,13 +50,14 @@ pub mod util;
 /// engine, and run searches.
 pub mod prelude {
     pub use crate::builder::EngineBuilder;
-    pub use crate::config::{Backend, Config, DatasetSpec};
+    pub use crate::config::{Backend, Config, DatasetSpec, IndexParams};
     pub use crate::coordinator::{
-        cascade_search, CascadeResult, SearchEngine, SearchResult, Server,
+        cascade_search, cascade_search_pruned, CascadeResult, SearchEngine, SearchResult, Server,
     };
     pub use crate::core::{
         BatchDistance, Dataset, Distance, EmdError, EmdResult, Embeddings, Histogram, Method,
         MethodRegistry, Metric, METHOD_SYNTAX,
     };
+    pub use crate::index::{pruned_search, pruned_search_batch, IvfIndex, PrunedSearch};
     pub use crate::lc::{BatchPlanner, EngineParams, LcBatch, LcEngine, PlanScratch};
 }

@@ -4,6 +4,7 @@
 //! * `datasets`        generate / persist / inspect datasets (Table 4)
 //! * `search`          one query against a dataset, print top-ℓ
 //! * `cascade`         two-stage search: RWMD prefilter + tighter rerank
+//! * `index`           build / inspect / query the IVF pruning index
 //! * `eval`            reproduce the paper's accuracy tables (5, 6) & sweeps
 //! * `serve`           run the TCP search server
 //! * `artifacts-check` compile every artifact and cross-check PJRT vs native
@@ -36,6 +37,7 @@ fn main() {
         "datasets" => cmd_datasets(rest),
         "search" => cmd_search(rest),
         "cascade" => cmd_cascade(rest),
+        "index" => cmd_index(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
         "artifacts-check" => cmd_artifacts_check(rest),
@@ -59,6 +61,7 @@ fn print_help() {
          \x20 datasets         generate/persist/inspect datasets (--help)\n\
          \x20 search           top-ℓ query against a dataset (--help)\n\
          \x20 cascade          RWMD prefilter + tighter rerank search (--help)\n\
+         \x20 index            build / inspect / query the IVF pruning index (--help)\n\
          \x20 eval             reproduce accuracy tables / sweeps (--help)\n\
          \x20 serve            run the TCP search server (--help)\n\
          \x20 artifacts-check  compile artifacts, verify PJRT == native\n"
@@ -72,6 +75,12 @@ fn common_opts(spec: CommandSpec) -> CommandSpec {
         .opt("threads", "", "worker threads")
         .opt("backend", "", "native | artifact")
         .opt("topl", "", "results per query")
+        .opt("nlist", "", "enable the IVF pruning index with this many lists (0 disables)")
+        .opt(
+            "nprobe",
+            "",
+            "index lists probed per query (needs --nlist or a config index; >= nlist: exhaustive)",
+        )
 }
 
 fn build_config(parsed: &emdpar::util::cli::Parsed) -> EmdResult<Config> {
@@ -212,6 +221,166 @@ fn cmd_cascade(args: &[String]) -> EmdResult<()> {
         );
     }
     Ok(())
+}
+
+fn cmd_index(args: &[String]) -> EmdResult<()> {
+    use emdpar::index::{
+        dataset_fingerprint, load_index, load_index_for, pruned_search, save_index, sidecar_path,
+        IvfIndex,
+    };
+    use emdpar::prelude::IndexParams;
+
+    let spec = CommandSpec::new("index", "build / inspect / query the IVF pruning index")
+        .opt("op", "build", "build | info | search")
+        .opt("dataset", "synth-text:1000", "dataset: <file.bin> | synth-mnist[:n] | synth-text[:n]")
+        .opt("config", "", "JSON config file (CLI flags override it)")
+        .opt("threads", "", "worker threads")
+        .opt("file", "", "EMDX index file (default: <dataset>.emdx for file datasets)")
+        .opt("nlist", "64", "inverted lists to train")
+        .opt("nprobe", "8", "lists to probe (search)")
+        .opt("train-iters", "10", "Lloyd iterations")
+        .opt("seed", "42", "k-means++ seed")
+        .opt("min-points", "2", "minimum points per list (caps nlist)")
+        .opt("method", "", METHOD_SYNTAX)
+        .opt("topl", "", "results per query (search)")
+        .opt("id", "0", "query by database row id (search)");
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage("emdpar"));
+        return Ok(());
+    }
+    let p = spec.parse(args)?;
+    let op = p.str("op").to_string();
+
+    // the explicit --file, else the dataset's sidecar path
+    let index_file = |cfg: &Config| -> Option<std::path::PathBuf> {
+        match p.opt_str("file") {
+            Some(f) if !f.is_empty() => Some(std::path::PathBuf::from(f)),
+            _ => match &cfg.dataset {
+                emdpar::prelude::DatasetSpec::File(path) => Some(sidecar_path(path)),
+                _ => None,
+            },
+        }
+    };
+
+    if op == "info" {
+        // info only needs the file; a dataset (if given as a file) verifies
+        // the fingerprint
+        let cfg = build_config(&p)?;
+        let file = index_file(&cfg)
+            .ok_or_else(|| EmdError::config("index info needs --file (or a file dataset)"))?;
+        let ix = load_index(&file)?;
+        let sizes = ix.list_sizes();
+        println!(
+            "{file:?}: {} lists over {} docs (dim {}), fingerprint {:#018x}",
+            ix.nlist(),
+            ix.num_points(),
+            ix.dim(),
+            ix.fingerprint()
+        );
+        println!(
+            "list sizes: min {} / mean {:.1} / max {}",
+            sizes.iter().copied().min().unwrap_or(0),
+            ix.num_points() as f64 / ix.nlist() as f64,
+            sizes.iter().copied().max().unwrap_or(0)
+        );
+        if matches!(&cfg.dataset, emdpar::prelude::DatasetSpec::File(_)) {
+            let ds = cfg.load_dataset()?;
+            let fp = dataset_fingerprint(&ds);
+            println!(
+                "dataset fingerprint {fp:#018x}: {}",
+                if fp == ix.fingerprint() { "MATCH" } else { "STALE — rebuild" }
+            );
+        }
+        return Ok(());
+    }
+
+    let cfg = build_config(&p)?;
+    let ds = std::sync::Arc::new(cfg.load_dataset()?);
+    let fp = dataset_fingerprint(&ds);
+    let engine: LcEngine =
+        EngineBuilder::from_config(cfg.clone()).dataset(std::sync::Arc::clone(&ds)).build_lc()?;
+    let params = IndexParams {
+        nlist: p.usize("nlist")?.max(1),
+        nprobe: p.usize("nprobe")?.max(1),
+        train_iters: p.usize("train-iters")?.max(1),
+        seed: p.usize("seed")? as u64,
+        min_points_per_list: p.usize("min-points")?.max(1),
+    };
+
+    match op.as_str() {
+        "build" => {
+            let ix = IvfIndex::train(
+                engine.wcd_centroids(),
+                ds.embeddings.dim(),
+                &params,
+                cfg.threads,
+                fp,
+            )?;
+            let sizes = ix.list_sizes();
+            println!(
+                "trained {} lists over {} docs (requested nlist {}, min/mean/max list {} / {:.1} / {})",
+                ix.nlist(),
+                ix.num_points(),
+                params.nlist,
+                sizes.iter().copied().min().unwrap_or(0),
+                ix.num_points() as f64 / ix.nlist() as f64,
+                sizes.iter().copied().max().unwrap_or(0)
+            );
+            match index_file(&cfg) {
+                Some(file) => {
+                    save_index(&ix, &file)?;
+                    println!("wrote {file:?}");
+                }
+                None => println!(
+                    "synthetic dataset: pass --file to persist the index (nothing written)"
+                ),
+            }
+            Ok(())
+        }
+        "search" => {
+            let ix = match index_file(&cfg) {
+                Some(file) if file.exists() => {
+                    let ix = load_index_for(&file, fp)?;
+                    println!("loaded {file:?}");
+                    ix
+                }
+                _ => {
+                    println!("no index file; training in memory");
+                    IvfIndex::train(
+                        engine.wcd_centroids(),
+                        ds.embeddings.dim(),
+                        &params,
+                        cfg.threads,
+                        fp,
+                    )?
+                }
+            };
+            let id = p.usize("id")?;
+            emdpar::emd_ensure!(id < ds.len(), "--id out of range");
+            let query = ds.histogram(id);
+            let method = cfg.method;
+            let l = cfg.topl;
+            let res = pruned_search(&engine, &ix, &query, method, l, params.nprobe)?;
+            println!(
+                "query id={id} via {} — top-{l} over {} candidates ({} of {} lists probed, \
+                 {:.1}% of the database pruned):",
+                method.name(),
+                res.candidates,
+                res.lists_probed,
+                ix.nlist(),
+                100.0 * (1.0 - res.candidates as f64 / ds.len() as f64)
+            );
+            for (rank, &(d, hit)) in res.hits.iter().enumerate() {
+                println!(
+                    "  #{:<3} id={hit:<6} label={:<4} distance={d:.6}",
+                    rank + 1,
+                    ds.labels[hit]
+                );
+            }
+            Ok(())
+        }
+        other => Err(EmdError::parse("index op", other, "build | info | search")),
+    }
 }
 
 fn cmd_eval(args: &[String]) -> EmdResult<()> {

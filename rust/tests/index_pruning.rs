@@ -1,0 +1,251 @@
+//! IVF pruning-index integration tests (ISSUE 3 acceptance):
+//!
+//! * pruned search with `nprobe = nlist` is **bit-identical** to exhaustive
+//!   `search_batch` for every LC method;
+//! * on the synthetic text workload some swept `nprobe` reaches
+//!   recall@ℓ >= 0.95 while scoring <= 25% of the database;
+//! * `EMDX` persistence round-trips bit-exactly and a stale dataset
+//!   fingerprint is rejected at load.
+
+use std::sync::Arc;
+
+use emdpar::config::{Config, DatasetSpec, IndexParams};
+use emdpar::coordinator::SearchEngine;
+use emdpar::core::{Dataset, Method};
+use emdpar::data::{generate_text, TextConfig};
+use emdpar::eval::recall_at;
+use emdpar::index::{
+    dataset_fingerprint, load_index, load_index_for, pruned_search, pruned_search_batch,
+    save_index, IvfIndex,
+};
+use emdpar::lc::{EngineParams, LcEngine};
+
+const THREADS: usize = 2;
+
+fn dataset() -> Arc<Dataset> {
+    Arc::new(generate_text(&TextConfig {
+        n: 240,
+        classes: 4,
+        vocab: 600,
+        dim: 16,
+        doc_len: 40,
+        seed: 77,
+        ..Default::default()
+    }))
+}
+
+fn lc_engine(ds: &Arc<Dataset>) -> LcEngine {
+    LcEngine::new(Arc::clone(ds), EngineParams { threads: THREADS, ..Default::default() })
+}
+
+fn train(eng: &LcEngine, nlist: usize) -> IvfIndex {
+    IvfIndex::train(
+        eng.wcd_centroids(),
+        eng.dataset().embeddings.dim(),
+        &IndexParams { nlist, nprobe: 1, train_iters: 8, seed: 5, min_points_per_list: 1 },
+        THREADS,
+        dataset_fingerprint(eng.dataset()),
+    )
+    .unwrap()
+}
+
+fn search_engine(ds: &Arc<Dataset>) -> SearchEngine {
+    // config dataset spec is ignored by with_dataset; params must match
+    // lc_engine's (same threads, default symmetric/batch_block) so the two
+    // paths are comparable bit-for-bit
+    let config = Config { threads: THREADS, ..Default::default() };
+    SearchEngine::with_dataset(config, Arc::clone(ds)).unwrap()
+}
+
+#[test]
+fn full_probe_is_bit_identical_to_exhaustive_search_batch() {
+    let ds = dataset();
+    let eng = lc_engine(&ds);
+    let se = search_engine(&ds);
+    let queries: Vec<_> = [0usize, 17, 101, 239].iter().map(|&u| ds.histogram(u)).collect();
+    for nlist in [8usize, 16] {
+        let ix = train(&eng, nlist);
+        let methods = [
+            Method::Rwmd,
+            Method::Omr,
+            Method::Act { k: 2 },
+            Method::Act { k: 4 },
+            Method::Bow,
+            Method::Wcd,
+        ];
+        for method in methods {
+            let exhaustive = se.search_batch(&queries, method, 10).unwrap();
+            let pruned =
+                pruned_search_batch(&eng, &ix, &queries, method, 10, ix.nlist()).unwrap();
+            for (ex, pr) in exhaustive.iter().zip(&pruned) {
+                assert_eq!(ex.hits, pr.hits, "nlist {nlist} {method}");
+                assert_eq!(pr.candidates, ds.len(), "full probe must scan everything");
+            }
+        }
+    }
+}
+
+#[test]
+fn recall_sweep_meets_target_at_low_candidate_fraction() {
+    // a strongly clustered corpus — the regime an IVF index exists for:
+    // documents are dominated by their own topic's words, so WCD centroids
+    // cluster tightly by class and the exhaustive top-ℓ is class-local
+    let ds = Arc::new(generate_text(&TextConfig {
+        n: 240,
+        classes: 6,
+        vocab: 600,
+        dim: 16,
+        doc_len: 60,
+        topic_frac: 0.8,
+        general_frac: 0.1,
+        spread: 0.25,
+        seed: 131,
+        ..Default::default()
+    }));
+    let n = ds.len();
+    let eng = lc_engine(&ds);
+    let se = search_engine(&ds);
+    let method = Method::Act { k: 2 };
+    let l = 10;
+    // step 11 is coprime with 6 classes (labels are i % classes), so the
+    // query set covers every class
+    let queries: Vec<_> = (0..21).map(|i| ds.histogram(i * 11)).collect();
+    let truth: Vec<Vec<usize>> = se
+        .search_batch(&queries, method, l)
+        .unwrap()
+        .into_iter()
+        .map(|r| r.hits.into_iter().map(|(_, id)| id).collect())
+        .collect();
+
+    let mut best_cheap_recall = 0.0f64; // best recall among <= 25% sweeps
+    let mut swept = Vec::new();
+    for nlist in [8usize, 12, 16, 24] {
+        let ix = train(&eng, nlist);
+        for &nprobe in &[1usize, 2, 3, 4, 6, 8, 12, 16, 24] {
+            if nprobe > ix.nlist() {
+                continue;
+            }
+            let pruned =
+                pruned_search_batch(&eng, &ix, &queries, method, l, nprobe).unwrap();
+            let mut recall = 0.0f64;
+            let mut frac = 0.0f64;
+            for (t, pr) in truth.iter().zip(&pruned) {
+                let got: Vec<usize> = pr.hits.iter().map(|&(_, id)| id).collect();
+                recall += recall_at(t, &got);
+                frac += pr.candidates as f64 / n as f64;
+            }
+            recall /= queries.len() as f64;
+            frac /= queries.len() as f64;
+            swept.push((nlist, nprobe, frac, recall));
+            if nprobe == ix.nlist() {
+                assert!(
+                    (recall - 1.0).abs() < 1e-12,
+                    "nprobe = nlist must be exhaustive (nlist {nlist}: recall {recall})"
+                );
+            }
+            if frac <= 0.25 && recall > best_cheap_recall {
+                best_cheap_recall = recall;
+            }
+        }
+    }
+    assert!(
+        best_cheap_recall >= 0.95,
+        "no swept (nlist, nprobe) reached recall@{l} >= 0.95 at <= 25% candidates: {swept:?}"
+    );
+}
+
+#[test]
+fn batch_pruned_search_equals_single_query() {
+    let ds = dataset();
+    let eng = lc_engine(&ds);
+    let ix = train(&eng, 12);
+    let queries: Vec<_> = [3usize, 50, 51, 200].iter().map(|&u| ds.histogram(u)).collect();
+    for method in [Method::Rwmd, Method::Act { k: 3 }] {
+        let batch = pruned_search_batch(&eng, &ix, &queries, method, 6, 3).unwrap();
+        for (q, got) in queries.iter().zip(&batch) {
+            let single = pruned_search(&eng, &ix, q, method, 6, 3).unwrap();
+            assert_eq!(got.hits, single.hits, "{method}");
+            assert_eq!(got.candidates, single.candidates, "{method}");
+        }
+    }
+}
+
+#[test]
+fn persistence_roundtrip_bit_exact_and_stale_rejected() {
+    let ds = dataset();
+    let eng = lc_engine(&ds);
+    let ix = train(&eng, 10);
+    let dir = std::env::temp_dir().join("emdpar_index_pruning_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("text240.emdx");
+    save_index(&ix, &path).unwrap();
+
+    // bit-exact round trip
+    let back = load_index(&path).unwrap();
+    assert_eq!(back, ix);
+
+    // the loaded index routes queries identically
+    let q = ds.histogram(9);
+    let a = pruned_search(&eng, &ix, &q, Method::Rwmd, 5, 3).unwrap();
+    let b = pruned_search(&eng, &back, &q, Method::Rwmd, 5, 3).unwrap();
+    assert_eq!(a.hits, b.hits);
+
+    // matching fingerprint loads; any other dataset is rejected as stale
+    let fp = dataset_fingerprint(&ds);
+    assert!(load_index_for(&path, fp).is_ok());
+    let err = load_index_for(&path, fp.wrapping_add(1)).unwrap_err();
+    assert!(err.to_string().contains("stale index"), "{err}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn search_engine_integration_routes_and_reports() {
+    let ds = dataset();
+    let config = Config {
+        dataset: DatasetSpec::SynthText { n: 240, vocab: 600, dim: 16, seed: 77 },
+        threads: THREADS,
+        index: Some(IndexParams {
+            nlist: 12,
+            nprobe: 3,
+            train_iters: 8,
+            seed: 5,
+            min_points_per_list: 1,
+        }),
+        ..Default::default()
+    };
+    let se = SearchEngine::with_dataset(config, Arc::clone(&ds)).unwrap();
+    let plain = search_engine(&ds);
+
+    let q = ds.histogram(30);
+    // default route prunes: fewer candidates scored than the database size
+    let pruned = se.search(&q, Method::Act { k: 2 }, 8).unwrap();
+    assert_eq!(pruned.hits.len(), 8);
+    assert_eq!(pruned.hits[0].1, 30, "self hit survives pruning");
+    let m = se.metrics();
+    assert!(m.pruned_fraction() > 0.0);
+    assert!(
+        m.candidates_scored.load(std::sync::atomic::Ordering::Relaxed) < ds.len() as u64
+    );
+
+    // per-request exhaustive override matches the plain engine bit-for-bit
+    let a = se.search_opts(&q, Method::Act { k: 2 }, 8, Some(12)).unwrap();
+    let b = plain.search(&q, Method::Act { k: 2 }, 8).unwrap();
+    assert_eq!(a.hits, b.hits);
+
+    // min_points_per_list caps an oversized nlist at train time
+    let capped = IvfIndex::train(
+        plain.native().wcd_centroids(),
+        ds.embeddings.dim(),
+        &IndexParams {
+            nlist: 10_000,
+            nprobe: 1,
+            train_iters: 4,
+            seed: 1,
+            min_points_per_list: 10,
+        },
+        THREADS,
+        0,
+    )
+    .unwrap();
+    assert!(capped.nlist() <= 24, "nlist {} not capped", capped.nlist());
+}
