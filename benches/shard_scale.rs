@@ -1,0 +1,189 @@
+//! Sharded-corpus scale sweep: recall@ℓ vs candidate fraction vs merge
+//! overhead vs append throughput, across shard counts.
+//!
+//! Emits machine-readable `BENCH_shard.json` in the working directory (the
+//! repo root under `cargo bench`), the fan-out companion of
+//! `BENCH_phase1.json` / `BENCH_ivf.json`.
+//!
+//! Run: `cargo bench --bench shard_scale` (EMDPAR_BENCH_FULL=1 for the
+//! bigger workload).  EMDPAR_SHARD_MIN_RECALL enforces a recall floor on
+//! the best sweep point that scored at most half the corpus.
+
+use std::io::Write;
+use std::sync::Arc;
+
+use emdpar::config::{IndexParams, ShardParams};
+use emdpar::coordinator::TopL;
+use emdpar::data::{generate_text, TextConfig};
+use emdpar::eval::recall_at;
+use emdpar::prelude::{EngineParams, Histogram, LcEngine, Method};
+use emdpar::shard::{search_batch, ShardedCorpus};
+use emdpar::util::json::Json;
+use emdpar::util::stats::timed;
+
+fn main() {
+    let full = std::env::var("EMDPAR_BENCH_FULL").is_ok();
+    let (n, v, m, doc_len, nq, nlist, append_n) =
+        if full { (8000, 8000, 64, 60, 64, 32, 512) } else { (1500, 2000, 32, 40, 24, 16, 128) };
+    let method = Method::Act { k: 2 };
+    let l = 10;
+    let threads = emdpar::util::threadpool::default_threads();
+
+    println!("# Sharded corpus: recall@{l} vs candidate fraction vs merge overhead");
+    println!(
+        "# n={n} v={v} m={m} doc_len={doc_len} queries={nq} per-shard nlist={nlist} \
+         threads={threads}\n"
+    );
+
+    let ds = Arc::new(generate_text(&TextConfig {
+        n,
+        vocab: v,
+        dim: m,
+        doc_len,
+        topic_frac: 0.75,
+        spread: 0.3,
+        seed: 31,
+        ..Default::default()
+    }));
+    let ep = EngineParams { threads, symmetric: false, ..Default::default() };
+    let eng = LcEngine::new(Arc::clone(&ds), ep);
+    let queries: Vec<Histogram> = (0..nq).map(|i| ds.histogram(i * n / nq)).collect();
+
+    // monolithic exhaustive truth + baseline timing
+    let (flat, t_exh) = timed(|| eng.distances_batch(&queries, method));
+    let truth: Vec<Vec<usize>> = (0..nq)
+        .map(|qi| {
+            let row = &flat[qi * n..(qi + 1) * n];
+            let mut top = TopL::new(l);
+            top.push_slice(row, 0);
+            top.into_sorted().into_iter().map(|(_, id)| id).collect()
+        })
+        .collect();
+    let exh_qps = nq as f64 / t_exh.as_secs_f64();
+    println!("monolithic exhaustive: {exh_qps:.1} queries/s ({n} docs scored per query)\n");
+
+    let append_docs: Vec<Histogram> = (0..append_n).map(|i| ds.histogram(i % n)).collect();
+    let append_labels: Vec<u16> = (0..append_n as u16).collect();
+
+    let ixp =
+        IndexParams { nlist, nprobe: 1, train_iters: 10, seed: 7, min_points_per_list: 2 };
+    let mut shard_rows = Vec::new();
+    let mut best_cheap_recall = 0.0f64;
+    for shards in [1usize, 2, 4, 8] {
+        let (corpus, t_build) = timed(|| {
+            ShardedCorpus::build(
+                &ds,
+                ShardParams { shards, max_docs_per_shard: usize::MAX >> 1 },
+                ep,
+                Some(&ixp),
+            )
+            .unwrap()
+        });
+        println!(
+            "S={shards}: built {} shards in {:.2}s (per-shard nlist <= {nlist})",
+            corpus.num_shards(),
+            t_build.as_secs_f64()
+        );
+        println!(
+            "{:>8} {:>10} {:>10} {:>10} {:>11} {:>10}",
+            "nprobe", "cand_frac", "recall", "qps", "merge_frac", "speedup"
+        );
+        let max_np = corpus.max_nlist().unwrap_or(1);
+        let mut sweep = Vec::new();
+        for &nprobe in &[1usize, 2, 4, 8, 16, 32] {
+            if nprobe > max_np {
+                continue;
+            }
+            let (batch, t) =
+                timed(|| search_batch(&corpus, &queries, method, l, Some(nprobe)).unwrap());
+            let mut recall = 0.0f64;
+            let mut frac = 0.0f64;
+            for (t_ids, r) in truth.iter().zip(&batch.results) {
+                let got: Vec<usize> = r.hits.iter().map(|&(_, id)| id).collect();
+                recall += recall_at(t_ids, &got);
+                frac += r.candidates as f64 / n as f64;
+            }
+            recall /= nq as f64;
+            frac /= nq as f64;
+            let qps = nq as f64 / t.as_secs_f64();
+            let merge_frac = batch.merge_time.as_secs_f64() / t.as_secs_f64().max(1e-12);
+            let speedup = t_exh.as_secs_f64() / t.as_secs_f64();
+            println!(
+                "{nprobe:>8} {frac:>10.3} {recall:>10.3} {qps:>10.1} {merge_frac:>11.4} {speedup:>9.2}x"
+            );
+            if frac <= 0.5 && recall > best_cheap_recall {
+                best_cheap_recall = recall;
+            }
+            sweep.push(Json::obj(vec![
+                ("nprobe", nprobe.into()),
+                ("candidate_fraction", frac.into()),
+                ("recall", recall.into()),
+                ("queries_per_s", qps.into()),
+                ("merge_fraction", merge_frac.into()),
+                ("speedup_vs_exhaustive", speedup.into()),
+            ]));
+        }
+        // append throughput: trained-once / assign-incrementally path
+        let mut live = corpus.clone();
+        let (outcome, t_append) = timed(|| live.append(&append_docs, &append_labels).unwrap());
+        let append_dps = append_n as f64 / t_append.as_secs_f64();
+        println!(
+            "append: {append_n} docs in {:.3}s ({append_dps:.0} docs/s, {} shard(s) touched)\n",
+            t_append.as_secs_f64(),
+            outcome.touched.len()
+        );
+        shard_rows.push(Json::obj(vec![
+            ("shards", shards.into()),
+            ("build_seconds", t_build.as_secs_f64().into()),
+            ("append_docs_per_s", append_dps.into()),
+            ("sweep", Json::Arr(sweep)),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", "shard_scale".into()),
+        ("status", "measured".into()),
+        (
+            "workload",
+            Json::obj(vec![
+                ("n", n.into()),
+                ("v", v.into()),
+                ("m", m.into()),
+                ("doc_len", doc_len.into()),
+                ("queries", nq.into()),
+                ("per_shard_nlist", nlist.into()),
+                ("append_docs", append_n.into()),
+                ("method", method.name().into()),
+                ("l", l.into()),
+                ("threads", threads.into()),
+                ("full", full.into()),
+            ]),
+        ),
+        ("exhaustive_queries_per_s", exh_qps.into()),
+        ("shards", Json::Arr(shard_rows)),
+        ("regenerate_with", "cargo bench --bench shard_scale".into()),
+    ]);
+    let path = "BENCH_shard.json";
+    match std::fs::File::create(path)
+        .and_then(|mut f| writeln!(f, "{}", json.to_string_pretty()))
+    {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    // CI floor: a broken fan-out (zero recall or no pruning win) fails the
+    // push; shared-runner timing noise does not move recall
+    if let Ok(s) = std::env::var("EMDPAR_SHARD_MIN_RECALL") {
+        if let Ok(min) = s.parse::<f64>() {
+            if best_cheap_recall < min {
+                eprintln!(
+                    "FAIL: best cheap recall {best_cheap_recall:.3} below required {min:.3}"
+                );
+                std::process::exit(1);
+            }
+            println!(
+                "best cheap recall {best_cheap_recall:.3} meets the required {min:.3} floor"
+            );
+        }
+    }
+}

@@ -24,7 +24,7 @@
 
 use std::sync::Arc;
 
-use crate::config::{Backend, Config, DatasetSpec, IndexParams};
+use crate::config::{Backend, Config, DatasetSpec, IndexParams, ShardParams};
 use crate::core::{Dataset, EmdResult, Method, MethodRegistry, Metric};
 use crate::coordinator::SearchEngine;
 use crate::lc::{EngineParams, LcEngine};
@@ -104,8 +104,20 @@ impl EngineBuilder {
         self
     }
 
+    /// Merge fan-out of the monolithic engine's shard router (rank-time
+    /// granularity only; see [`EngineBuilder::sharded`] for the live
+    /// sharded corpus).
     pub fn shards(mut self, shards: usize) -> EngineBuilder {
         self.config.shards = shards.max(1);
+        self
+    }
+
+    /// Split the corpus into a sharded live corpus: per-shard engines (+
+    /// per-shard IVF when [`EngineBuilder::index`] is also set) behind a
+    /// fan-out / top-ℓ-merge route, appendable at runtime through
+    /// [`crate::coordinator::SearchEngine::add_docs`].  See `crate::shard`.
+    pub fn sharded(mut self, params: ShardParams) -> EngineBuilder {
+        self.config.sharded = Some(params);
         self
     }
 

@@ -56,6 +56,28 @@ impl Default for IndexParams {
     }
 }
 
+/// Sharded live-corpus configuration: split the database into per-shard
+/// engines (+ optional per-shard IVF indexes, trained shard-locally from
+/// [`Config::index`]) that answer queries through a fan-out / top-ℓ-merge
+/// route and accept appended documents at runtime (see DESIGN.md "Sharded
+/// corpus & live ingestion").  `None` in [`Config::sharded`] keeps the
+/// single monolithic corpus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardParams {
+    /// Shards to split the corpus into at build time.
+    pub shards: usize,
+    /// Append policy: a batch lands in the smallest shard until every shard
+    /// holds at least this many documents, after which a fresh shard is
+    /// opened.
+    pub max_docs_per_shard: usize,
+}
+
+impl Default for ShardParams {
+    fn default() -> Self {
+        ShardParams { shards: 4, max_docs_per_shard: 1 << 20 }
+    }
+}
+
 /// Dataset source.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DatasetSpec {
@@ -90,8 +112,13 @@ pub struct Config {
     pub linger_ms: u64,
     /// number of database shards for the router
     pub shards: usize,
-    /// IVF pruning index in front of the native engine (None = exhaustive)
+    /// IVF pruning index in front of the native engine (None = exhaustive).
+    /// With [`Config::sharded`] set these become the *per-shard* index
+    /// parameters (each shard trains its own coarse quantizer).
     pub index: Option<IndexParams>,
+    /// sharded live corpus: per-shard engines + IVF, appendable at runtime
+    /// (None = single monolithic corpus)
+    pub sharded: Option<ShardParams>,
 }
 
 impl Default for Config {
@@ -112,6 +139,7 @@ impl Default for Config {
             linger_ms: 2,
             shards: 4,
             index: None,
+            sharded: None,
         }
     }
 }
@@ -173,6 +201,9 @@ impl Config {
         }
         if let Some(j) = json.get("index") {
             cfg.index = Some(parse_index(j)?);
+        }
+        if let Some(j) = json.get("shard") {
+            cfg.sharded = Some(parse_shard(j)?);
         }
         cfg.validate()?;
         Ok(cfg)
@@ -269,6 +300,19 @@ impl Config {
                 "index min_points_per_list must be >= 1"
             );
         }
+        if let Some(sp) = &self.sharded {
+            emd_ensure!(sp.shards >= 1, config, "shard count must be >= 1");
+            emd_ensure!(
+                sp.max_docs_per_shard >= 1,
+                config,
+                "shard max_docs_per_shard must be >= 1"
+            );
+            emd_ensure!(
+                self.backend == Backend::Native,
+                config,
+                "the sharded live corpus requires the native backend"
+            );
+        }
         Ok(())
     }
 
@@ -313,6 +357,17 @@ fn parse_index(j: &Json) -> EmdResult<IndexParams> {
     }
     if let Some(x) = j.get("min_points_per_list").and_then(Json::as_usize) {
         p.min_points_per_list = x;
+    }
+    Ok(p)
+}
+
+fn parse_shard(j: &Json) -> EmdResult<ShardParams> {
+    let mut p = ShardParams::default();
+    if let Some(x) = j.get("shards").and_then(Json::as_usize) {
+        p.shards = x;
+    }
+    if let Some(x) = j.get("max_docs_per_shard").and_then(Json::as_usize) {
+        p.max_docs_per_shard = x;
     }
     Ok(p)
 }
@@ -478,6 +533,29 @@ mod tests {
         let mut cfg = Config { index: Some(IndexParams::default()), ..Default::default() };
         cfg.apply_cli(&parse(&["--nprobe", "3"])).unwrap();
         assert_eq!(cfg.index.unwrap().nprobe, 3);
+    }
+
+    #[test]
+    fn shard_params_from_json_and_validation() {
+        let j = Json::parse(r#"{"shard": {"shards": 8, "max_docs_per_shard": 5000}}"#).unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(cfg.sharded, Some(ShardParams { shards: 8, max_docs_per_shard: 5000 }));
+        // partial objects fill from defaults
+        let j = Json::parse(r#"{"shard": {"shards": 2}}"#).unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(cfg.sharded.unwrap().shards, 2);
+        assert_eq!(
+            cfg.sharded.unwrap().max_docs_per_shard,
+            ShardParams::default().max_docs_per_shard
+        );
+        // zero shards rejected
+        let j = Json::parse(r#"{"shard": {"shards": 0}}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+        // the sharded corpus is a native-backend feature
+        let j = Json::parse(r#"{"shard": {"shards": 2}, "backend": "artifact"}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+        // no shard object -> monolithic corpus
+        assert_eq!(Config::default().sharded, None);
     }
 
     #[test]

@@ -4,16 +4,20 @@
 //! CLI and the examples all drive.  Construct it through
 //! [`crate::builder::EngineBuilder`] or from a [`Config`].
 
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
-use crate::config::{Backend, Config, DatasetSpec, IndexParams};
+use crate::config::{Backend, Config, DatasetSpec, IndexParams, ShardParams};
 use crate::core::{Dataset, EmdError, EmdResult, Histogram, Method, MethodRegistry};
+use crate::emd_ensure;
 use crate::index::{
     dataset_fingerprint, load_index_for, pruned_search_batch, sidecar_path, IvfIndex,
 };
 use crate::lc::{EngineParams, LcEngine};
 use crate::runtime::{ArtifactEngine, Executor};
+use crate::shard::{
+    load_manifest_for, reconstruct, save_manifest, AppendOutcome, ShardStat, ShardedCorpus,
+};
 
 use super::metrics::Metrics;
 use super::router::Router;
@@ -39,8 +43,13 @@ pub struct SearchEngine {
     native: Arc<LcEngine>,
     /// trained IVF pruning index (native backend with `config.index` set);
     /// loaded from the dataset's `EMDX` sidecar when one matches, trained
-    /// from the engine's WCD centroids otherwise
+    /// from the engine's WCD centroids otherwise.  `None` when the engine
+    /// is sharded — each shard owns its own index instead.
     index: Option<Arc<IvfIndex>>,
+    /// sharded live corpus (`config.sharded` on the native backend): the
+    /// fan-out route replaces the monolithic sweep and the corpus accepts
+    /// appended documents behind the write lock
+    sharded: Option<RwLock<ShardedCorpus>>,
     executor: Option<Executor>,
     artifact_profile: Option<String>,
 }
@@ -85,17 +94,22 @@ impl SearchEngine {
         } else {
             (None, None)
         };
-        let native = Arc::new(LcEngine::new(
-            Arc::clone(&dataset),
-            EngineParams {
-                metric: config.metric,
-                threads: config.threads,
-                symmetric: config.symmetric,
-                batch_block: config.batch_block,
-            },
-        ));
-        let index = match (&config.index, config.backend) {
-            (Some(params), Backend::Native) => {
+        let engine_params = EngineParams {
+            metric: config.metric,
+            threads: config.threads,
+            symmetric: config.symmetric,
+            batch_block: config.batch_block,
+        };
+        let native = Arc::new(LcEngine::new(Arc::clone(&dataset), engine_params));
+        let sharded = match (&config.sharded, config.backend) {
+            (Some(sp), Backend::Native) => {
+                Some(RwLock::new(Self::build_shards(&config, sp, &dataset, engine_params)?))
+            }
+            _ => None,
+        };
+        // a sharded engine trains per-shard indexes instead of one global one
+        let index = match (&config.index, config.backend, &sharded) {
+            (Some(params), Backend::Native, None) => {
                 Some(Arc::new(Self::build_index(&config, params, &dataset, &native)?))
             }
             _ => None,
@@ -107,9 +121,52 @@ impl SearchEngine {
             router,
             native,
             index,
+            sharded,
             executor,
             artifact_profile,
         })
+    }
+
+    /// Load the dataset's `EMDX` **v2** shard manifest when it exists and
+    /// matches the dataset's fingerprint (a restarted server reloads the
+    /// same live layout, including appended documents and per-shard
+    /// indexes); otherwise partition the dataset fresh from the config.
+    fn build_shards(
+        config: &Config,
+        sp: &ShardParams,
+        dataset: &Dataset,
+        engine_params: EngineParams,
+    ) -> EmdResult<ShardedCorpus> {
+        if let DatasetSpec::File(path) = &config.dataset {
+            let sidecar = sidecar_path(path);
+            if sidecar.exists() {
+                let fingerprint = dataset_fingerprint(dataset);
+                match load_manifest_for(&sidecar, fingerprint).and_then(|man| {
+                    reconstruct(
+                        dataset,
+                        &man,
+                        Some(sp.max_docs_per_shard),
+                        engine_params,
+                        config.index.as_ref(),
+                    )
+                }) {
+                    Ok(corpus) => {
+                        crate::log_info!(
+                            "shard",
+                            "loaded {:?}: {} shards over {} docs",
+                            sidecar,
+                            corpus.num_shards(),
+                            corpus.len()
+                        );
+                        return Ok(corpus);
+                    }
+                    Err(e) => {
+                        crate::log_info!("shard", "manifest {sidecar:?} rejected ({e}); rebuilding")
+                    }
+                }
+            }
+        }
+        ShardedCorpus::build(dataset, *sp, engine_params, config.index.as_ref())
     }
 
     /// Load the dataset's `EMDX` sidecar when it exists and matches the
@@ -151,8 +208,98 @@ impl SearchEngine {
         )
     }
 
+    /// The dataset the engine was *built* around.  A sharded engine's live
+    /// corpus can outgrow this snapshot through appends — serving paths
+    /// should use [`SearchEngine::num_docs`] / [`SearchEngine::doc_histogram`].
     pub fn dataset(&self) -> &Dataset {
         &self.dataset
+    }
+
+    /// Documents currently searchable (the live corpus size when sharded).
+    pub fn num_docs(&self) -> usize {
+        match &self.sharded {
+            Some(lock) => lock.read().unwrap().len(),
+            None => self.dataset.len(),
+        }
+    }
+
+    /// The histogram of document `id` in the live corpus.
+    pub fn doc_histogram(&self, id: usize) -> EmdResult<Histogram> {
+        match &self.sharded {
+            Some(lock) => {
+                let corpus = lock.read().unwrap();
+                emd_ensure!(
+                    id < corpus.len(),
+                    config,
+                    "doc id {id} out of range ({} docs)",
+                    corpus.len()
+                );
+                Ok(corpus.histogram(id))
+            }
+            None => {
+                emd_ensure!(
+                    id < self.dataset.len(),
+                    config,
+                    "doc id {id} out of range ({} docs)",
+                    self.dataset.len()
+                );
+                Ok(self.dataset.histogram(id))
+            }
+        }
+    }
+
+    /// Per-shard shape snapshot (`None` when the engine is not sharded).
+    pub fn shard_stats(&self) -> Option<Vec<ShardStat>> {
+        Some(self.sharded.as_ref()?.read().unwrap().shard_stats())
+    }
+
+    /// Append documents to the sharded live corpus: each lands in the
+    /// smallest shard (or a fresh shard past the configured size
+    /// threshold), joins that shard's already-trained IVF centroids without
+    /// retraining, and becomes immediately searchable.  File-backed
+    /// datasets are re-persisted (dataset + `EMDX` v2 manifest) so a
+    /// restarted server reloads the same live corpus.  `labels` may be
+    /// empty (label 0) or one per document.
+    ///
+    /// If persistence fails (e.g. disk full) the documents are **already
+    /// live in memory** — the returned error says so explicitly; do not
+    /// blindly retry the append (that would insert duplicates under new
+    /// ids), fix the disk and call [`SearchEngine::persist_shards`].
+    pub fn add_docs(&self, docs: &[Histogram], labels: &[u16]) -> EmdResult<AppendOutcome> {
+        let lock = self.sharded.as_ref().ok_or_else(|| {
+            EmdError::unsupported(
+                "add_docs requires a sharded corpus (set 'shard' in the config or \
+                 EngineBuilder::sharded)",
+            )
+        })?;
+        let outcome = lock.write().unwrap().append(docs, labels)?;
+        if let Err(e) = self.persist_shards() {
+            return Err(EmdError::io(format!(
+                "appended {} docs (ids {:?}) into the live corpus but persisting the \
+                 dataset/manifest failed: {e}; the documents ARE searchable in this \
+                 process — do not retry the append, repair the disk and re-persist",
+                outcome.ids.len(),
+                outcome.ids
+            )));
+        }
+        Ok(outcome)
+    }
+
+    /// Persist the sharded live corpus next to its file-backed dataset:
+    /// rewrite the `EMD1` dataset (appended documents included, existing
+    /// rows bit-exact) and the `EMDX` v2 shard manifest.  Returns `false`
+    /// when the engine is not sharded or the dataset is not file-backed
+    /// (nothing to persist to).
+    pub fn persist_shards(&self) -> EmdResult<bool> {
+        let (lock, path) = match (&self.sharded, &self.config.dataset) {
+            (Some(lock), DatasetSpec::File(path)) => (lock, path.clone()),
+            _ => return Ok(false),
+        };
+        let corpus = lock.read().unwrap();
+        let full = corpus.to_dataset(self.dataset.name.clone());
+        crate::data::save(&full, &path)?;
+        save_manifest(&corpus, dataset_fingerprint(&full), &sidecar_path(&path))?;
+        Ok(true)
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
@@ -180,6 +327,14 @@ impl SearchEngine {
     /// semantics — the server's batch-grouping key uses it too, so TCP
     /// clients and direct API callers always route identically.
     pub fn effective_nprobe(&self, nprobe: Option<usize>) -> Option<usize> {
+        if let Some(lock) = &self.sharded {
+            // sharded route: clamp against the widest shard's list count
+            // (each shard clamps further at probe time)
+            return lock
+                .read()
+                .unwrap()
+                .effective_nprobe(nprobe, self.config.index.as_ref().map(|p| p.nprobe));
+        }
         let index = self.index.as_deref()?;
         Some(
             nprobe
@@ -265,6 +420,11 @@ impl SearchEngine {
         l: usize,
         nprobe: Option<usize>,
     ) -> EmdResult<SearchResult> {
+        if self.sharded.is_some() {
+            let mut out =
+                self.search_batch_opts(std::slice::from_ref(query), method, l, nprobe)?;
+            return Ok(out.pop().expect("one query in, one result out"));
+        }
         if let Some((index, np)) = self.pruning_route(nprobe) {
             let t0 = Instant::now();
             let pruned = pruned_search_batch(
@@ -321,6 +481,32 @@ impl SearchEngine {
         match self.config.backend {
             Backend::Native => {
                 let t0 = Instant::now();
+                if let Some(lock) = &self.sharded {
+                    // fan-out route: probe each shard locally, score through
+                    // the bit-identical subset pipeline, k-way-merge top-ℓ
+                    let corpus = lock.read().unwrap();
+                    let batch =
+                        crate::shard::search_batch(&corpus, queries, method, l, nprobe)?;
+                    let n_live = corpus.len();
+                    drop(corpus);
+                    self.metrics.record_merge(batch.merge_time);
+                    let per_query = t0.elapsed() / queries.len() as u32;
+                    return Ok(batch
+                        .results
+                        .into_iter()
+                        .map(|r| {
+                            if r.pruned {
+                                self.metrics.record_probe(
+                                    r.lists_probed,
+                                    r.candidates,
+                                    n_live,
+                                );
+                            }
+                            self.metrics.record_query(per_query, r.candidates);
+                            SearchResult { hits: r.hits, labels: r.labels }
+                        })
+                        .collect());
+                }
                 let n = self.dataset.len();
                 let (results, evals): (Vec<SearchResult>, Vec<usize>) =
                     if let Some((index, np)) = self.pruning_route(nprobe) {
@@ -501,6 +687,59 @@ mod tests {
             let single = indexed.search_opts(q, Method::Act { k: 2 }, 4, Some(2)).unwrap();
             assert_eq!(got.hits, single.hits);
         }
+    }
+
+    #[test]
+    fn sharded_route_matches_monolithic_and_accepts_appends() {
+        let ds = Arc::new(
+            Config {
+                dataset: DatasetSpec::SynthText { n: 48, vocab: 220, dim: 8, seed: 21 },
+                ..Default::default()
+            }
+            .load_dataset()
+            .unwrap(),
+        );
+        let mono =
+            SearchEngine::with_dataset(Config { threads: 2, ..Default::default() }, Arc::clone(&ds))
+                .unwrap();
+        let sharded = SearchEngine::with_dataset(
+            Config {
+                threads: 2,
+                sharded: Some(ShardParams { shards: 3, max_docs_per_shard: 1 << 20 }),
+                ..Default::default()
+            },
+            Arc::clone(&ds),
+        )
+        .unwrap();
+        assert!(sharded.index().is_none(), "per-shard indexes replace the global one");
+        assert_eq!(sharded.num_docs(), 48);
+        let queries: Vec<_> = (0..3).map(|u| ds.histogram(u * 5)).collect();
+        for method in [Method::Rwmd, Method::Act { k: 2 }] {
+            let a = mono.search_batch(&queries, method, 6).unwrap();
+            let b = sharded.search_batch(&queries, method, 6).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.hits, y.hits, "{method}");
+                assert_eq!(x.labels, y.labels, "{method}");
+            }
+        }
+        // merge metrics tick on the fan-out route
+        assert!(
+            sharded.metrics().shard_batches.load(std::sync::atomic::Ordering::Relaxed) > 0
+        );
+        // appends are immediately searchable; the monolithic engine refuses.
+        // The appended doc's support is distinct from every generated doc,
+        // so only the doc itself reaches distance 0
+        let doc = Histogram::from_pairs(vec![(2, 0.7), (5, 0.3)]);
+        assert!(mono.add_docs(std::slice::from_ref(&doc), &[3]).is_err());
+        let out = sharded.add_docs(std::slice::from_ref(&doc), &[3]).unwrap();
+        assert_eq!(out.ids, vec![48]);
+        assert_eq!(sharded.num_docs(), 49);
+        let res = sharded
+            .search(&sharded.doc_histogram(48).unwrap(), Method::Rwmd, 4)
+            .unwrap();
+        assert_eq!(res.hits[0].1, 48, "an appended doc finds itself");
+        assert_eq!(res.labels[0], 3);
+        assert_eq!(sharded.shard_stats().unwrap().len(), 3);
     }
 
     #[test]

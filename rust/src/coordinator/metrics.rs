@@ -23,6 +23,11 @@ pub struct Metrics {
     /// What exhaustive search would have scored for the same queries
     /// (denominator of the pruned fraction).
     index_possible: AtomicU64,
+    /// Query batches answered by the sharded fan-out route.
+    pub shard_batches: AtomicU64,
+    /// Microseconds spent k-way-merging per-shard top-ℓ accumulators (the
+    /// fan-out overhead a monolithic corpus does not pay).
+    merge_sum_us: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -56,6 +61,18 @@ impl Metrics {
         self.lists_probed.fetch_add(lists as u64, Ordering::Relaxed);
         self.candidates_scored.fetch_add(candidates as u64, Ordering::Relaxed);
         self.index_possible.fetch_add(possible as u64, Ordering::Relaxed);
+    }
+
+    /// Record one sharded fan-out dispatch and its cross-shard merge time.
+    pub fn record_merge(&self, merge: Duration) {
+        self.shard_batches.fetch_add(1, Ordering::Relaxed);
+        let us = merge.as_micros().min(u128::from(u64::MAX)) as u64;
+        self.merge_sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Total microseconds spent in cross-shard top-ℓ merges.
+    pub fn merge_us(&self) -> u64 {
+        self.merge_sum_us.load(Ordering::Relaxed)
     }
 
     /// Fraction of the database index-routed queries did *not* score
@@ -120,6 +137,11 @@ impl Metrics {
                 (self.candidates_scored.load(Ordering::Relaxed) as usize).into(),
             ),
             ("pruned_fraction", self.pruned_fraction().into()),
+            (
+                "shard_batches",
+                (self.shard_batches.load(Ordering::Relaxed) as usize).into(),
+            ),
+            ("merge_us_total", (self.merge_us() as usize).into()),
             ("mean_latency_us", self.mean_latency_us().into()),
             ("p50_latency_us", (self.latency_percentile_us(0.5) as usize).into()),
             ("p95_latency_us", (self.latency_percentile_us(0.95) as usize).into()),
@@ -157,6 +179,19 @@ mod tests {
         assert_eq!(j.get("queries").and_then(Json::as_usize), Some(1));
         assert!(j.get("p95_latency_us").is_some());
         assert!(j.get("pruned_fraction").is_some());
+    }
+
+    #[test]
+    fn merge_counters_accumulate() {
+        let m = Metrics::new();
+        assert_eq!(m.merge_us(), 0);
+        m.record_merge(Duration::from_micros(40));
+        m.record_merge(Duration::from_micros(60));
+        assert_eq!(m.shard_batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.merge_us(), 100);
+        let j = m.to_json();
+        assert_eq!(j.get("shard_batches").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("merge_us_total").and_then(Json::as_usize), Some(100));
     }
 
     #[test]

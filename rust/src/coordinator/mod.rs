@@ -16,4 +16,4 @@ pub use engine::{SearchEngine, SearchResult};
 pub use metrics::Metrics;
 pub use router::Router;
 pub use server::Server;
-pub use topl::TopL;
+pub use topl::{merge_query_rows, TopL};

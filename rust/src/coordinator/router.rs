@@ -17,7 +17,13 @@ pub struct Router {
 
 impl Router {
     pub fn new(n: usize, shards: usize) -> Router {
-        let shards = shards.clamp(1, n.max(1));
+        if n == 0 {
+            // an empty database has zero shards, not one empty phantom
+            // shard — downstream fan-out loops iterate `shards()` and must
+            // see nothing to do
+            return Router { n: 0, boundaries: vec![0] };
+        }
+        let shards = shards.clamp(1, n);
         let base = n / shards;
         let extra = n % shards;
         let mut boundaries = Vec::with_capacity(shards + 1);
@@ -39,9 +45,7 @@ impl Router {
             pos = (pos + tile).min(n);
             boundaries.push(pos);
         }
-        if n == 0 {
-            boundaries.push(0);
-        }
+        // n == 0 keeps boundaries == [0]: zero shards, matching `new`
         Router { n, boundaries }
     }
 
@@ -107,5 +111,17 @@ mod tests {
         let r = Router::with_tile_alignment(10, 4);
         let ranges: Vec<_> = r.shards().collect();
         assert_eq!(ranges, vec![0..4, 4..8, 8..10]);
+    }
+
+    #[test]
+    fn empty_database_yields_zero_shards() {
+        // regression: boundaries [0, 0] used to report one phantom empty
+        // shard for an empty database
+        for r in [Router::new(0, 3), Router::with_tile_alignment(0, 4)] {
+            assert_eq!(r.num_shards(), 0, "{r:?}");
+            assert_eq!(r.shards().count(), 0);
+            assert_eq!(r.len(), 0);
+            assert!(r.is_empty());
+        }
     }
 }

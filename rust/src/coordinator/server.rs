@@ -5,13 +5,19 @@
 //! {"op": "search", "method": "act-1", "l": 5,
 //!  "query": [[vocab_idx, weight], ...]}
 //! {"op": "search_id", "method": "rwmd", "l": 5, "id": 17, "nprobe": 4}
+//! {"op": "add_docs", "docs": [[[vocab_idx, weight], ...], ...],
+//!  "labels": [0, 1]}
 //! {"op": "stats"}
 //! {"op": "ping"}
 //! ```
 //! `"nprobe"` is optional: with an IVF index configured it overrides the
 //! per-request probe width (`nprobe >= nlist` forces an exhaustive sweep);
-//! without an index it is ignored.  `{"op": "stats"}` reports the index
-//! shape plus pruning counters when an index is active.
+//! without an index it is ignored.  `{"op": "add_docs"}` appends documents
+//! to a sharded live corpus (`"labels"` optional, one per doc) and answers
+//! `{"ok": true, "added": k, "ids": [...], "opened_shards": o, "n": total}`;
+//! appended docs are immediately searchable.  `{"op": "stats"}` reports the
+//! index shape plus pruning counters when an index is active, and per-shard
+//! document counts / index shapes (`"shards"`) when the corpus is sharded.
 //! Response (one line): `{"ok": true, "hits": [[dist, id, label], ...]}` or
 //! `{"ok": false, "error": "..."}`.
 //!
@@ -152,6 +158,23 @@ impl Server {
     }
 }
 
+/// Parse one protocol histogram: an array of `[vocab_idx, weight]` pairs.
+fn parse_histogram(j: &Json) -> EmdResult<Histogram> {
+    let pairs =
+        j.as_arr().ok_or_else(|| EmdError::protocol("histogram must be [[idx, w], ...]"))?;
+    let mut entries = Vec::with_capacity(pairs.len());
+    for p in pairs {
+        let pair =
+            p.as_arr().ok_or_else(|| EmdError::protocol("histogram entries are [idx, w]"))?;
+        emd_ensure!(pair.len() == 2, protocol, "histogram entries are [idx, w]");
+        let idx =
+            pair[0].as_usize().ok_or_else(|| EmdError::protocol("bad vocab index"))? as u32;
+        let w = pair[1].as_f64().ok_or_else(|| EmdError::protocol("bad weight"))? as f32;
+        entries.push((idx, w));
+    }
+    Ok(Histogram::from_pairs(entries))
+}
+
 /// Serialize one search result as the protocol's success payload.
 fn search_result_json(res: &super::engine::SearchResult) -> Json {
     Json::Obj(
@@ -221,7 +244,28 @@ fn handle_request(
             let mut j = engine.metrics().to_json();
             if let Json::Obj(map) = &mut j {
                 map.insert("ok".into(), Json::Bool(true));
-                map.insert("n".into(), Json::Num(engine.dataset().len() as f64));
+                map.insert("n".into(), Json::Num(engine.num_docs() as f64));
+                if let Some(stats) = engine.shard_stats() {
+                    // per-shard doc counts + index shapes so operators can
+                    // see skew after appends
+                    map.insert(
+                        "shards".into(),
+                        Json::Arr(
+                            stats
+                                .iter()
+                                .map(|s| {
+                                    Json::obj(vec![
+                                        ("docs", s.docs.into()),
+                                        ("appended", s.appended.into()),
+                                        ("nlist", s.nlist.unwrap_or(0).into()),
+                                        ("min_list", s.min_list.into()),
+                                        ("max_list", s.max_list.into()),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    );
+                }
                 if let Some(ix) = engine.index() {
                     let sizes = ix.list_sizes();
                     map.insert(
@@ -253,6 +297,40 @@ fn handle_request(
             }
             Ok(j)
         }
+        "add_docs" => {
+            let docs_json = req
+                .get("docs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| EmdError::protocol("missing 'docs' (array of [[idx, w], ...])"))?;
+            emd_ensure!(!docs_json.is_empty(), protocol, "empty 'docs'");
+            let docs = docs_json
+                .iter()
+                .map(parse_histogram)
+                .collect::<EmdResult<Vec<Histogram>>>()?;
+            let labels = match req.get("labels").and_then(Json::as_arr) {
+                Some(arr) => {
+                    let mut out = Vec::with_capacity(arr.len());
+                    for a in arr {
+                        out.push(
+                            a.as_usize().ok_or_else(|| EmdError::protocol("bad label"))? as u16,
+                        );
+                    }
+                    out
+                }
+                None => Vec::new(),
+            };
+            let outcome = engine.add_docs(&docs, &labels)?;
+            Ok(Json::obj(vec![
+                ("ok", true.into()),
+                ("added", outcome.ids.len().into()),
+                (
+                    "ids",
+                    Json::Arr(outcome.ids.iter().map(|&g| Json::Num(g as f64)).collect()),
+                ),
+                ("opened_shards", outcome.opened.into()),
+                ("n", engine.num_docs().into()),
+            ]))
+        }
         "search" | "search_id" => {
             let method = match req.get("method").and_then(Json::as_str) {
                 Some(s) => Method::parse(s)?,
@@ -264,27 +342,13 @@ fn handle_request(
                 .unwrap_or(engine.config().topl)
                 .max(1);
             let query = if let Some(id) = req.get("id").and_then(Json::as_usize) {
-                emd_ensure!(id < engine.dataset().len(), protocol, "id {id} out of range");
-                engine.dataset().histogram(id)
+                emd_ensure!(id < engine.num_docs(), protocol, "id {id} out of range");
+                engine.doc_histogram(id)?
             } else {
-                let pairs = req
+                let q = req
                     .get("query")
-                    .and_then(Json::as_arr)
                     .ok_or_else(|| EmdError::protocol("missing 'query' (or 'id')"))?;
-                let mut entries = Vec::with_capacity(pairs.len());
-                for p in pairs {
-                    let pair = p
-                        .as_arr()
-                        .ok_or_else(|| EmdError::protocol("query entries are [idx, w]"))?;
-                    emd_ensure!(pair.len() == 2, protocol, "query entries are [idx, w]");
-                    let idx = pair[0]
-                        .as_usize()
-                        .ok_or_else(|| EmdError::protocol("bad vocab index"))? as u32;
-                    let w =
-                        pair[1].as_f64().ok_or_else(|| EmdError::protocol("bad weight"))? as f32;
-                    entries.push((idx, w));
-                }
-                Histogram::from_pairs(entries)
+                parse_histogram(q)?
             };
             emd_ensure!(!query.is_empty(), protocol, "empty query");
             // normalize to the effective probe width
@@ -455,6 +519,86 @@ mod tests {
         // exactly one of the two searches went through the pruned route
         assert_eq!(stats.get("index_queries").and_then(Json::as_usize), Some(1));
         assert!(stats.get("pruned_fraction").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn add_docs_and_sharded_stats_over_tcp() {
+        use crate::config::{IndexParams, ShardParams};
+        let engine = SearchEngine::from_config(Config {
+            dataset: DatasetSpec::SynthText { n: 40, vocab: 180, dim: 8, seed: 15 },
+            threads: 2,
+            linger_ms: 1,
+            sharded: Some(ShardParams { shards: 2, max_docs_per_shard: 1 << 20 }),
+            index: Some(IndexParams {
+                nlist: 4,
+                nprobe: 4,
+                train_iters: 5,
+                seed: 2,
+                min_points_per_list: 1,
+            }),
+            ..Default::default()
+        })
+        .unwrap();
+        let server = Server::bind(engine, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut out = Vec::new();
+            let mut w = stream;
+            for line in [
+                // append two docs with distinct single/dual-coordinate
+                // supports, then search one of them back by id
+                "{\"op\": \"add_docs\", \"docs\": [[[2, 0.6], [9, 0.4]], [[11, 1.0]]], \
+                 \"labels\": [5, 6]}",
+                "{\"op\": \"search_id\", \"id\": 40, \"l\": 3, \"method\": \"rwmd\"}",
+                "{\"op\": \"stats\"}",
+                // labels length mismatch is a clean protocol error
+                "{\"op\": \"add_docs\", \"docs\": [[[1, 1.0]]], \"labels\": [1, 2]}",
+            ] {
+                w.write_all(line.as_bytes()).unwrap();
+                w.write_all(b"\n").unwrap();
+                w.flush().unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                out.push(Json::parse(resp.trim()).unwrap());
+            }
+            out
+        });
+        server.serve_n(1).unwrap();
+        let out = client.join().unwrap();
+
+        let added = &out[0];
+        assert_eq!(added.get("ok"), Some(&Json::Bool(true)), "{added:?}");
+        assert_eq!(added.get("added").and_then(Json::as_usize), Some(2));
+        assert_eq!(added.get("n").and_then(Json::as_usize), Some(42));
+        let ids = added.get("ids").and_then(Json::as_arr).unwrap();
+        assert_eq!(ids[0].as_usize(), Some(40));
+        assert_eq!(ids[1].as_usize(), Some(41));
+
+        let hits = out[1].get("hits").and_then(Json::as_arr).unwrap();
+        let first = hits[0].as_arr().unwrap();
+        assert_eq!(first[1].as_usize(), Some(40), "appended doc finds itself");
+        assert_eq!(first[2].as_usize(), Some(5), "appended label served");
+
+        let stats = &out[2];
+        assert_eq!(stats.get("n").and_then(Json::as_usize), Some(42));
+        let shards = stats.get("shards").and_then(Json::as_arr).expect("per-shard stats");
+        assert_eq!(shards.len(), 2);
+        let docs: usize =
+            shards.iter().map(|s| s.get("docs").and_then(Json::as_usize).unwrap()).sum();
+        assert_eq!(docs, 42);
+        let appended: usize = shards
+            .iter()
+            .map(|s| s.get("appended").and_then(Json::as_usize).unwrap())
+            .sum();
+        assert_eq!(appended, 2, "operators can see append skew");
+        assert!(shards.iter().all(|s| {
+            s.get("nlist").and_then(Json::as_usize).unwrap() >= 1
+        }));
+
+        assert_eq!(out[3].get("ok"), Some(&Json::Bool(false)));
+        assert!(out[3].get("error").is_some());
     }
 
     #[test]

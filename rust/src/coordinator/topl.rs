@@ -5,6 +5,8 @@
 //! Ordering: ascending distance, ties broken by lower id — consistent with
 //! the rest of the stack so shard count never changes results.
 
+use crate::util::threadpool::{parallel_for, SyncSlice};
+
 /// Bounded best-ℓ accumulator (insertion into a sorted small vec; ℓ is
 /// small so this beats a heap in practice and keeps deterministic order).
 #[derive(Debug, Clone)]
@@ -79,6 +81,39 @@ impl TopL {
     }
 }
 
+/// K-way merge of per-shard accumulators into one accumulator per query,
+/// data-parallel over the queries of a batch (each query row's merge is
+/// independent of its neighbors).  `shard_accs[s][q]` is shard `s`'s
+/// accumulator for query `q`; every shard must carry `queries` accumulators.
+/// Shards are merged in shard order on exactly one worker per query, so the
+/// result is bit-identical for every thread count (and to a serial merge).
+pub fn merge_query_rows(
+    shard_accs: &[Vec<TopL>],
+    queries: usize,
+    l: usize,
+    threads: usize,
+) -> Vec<TopL> {
+    debug_assert!(
+        shard_accs.iter().all(|s| s.len() == queries),
+        "every shard must have one accumulator per query"
+    );
+    let mut out = vec![TopL::new(l); queries];
+    {
+        let slots = SyncSlice::new(&mut out);
+        parallel_for(queries, threads, |start, end| {
+            for q in start..end {
+                let mut acc = TopL::new(l);
+                for shard in shard_accs {
+                    acc.merge(&shard[q]);
+                }
+                // SAFETY: query row q is owned by exactly this chunk.
+                unsafe { slots.write(q, acc) };
+            }
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +157,56 @@ mod tests {
                 format!("shard {:?}", a.into_sorted())
             })
         });
+    }
+
+    #[test]
+    fn parallel_merge_equals_serial() {
+        check("topl-merge-parallel", 3, 25, |rng: &mut Rng| {
+            let shards = 1 + rng.below(5);
+            let queries = 1 + rng.below(9);
+            let l = 1 + rng.below(6);
+            let accs: Vec<Vec<TopL>> = (0..shards)
+                .map(|s| {
+                    (0..queries)
+                        .map(|_| {
+                            let mut t = TopL::new(l);
+                            for _ in 0..rng.below(20) {
+                                t.push((rng.below(9) as f32) / 2.0, s * 1000 + rng.below(100));
+                            }
+                            t
+                        })
+                        .collect()
+                })
+                .collect();
+            // serial reference: merge shard-by-shard per query on one thread
+            let serial: Vec<Vec<(f32, usize)>> = (0..queries)
+                .map(|q| {
+                    let mut acc = TopL::new(l);
+                    for shard in &accs {
+                        acc.merge(&shard[q]);
+                    }
+                    acc.into_sorted()
+                })
+                .collect();
+            for threads in [1usize, 4] {
+                let par = merge_query_rows(&accs, queries, l, threads);
+                let got: Vec<Vec<(f32, usize)>> =
+                    par.into_iter().map(TopL::into_sorted).collect();
+                if got != serial {
+                    return ensure(false, || {
+                        format!("threads {threads}: {got:?} != {serial:?}")
+                    });
+                }
+            }
+            ensure(true, String::new)
+        });
+    }
+
+    #[test]
+    fn merge_query_rows_handles_empty_shard_set() {
+        let merged = merge_query_rows(&[], 3, 4, 2);
+        assert_eq!(merged.len(), 3);
+        assert!(merged.iter().all(TopL::is_empty));
     }
 
     #[test]

@@ -211,6 +211,40 @@ impl IvfIndex {
         out
     }
 
+    /// Append one new point to its nearest list **without retraining** —
+    /// the trained-once / assign-incrementally path the live-corpus append
+    /// route uses.  The new point's id is the current [`IvfIndex::num_points`]
+    /// (the largest id so far), so every list's ascending-id invariant is
+    /// preserved; the receiving list's radius grows to cover the new member
+    /// when needed.  Returns the list the point joined.
+    ///
+    /// The embedded dataset fingerprint is *not* updated here — after an
+    /// append batch, re-stamp with [`IvfIndex::set_fingerprint`] so the
+    /// index stays tied to the data it now covers.
+    pub fn append_assigned(&mut self, centroid: &[f64]) -> usize {
+        assert_eq!(centroid.len(), self.dim, "appended centroid dim mismatch");
+        let c = self.assign(centroid);
+        let new_id = self.list_ids.len() as u32;
+        // the new id is the maximum, so inserting at the end of list c's
+        // segment keeps that list ascending
+        let pos = self.list_ptr[c + 1];
+        self.list_ids.insert(pos, new_id);
+        for p in &mut self.list_ptr[c + 1..] {
+            *p += 1;
+        }
+        let d = euclid(centroid, self.centroid(c));
+        if d > self.list_radius[c] {
+            self.list_radius[c] = d;
+        }
+        c
+    }
+
+    /// Re-stamp the dataset fingerprint (after an append batch mutated the
+    /// data this index covers).
+    pub fn set_fingerprint(&mut self, fingerprint: u64) {
+        self.fingerprint = fingerprint;
+    }
+
     /// Destructure into raw parts (the persistence writer's view).
     pub fn raw_parts(&self) -> (usize, &[f64], &[usize], &[u32], &[f64], u64) {
         (
@@ -353,6 +387,35 @@ mod tests {
         assert_eq!(effective_nlist(&p, 40), 4);
         let ix = IvfIndex::train(&pts, 2, &p, 1, 0).unwrap();
         assert!(ix.nlist() <= 4);
+    }
+
+    #[test]
+    fn append_assigned_preserves_invariants() {
+        let pts = grid_points(30, 2, 7);
+        let mut ix = IvfIndex::train(&pts, 2, &params(4), 2, 42).unwrap();
+        let nlist = ix.nlist();
+        // three appended points: each joins its nearest list with the next
+        // free id, lists stay ascending, and the partition stays complete
+        for (j, q) in [[0.1f64, -0.2], [2.0, 2.0], [-1.5, 0.4]].iter().enumerate() {
+            let expect_list = ix.assign(q);
+            let got = ix.append_assigned(q);
+            assert_eq!(got, expect_list);
+            assert_eq!(ix.num_points(), 30 + j + 1);
+            assert!(ix.list(got).contains(&((30 + j) as u32)));
+            let member = euclid(q, ix.centroid(got));
+            assert!(ix.list_radius(got) >= member - 1e-12);
+        }
+        for c in 0..nlist {
+            assert!(ix.list(c).windows(2).all(|w| w[0] < w[1]), "list {c} not ascending");
+        }
+        let all = ix.candidates(&(0..nlist).collect::<Vec<_>>());
+        assert_eq!(all, (0..33u32).collect::<Vec<_>>());
+        // the mutated index still validates as a whole
+        let (dim, c, p, ids, r, fp) = ix.raw_parts();
+        IvfIndex::from_raw(dim, c.to_vec(), p.to_vec(), ids.to_vec(), r.to_vec(), fp).unwrap();
+        // fingerprint re-stamping
+        ix.set_fingerprint(0xbeef);
+        assert_eq!(ix.fingerprint(), 0xbeef);
     }
 
     #[test]

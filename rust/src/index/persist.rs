@@ -31,12 +31,21 @@ pub fn sidecar_path(dataset_path: &Path) -> PathBuf {
     dataset_path.with_extension("emdx")
 }
 
-/// Save a trained index.
-pub fn save(ix: &IvfIndex, path: &Path) -> EmdResult<()> {
+/// Byte length of one serialized index body (fingerprint + dims header +
+/// tables) given its header dims — shared by the v1 sidecar and the v2
+/// shard manifest ([`crate::shard::manifest`]) so both validate
+/// header-implied sizes the same way.
+pub(crate) fn body_len(dim: usize, nlist: usize, npoints: usize) -> u128 {
+    32u128 // fingerprint + dim + nlist + npoints
+        + (nlist as u128) * (dim as u128) * 8
+        + (nlist as u128 + 1) * 8
+        + (npoints as u128) * 4
+        + (nlist as u128) * 8
+}
+
+/// Serialize one index body (everything after the magic/version header).
+pub(crate) fn write_body<W: Write>(w: &mut W, ix: &IvfIndex) -> io::Result<()> {
     let (dim, centroids, list_ptr, list_ids, list_radius, fingerprint) = ix.raw_parts();
-    let mut w = BufWriter::new(File::create(path)?);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
     w.write_all(&fingerprint.to_le_bytes())?;
     w.write_all(&(dim as u64).to_le_bytes())?;
     w.write_all(&(ix.nlist() as u64).to_le_bytes())?;
@@ -53,6 +62,60 @@ pub fn save(ix: &IvfIndex, path: &Path) -> EmdResult<()> {
     for &r in list_radius {
         w.write_all(&r.to_le_bytes())?;
     }
+    Ok(())
+}
+
+/// Deserialize one index body.  `budget` is how many bytes the caller can
+/// prove remain in the file: header-implied table sizes are validated
+/// against it **before any allocation is sized from them**, so a corrupt
+/// header (e.g. an absurd `nlist`) fails with a clean error the
+/// log-and-retrain fallback can catch, never an abort.  Returns the index
+/// and the bytes consumed.
+pub(crate) fn read_body<R: Read>(r: &mut R, budget: u64) -> EmdResult<(IvfIndex, u64)> {
+    if budget < 32 {
+        return Err(EmdError::config(format!(
+            "corrupt EMDX header: body needs at least 32 bytes but only {budget} remain"
+        )));
+    }
+    let fingerprint = read_u64(r)?;
+    let dim = read_u64(r)? as usize;
+    let nlist = read_u64(r)? as usize;
+    let npoints = read_u64(r)? as usize;
+    let expected = body_len(dim, nlist, npoints);
+    if expected > budget as u128 {
+        return Err(EmdError::config(format!(
+            "corrupt EMDX header: dim {dim} / nlist {nlist} / npoints {npoints} \
+             imply {expected} bytes but only {budget} remain"
+        )));
+    }
+    let mut centroids = Vec::with_capacity(nlist * dim);
+    for _ in 0..nlist * dim {
+        centroids.push(read_f64(r)?);
+    }
+    let mut list_ptr = Vec::with_capacity(nlist + 1);
+    for _ in 0..=nlist {
+        list_ptr.push(read_u64(r)? as usize);
+    }
+    let mut list_ids = Vec::with_capacity(npoints);
+    for _ in 0..npoints {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        list_ids.push(u32::from_le_bytes(b));
+    }
+    let mut list_radius = Vec::with_capacity(nlist);
+    for _ in 0..nlist {
+        list_radius.push(read_f64(r)?);
+    }
+    let ix = IvfIndex::from_raw(dim, centroids, list_ptr, list_ids, list_radius, fingerprint)?;
+    Ok((ix, expected as u64))
+}
+
+/// Save a trained index.
+pub fn save(ix: &IvfIndex, path: &Path) -> EmdResult<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    write_body(&mut w, ix)?;
     w.flush()?;
     Ok(())
 }
@@ -73,47 +136,22 @@ pub fn load(path: &Path) -> EmdResult<IvfIndex> {
     let version = read_u32(&mut r)?;
     if version != VERSION {
         return Err(EmdError::config(format!(
-            "unsupported EMDX version {version} (expected {VERSION})"
+            "unsupported EMDX version {version} (expected {VERSION}; version 2 is the \
+             sharded-corpus manifest, see crate::shard)"
         )));
     }
-    let fingerprint = read_u64(&mut r)?;
-    let dim = read_u64(&mut r)? as usize;
-    let nlist = read_u64(&mut r)? as usize;
-    let npoints = read_u64(&mut r)? as usize;
-    // the format is fixed-size given the header, so a corrupt header (e.g.
-    // an absurd nlist) is caught against the file length *before* any
-    // allocation is sized from it — load must fail with a clean error the
-    // engine's log-and-retrain fallback can catch, never abort
-    let expected = 40u128 // magic + version + fingerprint + three u64 dims
-        + (nlist as u128) * (dim as u128) * 8
-        + (nlist as u128 + 1) * 8
-        + (npoints as u128) * 4
-        + (nlist as u128) * 8;
-    if expected != file_len as u128 {
+    let budget = file_len.saturating_sub(8); // magic + version consumed
+    let (ix, consumed) = read_body(&mut r, budget).map_err(|e| match e {
+        EmdError::Config(m) => EmdError::config(format!("{m} (in {path:?})")),
+        other => other,
+    })?;
+    if consumed != budget {
         return Err(EmdError::config(format!(
-            "corrupt EMDX header in {path:?}: dim {dim} / nlist {nlist} / npoints {npoints} \
-             imply {expected} bytes but the file has {file_len}"
+            "corrupt EMDX header in {path:?}: body is {consumed} bytes but the file \
+             carries {budget}"
         )));
     }
-    let mut centroids = Vec::with_capacity(nlist * dim);
-    for _ in 0..nlist * dim {
-        centroids.push(read_f64(&mut r)?);
-    }
-    let mut list_ptr = Vec::with_capacity(nlist + 1);
-    for _ in 0..=nlist {
-        list_ptr.push(read_u64(&mut r)? as usize);
-    }
-    let mut list_ids = Vec::with_capacity(npoints);
-    for _ in 0..npoints {
-        let mut b = [0u8; 4];
-        r.read_exact(&mut b)?;
-        list_ids.push(u32::from_le_bytes(b));
-    }
-    let mut list_radius = Vec::with_capacity(nlist);
-    for _ in 0..nlist {
-        list_radius.push(read_f64(&mut r)?);
-    }
-    IvfIndex::from_raw(dim, centroids, list_ptr, list_ids, list_radius, fingerprint)
+    Ok(ix)
 }
 
 /// Load an index for a specific dataset, rejecting a stale sidecar whose

@@ -26,6 +26,9 @@
 //!   artifacts (`artifacts/*.hlo.txt`); gated behind the `pjrt` feature.
 //! * [`index`] — IVF pruning index over document WCD centroids: sublinear
 //!   candidate selection in front of the LC engines (`EMDX` persistence).
+//! * [`shard`] — sharded live corpus: per-shard engines + IVF behind a
+//!   fan-out / top-ℓ-merge route, incremental ingestion, `EMDX` v2
+//!   manifest persistence.
 //! * [`coordinator`] — the serving layer: batching, sharding, cascades,
 //!   index-pruned top-ℓ search.
 //! * [`builder`] — `EngineBuilder`, the one place configuration becomes
@@ -44,13 +47,14 @@ pub mod exact;
 pub mod index;
 pub mod lc;
 pub mod runtime;
+pub mod shard;
 pub mod util;
 
 /// The unified API surface: everything needed to select a method, build an
 /// engine, and run searches.
 pub mod prelude {
     pub use crate::builder::EngineBuilder;
-    pub use crate::config::{Backend, Config, DatasetSpec, IndexParams};
+    pub use crate::config::{Backend, Config, DatasetSpec, IndexParams, ShardParams};
     pub use crate::coordinator::{
         cascade_search, cascade_search_pruned, CascadeResult, SearchEngine, SearchResult, Server,
     };
@@ -60,4 +64,5 @@ pub mod prelude {
     };
     pub use crate::index::{pruned_search, pruned_search_batch, IvfIndex, PrunedSearch};
     pub use crate::lc::{BatchPlanner, EngineParams, LcBatch, LcEngine, PlanScratch};
+    pub use crate::shard::{AppendOutcome, ShardStat, ShardedCorpus, ShardedSearch};
 }

@@ -5,6 +5,7 @@
 //! * `search`          one query against a dataset, print top-ℓ
 //! * `cascade`         two-stage search: RWMD prefilter + tighter rerank
 //! * `index`           build / inspect / query the IVF pruning index
+//! * `shard`           build / inspect / append to / query the sharded live corpus
 //! * `eval`            reproduce the paper's accuracy tables (5, 6) & sweeps
 //! * `serve`           run the TCP search server
 //! * `artifacts-check` compile every artifact and cross-check PJRT vs native
@@ -38,6 +39,7 @@ fn main() {
         "search" => cmd_search(rest),
         "cascade" => cmd_cascade(rest),
         "index" => cmd_index(rest),
+        "shard" => cmd_shard(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
         "artifacts-check" => cmd_artifacts_check(rest),
@@ -62,6 +64,7 @@ fn print_help() {
          \x20 search           top-ℓ query against a dataset (--help)\n\
          \x20 cascade          RWMD prefilter + tighter rerank search (--help)\n\
          \x20 index            build / inspect / query the IVF pruning index (--help)\n\
+         \x20 shard            build / inspect / append to / query the sharded live corpus (--help)\n\
          \x20 eval             reproduce accuracy tables / sweeps (--help)\n\
          \x20 serve            run the TCP search server (--help)\n\
          \x20 artifacts-check  compile artifacts, verify PJRT == native\n"
@@ -380,6 +383,202 @@ fn cmd_index(args: &[String]) -> EmdResult<()> {
             Ok(())
         }
         other => Err(EmdError::parse("index op", other, "build | info | search")),
+    }
+}
+
+fn cmd_shard(args: &[String]) -> EmdResult<()> {
+    use emdpar::index::sidecar_path;
+    use emdpar::prelude::{DatasetSpec, ShardParams};
+    use emdpar::shard::load_manifest;
+
+    let spec = CommandSpec::new(
+        "shard",
+        "build / inspect / append to / query the sharded live corpus",
+    )
+    .opt("op", "build", "build | info | append | search")
+    .opt("dataset", "synth-text:1000", "dataset: <file.bin> | synth-mnist[:n] | synth-text[:n]")
+    .opt("config", "", "JSON config file (CLI flags override it)")
+    .opt("threads", "", "worker threads")
+    .opt("shards", "", "shard count at build time (default 4, or the config's)")
+    .opt(
+        "max-docs",
+        "",
+        "appends open a fresh shard once every shard holds this many docs",
+    )
+    .opt("file", "", "EMDX v2 manifest file (default: <dataset>.emdx for file datasets)")
+    .opt("nlist", "", "train a per-shard IVF index with this many lists (0 disables)")
+    .opt(
+        "nprobe",
+        "",
+        "lists probed per shard per query (needs --nlist; >= every shard's nlist: exhaustive)",
+    )
+    .opt("train-iters", "", "Lloyd iterations (per-shard index training)")
+    .opt("seed", "", "k-means++ seed (index training)")
+    .opt("min-points", "", "minimum points per list (caps each shard's nlist)")
+    .opt("method", "", METHOD_SYNTAX)
+    .opt("topl", "", "results per query (search)")
+    .opt("id", "0", "query by live-corpus document id (search)")
+    .opt("from", "", "append: EMD1 dataset file whose rows are appended (same vocabulary)");
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage("emdpar"));
+        return Ok(());
+    }
+    let p = spec.parse(args)?;
+    let op = p.str("op").to_string();
+
+    if op == "info" {
+        // info reads the manifest alone; a file dataset verifies freshness
+        let cfg = build_config(&p)?;
+        let file = match p.opt_str("file") {
+            Some(f) if !f.is_empty() => std::path::PathBuf::from(f),
+            _ => match &cfg.dataset {
+                DatasetSpec::File(path) => sidecar_path(path),
+                _ => {
+                    return Err(EmdError::config(
+                        "shard info needs --file (or a file dataset)",
+                    ))
+                }
+            },
+        };
+        let man = load_manifest(&file)?;
+        println!(
+            "{file:?}: {} shards over {} docs (append policy: fresh shard past {} docs), \
+             corpus fingerprint {:#018x}",
+            man.shards.len(),
+            man.num_docs(),
+            man.max_docs_per_shard,
+            man.corpus_fingerprint
+        );
+        for (s, sh) in man.shards.iter().enumerate() {
+            match &sh.index {
+                Some(ix) => println!(
+                    "  shard {s}: {} docs ({} appended), {} lists over dim {}",
+                    sh.globals.len(),
+                    sh.appended,
+                    ix.nlist(),
+                    ix.dim()
+                ),
+                None => println!(
+                    "  shard {s}: {} docs ({} appended), exhaustive",
+                    sh.globals.len(),
+                    sh.appended
+                ),
+            }
+        }
+        if let DatasetSpec::File(_) = &cfg.dataset {
+            let ds = cfg.load_dataset()?;
+            let fp = emdpar::index::dataset_fingerprint(&ds);
+            println!(
+                "dataset fingerprint {fp:#018x}: {}",
+                if fp == man.corpus_fingerprint { "MATCH" } else { "STALE — rebuild" }
+            );
+        }
+        return Ok(());
+    }
+
+    // empty defaults keep config-file values authoritative: only a flag the
+    // user actually passed overrides them
+    let passed = |name: &str| p.opt_str(name).filter(|s| !s.is_empty()).is_some();
+    let mut cfg = build_config(&p)?;
+    let mut sp = cfg.sharded.unwrap_or_default();
+    if passed("shards") {
+        sp.shards = p.usize("shards")?.max(1);
+    }
+    if passed("max-docs") {
+        sp.max_docs_per_shard = p.usize("max-docs")?.max(1);
+    }
+    cfg.sharded = Some(sp);
+    if let Some(ixp) = &mut cfg.index {
+        // --nlist/--nprobe flow through apply_cli; the training knobs are
+        // subcommand-local
+        if passed("train-iters") {
+            ixp.train_iters = p.usize("train-iters")?.max(1);
+        }
+        if passed("seed") {
+            ixp.seed = p.usize("seed")? as u64;
+        }
+        if passed("min-points") {
+            ixp.min_points_per_list = p.usize("min-points")?.max(1);
+        }
+    }
+    let method = cfg.method;
+    let l = cfg.topl;
+    let engine = EngineBuilder::from_config(cfg).build_search()?;
+    let print_shards = |engine: &emdpar::prelude::SearchEngine| {
+        for (s, st) in engine.shard_stats().unwrap_or_default().iter().enumerate() {
+            match st.nlist {
+                Some(nlist) => println!(
+                    "  shard {s}: {} docs ({} appended), {nlist} lists \
+                     (min/max list {} / {})",
+                    st.docs, st.appended, st.min_list, st.max_list
+                ),
+                None => println!(
+                    "  shard {s}: {} docs ({} appended), exhaustive",
+                    st.docs, st.appended
+                ),
+            }
+        }
+    };
+
+    match op.as_str() {
+        "build" => {
+            println!(
+                "built {} shards over {} docs:",
+                engine.shard_stats().map(|s| s.len()).unwrap_or(0),
+                engine.num_docs()
+            );
+            print_shards(&engine);
+            if engine.persist_shards()? {
+                println!("wrote dataset + EMDX v2 manifest sidecar");
+            } else {
+                println!("synthetic dataset: nothing persisted (use a file dataset)");
+            }
+            Ok(())
+        }
+        "append" => {
+            let from = match p.opt_str("from") {
+                Some(f) if !f.is_empty() => f,
+                _ => return Err(EmdError::config("shard append needs --from <file.bin>")),
+            };
+            let extra = data::load(Path::new(from))?;
+            emdpar::emd_ensure!(
+                extra.embeddings == engine.dataset().embeddings,
+                "--from dataset '{}' uses a different vocabulary than the corpus",
+                extra.name
+            );
+            let docs: Vec<_> = (0..extra.len()).map(|u| extra.histogram(u)).collect();
+            let outcome = engine.add_docs(&docs, &extra.labels)?;
+            println!(
+                "appended {} docs (ids {}..{}, {} fresh shard(s) opened); corpus now {} docs:",
+                outcome.ids.len(),
+                outcome.ids.first().copied().unwrap_or(0),
+                outcome.ids.last().copied().unwrap_or(0),
+                outcome.opened,
+                engine.num_docs()
+            );
+            print_shards(&engine);
+            Ok(())
+        }
+        "search" => {
+            let id = p.usize("id")?;
+            emdpar::emd_ensure!(id < engine.num_docs(), "--id out of range");
+            let query = engine.doc_histogram(id)?;
+            let res = engine.search(&query, method, l)?;
+            println!("query id={id} via {} — top-{l} over the sharded corpus:", method.name());
+            for (rank, (&(d, hit), &lab)) in res.hits.iter().zip(&res.labels).enumerate() {
+                println!("  #{:<3} id={hit:<6} label={lab:<4} distance={d:.6}", rank + 1);
+            }
+            let m = engine.metrics();
+            println!(
+                "fan-out: {} shard dispatch(es), merge {} us total, pruned fraction {:.3}",
+                m.shard_batches.load(std::sync::atomic::Ordering::Relaxed),
+                m.merge_us(),
+                m.pruned_fraction()
+            );
+            print_shards(&engine);
+            Ok(())
+        }
+        other => Err(EmdError::parse("shard op", other, "build | info | append | search")),
     }
 }
 

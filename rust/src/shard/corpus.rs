@@ -1,0 +1,646 @@
+//! The sharded live corpus: per-shard CSR slices, engines and IVF indexes,
+//! plus the incremental-append path.
+//!
+//! A [`ShardedCorpus`] owns `S` [`Shard`]s.  At build time the document
+//! space is partitioned contiguously by [`crate::coordinator::Router`]
+//! (shard `s` owns global ids `boundaries[s]..boundaries[s+1]`, local id =
+//! global − base), so the router *is* the initial global-id ↔ (shard,
+//! local-id) mapping.  Appends extend that mapping explicitly: every new
+//! document gets the next global id and joins the smallest shard (or a
+//! fresh shard once every shard has reached
+//! [`crate::config::ShardParams::max_docs_per_shard`]), so each shard's
+//! global-id list stays strictly ascending — the invariant that keeps
+//! shard-local top-ℓ tie-breaks identical to global ones.
+//!
+//! Each shard wraps its own [`LcEngine`] (per-shard BoW norms, WCD
+//! centroids, vocabulary norms) and, when index parameters are configured,
+//! its own shard-locally-trained [`IvfIndex`].  Appended documents are
+//! assigned to the shard's **already-trained** centroids via
+//! [`IvfIndex::append_assigned`] — no retraining on the append path; only
+//! the receiving shard rebuilds its `O(shard)` engine precomputations.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::config::{IndexParams, ShardParams};
+use crate::core::{CsrMatrix, Dataset, Embeddings, EmdResult, Histogram};
+use crate::coordinator::Router;
+use crate::emd_ensure;
+use crate::index::{dataset_fingerprint, IvfIndex};
+use crate::lc::{EngineParams, LcEngine};
+
+/// Incremental CSR + label assembly shared by the gather / extend /
+/// reassemble paths: every row is copied bit-exactly, so datasets built
+/// here sweep identically to the rows' original home.
+struct RowBuilder {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    data: Vec<f32>,
+    labels: Vec<u16>,
+}
+
+impl RowBuilder {
+    fn with_capacity(rows: usize) -> RowBuilder {
+        RowBuilder {
+            indptr: {
+                let mut p = Vec::with_capacity(rows + 1);
+                p.push(0);
+                p
+            },
+            indices: Vec::new(),
+            data: Vec::new(),
+            labels: Vec::with_capacity(rows),
+        }
+    }
+
+    fn push_row(&mut self, indices: &[u32], weights: &[f32], label: u16) {
+        self.indices.extend_from_slice(indices);
+        self.data.extend_from_slice(weights);
+        self.indptr.push(self.indices.len());
+        self.labels.push(label);
+    }
+
+    fn into_dataset(self, name: impl Into<String>, embeddings: &Embeddings) -> Dataset {
+        let matrix =
+            CsrMatrix::from_raw(self.indptr, self.indices, self.data, embeddings.num_vectors());
+        Dataset::from_csr(name, embeddings.clone(), matrix, self.labels)
+    }
+}
+
+/// One shard: a contiguous-at-build (append-extended) slice of the corpus
+/// with its own engine and optional IVF index.
+#[derive(Clone)]
+pub struct Shard {
+    /// Global ids owned by this shard, strictly ascending; the local id of
+    /// a document is its position in this list.
+    globals: Vec<u32>,
+    /// Shard-local dataset (rows copied bit-exactly from the corpus).
+    dataset: Arc<Dataset>,
+    /// Shard-local engine over `dataset`.
+    engine: Arc<LcEngine>,
+    /// Shard-local IVF index (trained on this shard's WCD centroids).
+    index: Option<IvfIndex>,
+    /// Documents appended after the shard was built (skew reporting).
+    appended: usize,
+}
+
+/// Per-shard shape snapshot (server `stats`, CLI `shard info`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardStat {
+    pub docs: usize,
+    pub appended: usize,
+    /// Trained list count (`None` = exhaustive shard).
+    pub nlist: Option<usize>,
+    pub min_list: usize,
+    pub max_list: usize,
+}
+
+/// Outcome of one append batch.
+#[derive(Debug, Clone)]
+pub struct AppendOutcome {
+    /// Global ids assigned to the appended documents, in input order.
+    pub ids: Vec<usize>,
+    /// Shards that received documents (ascending shard ids).
+    pub touched: Vec<usize>,
+    /// Fresh shards opened by this batch.
+    pub opened: usize,
+}
+
+impl Shard {
+    /// Build a shard over `globals`' rows of `corpus`, training a local IVF
+    /// index when `index_params` is set.
+    fn build(
+        corpus: &Dataset,
+        globals: Vec<u32>,
+        ordinal: usize,
+        engine_params: EngineParams,
+        index_params: Option<&IndexParams>,
+    ) -> EmdResult<Shard> {
+        let name = format!("{}/shard{}", corpus.name, ordinal);
+        let dataset = Arc::new(gather_rows(corpus, &globals, name));
+        Shard::from_dataset(dataset, globals, 0, engine_params, index_params)
+    }
+
+    /// Assemble a shard around an already-gathered dataset, training the
+    /// index from scratch.
+    fn from_dataset(
+        dataset: Arc<Dataset>,
+        globals: Vec<u32>,
+        appended: usize,
+        engine_params: EngineParams,
+        index_params: Option<&IndexParams>,
+    ) -> EmdResult<Shard> {
+        debug_assert_eq!(dataset.len(), globals.len());
+        let engine = Arc::new(LcEngine::new(Arc::clone(&dataset), engine_params));
+        let index = match index_params {
+            Some(p) if !dataset.is_empty() => Some(IvfIndex::train(
+                engine.wcd_centroids(),
+                dataset.embeddings.dim(),
+                p,
+                engine_params.threads,
+                dataset_fingerprint(&dataset),
+            )?),
+            _ => None,
+        };
+        Ok(Shard { globals, dataset, engine, index, appended })
+    }
+
+    /// Reassemble a shard from persisted parts (the manifest loader): the
+    /// index, when present, must already be validated against `dataset`.
+    pub(crate) fn from_parts(
+        dataset: Arc<Dataset>,
+        globals: Vec<u32>,
+        appended: usize,
+        index: Option<IvfIndex>,
+        engine_params: EngineParams,
+    ) -> Shard {
+        debug_assert_eq!(dataset.len(), globals.len());
+        let engine = Arc::new(LcEngine::new(Arc::clone(&dataset), engine_params));
+        Shard { globals, dataset, engine, index, appended }
+    }
+
+    /// Append a batch of (global id, L1-normalized histogram, label) rows:
+    /// the shard dataset and engine are rebuilt with the new rows (old rows
+    /// bit-exact), and each new document joins the already-trained index
+    /// via [`IvfIndex::append_assigned`] — no retraining.
+    fn extend(&mut self, batch: &[(u32, Histogram, u16)], engine_params: EngineParams) {
+        let old = Arc::clone(&self.dataset);
+        let mut rows = RowBuilder::with_capacity(old.len() + batch.len());
+        for u in 0..old.len() {
+            let (idx, w) = old.matrix.row(u);
+            rows.push_row(idx, w, old.labels[u]);
+        }
+        for (_, h, label) in batch {
+            rows.push_row(h.indices(), h.weights(), *label);
+        }
+        let dataset = Arc::new(rows.into_dataset(old.name.clone(), &old.embeddings));
+        let engine = Arc::new(LcEngine::new(Arc::clone(&dataset), engine_params));
+        if let Some(ix) = &mut self.index {
+            // assign to the trained centroids using the same per-row WCD
+            // centroid representation the original members were indexed by
+            let m = dataset.embeddings.dim();
+            let cents = engine.wcd_centroids();
+            for local in old.len()..dataset.len() {
+                ix.append_assigned(&cents[local * m..(local + 1) * m]);
+            }
+            ix.set_fingerprint(dataset_fingerprint(&dataset));
+        }
+        self.globals.extend(batch.iter().map(|&(g, _, _)| g));
+        self.appended += batch.len();
+        self.dataset = dataset;
+        self.engine = engine;
+    }
+
+    pub fn len(&self) -> usize {
+        self.globals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.globals.is_empty()
+    }
+
+    /// Global ids owned by this shard, strictly ascending.
+    pub fn globals(&self) -> &[u32] {
+        &self.globals
+    }
+
+    /// The global id of shard-local row `local`.
+    #[inline]
+    pub fn global(&self, local: usize) -> usize {
+        self.globals[local] as usize
+    }
+
+    pub fn dataset(&self) -> &Arc<Dataset> {
+        &self.dataset
+    }
+
+    pub fn engine(&self) -> &LcEngine {
+        &self.engine
+    }
+
+    pub fn index(&self) -> Option<&IvfIndex> {
+        self.index.as_ref()
+    }
+
+    /// Documents appended since the shard was built.
+    pub fn appended(&self) -> usize {
+        self.appended
+    }
+
+    pub fn stat(&self) -> ShardStat {
+        let (nlist, min_list, max_list) = match &self.index {
+            Some(ix) => {
+                let sizes = ix.list_sizes();
+                (
+                    Some(ix.nlist()),
+                    sizes.iter().copied().min().unwrap_or(0),
+                    sizes.iter().copied().max().unwrap_or(0),
+                )
+            }
+            None => (None, 0, 0),
+        };
+        ShardStat { docs: self.len(), appended: self.appended, nlist, min_list, max_list }
+    }
+}
+
+/// The sharded, appendable corpus (see module docs).
+#[derive(Clone)]
+pub struct ShardedCorpus {
+    /// Shared vocabulary coordinates (every shard dataset carries the same
+    /// embedding table; this copy serves append validation and reassembly).
+    embeddings: Embeddings,
+    shards: Vec<Shard>,
+    /// Global id → (shard, local id); the inverse of the shards' `globals`
+    /// lists.
+    assign: Vec<(u32, u32)>,
+    params: ShardParams,
+    engine_params: EngineParams,
+    index_params: Option<IndexParams>,
+}
+
+impl ShardedCorpus {
+    /// Partition `dataset` into `params.shards` contiguous shards (via
+    /// [`Router`]) and build each shard's engine + optional IVF index.
+    pub fn build(
+        dataset: &Dataset,
+        params: ShardParams,
+        engine_params: EngineParams,
+        index_params: Option<&IndexParams>,
+    ) -> EmdResult<ShardedCorpus> {
+        emd_ensure!(params.shards >= 1, config, "shard count must be >= 1");
+        emd_ensure!(params.max_docs_per_shard >= 1, config, "max_docs_per_shard must be >= 1");
+        let router = Router::new(dataset.len(), params.shards);
+        let mut shards = Vec::with_capacity(router.num_shards());
+        let mut assign = Vec::with_capacity(dataset.len());
+        for (s, range) in router.shards().enumerate() {
+            let globals: Vec<u32> = (range.start as u32..range.end as u32).collect();
+            for local in 0..globals.len() {
+                assign.push((s as u32, local as u32));
+            }
+            shards.push(Shard::build(dataset, globals, s, engine_params, index_params)?);
+        }
+        Ok(ShardedCorpus {
+            embeddings: dataset.embeddings.clone(),
+            shards,
+            assign,
+            params,
+            engine_params,
+            index_params: index_params.copied(),
+        })
+    }
+
+    /// Reassemble a corpus from persisted parts (the manifest loader).
+    pub(crate) fn from_parts(
+        embeddings: Embeddings,
+        shards: Vec<Shard>,
+        params: ShardParams,
+        engine_params: EngineParams,
+        index_params: Option<IndexParams>,
+    ) -> EmdResult<ShardedCorpus> {
+        let total: usize = shards.iter().map(Shard::len).sum();
+        let mut assign = vec![(u32::MAX, u32::MAX); total];
+        for (s, shard) in shards.iter().enumerate() {
+            emd_ensure!(
+                shard.globals.windows(2).all(|w| w[0] < w[1]),
+                config,
+                "shard {s} global ids are not strictly ascending"
+            );
+            for (local, &g) in shard.globals.iter().enumerate() {
+                emd_ensure!(
+                    (g as usize) < total,
+                    config,
+                    "shard {s} owns global id {g} but the corpus has {total} docs"
+                );
+                emd_ensure!(
+                    assign[g as usize] == (u32::MAX, u32::MAX),
+                    config,
+                    "global id {g} appears in more than one shard"
+                );
+                assign[g as usize] = (s as u32, local as u32);
+            }
+        }
+        Ok(ShardedCorpus { embeddings, shards, assign, params, engine_params, index_params })
+    }
+
+    /// Documents currently searchable.
+    pub fn len(&self) -> usize {
+        self.assign.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.assign.is_empty()
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    pub fn params(&self) -> &ShardParams {
+        &self.params
+    }
+
+    pub fn engine_params(&self) -> &EngineParams {
+        &self.engine_params
+    }
+
+    pub fn index_params(&self) -> Option<&IndexParams> {
+        self.index_params.as_ref()
+    }
+
+    pub fn embeddings(&self) -> &Embeddings {
+        &self.embeddings
+    }
+
+    /// Where global id `g` lives: `(shard, local id)`.
+    pub fn locate(&self, g: usize) -> (usize, usize) {
+        let (s, local) = self.assign[g];
+        (s as usize, local as usize)
+    }
+
+    /// The label of global document `g`.
+    pub fn label(&self, g: usize) -> u16 {
+        let (s, local) = self.locate(g);
+        self.shards[s].dataset.labels[local]
+    }
+
+    /// The histogram of global document `g` (owned copy).
+    pub fn histogram(&self, g: usize) -> Histogram {
+        let (s, local) = self.locate(g);
+        self.shards[s].dataset.histogram(local)
+    }
+
+    /// The widest trained list count across shards (`None` when no shard
+    /// carries an index) — the clamp for effective probe widths.
+    pub fn max_nlist(&self) -> Option<usize> {
+        self.shards.iter().filter_map(|s| s.index.as_ref().map(IvfIndex::nlist)).max()
+    }
+
+    /// Resolve a request's probe width: `None` when no shard carries an
+    /// index (always exhaustive); otherwise `requested`, falling back to
+    /// `default`, clamped to `[1, max shard nlist]`.  Shards with fewer
+    /// lists clamp further at probe time, so `nprobe >= nlist` on every
+    /// shard is the exhaustive (bit-identical) route.
+    pub fn effective_nprobe(
+        &self,
+        requested: Option<usize>,
+        default: Option<usize>,
+    ) -> Option<usize> {
+        let cap = self.max_nlist()?;
+        Some(requested.or(default).unwrap_or(1).clamp(1, cap))
+    }
+
+    pub fn shard_stats(&self) -> Vec<ShardStat> {
+        self.shards.iter().map(Shard::stat).collect()
+    }
+
+    /// Append documents to the live corpus.  Each document is L1-normalized
+    /// (matching how built corpora normalize rows), lands in the smallest
+    /// shard — or a fresh shard once every shard holds
+    /// [`ShardParams::max_docs_per_shard`] documents — and joins that
+    /// shard's already-trained IVF centroids without retraining.  `labels`
+    /// may be empty (label 0) or one per document.
+    pub fn append(&mut self, docs: &[Histogram], labels: &[u16]) -> EmdResult<AppendOutcome> {
+        emd_ensure!(!docs.is_empty(), config, "append needs at least one document");
+        emd_ensure!(
+            labels.is_empty() || labels.len() == docs.len(),
+            config,
+            "append got {} labels for {} documents",
+            labels.len(),
+            docs.len()
+        );
+        let v = self.embeddings.num_vectors();
+        for (i, d) in docs.iter().enumerate() {
+            emd_ensure!(!d.is_empty(), config, "appended document {i} is empty");
+            emd_ensure!(
+                d.min_vocab_size() <= v,
+                config,
+                "appended document {i} indexes vocabulary entry {} but the corpus \
+                 vocabulary has {v}",
+                d.min_vocab_size() - 1
+            );
+        }
+
+        // place every document against simulated sizes so a batch that
+        // crosses the fresh-shard threshold splits deterministically
+        let max_docs = self.params.max_docs_per_shard.max(1);
+        let mut sizes: Vec<usize> = self.shards.iter().map(Shard::len).collect();
+        let mut per_target: BTreeMap<usize, Vec<(u32, Histogram, u16)>> = BTreeMap::new();
+        let mut ids = Vec::with_capacity(docs.len());
+        let mut opened = 0usize;
+        let mut next_global = self.assign.len();
+        for (i, doc) in docs.iter().enumerate() {
+            let label = labels.get(i).copied().unwrap_or(0);
+            let smallest = sizes.iter().enumerate().min_by_key(|&(s, &n)| (n, s)).map(|(s, _)| s);
+            let target = match smallest {
+                Some(s) if sizes[s] < max_docs => s,
+                _ => {
+                    sizes.push(0);
+                    opened += 1;
+                    sizes.len() - 1
+                }
+            };
+            sizes[target] += 1;
+            per_target
+                .entry(target)
+                .or_default()
+                .push((next_global as u32, doc.normalized(), label));
+            ids.push(next_global);
+            next_global += 1;
+        }
+
+        self.assign.resize(next_global, (u32::MAX, u32::MAX));
+        let mut touched = Vec::with_capacity(per_target.len());
+        for (target, batch) in per_target {
+            let base_local;
+            if target < self.shards.len() {
+                base_local = self.shards[target].len();
+                self.shards[target].extend(&batch, self.engine_params);
+            } else {
+                debug_assert_eq!(target, self.shards.len(), "fresh shards open densely");
+                base_local = 0;
+                let globals: Vec<u32> = batch.iter().map(|&(g, _, _)| g).collect();
+                let mut rows = RowBuilder::with_capacity(batch.len());
+                for (_, h, label) in &batch {
+                    rows.push_row(h.indices(), h.weights(), *label);
+                }
+                let name = format!("live/shard{target}");
+                let dataset = Arc::new(rows.into_dataset(name, &self.embeddings));
+                self.shards.push(Shard::from_dataset(
+                    dataset,
+                    globals,
+                    batch.len(),
+                    self.engine_params,
+                    self.index_params.as_ref(),
+                )?);
+            }
+            for (j, &(g, _, _)) in batch.iter().enumerate() {
+                self.assign[g as usize] = (target as u32, (base_local + j) as u32);
+            }
+            touched.push(target);
+        }
+        Ok(AppendOutcome { ids, touched, opened })
+    }
+
+    /// Reassemble the whole corpus as one dataset in global-id order
+    /// (persistence: the `EMD1` file a restarted server reloads).  Rows are
+    /// copied bit-exactly from the shard slices.
+    pub fn to_dataset(&self, name: impl Into<String>) -> Dataset {
+        let mut rows = RowBuilder::with_capacity(self.len());
+        for &(s, local) in &self.assign {
+            let ds = &self.shards[s as usize].dataset;
+            let (idx, w) = ds.matrix.row(local as usize);
+            rows.push_row(idx, w, ds.labels[local as usize]);
+        }
+        rows.into_dataset(name, &self.embeddings)
+    }
+}
+
+/// Gather `globals`' rows of `corpus` into a standalone dataset (weights
+/// copied verbatim, so shard-local sweeps are bit-identical to the
+/// corresponding rows of a monolithic sweep).  Shared with the manifest
+/// loader, which re-gathers shard datasets from the persisted layout.
+pub(crate) fn gather_rows(corpus: &Dataset, globals: &[u32], name: String) -> Dataset {
+    let mut rows = RowBuilder::with_capacity(globals.len());
+    for &g in globals {
+        let (idx, w) = corpus.matrix.row(g as usize);
+        rows.push_row(idx, w, corpus.labels[g as usize]);
+    }
+    rows.into_dataset(name, &corpus.embeddings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_text, TextConfig};
+
+    fn corpus_dataset(n: usize) -> Dataset {
+        generate_text(&TextConfig {
+            n,
+            classes: 3,
+            vocab: 200,
+            dim: 8,
+            doc_len: 20,
+            seed: 17,
+            ..Default::default()
+        })
+    }
+
+    fn params(shards: usize, max_docs: usize) -> ShardParams {
+        ShardParams { shards, max_docs_per_shard: max_docs }
+    }
+
+    fn engine_params() -> EngineParams {
+        EngineParams { threads: 2, ..Default::default() }
+    }
+
+    fn index_params() -> IndexParams {
+        IndexParams { nlist: 4, nprobe: 2, train_iters: 6, seed: 3, min_points_per_list: 1 }
+    }
+
+    #[test]
+    fn build_partitions_contiguously() {
+        let ds = corpus_dataset(25);
+        let c = ShardedCorpus::build(&ds, params(4, 1000), engine_params(), None).unwrap();
+        assert_eq!(c.len(), 25);
+        assert_eq!(c.num_shards(), 4);
+        let mut seen = Vec::new();
+        for shard in c.shards() {
+            assert!(shard.globals().windows(2).all(|w| w[0] < w[1]));
+            seen.extend_from_slice(shard.globals());
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..25u32).collect::<Vec<_>>());
+        // locate is the exact inverse of the shard globals lists
+        for g in 0..25 {
+            let (s, local) = c.locate(g);
+            assert_eq!(c.shards()[s].global(local), g);
+            assert_eq!(c.label(g), ds.labels[g]);
+        }
+        // shard rows are bit-exact copies of the corpus rows
+        for g in 0..25 {
+            let (s, local) = c.locate(g);
+            let (gi, gw) = ds.matrix.row(g);
+            let (si, sw) = c.shards()[s].dataset().matrix.row(local);
+            assert_eq!(gi, si);
+            assert_eq!(gw, sw);
+        }
+        // reassembly round-trips bit-exactly
+        let back = c.to_dataset("roundtrip");
+        assert_eq!(back.matrix, ds.matrix);
+        assert_eq!(back.labels, ds.labels);
+    }
+
+    #[test]
+    fn append_lands_in_smallest_then_opens_fresh_shard() {
+        let ds = corpus_dataset(20);
+        let mut c =
+            ShardedCorpus::build(&ds, params(2, 11), engine_params(), Some(&index_params()))
+                .unwrap();
+        assert_eq!(c.shards()[0].len(), 10);
+        assert_eq!(c.shards()[1].len(), 10);
+        let extra: Vec<Histogram> = (0..5).map(|u| ds.histogram(u)).collect();
+        let out = c.append(&extra[..2], &[7, 8]).unwrap();
+        assert_eq!(out.ids, vec![20, 21]);
+        assert_eq!(out.opened, 0);
+        // smallest-first with low-id tie-break: one doc per shard
+        assert_eq!(c.shards()[0].len(), 11);
+        assert_eq!(c.shards()[1].len(), 11);
+        assert_eq!(c.label(20), 7);
+        assert_eq!(c.label(21), 8);
+        // both shards are now at max_docs_per_shard = 11: the next append
+        // opens a fresh shard and fills it
+        let out = c.append(&extra[2..], &[1, 2, 3]).unwrap();
+        assert_eq!(out.ids, vec![22, 23, 24]);
+        assert_eq!(out.opened, 1);
+        assert_eq!(c.num_shards(), 3);
+        assert_eq!(c.shards()[2].len(), 3);
+        assert_eq!(c.shards()[2].appended(), 3);
+        // the fresh shard trains its own index; old shards assigned
+        // incrementally (num_points grew without retraining)
+        assert!(c.shards()[2].index().is_some());
+        assert_eq!(c.shards()[0].index().unwrap().num_points(), 11);
+        // the mapping stays a bijection
+        let mut seen: Vec<usize> = (0..c.len())
+            .map(|g| {
+                let (s, local) = c.locate(g);
+                c.shards()[s].global(local)
+            })
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..25).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn append_rejects_bad_input() {
+        let ds = corpus_dataset(10);
+        let mut c = ShardedCorpus::build(&ds, params(2, 100), engine_params(), None).unwrap();
+        assert!(c.append(&[], &[]).is_err());
+        let h = ds.histogram(0);
+        assert!(c.append(std::slice::from_ref(&h), &[1, 2]).is_err());
+        let oob = Histogram::from_pairs(vec![(10_000, 1.0)]);
+        assert!(c.append(&[oob], &[]).is_err());
+        let empty = Histogram::from_pairs(vec![]);
+        assert!(c.append(&[empty], &[]).is_err());
+    }
+
+    #[test]
+    fn empty_corpus_grows_from_zero_shards() {
+        let ds = corpus_dataset(8);
+        // an empty slice of the dataset: zero shards (Router regression)
+        let empty = gather_rows(&ds, &[], "empty".into());
+        let mut c =
+            ShardedCorpus::build(&empty, params(3, 4), engine_params(), Some(&index_params()))
+                .unwrap();
+        assert_eq!(c.num_shards(), 0);
+        assert_eq!(c.len(), 0);
+        let docs: Vec<Histogram> = (0..6).map(|u| ds.histogram(u)).collect();
+        let out = c.append(&docs, &[]).unwrap();
+        assert_eq!(out.opened, 2, "6 docs at 4 per shard need two fresh shards");
+        assert_eq!(c.len(), 6);
+        assert_eq!(c.num_shards(), 2);
+    }
+}

@@ -1,0 +1,541 @@
+//! Persistence for the sharded live corpus: the `EMDX` **version 2**
+//! sidecar (the shard manifest), extending the version-1 single-index
+//! format of [`crate::index::persist`] with the shard layout.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "EMDX" | version u32 = 2
+//! corpus_fingerprint u64    (dataset_fingerprint of the full corpus file)
+//! max_docs_per_shard u64    (append policy the corpus was running)
+//! num_shards u64
+//! per shard:
+//!   doc_count u64
+//!   globals u32[doc_count]  (strictly ascending global ids)
+//!   appended u64
+//!   has_index u8
+//!   [index body]            (the shared v1 body: fingerprint, dims, tables)
+//! ```
+//! The manifest lives at the dataset's conventional sidecar path
+//! ([`crate::index::sidecar_path`]); version 1 and version 2 sidecars
+//! reject each other cleanly at load, so a config switch between the
+//! monolithic index and the sharded corpus falls back to a rebuild instead
+//! of misreading the file.  Like the v1 loader, every header-implied size
+//! is validated against the remaining file length **before any allocation
+//! is sized from it**, and the embedded corpus fingerprint ties the
+//! manifest to the exact dataset bytes it describes.
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::{IndexParams, ShardParams};
+use crate::core::{Dataset, EmdError, EmdResult};
+use crate::emd_ensure;
+use crate::index::persist::{read_body, write_body};
+use crate::index::{dataset_fingerprint, IvfIndex};
+use crate::lc::EngineParams;
+
+use super::corpus::{gather_rows, Shard, ShardedCorpus};
+
+const MAGIC: &[u8; 4] = b"EMDX";
+/// The shard-manifest version of the `EMDX` sidecar family (version 1 is
+/// the single-index sidecar).
+pub const MANIFEST_VERSION: u32 = 2;
+
+/// A loaded (not yet reconstructed) shard manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Fingerprint of the full corpus dataset this layout describes.
+    pub corpus_fingerprint: u64,
+    /// Append policy the corpus was running when persisted.
+    pub max_docs_per_shard: usize,
+    pub shards: Vec<ManifestShard>,
+}
+
+/// One shard's persisted layout.
+#[derive(Debug, Clone)]
+pub struct ManifestShard {
+    /// Global ids owned by the shard, strictly ascending.
+    pub globals: Vec<u32>,
+    /// Documents appended to the shard since it was built.
+    pub appended: usize,
+    /// The shard's trained IVF index, when it had one.
+    pub index: Option<IvfIndex>,
+}
+
+impl Manifest {
+    /// Total documents across shards.
+    pub fn num_docs(&self) -> usize {
+        self.shards.iter().map(|s| s.globals.len()).sum()
+    }
+}
+
+/// Save a corpus' layout.  `corpus_fingerprint` must be the
+/// [`dataset_fingerprint`] of the corpus dataset **as persisted** (the
+/// `EMD1` file a restarted server reloads next to this manifest).
+pub fn save_manifest(
+    corpus: &ShardedCorpus,
+    corpus_fingerprint: u64,
+    path: &Path,
+) -> EmdResult<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&MANIFEST_VERSION.to_le_bytes())?;
+    w.write_all(&corpus_fingerprint.to_le_bytes())?;
+    w.write_all(&(corpus.params().max_docs_per_shard as u64).to_le_bytes())?;
+    w.write_all(&(corpus.num_shards() as u64).to_le_bytes())?;
+    for shard in corpus.shards() {
+        w.write_all(&(shard.len() as u64).to_le_bytes())?;
+        for &g in shard.globals() {
+            w.write_all(&g.to_le_bytes())?;
+        }
+        w.write_all(&(shard.appended() as u64).to_le_bytes())?;
+        match shard.index() {
+            Some(ix) => {
+                w.write_all(&[1u8])?;
+                write_body(&mut w, ix)?;
+            }
+            None => w.write_all(&[0u8])?,
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a manifest without checking what dataset it belongs to (inspection
+/// use; serving paths should use [`load_manifest_for`]).
+pub fn load_manifest(path: &Path) -> EmdResult<Manifest> {
+    let file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "bad magic (not an EMDX file)",
+        )
+        .into());
+    }
+    let version = read_u32(&mut r)?;
+    if version != MANIFEST_VERSION {
+        return Err(EmdError::config(format!(
+            "unsupported EMDX version {version} (expected {MANIFEST_VERSION}; version 1 is \
+             the single-index sidecar, see `emdpar index`)"
+        )));
+    }
+    let mut remaining = file_len.saturating_sub(8); // magic + version consumed
+    take(&mut remaining, 24, "manifest header", path)?;
+    let corpus_fingerprint = read_u64(&mut r)?;
+    let max_docs_per_shard = read_u64(&mut r)? as usize;
+    let num_shards = read_u64(&mut r)? as usize;
+    // every shard costs at least 17 bytes (doc_count + appended + flag):
+    // bound the shard-vector allocation by the bytes actually present
+    emd_ensure!(
+        (num_shards as u128) * 17 <= remaining as u128,
+        config,
+        "corrupt EMDX manifest in {path:?}: {num_shards} shards cannot fit in {remaining} \
+         remaining bytes"
+    );
+    let mut shards = Vec::with_capacity(num_shards);
+    for s in 0..num_shards {
+        take(&mut remaining, 8, "shard doc count", path)?;
+        let docs = read_u64(&mut r)? as usize;
+        take(&mut remaining, (docs as u128) * 4, "shard global-id list", path)?;
+        let mut globals = Vec::with_capacity(docs);
+        for _ in 0..docs {
+            let mut b = [0u8; 4];
+            r.read_exact(&mut b)?;
+            globals.push(u32::from_le_bytes(b));
+        }
+        take(&mut remaining, 9, "shard trailer", path)?;
+        let appended = read_u64(&mut r)? as usize;
+        let mut flag = [0u8; 1];
+        r.read_exact(&mut flag)?;
+        let index = match flag[0] {
+            0 => None,
+            1 => {
+                let (ix, consumed) = read_body(&mut r, remaining).map_err(|e| match e {
+                    EmdError::Config(m) => {
+                        EmdError::config(format!("{m} (shard {s} of {path:?})"))
+                    }
+                    other => other,
+                })?;
+                remaining -= consumed;
+                Some(ix)
+            }
+            other => {
+                return Err(EmdError::config(format!(
+                    "corrupt EMDX manifest in {path:?}: shard {s} index flag is {other}"
+                )))
+            }
+        };
+        shards.push(ManifestShard { globals, appended, index });
+    }
+    emd_ensure!(
+        remaining == 0,
+        config,
+        "corrupt EMDX manifest in {path:?}: {remaining} trailing bytes"
+    );
+    Ok(Manifest { corpus_fingerprint, max_docs_per_shard, shards })
+}
+
+/// Load a manifest for a specific corpus dataset, rejecting a stale sidecar
+/// whose embedded fingerprint does not match `expected_fingerprint`.
+pub fn load_manifest_for(path: &Path, expected_fingerprint: u64) -> EmdResult<Manifest> {
+    let man = load_manifest(path)?;
+    if man.corpus_fingerprint != expected_fingerprint {
+        return Err(EmdError::config(format!(
+            "stale shard manifest {path:?}: fingerprint {:#018x} does not match dataset \
+             {:#018x} — rebuild with `emdpar shard --op build`",
+            man.corpus_fingerprint, expected_fingerprint
+        )));
+    }
+    Ok(man)
+}
+
+/// Reconstruct the live corpus a manifest describes over its (already
+/// loaded) corpus dataset: shard datasets are gathered bit-exactly from the
+/// corpus rows, per-shard engines are rebuilt, and each persisted index is
+/// validated against the shard data it claims to cover (shape, dim and
+/// fingerprint) before it is trusted.
+///
+/// `index_params` follows the caller's configuration: `None` drops any
+/// persisted indexes (exhaustive shards); `Some` trains a fresh index for a
+/// shard the manifest left exhaustive.  `max_docs_override` replaces the
+/// persisted append policy when the caller's config carries its own.
+pub fn reconstruct(
+    dataset: &Dataset,
+    manifest: &Manifest,
+    max_docs_override: Option<usize>,
+    engine_params: EngineParams,
+    index_params: Option<&IndexParams>,
+) -> EmdResult<ShardedCorpus> {
+    emd_ensure!(
+        manifest.num_docs() == dataset.len(),
+        config,
+        "manifest covers {} docs but the dataset has {}",
+        manifest.num_docs(),
+        dataset.len()
+    );
+    // reject out-of-range global ids *before* any row is gathered — a
+    // corrupt manifest must surface as a clean error the engine's
+    // log-and-rebuild fallback can catch, never an index panic
+    for (s, ms) in manifest.shards.iter().enumerate() {
+        for &g in &ms.globals {
+            emd_ensure!(
+                (g as usize) < dataset.len(),
+                config,
+                "manifest shard {s} owns global id {g} but the dataset has {} docs",
+                dataset.len()
+            );
+        }
+    }
+    let mut shards = Vec::with_capacity(manifest.shards.len());
+    for (s, ms) in manifest.shards.iter().enumerate() {
+        let name = format!("{}/shard{}", dataset.name, s);
+        let shard_ds = Arc::new(gather_rows(dataset, &ms.globals, name));
+        let index = match (&ms.index, index_params) {
+            (Some(ix), Some(_)) => {
+                emd_ensure!(
+                    ix.num_points() == shard_ds.len(),
+                    config,
+                    "shard {s} index covers {} rows but the shard has {}",
+                    ix.num_points(),
+                    shard_ds.len()
+                );
+                emd_ensure!(
+                    ix.dim() == shard_ds.embeddings.dim(),
+                    config,
+                    "shard {s} index dim {} does not match embedding dim {}",
+                    ix.dim(),
+                    shard_ds.embeddings.dim()
+                );
+                let fp = dataset_fingerprint(&shard_ds);
+                emd_ensure!(
+                    ix.fingerprint() == fp,
+                    config,
+                    "stale shard {s} index: fingerprint {:#018x} does not match shard data \
+                     {:#018x}",
+                    ix.fingerprint(),
+                    fp
+                );
+                Some(ix.clone())
+            }
+            // config has no index: run the shard exhaustive
+            (_, None) => None,
+            // config wants an index the manifest does not carry: train one
+            (None, Some(p)) => {
+                if shard_ds.is_empty() {
+                    None
+                } else {
+                    let engine =
+                        crate::lc::LcEngine::new(Arc::clone(&shard_ds), engine_params);
+                    Some(IvfIndex::train(
+                        engine.wcd_centroids(),
+                        shard_ds.embeddings.dim(),
+                        p,
+                        engine_params.threads,
+                        dataset_fingerprint(&shard_ds),
+                    )?)
+                }
+            }
+        };
+        shards.push(Shard::from_parts(
+            shard_ds,
+            ms.globals.clone(),
+            ms.appended,
+            index,
+            engine_params,
+        ));
+    }
+    let params = ShardParams {
+        shards: shards.len().max(1),
+        max_docs_per_shard: max_docs_override.unwrap_or(manifest.max_docs_per_shard).max(1),
+    };
+    ShardedCorpus::from_parts(
+        dataset.embeddings.clone(),
+        shards,
+        params,
+        engine_params,
+        index_params.copied(),
+    )
+}
+
+fn take(remaining: &mut u64, bytes: u128, what: &str, path: &Path) -> EmdResult<()> {
+    emd_ensure!(
+        bytes <= *remaining as u128,
+        config,
+        "corrupt EMDX manifest in {path:?}: {what} needs {bytes} bytes but only \
+         {remaining} remain"
+    );
+    *remaining -= bytes as u64;
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_text, TextConfig};
+    use std::path::PathBuf;
+
+    fn dataset() -> Dataset {
+        generate_text(&TextConfig {
+            n: 36,
+            classes: 3,
+            vocab: 180,
+            dim: 8,
+            doc_len: 18,
+            seed: 41,
+            ..Default::default()
+        })
+    }
+
+    fn index_params() -> IndexParams {
+        IndexParams { nlist: 3, nprobe: 1, train_iters: 5, seed: 9, min_points_per_list: 1 }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("emdpar_shard_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn build(ds: &Dataset, with_index: bool) -> ShardedCorpus {
+        let ixp = index_params();
+        ShardedCorpus::build(
+            ds,
+            ShardParams { shards: 3, max_docs_per_shard: 100 },
+            EngineParams { threads: 2, ..Default::default() },
+            with_index.then_some(&ixp),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_restores_layout_and_indexes() {
+        let ds = dataset();
+        let corpus = build(&ds, true);
+        let fp = dataset_fingerprint(&ds);
+        let path = tmp("roundtrip.emdx");
+        save_manifest(&corpus, fp, &path).unwrap();
+
+        let man = load_manifest_for(&path, fp).unwrap();
+        assert_eq!(man.num_docs(), 36);
+        assert_eq!(man.max_docs_per_shard, 100);
+        assert_eq!(man.shards.len(), 3);
+        for (ms, shard) in man.shards.iter().zip(corpus.shards()) {
+            assert_eq!(ms.globals, shard.globals());
+            assert_eq!(ms.appended, shard.appended());
+            assert_eq!(ms.index.as_ref(), shard.index());
+        }
+        let ixp = index_params();
+        let back = reconstruct(
+            &ds,
+            &man,
+            None,
+            EngineParams { threads: 2, ..Default::default() },
+            Some(&ixp),
+        )
+        .unwrap();
+        assert_eq!(back.len(), corpus.len());
+        assert_eq!(back.num_shards(), corpus.num_shards());
+        for (a, b) in back.shards().iter().zip(corpus.shards()) {
+            assert_eq!(a.globals(), b.globals());
+            assert_eq!(a.index(), b.index());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stale_and_wrong_version_rejected() {
+        let ds = dataset();
+        let corpus = build(&ds, false);
+        let fp = dataset_fingerprint(&ds);
+        let path = tmp("stale.emdx");
+        save_manifest(&corpus, fp, &path).unwrap();
+        assert!(load_manifest_for(&path, fp).is_ok());
+        let err = load_manifest_for(&path, fp.wrapping_add(1)).unwrap_err();
+        assert!(err.to_string().contains("stale shard manifest"), "{err}");
+
+        // a v1 single-index sidecar is cleanly rejected by the manifest
+        // loader (and vice versa, see rust/tests/index_pruning.rs)
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(b"EMDX");
+        v1.extend_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &v1).unwrap();
+        let err = load_manifest(&path).unwrap_err();
+        assert!(err.to_string().contains("unsupported EMDX version 1"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncation_and_absurd_counts_rejected_before_allocation() {
+        let ds = dataset();
+        let corpus = build(&ds, true);
+        let fp = dataset_fingerprint(&ds);
+        let path = tmp("corrupt.emdx");
+        save_manifest(&corpus, fp, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // truncated tail: clean error, no panic
+        std::fs::write(&path, &full[..full.len() - 7]).unwrap();
+        assert!(load_manifest(&path).is_err());
+        // absurd shard count: bounded against the file length before the
+        // shard vector is allocated
+        let mut bogus = Vec::new();
+        bogus.extend_from_slice(b"EMDX");
+        bogus.extend_from_slice(&2u32.to_le_bytes());
+        bogus.extend_from_slice(&0u64.to_le_bytes()); // fingerprint
+        bogus.extend_from_slice(&10u64.to_le_bytes()); // max docs
+        bogus.extend_from_slice(&(1u64 << 50).to_le_bytes()); // num_shards
+        std::fs::write(&path, &bogus).unwrap();
+        let err = load_manifest(&path).unwrap_err();
+        assert!(err.to_string().contains("corrupt EMDX manifest"), "{err}");
+        // absurd per-shard doc count: bounded the same way
+        let mut bogus = Vec::new();
+        bogus.extend_from_slice(b"EMDX");
+        bogus.extend_from_slice(&2u32.to_le_bytes());
+        bogus.extend_from_slice(&0u64.to_le_bytes());
+        bogus.extend_from_slice(&10u64.to_le_bytes());
+        bogus.extend_from_slice(&1u64.to_le_bytes()); // one shard
+        bogus.extend_from_slice(&(1u64 << 50).to_le_bytes()); // doc_count
+        std::fs::write(&path, &bogus).unwrap();
+        let err = load_manifest(&path).unwrap_err();
+        assert!(err.to_string().contains("corrupt EMDX manifest"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reconstruct_rejects_out_of_range_global_ids_cleanly() {
+        let ds = dataset();
+        let corpus = build(&ds, false);
+        let mut shards: Vec<ManifestShard> = corpus
+            .shards()
+            .iter()
+            .map(|s| ManifestShard {
+                globals: s.globals().to_vec(),
+                appended: s.appended(),
+                index: None,
+            })
+            .collect();
+        // a corrupted global-id entry must be a clean config error, not an
+        // index-out-of-bounds panic in the gather path
+        shards[0].globals[0] = 10_000;
+        let man = Manifest {
+            corpus_fingerprint: dataset_fingerprint(&ds),
+            max_docs_per_shard: 100,
+            shards,
+        };
+        let err = reconstruct(
+            &ds,
+            &man,
+            None,
+            EngineParams { threads: 1, ..Default::default() },
+            None,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("global id 10000"), "{err}");
+    }
+
+    #[test]
+    fn reconstruct_rejects_mismatched_dataset() {
+        let ds = dataset();
+        let corpus = build(&ds, true);
+        let man = Manifest {
+            corpus_fingerprint: dataset_fingerprint(&ds),
+            max_docs_per_shard: 100,
+            shards: corpus
+                .shards()
+                .iter()
+                .map(|s| ManifestShard {
+                    globals: s.globals().to_vec(),
+                    appended: s.appended(),
+                    index: s.index().cloned(),
+                })
+                .collect(),
+        };
+        // a different dataset of the same size: per-shard index
+        // fingerprints no longer match the gathered shard data
+        let other = generate_text(&TextConfig {
+            n: 36,
+            classes: 3,
+            vocab: 180,
+            dim: 8,
+            doc_len: 18,
+            seed: 42,
+            ..Default::default()
+        });
+        let ixp = index_params();
+        let err = reconstruct(
+            &other,
+            &man,
+            None,
+            EngineParams { threads: 2, ..Default::default() },
+            Some(&ixp),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("stale shard"), "{err}");
+        // dropping the indexes (no index config) reconstructs fine
+        assert!(reconstruct(
+            &other,
+            &man,
+            None,
+            EngineParams { threads: 2, ..Default::default() },
+            None,
+        )
+        .is_ok());
+    }
+}

@@ -1,0 +1,45 @@
+//! Sharded live-corpus subsystem: per-shard engines + IVF indexes behind a
+//! fan-out / top-ℓ-merge route, with incremental ingestion.
+//!
+//! The monolithic serving stack owns one engine and (optionally) one IVF
+//! index over one immutable corpus; any change means a full retrain.  This
+//! subsystem turns that corpus into `S` independently-owned shards — the
+//! partition-local-search-plus-cheap-merge shape the sublinear-EMD
+//! literature argues for (Do Ba et al., *Sublinear Time Algorithms for
+//! Earth Mover's Distance*; Ding et al., *Querying EMD with Low Doubling
+//! Dimensions*) — and makes the corpus **appendable at runtime**:
+//!
+//! * [`corpus`] — [`ShardedCorpus`] / [`Shard`]: per-shard CSR slices,
+//!   [`crate::lc::LcEngine`]s and shard-locally-trained
+//!   [`crate::index::IvfIndex`]es, with the
+//!   [`crate::coordinator::Router`]-derived global-id ↔ (shard, local-id)
+//!   mapping and the smallest-shard / fresh-shard append policy
+//!   ([`ShardedCorpus::append`] assigns new documents to already-trained
+//!   centroids — no retraining).
+//! * [`search`] — [`search_batch`]: fan the batch out, probe each shard's
+//!   IVF lists locally, score through the bit-identical
+//!   [`crate::lc::LcEngine::distances_batch_subset`] pipeline, and
+//!   k-way-merge per-shard top-ℓ accumulators
+//!   ([`crate::coordinator::topl::merge_query_rows`], parallel over query
+//!   rows).  `nprobe >= nlist` on every shard reproduces monolithic
+//!   exhaustive `search_batch` bit-identically.
+//! * [`manifest`] — the `EMDX` **version 2** sidecar: per-shard layout +
+//!   index + doc counts, so a restarted server reloads the same live
+//!   corpus (stale fingerprints and wrong versions rejected before
+//!   allocation).
+//!
+//! The coordinator ([`crate::coordinator::SearchEngine`]) routes through a
+//! [`ShardedCorpus`] when [`crate::config::Config::sharded`] is set, exposes
+//! appends as `add_docs` (API + TCP protocol), and persists the layout next
+//! to file-backed datasets.
+
+pub mod corpus;
+pub mod manifest;
+pub mod search;
+
+pub use corpus::{AppendOutcome, Shard, ShardStat, ShardedCorpus};
+pub use manifest::{
+    load_manifest, load_manifest_for, reconstruct, save_manifest, Manifest, ManifestShard,
+    MANIFEST_VERSION,
+};
+pub use search::{search, search_batch, ShardedBatch, ShardedSearch};

@@ -1,0 +1,252 @@
+//! Fan-out top-ℓ search over a [`ShardedCorpus`]: probe each shard locally,
+//! score candidates through the shard engine's bit-identical
+//! Phase-1/Phase-2 pipeline, and k-way-merge the per-shard top-ℓ
+//! accumulators into global results.
+//!
+//! ## Bit-identity contract
+//!
+//! Every shard scores its rows through the same machinery a monolithic
+//! sweep uses — the shard dataset's rows are bit-exact copies, the query
+//! plan depends only on the (shared) vocabulary, and every Phase-2 row cost
+//! is independent of its neighbors — so a shard-local distance equals the
+//! monolithic distance for the same (query, document) pair **bit for bit**.
+//! Per-shard accumulators keep the ℓ best by `(distance, global id)`; each
+//! shard's global ids are strictly ascending in local order, so shard-local
+//! tie-breaks agree with global ones, and the k-way merge
+//! ([`crate::coordinator::topl::merge_query_rows`]) of per-shard top-ℓ sets
+//! contains the global top-ℓ.  With `nprobe >= nlist` on every shard (or no
+//! indexes at all) the fan-out therefore reproduces monolithic exhaustive
+//! `search_batch` exactly: same ids, bit-equal distances, any shard count.
+//!
+//! Smaller `nprobe` probes each shard's IVF lists locally and trades recall
+//! for a sublinear number of scored candidates, exactly like the
+//! single-index pruned route — but trained and probed per shard.
+
+use std::time::{Duration, Instant};
+
+use crate::core::{EmdResult, Histogram, Method};
+use crate::coordinator::topl::merge_query_rows;
+use crate::coordinator::TopL;
+use crate::index::pruned_search_batch;
+
+use super::corpus::ShardedCorpus;
+
+/// One query's sharded outcome with fan-out work accounting.
+#[derive(Debug, Clone)]
+pub struct ShardedSearch {
+    /// (distance, **global** document id), best first — distances are
+    /// bit-identical to the monolithic values for the same pairs.
+    pub hits: Vec<(f32, usize)>,
+    /// Label of each hit.
+    pub labels: Vec<u16>,
+    /// Database rows scored for this query, summed over shards.
+    pub candidates: usize,
+    /// Inverted lists visited for this query, summed over pruned shards.
+    pub lists_probed: usize,
+    /// Whether any shard served this query through its IVF index.
+    pub pruned: bool,
+}
+
+/// A whole batch's sharded outcome.
+#[derive(Debug, Clone)]
+pub struct ShardedBatch {
+    pub results: Vec<ShardedSearch>,
+    /// Wall time of the final cross-shard k-way merge (the fan-out
+    /// overhead a monolithic corpus does not pay).
+    pub merge_time: Duration,
+}
+
+/// Fan a query batch out across shards and k-way-merge per-shard top-ℓ.
+///
+/// `nprobe = None` uses the corpus' configured per-shard index default;
+/// each shard clamps the effective width to its own list count, so any
+/// width at or above every shard's `nlist` is the exhaustive
+/// (bit-identical) route.
+pub fn search_batch(
+    corpus: &ShardedCorpus,
+    queries: &[Histogram],
+    method: Method,
+    l: usize,
+    nprobe: Option<usize>,
+) -> EmdResult<ShardedBatch> {
+    let nq = queries.len();
+    if nq == 0 {
+        return Ok(ShardedBatch { results: Vec::new(), merge_time: Duration::ZERO });
+    }
+    let l = l.max(1);
+    let np = corpus.effective_nprobe(nprobe, corpus.index_params().map(|p| p.nprobe));
+
+    let mut shard_accs: Vec<Vec<TopL>> = Vec::with_capacity(corpus.num_shards());
+    let mut candidates = vec![0usize; nq];
+    let mut lists_probed = vec![0usize; nq];
+    let mut pruned_any = false;
+    for shard in corpus.shards() {
+        let route = match (shard.index(), np) {
+            (Some(ix), Some(np)) if np < ix.nlist() => Some((ix, np)),
+            _ => None,
+        };
+        let accs = match route {
+            Some((ix, np)) => {
+                // shard-local IVF probe; the whole batch shares one
+                // candidate-union scoring dispatch per shard
+                let pruned = pruned_search_batch(shard.engine(), ix, queries, method, l, np)?;
+                pruned_any = true;
+                let mut accs = Vec::with_capacity(nq);
+                for (q, pr) in pruned.into_iter().enumerate() {
+                    let mut top = TopL::new(l);
+                    // local → global is strictly monotone, so pushing the
+                    // already-sorted hits preserves their order exactly
+                    for (d, local) in pr.hits {
+                        top.push(d, shard.global(local));
+                    }
+                    candidates[q] += pr.candidates;
+                    lists_probed[q] += pr.lists_probed;
+                    accs.push(top);
+                }
+                accs
+            }
+            None => {
+                // exhaustive shard sweep through the multi-query kernel
+                let n = shard.len();
+                let flat = shard.engine().distances_batch(queries, method);
+                let mut accs = Vec::with_capacity(nq);
+                for q in 0..nq {
+                    let row = &flat[q * n..(q + 1) * n];
+                    let mut top = TopL::new(l);
+                    for (local, &d) in row.iter().enumerate() {
+                        top.push(d, shard.global(local));
+                    }
+                    candidates[q] += n;
+                    accs.push(top);
+                }
+                accs
+            }
+        };
+        shard_accs.push(accs);
+    }
+
+    // cross-shard k-way merge, parallel over the batch's query rows
+    let t0 = Instant::now();
+    let merged = merge_query_rows(&shard_accs, nq, l, corpus.engine_params().threads);
+    let merge_time = t0.elapsed();
+
+    let results = merged
+        .into_iter()
+        .enumerate()
+        .map(|(q, acc)| {
+            let hits = acc.into_sorted();
+            let labels = hits.iter().map(|&(_, id)| corpus.label(id)).collect();
+            ShardedSearch {
+                hits,
+                labels,
+                candidates: candidates[q],
+                lists_probed: lists_probed[q],
+                pruned: pruned_any,
+            }
+        })
+        .collect();
+    Ok(ShardedBatch { results, merge_time })
+}
+
+/// Single-query convenience wrapper around [`search_batch`].
+pub fn search(
+    corpus: &ShardedCorpus,
+    query: &Histogram,
+    method: Method,
+    l: usize,
+    nprobe: Option<usize>,
+) -> EmdResult<ShardedSearch> {
+    let mut out = search_batch(corpus, std::slice::from_ref(query), method, l, nprobe)?;
+    Ok(out.results.pop().expect("one query in, one result out"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{IndexParams, ShardParams};
+    use crate::data::{generate_text, TextConfig};
+    use crate::lc::{EngineParams, LcEngine};
+    use std::sync::Arc;
+
+    fn setup(shards: usize, index: bool) -> (Arc<crate::core::Dataset>, ShardedCorpus) {
+        let ds = Arc::new(generate_text(&TextConfig {
+            n: 60,
+            classes: 4,
+            vocab: 250,
+            dim: 10,
+            doc_len: 25,
+            seed: 23,
+            ..Default::default()
+        }));
+        let ixp =
+            IndexParams { nlist: 5, nprobe: 2, train_iters: 6, seed: 3, min_points_per_list: 1 };
+        let corpus = ShardedCorpus::build(
+            &ds,
+            ShardParams { shards, max_docs_per_shard: 1 << 20 },
+            EngineParams { threads: 2, ..Default::default() },
+            index.then_some(&ixp),
+        )
+        .unwrap();
+        (ds, corpus)
+    }
+
+    #[test]
+    fn exhaustive_fanout_matches_monolithic_topl() {
+        let (ds, corpus) = setup(3, false);
+        let eng =
+            LcEngine::new(Arc::clone(&ds), EngineParams { threads: 2, ..Default::default() });
+        let queries: Vec<Histogram> = (0..4).map(|u| ds.histogram(u * 7)).collect();
+        for method in [Method::Rwmd, Method::Act { k: 2 }, Method::Wcd] {
+            let batch = search_batch(&corpus, &queries, method, 6, None).unwrap();
+            assert!(!batch.results[0].pruned);
+            for (q, res) in queries.iter().zip(&batch.results) {
+                let row = eng.distances(q, method);
+                let mut want = TopL::new(6);
+                want.push_slice(&row, 0);
+                assert_eq!(res.hits, want.into_sorted(), "{method}");
+                assert_eq!(res.candidates, ds.len());
+            }
+        }
+    }
+
+    #[test]
+    fn full_probe_equals_exhaustive_per_shard() {
+        let (_, corpus) = setup(3, true);
+        let queries: Vec<Histogram> = (0..3).map(|u| corpus.histogram(u * 11)).collect();
+        let exhaustive =
+            search_batch(&corpus, &queries, Method::Rwmd, 5, Some(usize::MAX >> 1)).unwrap();
+        let (_, plain) = setup(3, false);
+        let want = search_batch(&plain, &queries, Method::Rwmd, 5, None).unwrap();
+        for (a, b) in exhaustive.results.iter().zip(&want.results) {
+            assert_eq!(a.hits, b.hits);
+        }
+    }
+
+    #[test]
+    fn pruned_fanout_scores_fewer_candidates_and_finds_self() {
+        let (ds, corpus) = setup(3, true);
+        let q = ds.histogram(12);
+        let res = search(&corpus, &q, Method::Rwmd, 5, Some(1)).unwrap();
+        assert!(res.pruned);
+        assert!(res.candidates < ds.len(), "nprobe 1 must prune somewhere");
+        assert!(res.lists_probed >= corpus.num_shards());
+        assert_eq!(res.hits[0].1, 12, "a database query finds itself");
+        assert!(res.hits[0].0.abs() < 1e-5);
+        assert_eq!(res.labels[0], ds.labels[12]);
+    }
+
+    #[test]
+    fn empty_corpus_returns_empty_hits() {
+        let (ds, _) = setup(1, false);
+        let empty = ShardedCorpus::build(
+            &crate::core::Dataset::new("none", ds.embeddings.clone(), &[], Vec::new()),
+            ShardParams { shards: 2, max_docs_per_shard: 10 },
+            EngineParams { threads: 1, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let res = search(&empty, &ds.histogram(0), Method::Rwmd, 4, None).unwrap();
+        assert!(res.hits.is_empty());
+        assert_eq!(res.candidates, 0);
+    }
+}

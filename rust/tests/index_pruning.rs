@@ -199,6 +199,53 @@ fn persistence_roundtrip_bit_exact_and_stale_rejected() {
 }
 
 #[test]
+fn emdx_truncated_tail_and_wrong_version_rejected_before_allocation() {
+    let ds = dataset();
+    let eng = lc_engine(&ds);
+    let ix = train(&eng, 10);
+    let dir = std::env::temp_dir().join("emdpar_index_pruning_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("hardening.emdx");
+    save_index(&ix, &path).unwrap();
+    let full = std::fs::read(&path).unwrap();
+
+    // truncated tail: every cut point fails cleanly (no panic, no abort),
+    // including cuts inside the header that drive allocation sizes
+    for cut in [full.len() - 1, full.len() - 9, 60, 20, 9] {
+        std::fs::write(&path, &full[..cut]).unwrap();
+        assert!(load_index(&path).is_err(), "cut at {cut} must be rejected");
+    }
+
+    // wrong version: rejected right after the 8-byte preamble, before any
+    // header field can size an allocation
+    for bad_version in [0u32, 3, 99] {
+        let mut bytes = full.clone();
+        bytes[4..8].copy_from_slice(&bad_version.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_index(&path).unwrap_err();
+        assert!(
+            err.to_string().contains("unsupported EMDX version"),
+            "version {bad_version}: {err}"
+        );
+    }
+
+    // version-2 sidecars are the shard manifest: the v1 loader rejects
+    // them cleanly, and the v2 loader rejects v1 files symmetrically, so a
+    // config switch between the monolithic index and the sharded corpus
+    // falls back to a rebuild instead of misreading the file
+    let mut v2 = full.clone();
+    v2[4..8].copy_from_slice(&2u32.to_le_bytes());
+    std::fs::write(&path, &v2).unwrap();
+    let err = load_index(&path).unwrap_err();
+    assert!(err.to_string().contains("unsupported EMDX version 2"), "{err}");
+    std::fs::write(&path, &full).unwrap();
+    let err = emdpar::shard::load_manifest(&path).unwrap_err();
+    assert!(err.to_string().contains("unsupported EMDX version 1"), "{err}");
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn search_engine_integration_routes_and_reports() {
     let ds = dataset();
     let config = Config {
