@@ -14,8 +14,7 @@ use std::sync::Arc;
 use emdpar::config::IndexParams;
 use emdpar::data::{generate_text, TextConfig};
 use emdpar::eval::recall_at;
-use emdpar::index::{dataset_fingerprint, pruned_search_batch, IvfIndex};
-use emdpar::prelude::{EngineParams, Histogram, LcEngine, Method};
+use emdpar::prelude::{EngineBuilder, Histogram, Method, SearchRequest};
 use emdpar::util::json::Json;
 use emdpar::util::stats::timed;
 
@@ -43,31 +42,34 @@ fn main() {
         seed: 31,
         ..Default::default()
     }));
-    let eng = LcEngine::new(
-        Arc::clone(&ds),
-        EngineParams { threads, symmetric: false, ..Default::default() },
-    );
-    let fp = dataset_fingerprint(&ds);
-    let (ix, t_train) = timed(|| {
-        IvfIndex::train(
-            eng.wcd_centroids(),
-            m,
-            &IndexParams { nlist, nprobe: 1, train_iters: 10, seed: 7, min_points_per_list: 2 },
-            threads,
-            fp,
-        )
-        .unwrap()
+    // the serving engine: dataset + trained IVF index behind the query
+    // planner (every sweep point below dispatches a SearchRequest)
+    let (engine, t_train) = timed(|| {
+        EngineBuilder::new()
+            .dataset(Arc::clone(&ds))
+            .threads(threads)
+            .symmetric(false)
+            .index(IndexParams {
+                nlist,
+                nprobe: 1,
+                train_iters: 10,
+                seed: 7,
+                min_points_per_list: 2,
+            })
+            .build_search()
+            .unwrap()
     });
+    let trained_nlist = engine.index().map(|ix| ix.nlist()).unwrap_or(0);
     println!(
-        "trained {} lists over {n} docs in {:.2}s\n",
-        ix.nlist(),
+        "trained {trained_nlist} lists over {n} docs in {:.2}s (engine build included)\n",
         t_train.as_secs_f64()
     );
 
     let queries: Vec<Histogram> = (0..nq).map(|i| ds.histogram(i * n / nq)).collect();
 
-    // exhaustive truth + baseline timing
-    let (flat, t_exh) = timed(|| eng.distances_batch(&queries, method));
+    // exhaustive truth + baseline timing (the planner's own scoring engine)
+    let native = engine.native();
+    let (flat, t_exh) = timed(|| native.distances_batch(&queries, method));
     let truth: Vec<Vec<usize>> = (0..nq)
         .map(|qi| {
             let row = &flat[qi * n..(qi + 1) * n];
@@ -88,20 +90,19 @@ fn main() {
 
     let mut rows = Vec::new();
     for &nprobe in &[1usize, 2, 4, 8, 16, 32, 64] {
-        if nprobe > ix.nlist() {
+        if nprobe > trained_nlist {
             continue;
         }
-        let (pruned, t) =
-            timed(|| pruned_search_batch(&eng, &ix, &queries, method, l, nprobe).unwrap());
+        let request =
+            SearchRequest::batch(queries.clone()).method(method).topl(l).nprobe(nprobe);
+        let (resp, t) = timed(|| engine.execute(&request).unwrap());
         let mut recall = 0.0f64;
-        let mut frac = 0.0f64;
-        for (t_ids, pr) in truth.iter().zip(&pruned) {
-            let got: Vec<usize> = pr.hits.iter().map(|&(_, id)| id).collect();
+        for (t_ids, res) in truth.iter().zip(&resp.results) {
+            let got: Vec<usize> = res.hits.iter().map(|&(_, id)| id).collect();
             recall += recall_at(t_ids, &got);
-            frac += pr.candidates as f64 / n as f64;
         }
         recall /= nq as f64;
-        frac /= nq as f64;
+        let frac = resp.stats.candidates_scored as f64 / (nq * n) as f64;
         let qps = nq as f64 / t.as_secs_f64();
         let speedup = t_exh.as_secs_f64() / t.as_secs_f64();
         println!("{nprobe:>6} {frac:>10.3} {recall:>10.3} {qps:>10.1} {speedup:>9.2}x");
@@ -126,7 +127,7 @@ fn main() {
                 ("m", m.into()),
                 ("doc_len", doc_len.into()),
                 ("queries", nq.into()),
-                ("nlist", ix.nlist().into()),
+                ("nlist", trained_nlist.into()),
                 ("method", method.name().into()),
                 ("l", l.into()),
                 ("threads", threads.into()),

@@ -16,8 +16,7 @@ use emdpar::config::{IndexParams, ShardParams};
 use emdpar::coordinator::TopL;
 use emdpar::data::{generate_text, TextConfig};
 use emdpar::eval::recall_at;
-use emdpar::prelude::{EngineParams, Histogram, LcEngine, Method};
-use emdpar::shard::{search_batch, ShardedCorpus};
+use emdpar::prelude::{EngineBuilder, EngineParams, Histogram, LcEngine, Method, SearchRequest};
 use emdpar::util::json::Json;
 use emdpar::util::stats::timed;
 
@@ -70,43 +69,48 @@ fn main() {
     let mut shard_rows = Vec::new();
     let mut best_cheap_recall = 0.0f64;
     for shards in [1usize, 2, 4, 8] {
-        let (corpus, t_build) = timed(|| {
-            ShardedCorpus::build(
-                &ds,
-                ShardParams { shards, max_docs_per_shard: usize::MAX >> 1 },
-                ep,
-                Some(&ixp),
-            )
-            .unwrap()
+        // the serving engine: sharded corpus + per-shard IVF behind the
+        // query planner (every sweep point dispatches a SearchRequest
+        // through the parallel fan-out route)
+        let (engine, t_build) = timed(|| {
+            EngineBuilder::new()
+                .dataset(Arc::clone(&ds))
+                .threads(threads)
+                .symmetric(false)
+                .index(ixp)
+                .sharded(ShardParams { shards, max_docs_per_shard: usize::MAX >> 1 })
+                .build_search()
+                .unwrap()
         });
+        let stats = engine.shard_stats().unwrap_or_default();
         println!(
             "S={shards}: built {} shards in {:.2}s (per-shard nlist <= {nlist})",
-            corpus.num_shards(),
+            stats.len(),
             t_build.as_secs_f64()
         );
         println!(
             "{:>8} {:>10} {:>10} {:>10} {:>11} {:>10}",
             "nprobe", "cand_frac", "recall", "qps", "merge_frac", "speedup"
         );
-        let max_np = corpus.max_nlist().unwrap_or(1);
+        let max_np = stats.iter().filter_map(|s| s.nlist).max().unwrap_or(1);
         let mut sweep = Vec::new();
         for &nprobe in &[1usize, 2, 4, 8, 16, 32] {
             if nprobe > max_np {
                 continue;
             }
-            let (batch, t) =
-                timed(|| search_batch(&corpus, &queries, method, l, Some(nprobe)).unwrap());
+            let request =
+                SearchRequest::batch(queries.clone()).method(method).topl(l).nprobe(nprobe);
+            let (resp, t) = timed(|| engine.execute(&request).unwrap());
             let mut recall = 0.0f64;
-            let mut frac = 0.0f64;
-            for (t_ids, r) in truth.iter().zip(&batch.results) {
+            for (t_ids, r) in truth.iter().zip(&resp.results) {
                 let got: Vec<usize> = r.hits.iter().map(|&(_, id)| id).collect();
                 recall += recall_at(t_ids, &got);
-                frac += r.candidates as f64 / n as f64;
             }
             recall /= nq as f64;
-            frac /= nq as f64;
+            let frac = resp.stats.candidates_scored as f64 / (nq * n) as f64;
             let qps = nq as f64 / t.as_secs_f64();
-            let merge_frac = batch.merge_time.as_secs_f64() / t.as_secs_f64().max(1e-12);
+            let merge_frac =
+                (resp.stats.merge_us as f64 / 1e6) / t.as_secs_f64().max(1e-12);
             let speedup = t_exh.as_secs_f64() / t.as_secs_f64();
             println!(
                 "{nprobe:>8} {frac:>10.3} {recall:>10.3} {qps:>10.1} {merge_frac:>11.4} {speedup:>9.2}x"
@@ -124,8 +128,9 @@ fn main() {
             ]));
         }
         // append throughput: trained-once / assign-incrementally path
-        let mut live = corpus.clone();
-        let (outcome, t_append) = timed(|| live.append(&append_docs, &append_labels).unwrap());
+        // (synthetic dataset: nothing persisted, the append is in-memory)
+        let (outcome, t_append) =
+            timed(|| engine.add_docs(&append_docs, &append_labels).unwrap());
         let append_dps = append_n as f64 / t_append.as_secs_f64();
         println!(
             "append: {append_n} docs in {:.3}s ({append_dps:.0} docs/s, {} shard(s) touched)\n",

@@ -12,7 +12,8 @@ use std::path::Path;
 
 use emdpar::data::{generate_text, TextConfig};
 use emdpar::prelude::{
-    cascade_search, DatasetSpec, Distance, EmdResult, EngineBuilder, Method, MethodRegistry,
+    CascadeSpec, DatasetSpec, Distance, EmdResult, EngineBuilder, Method, MethodRegistry,
+    SearchRequest,
 };
 use emdpar::runtime::{ArtifactEngine, Executor};
 
@@ -30,7 +31,7 @@ fn main() -> EmdResult<()> {
     );
 
     // 2. query image #0 under each distance measure — one canonical enum,
-    //    one search entry point
+    //    one composable request type, one execute entry point
     let query = engine.dataset().histogram(0);
     let label = engine.dataset().labels[0];
     println!("query: image 0, digit class {label}");
@@ -42,12 +43,13 @@ fn main() -> EmdResult<()> {
         Method::Act { k: 2 },
         Method::Act { k: 8 },
     ] {
-        let res = engine.search(&query, method, 5)?;
-        let labels: Vec<u16> = res.labels.clone();
+        let request = SearchRequest::query(query.clone()).method(method).topl(5);
+        let response = engine.execute(&request)?;
+        let res = &response.results[0];
         println!(
             "  {:<6} top-5 labels {:?}  best distance {:.4}",
             method.name(),
-            labels,
+            res.labels,
             res.hits[0].0
         );
     }
@@ -58,36 +60,37 @@ fn main() -> EmdResult<()> {
         m.mean_latency_us()
     );
 
-    // 3. exact EMD through the cascade: RWMD prefilter over the database,
-    //    min-cost-flow only on the survivors (selected via MethodRegistry)
-    let lc = EngineBuilder::new()
-        .dataset_spec(DatasetSpec::SynthMnist { n: 200, background: 0.0, seed: 42 })
-        .symmetric(false)
-        .build_lc()?;
-    let q = lc.dataset().histogram(0);
-    let res = cascade_search(&lc, &q, Method::Exact, 5, 8)?;
+    // 3. exact EMD through the cascade stage of the planner: RWMD prefilter
+    //    over the database, min-cost-flow only on the survivors — the same
+    //    request shape composes with IVF pruning and sharded corpora
+    let request = SearchRequest::query(query.clone())
+        .topl(5)
+        .cascade(CascadeSpec::new(Method::Exact).overfetch(8).certified(true));
+    let response = engine.execute(&request)?;
+    println!("\nplan: {}", response.plan.describe());
     println!(
-        "\ncascade (RWMD -> exact EMD): reranked {} of {} docs, certified: {}",
-        res.reranked,
-        lc.dataset().len(),
-        res.certified
+        "cascade (RWMD -> exact EMD): reranked {} of {} docs, certified: {}",
+        response.stats.reranked,
+        engine.num_docs(),
+        response.stats.certified[0]
     );
-    for (rank, &(d, hit)) in res.hits.iter().enumerate() {
-        println!(
-            "  #{:<3} id={hit:<6} label={:<4} emd={d:.4}",
-            rank + 1,
-            lc.dataset().labels[hit]
-        );
+    let res = &response.results[0];
+    for (rank, (&(d, hit), &lab)) in res.hits.iter().zip(&res.labels).enumerate() {
+        println!("  #{:<3} id={hit:<6} label={lab:<4} emd={d:.4}", rank + 1);
     }
 
     // 4. per-pair trait objects from the registry: every method, including
     //    the quadratic comparators, behind one interface
-    let registry = MethodRegistry::new(lc.params().metric);
-    let (a, b) = (lc.dataset().histogram(0), lc.dataset().histogram(1));
+    let registry = MethodRegistry::new(engine.config().metric);
+    let (a, b) = (engine.dataset().histogram(0), engine.dataset().histogram(1));
     println!("\nper-pair distances, image 0 vs image 1:");
     for method in [Method::BowAdjusted, Method::Rwmd, Method::Act { k: 4 }, Method::Ict, Method::Sinkhorn, Method::Exact] {
         let d = registry.distance(method);
-        println!("  {:<8} {:.5}", d.name(), d.distance(&lc.dataset().embeddings, &a, &b)?);
+        println!(
+            "  {:<8} {:.5}",
+            d.name(),
+            d.distance(&engine.dataset().embeddings, &a, &b)?
+        );
     }
 
     // 5. the same pipeline through the PJRT artifact path (three layers:

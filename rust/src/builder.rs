@@ -16,9 +16,15 @@
 //!
 //! let engine = EngineBuilder::new()
 //!     .dataset_spec(DatasetSpec::SynthMnist { n: 1000, background: 0.0, seed: 42 })
-//!     .method(Method::Act { k: 2 })
+//!     .method(Method::Act { k: 2 })     // request default
+//!     .topl(16)                         // request default
+//!     .overfetch(8)                     // request default (cascade stage 1)
 //!     .threads(8)
 //!     .build_search()?;
+//! // one composable entry point: defaults above fill any unset field
+//! let request = SearchRequest::query(engine.dataset().histogram(0)).topl(5);
+//! let response = engine.execute(&request)?;
+//! assert_eq!(response.results[0].hits.len(), 5);
 //! # Ok::<(), EmdError>(())
 //! ```
 
@@ -99,8 +105,18 @@ impl EngineBuilder {
         self
     }
 
+    /// Request default: results per query when a
+    /// [`crate::coordinator::SearchRequest`] leaves `l` unset.
     pub fn topl(mut self, l: usize) -> EngineBuilder {
         self.config.topl = l.max(1);
+        self
+    }
+
+    /// Request default: cascade stage 1 keeps `overfetch × ℓ` candidates
+    /// when a [`crate::coordinator::CascadeSpec`] does not carry its own
+    /// overfetch.
+    pub fn overfetch(mut self, overfetch: usize) -> EngineBuilder {
+        self.config.overfetch = overfetch.max(1);
         self
     }
 
@@ -215,11 +231,18 @@ mod tests {
             .method(Method::Act { k: 2 })
             .threads(2)
             .topl(3)
+            .overfetch(4)
             .shards(2)
             .build_search()
             .unwrap();
+        assert_eq!(eng.config().overfetch, 4);
         let q = eng.dataset().histogram(1);
-        let res = eng.search(&q, eng.config().method, eng.config().topl).unwrap();
+        // builder knobs are the request defaults: an empty request resolves
+        // to method ACT-1, top-3
+        let resp = eng.execute(&crate::coordinator::SearchRequest::query(q)).unwrap();
+        assert_eq!(resp.plan.method, Method::Act { k: 2 });
+        assert_eq!(resp.plan.l, 3);
+        let res = &resp.results[0];
         assert_eq!(res.hits.len(), 3);
         assert_eq!(res.hits[0].1, 1);
     }

@@ -104,6 +104,9 @@ pub struct Config {
     pub artifact_profile: Option<String>,
     /// top-ℓ to return per query
     pub topl: usize,
+    /// default cascade overfetch: stage 1 keeps `overfetch × ℓ` candidates
+    /// when a request's `CascadeSpec` does not carry its own
+    pub overfetch: usize,
     /// server bind address
     pub listen: String,
     /// dynamic batcher: max queries per batch
@@ -134,6 +137,7 @@ impl Default for Config {
             artifact_dir: PathBuf::from("artifacts"),
             artifact_profile: None,
             topl: 16,
+            overfetch: 8,
             listen: "127.0.0.1:7878".to_string(),
             max_batch: 8,
             linger_ms: 2,
@@ -186,6 +190,9 @@ impl Config {
         }
         if let Some(x) = json.get("topl").and_then(Json::as_usize) {
             cfg.topl = x.max(1);
+        }
+        if let Some(x) = json.get("overfetch").and_then(Json::as_usize) {
+            cfg.overfetch = x.max(1);
         }
         if let Some(s) = json.get("listen").and_then(Json::as_str) {
             cfg.listen = s.to_string();
@@ -284,6 +291,7 @@ impl Config {
 
     pub fn validate(&self) -> EmdResult<()> {
         emd_ensure!(self.threads >= 1, config, "threads must be >= 1");
+        emd_ensure!(self.overfetch >= 1, config, "overfetch must be >= 1");
         emd_ensure!(self.batch_block >= 1, config, "batch_block must be >= 1");
         emd_ensure!(self.max_batch >= 1, config, "max_batch must be >= 1");
         emd_ensure!(self.shards >= 1, config, "shards must be >= 1");

@@ -19,11 +19,17 @@
 //! admissible as a rerank measure but its non-converged plans carry no
 //! bound guarantee, so it reranks every candidate and is never certified.
 
-use crate::core::{Distance, EmdError, EmdResult, Histogram, Method};
+use crate::core::{Distance, Embeddings, EmdError, EmdResult, Histogram, Method};
 use crate::index::IvfIndex;
 use crate::lc::LcEngine;
 
 use super::topl::TopL;
+
+// The legacy entry points below ([`cascade_search`], [`cascade_search_pruned`])
+// are delegating shims over the planner's shared stage implementation
+// ([`rerank_stage`]) — the same code path a `SearchRequest` with a
+// `CascadeSpec` executes ([`crate::coordinator::plan`]), which additionally
+// composes the cascade with IVF pruning and the sharded fan-out.
 
 /// Cascade outcome with work accounting.
 #[derive(Debug, Clone)]
@@ -52,7 +58,7 @@ pub fn admissible_rerank(method: Method) -> bool {
 /// certificate sound.  Sinkhorn upper-bounds EMD *at convergence*, but a
 /// non-converged plan's cost carries no such guarantee, so Sinkhorn reranks
 /// every candidate and never claims a certificate.
-fn provably_dominates_rwmd(method: Method) -> bool {
+pub fn provably_dominates_rwmd(method: Method) -> bool {
     matches!(method, Method::Omr | Method::Act { .. } | Method::Ict | Method::Exact)
 }
 
@@ -100,25 +106,31 @@ pub fn cascade_search(
     rerank_survivors(engine, query, rerank, l, &candidates, pruned_floor, true)
 }
 
-/// Stage 2 shared by the full and index-pruned cascades: rerank the stage-1
-/// survivors through the registry's boxed [`Distance`] object, bound-prune
-/// when the rerank measure provably dominates RWMD, and compute the
-/// exactness certificate against the tightest discarded stage-1 bound.
-/// `covers_database` is whether stage 1 saw every database row — only then
-/// can the certificate claim global exactness.
-fn rerank_survivors(
-    engine: &LcEngine,
-    query: &Histogram,
+/// The planner's cascade rerank stage, shared by every cascade entry point
+/// (the legacy free functions here and [`crate::coordinator::plan`]'s
+/// `CascadeRerank` stage): rerank the stage-1 survivors through a boxed
+/// [`Distance`] object, bound-prune when the rerank measure provably
+/// dominates RWMD, and compute the exactness certificate against the
+/// tightest discarded stage-1 bound.
+///
+/// `doc` resolves a candidate id to its histogram — the monolithic paths
+/// read the engine's dataset, the sharded path reads the live corpus —
+/// and `covers_database` is whether stage 1 saw every database row (only
+/// then can the certificate claim global exactness).  `query` must already
+/// be L1-normalized.
+#[allow(clippy::too_many_arguments)] // one stage boundary, nine explicit inputs
+pub(crate) fn rerank_stage(
+    vocab: &Embeddings,
+    dist: &dyn Distance,
     rerank: Method,
+    query_normalized: &Histogram,
     l: usize,
     candidates: &[(f32, usize)],
     pruned_floor: f32,
     covers_database: bool,
+    doc: &dyn Fn(usize) -> Histogram,
 ) -> EmdResult<CascadeResult> {
     let lower_bounded = provably_dominates_rwmd(rerank);
-    let dist = engine.registry().distance(rerank);
-    let vocab = &engine.dataset().embeddings;
-    let qn = query.normalized();
     let mut out = TopL::new(l);
     let mut reranked = 0usize;
     for &(lb, u) in candidates {
@@ -132,8 +144,7 @@ fn rerank_survivors(
                 }
             }
         }
-        let doc = engine.dataset().histogram(u);
-        let d = dist.distance(vocab, &doc, &qn)? as f32;
+        let d = dist.distance(vocab, &doc(u), query_normalized)? as f32;
         out.push(d, u);
         reranked += 1;
     }
@@ -142,6 +153,31 @@ fn rerank_survivors(
         && covers_database
         && hits.last().map(|&(d, _)| d <= pruned_floor).unwrap_or(true);
     Ok(CascadeResult { hits, reranked, certified })
+}
+
+/// Legacy-shim adapter: [`rerank_stage`] over an [`LcEngine`]'s own dataset
+/// and registry.
+fn rerank_survivors(
+    engine: &LcEngine,
+    query: &Histogram,
+    rerank: Method,
+    l: usize,
+    candidates: &[(f32, usize)],
+    pruned_floor: f32,
+    covers_database: bool,
+) -> EmdResult<CascadeResult> {
+    let dist = engine.registry().distance(rerank);
+    rerank_stage(
+        &engine.dataset().embeddings,
+        dist.as_ref(),
+        rerank,
+        &query.normalized(),
+        l,
+        candidates,
+        pruned_floor,
+        covers_database,
+        &|u| engine.dataset().histogram(u),
+    )
 }
 
 /// The cascade composed with the IVF pruning index: probe the index for a

@@ -5,14 +5,11 @@
 //! [`crate::builder::EngineBuilder`] or from a [`Config`].
 
 use std::sync::{Arc, RwLock};
-use std::time::Instant;
 
 use crate::config::{Backend, Config, DatasetSpec, IndexParams, ShardParams};
 use crate::core::{Dataset, EmdError, EmdResult, Histogram, Method, MethodRegistry};
 use crate::emd_ensure;
-use crate::index::{
-    dataset_fingerprint, load_index_for, pruned_search_batch, sidecar_path, IvfIndex,
-};
+use crate::index::{dataset_fingerprint, load_index_for, sidecar_path, IvfIndex};
 use crate::lc::{EngineParams, LcEngine};
 use crate::runtime::{ArtifactEngine, Executor};
 use crate::shard::{
@@ -20,6 +17,7 @@ use crate::shard::{
 };
 
 use super::metrics::Metrics;
+use super::plan::{self, QueryPlan, SearchRequest, SearchResponse};
 use super::router::Router;
 use super::topl::TopL;
 
@@ -248,6 +246,32 @@ impl SearchEngine {
         }
     }
 
+    /// The label of document `id` in the live corpus (the sharded corpus
+    /// when configured — appended documents included — else the dataset).
+    pub fn doc_label(&self, id: usize) -> EmdResult<u16> {
+        match &self.sharded {
+            Some(lock) => {
+                let corpus = lock.read().unwrap();
+                emd_ensure!(
+                    id < corpus.len(),
+                    config,
+                    "doc id {id} out of range ({} docs)",
+                    corpus.len()
+                );
+                Ok(corpus.label(id))
+            }
+            None => {
+                emd_ensure!(
+                    id < self.dataset.len(),
+                    config,
+                    "doc id {id} out of range ({} docs)",
+                    self.dataset.len()
+                );
+                Ok(self.dataset.labels[id])
+            }
+        }
+    }
+
     /// Per-shard shape snapshot (`None` when the engine is not sharded).
     pub fn shard_stats(&self) -> Option<Vec<ShardStat>> {
         Some(self.sharded.as_ref()?.read().unwrap().shard_stats())
@@ -348,7 +372,7 @@ impl SearchEngine {
     /// Resolve the pruning route for a request: the index plus the
     /// effective probe width.  `None` means exhaustive — no index, or the
     /// effective `nprobe` covers every list anyway.
-    fn pruning_route(&self, nprobe: Option<usize>) -> Option<(&IvfIndex, usize)> {
+    pub(crate) fn pruning_route(&self, nprobe: Option<usize>) -> Option<(&IvfIndex, usize)> {
         let np = self.effective_nprobe(nprobe)?;
         let index = self.index.as_deref()?;
         if np >= index.nlist() {
@@ -361,6 +385,16 @@ impl SearchEngine {
     /// A registry configured with this engine's ground metric.
     pub fn registry(&self) -> MethodRegistry {
         self.native.registry()
+    }
+
+    /// The native engine by reference (planner-internal fast path).
+    pub(crate) fn native_ref(&self) -> &LcEngine {
+        &self.native
+    }
+
+    /// The sharded live corpus, when configured (planner-internal).
+    pub(crate) fn sharded_corpus(&self) -> Option<&RwLock<ShardedCorpus>> {
+        self.sharded.as_ref()
     }
 
     /// Full distance row for a query under the configured backend.
@@ -386,10 +420,25 @@ impl SearchEngine {
         }
     }
 
+    /// Build the execution plan for a request without running it: resolved
+    /// parameters plus the stage DAG
+    /// (`Prune → Score → [ShardFanout + Merge] → [CascadeRerank]`).
+    pub fn plan(&self, request: &SearchRequest) -> EmdResult<QueryPlan> {
+        plan::plan(self, request)
+    }
+
+    /// Plan and execute one [`SearchRequest`] — **the** serving entry
+    /// point.  Index pruning, shard fan-out and cascade rerank compose in
+    /// any combination; the legacy `search*` methods below are thin
+    /// delegating shims over this.
+    pub fn execute(&self, request: &SearchRequest) -> EmdResult<SearchResponse> {
+        plan::execute(self, request)
+    }
+
     /// Rank one distance row: top-ℓ with shard-merge.  The shard-wise
     /// accumulation exercises the same merge path the distributed router
     /// uses; results are shard-count-invariant.
-    fn rank_row(&self, row: &[f32], l: usize) -> SearchResult {
+    pub(crate) fn rank_row(&self, row: &[f32], l: usize) -> SearchResult {
         let mut acc = TopL::new(l);
         for shard in self.router.shards() {
             let mut local = TopL::new(l);
@@ -401,9 +450,28 @@ impl SearchEngine {
         SearchResult { hits, labels }
     }
 
-    /// Top-ℓ search with shard-merge (the request-path entry point).  Goes
-    /// through the IVF pruning index when one is configured; see
-    /// [`SearchEngine::search_opts`] for per-request probe control.
+    /// Build the [`SearchRequest`] a legacy `(method, l, nprobe)` call
+    /// describes (the shims below all funnel through this).
+    fn legacy_request(
+        &self,
+        queries: Vec<Histogram>,
+        method: Method,
+        l: usize,
+        nprobe: Option<usize>,
+    ) -> SearchRequest {
+        let mut req = SearchRequest::batch(queries).method(method).topl(l);
+        if let Some(np) = nprobe {
+            req = req.nprobe(np);
+        }
+        req
+    }
+
+    /// Top-ℓ search with shard-merge.  Goes through the IVF pruning index
+    /// when one is configured.
+    #[deprecated(
+        since = "0.3.0",
+        note = "construct a SearchRequest and call SearchEngine::execute"
+    )]
     pub fn search(&self, query: &Histogram, method: Method, l: usize) -> EmdResult<SearchResult> {
         self.search_opts(query, method, l, None)
     }
@@ -411,8 +479,12 @@ impl SearchEngine {
     /// Top-ℓ search with an optional per-request probe width.
     /// `nprobe = None` uses the configured index default; `Some(np)` with
     /// `np >= nlist` (or no index at all) falls back to the exhaustive
-    /// sweep.  Pruned candidate distances are bit-identical to the
-    /// exhaustive values for the same pairs.
+    /// sweep.  A delegating shim over [`SearchEngine::execute`]; results are
+    /// bit-identical to the planner's.
+    #[deprecated(
+        since = "0.3.0",
+        note = "construct a SearchRequest and call SearchEngine::execute"
+    )]
     pub fn search_opts(
         &self,
         query: &Histogram,
@@ -420,39 +492,17 @@ impl SearchEngine {
         l: usize,
         nprobe: Option<usize>,
     ) -> EmdResult<SearchResult> {
-        if self.sharded.is_some() {
-            let mut out =
-                self.search_batch_opts(std::slice::from_ref(query), method, l, nprobe)?;
-            return Ok(out.pop().expect("one query in, one result out"));
-        }
-        if let Some((index, np)) = self.pruning_route(nprobe) {
-            let t0 = Instant::now();
-            let pruned = pruned_search_batch(
-                &self.native,
-                index,
-                std::slice::from_ref(query),
-                method,
-                l,
-                np,
-            )?;
-            let pr = pruned.into_iter().next().expect("one query in, one result out");
-            self.metrics.record_probe(pr.lists_probed, pr.candidates, self.dataset.len());
-            self.metrics.record_query(t0.elapsed(), pr.candidates);
-            let labels = pr.hits.iter().map(|&(_, id)| self.dataset.labels[id]).collect();
-            return Ok(SearchResult { hits: pr.hits, labels });
-        }
-        let t0 = Instant::now();
-        let row = self.distances(query, method)?;
-        let result = self.rank_row(&row, l);
-        self.metrics.record_query(t0.elapsed(), row.len());
-        Ok(result)
+        let req = self.legacy_request(vec![query.clone()], method, l, nprobe);
+        let mut resp = self.execute(&req)?;
+        Ok(resp.results.pop().expect("one query in, one result out"))
     }
 
-    /// Batched search (dispatched by the dynamic batcher / server).  On the
-    /// native backend the whole batch flows through the engine's multi-query
-    /// Phase-1 kernel ([`LcEngine::distances_batch`]) — one vocabulary pass
-    /// per query block instead of one per query; results are bit-identical
-    /// to per-query [`SearchEngine::search`].
+    /// Batched search (one grouped dispatch through the multi-query
+    /// kernels); a delegating shim over [`SearchEngine::execute`].
+    #[deprecated(
+        since = "0.3.0",
+        note = "construct a SearchRequest and call SearchEngine::execute"
+    )]
     pub fn search_batch(
         &self,
         queries: &[Histogram],
@@ -462,11 +512,12 @@ impl SearchEngine {
         self.search_batch_opts(queries, method, l, None)
     }
 
-    /// Batched search with an optional per-request probe width (the
-    /// index-routed sibling of [`SearchEngine::search_opts`]).  On the
-    /// pruned path the whole batch shares one candidate-union scoring
-    /// dispatch, and each query ranks only its own candidates — results
-    /// equal per-query pruned search exactly.
+    /// Batched search with an optional per-request probe width; a
+    /// delegating shim over [`SearchEngine::execute`].
+    #[deprecated(
+        since = "0.3.0",
+        note = "construct a SearchRequest and call SearchEngine::execute"
+    )]
     pub fn search_batch_opts(
         &self,
         queries: &[Histogram],
@@ -474,84 +525,20 @@ impl SearchEngine {
         l: usize,
         nprobe: Option<usize>,
     ) -> EmdResult<Vec<SearchResult>> {
-        self.metrics.record_batch();
-        if queries.is_empty() {
-            return Ok(Vec::new());
-        }
-        match self.config.backend {
-            Backend::Native => {
-                let t0 = Instant::now();
-                if let Some(lock) = &self.sharded {
-                    // fan-out route: probe each shard locally, score through
-                    // the bit-identical subset pipeline, k-way-merge top-ℓ
-                    let corpus = lock.read().unwrap();
-                    let batch =
-                        crate::shard::search_batch(&corpus, queries, method, l, nprobe)?;
-                    let n_live = corpus.len();
-                    drop(corpus);
-                    self.metrics.record_merge(batch.merge_time);
-                    let per_query = t0.elapsed() / queries.len() as u32;
-                    return Ok(batch
-                        .results
-                        .into_iter()
-                        .map(|r| {
-                            if r.pruned {
-                                self.metrics.record_probe(
-                                    r.lists_probed,
-                                    r.candidates,
-                                    n_live,
-                                );
-                            }
-                            self.metrics.record_query(per_query, r.candidates);
-                            SearchResult { hits: r.hits, labels: r.labels }
-                        })
-                        .collect());
-                }
-                let n = self.dataset.len();
-                let (results, evals): (Vec<SearchResult>, Vec<usize>) =
-                    if let Some((index, np)) = self.pruning_route(nprobe) {
-                        pruned_search_batch(&self.native, index, queries, method, l, np)?
-                            .into_iter()
-                            .map(|pr| {
-                                self.metrics.record_probe(pr.lists_probed, pr.candidates, n);
-                                let labels = pr
-                                    .hits
-                                    .iter()
-                                    .map(|&(_, id)| self.dataset.labels[id])
-                                    .collect();
-                                (SearchResult { hits: pr.hits, labels }, pr.candidates)
-                            })
-                            .unzip()
-                    } else {
-                        let flat = self.native.distances_batch(queries, method);
-                        (0..queries.len())
-                            .map(|i| (self.rank_row(&flat[i * n..(i + 1) * n], l), n))
-                            .unzip()
-                    };
-                // per-query latency = the batch's amortized share of the
-                // full dispatch (distances + ranking), comparable to the
-                // per-query path's measurement
-                let per_query = t0.elapsed() / queries.len() as u32;
-                for e in evals {
-                    self.metrics.record_query(per_query, e);
-                }
-                Ok(results)
-            }
-            // the artifact runtime plans per query; fall back to the
-            // single-query path
-            Backend::Artifact => queries.iter().map(|q| self.search(q, method, l)).collect(),
-        }
+        let req = self.legacy_request(queries.to_vec(), method, l, nprobe);
+        Ok(self.execute(&req)?.results)
     }
 
-    /// Per-job batched search for the server's grouped dispatch: every job
-    /// is evaluated **at most once**, and each job's outcome lands in its
-    /// own slot of the returned buffer.  The native backend flows the whole
-    /// group through the multi-query kernel (its grouped call either
-    /// succeeds for everyone or fails before any query is scored, in which
-    /// case each job is evaluated individually once); the artifact backend
-    /// evaluates per query from the start, so one query outside the
-    /// compiled profile fails alone instead of discarding and re-running
-    /// its batchmates.
+    /// Per-job batched search for grouped dispatch: every job is evaluated
+    /// **at most once** on the native backend (the planner's grouped call
+    /// either succeeds for everyone or fails before any query is scored, in
+    /// which case each job is evaluated individually once), and each job's
+    /// outcome lands in its own slot of the returned buffer.  A delegating
+    /// shim over [`SearchEngine::execute`].
+    #[deprecated(
+        since = "0.3.0",
+        note = "construct a SearchRequest and call SearchEngine::execute"
+    )]
     pub fn search_batch_results(
         &self,
         queries: &[Histogram],
@@ -562,25 +549,29 @@ impl SearchEngine {
         if queries.is_empty() {
             return Vec::new();
         }
-        match self.config.backend {
-            Backend::Native => match self.search_batch_opts(queries, method, l, nprobe) {
-                Ok(results) => results.into_iter().map(Ok).collect(),
-                // the grouped dispatch failed as a whole before scoring
-                // anything (e.g. an empty query in the probe stage):
-                // evaluate per job into the results buffer
-                Err(_) => {
-                    queries.iter().map(|q| self.search_opts(q, method, l, nprobe)).collect()
-                }
-            },
-            Backend::Artifact => {
-                self.metrics.record_batch();
-                queries.iter().map(|q| self.search(q, method, l)).collect()
-            }
+        let per_query = |q: &Histogram| {
+            let single = self.legacy_request(vec![q.clone()], method, l, nprobe);
+            self.execute(&single)
+                .map(|mut r| r.results.pop().expect("one query in, one result out"))
+        };
+        // the artifact runtime plans per query anyway: evaluate per job
+        // from the start so one query outside the compiled profile fails
+        // alone instead of discarding and re-running its batchmates
+        if self.config.backend == Backend::Artifact {
+            return queries.iter().map(per_query).collect();
+        }
+        let req = self.legacy_request(queries.to_vec(), method, l, nprobe);
+        match self.execute(&req) {
+            Ok(resp) => resp.results.into_iter().map(Ok).collect(),
+            // the grouped dispatch failed as a whole before scoring anything
+            // (e.g. an empty query in the probe stage): evaluate per job
+            Err(_) => queries.iter().map(per_query).collect(),
         }
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy shims are exercised deliberately here
 mod tests {
     use super::*;
     use crate::config::DatasetSpec;

@@ -11,6 +11,9 @@ const BUCKETS: usize = 24;
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub queries: AtomicU64,
+    /// Plan executions (one per `SearchEngine::execute`, i.e. one per
+    /// dispatch group — a single-query request counts as a batch of one,
+    /// and a failed group's per-query retries count individually).
     pub batches: AtomicU64,
     pub errors: AtomicU64,
     pub distance_evals: AtomicU64,
@@ -23,6 +26,10 @@ pub struct Metrics {
     /// What exhaustive search would have scored for the same queries
     /// (denominator of the pruned fraction).
     index_possible: AtomicU64,
+    /// Queries answered through a cascade plan (RWMD prefilter → rerank).
+    pub cascade_queries: AtomicU64,
+    /// Candidates rescored by cascade rerank stages.
+    pub reranked_total: AtomicU64,
     /// Query batches answered by the sharded fan-out route.
     pub shard_batches: AtomicU64,
     /// Microseconds spent k-way-merging per-shard top-ℓ accumulators (the
@@ -61,6 +68,13 @@ impl Metrics {
         self.lists_probed.fetch_add(lists as u64, Ordering::Relaxed);
         self.candidates_scored.fetch_add(candidates as u64, Ordering::Relaxed);
         self.index_possible.fetch_add(possible as u64, Ordering::Relaxed);
+    }
+
+    /// Record one cascade dispatch: `queries` answered, `reranked`
+    /// candidates rescored by stage 2.
+    pub fn record_cascade(&self, queries: usize, reranked: usize) {
+        self.cascade_queries.fetch_add(queries as u64, Ordering::Relaxed);
+        self.reranked_total.fetch_add(reranked as u64, Ordering::Relaxed);
     }
 
     /// Record one sharded fan-out dispatch and its cross-shard merge time.
@@ -138,6 +152,14 @@ impl Metrics {
             ),
             ("pruned_fraction", self.pruned_fraction().into()),
             (
+                "cascade_queries",
+                (self.cascade_queries.load(Ordering::Relaxed) as usize).into(),
+            ),
+            (
+                "reranked_total",
+                (self.reranked_total.load(Ordering::Relaxed) as usize).into(),
+            ),
+            (
                 "shard_batches",
                 (self.shard_batches.load(Ordering::Relaxed) as usize).into(),
             ),
@@ -192,6 +214,18 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("shard_batches").and_then(Json::as_usize), Some(2));
         assert_eq!(j.get("merge_us_total").and_then(Json::as_usize), Some(100));
+    }
+
+    #[test]
+    fn cascade_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_cascade(3, 24);
+        m.record_cascade(1, 8);
+        assert_eq!(m.cascade_queries.load(Ordering::Relaxed), 4);
+        assert_eq!(m.reranked_total.load(Ordering::Relaxed), 32);
+        let j = m.to_json();
+        assert_eq!(j.get("cascade_queries").and_then(Json::as_usize), Some(4));
+        assert_eq!(j.get("reranked_total").and_then(Json::as_usize), Some(32));
     }
 
     #[test]

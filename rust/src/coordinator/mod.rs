@@ -1,19 +1,31 @@
-//! The L3 coordinator: search-engine façade, dynamic batcher, shard router,
-//! top-ℓ merging, metrics and the TCP line-protocol server.  This is the
-//! serving layer a downstream user deploys; Python never runs here.
+//! The L3 coordinator: query planner + search-engine façade, dynamic
+//! batcher, shard router, top-ℓ merging, metrics and the TCP line-protocol
+//! server.  This is the serving layer a downstream user deploys; Python
+//! never runs here.
+//!
+//! The one serving entry point is a [`SearchRequest`] executed through
+//! [`SearchEngine::execute`] ([`plan`]); the legacy `search*`/`cascade*`
+//! functions are delegating shims kept for compatibility.
 
 pub mod batcher;
 pub mod cascade;
 pub mod engine;
 pub mod metrics;
+pub mod plan;
 pub mod router;
 pub mod server;
 pub mod topl;
 
 pub use batcher::{next_batch, BatchPolicy, Pending};
-pub use cascade::{admissible_rerank, cascade_search, cascade_search_pruned, CascadeResult};
+pub use cascade::{
+    admissible_rerank, cascade_search, cascade_search_pruned, provably_dominates_rwmd,
+    CascadeResult,
+};
 pub use engine::{SearchEngine, SearchResult};
 pub use metrics::Metrics;
+pub use plan::{
+    CascadeSpec, GroupKey, QueryPlan, QueryStats, SearchRequest, SearchResponse, Stage,
+};
 pub use router::Router;
 pub use server::Server;
 pub use topl::{merge_query_rows, TopL};

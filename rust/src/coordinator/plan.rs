@@ -1,0 +1,900 @@
+//! The query planner: one composable entry point for index × shards ×
+//! cascade.
+//!
+//! A [`SearchRequest`] is the single value type every serving surface
+//! (library API, TCP protocol, CLI, benches) constructs; the planner turns
+//! it into an explicit [`QueryPlan`] — a small stage DAG of
+//! `Prune(IVF) → Score(LC) → [ShardFanout + Merge] → [CascadeRerank]` —
+//! and executes it, so index pruning, shard fan-out and bound-certified
+//! cascade rerank compose in any combination.  In particular a request with
+//! a [`CascadeSpec`] runs over a *sharded* corpus: per-shard stage-1
+//! shortlists are merged into a global top-(overfetch·ℓ+1) RWMD shortlist
+//! and the survivors are reranked with the dominating method, preserving
+//! the bit-identity / certification contract at full probe.
+//!
+//! The legacy `SearchEngine::search*` methods and the
+//! [`crate::coordinator::cascade`] free functions are thin delegating shims
+//! over this module.
+//!
+//! ```no_run
+//! use emdpar::prelude::*;
+//!
+//! let engine = EngineBuilder::new()
+//!     .dataset_spec(DatasetSpec::SynthText { n: 1000, vocab: 2000, dim: 32, seed: 1 })
+//!     .sharded(ShardParams { shards: 4, max_docs_per_shard: 1 << 20 })
+//!     .build_search()?;
+//!
+//! // cascade over the sharded corpus: RWMD shortlists per shard, global
+//! // merge, exact-EMD rerank on the survivors — certified at full probe
+//! let request = SearchRequest::query(engine.dataset().histogram(0))
+//!     .topl(5)
+//!     .cascade(CascadeSpec::new(Method::Exact).overfetch(8).certified(true));
+//! let response = engine.execute(&request)?;
+//! println!("{}", response.plan.describe());
+//! println!("certified: {}", response.stats.certified[0]);
+//! for &(distance, id) in &response.results[0].hits {
+//!     println!("doc {id}: {distance}");
+//! }
+//! # Ok::<(), EmdError>(())
+//! ```
+
+use std::time::{Duration, Instant};
+
+use crate::config::Backend;
+use crate::core::{EmdError, EmdResult, Histogram, Method};
+use crate::emd_ensure;
+use crate::index::pruned_search_batch;
+use crate::util::json::Json;
+
+use super::cascade::{admissible_rerank, provably_dominates_rwmd, rerank_stage};
+use super::engine::{SearchEngine, SearchResult};
+
+/// The cascade stage of a request: rerank the stage-1 LC-RWMD survivors
+/// with a dominating [`Method`] (ACT-k, ICT, Sinkhorn, exact EMD).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CascadeSpec {
+    /// Stage-2 measure; must dominate the RWMD prefilter
+    /// ([`crate::coordinator::cascade::admissible_rerank`]).
+    pub rerank: Method,
+    /// Stage 1 keeps `overfetch × ℓ` candidates (`None` =
+    /// [`crate::config::Config::overfetch`]).
+    pub overfetch: Option<usize>,
+    /// Demand a *certifiable* plan: stage 1 covers the whole corpus (any
+    /// `nprobe` is ignored, every shard probes exhaustively), so the
+    /// Theorem-2 certificate — when it holds — is global.  Rejected for
+    /// rerank measures with no bound guarantee (Sinkhorn).
+    pub certified: bool,
+}
+
+impl CascadeSpec {
+    pub fn new(rerank: Method) -> CascadeSpec {
+        CascadeSpec { rerank, overfetch: None, certified: false }
+    }
+
+    /// Stage-1 candidates = `overfetch × ℓ`.
+    pub fn overfetch(mut self, overfetch: usize) -> CascadeSpec {
+        self.overfetch = Some(overfetch.max(1));
+        self
+    }
+
+    pub fn certified(mut self, certified: bool) -> CascadeSpec {
+        self.certified = certified;
+        self
+    }
+
+    /// Protocol form: `{"rerank": "emd", "overfetch": 8, "certified": true}`
+    /// or the string shorthand `"emd"`.
+    pub fn from_json(j: &Json) -> EmdResult<CascadeSpec> {
+        if let Some(s) = j.as_str() {
+            return Ok(CascadeSpec::new(Method::parse(s)?));
+        }
+        let rerank = j
+            .get("rerank")
+            .and_then(Json::as_str)
+            .ok_or_else(|| EmdError::protocol("cascade needs 'rerank' (a method name)"))?;
+        let mut spec = CascadeSpec::new(Method::parse(rerank)?);
+        if let Some(x) = j.get("overfetch").and_then(Json::as_usize) {
+            spec.overfetch = Some(x.max(1));
+        }
+        if let Some(b) = j.get("certified").and_then(Json::as_bool) {
+            spec.certified = b;
+        }
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("rerank", self.rerank.name().into())];
+        if let Some(o) = self.overfetch {
+            pairs.push(("overfetch", o.into()));
+        }
+        pairs.push(("certified", self.certified.into()));
+        Json::obj(pairs)
+    }
+}
+
+/// One composable search request: query/queries, method, top-ℓ, probe
+/// width, optional cascade, thread budget.  Unset fields resolve from the
+/// engine's [`crate::config::Config`] at plan time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchRequest {
+    queries: Vec<Histogram>,
+    /// Distance measure (`None` = config default).  Ignored by cascade
+    /// requests: their stage 1 is always LC-RWMD and stage 2 is
+    /// [`CascadeSpec::rerank`].
+    pub method: Option<Method>,
+    /// Results per query (`None` = config `topl`).
+    pub l: Option<usize>,
+    /// IVF probe width (`None` = configured default; `>= nlist` =
+    /// exhaustive).  With a sharded corpus this is the per-shard width.
+    pub nprobe: Option<usize>,
+    /// Two-stage cascade: LC-RWMD prefilter → dominating rerank.
+    pub cascade: Option<CascadeSpec>,
+    /// Thread budget for the request's fan-out stages (`None` = the
+    /// engine's configured pool).  Kernel-internal parallelism stays on the
+    /// engine's own budget.
+    pub threads: Option<usize>,
+}
+
+impl SearchRequest {
+    /// A single-query request.
+    pub fn query(query: Histogram) -> SearchRequest {
+        SearchRequest::batch(vec![query])
+    }
+
+    /// A multi-query request (one grouped dispatch through the multi-query
+    /// kernels; results are bit-identical to per-query requests).
+    pub fn batch(queries: Vec<Histogram>) -> SearchRequest {
+        SearchRequest { queries, method: None, l: None, nprobe: None, cascade: None, threads: None }
+    }
+
+    pub fn method(mut self, method: Method) -> SearchRequest {
+        self.method = Some(method);
+        self
+    }
+
+    pub fn topl(mut self, l: usize) -> SearchRequest {
+        self.l = Some(l.max(1));
+        self
+    }
+
+    pub fn nprobe(mut self, nprobe: usize) -> SearchRequest {
+        self.nprobe = Some(nprobe.max(1));
+        self
+    }
+
+    pub fn cascade(mut self, spec: CascadeSpec) -> SearchRequest {
+        self.cascade = Some(spec);
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> SearchRequest {
+        self.threads = Some(threads.max(1));
+        self
+    }
+
+    pub fn queries(&self) -> &[Histogram] {
+        &self.queries
+    }
+
+    /// Append one query (the server's batch-group assembly).
+    pub fn push_query(&mut self, query: Histogram) {
+        self.queries.push(query);
+    }
+
+    /// Replace the query set (the server's `search_id` resolution).
+    pub fn set_queries(&mut self, queries: Vec<Histogram>) {
+        self.queries = queries;
+    }
+
+    /// Take ownership of the query set.
+    pub fn into_queries(self) -> Vec<Histogram> {
+        self.queries
+    }
+
+    /// The batch-grouping key: requests with equal keys resolve to the same
+    /// plan parameters, so the server flows them through one grouped
+    /// dispatch.  Defaults are resolved against the engine (config defaults
+    /// + effective probe width), so a client passing the default explicitly
+    /// groups with clients passing nothing.
+    pub fn group_key(&self, engine: &SearchEngine) -> GroupKey {
+        let config = engine.config();
+        let cascade = self.cascade.map(|spec| {
+            (spec.rerank, spec.overfetch.unwrap_or(config.overfetch).max(1), spec.certified)
+        });
+        let certified = cascade.map(|(_, _, c)| c).unwrap_or(false);
+        GroupKey {
+            method: match cascade {
+                // cascade stage 1 is canonical LC-RWMD; `method` is unused
+                Some(_) => Method::Rwmd,
+                None => self.method.unwrap_or(config.method),
+            },
+            l: self.l.unwrap_or(config.topl).max(1),
+            // fully plan-normalized: a certified cascade ignores any probe
+            // width (stage 1 is forced exhaustive), so every such request
+            // shares one key regardless of the nprobe it carried
+            nprobe: if certified { None } else { engine.effective_nprobe(self.nprobe) },
+            cascade,
+            // resolved, so clients passing the default explicitly group
+            // with clients passing nothing
+            threads: Some(self.threads.unwrap_or(config.threads).max(1)),
+        }
+    }
+
+    /// Parse the TCP protocol's request object (`"query"` = one histogram
+    /// as `[[vocab_idx, weight], ...]`, or `"queries"` = an array of them;
+    /// the `"id"` form is resolved by the server, which can see the
+    /// corpus).  Round-trips with [`SearchRequest::to_json`] bit-exactly:
+    /// weights travel as f64, and every f32 is exactly representable.
+    pub fn from_json(j: &Json) -> EmdResult<SearchRequest> {
+        let mut queries = Vec::new();
+        if let Some(q) = j.get("query") {
+            queries.push(parse_histogram(q)?);
+        } else if let Some(arr) = j.get("queries").and_then(Json::as_arr) {
+            for q in arr {
+                queries.push(parse_histogram(q)?);
+            }
+        }
+        let mut req = SearchRequest::batch(queries);
+        if let Some(s) = j.get("method").and_then(Json::as_str) {
+            req.method = Some(Method::parse(s)?);
+        }
+        if let Some(x) = j.get("l").and_then(Json::as_usize) {
+            req.l = Some(x.max(1));
+        }
+        if let Some(x) = j.get("nprobe").and_then(Json::as_usize) {
+            req.nprobe = Some(x.max(1));
+        }
+        if let Some(c) = j.get("cascade") {
+            req.cascade = Some(CascadeSpec::from_json(c)?);
+        }
+        if let Some(t) = j.get("threads").and_then(Json::as_usize) {
+            req.threads = Some(t.max(1));
+        }
+        Ok(req)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("op", "search".into())];
+        if let Some(m) = self.method {
+            pairs.push(("method", m.name().into()));
+        }
+        if let Some(l) = self.l {
+            pairs.push(("l", l.into()));
+        }
+        if let Some(np) = self.nprobe {
+            pairs.push(("nprobe", np.into()));
+        }
+        if let Some(spec) = &self.cascade {
+            pairs.push(("cascade", spec.to_json()));
+        }
+        if let Some(t) = self.threads {
+            pairs.push(("threads", t.into()));
+        }
+        match self.queries.len() {
+            1 => pairs.push(("query", histogram_json(&self.queries[0]))),
+            _ => pairs.push((
+                "queries",
+                Json::Arr(self.queries.iter().map(histogram_json).collect()),
+            )),
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Batch-grouping key ([`SearchRequest::group_key`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupKey {
+    pub method: Method,
+    pub l: usize,
+    /// Effective probe width (`None` = no index configured).
+    pub nprobe: Option<usize>,
+    /// `(rerank, overfetch, certified)` for cascade requests.
+    pub cascade: Option<(Method, usize, bool)>,
+    /// Requested fan-out thread budget; part of the key so a grouped
+    /// dispatch honors exactly what each member asked for.
+    pub threads: Option<usize>,
+}
+
+impl GroupKey {
+    /// Rebuild the grouped [`SearchRequest`] this key describes over a
+    /// query set — the one place key → request reconstruction lives, so
+    /// the server's grouped dispatch can never drop a resolved parameter.
+    pub fn request(&self, queries: Vec<Histogram>) -> SearchRequest {
+        let mut req = SearchRequest::batch(queries).method(self.method).topl(self.l);
+        if let Some(np) = self.nprobe {
+            req = req.nprobe(np);
+        }
+        if let Some((rerank, overfetch, certified)) = self.cascade {
+            req = req
+                .cascade(CascadeSpec::new(rerank).overfetch(overfetch).certified(certified));
+        }
+        if let Some(t) = self.threads {
+            req = req.threads(t);
+        }
+        req
+    }
+}
+
+/// Parse one protocol histogram: an array of `[vocab_idx, weight]` pairs.
+pub fn parse_histogram(j: &Json) -> EmdResult<Histogram> {
+    let pairs =
+        j.as_arr().ok_or_else(|| EmdError::protocol("histogram must be [[idx, w], ...]"))?;
+    let mut entries = Vec::with_capacity(pairs.len());
+    for p in pairs {
+        let pair =
+            p.as_arr().ok_or_else(|| EmdError::protocol("histogram entries are [idx, w]"))?;
+        emd_ensure!(pair.len() == 2, protocol, "histogram entries are [idx, w]");
+        let idx =
+            pair[0].as_usize().ok_or_else(|| EmdError::protocol("bad vocab index"))? as u32;
+        let w = pair[1].as_f64().ok_or_else(|| EmdError::protocol("bad weight"))? as f32;
+        entries.push((idx, w));
+    }
+    Ok(Histogram::from_pairs(entries))
+}
+
+/// Serialize one histogram as the protocol's `[[idx, w], ...]` form.
+pub fn histogram_json(h: &Histogram) -> Json {
+    Json::Arr(
+        h.indices()
+            .iter()
+            .zip(h.weights())
+            .map(|(&i, &w)| Json::Arr(vec![Json::Num(i as f64), Json::Num(w as f64)]))
+            .collect(),
+    )
+}
+
+/// One stage of a [`QueryPlan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// IVF coarse-quantizer probe selecting candidate lists (`nlist` is the
+    /// widest trained list count on the route).
+    Prune { nprobe: usize, nlist: usize },
+    /// LC scoring of the candidate set through the batched Phase-1/Phase-2
+    /// pipeline (`exhaustive` = the whole database, no pruning).
+    Score { method: Method, exhaustive: bool },
+    /// Per-shard local search fanned across the pool, `fanout` shards at a
+    /// time (each shard engine runs on its per-shard thread budget).
+    ShardFanout { shards: usize, fanout: usize },
+    /// Cross-shard k-way top-ℓ merge.
+    Merge { l: usize },
+    /// Rerank the stage-1 RWMD survivors with the dominating method.
+    CascadeRerank { rerank: Method, overfetch: usize, certified: bool },
+}
+
+impl Stage {
+    pub fn describe(&self) -> String {
+        match self {
+            Stage::Prune { nprobe, nlist } => format!("Prune(ivf {nprobe}/{nlist})"),
+            Stage::Score { method, exhaustive } => {
+                format!(
+                    "Score({}, {})",
+                    method.name(),
+                    if *exhaustive { "exhaustive" } else { "candidates" }
+                )
+            }
+            Stage::ShardFanout { shards, fanout } => {
+                format!("ShardFanout({shards} shards, width {fanout})")
+            }
+            Stage::Merge { l } => format!("Merge(top-{l})"),
+            Stage::CascadeRerank { rerank, overfetch, certified } => format!(
+                "CascadeRerank({}, overfetch {overfetch}{})",
+                rerank.name(),
+                if *certified { ", certified" } else { "" }
+            ),
+        }
+    }
+}
+
+/// An explicit, inspectable execution plan for one request: the stage DAG
+/// plus every resolved parameter.  [`SearchEngine::plan`] builds one
+/// without executing it; [`SearchEngine::execute`] returns the plan it ran
+/// inside the [`SearchResponse`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryPlan {
+    pub stages: Vec<Stage>,
+    /// The measure the scoring stage runs (stage 1 = LC-RWMD for cascades).
+    pub method: Method,
+    /// Final results per query.
+    pub l: usize,
+    /// Effective probe width (`None` = exhaustive: no index configured, or
+    /// a certified cascade forcing full coverage).
+    pub nprobe: Option<usize>,
+    /// Resolved cascade spec (`overfetch` filled from config).
+    pub cascade: Option<CascadeSpec>,
+    /// Requested fan-out thread budget (`None` = engine default).
+    pub threads: Option<usize>,
+}
+
+impl QueryPlan {
+    /// Human-readable stage chain, e.g.
+    /// `Prune(ivf 2/8) -> Score(RWMD, candidates) -> ShardFanout(4 shards,
+    /// width 4) -> Merge(top-10) -> CascadeRerank(EMD, overfetch 8)`.
+    pub fn describe(&self) -> String {
+        self.stages.iter().map(Stage::describe).collect::<Vec<_>>().join(" -> ")
+    }
+}
+
+/// Per-request work accounting, summed over the batch's queries.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QueryStats {
+    pub queries: usize,
+    /// Inverted lists visited (index-routed stages only).
+    pub lists_probed: usize,
+    /// Database rows scored by the stage-1 sweep.
+    pub candidates_scored: usize,
+    /// Candidates rescored by the cascade stage.
+    pub reranked: usize,
+    /// Cross-shard merge time (the fan-out overhead).
+    pub merge_us: u64,
+    /// Per-query exactness certificates (cascade requests only; empty
+    /// otherwise).  Aligned with [`SearchResponse::results`].
+    pub certified: Vec<bool>,
+}
+
+/// Ranked hits plus the executed plan and its work accounting.
+#[derive(Debug, Clone)]
+pub struct SearchResponse {
+    /// One result per request query, in request order.
+    pub results: Vec<SearchResult>,
+    pub stats: QueryStats,
+    /// The plan that produced the results.
+    pub plan: QueryPlan,
+}
+
+/// Build the execution plan for `req` without running it: resolve every
+/// default against the engine's config, validate the combination, and lay
+/// out the stage DAG.
+pub fn plan(engine: &SearchEngine, req: &SearchRequest) -> EmdResult<QueryPlan> {
+    let config = engine.config();
+    let l = req.l.unwrap_or(config.topl).max(1);
+    let cascade = match req.cascade {
+        Some(spec) => {
+            emd_ensure!(
+                config.backend == Backend::Native,
+                unsupported,
+                "cascade search requires the native backend"
+            );
+            if !admissible_rerank(spec.rerank) {
+                return Err(EmdError::unsupported(format!(
+                    "rerank method {} does not dominate the RWMD prefilter bound",
+                    spec.rerank.name()
+                )));
+            }
+            emd_ensure!(
+                !spec.certified || provably_dominates_rwmd(spec.rerank),
+                unsupported,
+                "rerank method {} cannot be certified: it carries no Theorem-2 bound \
+                 guarantee over the RWMD prefilter",
+                spec.rerank.name()
+            );
+            Some(CascadeSpec {
+                rerank: spec.rerank,
+                overfetch: Some(spec.overfetch.unwrap_or(config.overfetch).max(1)),
+                certified: spec.certified,
+            })
+        }
+        None => None,
+    };
+    let method = match cascade {
+        Some(_) => Method::Rwmd,
+        None => req.method.unwrap_or(config.method),
+    };
+    // a certified cascade must see every database row in stage 1
+    let force_exhaustive = cascade.map(|c| c.certified).unwrap_or(false);
+    let nprobe = if force_exhaustive { None } else { engine.effective_nprobe(req.nprobe) };
+
+    let mut stages = Vec::new();
+    if let Some(lock) = engine.sharded_corpus() {
+        let corpus = lock.read().unwrap();
+        let pruned = nprobe
+            .map(|np| {
+                corpus
+                    .shards()
+                    .iter()
+                    .any(|s| s.index().map(|ix| np < ix.nlist()).unwrap_or(false))
+            })
+            .unwrap_or(false);
+        if pruned {
+            stages.push(Stage::Prune {
+                nprobe: nprobe.unwrap_or(1),
+                nlist: corpus.max_nlist().unwrap_or(0),
+            });
+        }
+        stages.push(Stage::Score { method, exhaustive: !pruned });
+        let fanout = req
+            .threads
+            .unwrap_or(config.threads)
+            .clamp(1, corpus.num_shards().max(1));
+        stages.push(Stage::ShardFanout { shards: corpus.num_shards(), fanout });
+        stages.push(Stage::Merge { l });
+    } else {
+        let route = if force_exhaustive { None } else { engine.pruning_route(req.nprobe) };
+        match route {
+            Some((index, np)) => {
+                stages.push(Stage::Prune { nprobe: np, nlist: index.nlist() });
+                stages.push(Stage::Score { method, exhaustive: false });
+            }
+            None => stages.push(Stage::Score { method, exhaustive: true }),
+        }
+    }
+    if let Some(spec) = cascade {
+        stages.push(Stage::CascadeRerank {
+            rerank: spec.rerank,
+            overfetch: spec.overfetch.unwrap_or(config.overfetch).max(1),
+            certified: spec.certified,
+        });
+    }
+    Ok(QueryPlan { stages, method, l, nprobe, cascade, threads: req.threads })
+}
+
+/// One query's outcome from the base (stage-1) route.
+struct BaseResult {
+    result: SearchResult,
+    candidates: usize,
+    lists_probed: usize,
+    pruned: bool,
+}
+
+/// A whole batch's base-route outcome.
+struct BaseBatch {
+    per_query: Vec<BaseResult>,
+    /// Cross-shard merge time (sharded route only).
+    merge: Option<Duration>,
+    /// Corpus size at dispatch time (the coverage denominator).
+    n_live: usize,
+}
+
+/// Run the plan's scoring route: sharded fan-out, IVF-pruned, or exhaustive
+/// sweep.  `force_exhaustive` overrides any probe width (certified
+/// cascades).
+fn run_base(
+    engine: &SearchEngine,
+    queries: &[Histogram],
+    method: Method,
+    l: usize,
+    nprobe: Option<usize>,
+    force_exhaustive: bool,
+    fanout: Option<usize>,
+) -> EmdResult<BaseBatch> {
+    match engine.config().backend {
+        Backend::Artifact => {
+            // the artifact runtime plans one query at a time; no index or
+            // shards on this backend
+            let n = engine.dataset().len();
+            let mut per_query = Vec::with_capacity(queries.len());
+            for q in queries {
+                let row = engine.distances(q, method)?;
+                per_query.push(BaseResult {
+                    result: engine.rank_row(&row, l),
+                    candidates: n,
+                    lists_probed: 0,
+                    pruned: false,
+                });
+            }
+            Ok(BaseBatch { per_query, merge: None, n_live: n })
+        }
+        Backend::Native => {
+            if let Some(lock) = engine.sharded_corpus() {
+                // fan-out route: probe each shard locally, score through the
+                // bit-identical subset pipeline, k-way-merge top-ℓ
+                let corpus = lock.read().unwrap();
+                let np = if force_exhaustive { Some(usize::MAX >> 1) } else { nprobe };
+                let batch = crate::shard::search_batch_budgeted(
+                    &corpus, queries, method, l, np, fanout,
+                )?;
+                let n_live = corpus.len();
+                drop(corpus);
+                let per_query = batch
+                    .results
+                    .into_iter()
+                    .map(|r| BaseResult {
+                        result: SearchResult { hits: r.hits, labels: r.labels },
+                        candidates: r.candidates,
+                        lists_probed: r.lists_probed,
+                        pruned: r.pruned,
+                    })
+                    .collect();
+                return Ok(BaseBatch { per_query, merge: Some(batch.merge_time), n_live });
+            }
+            let n = engine.dataset().len();
+            let route = if force_exhaustive { None } else { engine.pruning_route(nprobe) };
+            let per_query = match route {
+                Some((index, np)) => {
+                    pruned_search_batch(engine.native_ref(), index, queries, method, l, np)?
+                        .into_iter()
+                        .map(|pr| {
+                            let labels = pr
+                                .hits
+                                .iter()
+                                .map(|&(_, id)| engine.dataset().labels[id])
+                                .collect();
+                            BaseResult {
+                                result: SearchResult { hits: pr.hits, labels },
+                                candidates: pr.candidates,
+                                lists_probed: pr.lists_probed,
+                                pruned: true,
+                            }
+                        })
+                        .collect()
+                }
+                None => {
+                    let flat = engine.native_ref().distances_batch(queries, method);
+                    (0..queries.len())
+                        .map(|i| BaseResult {
+                            result: engine.rank_row(&flat[i * n..(i + 1) * n], l),
+                            candidates: n,
+                            lists_probed: 0,
+                            pruned: false,
+                        })
+                        .collect()
+                }
+            };
+            Ok(BaseBatch { per_query, merge: None, n_live: n })
+        }
+    }
+}
+
+/// Plan and execute one request (the one entry point every serving surface
+/// funnels through).  Results are bit-identical to the legacy per-route
+/// entry points for the same resolved parameters.
+pub fn execute(engine: &SearchEngine, req: &SearchRequest) -> EmdResult<SearchResponse> {
+    let plan = plan(engine, req)?;
+    engine.metrics().record_batch();
+    let queries = req.queries();
+    if queries.is_empty() {
+        return Ok(SearchResponse { results: Vec::new(), stats: QueryStats::default(), plan });
+    }
+    match plan.cascade {
+        Some(spec) => execute_cascade(engine, queries, spec, plan),
+        None => execute_base(engine, queries, plan),
+    }
+}
+
+fn execute_base(
+    engine: &SearchEngine,
+    queries: &[Histogram],
+    plan: QueryPlan,
+) -> EmdResult<SearchResponse> {
+    let t0 = Instant::now();
+    let base =
+        run_base(engine, queries, plan.method, plan.l, plan.nprobe, false, plan.threads)?;
+    let metrics = engine.metrics();
+    let mut stats = QueryStats { queries: queries.len(), ..QueryStats::default() };
+    if let Some(m) = base.merge {
+        metrics.record_merge(m);
+        stats.merge_us = m.as_micros().min(u128::from(u64::MAX)) as u64;
+    }
+    // per-query latency = the batch's amortized share of the full dispatch
+    let per_query = t0.elapsed() / queries.len() as u32;
+    let results = base
+        .per_query
+        .into_iter()
+        .map(|r| {
+            if r.pruned {
+                metrics.record_probe(r.lists_probed, r.candidates, base.n_live);
+            }
+            metrics.record_query(per_query, r.candidates);
+            stats.lists_probed += r.lists_probed;
+            stats.candidates_scored += r.candidates;
+            r.result
+        })
+        .collect();
+    Ok(SearchResponse { results, stats, plan })
+}
+
+fn execute_cascade(
+    engine: &SearchEngine,
+    queries: &[Histogram],
+    spec: CascadeSpec,
+    plan: QueryPlan,
+) -> EmdResult<SearchResponse> {
+    let t0 = Instant::now();
+    let l = plan.l;
+    let overfetch = spec.overfetch.unwrap_or(engine.config().overfetch).max(1);
+    // clamp against the live corpus so the stage-1 accumulators stay
+    // bounded even for overfetch = usize::MAX-ish requests
+    let keep = l.saturating_mul(overfetch).clamp(1, engine.num_docs().max(1));
+    // stage 1 fetches one extra candidate: the (keep+1)-th best stage-1
+    // bound is exactly the tightest *discarded* bound — the certificate's
+    // pruned floor — so no separate full-row scan is needed
+    let base = run_base(
+        engine,
+        queries,
+        Method::Rwmd,
+        keep + 1,
+        plan.nprobe,
+        spec.certified,
+        plan.threads,
+    )?;
+
+    let metrics = engine.metrics();
+    let mut stats = QueryStats { queries: queries.len(), ..QueryStats::default() };
+    if let Some(m) = base.merge {
+        metrics.record_merge(m);
+        stats.merge_us = m.as_micros().min(u128::from(u64::MAX)) as u64;
+    }
+
+    // stage 2: rerank survivors through the registry's boxed object, with
+    // documents resolved from the live corpus (sharded) or the dataset.
+    // The corpus lock is NOT held across the rerank — a slow exact-EMD
+    // stage would otherwise stall concurrent appends (and, behind a
+    // writer-preferring RwLock, new queries too); the Arc-backed snapshot
+    // stays valid because appends only add ids.
+    let dist = engine.registry().distance(spec.rerank);
+    let vocab = &engine.dataset().embeddings;
+    let view = engine.sharded_corpus().map(|lock| lock.read().unwrap().doc_view());
+    let doc = |u: usize| -> Histogram {
+        match &view {
+            Some(v) => v.histogram(u),
+            None => engine.dataset().histogram(u),
+        }
+    };
+    let label = |u: usize| -> u16 {
+        match &view {
+            Some(v) => v.label(u),
+            None => engine.dataset().labels[u],
+        }
+    };
+
+    let mut results = Vec::with_capacity(queries.len());
+    let mut evals = Vec::with_capacity(queries.len());
+    for (query, b) in queries.iter().zip(base.per_query) {
+        let hits = b.result.hits;
+        let (shortlist, pruned_floor) = if hits.len() > keep {
+            (&hits[..keep], hits[keep].0)
+        } else {
+            (&hits[..], f32::INFINITY)
+        };
+        let covers = b.candidates == base.n_live;
+        let reranked = rerank_stage(
+            vocab,
+            dist.as_ref(),
+            spec.rerank,
+            &query.normalized(),
+            l,
+            shortlist,
+            pruned_floor,
+            covers,
+            &doc,
+        )?;
+        if b.pruned {
+            metrics.record_probe(b.lists_probed, b.candidates, base.n_live);
+        }
+        stats.lists_probed += b.lists_probed;
+        stats.candidates_scored += b.candidates;
+        stats.reranked += reranked.reranked;
+        stats.certified.push(reranked.certified);
+        evals.push(b.candidates + reranked.reranked);
+        let labels = reranked.hits.iter().map(|&(_, id)| label(id)).collect();
+        results.push(SearchResult { hits: reranked.hits, labels });
+    }
+    let per_query = t0.elapsed() / queries.len() as u32;
+    for e in evals {
+        metrics.record_query(per_query, e);
+    }
+    metrics.record_cascade(queries.len(), stats.reranked);
+    Ok(SearchResponse { results, stats, plan })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, DatasetSpec, IndexParams, ShardParams};
+
+    fn engine(index: Option<IndexParams>, sharded: Option<ShardParams>) -> SearchEngine {
+        SearchEngine::from_config(Config {
+            dataset: DatasetSpec::SynthText { n: 40, vocab: 180, dim: 8, seed: 11 },
+            threads: 2,
+            index,
+            sharded,
+            ..Config::default()
+        })
+        .unwrap()
+    }
+
+    fn index_params() -> IndexParams {
+        IndexParams { nlist: 4, nprobe: 2, train_iters: 5, seed: 3, min_points_per_list: 1 }
+    }
+
+    #[test]
+    fn group_key_resolves_defaults() {
+        let eng = engine(Some(index_params()), None);
+        let q = eng.dataset().histogram(0);
+        // explicit defaults group with implicit ones
+        let a = SearchRequest::query(q.clone()).group_key(&eng);
+        let b = SearchRequest::query(q.clone())
+            .method(eng.config().method)
+            .topl(eng.config().topl)
+            .nprobe(2)
+            .group_key(&eng);
+        assert_eq!(a, b);
+        // a cascade request groups separately, and its method is stage-1 RWMD
+        let c = SearchRequest::query(q)
+            .cascade(CascadeSpec::new(Method::Exact))
+            .group_key(&eng);
+        assert_ne!(a, c);
+        assert_eq!(c.method, Method::Rwmd);
+        assert_eq!(c.cascade, Some((Method::Exact, eng.config().overfetch, false)));
+    }
+
+    #[test]
+    fn plan_lays_out_the_stage_dag() {
+        let eng = engine(Some(index_params()), None);
+        let q = eng.dataset().histogram(1);
+        let p = eng.plan(&SearchRequest::query(q.clone()).nprobe(2)).unwrap();
+        assert!(matches!(p.stages[0], Stage::Prune { nprobe: 2, nlist: 4 }));
+        assert!(matches!(p.stages[1], Stage::Score { exhaustive: false, .. }));
+        // full probe collapses to the exhaustive route
+        let p = eng.plan(&SearchRequest::query(q.clone()).nprobe(64)).unwrap();
+        assert!(matches!(p.stages[0], Stage::Score { exhaustive: true, .. }));
+        // a certified cascade forces exhaustive stage 1 and appends rerank
+        let p = eng
+            .plan(
+                &SearchRequest::query(q)
+                    .cascade(CascadeSpec::new(Method::Exact).certified(true))
+                    .nprobe(1),
+            )
+            .unwrap();
+        assert_eq!(p.method, Method::Rwmd);
+        assert!(matches!(p.stages[0], Stage::Score { exhaustive: true, .. }));
+        assert!(matches!(p.stages.last(), Some(Stage::CascadeRerank { .. })));
+        assert!(p.describe().contains("CascadeRerank(EMD"));
+    }
+
+    #[test]
+    fn sharded_plan_includes_fanout_and_merge() {
+        let eng = engine(
+            Some(index_params()),
+            Some(ShardParams { shards: 2, max_docs_per_shard: 1 << 20 }),
+        );
+        let q = eng.dataset().histogram(2);
+        let p = eng
+            .plan(&SearchRequest::query(q).nprobe(1).threads(1).topl(3))
+            .unwrap();
+        assert!(p.stages.iter().any(|s| matches!(s, Stage::ShardFanout { shards: 2, fanout: 1 })));
+        assert!(p.stages.iter().any(|s| matches!(s, Stage::Merge { l: 3 })));
+        assert!(p.stages.iter().any(|s| matches!(s, Stage::Prune { .. })));
+    }
+
+    #[test]
+    fn invalid_cascades_are_rejected_at_plan_time() {
+        let eng = engine(None, None);
+        let q = eng.dataset().histogram(0);
+        // non-dominating rerank
+        for bad in [Method::Bow, Method::Wcd, Method::Rwmd, Method::BowAdjusted] {
+            let req = SearchRequest::query(q.clone()).cascade(CascadeSpec::new(bad));
+            assert!(eng.plan(&req).is_err(), "{bad}");
+        }
+        // Sinkhorn cannot be certified (no bound guarantee)...
+        let req = SearchRequest::query(q.clone())
+            .cascade(CascadeSpec::new(Method::Sinkhorn).certified(true));
+        assert!(eng.plan(&req).is_err());
+        // ...but is admissible uncertified
+        let req =
+            SearchRequest::query(q).cascade(CascadeSpec::new(Method::Sinkhorn));
+        assert!(eng.plan(&req).is_ok());
+    }
+
+    #[test]
+    fn request_json_round_trips() {
+        let q = Histogram::from_pairs(vec![(3, 0.25), (17, 0.75)]);
+        let req = SearchRequest::query(q)
+            .method(Method::Act { k: 3 })
+            .topl(7)
+            .nprobe(4)
+            .cascade(CascadeSpec::new(Method::Exact).overfetch(6).certified(true));
+        let j = req.to_json();
+        let back = SearchRequest::from_json(&Json::parse(&j.to_string_compact()).unwrap())
+            .unwrap();
+        assert_eq!(back, req);
+        // multi-query form round-trips too
+        let req = SearchRequest::batch(vec![
+            Histogram::from_pairs(vec![(0, 1.0)]),
+            Histogram::from_pairs(vec![(1, 0.5), (2, 0.5)]),
+        ]);
+        let j = req.to_json();
+        let back = SearchRequest::from_json(&Json::parse(&j.to_string_compact()).unwrap())
+            .unwrap();
+        assert_eq!(back, req);
+    }
+}

@@ -1,10 +1,13 @@
 //! TCP line-protocol server: newline-delimited JSON requests/responses.
 //!
-//! Request:
+//! Request (the wire form of a [`SearchRequest`], parsed by
+//! [`SearchRequest::from_json`]):
 //! ```json
 //! {"op": "search", "method": "act-1", "l": 5,
 //!  "query": [[vocab_idx, weight], ...]}
 //! {"op": "search_id", "method": "rwmd", "l": 5, "id": 17, "nprobe": 4}
+//! {"op": "search_id", "id": 3, "l": 5,
+//!  "cascade": {"rerank": "emd", "overfetch": 8, "certified": true}}
 //! {"op": "add_docs", "docs": [[[vocab_idx, weight], ...], ...],
 //!  "labels": [0, 1]}
 //! {"op": "stats"}
@@ -12,8 +15,13 @@
 //! ```
 //! `"nprobe"` is optional: with an IVF index configured it overrides the
 //! per-request probe width (`nprobe >= nlist` forces an exhaustive sweep);
-//! without an index it is ignored.  `{"op": "add_docs"}` appends documents
-//! to a sharded live corpus (`"labels"` optional, one per doc) and answers
+//! without an index it is ignored.  `"cascade"` requests a two-stage plan
+//! (LC-RWMD prefilter → dominating rerank; `"rerank"` may also be given as
+//! the string shorthand `"cascade": "emd"`); the response then carries
+//! `"certified"` (the per-query Theorem-2 exactness certificate), and the
+//! `stats` op reports `cascade_queries` / `reranked_total`.
+//! `{"op": "add_docs"}` appends documents to a sharded live corpus
+//! (`"labels"` optional, one per doc) and answers
 //! `{"ok": true, "added": k, "ids": [...], "opened_shards": o, "n": total}`;
 //! appended docs are immediately searchable.  `{"op": "stats"}` reports the
 //! index shape plus pruning counters when an index is active, and per-shard
@@ -23,7 +31,10 @@
 //!
 //! Accepted connections are handed to a worker pool; inside a connection
 //! requests are pipelined FIFO.  Queries flow through the dynamic batcher
-//! so concurrent clients share batch dispatches.
+//! so concurrent clients share batch dispatches: jobs are grouped by
+//! [`SearchRequest::group_key`] — the planner-resolved
+//! `(method, ℓ, nprobe, cascade)` — so batchmates that resolve to the same
+//! plan share one grouped dispatch.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -31,28 +42,24 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::core::{EmdError, EmdResult, Histogram, Method};
+use crate::config::Backend;
+use crate::core::{EmdError, EmdResult, Histogram};
 use crate::emd_ensure;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 
 use super::batcher::{next_batch, BatchPolicy, Pending};
 use super::engine::SearchEngine;
+use super::plan::{parse_histogram, GroupKey, SearchRequest};
 
-/// A search job travelling through the batcher.
+/// A search job travelling through the batcher: one single-query request
+/// plus its precomputed grouping key.
 struct Job {
-    query: Histogram,
-    method: Method,
-    l: usize,
-    /// Per-request IVF probe width (None = configured default).
-    nprobe: Option<usize>,
+    req: SearchRequest,
+    key: GroupKey,
 }
 
 type JobResult = Result<Json, String>;
-
-/// Grouping key for the batch dispatcher: jobs sharing it flow through one
-/// multi-query engine dispatch.
-type GroupKey = (Method, usize, Option<usize>);
 
 /// The running server.
 pub struct Server {
@@ -77,38 +84,77 @@ impl Server {
             let engine = Arc::clone(&engine);
             std::thread::spawn(move || {
                 while let Some(batch) = next_batch(&batch_rx, policy) {
-                    // group the drained batch by (method, l, nprobe) so each
-                    // group flows through the engine's multi-query kernel in
-                    // one dispatch; responses go back per-job over their own
-                    // channels, so grouping never reorders anything a client
-                    // can observe.  Note: Metrics::batches counts dispatch
-                    // groups (one per key per drained batch), not drained
-                    // batches
+                    // group the drained batch by the planner's GroupKey so
+                    // each group flows through one grouped plan execution;
+                    // responses go back per-job over their own channels, so
+                    // grouping never reorders anything a client can observe.
+                    // Note: Metrics::batches counts plan executions (one per
+                    // key per drained batch, plus per-query retries when a
+                    // group fails wholesale), not drained batches
                     let mut groups: Vec<(GroupKey, Vec<Pending<Job, JobResult>>)> = Vec::new();
                     for pending in batch {
-                        let key =
-                            (pending.query.method, pending.query.l, pending.query.nprobe);
+                        let key = pending.query.key;
                         match groups.iter_mut().find(|(k, _)| *k == key) {
                             Some((_, members)) => members.push(pending),
                             None => groups.push((key, vec![pending])),
                         }
                     }
-                    for ((method, l, nprobe), members) in groups {
+                    for (key, members) in groups {
                         let (queries, responders): (Vec<Histogram>, Vec<_>) = members
                             .into_iter()
-                            .map(|p| (p.query.query, p.respond))
+                            .map(|p| {
+                                let mut qs = p.query.req.into_queries();
+                                (qs.pop().expect("one query per job"), p.respond)
+                            })
                             .unzip();
-                        // per-job results buffer: the engine evaluates each
-                        // job at most once (grouped kernel when it can,
-                        // per-query otherwise), so one failing query neither
-                        // fails its batchmates nor forces already-evaluated
-                        // ones to be re-run
-                        let results = engine.search_batch_results(&queries, method, l, nprobe);
+                        let per_query = |q: &Histogram| {
+                            let single = key.request(vec![q.clone()]);
+                            engine
+                                .execute(&single)
+                                .map(|mut resp| {
+                                    let cert = resp.stats.certified.first().copied();
+                                    let res = resp
+                                        .results
+                                        .pop()
+                                        .expect("one query in, one result out");
+                                    search_result_json(&res, cert)
+                                })
+                                .map_err(|e| e.to_string())
+                        };
+                        // per-job results buffer: the native grouped plan
+                        // either succeeds for everyone or fails before any
+                        // query is scored (then each job is evaluated
+                        // individually once); the artifact backend plans
+                        // per query anyway, so it dispatches per job from
+                        // the start — one failing query neither fails its
+                        // batchmates nor forces re-runs
+                        let results: Vec<JobResult> = if engine.config().backend
+                            == Backend::Artifact
+                        {
+                            queries.iter().map(per_query).collect()
+                        } else {
+                            let group_req = key.request(queries);
+                            match engine.execute(&group_req) {
+                                Ok(resp) => {
+                                    let certs = resp.stats.certified;
+                                    resp.results
+                                        .into_iter()
+                                        .enumerate()
+                                        .map(|(i, res)| {
+                                            Ok(search_result_json(
+                                                &res,
+                                                certs.get(i).copied(),
+                                            ))
+                                        })
+                                        .collect()
+                                }
+                                Err(_) => {
+                                    group_req.queries().iter().map(per_query).collect()
+                                }
+                            }
+                        };
                         for (out, respond) in results.into_iter().zip(responders) {
-                            let _ = respond.send(
-                                out.map(|res| search_result_json(&res))
-                                    .map_err(|e| e.to_string()),
-                            );
+                            let _ = respond.send(out);
                         }
                     }
                 }
@@ -158,48 +204,35 @@ impl Server {
     }
 }
 
-/// Parse one protocol histogram: an array of `[vocab_idx, weight]` pairs.
-fn parse_histogram(j: &Json) -> EmdResult<Histogram> {
-    let pairs =
-        j.as_arr().ok_or_else(|| EmdError::protocol("histogram must be [[idx, w], ...]"))?;
-    let mut entries = Vec::with_capacity(pairs.len());
-    for p in pairs {
-        let pair =
-            p.as_arr().ok_or_else(|| EmdError::protocol("histogram entries are [idx, w]"))?;
-        emd_ensure!(pair.len() == 2, protocol, "histogram entries are [idx, w]");
-        let idx =
-            pair[0].as_usize().ok_or_else(|| EmdError::protocol("bad vocab index"))? as u32;
-        let w = pair[1].as_f64().ok_or_else(|| EmdError::protocol("bad weight"))? as f32;
-        entries.push((idx, w));
-    }
-    Ok(Histogram::from_pairs(entries))
-}
-
 /// Serialize one search result as the protocol's success payload.
-fn search_result_json(res: &super::engine::SearchResult) -> Json {
-    Json::Obj(
-        [
-            ("ok".to_string(), Json::Bool(true)),
-            (
-                "hits".to_string(),
-                Json::Arr(
-                    res.hits
-                        .iter()
-                        .zip(&res.labels)
-                        .map(|(&(d, id), &lab)| {
-                            Json::Arr(vec![
-                                Json::Num(d as f64),
-                                Json::Num(id as f64),
-                                Json::Num(lab as f64),
-                            ])
-                        })
-                        .collect(),
-                ),
+/// `certified` is the per-query cascade certificate (cascade requests
+/// only).
+fn search_result_json(res: &super::engine::SearchResult, certified: Option<bool>) -> Json {
+    let mut map: std::collections::BTreeMap<String, Json> = [
+        ("ok".to_string(), Json::Bool(true)),
+        (
+            "hits".to_string(),
+            Json::Arr(
+                res.hits
+                    .iter()
+                    .zip(&res.labels)
+                    .map(|(&(d, id), &lab)| {
+                        Json::Arr(vec![
+                            Json::Num(d as f64),
+                            Json::Num(id as f64),
+                            Json::Num(lab as f64),
+                        ])
+                    })
+                    .collect(),
             ),
-        ]
-        .into_iter()
-        .collect(),
-    )
+        ),
+    ]
+    .into_iter()
+    .collect();
+    if let Some(c) = certified {
+        map.insert("certified".to_string(), Json::Bool(c));
+    }
+    Json::Obj(map)
 }
 
 fn handle_connection(
@@ -332,37 +365,36 @@ fn handle_request(
             ]))
         }
         "search" | "search_id" => {
-            let method = match req.get("method").and_then(Json::as_str) {
-                Some(s) => Method::parse(s)?,
-                None => engine.config().method,
-            };
-            let l = req
-                .get("l")
-                .and_then(Json::as_usize)
-                .unwrap_or(engine.config().topl)
-                .max(1);
-            let query = if let Some(id) = req.get("id").and_then(Json::as_usize) {
+            // the request object is the wire form of a SearchRequest; only
+            // the 'id' shorthand needs the server (it can see the corpus)
+            let mut request = SearchRequest::from_json(&req)?;
+            if let Some(id) = req.get("id").and_then(Json::as_usize) {
                 emd_ensure!(id < engine.num_docs(), protocol, "id {id} out of range");
-                engine.doc_histogram(id)?
-            } else {
-                let q = req
-                    .get("query")
-                    .ok_or_else(|| EmdError::protocol("missing 'query' (or 'id')"))?;
-                parse_histogram(q)?
-            };
-            emd_ensure!(!query.is_empty(), protocol, "empty query");
-            // normalize to the effective probe width
-            // (SearchEngine::effective_nprobe, the single source of truth)
-            // so batchmates that resolve to the same route share one
-            // grouped dispatch
-            let nprobe =
-                engine.effective_nprobe(req.get("nprobe").and_then(Json::as_usize));
+                request.set_queries(vec![engine.doc_histogram(id)?]);
+            }
+            emd_ensure!(!request.queries().is_empty(), protocol, "missing 'query' (or 'id')");
+            // the batcher model is one query per request: pipelined
+            // requests with equal group keys share one grouped dispatch
+            emd_ensure!(
+                request.queries().len() == 1,
+                protocol,
+                "one query per request: send multiple pipelined requests and the \
+                 batcher groups them into one dispatch"
+            );
+            emd_ensure!(!request.queries()[0].is_empty(), protocol, "empty query");
+            // validate the plan up front so a bad combination (inadmissible
+            // rerank, cascade on the artifact backend) errors on this
+            // connection instead of inside the dispatcher
+            engine.plan(&request)?;
+            // the planner-resolved grouping key: batchmates resolving to
+            // the same plan share one grouped dispatch
+            let key = request.group_key(engine);
 
             // send through the dynamic batcher and wait for the reply
             let (tx, rx) = channel();
             batch_tx
                 .send(Pending {
-                    query: Job { query, method, l, nprobe },
+                    query: Job { req: request, key },
                     respond: tx,
                     enqueued: Instant::now(),
                 })
@@ -461,6 +493,30 @@ mod tests {
         // exact EMD ranks the query itself first
         let first = out[0].get("hits").and_then(Json::as_arr).unwrap()[0].as_arr().unwrap();
         assert_eq!(first[1].as_usize(), Some(2));
+    }
+
+    #[test]
+    fn cascade_requests_served_over_tcp() {
+        let out = roundtrip(&[
+            // full-coverage certified cascade: overfetch 16 x l 3 >= n, so
+            // the certificate must hold
+            "{\"op\": \"search_id\", \"id\": 4, \"l\": 3, \
+             \"cascade\": {\"rerank\": \"emd\", \"overfetch\": 16, \"certified\": true}}"
+                .into(),
+            // string shorthand for the rerank method
+            "{\"op\": \"search_id\", \"id\": 4, \"l\": 3, \"cascade\": \"act-3\"}".into(),
+            // inadmissible rerank is a clean per-request error
+            "{\"op\": \"search_id\", \"id\": 4, \"l\": 3, \"cascade\": \"bow\"}".into(),
+        ]);
+        assert_eq!(out[0].get("ok"), Some(&Json::Bool(true)), "{:?}", out[0]);
+        let hits = out[0].get("hits").and_then(Json::as_arr).unwrap();
+        assert_eq!(hits.len(), 3);
+        assert_eq!(hits[0].as_arr().unwrap()[1].as_usize(), Some(4), "finds itself");
+        assert_eq!(out[0].get("certified"), Some(&Json::Bool(true)));
+        assert_eq!(out[1].get("ok"), Some(&Json::Bool(true)), "{:?}", out[1]);
+        assert!(out[1].get("certified").is_some(), "cascade responses report the certificate");
+        assert_eq!(out[2].get("ok"), Some(&Json::Bool(false)));
+        assert!(out[2].get("error").is_some());
     }
 
     #[test]

@@ -1,10 +1,20 @@
 //! Vocabulary embeddings: the `(v, m)` coordinate matrix **V** of paper
 //! Section 5 (word2vec vectors for text, pixel coordinates for images).
 
+use std::sync::Arc;
+
 /// Row-major `(v, m)` embedding matrix.
+///
+/// The coordinate buffer is reference-counted: `clone` shares the same
+/// storage instead of copying the `(v, m)` table, so the many places that
+/// carry an `Embeddings` by value — every shard dataset of a
+/// [`crate::shard::ShardedCorpus`], gathered sub-datasets, the sharded
+/// engine's monolithic fallback — all point at one table.  Mutating methods
+/// ([`Embeddings::row_mut`], [`Embeddings::l2_normalize`]) copy-on-write,
+/// which only the dataset generators exercise (before any sharing starts).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Embeddings {
-    data: Vec<f32>,
+    data: Arc<Vec<f32>>,
     v: usize,
     m: usize,
 }
@@ -12,11 +22,17 @@ pub struct Embeddings {
 impl Embeddings {
     pub fn new(data: Vec<f32>, v: usize, m: usize) -> Embeddings {
         assert_eq!(data.len(), v * m, "embedding buffer size mismatch");
-        Embeddings { data, v, m }
+        Embeddings { data: Arc::new(data), v, m }
     }
 
     pub fn zeros(v: usize, m: usize) -> Embeddings {
-        Embeddings { data: vec![0.0; v * m], v, m }
+        Embeddings { data: Arc::new(vec![0.0; v * m]), v, m }
+    }
+
+    /// Whether `self` and `other` share one underlying coordinate buffer
+    /// (the memory-footprint invariant the sharded corpus relies on).
+    pub fn shares_storage(&self, other: &Embeddings) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
     }
 
     /// Pixel-grid embeddings for `side x side` images: vocabulary entry
@@ -45,9 +61,11 @@ impl Embeddings {
         &self.data[i * self.m..(i + 1) * self.m]
     }
 
+    /// Mutable row access (copy-on-write when the buffer is shared).
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
-        &mut self.data[i * self.m..(i + 1) * self.m]
+        let m = self.m;
+        &mut Arc::make_mut(&mut self.data)[i * m..(i + 1) * m]
     }
 
     pub fn as_slice(&self) -> &[f32] {
@@ -130,6 +148,22 @@ mod tests {
         let g = e.gather(&[2, 0]);
         assert_eq!(g.row(0), &[4.0, 5.0]);
         assert_eq!(g.row(1), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn clone_shares_storage_and_mutation_unshares() {
+        let a = Embeddings::new(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        let b = a.clone();
+        assert!(a.shares_storage(&b), "clone must not copy the (v, m) table");
+        assert_eq!(a, b);
+        // copy-on-write: mutating one side leaves the other untouched
+        let mut c = a.clone();
+        c.row_mut(0)[0] = 9.0;
+        assert!(!c.shares_storage(&a));
+        assert_eq!(a.row(0), &[1.0, 2.0]);
+        assert_eq!(c.row(0), &[9.0, 2.0]);
+        // gathered matrices own fresh storage
+        assert!(!a.gather(&[0]).shares_storage(&a));
     }
 
     #[test]

@@ -5,4 +5,4 @@ pub mod precision;
 pub mod sweep;
 
 pub use precision::{precision_at, precision_curve, recall_at, topl_indices};
-pub use sweep::{render_markdown, sweep_all_pairs, sweep_subset, SweepRow};
+pub use sweep::{render_markdown, sweep_all_pairs, sweep_serving, sweep_subset, SweepRow};

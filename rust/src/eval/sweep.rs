@@ -12,7 +12,8 @@ use std::time::Duration;
 
 use std::sync::Arc;
 
-use crate::core::{BatchDistance, Dataset, EmdResult, Method, MethodRegistry};
+use crate::coordinator::{SearchEngine, SearchRequest};
+use crate::core::{BatchDistance, Dataset, EmdResult, Histogram, Method, MethodRegistry};
 use crate::lc::{EngineParams, LcEngine};
 use crate::util::stats::fmt_duration;
 
@@ -92,6 +93,68 @@ pub fn sweep_subset(
             Ok(SweepRow { method: batch.method().name(), runtime, pairs: nq * n, precision })
         })
         .collect()
+}
+
+/// Precision@top-ℓ through the **serving path**: the first `nq` documents
+/// are dispatched as one multi-query [`SearchRequest`] per method through
+/// the query planner, so the sweep measures exactly what a deployment
+/// executes — index pruning and shard fan-out included when the engine is
+/// configured with them.  Self-hits are excluded, matching the matrix
+/// sweeps; `pairs` reports the candidates the plan actually scored (the
+/// pruning win shows up directly in throughput).
+pub fn sweep_serving(
+    engine: &SearchEngine,
+    methods: &[Method],
+    ls: &[usize],
+    nq: usize,
+) -> EmdResult<Vec<SweepRow>> {
+    let n = engine.num_docs();
+    let nq = nq.min(n).max(1);
+    let lmax = ls.iter().copied().max().unwrap_or(1);
+    let queries: Vec<Histogram> =
+        (0..nq).map(|i| engine.doc_histogram(i)).collect::<EmdResult<_>>()?;
+    // labels come from the same live-corpus source as the histograms, so
+    // appended documents score against their real class
+    let qlabels: Vec<u16> = (0..nq).map(|i| engine.doc_label(i)).collect::<EmdResult<_>>()?;
+    let mut rows = Vec::with_capacity(methods.len());
+    for &method in methods {
+        // one extra hit so the self-hit can be dropped without starving ℓ
+        let req = SearchRequest::batch(queries.clone()).method(method).topl(lmax + 1);
+        let t0 = std::time::Instant::now();
+        let resp = engine.execute(&req)?;
+        let runtime = t0.elapsed();
+        let precision = ls
+            .iter()
+            .map(|&l| {
+                let mut acc = 0.0f64;
+                for (qi, res) in resp.results.iter().enumerate() {
+                    let mut good = 0usize;
+                    let mut seen = 0usize;
+                    for (&(_, id), &lab) in res.hits.iter().zip(&res.labels) {
+                        if id == qi {
+                            continue; // self-hit excluded, like the matrix sweeps
+                        }
+                        if seen == l {
+                            break;
+                        }
+                        seen += 1;
+                        if lab == qlabels[qi] {
+                            good += 1;
+                        }
+                    }
+                    acc += good as f64 / seen.max(1) as f64;
+                }
+                (l, acc / resp.results.len().max(1) as f64)
+            })
+            .collect();
+        rows.push(SweepRow {
+            method: method.name(),
+            runtime,
+            pairs: resp.stats.candidates_scored,
+            precision,
+        });
+    }
+    Ok(rows)
 }
 
 /// Row-major `(nq, n)` distance matrix through a [`BatchDistance`] object —
@@ -212,6 +275,35 @@ mod tests {
         for r in &rows {
             assert_eq!(r.pairs, 24 * 24);
             assert!((0.0..=1.0).contains(&r.precision[0].1), "{}", r.method);
+        }
+    }
+
+    #[test]
+    fn serving_sweep_dispatches_through_the_planner() {
+        use crate::config::{Config, DatasetSpec, IndexParams};
+        let engine = SearchEngine::from_config(Config {
+            dataset: DatasetSpec::SynthText { n: 40, vocab: 200, dim: 8, seed: 6 },
+            threads: 2,
+            index: Some(IndexParams {
+                nlist: 4,
+                nprobe: 2,
+                train_iters: 5,
+                seed: 2,
+                min_points_per_list: 1,
+            }),
+            ..Config::default()
+        })
+        .unwrap();
+        let rows =
+            sweep_serving(&engine, &[Method::Rwmd, Method::Act { k: 2 }], &[1, 4], 10).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.pairs > 0, "{}: candidates scored must be reported", r.method);
+            // the pruned route scores fewer pairs than exhaustive nq x n
+            assert!(r.pairs < 10 * 40, "{}: nprobe 2 of 4 lists must prune", r.method);
+            for &(_, p) in &r.precision {
+                assert!((0.0..=1.0).contains(&p), "{}: p={p}", r.method);
+            }
         }
     }
 

@@ -79,9 +79,28 @@ pub struct LcEngine {
 
 impl LcEngine {
     pub fn new(dataset: Arc<Dataset>, params: EngineParams) -> LcEngine {
+        let threads = params.threads;
+        Self::with_precompute_threads(dataset, params, threads)
+    }
+
+    /// [`LcEngine::new`] with a separate thread budget for the one-time
+    /// precomputations (WCD centroids etc.).  The sharded corpus builds its
+    /// shard engines **serially** — full pool available — but searches them
+    /// **concurrently** on per-shard budgets, so construction and serving
+    /// want different widths.  Precompute results are bit-identical across
+    /// thread counts, so this is purely a scheduling knob.
+    pub fn with_precompute_threads(
+        dataset: Arc<Dataset>,
+        params: EngineParams,
+        precompute_threads: usize,
+    ) -> LcEngine {
         LcEngine {
             bow_norms: dataset.matrix.row_l2_norms(),
-            centroids: centroids_batch(&dataset.embeddings, &dataset.matrix, params.threads),
+            centroids: centroids_batch(
+                &dataset.embeddings,
+                &dataset.matrix,
+                precompute_threads.max(1),
+            ),
             vocab_sq_norms: dataset.embeddings.row_sq_norms(),
             registry: MethodRegistry::new(params.metric),
             dataset,

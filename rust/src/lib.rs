@@ -29,8 +29,9 @@
 //! * [`shard`] — sharded live corpus: per-shard engines + IVF behind a
 //!   fan-out / top-ℓ-merge route, incremental ingestion, `EMDX` v2
 //!   manifest persistence.
-//! * [`coordinator`] — the serving layer: batching, sharding, cascades,
-//!   index-pruned top-ℓ search.
+//! * [`coordinator`] — the serving layer: the query planner
+//!   (`SearchRequest` → `QueryPlan` → `SearchResponse`), batching,
+//!   sharding, cascades, index-pruned top-ℓ search.
 //! * [`builder`] — `EngineBuilder`, the one place configuration becomes
 //!   running engines.
 //! * [`data`] — synthetic MNIST-like / 20News-like dataset generators.
@@ -56,7 +57,8 @@ pub mod prelude {
     pub use crate::builder::EngineBuilder;
     pub use crate::config::{Backend, Config, DatasetSpec, IndexParams, ShardParams};
     pub use crate::coordinator::{
-        cascade_search, cascade_search_pruned, CascadeResult, SearchEngine, SearchResult, Server,
+        cascade_search, cascade_search_pruned, CascadeResult, CascadeSpec, QueryPlan, QueryStats,
+        SearchEngine, SearchRequest, SearchResponse, SearchResult, Server, Stage,
     };
     pub use crate::core::{
         BatchDistance, Dataset, Distance, EmdError, EmdResult, Embeddings, Histogram, Method,

@@ -16,10 +16,10 @@
 use std::path::Path;
 
 use emdpar::data::{self, MnistConfig, TextConfig};
-use emdpar::eval::{render_markdown, sweep_all_pairs, sweep_subset};
+use emdpar::eval::{render_markdown, sweep_all_pairs, sweep_serving, sweep_subset};
 use emdpar::prelude::{
-    cascade_search, Config, EmdError, EmdResult, EngineBuilder, EngineParams, LcEngine, Method,
-    Metric, Server, METHOD_SYNTAX,
+    CascadeSpec, Config, EmdError, EmdResult, EngineBuilder, EngineParams, LcEngine, Method,
+    Metric, SearchRequest, Server, METHOD_SYNTAX,
 };
 use emdpar::runtime::{ArtifactEngine, Executor};
 use emdpar::util::cli::CommandSpec;
@@ -161,14 +161,19 @@ fn cmd_search(args: &[String]) -> EmdResult<()> {
     let l = cfg.topl;
     let engine = EngineBuilder::from_config(cfg).build_search()?;
     let id = p.usize("id")?;
-    emdpar::emd_ensure!(id < engine.dataset().len(), "--id out of range");
-    let query = engine.dataset().histogram(id);
-    let res = engine.search(&query, method, l)?;
+    emdpar::emd_ensure!(id < engine.num_docs(), "--id out of range");
+    let query = engine.doc_histogram(id)?;
+    // the one composable entry point: method/ℓ/nprobe resolve through the
+    // query planner (index pruning and shard fan-out compose automatically)
+    let request = SearchRequest::query(query).method(method).topl(l);
+    let response = engine.execute(&request)?;
+    println!("plan: {}", response.plan.describe());
     println!(
         "query id={id} (label {}) via {} — top-{l}:",
-        engine.dataset().labels[id],
+        engine.doc_label(id)?,
         method.name()
     );
+    let res = &response.results[0];
     for (rank, (&(d, hit), &lab)) in res.hits.iter().zip(&res.labels).enumerate() {
         println!("  #{:<3} id={hit:<6} label={lab:<4} distance={d:.6}", rank + 1);
     }
@@ -182,8 +187,10 @@ fn cmd_search(args: &[String]) -> EmdResult<()> {
 }
 
 fn cmd_cascade(args: &[String]) -> EmdResult<()> {
-    // deliberately NOT common_opts: stage 1 is always LC-RWMD on the native
-    // engine, so --method/--backend would be accepted-but-ignored noise
+    // deliberately NOT common_opts: stage 1 is always LC-RWMD, so
+    // --method/--backend would be accepted-but-ignored noise.  --nlist /
+    // --nprobe compose the cascade with the IVF index, and a sharded config
+    // file composes it with the fan-out — all through one SearchRequest.
     let spec = CommandSpec::new(
         "cascade",
         "two-stage search: LC-RWMD prefilter, tighter rerank on survivors",
@@ -194,7 +201,13 @@ fn cmd_cascade(args: &[String]) -> EmdResult<()> {
     .opt("topl", "", "results per query")
     .opt("id", "0", "query by database row id")
     .opt("rerank", "emd", "stage-2 measure: omr | act-<j> | ict | sinkhorn | emd")
-    .opt("overfetch", "8", "stage-1 candidates = overfetch x topl");
+    .opt("overfetch", "8", "stage-1 candidates = overfetch x topl")
+    .opt("nlist", "", "enable the IVF pruning index for stage 1 (0 disables)")
+    .opt("nprobe", "", "index lists probed in stage 1 (needs --nlist or a config index)")
+    .flag(
+        "certified",
+        "force full stage-1 coverage so the Theorem-2 certificate is global",
+    );
     if args.iter().any(|a| a == "--help") {
         println!("{}", spec.usage("emdpar"));
         return Ok(());
@@ -204,24 +217,26 @@ fn cmd_cascade(args: &[String]) -> EmdResult<()> {
     let l = cfg.topl;
     let rerank = Method::parse(p.str("rerank"))?;
     let overfetch = p.usize("overfetch")?.max(1);
-    let engine: LcEngine = EngineBuilder::from_config(cfg).symmetric(false).build_lc()?;
+    // match the legacy cascade CLI: asymmetric (direction-A) stage-1 RWMD
+    let engine = EngineBuilder::from_config(cfg).symmetric(false).build_search()?;
     let id = p.usize("id")?;
-    emdpar::emd_ensure!(id < engine.dataset().len(), "--id out of range");
-    let query = engine.dataset().histogram(id);
-    let res = cascade_search(&engine, &query, rerank, l, overfetch)?;
+    emdpar::emd_ensure!(id < engine.num_docs(), "--id out of range");
+    let query = engine.doc_histogram(id)?;
+    let request = SearchRequest::query(query).topl(l).cascade(
+        CascadeSpec::new(rerank).overfetch(overfetch).certified(p.flag("certified")),
+    );
+    let response = engine.execute(&request)?;
+    println!("plan: {}", response.plan.describe());
     println!(
         "cascade: RWMD prefilter -> {} rerank, top-{l} (overfetch {overfetch}, \
          reranked {}, certified: {})",
         rerank.name(),
-        res.reranked,
-        res.certified
+        response.stats.reranked,
+        response.stats.certified[0]
     );
-    for (rank, &(d, hit)) in res.hits.iter().enumerate() {
-        println!(
-            "  #{:<3} id={hit:<6} label={:<4} distance={d:.6}",
-            rank + 1,
-            engine.dataset().labels[hit]
-        );
+    let res = &response.results[0];
+    for (rank, (&(d, hit), &lab)) in res.hits.iter().zip(&res.labels).enumerate() {
+        println!("  #{:<3} id={hit:<6} label={lab:<4} distance={d:.6}", rank + 1);
     }
     Ok(())
 }
@@ -563,7 +578,10 @@ fn cmd_shard(args: &[String]) -> EmdResult<()> {
             let id = p.usize("id")?;
             emdpar::emd_ensure!(id < engine.num_docs(), "--id out of range");
             let query = engine.doc_histogram(id)?;
-            let res = engine.search(&query, method, l)?;
+            let response =
+                engine.execute(&SearchRequest::query(query).method(method).topl(l))?;
+            let res = &response.results[0];
+            println!("plan: {}", response.plan.describe());
             println!("query id={id} via {} — top-{l} over the sharded corpus:", method.name());
             for (rank, (&(d, hit), &lab)) in res.hits.iter().zip(&res.labels).enumerate() {
                 println!("  #{:<3} id={hit:<6} label={lab:<4} distance={d:.6}", rank + 1);
@@ -593,7 +611,12 @@ fn cmd_eval(args: &[String]) -> EmdResult<()> {
         "comma-separated method list (sinkhorn and emd are valid too)",
     )
     .opt("ls", "1,16,128", "comma-separated top-ℓ values")
-    .opt("subset", "0", "query only the first N docs (0 = all-pairs)");
+    .opt("subset", "0", "query only the first N docs (0 = all-pairs)")
+    .flag(
+        "serving",
+        "dispatch through the query planner (SearchRequest): honors --nlist/--nprobe \
+         and a sharded config; 'pairs' reports candidates actually scored",
+    );
     if args.iter().any(|a| a == "--help") {
         println!("{}", spec.usage("emdpar"));
         return Ok(());
@@ -603,13 +626,25 @@ fn cmd_eval(args: &[String]) -> EmdResult<()> {
     let ds = std::sync::Arc::new(cfg.load_dataset()?);
     let methods = Method::parse_list(p.str("methods"))?;
     let ls = p.usize_list("ls")?;
+    let subset = p.usize("subset")?;
+    if p.flag("serving") {
+        let nq = if subset > 0 { subset } else { 64 };
+        let engine = EngineBuilder::from_config(cfg)
+            .dataset(std::sync::Arc::clone(&ds))
+            .build_search()?;
+        let rows = sweep_serving(&engine, &methods, &ls, nq)?;
+        println!(
+            "{}",
+            render_markdown(&format!("{} serving path (nq={nq})", ds.name), &rows)
+        );
+        return Ok(());
+    }
     let params = EngineParams {
         metric: Metric::L2,
         threads: cfg.threads,
         symmetric: cfg.symmetric,
         batch_block: cfg.batch_block,
     };
-    let subset = p.usize("subset")?;
     let rows = if subset > 0 {
         sweep_subset(&ds, subset, &methods, &ls, params)?
     } else {

@@ -108,36 +108,45 @@ pub struct AppendOutcome {
 
 impl Shard {
     /// Build a shard over `globals`' rows of `corpus`, training a local IVF
-    /// index when `index_params` is set.
+    /// index when `index_params` is set.  `engine_params` is the shard's
+    /// *serving* budget; `build_threads` is the (full) pool available to
+    /// the serial construction path — precompute and index training run on
+    /// it so building S shards never idles (S-1)/S of the machine.
     fn build(
         corpus: &Dataset,
         globals: Vec<u32>,
         ordinal: usize,
         engine_params: EngineParams,
+        build_threads: usize,
         index_params: Option<&IndexParams>,
     ) -> EmdResult<Shard> {
         let name = format!("{}/shard{}", corpus.name, ordinal);
         let dataset = Arc::new(gather_rows(corpus, &globals, name));
-        Shard::from_dataset(dataset, globals, 0, engine_params, index_params)
+        Shard::from_dataset(dataset, globals, 0, engine_params, build_threads, index_params)
     }
 
     /// Assemble a shard around an already-gathered dataset, training the
-    /// index from scratch.
+    /// index from scratch (on `build_threads`; see [`Shard::build`]).
     fn from_dataset(
         dataset: Arc<Dataset>,
         globals: Vec<u32>,
         appended: usize,
         engine_params: EngineParams,
+        build_threads: usize,
         index_params: Option<&IndexParams>,
     ) -> EmdResult<Shard> {
         debug_assert_eq!(dataset.len(), globals.len());
-        let engine = Arc::new(LcEngine::new(Arc::clone(&dataset), engine_params));
+        let engine = Arc::new(LcEngine::with_precompute_threads(
+            Arc::clone(&dataset),
+            engine_params,
+            build_threads,
+        ));
         let index = match index_params {
             Some(p) if !dataset.is_empty() => Some(IvfIndex::train(
                 engine.wcd_centroids(),
                 dataset.embeddings.dim(),
                 p,
-                engine_params.threads,
+                build_threads,
                 dataset_fingerprint(&dataset),
             )?),
             _ => None,
@@ -153,17 +162,29 @@ impl Shard {
         appended: usize,
         index: Option<IvfIndex>,
         engine_params: EngineParams,
+        build_threads: usize,
     ) -> Shard {
         debug_assert_eq!(dataset.len(), globals.len());
-        let engine = Arc::new(LcEngine::new(Arc::clone(&dataset), engine_params));
+        let engine = Arc::new(LcEngine::with_precompute_threads(
+            Arc::clone(&dataset),
+            engine_params,
+            build_threads,
+        ));
         Shard { globals, dataset, engine, index, appended }
     }
 
     /// Append a batch of (global id, L1-normalized histogram, label) rows:
     /// the shard dataset and engine are rebuilt with the new rows (old rows
     /// bit-exact), and each new document joins the already-trained index
-    /// via [`IvfIndex::append_assigned`] — no retraining.
-    fn extend(&mut self, batch: &[(u32, Histogram, u16)], engine_params: EngineParams) {
+    /// via [`IvfIndex::append_assigned`] — no retraining.  The rebuild runs
+    /// on `build_threads` (the append path is serial, behind the write
+    /// lock); the stored engine serves on `engine_params`.
+    fn extend(
+        &mut self,
+        batch: &[(u32, Histogram, u16)],
+        engine_params: EngineParams,
+        build_threads: usize,
+    ) {
         let old = Arc::clone(&self.dataset);
         let mut rows = RowBuilder::with_capacity(old.len() + batch.len());
         for u in 0..old.len() {
@@ -174,7 +195,11 @@ impl Shard {
             rows.push_row(h.indices(), h.weights(), *label);
         }
         let dataset = Arc::new(rows.into_dataset(old.name.clone(), &old.embeddings));
-        let engine = Arc::new(LcEngine::new(Arc::clone(&dataset), engine_params));
+        let engine = Arc::new(LcEngine::with_precompute_threads(
+            Arc::clone(&dataset),
+            engine_params,
+            build_threads,
+        ));
         if let Some(ix) = &mut self.index {
             // assign to the trained centroids using the same per-row WCD
             // centroid representation the original members were indexed by
@@ -243,18 +268,35 @@ impl Shard {
     }
 }
 
+/// The per-shard engine thread budget for a corpus of `shards` shards under
+/// a `total` budget: the parallel fan-out runs up to `min(shards, threads)`
+/// shards concurrently, so each shard's engine gets an even share of the
+/// pool instead of the full budget (which would oversubscribe the machine
+/// `S`-fold).  Thread count never changes results — every kernel is
+/// bit-identical across thread counts — so this is purely a scheduling
+/// decision.
+pub(crate) fn shard_engine_params(total: EngineParams, shards: usize) -> EngineParams {
+    let fanout = shards.max(1).min(total.threads.max(1));
+    EngineParams { threads: (total.threads / fanout).max(1), ..total }
+}
+
 /// The sharded, appendable corpus (see module docs).
 #[derive(Clone)]
 pub struct ShardedCorpus {
-    /// Shared vocabulary coordinates (every shard dataset carries the same
-    /// embedding table; this copy serves append validation and reassembly).
+    /// Shared vocabulary coordinates (every shard dataset shares one
+    /// reference-counted embedding table; this handle serves append
+    /// validation and reassembly).
     embeddings: Embeddings,
     shards: Vec<Shard>,
     /// Global id → (shard, local id); the inverse of the shards' `globals`
     /// lists.
     assign: Vec<(u32, u32)>,
     params: ShardParams,
+    /// Total thread budget (fan-out width + cross-shard merge).
     engine_params: EngineParams,
+    /// Per-shard engine budget ([`shard_engine_params`]); appended/fresh
+    /// shards build their engines with this too.
+    shard_engine: EngineParams,
     index_params: Option<IndexParams>,
 }
 
@@ -270,6 +312,9 @@ impl ShardedCorpus {
         emd_ensure!(params.shards >= 1, config, "shard count must be >= 1");
         emd_ensure!(params.max_docs_per_shard >= 1, config, "max_docs_per_shard must be >= 1");
         let router = Router::new(dataset.len(), params.shards);
+        // serving budget per shard from the actual shard count (matches
+        // what from_parts / manifest reconstruct compute for a reload)
+        let shard_engine = shard_engine_params(engine_params, router.num_shards().max(1));
         let mut shards = Vec::with_capacity(router.num_shards());
         let mut assign = Vec::with_capacity(dataset.len());
         for (s, range) in router.shards().enumerate() {
@@ -277,7 +322,14 @@ impl ShardedCorpus {
             for local in 0..globals.len() {
                 assign.push((s as u32, local as u32));
             }
-            shards.push(Shard::build(dataset, globals, s, engine_params, index_params)?);
+            shards.push(Shard::build(
+                dataset,
+                globals,
+                s,
+                shard_engine,
+                engine_params.threads,
+                index_params,
+            )?);
         }
         Ok(ShardedCorpus {
             embeddings: dataset.embeddings.clone(),
@@ -285,6 +337,7 @@ impl ShardedCorpus {
             assign,
             params,
             engine_params,
+            shard_engine,
             index_params: index_params.copied(),
         })
     }
@@ -319,7 +372,16 @@ impl ShardedCorpus {
                 assign[g as usize] = (s as u32, local as u32);
             }
         }
-        Ok(ShardedCorpus { embeddings, shards, assign, params, engine_params, index_params })
+        let shard_engine = shard_engine_params(engine_params, shards.len().max(1));
+        Ok(ShardedCorpus {
+            embeddings,
+            shards,
+            assign,
+            params,
+            engine_params,
+            shard_engine,
+            index_params,
+        })
     }
 
     /// Documents currently searchable.
@@ -371,6 +433,19 @@ impl ShardedCorpus {
     pub fn histogram(&self, g: usize) -> Histogram {
         let (s, local) = self.locate(g);
         self.shards[s].dataset.histogram(local)
+    }
+
+    /// A lock-free document resolver snapshotted from the corpus: the
+    /// shard datasets are `Arc`-shared, so this copies O(n) id mappings and
+    /// S dataset handles — not the data.  Long-running readers (e.g. the
+    /// cascade rerank stage) resolve documents through the snapshot instead
+    /// of holding the corpus lock, so concurrent appends are never stalled;
+    /// ids resolved through it stay valid because appends only add ids.
+    pub fn doc_view(&self) -> DocView {
+        DocView {
+            assign: self.assign.clone(),
+            datasets: self.shards.iter().map(|s| Arc::clone(&s.dataset)).collect(),
+        }
     }
 
     /// The widest trained list count across shards (`None` when no shard
@@ -458,7 +533,11 @@ impl ShardedCorpus {
             let base_local;
             if target < self.shards.len() {
                 base_local = self.shards[target].len();
-                self.shards[target].extend(&batch, self.engine_params);
+                self.shards[target].extend(
+                    &batch,
+                    self.shard_engine,
+                    self.engine_params.threads,
+                );
             } else {
                 debug_assert_eq!(target, self.shards.len(), "fresh shards open densely");
                 base_local = 0;
@@ -473,7 +552,8 @@ impl ShardedCorpus {
                     dataset,
                     globals,
                     batch.len(),
-                    self.engine_params,
+                    self.shard_engine,
+                    self.engine_params.threads,
                     self.index_params.as_ref(),
                 )?);
             }
@@ -496,6 +576,36 @@ impl ShardedCorpus {
             rows.push_row(idx, w, ds.labels[local as usize]);
         }
         rows.into_dataset(name, &self.embeddings)
+    }
+}
+
+/// A lock-free snapshot of the corpus' global-id → document mapping
+/// ([`ShardedCorpus::doc_view`]).
+#[derive(Clone)]
+pub struct DocView {
+    assign: Vec<(u32, u32)>,
+    datasets: Vec<Arc<Dataset>>,
+}
+
+impl DocView {
+    pub fn len(&self) -> usize {
+        self.assign.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.assign.is_empty()
+    }
+
+    /// The histogram of global document `g` (owned copy, bit-exact).
+    pub fn histogram(&self, g: usize) -> Histogram {
+        let (s, local) = self.assign[g];
+        self.datasets[s as usize].histogram(local as usize)
+    }
+
+    /// The label of global document `g`.
+    pub fn label(&self, g: usize) -> u16 {
+        let (s, local) = self.assign[g];
+        self.datasets[s as usize].labels[local as usize]
     }
 }
 

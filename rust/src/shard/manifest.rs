@@ -233,6 +233,10 @@ pub fn reconstruct(
         }
     }
     let mut shards = Vec::with_capacity(manifest.shards.len());
+    // per-shard engine thread budget, matching what ShardedCorpus::from_parts
+    // computes for the same shard count (the append path reuses it)
+    let shard_engine =
+        super::corpus::shard_engine_params(engine_params, manifest.shards.len().max(1));
     for (s, ms) in manifest.shards.iter().enumerate() {
         let name = format!("{}/shard{}", dataset.name, s);
         let shard_ds = Arc::new(gather_rows(dataset, &ms.globals, name));
@@ -270,8 +274,13 @@ pub fn reconstruct(
                 if shard_ds.is_empty() {
                     None
                 } else {
-                    let engine =
-                        crate::lc::LcEngine::new(Arc::clone(&shard_ds), engine_params);
+                    // reconstruct is serial: precompute + training run on
+                    // the full pool, like the fresh-build path
+                    let engine = crate::lc::LcEngine::with_precompute_threads(
+                        Arc::clone(&shard_ds),
+                        shard_engine,
+                        engine_params.threads,
+                    );
                     Some(IvfIndex::train(
                         engine.wcd_centroids(),
                         shard_ds.embeddings.dim(),
@@ -287,7 +296,8 @@ pub fn reconstruct(
             ms.globals.clone(),
             ms.appended,
             index,
-            engine_params,
+            shard_engine,
+            engine_params.threads,
         ));
     }
     let params = ShardParams {

@@ -37,9 +37,9 @@ pub mod corpus;
 pub mod manifest;
 pub mod search;
 
-pub use corpus::{AppendOutcome, Shard, ShardStat, ShardedCorpus};
+pub use corpus::{AppendOutcome, DocView, Shard, ShardStat, ShardedCorpus};
 pub use manifest::{
     load_manifest, load_manifest_for, reconstruct, save_manifest, Manifest, ManifestShard,
     MANIFEST_VERSION,
 };
-pub use search::{search, search_batch, ShardedBatch, ShardedSearch};
+pub use search::{search, search_batch, search_batch_budgeted, ShardedBatch, ShardedSearch};

@@ -28,8 +28,9 @@ use crate::core::{EmdResult, Histogram, Method};
 use crate::coordinator::topl::merge_query_rows;
 use crate::coordinator::TopL;
 use crate::index::pruned_search_batch;
+use crate::util::threadpool::{parallel_for, SyncSlice};
 
-use super::corpus::ShardedCorpus;
+use super::corpus::{Shard, ShardedCorpus};
 
 /// One query's sharded outcome with fan-out work accounting.
 #[derive(Debug, Clone)]
@@ -56,18 +57,103 @@ pub struct ShardedBatch {
     pub merge_time: Duration,
 }
 
+/// One shard's contribution to a fan-out batch: per-query top-ℓ
+/// accumulators (global ids) plus probe accounting.
+struct ShardContribution {
+    accs: Vec<TopL>,
+    candidates: Vec<usize>,
+    lists_probed: Vec<usize>,
+    pruned: bool,
+}
+
+/// Search one shard for the whole batch (the per-shard stage of the plan).
+/// Pure with respect to its shard — contributions are independent, which is
+/// what makes the parallel fan-out bit-identical to the serial one.
+fn search_shard(
+    shard: &Shard,
+    queries: &[Histogram],
+    method: Method,
+    l: usize,
+    np: Option<usize>,
+) -> EmdResult<ShardContribution> {
+    let nq = queries.len();
+    let mut candidates = vec![0usize; nq];
+    let mut lists_probed = vec![0usize; nq];
+    let route = match (shard.index(), np) {
+        (Some(ix), Some(np)) if np < ix.nlist() => Some((ix, np)),
+        _ => None,
+    };
+    let (accs, pruned) = match route {
+        Some((ix, np)) => {
+            // shard-local IVF probe; the whole batch shares one
+            // candidate-union scoring dispatch per shard
+            let pruned = pruned_search_batch(shard.engine(), ix, queries, method, l, np)?;
+            let mut accs = Vec::with_capacity(nq);
+            for (q, pr) in pruned.into_iter().enumerate() {
+                let mut top = TopL::new(l);
+                // local → global is strictly monotone, so pushing the
+                // already-sorted hits preserves their order exactly
+                for (d, local) in pr.hits {
+                    top.push(d, shard.global(local));
+                }
+                candidates[q] += pr.candidates;
+                lists_probed[q] += pr.lists_probed;
+                accs.push(top);
+            }
+            (accs, true)
+        }
+        None => {
+            // exhaustive shard sweep through the multi-query kernel
+            let n = shard.len();
+            let flat = shard.engine().distances_batch(queries, method);
+            let mut accs = Vec::with_capacity(nq);
+            for q in 0..nq {
+                let row = &flat[q * n..(q + 1) * n];
+                let mut top = TopL::new(l);
+                for (local, &d) in row.iter().enumerate() {
+                    top.push(d, shard.global(local));
+                }
+                candidates[q] += n;
+                accs.push(top);
+            }
+            (accs, false)
+        }
+    };
+    Ok(ShardContribution { accs, candidates, lists_probed, pruned })
+}
+
 /// Fan a query batch out across shards and k-way-merge per-shard top-ℓ.
 ///
 /// `nprobe = None` uses the corpus' configured per-shard index default;
 /// each shard clamps the effective width to its own list count, so any
 /// width at or above every shard's `nlist` is the exhaustive
-/// (bit-identical) route.
+/// (bit-identical) route.  Shards are searched concurrently with the
+/// corpus' full thread budget as the fan-out width (each shard engine runs
+/// on its per-shard budget); see [`search_batch_budgeted`] for an explicit
+/// width.
 pub fn search_batch(
     corpus: &ShardedCorpus,
     queries: &[Histogram],
     method: Method,
     l: usize,
     nprobe: Option<usize>,
+) -> EmdResult<ShardedBatch> {
+    search_batch_budgeted(corpus, queries, method, l, nprobe, None)
+}
+
+/// [`search_batch`] with an explicit fan-out width: up to `fanout` shards
+/// are searched concurrently (`None` = the corpus' total thread budget;
+/// `Some(1)` = the serial reference).  Every shard's contribution is
+/// computed independently and merged in shard order, so the result is
+/// **bit-identical for every width** — the serial-vs-parallel equality test
+/// pins this down.
+pub fn search_batch_budgeted(
+    corpus: &ShardedCorpus,
+    queries: &[Histogram],
+    method: Method,
+    l: usize,
+    nprobe: Option<usize>,
+    fanout: Option<usize>,
 ) -> EmdResult<ShardedBatch> {
     let nq = queries.len();
     if nq == 0 {
@@ -76,53 +162,37 @@ pub fn search_batch(
     let l = l.max(1);
     let np = corpus.effective_nprobe(nprobe, corpus.index_params().map(|p| p.nprobe));
 
-    let mut shard_accs: Vec<Vec<TopL>> = Vec::with_capacity(corpus.num_shards());
+    // parallel fan-out: each shard's contribution lands in its own slot, so
+    // the post-join assembly below reads them back in shard order
+    let nshards = corpus.num_shards();
+    let width = fanout
+        .unwrap_or(corpus.engine_params().threads)
+        .clamp(1, nshards.max(1));
+    let mut slots: Vec<Option<EmdResult<ShardContribution>>> =
+        (0..nshards).map(|_| None).collect();
+    {
+        let sync = SyncSlice::new(&mut slots);
+        parallel_for(nshards, width, |start, end| {
+            for s in start..end {
+                let contribution = search_shard(&corpus.shards()[s], queries, method, l, np);
+                // SAFETY: slot s is owned by exactly this chunk.
+                unsafe { sync.write(s, Some(contribution)) };
+            }
+        });
+    }
+
+    let mut shard_accs: Vec<Vec<TopL>> = Vec::with_capacity(nshards);
     let mut candidates = vec![0usize; nq];
     let mut lists_probed = vec![0usize; nq];
     let mut pruned_any = false;
-    for shard in corpus.shards() {
-        let route = match (shard.index(), np) {
-            (Some(ix), Some(np)) if np < ix.nlist() => Some((ix, np)),
-            _ => None,
-        };
-        let accs = match route {
-            Some((ix, np)) => {
-                // shard-local IVF probe; the whole batch shares one
-                // candidate-union scoring dispatch per shard
-                let pruned = pruned_search_batch(shard.engine(), ix, queries, method, l, np)?;
-                pruned_any = true;
-                let mut accs = Vec::with_capacity(nq);
-                for (q, pr) in pruned.into_iter().enumerate() {
-                    let mut top = TopL::new(l);
-                    // local → global is strictly monotone, so pushing the
-                    // already-sorted hits preserves their order exactly
-                    for (d, local) in pr.hits {
-                        top.push(d, shard.global(local));
-                    }
-                    candidates[q] += pr.candidates;
-                    lists_probed[q] += pr.lists_probed;
-                    accs.push(top);
-                }
-                accs
-            }
-            None => {
-                // exhaustive shard sweep through the multi-query kernel
-                let n = shard.len();
-                let flat = shard.engine().distances_batch(queries, method);
-                let mut accs = Vec::with_capacity(nq);
-                for q in 0..nq {
-                    let row = &flat[q * n..(q + 1) * n];
-                    let mut top = TopL::new(l);
-                    for (local, &d) in row.iter().enumerate() {
-                        top.push(d, shard.global(local));
-                    }
-                    candidates[q] += n;
-                    accs.push(top);
-                }
-                accs
-            }
-        };
-        shard_accs.push(accs);
+    for slot in slots {
+        let contribution = slot.expect("every shard searched")?;
+        for q in 0..nq {
+            candidates[q] += contribution.candidates[q];
+            lists_probed[q] += contribution.lists_probed[q];
+        }
+        pruned_any |= contribution.pruned;
+        shard_accs.push(contribution.accs);
     }
 
     // cross-shard k-way merge, parallel over the batch's query rows
@@ -233,6 +303,46 @@ mod tests {
         assert_eq!(res.hits[0].1, 12, "a database query finds itself");
         assert!(res.hits[0].0.abs() < 1e-5);
         assert_eq!(res.labels[0], ds.labels[12]);
+    }
+
+    #[test]
+    fn parallel_fanout_is_bit_identical_to_serial() {
+        for index in [false, true] {
+            let (_, corpus) = setup(4, index);
+            let queries: Vec<Histogram> = (0..5).map(|u| corpus.histogram(u * 9)).collect();
+            for nprobe in [None, Some(1), Some(3)] {
+                let serial = search_batch_budgeted(
+                    &corpus, &queries, Method::Act { k: 2 }, 6, nprobe, Some(1),
+                )
+                .unwrap();
+                for width in [Some(2), Some(4), Some(64), None] {
+                    let par = search_batch_budgeted(
+                        &corpus, &queries, Method::Act { k: 2 }, 6, nprobe, width,
+                    )
+                    .unwrap();
+                    for (a, b) in serial.results.iter().zip(&par.results) {
+                        assert_eq!(a.hits, b.hits, "index={index} nprobe={nprobe:?}");
+                        assert_eq!(a.labels, b.labels);
+                        assert_eq!(a.candidates, b.candidates);
+                        assert_eq!(a.lists_probed, b.lists_probed);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_datasets_share_one_embedding_table() {
+        // Arc<Embeddings> sharing: building S shards must not clone the
+        // (v, m) coordinate matrix per shard
+        let (ds, corpus) = setup(4, true);
+        assert!(corpus.embeddings().shares_storage(&ds.embeddings));
+        for shard in corpus.shards() {
+            assert!(
+                shard.dataset().embeddings.shares_storage(&ds.embeddings),
+                "shard dataset must reference the corpus embedding table"
+            );
+        }
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //! consecutive batches through one `PlanScratch` must give identical
 //! results (no state leaks through the recycled arena).
 
+// the legacy SearchEngine shims are exercised deliberately: their
+// bit-identity to the planner is part of what this suite pins down
+#![allow(deprecated)]
+
 use std::sync::Arc;
 
 use emdpar::core::{BatchDistance, Dataset, Histogram, Method, MethodRegistry, Metric};

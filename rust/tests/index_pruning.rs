@@ -7,6 +7,10 @@
 //! * `EMDX` persistence round-trips bit-exactly and a stale dataset
 //!   fingerprint is rejected at load.
 
+// the legacy SearchEngine shims are exercised deliberately: their
+// bit-identity to the planner is part of what this suite pins down
+#![allow(deprecated)]
+
 use std::sync::Arc;
 
 use emdpar::config::{Config, DatasetSpec, IndexParams};

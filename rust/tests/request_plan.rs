@@ -1,0 +1,269 @@
+//! Query-planner request-path acceptance (ISSUE 5):
+//!
+//! * every legacy entry point is **bit-identical** to its `SearchRequest`
+//!   equivalent across methods × {plain, indexed, sharded} × ℓ × nprobe;
+//! * the TCP request object JSON round-trips exactly;
+//! * a cascade executes over a **sharded** corpus (previously impossible):
+//!   at `nprobe >= nlist` on every shard its hits and distances are
+//!   bit-identical to exhaustive rerank, and the certification contract is
+//!   preserved.
+
+#![allow(deprecated)] // the legacy shims are compared against the planner
+
+use std::sync::Arc;
+
+use emdpar::config::{Config, DatasetSpec, IndexParams, ShardParams};
+use emdpar::coordinator::{
+    cascade_search, CascadeSpec, SearchEngine, SearchRequest, Stage, TopL,
+};
+use emdpar::core::{Dataset, Histogram, Method};
+use emdpar::util::json::Json;
+
+fn dataset() -> Arc<Dataset> {
+    Arc::new(
+        Config {
+            dataset: DatasetSpec::SynthText { n: 60, vocab: 240, dim: 10, seed: 33 },
+            ..Config::default()
+        }
+        .load_dataset()
+        .unwrap(),
+    )
+}
+
+fn index_params() -> IndexParams {
+    IndexParams { nlist: 5, nprobe: 2, train_iters: 6, seed: 4, min_points_per_list: 1 }
+}
+
+fn engine(ds: &Arc<Dataset>, index: bool, shards: Option<usize>) -> SearchEngine {
+    SearchEngine::with_dataset(
+        Config {
+            threads: 2,
+            index: index.then(index_params),
+            sharded: shards.map(|s| ShardParams { shards: s, max_docs_per_shard: 1 << 20 }),
+            ..Config::default()
+        },
+        Arc::clone(ds),
+    )
+    .unwrap()
+}
+
+#[test]
+fn legacy_entry_points_are_bit_identical_to_requests() {
+    let ds = dataset();
+    let engines =
+        [engine(&ds, false, None), engine(&ds, true, None), engine(&ds, true, Some(3))];
+    let queries: Vec<Histogram> = (0..4).map(|u| ds.histogram(u * 11)).collect();
+    for (e, eng) in engines.iter().enumerate() {
+        for method in [Method::Rwmd, Method::Act { k: 2 }, Method::Wcd] {
+            for l in [1usize, 6] {
+                for nprobe in [None, Some(2), Some(64)] {
+                    let tag = format!("engine {e} {method} l={l} nprobe={nprobe:?}");
+                    // single-query legacy vs request
+                    let legacy = eng.search_opts(&queries[0], method, l, nprobe).unwrap();
+                    let mut req =
+                        SearchRequest::query(queries[0].clone()).method(method).topl(l);
+                    if let Some(np) = nprobe {
+                        req = req.nprobe(np);
+                    }
+                    let resp = eng.execute(&req).unwrap();
+                    assert_eq!(legacy.hits, resp.results[0].hits, "{tag}");
+                    assert_eq!(legacy.labels, resp.results[0].labels, "{tag}");
+                    // batched legacy vs request
+                    let legacy = eng.search_batch_opts(&queries, method, l, nprobe).unwrap();
+                    let mut req = SearchRequest::batch(queries.clone()).method(method).topl(l);
+                    if let Some(np) = nprobe {
+                        req = req.nprobe(np);
+                    }
+                    let resp = eng.execute(&req).unwrap();
+                    assert_eq!(legacy.len(), resp.results.len(), "{tag}");
+                    for (a, b) in legacy.iter().zip(&resp.results) {
+                        assert_eq!(a.hits, b.hits, "{tag}");
+                        assert_eq!(a.labels, b.labels, "{tag}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn request_route_matches_first_principles_topl() {
+    // plain engine, exhaustive route: the planner must equal a TopL scan of
+    // the raw distance row (not just the legacy shim, which delegates)
+    let ds = dataset();
+    let eng = engine(&ds, false, None);
+    let q = ds.histogram(7);
+    let row = eng.native().distances(&q, Method::Act { k: 2 });
+    let mut want = TopL::new(5);
+    want.push_slice(&row, 0);
+    let resp = eng
+        .execute(&SearchRequest::query(q).method(Method::Act { k: 2 }).topl(5))
+        .unwrap();
+    assert_eq!(resp.results[0].hits, want.into_sorted());
+    assert_eq!(resp.stats.candidates_scored, ds.len());
+}
+
+#[test]
+fn cascade_request_matches_legacy_cascade_search() {
+    let ds = dataset();
+    let eng = engine(&ds, false, None);
+    let q = ds.histogram(3);
+    for rerank in [Method::Act { k: 4 }, Method::Ict, Method::Exact] {
+        for overfetch in [1usize, 4, 64] {
+            let legacy = cascade_search(&eng.native(), &q, rerank, 5, overfetch).unwrap();
+            let req = SearchRequest::query(q.clone())
+                .topl(5)
+                .cascade(CascadeSpec::new(rerank).overfetch(overfetch));
+            let resp = eng.execute(&req).unwrap();
+            let tag = format!("{rerank} overfetch={overfetch}");
+            assert_eq!(resp.results[0].hits, legacy.hits, "{tag}");
+            assert_eq!(resp.stats.certified[0], legacy.certified, "{tag}");
+            assert_eq!(resp.stats.reranked, legacy.reranked, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn cascade_over_sharded_corpus_full_probe_is_bit_identical_to_exhaustive_rerank() {
+    // the previously-impossible composition: cascade over a sharded corpus.
+    // Per-shard RWMD shortlists -> global top-(overfetch·ℓ+1) merge ->
+    // dominating rerank, bit-identical to brute-force rerank at full probe.
+    let ds = dataset();
+    let n = ds.len();
+    for shards in [2usize, 4] {
+        let eng = engine(&ds, true, Some(shards));
+        for (qid, rerank) in [(5usize, Method::Exact), (20, Method::Act { k: 4 })] {
+            let q = ds.histogram(qid);
+            let req = SearchRequest::query(q.clone())
+                .topl(4)
+                .nprobe(1 << 20) // >= nlist on every shard: full probe
+                .cascade(CascadeSpec::new(rerank).overfetch(n));
+            let resp = eng.execute(&req).unwrap();
+            // exhaustive rerank reference: the per-pair measure over every
+            // document, top-4 by (distance, id)
+            let dist = eng.registry().distance(rerank);
+            let qn = q.normalized();
+            let mut want = TopL::new(4);
+            for u in 0..n {
+                let d = dist.distance(&ds.embeddings, &ds.histogram(u), &qn).unwrap() as f32;
+                want.push(d, u);
+            }
+            let want = want.into_sorted();
+            assert_eq!(resp.results[0].hits, want, "S={shards} {rerank}");
+            assert!(
+                resp.stats.certified[0],
+                "full-coverage full-overfetch cascade must be certified"
+            );
+            // and identical to the monolithic legacy cascade over the
+            // engine's own fallback engine
+            let legacy = cascade_search(&eng.native(), &q, rerank, 4, n).unwrap();
+            assert_eq!(resp.results[0].hits, legacy.hits, "S={shards} {rerank}");
+            assert_eq!(resp.stats.certified[0], legacy.certified);
+        }
+    }
+}
+
+#[test]
+fn certified_cascade_over_shards_forces_full_coverage() {
+    let ds = dataset();
+    let eng = engine(&ds, true, Some(3));
+    let q = ds.histogram(9);
+    let req = SearchRequest::query(q.clone())
+        .topl(3)
+        .nprobe(1) // ignored: certified demands coverage
+        .cascade(CascadeSpec::new(Method::Ict).overfetch(ds.len()).certified(true));
+    let resp = eng.execute(&req).unwrap();
+    assert!(resp.stats.certified[0]);
+    assert_eq!(resp.stats.candidates_scored, ds.len(), "certified forces full coverage");
+    // the same request uncertified prunes — and cannot claim a certificate
+    let req = SearchRequest::query(q)
+        .topl(3)
+        .nprobe(1)
+        .cascade(CascadeSpec::new(Method::Ict).overfetch(ds.len()));
+    let resp = eng.execute(&req).unwrap();
+    assert!(resp.stats.candidates_scored < ds.len(), "nprobe 1 must prune somewhere");
+    assert!(!resp.stats.certified[0], "pruned stage 1 cannot claim a global certificate");
+}
+
+#[test]
+fn sharded_cascade_finds_appended_documents() {
+    // cascade over the *live* corpus: appended docs are visible to both
+    // stages (the planner reads the corpus, not the build-time snapshot)
+    let ds = dataset();
+    let eng = engine(&ds, true, Some(2));
+    let doc = Histogram::from_pairs(vec![(7, 0.6), (13, 0.4)]);
+    let out = eng.add_docs(std::slice::from_ref(&doc), &[9]).unwrap();
+    assert_eq!(out.ids, vec![60]);
+    let req = SearchRequest::query(doc)
+        .topl(3)
+        .cascade(CascadeSpec::new(Method::Exact).overfetch(eng.num_docs()).certified(true));
+    let resp = eng.execute(&req).unwrap();
+    assert_eq!(resp.results[0].hits[0].1, 60, "the appended doc reranks first");
+    assert_eq!(resp.results[0].labels[0], 9);
+    assert!(resp.stats.certified[0]);
+}
+
+#[test]
+fn tcp_request_object_round_trips() {
+    let wire = "{\"op\": \"search\", \"method\": \"act-1\", \"l\": 5, \"nprobe\": 3, \
+                \"cascade\": {\"rerank\": \"emd\", \"overfetch\": 4, \"certified\": false}, \
+                \"query\": [[1, 0.5], [4, 0.5]]}";
+    let req = SearchRequest::from_json(&Json::parse(wire).unwrap()).unwrap();
+    assert_eq!(req.method, Some(Method::Act { k: 2 }));
+    assert_eq!(req.l, Some(5));
+    assert_eq!(req.nprobe, Some(3));
+    assert_eq!(req.queries().len(), 1);
+    let spec = req.cascade.unwrap();
+    assert_eq!(spec.rerank, Method::Exact);
+    assert_eq!(spec.overfetch, Some(4));
+    assert!(!spec.certified);
+    // serialize -> reparse -> equal (weights travel as f64: bit-exact)
+    let back =
+        SearchRequest::from_json(&Json::parse(&req.to_json().to_string_compact()).unwrap())
+            .unwrap();
+    assert_eq!(back, req);
+}
+
+#[test]
+fn plan_composes_prune_fanout_merge_rerank() {
+    let ds = dataset();
+    let eng = engine(&ds, true, Some(3));
+    let q = ds.histogram(0);
+    let p = eng
+        .plan(
+            &SearchRequest::query(q)
+                .topl(4)
+                .nprobe(2)
+                .cascade(CascadeSpec::new(Method::Exact)),
+        )
+        .unwrap();
+    let kinds: Vec<&str> = p
+        .stages
+        .iter()
+        .map(|s| match s {
+            Stage::Prune { .. } => "prune",
+            Stage::Score { .. } => "score",
+            Stage::ShardFanout { .. } => "fanout",
+            Stage::Merge { .. } => "merge",
+            Stage::CascadeRerank { .. } => "rerank",
+        })
+        .collect();
+    assert_eq!(kinds, ["prune", "score", "fanout", "merge", "rerank"]);
+    assert_eq!(p.method, Method::Rwmd, "cascade stage 1 is canonical LC-RWMD");
+    assert!(!p.describe().is_empty());
+}
+
+#[test]
+fn group_keys_route_equivalent_requests_together() {
+    let ds = dataset();
+    let eng = engine(&ds, true, None);
+    let q = ds.histogram(1);
+    // nprobe beyond nlist and nprobe = nlist resolve to the same effective
+    // width: one grouped dispatch on the server
+    let a = SearchRequest::query(q.clone()).nprobe(5).group_key(&eng);
+    let b = SearchRequest::query(q.clone()).nprobe(500).group_key(&eng);
+    assert_eq!(a, b);
+    // different ℓ splits the group
+    let c = SearchRequest::query(q).topl(3).group_key(&eng);
+    assert_ne!(a, c);
+}

@@ -11,6 +11,10 @@
 //!   file-backed engine restart;
 //! * `add_docs` works end-to-end over the TCP protocol.
 
+// the legacy SearchEngine shims are exercised deliberately: their
+// bit-identity to the planner is part of what this suite pins down
+#![allow(deprecated)]
+
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
