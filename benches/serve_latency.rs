@@ -1,0 +1,191 @@
+//! Serving-runtime comparison: thread-per-connection [`Server`] vs the
+//! event-loop [`ReactorServer`], closed-loop clients over real sockets.
+//!
+//! Sweeps the connection count (1 / 8 / 64 by default) and reports
+//! throughput plus per-request p50/p99 latency for both runtimes.  The
+//! legacy server handles connections on a pool of `threads.max(2)` workers,
+//! so past that many concurrent clients it head-of-line blocks whole
+//! connections; the reactor multiplexes every connection over a fixed set
+//! of event loops and keeps admitting work.
+//!
+//! Emits machine-readable `BENCH_serve.json` in the working directory (the
+//! repo root under `cargo bench`).
+//!
+//! Run: `cargo bench --bench serve_latency` (EMDPAR_BENCH_FULL=1 for the
+//! bigger sweep).  EMDPAR_SERVE_MIN_SPEEDUP enforces a floor on the
+//! reactor/legacy throughput ratio at the highest connection count.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+use emdpar::config::{Config, DatasetSpec};
+use emdpar::coordinator::SearchEngine;
+use emdpar::prelude::{ReactorServer, Server};
+use emdpar::util::json::Json;
+
+enum AnyServer {
+    Legacy(Server),
+    Reactor(ReactorServer),
+}
+
+impl AnyServer {
+    fn bind(kind: &str, engine: SearchEngine) -> AnyServer {
+        match kind {
+            "threads" => AnyServer::Legacy(Server::bind(engine, "127.0.0.1:0").unwrap()),
+            _ => AnyServer::Reactor(ReactorServer::bind(engine, "127.0.0.1:0").unwrap()),
+        }
+    }
+
+    fn local_addr(&self) -> SocketAddr {
+        match self {
+            AnyServer::Legacy(s) => s.local_addr().unwrap(),
+            AnyServer::Reactor(s) => s.local_addr().unwrap(),
+        }
+    }
+
+    fn serve_n(&self, count: usize) {
+        match self {
+            AnyServer::Legacy(s) => s.serve_n(count).unwrap(),
+            AnyServer::Reactor(s) => s.serve_n(count).unwrap(),
+        }
+    }
+}
+
+fn engine_config(n: usize, threads: usize) -> Config {
+    Config {
+        dataset: DatasetSpec::SynthText { n, vocab: 400, dim: 16, seed: 11 },
+        threads,
+        linger_ms: 1,
+        ..Default::default()
+    }
+}
+
+/// One closed-loop client: request → response → next, recording µs each.
+fn client_loop(addr: SocketAddr, n_docs: usize, reqs: usize, seed: usize) -> Vec<u64> {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut lat = Vec::with_capacity(reqs);
+    let mut resp = String::new();
+    for i in 0..reqs {
+        let id = (seed * 31 + i * 7) % n_docs;
+        let line = format!("{{\"op\": \"search_id\", \"id\": {id}, \"l\": 10}}\n");
+        let t0 = Instant::now();
+        writer.write_all(line.as_bytes()).unwrap();
+        resp.clear();
+        reader.read_line(&mut resp).unwrap();
+        lat.push(t0.elapsed().as_micros() as u64);
+        assert!(resp.contains("\"ok\":true"), "bench request failed: {resp}");
+    }
+    lat
+}
+
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Run one sweep point: `conns` closed-loop clients against a fresh engine
+/// behind `kind`; returns (queries/s, p50 µs, p99 µs).
+fn run_point(kind: &str, n_docs: usize, threads: usize, conns: usize, reqs: usize) -> (f64, u64, u64) {
+    let engine = SearchEngine::from_config(engine_config(n_docs, threads)).unwrap();
+    let server = AnyServer::bind(kind, engine);
+    let addr = server.local_addr();
+    let mut lat: Vec<u64> = Vec::with_capacity(conns * reqs);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let srv = s.spawn(|| server.serve_n(conns));
+        let clients: Vec<_> = (0..conns)
+            .map(|c| s.spawn(move || client_loop(addr, n_docs, reqs, c)))
+            .collect();
+        for h in clients {
+            lat.extend(h.join().unwrap());
+        }
+        srv.join().unwrap();
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_unstable();
+    ((conns * reqs) as f64 / wall, percentile(&lat, 50.0), percentile(&lat, 99.0))
+}
+
+fn main() {
+    let full = std::env::var("EMDPAR_BENCH_FULL").is_ok();
+    let (n_docs, reqs, sweep): (usize, usize, &[usize]) =
+        if full { (2000, 80, &[1, 8, 64, 128]) } else { (600, 40, &[1, 8, 64]) };
+    let threads = emdpar::util::threadpool::default_threads();
+
+    println!("# Serving runtimes: thread-per-connection vs event-loop reactor");
+    println!("# n={n_docs} reqs/conn={reqs} threads={threads} (closed-loop clients)\n");
+    println!(
+        "{:>8} {:>9} {:>10} {:>10} {:>10}",
+        "runtime", "conns", "qps", "p50_us", "p99_us"
+    );
+
+    let mut rows = Vec::new();
+    let mut qps_at_max = [0.0f64; 2]; // [legacy, reactor] at the top sweep point
+    for (k, kind) in ["threads", "reactor"].iter().enumerate() {
+        for &conns in sweep {
+            let (qps, p50, p99) = run_point(kind, n_docs, threads, conns, reqs);
+            println!("{kind:>8} {conns:>9} {qps:>10.1} {p50:>10} {p99:>10}");
+            if conns == *sweep.last().unwrap() {
+                qps_at_max[k] = qps;
+            }
+            rows.push(Json::obj(vec![
+                ("runtime", (*kind).into()),
+                ("connections", conns.into()),
+                ("queries_per_s", qps.into()),
+                ("p50_us", (p50 as usize).into()),
+                ("p99_us", (p99 as usize).into()),
+            ]));
+        }
+    }
+
+    let max_conns = *sweep.last().unwrap();
+    let speedup = qps_at_max[1] / qps_at_max[0].max(1e-12);
+    println!("\nreactor/legacy throughput at {max_conns} connections: {speedup:.2}x");
+
+    let json = Json::obj(vec![
+        ("bench", "serve_latency".into()),
+        ("status", "measured".into()),
+        (
+            "workload",
+            Json::obj(vec![
+                ("n", n_docs.into()),
+                ("requests_per_connection", reqs.into()),
+                ("threads", threads.into()),
+                ("connections_sweep", Json::Arr(sweep.iter().map(|&c| c.into()).collect())),
+                ("full", full.into()),
+            ]),
+        ),
+        ("rows", Json::Arr(rows)),
+        ("reactor_speedup_at_max_connections", speedup.into()),
+        ("regenerate_with", "cargo bench --bench serve_latency".into()),
+    ]);
+    let path = "BENCH_serve.json";
+    match std::fs::File::create(path)
+        .and_then(|mut f| writeln!(f, "{}", json.to_string_pretty()))
+    {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    // CI floor: the reactor must not lose throughput to the legacy runtime
+    // at high connection counts (the whole point of the event loop); a
+    // conservative floor absorbs shared-runner noise
+    if let Ok(s) = std::env::var("EMDPAR_SERVE_MIN_SPEEDUP") {
+        if let Ok(min) = s.parse::<f64>() {
+            if speedup < min {
+                eprintln!(
+                    "FAIL: reactor speedup {speedup:.2}x at {max_conns} connections below \
+                     required {min:.2}x"
+                );
+                std::process::exit(1);
+            }
+            println!("speedup {speedup:.2}x meets the required {min:.2}x floor");
+        }
+    }
+}

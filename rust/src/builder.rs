@@ -30,7 +30,7 @@
 
 use std::sync::Arc;
 
-use crate::config::{Backend, Config, DatasetSpec, IndexParams, ShardParams};
+use crate::config::{Backend, Config, DatasetSpec, IndexParams, ServeParams, ShardParams};
 use crate::core::{Dataset, EmdResult, Method, MethodRegistry, Metric};
 use crate::coordinator::SearchEngine;
 use crate::lc::{EngineParams, LcEngine};
@@ -152,6 +152,45 @@ impl EngineBuilder {
         self
     }
 
+    /// Replace the whole serving-runtime block (see [`ServeParams`]).
+    pub fn serve(mut self, params: ServeParams) -> EngineBuilder {
+        self.config.serve = params;
+        self
+    }
+
+    /// Reactor threads for the event-loop server
+    /// ([`crate::serve::ReactorServer`]).
+    pub fn reactors(mut self, reactors: usize) -> EngineBuilder {
+        self.config.serve.reactors = reactors.max(1);
+        self
+    }
+
+    /// Admission budget: searches in flight beyond this are shed with an
+    /// `overloaded` error instead of queueing without bound.
+    pub fn max_inflight(mut self, max_inflight: usize) -> EngineBuilder {
+        self.config.serve.max_inflight = max_inflight.max(1);
+        self
+    }
+
+    /// Default per-request deadline in milliseconds (0 disables; requests
+    /// override with their own `"deadline_ms"`).
+    pub fn deadline_ms(mut self, deadline_ms: u64) -> EngineBuilder {
+        self.config.serve.deadline_ms = deadline_ms;
+        self
+    }
+
+    /// Reactor-side idle-connection timeout in milliseconds (0 disables).
+    pub fn idle_timeout_ms(mut self, idle_timeout_ms: u64) -> EngineBuilder {
+        self.config.serve.idle_timeout_ms = idle_timeout_ms;
+        self
+    }
+
+    /// Hard request-line length cap (both servers).
+    pub fn max_line_bytes(mut self, max_line_bytes: usize) -> EngineBuilder {
+        self.config.serve.max_line_bytes = max_line_bytes.max(256);
+        self
+    }
+
     /// The effective configuration so far.
     pub fn config(&self) -> &Config {
         &self.config
@@ -256,6 +295,24 @@ mod tests {
         assert_eq!(eng.dataset().len(), ds.len());
         // 1 here + 1 in the engine
         assert_eq!(Arc::strong_count(&ds), 2);
+    }
+
+    #[test]
+    fn serve_knobs_flow_into_config() {
+        let b = EngineBuilder::new()
+            .dataset_spec(spec())
+            .reactors(4)
+            .max_inflight(128)
+            .deadline_ms(250)
+            .idle_timeout_ms(30_000)
+            .max_line_bytes(0); // clamps to the floor
+        assert_eq!(b.config().serve.reactors, 4);
+        assert_eq!(b.config().serve.max_inflight, 128);
+        assert_eq!(b.config().serve.deadline_ms, 250);
+        assert_eq!(b.config().serve.idle_timeout_ms, 30_000);
+        assert_eq!(b.config().serve.max_line_bytes, 256);
+        let eng = b.build_search().unwrap();
+        assert_eq!(eng.config().serve.max_inflight, 128);
     }
 
     #[test]

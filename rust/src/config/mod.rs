@@ -78,6 +78,42 @@ impl Default for ShardParams {
     }
 }
 
+/// Serving-runtime configuration (the `serve` object / `--runtime` flags):
+/// event-loop sizing, admission control, deadlines and framing limits.
+/// These apply to the reactor server; the legacy thread server honors the
+/// line cap and the default deadline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeParams {
+    /// Event-loop threads multiplexing connections.
+    pub reactors: usize,
+    /// Searches allowed in flight before admission sheds with
+    /// `{"ok":false,"error":"overloaded","retry_after_ms":...}`.
+    pub max_inflight: usize,
+    /// Default per-request deadline, milliseconds; 0 disables.  Requests
+    /// can override per call with `"deadline_ms"`.
+    pub deadline_ms: u64,
+    /// Hard cap on one request line; longer lines answer a structured
+    /// error and are discarded with bounded memory.
+    pub max_line_bytes: usize,
+    /// Close connections idle longer than this, milliseconds; 0 disables.
+    pub idle_timeout_ms: u64,
+    /// `retry_after_ms` hint attached to overload responses.
+    pub retry_after_ms: u64,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        ServeParams {
+            reactors: 2,
+            max_inflight: 1024,
+            deadline_ms: 0,
+            max_line_bytes: 1 << 20,
+            idle_timeout_ms: 0,
+            retry_after_ms: 2,
+        }
+    }
+}
+
 /// Dataset source.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DatasetSpec {
@@ -122,6 +158,8 @@ pub struct Config {
     /// sharded live corpus: per-shard engines + IVF, appendable at runtime
     /// (None = single monolithic corpus)
     pub sharded: Option<ShardParams>,
+    /// serving-runtime knobs (reactor count, admission, deadlines, framing)
+    pub serve: ServeParams,
 }
 
 impl Default for Config {
@@ -144,6 +182,7 @@ impl Default for Config {
             shards: 4,
             index: None,
             sharded: None,
+            serve: ServeParams::default(),
         }
     }
 }
@@ -211,6 +250,9 @@ impl Config {
         }
         if let Some(j) = json.get("shard") {
             cfg.sharded = Some(parse_shard(j)?);
+        }
+        if let Some(j) = json.get("serve") {
+            cfg.serve = parse_serve(j)?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -321,6 +363,13 @@ impl Config {
                 "the sharded live corpus requires the native backend"
             );
         }
+        emd_ensure!(self.serve.reactors >= 1, config, "serve reactors must be >= 1");
+        emd_ensure!(self.serve.max_inflight >= 1, config, "serve max_inflight must be >= 1");
+        emd_ensure!(
+            self.serve.max_line_bytes >= 256,
+            config,
+            "serve max_line_bytes must be >= 256"
+        );
         Ok(())
     }
 
@@ -376,6 +425,29 @@ fn parse_shard(j: &Json) -> EmdResult<ShardParams> {
     }
     if let Some(x) = j.get("max_docs_per_shard").and_then(Json::as_usize) {
         p.max_docs_per_shard = x;
+    }
+    Ok(p)
+}
+
+fn parse_serve(j: &Json) -> EmdResult<ServeParams> {
+    let mut p = ServeParams::default();
+    if let Some(x) = j.get("reactors").and_then(Json::as_usize) {
+        p.reactors = x;
+    }
+    if let Some(x) = j.get("max_inflight").and_then(Json::as_usize) {
+        p.max_inflight = x;
+    }
+    if let Some(x) = j.get("deadline_ms").and_then(Json::as_usize) {
+        p.deadline_ms = x as u64;
+    }
+    if let Some(x) = j.get("max_line_bytes").and_then(Json::as_usize) {
+        p.max_line_bytes = x;
+    }
+    if let Some(x) = j.get("idle_timeout_ms").and_then(Json::as_usize) {
+        p.idle_timeout_ms = x as u64;
+    }
+    if let Some(x) = j.get("retry_after_ms").and_then(Json::as_usize) {
+        p.retry_after_ms = x as u64;
     }
     Ok(p)
 }
@@ -564,6 +636,43 @@ mod tests {
         assert!(Config::from_json(&j).is_err());
         // no shard object -> monolithic corpus
         assert_eq!(Config::default().sharded, None);
+    }
+
+    #[test]
+    fn serve_params_from_json_and_validation() {
+        let j = Json::parse(
+            r#"{"serve": {"reactors": 4, "max_inflight": 64, "deadline_ms": 250,
+                "max_line_bytes": 4096, "idle_timeout_ms": 30000, "retry_after_ms": 5}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(
+            cfg.serve,
+            ServeParams {
+                reactors: 4,
+                max_inflight: 64,
+                deadline_ms: 250,
+                max_line_bytes: 4096,
+                idle_timeout_ms: 30000,
+                retry_after_ms: 5,
+            }
+        );
+        // partial objects fill from defaults
+        let j = Json::parse(r#"{"serve": {"reactors": 1}}"#).unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(cfg.serve.reactors, 1);
+        assert_eq!(cfg.serve.max_inflight, ServeParams::default().max_inflight);
+        // degenerate values rejected
+        for bad in [
+            r#"{"serve": {"reactors": 0}}"#,
+            r#"{"serve": {"max_inflight": 0}}"#,
+            r#"{"serve": {"max_line_bytes": 16}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Config::from_json(&j).is_err(), "{bad}");
+        }
+        // absent -> defaults
+        assert_eq!(Config::default().serve, ServeParams::default());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Lock-free coordinator metrics: counters + latency histogram.
+//! Lock-free coordinator metrics: counters + latency histograms.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -7,6 +7,76 @@ use crate::util::json::Json;
 
 /// Exponential latency histogram: bucket i covers [2^i, 2^(i+1)) microseconds.
 const BUCKETS: usize = 24;
+
+/// A log-bucketed latency histogram with a running sum, usable lock-free
+/// from any number of threads.  Percentiles report the upper bucket bound,
+/// so they are exact to within 2× — plenty for the dashboards the `stats`
+/// op feeds.
+#[derive(Debug, Default)]
+pub struct LatencyHist {
+    buckets: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl LatencyHist {
+    pub fn record(&self, latency: Duration) {
+        self.record_us(latency.as_micros().min(u128::from(u64::MAX)) as u64);
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        let bucket = (63 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us() as f64 / n as f64
+        }
+    }
+
+    /// Approximate percentile (upper bucket bound), microseconds.
+    pub fn percentile_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let want = ((total as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= want {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    /// Snapshot: `{count, mean_us, p50_us, p95_us, p99_us}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", (self.count() as usize).into()),
+            ("mean_us", self.mean_us().into()),
+            ("p50_us", (self.percentile_us(0.5) as usize).into()),
+            ("p95_us", (self.percentile_us(0.95) as usize).into()),
+            ("p99_us", (self.percentile_us(0.99) as usize).into()),
+        ])
+    }
+}
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -35,8 +105,19 @@ pub struct Metrics {
     /// Microseconds spent k-way-merging per-shard top-ℓ accumulators (the
     /// fan-out overhead a monolithic corpus does not pay).
     merge_sum_us: AtomicU64,
-    latency_us: [AtomicU64; BUCKETS],
-    latency_sum_us: AtomicU64,
+    latency: LatencyHist,
+    /// Searches admitted into the compute bridge.
+    pub admitted: AtomicU64,
+    /// Searches shed at admission (`overloaded`).
+    pub shed: AtomicU64,
+    /// Searches shed because their deadline expired before/during compute.
+    pub deadline_expired: AtomicU64,
+    /// Enqueue → batch-drain wait per search.
+    pub queue_wait: LatencyHist,
+    /// Engine execute time per dispatch group.
+    pub execute: LatencyHist,
+    /// Enqueue → response-serialized end-to-end time per search.
+    pub e2e: LatencyHist,
 }
 
 impl Metrics {
@@ -47,10 +128,7 @@ impl Metrics {
     pub fn record_query(&self, latency: Duration, evals: usize) {
         self.queries.fetch_add(1, Ordering::Relaxed);
         self.distance_evals.fetch_add(evals as u64, Ordering::Relaxed);
-        let us = latency.as_micros().min(u128::from(u64::MAX)) as u64;
-        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
-        let bucket = (63 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
-        self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+        self.latency.record(latency);
     }
 
     pub fn record_batch(&self) {
@@ -84,6 +162,18 @@ impl Metrics {
         self.merge_sum_us.fetch_add(us, Ordering::Relaxed);
     }
 
+    pub fn record_admitted(&self) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_deadline_expired(&self) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Total microseconds spent in cross-shard top-ℓ merges.
     pub fn merge_us(&self) -> u64 {
         self.merge_sum_us.load(Ordering::Relaxed)
@@ -102,21 +192,7 @@ impl Metrics {
 
     /// Approximate latency percentile (upper bucket bound), microseconds.
     pub fn latency_percentile_us(&self, q: f64) -> u64 {
-        let counts: Vec<u64> =
-            self.latency_us.iter().map(|b| b.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let want = ((total as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in counts.iter().enumerate() {
-            seen += c;
-            if seen >= want {
-                return 1u64 << (i + 1);
-            }
-        }
-        1u64 << BUCKETS
+        self.latency.percentile_us(q)
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -124,7 +200,7 @@ impl Metrics {
         if n == 0 {
             0.0
         } else {
-            self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+            self.latency.sum_us() as f64 / n as f64
         }
     }
 
@@ -167,6 +243,16 @@ impl Metrics {
             ("mean_latency_us", self.mean_latency_us().into()),
             ("p50_latency_us", (self.latency_percentile_us(0.5) as usize).into()),
             ("p95_latency_us", (self.latency_percentile_us(0.95) as usize).into()),
+            ("p99_latency_us", (self.latency_percentile_us(0.99) as usize).into()),
+            ("admitted", (self.admitted.load(Ordering::Relaxed) as usize).into()),
+            ("shed", (self.shed.load(Ordering::Relaxed) as usize).into()),
+            (
+                "deadline_expired",
+                (self.deadline_expired.load(Ordering::Relaxed) as usize).into(),
+            ),
+            ("queue_wait", self.queue_wait.to_json()),
+            ("execute", self.execute.to_json()),
+            ("e2e", self.e2e.to_json()),
         ])
     }
 }
@@ -240,5 +326,45 @@ mod tests {
         assert!((m.pruned_fraction() - 0.75).abs() < 1e-12);
         let j = m.to_json();
         assert_eq!(j.get("candidates_scored").and_then(Json::as_usize), Some(50));
+    }
+
+    #[test]
+    fn latency_hist_percentiles_and_json() {
+        let h = LatencyHist::default();
+        assert_eq!(h.percentile_us(0.99), 0);
+        for us in [10u64, 100, 100, 5000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean_us() - 1302.5).abs() < 1e-9);
+        let p50 = h.percentile_us(0.5);
+        assert!((64..=256).contains(&p50), "p50 {p50}");
+        let p99 = h.percentile_us(0.99);
+        assert!(p99 >= 4096, "p99 {p99} must cover the 5ms outlier");
+        let j = h.to_json();
+        assert_eq!(j.get("count").and_then(Json::as_usize), Some(4));
+        assert!(j.get("p99_us").is_some());
+    }
+
+    #[test]
+    fn admission_counters_surface_in_stats() {
+        let m = Metrics::new();
+        m.record_admitted();
+        m.record_admitted();
+        m.record_shed();
+        m.record_deadline_expired();
+        m.queue_wait.record(Duration::from_micros(40));
+        m.execute.record(Duration::from_micros(400));
+        m.e2e.record(Duration::from_micros(450));
+        let j = m.to_json();
+        assert_eq!(j.get("admitted").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("shed").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("deadline_expired").and_then(Json::as_usize), Some(1));
+        let qw = j.get("queue_wait").expect("queue_wait sub-object");
+        assert_eq!(qw.get("count").and_then(Json::as_usize), Some(1));
+        assert_eq!(
+            j.get("e2e").and_then(|e| e.get("count")).and_then(Json::as_usize),
+            Some(1)
+        );
     }
 }

@@ -24,44 +24,235 @@
 //! (`"labels"` optional, one per doc) and answers
 //! `{"ok": true, "added": k, "ids": [...], "opened_shards": o, "n": total}`;
 //! appended docs are immediately searchable.  `{"op": "stats"}` reports the
-//! index shape plus pruning counters when an index is active, and per-shard
-//! document counts / index shapes (`"shards"`) when the corpus is sharded.
+//! index shape plus pruning counters when an index is active, per-shard
+//! document counts / index shapes (`"shards"`) when the corpus is sharded,
+//! and the serving histograms / admission counters.
+//! Search requests additionally accept `"deadline_ms"`: a per-request
+//! budget (overriding the server's `serve.deadline_ms` default; 0 disables)
+//! after which the job is shed with `{"ok": false, "error": "deadline
+//! exceeded"}` instead of burning compute.
 //! Response (one line): `{"ok": true, "hits": [[dist, id, label], ...]}` or
-//! `{"ok": false, "error": "..."}`.
+//! `{"ok": false, "error": "..."}`; the reactor runtime may also answer
+//! `{"ok": false, "error": "overloaded", "retry_after_ms": n}` under
+//! admission shed.
 //!
-//! Accepted connections are handed to a worker pool; inside a connection
-//! requests are pipelined FIFO.  Queries flow through the dynamic batcher
-//! so concurrent clients share batch dispatches: jobs are grouped by
-//! [`SearchRequest::group_key`] — the planner-resolved
-//! `(method, ℓ, nprobe, cascade)` — so batchmates that resolve to the same
-//! plan share one grouped dispatch.
+//! This `Server` is the legacy thread-per-connection front end, kept as a
+//! compatibility shim and as the benchmark baseline; the event-loop runtime
+//! lives in [`crate::serve`].  Both share the request decode
+//! ([`process_line`]) and the compute bridge
+//! ([`crate::serve::bridge::spawn_dispatcher`]), so their responses are
+//! byte-identical.  Inside a connection requests are pipelined FIFO;
+//! request lines are length-capped (`serve.max_line_bytes`) and a
+//! malformed, oversized, or non-UTF-8 line answers a structured error
+//! without tearing down the connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::config::Backend;
 use crate::core::{EmdError, EmdResult, Histogram};
 use crate::emd_ensure;
+use crate::serve::bridge::{spawn_dispatcher, Job, JobResult};
+use crate::serve::wire::{self, Decoded};
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 
-use super::batcher::{next_batch, BatchPolicy, Pending};
+use super::batcher::Pending;
 use super::engine::SearchEngine;
 use super::plan::{parse_histogram, GroupKey, SearchRequest};
 
-/// A search job travelling through the batcher: one single-query request
-/// plus its precomputed grouping key.
-struct Job {
-    req: SearchRequest,
-    key: GroupKey,
+/// `{"ok":true,"pong":true}` — the tree serialization of the ping reply
+/// (asserted byte-identical in the tests below).
+const PING_LINE: &[u8] = b"{\"ok\":true,\"pong\":true}";
+
+/// What one request line turned into.
+pub(crate) enum Handled {
+    /// Blank line: no response at all.
+    Empty,
+    /// A complete response line (success or structured error), no newline.
+    Line(Vec<u8>),
+    /// A validated single-query search for the compute bridge.
+    Search { req: SearchRequest, key: GroupKey, deadline: Option<Instant> },
 }
 
-type JobResult = Result<Json, String>;
+/// Decode one raw request line into a response or a dispatchable search —
+/// the single request path both servers share.  Tries the zero-copy lexer
+/// first and falls back to the tree codec on anything unusual, so output
+/// stays byte-identical to the tree path.  Protocol errors are counted and
+/// answered here; only valid searches escape to the batcher.
+pub(crate) fn process_line(
+    raw: &[u8],
+    engine: &SearchEngine,
+    default_deadline_ms: u64,
+) -> Handled {
+    let Ok(text) = std::str::from_utf8(raw) else {
+        engine.metrics().record_error();
+        return Handled::Line(wire::error_line(
+            &EmdError::protocol("invalid utf-8 in request line").to_string(),
+        ));
+    };
+    let trimmed = text.trim();
+    if trimmed.is_empty() {
+        return Handled::Empty;
+    }
+    let result = match wire::decode_line(trimmed) {
+        Decoded::Ping => Ok(Handled::Line(PING_LINE.to_vec())),
+        Decoded::Stats => Ok(Handled::Line(stats_json(engine).to_string_compact().into_bytes())),
+        Decoded::Search { req, id, deadline_ms } => {
+            finish_search(req, id, deadline_ms, engine, default_deadline_ms)
+        }
+        Decoded::Fallback => handle_cold(trimmed, engine, default_deadline_ms),
+    };
+    match result {
+        Ok(h) => h,
+        Err(e) => {
+            engine.metrics().record_error();
+            Handled::Line(wire::error_line(&e.to_string()))
+        }
+    }
+}
 
-/// The running server.
+/// The tree-codec request path: cold ops (`add_docs`), multi-query forms,
+/// escape-laden payloads, and every malformed line (so the tree parser's
+/// error messages stay canonical).
+fn handle_cold(
+    line: &str,
+    engine: &SearchEngine,
+    default_deadline_ms: u64,
+) -> EmdResult<Handled> {
+    let req = Json::parse(line).map_err(|e| EmdError::protocol(format!("bad json: {e}")))?;
+    match req.get("op").and_then(Json::as_str).unwrap_or("search") {
+        "ping" => Ok(Handled::Line(PING_LINE.to_vec())),
+        "stats" => Ok(Handled::Line(stats_json(engine).to_string_compact().into_bytes())),
+        "add_docs" => {
+            Ok(Handled::Line(add_docs_json(&req, engine)?.to_string_compact().into_bytes()))
+        }
+        "search" | "search_id" => {
+            // the request object is the wire form of a SearchRequest; only
+            // the 'id' shorthand needs the server (it can see the corpus)
+            let request = SearchRequest::from_json(&req)?;
+            let id = req.get("id").and_then(Json::as_usize);
+            let deadline_ms = req.get("deadline_ms").and_then(Json::as_usize).map(|x| x as u64);
+            finish_search(request, id, deadline_ms, engine, default_deadline_ms)
+        }
+        other => Err(EmdError::protocol(format!("unknown op '{other}'"))),
+    }
+}
+
+/// Resolve the `id` shorthand, validate, plan, and stamp the deadline.
+fn finish_search(
+    mut request: SearchRequest,
+    id: Option<usize>,
+    deadline_ms: Option<u64>,
+    engine: &SearchEngine,
+    default_deadline_ms: u64,
+) -> EmdResult<Handled> {
+    if let Some(id) = id {
+        emd_ensure!(id < engine.num_docs(), protocol, "id {id} out of range");
+        request.set_queries(vec![engine.doc_histogram(id)?]);
+    }
+    emd_ensure!(!request.queries().is_empty(), protocol, "missing 'query' (or 'id')");
+    // the batcher model is one query per request: pipelined
+    // requests with equal group keys share one grouped dispatch
+    emd_ensure!(
+        request.queries().len() == 1,
+        protocol,
+        "one query per request: send multiple pipelined requests and the \
+         batcher groups them into one dispatch"
+    );
+    emd_ensure!(!request.queries()[0].is_empty(), protocol, "empty query");
+    // validate the plan up front so a bad combination (inadmissible
+    // rerank, cascade on the artifact backend) errors on this
+    // connection instead of inside the dispatcher
+    engine.plan(&request)?;
+    // the planner-resolved grouping key: batchmates resolving to
+    // the same plan share one grouped dispatch
+    let key = request.group_key(engine);
+    let ms = deadline_ms.unwrap_or(default_deadline_ms);
+    let deadline = if ms == 0 { None } else { Some(Instant::now() + Duration::from_millis(ms)) };
+    Ok(Handled::Search { req: request, key, deadline })
+}
+
+/// The `stats` payload: metrics snapshot + corpus/index/shard shape.
+fn stats_json(engine: &SearchEngine) -> Json {
+    let mut j = engine.metrics().to_json();
+    if let Json::Obj(map) = &mut j {
+        map.insert("ok".into(), Json::Bool(true));
+        map.insert("n".into(), Json::Num(engine.num_docs() as f64));
+        if let Some(stats) = engine.shard_stats() {
+            // per-shard doc counts + index shapes so operators can
+            // see skew after appends
+            map.insert(
+                "shards".into(),
+                Json::Arr(
+                    stats
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("docs", s.docs.into()),
+                                ("appended", s.appended.into()),
+                                ("nlist", s.nlist.unwrap_or(0).into()),
+                                ("min_list", s.min_list.into()),
+                                ("max_list", s.max_list.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        if let Some(ix) = engine.index() {
+            let sizes = ix.list_sizes();
+            map.insert(
+                "index".into(),
+                Json::obj(vec![
+                    ("nlist", ix.nlist().into()),
+                    ("points", ix.num_points().into()),
+                    ("dim", ix.dim().into()),
+                    (
+                        "nprobe_default",
+                        engine.config().index.map(|p| p.nprobe).unwrap_or(0).into(),
+                    ),
+                    ("max_list", sizes.iter().copied().max().unwrap_or(0).into()),
+                    ("min_list", sizes.iter().copied().min().unwrap_or(0).into()),
+                ]),
+            );
+        }
+    }
+    j
+}
+
+/// The `add_docs` op: append documents to the sharded live corpus.
+fn add_docs_json(req: &Json, engine: &SearchEngine) -> EmdResult<Json> {
+    let docs_json = req
+        .get("docs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| EmdError::protocol("missing 'docs' (array of [[idx, w], ...])"))?;
+    emd_ensure!(!docs_json.is_empty(), protocol, "empty 'docs'");
+    let docs =
+        docs_json.iter().map(parse_histogram).collect::<EmdResult<Vec<Histogram>>>()?;
+    let labels = match req.get("labels").and_then(Json::as_arr) {
+        Some(arr) => {
+            let mut out = Vec::with_capacity(arr.len());
+            for a in arr {
+                out.push(a.as_usize().ok_or_else(|| EmdError::protocol("bad label"))? as u16);
+            }
+            out
+        }
+        None => Vec::new(),
+    };
+    let outcome = engine.add_docs(&docs, &labels)?;
+    Ok(Json::obj(vec![
+        ("ok", true.into()),
+        ("added", outcome.ids.len().into()),
+        ("ids", Json::Arr(outcome.ids.iter().map(|&g| Json::Num(g as f64)).collect())),
+        ("opened_shards", outcome.opened.into()),
+        ("n", engine.num_docs().into()),
+    ]))
+}
+
+/// The running server (legacy thread-per-connection front end).
 pub struct Server {
     engine: Arc<SearchEngine>,
     listener: TcpListener,
@@ -70,96 +261,12 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind and spawn the batch-dispatch thread.  `addr` may use port 0 for
-    /// an ephemeral port (tests); see [`Server::local_addr`].
+    /// Bind and spawn the shared batch-dispatch thread.  `addr` may use
+    /// port 0 for an ephemeral port (tests); see [`Server::local_addr`].
     pub fn bind(engine: SearchEngine, addr: &str) -> EmdResult<Server> {
         let engine = Arc::new(engine);
         let listener = TcpListener::bind(addr)?;
-        let policy = BatchPolicy {
-            max_batch: engine.config().max_batch,
-            linger: std::time::Duration::from_millis(engine.config().linger_ms),
-        };
-        let (batch_tx, batch_rx) = channel::<Pending<Job, JobResult>>();
-        {
-            let engine = Arc::clone(&engine);
-            std::thread::spawn(move || {
-                while let Some(batch) = next_batch(&batch_rx, policy) {
-                    // group the drained batch by the planner's GroupKey so
-                    // each group flows through one grouped plan execution;
-                    // responses go back per-job over their own channels, so
-                    // grouping never reorders anything a client can observe.
-                    // Note: Metrics::batches counts plan executions (one per
-                    // key per drained batch, plus per-query retries when a
-                    // group fails wholesale), not drained batches
-                    let mut groups: Vec<(GroupKey, Vec<Pending<Job, JobResult>>)> = Vec::new();
-                    for pending in batch {
-                        let key = pending.query.key;
-                        match groups.iter_mut().find(|(k, _)| *k == key) {
-                            Some((_, members)) => members.push(pending),
-                            None => groups.push((key, vec![pending])),
-                        }
-                    }
-                    for (key, members) in groups {
-                        let (queries, responders): (Vec<Histogram>, Vec<_>) = members
-                            .into_iter()
-                            .map(|p| {
-                                let mut qs = p.query.req.into_queries();
-                                (qs.pop().expect("one query per job"), p.respond)
-                            })
-                            .unzip();
-                        let per_query = |q: &Histogram| {
-                            let single = key.request(vec![q.clone()]);
-                            engine
-                                .execute(&single)
-                                .map(|mut resp| {
-                                    let cert = resp.stats.certified.first().copied();
-                                    let res = resp
-                                        .results
-                                        .pop()
-                                        .expect("one query in, one result out");
-                                    search_result_json(&res, cert)
-                                })
-                                .map_err(|e| e.to_string())
-                        };
-                        // per-job results buffer: the native grouped plan
-                        // either succeeds for everyone or fails before any
-                        // query is scored (then each job is evaluated
-                        // individually once); the artifact backend plans
-                        // per query anyway, so it dispatches per job from
-                        // the start — one failing query neither fails its
-                        // batchmates nor forces re-runs
-                        let results: Vec<JobResult> = if engine.config().backend
-                            == Backend::Artifact
-                        {
-                            queries.iter().map(per_query).collect()
-                        } else {
-                            let group_req = key.request(queries);
-                            match engine.execute(&group_req) {
-                                Ok(resp) => {
-                                    let certs = resp.stats.certified;
-                                    resp.results
-                                        .into_iter()
-                                        .enumerate()
-                                        .map(|(i, res)| {
-                                            Ok(search_result_json(
-                                                &res,
-                                                certs.get(i).copied(),
-                                            ))
-                                        })
-                                        .collect()
-                                }
-                                Err(_) => {
-                                    group_req.queries().iter().map(per_query).collect()
-                                }
-                            }
-                        };
-                        for (out, respond) in results.into_iter().zip(responders) {
-                            let _ = respond.send(out);
-                        }
-                    }
-                }
-            });
-        }
+        let batch_tx = spawn_dispatcher(Arc::clone(&engine));
         let pool = ThreadPool::new(engine.config().threads.max(2));
         Ok(Server { engine, listener, batch_tx, pool })
     }
@@ -204,35 +311,63 @@ impl Server {
     }
 }
 
-/// Serialize one search result as the protocol's success payload.
-/// `certified` is the per-query cascade certificate (cascade requests
-/// only).
-fn search_result_json(res: &super::engine::SearchResult, certified: Option<bool>) -> Json {
-    let mut map: std::collections::BTreeMap<String, Json> = [
-        ("ok".to_string(), Json::Bool(true)),
-        (
-            "hits".to_string(),
-            Json::Arr(
-                res.hits
-                    .iter()
-                    .zip(&res.labels)
-                    .map(|(&(d, id), &lab)| {
-                        Json::Arr(vec![
-                            Json::Num(d as f64),
-                            Json::Num(id as f64),
-                            Json::Num(lab as f64),
-                        ])
-                    })
-                    .collect(),
-            ),
-        ),
-    ]
-    .into_iter()
-    .collect();
-    if let Some(c) = certified {
-        map.insert("certified".to_string(), Json::Bool(c));
+enum LineRead {
+    /// Clean end of stream (no buffered bytes).
+    Eof,
+    /// One line in `buf` (newline stripped; possibly EOF-terminated).
+    Line,
+    /// The line exceeded the cap; its bytes were discarded.
+    Oversized,
+}
+
+/// Read one newline-terminated request line with a hard length cap.
+/// Over-cap lines are discarded chunk-by-chunk (bounded memory) and
+/// reported as [`LineRead::Oversized`] once their newline (or EOF)
+/// arrives.
+fn read_request_line(
+    reader: &mut impl BufRead,
+    buf: &mut Vec<u8>,
+    cap: usize,
+) -> std::io::Result<LineRead> {
+    buf.clear();
+    let mut discarding = false;
+    loop {
+        let available = reader.fill_buf()?;
+        if available.is_empty() {
+            // EOF: a partial line still counts as a request, like read_line
+            return Ok(if discarding {
+                LineRead::Oversized
+            } else if buf.is_empty() {
+                LineRead::Eof
+            } else {
+                LineRead::Line
+            });
+        }
+        match available.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if !discarding {
+                    buf.extend_from_slice(&available[..pos]);
+                }
+                reader.consume(pos + 1);
+                return Ok(if discarding || buf.len() > cap {
+                    LineRead::Oversized
+                } else {
+                    LineRead::Line
+                });
+            }
+            None => {
+                let n = available.len();
+                if !discarding {
+                    buf.extend_from_slice(available);
+                    if buf.len() > cap {
+                        discarding = true;
+                        buf.clear();
+                    }
+                }
+                reader.consume(n);
+            }
+        }
     }
-    Json::Obj(map)
 }
 
 fn handle_connection(
@@ -240,178 +375,61 @@ fn handle_connection(
     engine: &SearchEngine,
     batch_tx: &Sender<Pending<Job, JobResult>>,
 ) -> EmdResult<()> {
+    let serve = engine.config().serve;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    let mut line = String::new();
+    let mut buf = Vec::new();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
-        }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        let response = match handle_request(trimmed, engine, batch_tx) {
-            Ok(json) => json,
-            Err(e) => {
+        let response: Vec<u8> = match read_request_line(&mut reader, &mut buf, serve.max_line_bytes)?
+        {
+            LineRead::Eof => return Ok(()), // client closed
+            LineRead::Oversized => {
                 engine.metrics().record_error();
-                Json::obj(vec![("ok", false.into()), ("error", e.to_string().into())])
+                wire::error_line(
+                    &EmdError::protocol(format!(
+                        "request line exceeds {} bytes",
+                        serve.max_line_bytes
+                    ))
+                    .to_string(),
+                )
             }
+            LineRead::Line => match process_line(&buf, engine, serve.deadline_ms) {
+                Handled::Empty => continue,
+                Handled::Line(bytes) => bytes,
+                Handled::Search { req, key, deadline } => {
+                    // send through the dynamic batcher and wait for the
+                    // reply (legacy blocking path: no admission permit, no
+                    // wire completion)
+                    let (tx, rx) = channel();
+                    let job = Job { req, key, deadline, wire: None, permit: None };
+                    let sent = batch_tx
+                        .send(Pending { query: job, respond: tx, enqueued: Instant::now() });
+                    let outcome = match sent {
+                        Err(_) => Err(wire::DISPATCHER_GONE_MSG.to_string()),
+                        Ok(()) => rx
+                            .recv()
+                            .unwrap_or_else(|_| Err(wire::DISPATCHER_DROPPED_MSG.to_string())),
+                    };
+                    match outcome {
+                        Ok(line) => line,
+                        Err(e) => {
+                            engine.metrics().record_error();
+                            wire::error_line(&e)
+                        }
+                    }
+                }
+            },
         };
-        writer.write_all(response.to_string_compact().as_bytes())?;
+        writer.write_all(&response)?;
         writer.write_all(b"\n")?;
         writer.flush()?;
-    }
-}
-
-fn handle_request(
-    line: &str,
-    engine: &SearchEngine,
-    batch_tx: &Sender<Pending<Job, JobResult>>,
-) -> EmdResult<Json> {
-    let req = Json::parse(line).map_err(|e| EmdError::protocol(format!("bad json: {e}")))?;
-    match req.get("op").and_then(Json::as_str).unwrap_or("search") {
-        "ping" => Ok(Json::obj(vec![("ok", true.into()), ("pong", true.into())])),
-        "stats" => {
-            let mut j = engine.metrics().to_json();
-            if let Json::Obj(map) = &mut j {
-                map.insert("ok".into(), Json::Bool(true));
-                map.insert("n".into(), Json::Num(engine.num_docs() as f64));
-                if let Some(stats) = engine.shard_stats() {
-                    // per-shard doc counts + index shapes so operators can
-                    // see skew after appends
-                    map.insert(
-                        "shards".into(),
-                        Json::Arr(
-                            stats
-                                .iter()
-                                .map(|s| {
-                                    Json::obj(vec![
-                                        ("docs", s.docs.into()),
-                                        ("appended", s.appended.into()),
-                                        ("nlist", s.nlist.unwrap_or(0).into()),
-                                        ("min_list", s.min_list.into()),
-                                        ("max_list", s.max_list.into()),
-                                    ])
-                                })
-                                .collect(),
-                        ),
-                    );
-                }
-                if let Some(ix) = engine.index() {
-                    let sizes = ix.list_sizes();
-                    map.insert(
-                        "index".into(),
-                        Json::obj(vec![
-                            ("nlist", ix.nlist().into()),
-                            ("points", ix.num_points().into()),
-                            ("dim", ix.dim().into()),
-                            (
-                                "nprobe_default",
-                                engine
-                                    .config()
-                                    .index
-                                    .map(|p| p.nprobe)
-                                    .unwrap_or(0)
-                                    .into(),
-                            ),
-                            (
-                                "max_list",
-                                sizes.iter().copied().max().unwrap_or(0).into(),
-                            ),
-                            (
-                                "min_list",
-                                sizes.iter().copied().min().unwrap_or(0).into(),
-                            ),
-                        ]),
-                    );
-                }
-            }
-            Ok(j)
-        }
-        "add_docs" => {
-            let docs_json = req
-                .get("docs")
-                .and_then(Json::as_arr)
-                .ok_or_else(|| EmdError::protocol("missing 'docs' (array of [[idx, w], ...])"))?;
-            emd_ensure!(!docs_json.is_empty(), protocol, "empty 'docs'");
-            let docs = docs_json
-                .iter()
-                .map(parse_histogram)
-                .collect::<EmdResult<Vec<Histogram>>>()?;
-            let labels = match req.get("labels").and_then(Json::as_arr) {
-                Some(arr) => {
-                    let mut out = Vec::with_capacity(arr.len());
-                    for a in arr {
-                        out.push(
-                            a.as_usize().ok_or_else(|| EmdError::protocol("bad label"))? as u16,
-                        );
-                    }
-                    out
-                }
-                None => Vec::new(),
-            };
-            let outcome = engine.add_docs(&docs, &labels)?;
-            Ok(Json::obj(vec![
-                ("ok", true.into()),
-                ("added", outcome.ids.len().into()),
-                (
-                    "ids",
-                    Json::Arr(outcome.ids.iter().map(|&g| Json::Num(g as f64)).collect()),
-                ),
-                ("opened_shards", outcome.opened.into()),
-                ("n", engine.num_docs().into()),
-            ]))
-        }
-        "search" | "search_id" => {
-            // the request object is the wire form of a SearchRequest; only
-            // the 'id' shorthand needs the server (it can see the corpus)
-            let mut request = SearchRequest::from_json(&req)?;
-            if let Some(id) = req.get("id").and_then(Json::as_usize) {
-                emd_ensure!(id < engine.num_docs(), protocol, "id {id} out of range");
-                request.set_queries(vec![engine.doc_histogram(id)?]);
-            }
-            emd_ensure!(!request.queries().is_empty(), protocol, "missing 'query' (or 'id')");
-            // the batcher model is one query per request: pipelined
-            // requests with equal group keys share one grouped dispatch
-            emd_ensure!(
-                request.queries().len() == 1,
-                protocol,
-                "one query per request: send multiple pipelined requests and the \
-                 batcher groups them into one dispatch"
-            );
-            emd_ensure!(!request.queries()[0].is_empty(), protocol, "empty query");
-            // validate the plan up front so a bad combination (inadmissible
-            // rerank, cascade on the artifact backend) errors on this
-            // connection instead of inside the dispatcher
-            engine.plan(&request)?;
-            // the planner-resolved grouping key: batchmates resolving to
-            // the same plan share one grouped dispatch
-            let key = request.group_key(engine);
-
-            // send through the dynamic batcher and wait for the reply
-            let (tx, rx) = channel();
-            batch_tx
-                .send(Pending {
-                    query: Job { req: request, key },
-                    respond: tx,
-                    enqueued: Instant::now(),
-                })
-                .map_err(|_| EmdError::msg("internal error: dispatcher gone"))?;
-            match rx.recv().map_err(|_| EmdError::msg("internal error: dispatcher dropped reply"))? {
-                Ok(json) => Ok(json),
-                Err(e) => Err(EmdError::msg(e)),
-            }
-        }
-        other => Err(EmdError::protocol(format!("unknown op '{other}'"))),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Config, DatasetSpec};
+    use crate::config::{Config, DatasetSpec, ServeParams};
 
     fn test_engine() -> SearchEngine {
         SearchEngine::from_config(Config {
@@ -424,7 +442,11 @@ mod tests {
     }
 
     fn roundtrip(lines: &[String]) -> Vec<Json> {
-        let server = Server::bind(test_engine(), "127.0.0.1:0").unwrap();
+        roundtrip_on(test_engine(), lines)
+    }
+
+    fn roundtrip_on(engine: SearchEngine, lines: &[String]) -> Vec<Json> {
+        let server = Server::bind(engine, "127.0.0.1:0").unwrap();
         let addr = server.local_addr().unwrap();
         let lines = lines.to_vec();
         let client = std::thread::spawn(move || {
@@ -452,6 +474,12 @@ mod tests {
         assert_eq!(out[0].get("pong"), Some(&Json::Bool(true)));
         assert_eq!(out[1].get("ok"), Some(&Json::Bool(true)));
         assert_eq!(out[1].get("n").and_then(Json::as_usize), Some(30));
+    }
+
+    #[test]
+    fn ping_line_matches_tree_serializer() {
+        let tree = Json::obj(vec![("ok", true.into()), ("pong", true.into())]);
+        assert_eq!(PING_LINE, tree.to_string_compact().as_bytes());
     }
 
     #[test]
@@ -665,5 +693,111 @@ mod tests {
         ]);
         assert_eq!(out[0].get("ok"), Some(&Json::Bool(true)));
         assert_eq!(out[0].get("hits").and_then(Json::as_arr).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn oversized_request_line_keeps_connection_alive() {
+        let engine = SearchEngine::from_config(Config {
+            dataset: DatasetSpec::SynthText { n: 30, vocab: 150, dim: 8, seed: 9 },
+            threads: 2,
+            linger_ms: 1,
+            serve: ServeParams { max_line_bytes: 256, ..Default::default() },
+            ..Default::default()
+        })
+        .unwrap();
+        let big = format!("{{\"op\": \"ping\", \"pad\": \"{}\"}}", "x".repeat(4096));
+        let out = roundtrip_on(
+            engine,
+            &["{\"op\": \"ping\"}".into(), big, "{\"op\": \"ping\"}".into()],
+        );
+        assert_eq!(out.len(), 3, "one response per request, in order");
+        assert_eq!(out[0].get("pong"), Some(&Json::Bool(true)));
+        assert_eq!(out[1].get("ok"), Some(&Json::Bool(false)));
+        let err = out[1].get("error").and_then(Json::as_str).unwrap();
+        assert!(err.contains("exceeds 256 bytes"), "{err}");
+        assert_eq!(
+            out[2].get("pong"),
+            Some(&Json::Bool(true)),
+            "the pipelined successor survives the oversized line"
+        );
+    }
+
+    #[test]
+    fn invalid_utf8_keeps_connection_alive() {
+        let server = Server::bind(test_engine(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut w = stream;
+            w.write_all(b"{\"op\": \"ping\" \xff\xfe}\n").unwrap();
+            w.write_all(b"{\"op\": \"ping\"}\n").unwrap();
+            w.flush().unwrap();
+            let mut out = Vec::new();
+            for _ in 0..2 {
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                out.push(Json::parse(resp.trim()).unwrap());
+            }
+            out
+        });
+        server.serve_n(1).unwrap();
+        let out = client.join().unwrap();
+        assert_eq!(out[0].get("ok"), Some(&Json::Bool(false)));
+        assert!(out[0]
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("invalid utf-8"));
+        assert_eq!(out[1].get("pong"), Some(&Json::Bool(true)), "connection survives");
+    }
+
+    #[test]
+    fn per_request_deadline_expires_cleanly() {
+        // a 50ms linger holds the job in the batcher well past a 1ms
+        // deadline, so the dispatcher must shed it at dequeue
+        let engine = SearchEngine::from_config(Config {
+            dataset: DatasetSpec::SynthText { n: 30, vocab: 150, dim: 8, seed: 9 },
+            threads: 2,
+            linger_ms: 50,
+            max_batch: 64,
+            ..Default::default()
+        })
+        .unwrap();
+        let out = roundtrip_on(
+            engine,
+            &["{\"op\": \"search_id\", \"id\": 1, \"l\": 3, \"deadline_ms\": 1}".into()],
+        );
+        assert_eq!(out[0].get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(
+            out[0].get("error").and_then(Json::as_str),
+            Some("deadline exceeded"),
+            "{:?}",
+            out[0]
+        );
+    }
+
+    #[test]
+    fn read_request_line_caps_and_recovers() {
+        use std::io::Cursor;
+        let mut input = Vec::new();
+        input.extend_from_slice(b"short\n");
+        input.extend_from_slice(&vec![b'y'; 10_000]);
+        input.push(b'\n');
+        input.extend_from_slice(b"after\n");
+        input.extend_from_slice(b"tail-without-newline");
+        let mut reader = Cursor::new(input);
+        let mut buf = Vec::new();
+        assert!(matches!(read_request_line(&mut reader, &mut buf, 64).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"short");
+        assert!(matches!(
+            read_request_line(&mut reader, &mut buf, 64).unwrap(),
+            LineRead::Oversized
+        ));
+        assert!(matches!(read_request_line(&mut reader, &mut buf, 64).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"after");
+        assert!(matches!(read_request_line(&mut reader, &mut buf, 64).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"tail-without-newline");
+        assert!(matches!(read_request_line(&mut reader, &mut buf, 64).unwrap(), LineRead::Eof));
     }
 }

@@ -32,6 +32,9 @@
 //! * [`coordinator`] — the serving layer: the query planner
 //!   (`SearchRequest` → `QueryPlan` → `SearchResponse`), batching,
 //!   sharding, cascades, index-pruned top-ℓ search.
+//! * [`serve`] — the async serving runtime: poll(2) event-loop reactors,
+//!   admission control with deadlines, and a zero-copy wire path; the
+//!   legacy thread-per-connection `Server` stays as a compatibility shim.
 //! * [`builder`] — `EngineBuilder`, the one place configuration becomes
 //!   running engines.
 //! * [`data`] — synthetic MNIST-like / 20News-like dataset generators.
@@ -48,6 +51,7 @@ pub mod exact;
 pub mod index;
 pub mod lc;
 pub mod runtime;
+pub mod serve;
 pub mod shard;
 pub mod util;
 
@@ -55,7 +59,7 @@ pub mod util;
 /// engine, and run searches.
 pub mod prelude {
     pub use crate::builder::EngineBuilder;
-    pub use crate::config::{Backend, Config, DatasetSpec, IndexParams, ShardParams};
+    pub use crate::config::{Backend, Config, DatasetSpec, IndexParams, ServeParams, ShardParams};
     pub use crate::coordinator::{
         cascade_search, cascade_search_pruned, CascadeResult, CascadeSpec, QueryPlan, QueryStats,
         SearchEngine, SearchRequest, SearchResponse, SearchResult, Server, Stage,
@@ -65,6 +69,7 @@ pub mod prelude {
         MethodRegistry, Metric, METHOD_SYNTAX,
     };
     pub use crate::index::{pruned_search, pruned_search_batch, IvfIndex, PrunedSearch};
+    pub use crate::serve::ReactorServer;
     pub use crate::lc::{BatchPlanner, EngineParams, LcBatch, LcEngine, PlanScratch};
     pub use crate::shard::{AppendOutcome, ShardStat, ShardedCorpus, ShardedSearch};
 }

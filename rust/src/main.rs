@@ -19,7 +19,7 @@ use emdpar::data::{self, MnistConfig, TextConfig};
 use emdpar::eval::{render_markdown, sweep_all_pairs, sweep_serving, sweep_subset};
 use emdpar::prelude::{
     CascadeSpec, Config, EmdError, EmdResult, EngineBuilder, EngineParams, LcEngine, Method,
-    Metric, SearchRequest, Server, METHOD_SYNTAX,
+    Metric, ReactorServer, SearchRequest, Server, METHOD_SYNTAX,
 };
 use emdpar::runtime::{ArtifactEngine, Executor};
 use emdpar::util::cli::CommandSpec;
@@ -656,7 +656,17 @@ fn cmd_eval(args: &[String]) -> EmdResult<()> {
 
 fn cmd_serve(args: &[String]) -> EmdResult<()> {
     let spec = common_opts(CommandSpec::new("serve", "run the TCP search server"))
-        .opt("listen", "", "bind address (default from config)");
+        .opt("listen", "", "bind address (default from config)")
+        .opt(
+            "runtime",
+            "reactor",
+            "serving runtime: 'reactor' (event loop) or 'threads' (legacy)",
+        )
+        .opt("reactors", "", "reactor threads (default from config)")
+        .opt("max-inflight", "", "admission budget: searches in flight before shedding")
+        .opt("deadline-ms", "", "default per-request deadline, ms (0 = none)")
+        .opt("idle-timeout-ms", "", "close idle connections after this many ms (0 = never)")
+        .opt("max-line-bytes", "", "hard request-line length cap in bytes");
     if args.iter().any(|a| a == "--help") {
         println!("{}", spec.usage("emdpar"));
         return Ok(());
@@ -668,15 +678,37 @@ fn cmd_serve(args: &[String]) -> EmdResult<()> {
             cfg.listen = listen.to_string();
         }
     }
+    // empty string = "keep the config/default value" (flags override config)
+    if !p.str("reactors").is_empty() {
+        cfg.serve.reactors = p.usize("reactors")?;
+    }
+    if !p.str("max-inflight").is_empty() {
+        cfg.serve.max_inflight = p.usize("max-inflight")?;
+    }
+    if !p.str("deadline-ms").is_empty() {
+        cfg.serve.deadline_ms = p.usize("deadline-ms")? as u64;
+    }
+    if !p.str("idle-timeout-ms").is_empty() {
+        cfg.serve.idle_timeout_ms = p.usize("idle-timeout-ms")? as u64;
+    }
+    if !p.str("max-line-bytes").is_empty() {
+        cfg.serve.max_line_bytes = p.usize("max-line-bytes")?;
+    }
+    let runtime = p.str("runtime").to_string();
     let listen = cfg.listen.clone();
     let engine = EngineBuilder::from_config(cfg).build_search()?;
     println!(
-        "dataset '{}' ({} docs) ready; listening on {listen}",
+        "dataset '{}' ({} docs) ready; listening on {listen} ({runtime} runtime)",
         engine.dataset().name,
         engine.dataset().len()
     );
-    let server = Server::bind(engine, &listen)?;
-    server.serve()
+    match runtime.as_str() {
+        "reactor" => ReactorServer::bind(engine, &listen)?.serve(),
+        "threads" => Server::bind(engine, &listen)?.serve(),
+        other => Err(EmdError::config(format!(
+            "unknown --runtime '{other}' (expected 'reactor' or 'threads')"
+        ))),
+    }
 }
 
 fn cmd_artifacts_check(args: &[String]) -> EmdResult<()> {

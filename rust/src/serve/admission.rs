@@ -1,0 +1,103 @@
+//! Admission control: a bounded in-flight budget for the serving runtime.
+//!
+//! Every search admitted into the compute bridge holds a [`Permit`]; when
+//! the budget is exhausted new searches are shed *immediately* with a
+//! structured `overloaded` error instead of queueing without bound.  The
+//! permit is RAII — it travels with the job through the batcher and the
+//! dispatcher and releases its slot wherever the job ends (delivered, shed
+//! at a deadline, or dropped with a dead connection), so the budget can
+//! never leak.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Shared in-flight budget.  Clones observe the same budget.
+#[derive(Clone)]
+pub struct Admission {
+    max: usize,
+    inflight: Arc<AtomicUsize>,
+}
+
+/// RAII token for one admitted request; releases its slot on drop.
+pub struct Permit {
+    inflight: Arc<AtomicUsize>,
+}
+
+impl Admission {
+    pub fn new(max_inflight: usize) -> Admission {
+        Admission { max: max_inflight.max(1), inflight: Arc::new(AtomicUsize::new(0)) }
+    }
+
+    /// Try to admit one request.  `None` means the caller must shed.
+    pub fn try_admit(&self) -> Option<Permit> {
+        let prev = self.inflight.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.max {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            None
+        } else {
+            Some(Permit { inflight: Arc::clone(&self.inflight) })
+        }
+    }
+
+    /// Requests currently holding permits.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_budget_then_sheds() {
+        let adm = Admission::new(2);
+        let a = adm.try_admit().expect("slot 1");
+        let b = adm.try_admit().expect("slot 2");
+        assert!(adm.try_admit().is_none(), "budget exhausted");
+        assert_eq!(adm.in_flight(), 2);
+        drop(a);
+        let c = adm.try_admit().expect("slot freed by drop");
+        assert!(adm.try_admit().is_none());
+        drop(b);
+        drop(c);
+        assert_eq!(adm.in_flight(), 0);
+    }
+
+    #[test]
+    fn zero_budget_clamps_to_one() {
+        let adm = Admission::new(0);
+        let p = adm.try_admit().expect("clamped to at least one slot");
+        assert!(adm.try_admit().is_none());
+        drop(p);
+        assert_eq!(adm.in_flight(), 0);
+    }
+
+    #[test]
+    fn contended_admission_never_exceeds_budget() {
+        let adm = Admission::new(8);
+        let peak = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..16 {
+                let adm = adm.clone();
+                let peak = Arc::clone(&peak);
+                s.spawn(move || {
+                    for _ in 0..500 {
+                        if let Some(p) = adm.try_admit() {
+                            peak.fetch_max(adm.in_flight(), Ordering::AcqRel);
+                            drop(p);
+                        }
+                    }
+                });
+            }
+        });
+        assert!(peak.load(Ordering::Acquire) <= 8, "budget must bound in-flight");
+        assert_eq!(adm.in_flight(), 0);
+    }
+}

@@ -1,0 +1,276 @@
+//! Compute bridge: the single dispatch loop both servers share.
+//!
+//! Jobs (one single-query [`SearchRequest`] each) flow through the dynamic
+//! batcher, get grouped by the planner's [`GroupKey`] so batchmates that
+//! resolve to the same plan share one grouped `execute`, and are delivered
+//! back either over a per-job channel (the legacy thread server) or as a
+//! reactor completion ([`WireDone`]) that wakes the owning event loop.
+//!
+//! Deadlines are enforced here at the two places work can be shed cheaply:
+//! at dequeue (before a job's group is formed) and at the group→per-query
+//! retry stage boundary.  Shed jobs answer `deadline exceeded` immediately
+//! instead of burning engine time.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::Backend;
+use crate::coordinator::batcher::{next_batch, BatchPolicy, Pending};
+use crate::coordinator::engine::SearchEngine;
+use crate::coordinator::plan::{GroupKey, SearchRequest};
+use crate::core::Histogram;
+
+use super::admission::Permit;
+use super::reactor::WireDone;
+use super::wire;
+
+/// A serialized response line (no trailing newline) or an error message.
+pub(crate) type JobResult = Result<Vec<u8>, String>;
+
+/// One search travelling through the batcher.
+pub(crate) struct Job {
+    pub req: SearchRequest,
+    pub key: GroupKey,
+    /// Absolute shed point, if the request (or the server default) set one.
+    pub deadline: Option<Instant>,
+    /// Reactor delivery: present for event-loop connections, `None` for the
+    /// legacy channel path.
+    pub wire: Option<WireDone>,
+    /// Admission slot; released wherever the job ends.
+    pub permit: Option<Permit>,
+}
+
+/// Delivery envelope for one job once its query has been surrendered to a
+/// grouped dispatch.
+struct Ticket {
+    respond: Sender<JobResult>,
+    wire: Option<WireDone>,
+    permit: Option<Permit>,
+    deadline: Option<Instant>,
+    enqueued: Instant,
+}
+
+struct Member {
+    q: Histogram,
+    key: GroupKey,
+    ticket: Ticket,
+}
+
+fn into_member(p: Pending<Job, JobResult>) -> Member {
+    let Pending { query, respond, enqueued } = p;
+    let Job { req, key, deadline, wire, permit } = query;
+    let mut qs = req.into_queries();
+    Member {
+        q: qs.pop().expect("one query per job"),
+        key,
+        ticket: Ticket { respond, wire, permit, deadline, enqueued },
+    }
+}
+
+fn expired(deadline: Option<Instant>, now: Instant) -> bool {
+    deadline.is_some_and(|d| now >= d)
+}
+
+/// Hand one finished job back to its owner and release its permit.
+fn deliver(engine: &SearchEngine, ticket: Ticket, result: JobResult) {
+    engine.metrics().e2e.record(ticket.enqueued.elapsed());
+    match ticket.wire {
+        Some(w) => {
+            let line = match result {
+                Ok(line) => line,
+                Err(e) => {
+                    // the legacy path counts errors at the connection; the
+                    // wire path has no per-connection handler, so count here
+                    engine.metrics().record_error();
+                    wire::error_line(&e)
+                }
+            };
+            w.complete(line);
+        }
+        None => {
+            let _ = ticket.respond.send(result);
+        }
+    }
+    drop(ticket.permit);
+}
+
+/// Spawn the batch-dispatch thread; the returned sender is the enqueue
+/// side.  The thread exits when every sender clone is dropped.
+pub(crate) fn spawn_dispatcher(engine: Arc<SearchEngine>) -> Sender<Pending<Job, JobResult>> {
+    let policy = BatchPolicy {
+        max_batch: engine.config().max_batch,
+        linger: std::time::Duration::from_millis(engine.config().linger_ms),
+    };
+    let (batch_tx, batch_rx) = channel::<Pending<Job, JobResult>>();
+    std::thread::spawn(move || {
+        while let Some(batch) = next_batch(&batch_rx, policy) {
+            // dequeue boundary: record queue wait, shed expired work before
+            // it reaches the engine
+            let now = Instant::now();
+            let mut live: Vec<Member> = Vec::with_capacity(batch.len());
+            for p in batch {
+                engine.metrics().queue_wait.record(now.saturating_duration_since(p.enqueued));
+                let m = into_member(p);
+                if expired(m.ticket.deadline, now) {
+                    engine.metrics().record_deadline_expired();
+                    deliver(&engine, m.ticket, Err(wire::DEADLINE_MSG.to_string()));
+                } else {
+                    live.push(m);
+                }
+            }
+            // group the drained batch by the planner's GroupKey so each
+            // group flows through one grouped plan execution; responses go
+            // back per-job, so grouping never reorders anything a client
+            // can observe.  Note: Metrics::batches counts plan executions
+            // (one per key per drained batch, plus per-query retries when a
+            // group fails wholesale), not drained batches
+            let mut groups: Vec<(GroupKey, Vec<Member>)> = Vec::new();
+            for m in live {
+                let key = m.key;
+                match groups.iter_mut().find(|(k, _)| *k == key) {
+                    Some((_, members)) => members.push(m),
+                    None => groups.push((key, vec![m])),
+                }
+            }
+            for (key, members) in groups {
+                let (queries, tickets): (Vec<Histogram>, Vec<Ticket>) =
+                    members.into_iter().map(|m| (m.q, m.ticket)).unzip();
+                let per_query = |q: &Histogram| -> JobResult {
+                    let single = key.request(vec![q.clone()]);
+                    let t0 = Instant::now();
+                    let out = engine.execute(&single);
+                    engine.metrics().execute.record(t0.elapsed());
+                    out.map(|mut resp| {
+                        let cert = resp.stats.certified.first().copied();
+                        let res = resp.results.pop().expect("one query in, one result out");
+                        wire::search_result_line(&res, cert)
+                    })
+                    .map_err(|e| e.to_string())
+                };
+                // per-query dispatch with a deadline recheck: sequential
+                // batchmates can burn past a later job's deadline, so this
+                // is a stage boundary too
+                let run_one = |q: &Histogram, deadline: Option<Instant>| -> JobResult {
+                    if expired(deadline, Instant::now()) {
+                        engine.metrics().record_deadline_expired();
+                        return Err(wire::DEADLINE_MSG.to_string());
+                    }
+                    per_query(q)
+                };
+                // the native grouped plan either succeeds for everyone or
+                // fails before any query is scored (then each job is
+                // evaluated individually once); the artifact backend plans
+                // per query anyway, so it dispatches per job from the start
+                // — one failing query neither fails its batchmates nor
+                // forces re-runs
+                let results: Vec<JobResult> = if engine.config().backend == Backend::Artifact {
+                    queries
+                        .iter()
+                        .zip(&tickets)
+                        .map(|(q, t)| run_one(q, t.deadline))
+                        .collect()
+                } else {
+                    let group_req = key.request(queries);
+                    let t0 = Instant::now();
+                    let out = engine.execute(&group_req);
+                    engine.metrics().execute.record(t0.elapsed());
+                    match out {
+                        Ok(resp) => {
+                            let certs = resp.stats.certified;
+                            resp.results
+                                .into_iter()
+                                .enumerate()
+                                .map(|(i, res)| {
+                                    Ok(wire::search_result_line(&res, certs.get(i).copied()))
+                                })
+                                .collect()
+                        }
+                        Err(_) => group_req
+                            .queries()
+                            .iter()
+                            .zip(&tickets)
+                            .map(|(q, t)| run_one(q, t.deadline))
+                            .collect(),
+                    }
+                };
+                for (out, ticket) in results.into_iter().zip(tickets) {
+                    deliver(&engine, ticket, out);
+                }
+            }
+        }
+    });
+    batch_tx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, DatasetSpec};
+    use crate::util::json::Json;
+    use std::sync::atomic::Ordering;
+
+    fn test_engine() -> Arc<SearchEngine> {
+        Arc::new(
+            SearchEngine::from_config(Config {
+                dataset: DatasetSpec::SynthText { n: 30, vocab: 150, dim: 8, seed: 9 },
+                threads: 2,
+                linger_ms: 1,
+                ..Default::default()
+            })
+            .unwrap(),
+        )
+    }
+
+    fn search_job(engine: &SearchEngine, id: usize, deadline: Option<Instant>) -> Job {
+        let mut req = SearchRequest::batch(vec![engine.doc_histogram(id).unwrap()]);
+        req.l = Some(3);
+        let key = req.group_key(engine);
+        Job { req, key, deadline, wire: None, permit: None }
+    }
+
+    #[test]
+    fn dispatches_search_and_serializes_hits() {
+        let engine = test_engine();
+        let tx = spawn_dispatcher(Arc::clone(&engine));
+        let (rtx, rrx) = channel();
+        tx.send(Pending {
+            query: search_job(&engine, 3, None),
+            respond: rtx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        let line = rrx.recv().unwrap().expect("search succeeds");
+        let j = Json::parse(std::str::from_utf8(&line).unwrap()).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        let hits = j.get("hits").and_then(Json::as_arr).unwrap();
+        assert_eq!(hits.len(), 3);
+        assert_eq!(hits[0].as_arr().unwrap()[1].as_usize(), Some(3), "finds itself");
+        assert!(engine.metrics().e2e.count() >= 1);
+        assert!(engine.metrics().queue_wait.count() >= 1);
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_at_dequeue() {
+        let engine = test_engine();
+        let tx = spawn_dispatcher(Arc::clone(&engine));
+        let (rtx, rrx) = channel();
+        tx.send(Pending {
+            query: search_job(&engine, 1, Some(Instant::now())),
+            respond: rtx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        let out = rrx.recv().unwrap();
+        assert_eq!(out, Err(wire::DEADLINE_MSG.to_string()));
+        assert_eq!(engine.metrics().deadline_expired.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn dispatcher_exits_when_senders_drop() {
+        let engine = test_engine();
+        let tx = spawn_dispatcher(engine);
+        drop(tx); // the loop's next_batch returns None and the thread ends;
+                  // nothing to assert beyond not hanging
+    }
+}

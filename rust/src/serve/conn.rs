@@ -1,0 +1,382 @@
+//! Per-connection state machine for the reactor runtime.
+//!
+//! Each connection owns a nonblocking socket plus:
+//! * a read buffer framed on newlines (with a hard line-length cap and a
+//!   discard mode so an oversized line costs bounded memory and exactly one
+//!   structured error),
+//! * a FIFO slot queue — every request reserves a slot in arrival order and
+//!   responses are flushed only from the front, so pipelined clients always
+//!   see answers in request order no matter how the batcher reorders
+//!   compute,
+//! * a write buffer with backpressure: when the backlog passes the high
+//!   water mark the connection stops reading until the peer drains it.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::batcher::Pending;
+use crate::coordinator::engine::SearchEngine;
+use crate::coordinator::server::{process_line, Handled};
+use crate::core::EmdError;
+
+use super::admission::Admission;
+use super::bridge::{Job, JobResult};
+use super::reactor::{Injector, WireDone};
+use super::wire;
+
+/// Stop reading from a connection whose unflushed responses exceed this.
+const HIGH_WATER: usize = 256 * 1024;
+/// Per-readiness-round read budget so one hot connection cannot starve the
+/// rest of the reactor.
+const READ_ROUND_BYTES: usize = 256 * 1024;
+
+/// Shared per-event context a [`Conn`] needs to make progress.
+pub(crate) struct ConnCtx<'a> {
+    pub engine: &'a SearchEngine,
+    pub batch_tx: &'a Sender<Pending<Job, JobResult>>,
+    pub admission: &'a Admission,
+    pub injector: &'a Arc<Injector>,
+    pub token: usize,
+    pub max_line: usize,
+    pub retry_after_ms: u64,
+    pub default_deadline_ms: u64,
+}
+
+/// One response slot; `line` is `None` while the search is in flight.
+struct Slot {
+    seq: u64,
+    line: Option<Vec<u8>>,
+}
+
+pub(crate) struct Conn {
+    pub stream: TcpStream,
+    /// Guards against completions addressed to a recycled token.
+    pub gen: u64,
+    rbuf: Vec<u8>,
+    /// Inside an oversized line: drop bytes until the next newline.
+    discarding: bool,
+    slots: VecDeque<Slot>,
+    next_seq: u64,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    pub read_closed: bool,
+    pub dead: bool,
+    pub last_activity: Instant,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, gen: u64) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        Ok(Conn {
+            stream,
+            gen,
+            rbuf: Vec::new(),
+            discarding: false,
+            slots: VecDeque::new(),
+            next_seq: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            read_closed: false,
+            dead: false,
+            last_activity: Instant::now(),
+        })
+    }
+
+    /// Responses queued or buffered but not yet on the wire.
+    pub fn has_pending(&self) -> bool {
+        !self.slots.is_empty() || self.wpos < self.wbuf.len()
+    }
+
+    pub fn wants_read(&self) -> bool {
+        !self.read_closed && !self.dead && (self.wbuf.len() - self.wpos) < HIGH_WATER
+    }
+
+    pub fn wants_write(&self) -> bool {
+        self.wpos < self.wbuf.len() || self.slots.front().is_some_and(|s| s.line.is_some())
+    }
+
+    /// Drain the socket (up to a fairness budget), frame lines, process
+    /// them, and opportunistically flush whatever became ready.
+    pub fn on_readable(&mut self, ctx: &ConnCtx) {
+        let mut buf = [0u8; 16 * 1024];
+        let mut round = 0usize;
+        while round < READ_ROUND_BYTES && self.wants_read() {
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    round += n;
+                    self.last_activity = Instant::now();
+                    self.ingest(&buf[..n], ctx);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        if self.read_closed {
+            self.finish_eof(ctx);
+        }
+        self.on_writable();
+    }
+
+    fn ingest(&mut self, data: &[u8], ctx: &ConnCtx) {
+        self.rbuf.extend_from_slice(data);
+        let mut start = 0usize;
+        while let Some(rel) = self.rbuf[start..].iter().position(|&b| b == b'\n') {
+            let end = start + rel;
+            if self.discarding {
+                // the tail of an already-reported oversized line
+                self.discarding = false;
+            } else if end - start > ctx.max_line {
+                self.push_oversize(ctx);
+            } else {
+                let line = self.rbuf[start..end].to_vec();
+                self.process_one(&line, ctx);
+            }
+            start = end + 1;
+        }
+        if start > 0 {
+            self.rbuf.drain(..start);
+        }
+        if self.discarding {
+            self.rbuf.clear();
+        } else if self.rbuf.len() > ctx.max_line {
+            // a partial line already over the cap: report once, then drop
+            // bytes until its newline shows up — memory stays bounded
+            self.push_oversize(ctx);
+            self.discarding = true;
+            self.rbuf.clear();
+        }
+    }
+
+    /// The peer half-closed: the trailing unterminated line is still a
+    /// request (matching the legacy `read_line` behaviour), then the
+    /// connection closes once every response is flushed.
+    fn finish_eof(&mut self, ctx: &ConnCtx) {
+        if !self.rbuf.is_empty() && !self.discarding {
+            let line = std::mem::take(&mut self.rbuf);
+            if line.len() > ctx.max_line {
+                self.push_oversize(ctx);
+            } else {
+                self.process_one(&line, ctx);
+            }
+        }
+        self.rbuf.clear();
+        if !self.has_pending() {
+            self.dead = true;
+        }
+    }
+
+    fn process_one(&mut self, line: &[u8], ctx: &ConnCtx) {
+        match process_line(line, ctx.engine, ctx.default_deadline_ms) {
+            Handled::Empty => {}
+            Handled::Line(bytes) => self.push_ready(bytes),
+            Handled::Search { req, key, deadline } => match ctx.admission.try_admit() {
+                None => {
+                    ctx.engine.metrics().record_shed();
+                    self.push_ready(wire::overload_line(ctx.retry_after_ms));
+                }
+                Some(permit) => {
+                    ctx.engine.metrics().record_admitted();
+                    let seq = self.next_seq;
+                    self.next_seq += 1;
+                    self.slots.push_back(Slot { seq, line: None });
+                    let done =
+                        WireDone::new(Arc::clone(ctx.injector), ctx.token, self.gen, seq);
+                    let job =
+                        Job { req, key, deadline, wire: Some(done), permit: Some(permit) };
+                    // the wire path delivers through `done`; the channel is
+                    // a placeholder to satisfy the shared Pending shape
+                    let (respond, _staging) = channel();
+                    let pending = Pending { query: job, respond, enqueued: Instant::now() };
+                    if ctx.batch_tx.send(pending).is_err() {
+                        ctx.engine.metrics().record_error();
+                        self.complete(seq, wire::error_line(wire::DISPATCHER_GONE_MSG));
+                    }
+                }
+            },
+        }
+    }
+
+    fn push_ready(&mut self, bytes: Vec<u8>) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.slots.push_back(Slot { seq, line: Some(bytes) });
+    }
+
+    fn push_oversize(&mut self, ctx: &ConnCtx) {
+        ctx.engine.metrics().record_error();
+        let msg = EmdError::protocol(format!(
+            "request line exceeds {} bytes",
+            ctx.max_line
+        ))
+        .to_string();
+        self.push_ready(wire::error_line(&msg));
+    }
+
+    /// Fill a completed slot.  Unknown sequences (stale generation already
+    /// filtered by the reactor) are ignored.
+    pub fn complete(&mut self, seq: u64, line: Vec<u8>) {
+        if let Some(slot) = self.slots.iter_mut().find(|s| s.seq == seq) {
+            slot.line = Some(line);
+        }
+    }
+
+    /// Move consecutive ready front slots into the write buffer — FIFO by
+    /// construction: a waiting slot blocks everything behind it.
+    fn pump(&mut self) {
+        while self.slots.front().is_some_and(|s| s.line.is_some()) {
+            let slot = self.slots.pop_front().expect("front checked");
+            self.wbuf.extend_from_slice(&slot.line.expect("ready checked"));
+            self.wbuf.push(b'\n');
+        }
+    }
+
+    /// Flush as much of the write buffer as the socket accepts.
+    pub fn on_writable(&mut self) {
+        if self.dead {
+            return;
+        }
+        self.pump();
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return;
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    self.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > 64 * 1024 {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+        if self.read_closed && !self.has_pending() {
+            self.dead = true; // everything flushed after EOF: clean close
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, DatasetSpec};
+    use crate::coordinator::engine::SearchEngine;
+    use crate::serve::sys::Poller;
+    use crate::util::json::Json;
+    use std::io::BufRead;
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    fn test_engine() -> SearchEngine {
+        SearchEngine::from_config(Config {
+            dataset: DatasetSpec::SynthText { n: 20, vocab: 100, dim: 8, seed: 3 },
+            threads: 2,
+            linger_ms: 1,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    /// Feed raw bytes through a real socket pair and collect the response
+    /// lines the state machine produces.
+    fn drive(payload: &[u8], max_line: usize) -> Vec<Json> {
+        let engine = test_engine();
+        let (batch_tx, _batch_rx) = channel();
+        let admission = Admission::new(4);
+        let poller = Poller::new().unwrap();
+        let injector = Arc::new(Injector::new(poller.waker()));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut conn = Conn::new(server, 0).unwrap();
+        let ctx = ConnCtx {
+            engine: &engine,
+            batch_tx: &batch_tx,
+            admission: &admission,
+            injector: &injector,
+            token: 0,
+            max_line,
+            retry_after_ms: 2,
+            default_deadline_ms: 0,
+        };
+        client.write_all(payload).unwrap();
+        client.shutdown(std::net::Shutdown::Write).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !conn.dead && Instant::now() < deadline {
+            conn.on_readable(&ctx);
+            conn.on_writable();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(conn.dead, "connection must close cleanly after EOF");
+        drop(conn);
+        let mut out = Vec::new();
+        let reader = std::io::BufReader::new(client);
+        for line in reader.lines() {
+            out.push(Json::parse(&line.unwrap()).unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn ping_is_answered_inline() {
+        let out = drive(b"{\"op\": \"ping\"}\n", 1 << 20);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("pong"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn oversized_line_reports_error_and_connection_survives() {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(b"{\"op\": \"ping\"}\n");
+        payload.extend_from_slice(&vec![b'x'; 4096]); // way over the cap
+        payload.push(b'\n');
+        payload.extend_from_slice(b"{\"op\": \"ping\"}\n");
+        let out = drive(&payload, 256);
+        assert_eq!(out.len(), 3, "one response per request, in order");
+        assert_eq!(out[0].get("pong"), Some(&Json::Bool(true)));
+        assert_eq!(out[1].get("ok"), Some(&Json::Bool(false)));
+        let err = out[1].get("error").and_then(Json::as_str).unwrap();
+        assert!(err.contains("exceeds 256 bytes"), "{err}");
+        assert_eq!(out[2].get("pong"), Some(&Json::Bool(true)), "pipelined successor survives");
+    }
+
+    #[test]
+    fn invalid_utf8_is_a_clean_error() {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(b"{\"op\": \"ping\" \xff}\n");
+        payload.extend_from_slice(b"{\"op\": \"ping\"}\n");
+        let out = drive(&payload, 1 << 20);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].get("ok"), Some(&Json::Bool(false)));
+        assert!(out[0]
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("invalid utf-8"));
+        assert_eq!(out[1].get("pong"), Some(&Json::Bool(true)));
+    }
+}

@@ -1,0 +1,151 @@
+//! The async serving runtime: a readiness-based event-loop server that
+//! replaces thread-per-connection serving for high connection counts.
+//!
+//! Layers (bottom up):
+//! * [`sys`] — `poll(2)` bindings + self-pipe wakeups (dependency-free),
+//! * [`wire`] — zero-copy request lexer + streaming response writers,
+//!   bit-identical to the tree codec,
+//! * [`admission`] — bounded in-flight budget with RAII permits,
+//! * [`bridge`] — the shared batcher/dispatch loop (deadline-aware),
+//! * [`conn`] — per-connection framing, FIFO pipelining, backpressure,
+//! * [`reactor`] — the event loop itself,
+//! * [`ReactorServer`] — the front door: accept + round-robin hand-off to
+//!   N reactor threads.
+//!
+//! The legacy [`crate::coordinator::Server`] stays as a compatibility shim
+//! on the same bridge, so both servers answer byte-identically; it is also
+//! the baseline the serve benchmark compares against.
+
+pub(crate) mod admission;
+pub(crate) mod bridge;
+pub(crate) mod conn;
+pub(crate) mod reactor;
+pub mod sys;
+pub(crate) mod wire;
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::engine::SearchEngine;
+use crate::core::EmdResult;
+
+use admission::Admission;
+use reactor::{Injector, Msg, ReactorConfig};
+use sys::Poller;
+
+pub use admission::Permit;
+
+struct ReactorHandle {
+    injector: Arc<Injector>,
+    thread: Option<JoinHandle<()>>,
+}
+
+/// The event-loop server: accepts connections and hands each to one of N
+/// reactor threads (round-robin).  Speaks exactly the same line protocol
+/// as the legacy [`crate::coordinator::Server`].
+pub struct ReactorServer {
+    engine: Arc<SearchEngine>,
+    listener: TcpListener,
+    handles: Vec<ReactorHandle>,
+    active: Arc<AtomicUsize>,
+    next: AtomicUsize,
+}
+
+impl ReactorServer {
+    /// Bind, spawn the shared dispatcher and the reactor threads.  `addr`
+    /// may use port 0 for an ephemeral port (tests).
+    pub fn bind(engine: SearchEngine, addr: &str) -> EmdResult<ReactorServer> {
+        let engine = Arc::new(engine);
+        let listener = TcpListener::bind(addr)?;
+        let batch_tx = bridge::spawn_dispatcher(Arc::clone(&engine));
+        let serve = engine.config().serve;
+        let cfg = ReactorConfig {
+            max_line: serve.max_line_bytes,
+            retry_after_ms: serve.retry_after_ms,
+            default_deadline_ms: serve.deadline_ms,
+            idle_timeout: if serve.idle_timeout_ms == 0 {
+                None
+            } else {
+                Some(Duration::from_millis(serve.idle_timeout_ms))
+            },
+        };
+        let admission = Admission::new(serve.max_inflight);
+        let active = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::with_capacity(serve.reactors.max(1));
+        for _ in 0..serve.reactors.max(1) {
+            let poller = Poller::new()?;
+            let injector = Arc::new(Injector::new(poller.waker()));
+            let thread = {
+                let engine = Arc::clone(&engine);
+                let batch_tx = batch_tx.clone();
+                let admission = admission.clone();
+                let injector = Arc::clone(&injector);
+                let active = Arc::clone(&active);
+                std::thread::spawn(move || {
+                    reactor::run(engine, batch_tx, admission, injector, poller, cfg, active)
+                })
+            };
+            handles.push(ReactorHandle { injector, thread: Some(thread) });
+        }
+        Ok(ReactorServer { engine, listener, handles, active, next: AtomicUsize::new(0) })
+    }
+
+    pub fn local_addr(&self) -> EmdResult<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    fn inject(&self, stream: TcpStream) {
+        self.active.fetch_add(1, Ordering::AcqRel);
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.handles.len();
+        self.handles[i].injector.push(Msg::Conn(stream));
+    }
+
+    /// Accept loop; blocks forever (run in a dedicated thread if needed).
+    pub fn serve(&self) -> EmdResult<()> {
+        crate::log_info!(
+            "serve",
+            "reactor server listening on {} ({} reactors, max_inflight {})",
+            self.local_addr()?,
+            self.handles.len(),
+            self.engine.config().serve.max_inflight
+        );
+        for stream in self.listener.incoming() {
+            self.inject(stream?);
+        }
+        Ok(())
+    }
+
+    /// Accept exactly `count` connections, then wait until every accepted
+    /// connection has fully drained and closed (test harness).
+    pub fn serve_n(&self, count: usize) -> EmdResult<()> {
+        for _ in 0..count {
+            let (stream, _) = self.listener.accept()?;
+            self.inject(stream);
+        }
+        while self.active.load(Ordering::Acquire) > 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Ok(())
+    }
+
+    /// Connections currently owned by the reactors.
+    pub fn active_connections(&self) -> usize {
+        self.active.load(Ordering::Acquire)
+    }
+}
+
+impl Drop for ReactorServer {
+    fn drop(&mut self) {
+        for h in &self.handles {
+            h.injector.push(Msg::Shutdown);
+        }
+        for h in &mut self.handles {
+            if let Some(t) = h.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! The reactor: one event-loop thread multiplexing many connections.
+//!
+//! Each reactor owns a [`Poller`], a slab of [`Conn`] state machines, and
+//! an [`Injector`] — a tiny mailbox other threads push into (new
+//! connections from the acceptor, completions from the compute bridge,
+//! shutdown) before waking the poller through its self-pipe.  Completions
+//! carry a `(token, generation, seq)` address; the generation guards
+//! against a completion landing on a connection slot that was reaped and
+//! recycled while the search was in flight.
+
+use std::collections::VecDeque;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::Pending;
+use crate::coordinator::engine::SearchEngine;
+
+use super::admission::Admission;
+use super::bridge::{Job, JobResult};
+use super::conn::{Conn, ConnCtx};
+use super::sys::{fd_of, Event, Fd, Interest, Poller, Waker};
+
+/// Cross-thread input to one reactor.
+pub(crate) enum Msg {
+    /// A freshly accepted connection to adopt.
+    Conn(TcpStream),
+    /// A finished search for connection `token` (generation-checked).
+    Done { token: usize, gen: u64, seq: u64, line: Vec<u8> },
+    /// Drop everything and exit the loop.
+    Shutdown,
+}
+
+/// Mailbox + waker for one reactor thread.
+pub(crate) struct Injector {
+    q: Mutex<VecDeque<Msg>>,
+    waker: Waker,
+}
+
+impl Injector {
+    pub fn new(waker: Waker) -> Injector {
+        Injector { q: Mutex::new(VecDeque::new()), waker }
+    }
+
+    pub fn push(&self, msg: Msg) {
+        self.q.lock().unwrap().push_back(msg);
+        self.waker.wake();
+    }
+
+    fn drain(&self) -> Vec<Msg> {
+        let mut q = self.q.lock().unwrap();
+        q.drain(..).collect()
+    }
+}
+
+/// Completion address for one in-flight search; consumed by the compute
+/// bridge to wake the owning reactor with the serialized response.
+pub(crate) struct WireDone {
+    injector: Arc<Injector>,
+    token: usize,
+    gen: u64,
+    seq: u64,
+}
+
+impl WireDone {
+    pub fn new(injector: Arc<Injector>, token: usize, gen: u64, seq: u64) -> WireDone {
+        WireDone { injector, token, gen, seq }
+    }
+
+    pub fn complete(self, line: Vec<u8>) {
+        self.injector.push(Msg::Done {
+            token: self.token,
+            gen: self.gen,
+            seq: self.seq,
+            line,
+        });
+    }
+}
+
+/// Per-reactor runtime knobs (resolved from `ServeParams`).
+#[derive(Clone, Copy)]
+pub(crate) struct ReactorConfig {
+    pub max_line: usize,
+    pub retry_after_ms: u64,
+    pub default_deadline_ms: u64,
+    pub idle_timeout: Option<Duration>,
+}
+
+/// The event loop.  Runs until a [`Msg::Shutdown`] arrives; `active` is
+/// decremented once per connection this reactor retires.
+pub(crate) fn run(
+    engine: Arc<SearchEngine>,
+    batch_tx: Sender<Pending<Job, JobResult>>,
+    admission: Admission,
+    injector: Arc<Injector>,
+    mut poller: Poller,
+    cfg: ReactorConfig,
+    active: Arc<AtomicUsize>,
+) {
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut next_gen: u64 = 0;
+    let mut events: Vec<Event> = Vec::new();
+    let mut regs: Vec<(Fd, usize, Interest)> = Vec::new();
+    loop {
+        for msg in injector.drain() {
+            match msg {
+                Msg::Shutdown => return,
+                Msg::Conn(stream) => match Conn::new(stream, next_gen) {
+                    Ok(conn) => {
+                        next_gen += 1;
+                        match conns.iter().position(|c| c.is_none()) {
+                            Some(token) => conns[token] = Some(conn),
+                            None => conns.push(Some(conn)),
+                        }
+                    }
+                    Err(_) => {
+                        // set_nonblocking failed: the connection never
+                        // joined the loop
+                        active.fetch_sub(1, Ordering::AcqRel);
+                    }
+                },
+                Msg::Done { token, gen, seq, line } => {
+                    if let Some(Some(conn)) = conns.get_mut(token) {
+                        if conn.gen == gen {
+                            conn.complete(seq, line);
+                            conn.on_writable();
+                        }
+                    }
+                }
+            }
+        }
+
+        regs.clear();
+        for (token, slot) in conns.iter().enumerate() {
+            if let Some(conn) = slot {
+                let interest =
+                    Interest { read: conn.wants_read(), write: conn.wants_write() };
+                if interest.read || interest.write {
+                    regs.push((fd_of(&conn.stream), token, interest));
+                }
+            }
+        }
+        // with an idle timeout configured the loop must tick even when no
+        // fd stirs, so it can sweep idle connections
+        let timeout = cfg.idle_timeout.map(|t| t.min(Duration::from_millis(200)));
+        if poller.wait(&regs, timeout, &mut events).is_err() {
+            // a broken poller cannot make progress; drop every connection
+            return;
+        }
+
+        for ev in &events {
+            let Some(Some(conn)) = conns.get_mut(ev.token) else { continue };
+            let ctx = ConnCtx {
+                engine: &engine,
+                batch_tx: &batch_tx,
+                admission: &admission,
+                injector: &injector,
+                token: ev.token,
+                max_line: cfg.max_line,
+                retry_after_ms: cfg.retry_after_ms,
+                default_deadline_ms: cfg.default_deadline_ms,
+            };
+            if ev.readable {
+                conn.on_readable(&ctx);
+            }
+            if ev.writable && !conn.dead {
+                conn.on_writable();
+            }
+        }
+
+        if let Some(limit) = cfg.idle_timeout {
+            let now = Instant::now();
+            for slot in conns.iter_mut().flatten() {
+                if !slot.has_pending()
+                    && !slot.read_closed
+                    && now.saturating_duration_since(slot.last_activity) > limit
+                {
+                    slot.dead = true;
+                }
+            }
+        }
+
+        for slot in conns.iter_mut() {
+            if slot.as_ref().is_some_and(|c| c.dead) {
+                *slot = None; // dropping the Conn closes the socket
+                active.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+    }
+}

@@ -1,0 +1,383 @@
+//! Readiness multiplexing substrate for the reactor runtime.
+//!
+//! The crate is dependency-free, so on unix the reactor talks to POSIX
+//! `poll(2)` through a direct `extern "C"` binding, with a self-pipe for
+//! cross-thread wakeups (the classic trick: the poller always watches the
+//! read end of a pipe; any thread wakes it by writing one byte).  On
+//! non-unix targets a condvar-timed fallback reports every registered fd as
+//! ready at a coarse cadence — the nonblocking connection state machines
+//! then simply hit `WouldBlock`, so the runtime stays correct (just less
+//! efficient) without any platform bindings.
+
+use std::net::TcpStream;
+
+/// What a registration wants to be told about.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Interest {
+    pub read: bool,
+    pub write: bool,
+}
+
+/// One readiness report.  `readable` is also set on error/hangup so the
+/// owner's next `read` surfaces the condition.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Raw descriptor/socket handle, per platform.
+#[cfg(unix)]
+pub type Fd = std::os::unix::io::RawFd;
+#[cfg(windows)]
+pub type Fd = std::os::windows::io::RawSocket;
+#[cfg(not(any(unix, windows)))]
+pub type Fd = i32;
+
+/// The pollable handle of a stream.
+pub fn fd_of(stream: &TcpStream) -> Fd {
+    #[cfg(unix)]
+    {
+        use std::os::unix::io::AsRawFd;
+        stream.as_raw_fd()
+    }
+    #[cfg(windows)]
+    {
+        use std::os::windows::io::AsRawSocket;
+        stream.as_raw_socket()
+    }
+    #[cfg(not(any(unix, windows)))]
+    {
+        let _ = stream;
+        -1
+    }
+}
+
+#[cfg(unix)]
+pub use unix_impl::{Poller, Waker};
+
+#[cfg(unix)]
+mod unix_impl {
+    use super::{Event, Fd, Interest};
+    use std::io;
+    use std::os::raw::{c_int, c_short, c_void};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[cfg(any(target_os = "macos", target_os = "ios"))]
+    type Nfds = std::os::raw::c_uint;
+    #[cfg(not(any(target_os = "macos", target_os = "ios")))]
+    type Nfds = std::os::raw::c_ulong;
+
+    const POLLIN: c_short = 0x001;
+    const POLLOUT: c_short = 0x004;
+    const POLLERR: c_short = 0x008;
+    const POLLHUP: c_short = 0x010;
+    const POLLNVAL: c_short = 0x020;
+
+    const F_GETFL: c_int = 3;
+    const F_SETFL: c_int = 4;
+    #[cfg(any(target_os = "macos", target_os = "ios"))]
+    const O_NONBLOCK: c_int = 0x0004;
+    #[cfg(not(any(target_os = "macos", target_os = "ios")))]
+    const O_NONBLOCK: c_int = 0o4000;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: Nfds, timeout: c_int) -> c_int;
+        fn pipe(fds: *mut c_int) -> c_int;
+        fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+        fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    /// Both ends of the self-pipe; closed together so a live [`Waker`] can
+    /// never write into a recycled descriptor.
+    struct PipePair {
+        rd: c_int,
+        wr: c_int,
+    }
+
+    impl Drop for PipePair {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.rd);
+                close(self.wr);
+            }
+        }
+    }
+
+    fn set_nonblocking(fd: c_int) -> io::Result<()> {
+        unsafe {
+            let flags = fcntl(fd, F_GETFL);
+            if flags < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            if fcntl(fd, F_SETFL, flags | O_NONBLOCK) < 0 {
+                return Err(io::Error::last_os_error());
+            }
+        }
+        Ok(())
+    }
+
+    /// `poll(2)`-backed readiness source with self-pipe wakeups.
+    pub struct Poller {
+        pipe: Arc<PipePair>,
+        scratch: Vec<PollFd>,
+    }
+
+    /// Cloneable cross-thread wakeup handle for one [`Poller`].
+    #[derive(Clone)]
+    pub struct Waker {
+        pipe: Arc<PipePair>,
+    }
+
+    impl Waker {
+        /// Wake the poller.  A full pipe means a wake is already pending, so
+        /// every error is ignorable.
+        pub fn wake(&self) {
+            let byte = [1u8];
+            unsafe {
+                let _ = write(self.pipe.wr, byte.as_ptr() as *const c_void, 1);
+            }
+        }
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let mut fds = [0 as c_int; 2];
+            if unsafe { pipe(fds.as_mut_ptr()) } < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            let pair = PipePair { rd: fds[0], wr: fds[1] };
+            set_nonblocking(pair.rd)?;
+            set_nonblocking(pair.wr)?;
+            Ok(Poller { pipe: Arc::new(pair), scratch: Vec::new() })
+        }
+
+        pub fn waker(&self) -> Waker {
+            Waker { pipe: Arc::clone(&self.pipe) }
+        }
+
+        /// Block until a registered fd is ready, the poller is woken, or
+        /// `timeout` elapses.  Readiness lands in `events`; returns whether
+        /// a wakeup was consumed.
+        pub fn wait(
+            &mut self,
+            regs: &[(Fd, usize, Interest)],
+            timeout: Option<Duration>,
+            events: &mut Vec<Event>,
+        ) -> io::Result<bool> {
+            events.clear();
+            self.scratch.clear();
+            self.scratch.push(PollFd { fd: self.pipe.rd, events: POLLIN, revents: 0 });
+            for &(fd, _, interest) in regs {
+                let mut ev: c_short = 0;
+                if interest.read {
+                    ev |= POLLIN;
+                }
+                if interest.write {
+                    ev |= POLLOUT;
+                }
+                self.scratch.push(PollFd { fd, events: ev, revents: 0 });
+            }
+            let timeout_ms: c_int = match timeout {
+                None => -1,
+                Some(d) => d.as_millis().min(c_int::MAX as u128) as c_int,
+            };
+            let n = unsafe {
+                poll(self.scratch.as_mut_ptr(), self.scratch.len() as Nfds, timeout_ms)
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(false);
+                }
+                return Err(err);
+            }
+            let woken = self.scratch[0].revents & (POLLIN | POLLERR | POLLHUP) != 0;
+            if woken {
+                // drain every pending wake byte
+                let mut buf = [0u8; 64];
+                loop {
+                    let r = unsafe {
+                        read(self.pipe.rd, buf.as_mut_ptr() as *mut c_void, buf.len())
+                    };
+                    if r <= 0 {
+                        break;
+                    }
+                }
+            }
+            for (slot, &(_, token, _)) in self.scratch[1..].iter().zip(regs) {
+                let re = slot.revents;
+                if re == 0 {
+                    continue;
+                }
+                events.push(Event {
+                    token,
+                    // errors/hangups surface as readability so the owner's
+                    // next read reports the condition
+                    readable: re & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0,
+                    writable: re & (POLLOUT | POLLERR) != 0,
+                });
+            }
+            Ok(woken)
+        }
+    }
+}
+
+#[cfg(not(unix))]
+pub use fallback_impl::{Poller, Waker};
+
+#[cfg(not(unix))]
+mod fallback_impl {
+    use super::{Event, Fd, Interest};
+    use std::io;
+    use std::sync::{Arc, Condvar, Mutex};
+    use std::time::Duration;
+
+    /// Coarse fallback: no readiness source, so every registered fd is
+    /// reported ready at a bounded cadence and the nonblocking state
+    /// machines absorb the spurious readiness as `WouldBlock`.
+    pub struct Poller {
+        state: Arc<(Mutex<bool>, Condvar)>,
+    }
+
+    #[derive(Clone)]
+    pub struct Waker {
+        state: Arc<(Mutex<bool>, Condvar)>,
+    }
+
+    impl Waker {
+        pub fn wake(&self) {
+            let (lock, cv) = &*self.state;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { state: Arc::new((Mutex::new(false), Condvar::new())) })
+        }
+
+        pub fn waker(&self) -> Waker {
+            Waker { state: Arc::clone(&self.state) }
+        }
+
+        pub fn wait(
+            &mut self,
+            regs: &[(Fd, usize, Interest)],
+            timeout: Option<Duration>,
+            events: &mut Vec<Event>,
+        ) -> io::Result<bool> {
+            events.clear();
+            let cadence = Duration::from_millis(5);
+            let wait = timeout.map_or(cadence, |t| t.min(cadence));
+            let (lock, cv) = &*self.state;
+            let mut woken = lock.lock().unwrap();
+            if !*woken {
+                let (guard, _) = cv.wait_timeout(woken, wait).unwrap();
+                woken = guard;
+            }
+            let was_woken = *woken;
+            *woken = false;
+            drop(woken);
+            for &(_, token, interest) in regs {
+                if interest.read || interest.write {
+                    events.push(Event {
+                        token,
+                        readable: interest.read,
+                        writable: interest.write,
+                    });
+                }
+            }
+            Ok(was_woken)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::TcpListener;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn wake_interrupts_wait() {
+        let mut poller = Poller::new().unwrap();
+        let waker = poller.waker();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            waker.wake();
+        });
+        let mut events = Vec::new();
+        let t0 = Instant::now();
+        let _ = poller.wait(&[], Some(Duration::from_secs(10)), &mut events).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5), "wake must cut the 10s timeout short");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn timeout_expires_without_events() {
+        let mut poller = Poller::new().unwrap();
+        let mut events = Vec::new();
+        let t0 = Instant::now();
+        poller.wait(&[], Some(Duration::from_millis(20)), &mut events).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn socket_readability_reported() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        client.write_all(b"x").unwrap();
+        client.flush().unwrap();
+
+        let mut poller = Poller::new().unwrap();
+        let mut events = Vec::new();
+        let regs =
+            [(fd_of(&server), 7usize, Interest { read: true, write: false })];
+        // a retry loop absorbs scheduling delay between the client write
+        // and readability
+        let mut readable = false;
+        for _ in 0..100 {
+            poller.wait(&regs, Some(Duration::from_millis(50)), &mut events).unwrap();
+            if events.iter().any(|e| e.token == 7 && e.readable) {
+                readable = true;
+                break;
+            }
+        }
+        assert!(readable, "server socket never reported readable");
+        let mut buf = [0u8; 8];
+        let mut s = &server;
+        // the fallback poller reports readiness optimistically, so absorb
+        // WouldBlock with a bounded retry
+        for _ in 0..1000 {
+            match s.read(&mut buf) {
+                Ok(n) => {
+                    assert_eq!(n, 1);
+                    return;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => panic!("read failed: {e}"),
+            }
+        }
+        panic!("byte never arrived");
+    }
+}

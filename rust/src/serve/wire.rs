@@ -1,0 +1,627 @@
+//! Zero-copy wire layer for the line protocol.
+//!
+//! Two halves, both bit-identical to the [`Json`] tree codec:
+//!
+//! * [`decode_line`] — an in-place slice lexer for the hot request fields
+//!   (`op`, `method`, `l`, `query`, `nprobe`, `cascade`, `id`, `threads`,
+//!   `deadline_ms`).  It builds a [`SearchRequest`] straight from the byte
+//!   slice without materializing a `Json` tree.  The lexer is deliberately
+//!   conservative: anything it is not *certain* about — escape sequences,
+//!   `add_docs` payloads, malformed syntax, unknown ops — returns
+//!   [`Decoded::Fallback`] and the caller re-parses through the tree codec,
+//!   so every error message and edge-case behaviour stays byte-for-byte
+//!   what the tree path produces.
+//! * [`search_result_line`] / [`error_line`] / [`overload_line`] —
+//!   streaming response writers that serialize straight into an output
+//!   buffer.  They replicate the `BTreeMap` key order and the
+//!   [`crate::util::json::write_number`] format of
+//!   `Json::to_string_compact`, so a byte-compare against the tree
+//!   serializer always passes (see the tests below).
+
+use crate::coordinator::engine::SearchResult;
+use crate::coordinator::plan::{CascadeSpec, SearchRequest};
+use crate::core::{Histogram, Method};
+use crate::util::json::{write_escaped, write_number};
+
+/// Shed/deadline error strings (shared so both servers answer identically).
+pub(crate) const OVERLOADED_MSG: &str = "overloaded";
+pub(crate) const DEADLINE_MSG: &str = "deadline exceeded";
+pub(crate) const DISPATCHER_GONE_MSG: &str = "internal error: dispatcher gone";
+pub(crate) const DISPATCHER_DROPPED_MSG: &str = "internal error: dispatcher dropped reply";
+
+/// Outcome of the fast-path lexer.
+#[derive(Debug)]
+pub(crate) enum Decoded {
+    Ping,
+    Stats,
+    /// A `search` / `search_id` request decoded without a tree.
+    Search { req: SearchRequest, id: Option<usize>, deadline_ms: Option<u64> },
+    /// Cold or uncertain path: re-parse through the tree codec.
+    Fallback,
+}
+
+/// Lex one (already UTF-8-validated, trimmed, non-empty) request line.
+pub(crate) fn decode_line(line: &str) -> Decoded {
+    decode_inner(line).unwrap_or(Decoded::Fallback)
+}
+
+// ---------------------------------------------------------------------------
+// response writers
+// ---------------------------------------------------------------------------
+
+/// Serialize one search success straight into bytes:
+/// `{"certified":…,"hits":[[d,id,label],…],"ok":true}` — identical to
+/// serializing the tree the legacy server used to build (object keys in
+/// BTreeMap order).
+pub(crate) fn search_result_line(res: &SearchResult, certified: Option<bool>) -> Vec<u8> {
+    let mut s = String::with_capacity(24 + res.hits.len() * 24);
+    s.push('{');
+    if let Some(c) = certified {
+        s.push_str("\"certified\":");
+        s.push_str(if c { "true" } else { "false" });
+        s.push(',');
+    }
+    s.push_str("\"hits\":[");
+    for (i, (&(d, id), &lab)) in res.hits.iter().zip(&res.labels).enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push('[');
+        write_number(&mut s, d as f64);
+        s.push(',');
+        write_number(&mut s, id as f64);
+        s.push(',');
+        write_number(&mut s, lab as f64);
+        s.push(']');
+    }
+    s.push_str("],\"ok\":true}");
+    s.into_bytes()
+}
+
+/// Serialize the protocol's error payload: `{"error":"…","ok":false}`.
+pub(crate) fn error_line(msg: &str) -> Vec<u8> {
+    let mut s = String::with_capacity(msg.len() + 24);
+    s.push_str("{\"error\":");
+    write_escaped(msg, &mut s);
+    s.push_str(",\"ok\":false}");
+    s.into_bytes()
+}
+
+/// Admission-shed payload:
+/// `{"error":"overloaded","ok":false,"retry_after_ms":N}`.
+pub(crate) fn overload_line(retry_after_ms: u64) -> Vec<u8> {
+    let mut s = String::with_capacity(64);
+    s.push_str("{\"error\":");
+    write_escaped(OVERLOADED_MSG, &mut s);
+    s.push_str(",\"ok\":false,\"retry_after_ms\":");
+    write_number(&mut s, retry_after_ms as f64);
+    s.push('}');
+    s.into_bytes()
+}
+
+// ---------------------------------------------------------------------------
+// slice lexer
+// ---------------------------------------------------------------------------
+
+/// `Json::as_usize` semantics on a raw f64.
+fn to_usize(x: f64) -> Option<usize> {
+    if x >= 0.0 && x.fract() == 0.0 {
+        Some(x as usize)
+    } else {
+        None
+    }
+}
+
+struct Lex<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Lex<'a> {
+    fn ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Option<()> {
+        if self.peek()? == c {
+            self.i += 1;
+            Some(())
+        } else {
+            None
+        }
+    }
+
+    /// A string literal with no escapes and no control chars; anything
+    /// fancier aborts the fast path.
+    fn string(&mut self) -> Option<&'a str> {
+        self.eat(b'"')?;
+        let start = self.i;
+        loop {
+            match self.peek()? {
+                b'"' => {
+                    let s = std::str::from_utf8(&self.b[start..self.i]).ok()?;
+                    self.i += 1;
+                    return Some(s);
+                }
+                b'\\' => return None,
+                c if c < 0x20 => return None,
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// A number with the tree parser's exact grammar and `f64` parse.
+    fn number(&mut self) -> Option<f64> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        std::str::from_utf8(&self.b[start..self.i]).ok()?.parse::<f64>().ok()
+    }
+
+    fn literal(&mut self, lit: &str) -> Option<()> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Some(())
+        } else {
+            None
+        }
+    }
+
+    /// Validate-and-skip any JSON value the lexer does not care about.
+    /// Conservative: escapes inside skipped strings abort the fast path
+    /// (the tree parser validates `\uXXXX` pairs; re-checking here is not
+    /// worth the code).
+    fn skip_value(&mut self) -> Option<()> {
+        match self.peek()? {
+            b'n' => self.literal("null"),
+            b't' => self.literal("true"),
+            b'f' => self.literal("false"),
+            b'"' => self.string().map(|_| ()),
+            b'-' | b'0'..=b'9' => self.number().map(|_| ()),
+            b'[' => {
+                self.i += 1;
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Some(());
+                }
+                loop {
+                    self.ws();
+                    self.skip_value()?;
+                    self.ws();
+                    match self.peek()? {
+                        b',' => self.i += 1,
+                        b']' => {
+                            self.i += 1;
+                            return Some(());
+                        }
+                        _ => return None,
+                    }
+                }
+            }
+            b'{' => {
+                self.i += 1;
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Some(());
+                }
+                loop {
+                    self.ws();
+                    self.string()?;
+                    self.ws();
+                    self.eat(b':')?;
+                    self.ws();
+                    self.skip_value()?;
+                    self.ws();
+                    match self.peek()? {
+                        b',' => self.i += 1,
+                        b'}' => {
+                            self.i += 1;
+                            return Some(());
+                        }
+                        _ => return None,
+                    }
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// `[[idx, w], ...]` straight into histogram pairs; `None` on any shape
+    /// the tree path would reject (its error message must win).
+    fn histogram(&mut self) -> Option<Vec<(u32, f32)>> {
+        self.eat(b'[')?;
+        self.ws();
+        let mut pairs = Vec::new();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Some(pairs);
+        }
+        loop {
+            self.ws();
+            self.eat(b'[')?;
+            self.ws();
+            let idx = to_usize(self.number()?)? as u32;
+            self.ws();
+            self.eat(b',')?;
+            self.ws();
+            let w = self.number()? as f32;
+            self.ws();
+            self.eat(b']')?;
+            pairs.push((idx, w));
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Some(pairs);
+                }
+                _ => return None,
+            }
+        }
+    }
+
+    /// The `"cascade"` value: `"method"` shorthand or a spec object.
+    /// `None` aborts to the tree path (which owns all error messages).
+    fn cascade(&mut self) -> Option<CascadeSpec> {
+        match self.peek()? {
+            b'"' => {
+                let m = self.string()?;
+                Method::parse(m).ok().map(CascadeSpec::new)
+            }
+            b'{' => {
+                self.i += 1;
+                self.ws();
+                let mut rerank: Option<&str> = None;
+                let mut overfetch: Option<usize> = None;
+                let mut certified: Option<bool> = None;
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                } else {
+                    loop {
+                        self.ws();
+                        let key = self.string()?;
+                        self.ws();
+                        self.eat(b':')?;
+                        self.ws();
+                        match key {
+                            "rerank" => {
+                                rerank = if self.peek() == Some(b'"') {
+                                    Some(self.string()?)
+                                } else {
+                                    self.skip_value()?;
+                                    None
+                                };
+                            }
+                            "overfetch" => overfetch = self.usize_value()?,
+                            "certified" => certified = self.bool_value()?,
+                            _ => self.skip_value()?,
+                        }
+                        self.ws();
+                        match self.peek()? {
+                            b',' => self.i += 1,
+                            b'}' => {
+                                self.i += 1;
+                                break;
+                            }
+                            _ => return None,
+                        }
+                    }
+                }
+                let mut spec = CascadeSpec::new(Method::parse(rerank?).ok()?);
+                if let Some(x) = overfetch {
+                    spec.overfetch = Some(x.max(1));
+                }
+                if let Some(b) = certified {
+                    spec.certified = b;
+                }
+                Some(spec)
+            }
+            _ => None,
+        }
+    }
+
+    /// A value read with `as_usize` semantics: numbers that are whole and
+    /// non-negative yield `Some(Some(n))`; any other valid value yields
+    /// `Some(None)` (the tree path ignores it); invalid syntax yields
+    /// `None`.
+    fn usize_value(&mut self) -> Option<Option<usize>> {
+        if matches!(self.peek()?, b'-' | b'0'..=b'9') {
+            Some(to_usize(self.number()?))
+        } else {
+            self.skip_value()?;
+            Some(None)
+        }
+    }
+
+    /// A value read with `as_bool` semantics (same contract as
+    /// [`Lex::usize_value`]).
+    fn bool_value(&mut self) -> Option<Option<bool>> {
+        match self.peek()? {
+            b't' => {
+                self.literal("true")?;
+                Some(Some(true))
+            }
+            b'f' => {
+                self.literal("false")?;
+                Some(Some(false))
+            }
+            _ => {
+                self.skip_value()?;
+                Some(None)
+            }
+        }
+    }
+}
+
+fn decode_inner(line: &str) -> Option<Decoded> {
+    let mut lx = Lex { b: line.as_bytes(), i: 0 };
+    lx.ws();
+    lx.eat(b'{')?;
+    lx.ws();
+
+    // last-occurrence-wins per key, matching the tree's BTreeMap insert
+    let mut op: Option<&str> = None;
+    let mut method: Option<&str> = None;
+    let mut l: Option<usize> = None;
+    let mut nprobe: Option<usize> = None;
+    let mut threads: Option<usize> = None;
+    let mut id: Option<usize> = None;
+    let mut deadline_ms: Option<usize> = None;
+    let mut query: Option<Vec<(u32, f32)>> = None;
+    let mut cascade: Option<CascadeSpec> = None;
+    let mut saw_queries = false;
+
+    if lx.peek() == Some(b'}') {
+        lx.i += 1;
+    } else {
+        loop {
+            lx.ws();
+            let key = lx.string()?;
+            lx.ws();
+            lx.eat(b':')?;
+            lx.ws();
+            match key {
+                "op" => {
+                    op = if lx.peek() == Some(b'"') {
+                        Some(lx.string()?)
+                    } else {
+                        lx.skip_value()?;
+                        None
+                    };
+                }
+                "method" => {
+                    method = if lx.peek() == Some(b'"') {
+                        Some(lx.string()?)
+                    } else {
+                        lx.skip_value()?;
+                        None
+                    };
+                }
+                "l" => l = lx.usize_value()?,
+                "nprobe" => nprobe = lx.usize_value()?,
+                "threads" => threads = lx.usize_value()?,
+                "id" => id = lx.usize_value()?,
+                "deadline_ms" => deadline_ms = lx.usize_value()?,
+                "query" => {
+                    if lx.peek() == Some(b'[') {
+                        query = Some(lx.histogram()?);
+                    } else {
+                        // a non-array query is a tree-path protocol error
+                        return None;
+                    }
+                }
+                "queries" => {
+                    saw_queries = true;
+                    lx.skip_value()?;
+                }
+                "cascade" => cascade = Some(lx.cascade()?),
+                _ => lx.skip_value()?,
+            }
+            lx.ws();
+            match lx.peek()? {
+                b',' => lx.i += 1,
+                b'}' => {
+                    lx.i += 1;
+                    break;
+                }
+                _ => return None,
+            }
+        }
+    }
+    lx.ws();
+    if lx.i != lx.b.len() {
+        return None; // trailing characters: tree path owns the error
+    }
+
+    match op.unwrap_or("search") {
+        "ping" => Some(Decoded::Ping),
+        "stats" => Some(Decoded::Stats),
+        "search" | "search_id" => {
+            // "query" wins over "queries" whatever the key order, exactly
+            // like `SearchRequest::from_json`; a "queries"-only request is
+            // a (rare) fallback
+            let queries = match (query, saw_queries) {
+                (Some(pairs), _) => vec![Histogram::from_pairs(pairs)],
+                (None, true) => return None,
+                (None, false) => Vec::new(),
+            };
+            let mut req = SearchRequest::batch(queries);
+            if let Some(m) = method {
+                req.method = Some(Method::parse(m).ok()?);
+            }
+            if let Some(x) = l {
+                req.l = Some(x.max(1));
+            }
+            if let Some(x) = nprobe {
+                req.nprobe = Some(x.max(1));
+            }
+            req.cascade = cascade;
+            if let Some(t) = threads {
+                req.threads = Some(t.max(1));
+            }
+            Some(Decoded::Search { req, id, deadline_ms: deadline_ms.map(|x| x as u64) })
+        }
+        _ => None, // unknown op: tree path owns the error
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    /// Reference decode through the tree codec (the legacy request path).
+    fn tree_decode(line: &str) -> Option<(SearchRequest, Option<usize>, Option<u64>)> {
+        let j = Json::parse(line).ok()?;
+        match j.get("op").and_then(Json::as_str).unwrap_or("search") {
+            "search" | "search_id" => {
+                let req = SearchRequest::from_json(&j).ok()?;
+                let id = j.get("id").and_then(Json::as_usize);
+                let dl = j.get("deadline_ms").and_then(Json::as_usize).map(|x| x as u64);
+                Some((req, id, dl))
+            }
+            _ => None,
+        }
+    }
+
+    /// Every line the lexer *accepts* must decode exactly as the tree does.
+    #[test]
+    fn lexer_matches_tree_on_accepted_lines() {
+        let lines = [
+            r#"{"op": "search", "l": 5, "query": [[0, 0.5], [3, 0.5]]}"#,
+            r#"{"op":"search_id","id":17,"l":3,"method":"rwmd","nprobe":4}"#,
+            r#"{"query": [[1, 1.0]]}"#,
+            r#"{"op": "search_id", "id": 3, "l": 4, "method": "act-1"}"#,
+            r#"{"op": "search_id", "id": 4, "l": 3, "cascade": "act-3"}"#,
+            r#"{"op":"search_id","id":4,"l":3,
+               "cascade":{"rerank":"emd","overfetch":16,"certified":true}}"#,
+            r#"{"op":"search","query":[],"l":2}"#,
+            r#"{"op":"search","query":[[2,0.25]],"threads":2,"deadline_ms":250}"#,
+            r#"{"l": 2, "l": 7, "query": [[0, 1.0]]}"#,
+            r#"{"l": true, "query": [[0, 1.0]], "unknown": {"nested": [1, "x", null]}}"#,
+            r#"{"query": [[0, 1.5e-2]], "nprobe": 0}"#,
+            r#"{"op":"search","query":[[0,1.0]],"cascade":{"rerank":"emd"}}"#,
+            r#"{}"#,
+        ];
+        for line in lines {
+            match decode_line(line.trim()) {
+                Decoded::Search { req, id, deadline_ms } => {
+                    let (treq, tid, tdl) =
+                        tree_decode(line.trim()).expect("tree must accept what the lexer does");
+                    assert_eq!(req, treq, "request mismatch on {line}");
+                    assert_eq!(id, tid, "id mismatch on {line}");
+                    assert_eq!(deadline_ms, tdl, "deadline mismatch on {line}");
+                }
+                other => panic!("expected fast-path search for {line}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn lexer_fast_paths_ping_and_stats() {
+        assert!(matches!(decode_line(r#"{"op": "ping"}"#), Decoded::Ping));
+        assert!(matches!(decode_line(r#"{"op":"stats"}"#), Decoded::Stats));
+        // non-string op falls through to the "search" default, like the tree
+        assert!(matches!(decode_line(r#"{"op": 3}"#), Decoded::Search { .. }));
+    }
+
+    #[test]
+    fn lexer_falls_back_when_uncertain() {
+        let fallback_lines = [
+            "{not json",                                     // malformed
+            r#"{"op": "nope"}"#,                             // unknown op (tree owns error)
+            r#"{"op": "add_docs", "docs": [[[1, 1.0]]]}"#,   // cold path
+            r#"{"op": "search", "queries": [[[0, 1.0]]]}"#,  // multi-query form
+            r#"{"method": "magic", "query": [[0,1]]}"#,      // unknown method name
+            r#"{"query": "bogus"}"#,                         // tree-path protocol error
+            r#"{"query": [[0, 1.0]]} trailing"#,             // trailing chars
+            r#"{"cascade": "nope", "query": [[0,1.0]]}"#,    // unknown cascade method
+            "{\"method\": \"b\\u006fw\", \"query\": [[0,1]]}", // escape sequences
+        ];
+        for line in fallback_lines {
+            match decode_line(line) {
+                Decoded::Fallback => {}
+                other => panic!("expected fallback for {line}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn result_writer_matches_tree_serializer() {
+        use std::collections::BTreeMap;
+        let res = SearchResult {
+            hits: vec![(0.0, 3), (0.125, 11), (2.5, 7), (1.0, 123456)],
+            labels: vec![1, 0, 9, 65535],
+        };
+        for certified in [None, Some(true), Some(false)] {
+            // the tree the legacy server used to build
+            let mut map: BTreeMap<String, Json> = BTreeMap::new();
+            map.insert("ok".into(), Json::Bool(true));
+            map.insert(
+                "hits".into(),
+                Json::Arr(
+                    res.hits
+                        .iter()
+                        .zip(&res.labels)
+                        .map(|(&(d, id), &lab)| {
+                            Json::Arr(vec![
+                                Json::Num(d as f64),
+                                Json::Num(id as f64),
+                                Json::Num(lab as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+            if let Some(c) = certified {
+                map.insert("certified".into(), Json::Bool(c));
+            }
+            let tree = Json::Obj(map).to_string_compact();
+            let streamed = String::from_utf8(search_result_line(&res, certified)).unwrap();
+            assert_eq!(streamed, tree);
+        }
+    }
+
+    #[test]
+    fn error_writers_match_tree_serializer() {
+        for msg in ["plain", "bad request: with \"quotes\" and \\", "uni é"] {
+            let tree = Json::obj(vec![("ok", false.into()), ("error", msg.into())])
+                .to_string_compact();
+            assert_eq!(String::from_utf8(error_line(msg)).unwrap(), tree);
+        }
+        let tree = Json::obj(vec![
+            ("ok", false.into()),
+            ("error", OVERLOADED_MSG.into()),
+            ("retry_after_ms", 7usize.into()),
+        ])
+        .to_string_compact();
+        assert_eq!(String::from_utf8(overload_line(7)).unwrap(), tree);
+    }
+}

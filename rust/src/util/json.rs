@@ -360,18 +360,24 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Serialize one number exactly as the [`Json`] serializer does: integral
+/// values below 1e15 print as integers, everything else as f64 `Display`.
+/// Public so streaming writers (the serve wire layer) can emit bytes that
+/// are bit-identical to a [`Json`] tree serialization.
+pub fn write_number(out: &mut String, x: f64) {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        out.push_str(&format!("{}", x as i64));
+    } else {
+        out.push_str(&format!("{x}"));
+    }
+}
+
 fn write_json(v: &Json, out: &mut String, indent: Option<usize>, depth: usize) {
     match v {
         Json::Null => out.push_str("null"),
         Json::Bool(true) => out.push_str("true"),
         Json::Bool(false) => out.push_str("false"),
-        Json::Num(x) => {
-            if x.fract() == 0.0 && x.abs() < 1e15 {
-                out.push_str(&format!("{}", *x as i64));
-            } else {
-                out.push_str(&format!("{x}"));
-            }
-        }
+        Json::Num(x) => write_number(out, *x),
         Json::Str(s) => write_escaped(s, out),
         Json::Arr(items) => {
             out.push('[');
@@ -418,7 +424,11 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
-fn write_escaped(s: &str, out: &mut String) {
+/// Write `s` as a JSON string literal (quotes + escapes), exactly as the
+/// [`Json`] serializer does.  Public for the same reason as
+/// [`write_number`]: streaming writers must match the tree codec bit for
+/// bit.
+pub fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -500,5 +510,21 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(3.0).to_string_compact(), "3");
         assert_eq!(Json::Num(3.5).to_string_compact(), "3.5");
+    }
+
+    #[test]
+    fn streaming_helpers_match_tree_codec() {
+        // the serve wire layer leans on these matching the tree serializer
+        // bit for bit
+        for x in [0.0, -0.0, 1.0, -3.0, 0.5, -2.25, 1e-7, 1e15, 9.007e15, f64::NAN] {
+            let mut s = String::new();
+            write_number(&mut s, x);
+            assert_eq!(s, Json::Num(x).to_string_compact(), "x={x}");
+        }
+        for text in ["plain", "with \"quotes\"", "tab\there", "uni é😀", "ctl\u{1}"] {
+            let mut s = String::new();
+            write_escaped(text, &mut s);
+            assert_eq!(s, Json::Str(text.to_string()).to_string_compact());
+        }
     }
 }

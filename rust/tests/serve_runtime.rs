@@ -1,0 +1,433 @@
+//! Serving-runtime integration suite: the event-loop [`ReactorServer`]
+//! against the legacy thread-per-connection [`Server`].
+//!
+//! * byte-identity: both servers answer the full request matrix
+//!   (search / search_id / cascade / add_docs / stats / malformed lines)
+//!   with byte-for-byte identical responses across plain, indexed and
+//!   sharded engines,
+//! * FIFO pipelining under concurrent mixed-op clients,
+//! * admission control (`overloaded` + `retry_after_ms`), per-request
+//!   deadlines, idle-connection timeouts, oversized/invalid-UTF-8 lines,
+//! * the CI soak gate: hammer the reactor with concurrent pipelined
+//!   clients, assert zero dropped/misordered responses and a clean
+//!   shutdown (`EMDPAR_SOAK_MS` scales the duration).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use emdpar::coordinator::SearchEngine;
+use emdpar::prelude::{
+    Config, DatasetSpec, IndexParams, ReactorServer, ServeParams, Server, ShardParams,
+};
+use emdpar::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// harness
+// ---------------------------------------------------------------------------
+
+fn plain_config() -> Config {
+    Config {
+        dataset: DatasetSpec::SynthText { n: 30, vocab: 150, dim: 8, seed: 9 },
+        threads: 2,
+        linger_ms: 1,
+        ..Default::default()
+    }
+}
+
+fn indexed_config() -> Config {
+    Config {
+        dataset: DatasetSpec::SynthText { n: 48, vocab: 200, dim: 8, seed: 12 },
+        threads: 2,
+        linger_ms: 1,
+        index: Some(IndexParams {
+            nlist: 6,
+            nprobe: 2,
+            train_iters: 6,
+            seed: 4,
+            min_points_per_list: 1,
+        }),
+        ..Default::default()
+    }
+}
+
+fn sharded_config() -> Config {
+    Config {
+        dataset: DatasetSpec::SynthText { n: 40, vocab: 180, dim: 8, seed: 15 },
+        threads: 2,
+        linger_ms: 1,
+        sharded: Some(ShardParams { shards: 2, max_docs_per_shard: 1 << 20 }),
+        index: Some(IndexParams {
+            nlist: 4,
+            nprobe: 4,
+            train_iters: 5,
+            seed: 2,
+            min_points_per_list: 1,
+        }),
+        ..Default::default()
+    }
+}
+
+fn engine(cfg: Config) -> SearchEngine {
+    SearchEngine::from_config(cfg).unwrap()
+}
+
+/// Pipeline every line down one connection (single write), then read one
+/// response per line.
+fn pipeline_client(addr: SocketAddr, lines: &[String]) -> Vec<String> {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut out = Vec::with_capacity(lines.len());
+    phased_pipeline(stream, &[lines.to_vec()], &mut out);
+    out
+}
+
+/// Pipeline each phase down an open connection, fully reading that phase's
+/// responses before writing the next.  The read barrier is an ordering
+/// guarantee: a response on the wire means its request finished executing,
+/// so later phases (e.g. `add_docs`, `stats`) cannot race in-flight
+/// searches from earlier ones.
+fn phased_pipeline(stream: TcpStream, phases: &[Vec<String>], out: &mut Vec<String>) {
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    for phase in phases {
+        let mut payload = String::new();
+        for line in phase {
+            payload.push_str(line);
+            payload.push('\n');
+        }
+        writer.write_all(payload.as_bytes()).unwrap();
+        writer.flush().unwrap();
+        for _ in 0..phase.len() {
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            out.push(resp.trim_end_matches('\n').to_string());
+        }
+    }
+}
+
+fn legacy_roundtrip(engine: SearchEngine, phases: &[Vec<String>]) -> Vec<String> {
+    let server = Server::bind(engine, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let phases = phases.to_vec();
+    let client = std::thread::spawn(move || {
+        let mut out = Vec::new();
+        phased_pipeline(TcpStream::connect(addr).unwrap(), &phases, &mut out);
+        out
+    });
+    server.serve_n(1).unwrap();
+    client.join().unwrap()
+}
+
+fn reactor_roundtrip(engine: SearchEngine, phases: &[Vec<String>]) -> Vec<String> {
+    let server = ReactorServer::bind(engine, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let phases = phases.to_vec();
+    let client = std::thread::spawn(move || {
+        let mut out = Vec::new();
+        phased_pipeline(TcpStream::connect(addr).unwrap(), &phases, &mut out);
+        out
+    });
+    server.serve_n(1).unwrap();
+    client.join().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// byte-identity across the request matrix
+// ---------------------------------------------------------------------------
+
+/// The full request matrix: valid searches (all the protocol forms),
+/// cascades, malformed/invalid lines, a live append, stats.  Three phases
+/// with read barriers between them, so the append and the stats snapshot
+/// are deterministically ordered after every in-flight search on both
+/// runtimes (within a phase requests race only for latency histograms,
+/// which the comparison excludes).
+fn request_matrix() -> Vec<Vec<String>> {
+    let phase1: Vec<String> = [
+        r#"{"op": "ping"}"#,
+        r#"{"op": "search_id", "id": 3, "l": 4, "method": "act-1"}"#,
+        r#"{"op": "search", "l": 3, "query": [[0, 0.5], [3, 0.5]], "method": "rwmd"}"#,
+        r#"{"op": "search_id", "id": 2, "l": 3, "method": "emd"}"#,
+        r#"{"op": "search_id", "id": 2, "l": 3, "method": "wcd", "nprobe": 2}"#,
+        r#"{"op": "search_id", "id": 4, "l": 3, "cascade": {"rerank": "emd", "overfetch": 16, "certified": true}}"#,
+        r#"{"op": "search_id", "id": 4, "l": 3, "cascade": "act-3"}"#,
+        r#"{not json"#,
+        r#"{"op": "nope"}"#,
+        r#"{"op": "search", "query": []}"#,
+        r#"{"op": "search_id", "id": 4, "l": 3, "cascade": "bow"}"#,
+        r#"{"op": "search_id", "id": 100000, "l": 3}"#,
+    ]
+    .into_iter()
+    .map(String::from)
+    .collect();
+    let phase2: Vec<String> = [
+        r#"{"op": "add_docs", "docs": [[[2, 0.6], [9, 0.4]], [[11, 1.0]]], "labels": [5, 6]}"#,
+        r#"{"op": "search_id", "id": 5, "l": 3, "method": "rwmd"}"#,
+    ]
+    .into_iter()
+    .map(String::from)
+    .collect();
+    let phase3 = vec![r#"{"op": "stats"}"#.to_string()];
+    vec![phase1, phase2, phase3]
+}
+
+/// Counters that must agree between the two servers (latency histograms and
+/// admission counters legitimately differ: the legacy server admits nothing).
+const DETERMINISTIC_STATS: &[&str] =
+    &["n", "errors", "queries", "index_queries", "cascade_queries", "deadline_expired"];
+
+fn assert_servers_identical(make: fn() -> Config) {
+    let phases = request_matrix();
+    let legacy = legacy_roundtrip(engine(make()), &phases);
+    let reactor = reactor_roundtrip(engine(make()), &phases);
+    let lines: Vec<String> = phases.into_iter().flatten().collect();
+    assert_eq!(legacy.len(), lines.len());
+    assert_eq!(legacy.len(), reactor.len());
+    for (i, (l, r)) in legacy.iter().zip(&reactor).enumerate() {
+        if lines[i].contains("\"stats\"") {
+            let (lj, rj) = (Json::parse(l).unwrap(), Json::parse(r).unwrap());
+            for key in DETERMINISTIC_STATS {
+                assert_eq!(lj.get(key), rj.get(key), "stats '{key}' diverged");
+            }
+        } else {
+            assert_eq!(l, r, "response {i} diverged for request {}", lines[i]);
+        }
+    }
+    // every response is a complete JSON object with an "ok" verdict
+    for resp in &reactor {
+        let j = Json::parse(resp).unwrap();
+        assert!(j.get("ok").is_some(), "{resp}");
+    }
+}
+
+#[test]
+fn reactor_matches_legacy_on_plain_engine() {
+    assert_servers_identical(plain_config);
+}
+
+#[test]
+fn reactor_matches_legacy_on_indexed_engine() {
+    assert_servers_identical(indexed_config);
+}
+
+#[test]
+fn reactor_matches_legacy_on_sharded_engine() {
+    assert_servers_identical(sharded_config);
+}
+
+// ---------------------------------------------------------------------------
+// FIFO pipelining under concurrent mixed-op clients
+// ---------------------------------------------------------------------------
+
+/// One client's mixed-op script plus a closure validating response `i`.
+fn mixed_script(client_id: usize, n_docs: usize) -> Vec<(String, fn(&Json, usize))> {
+    fn expect_pong(j: &Json, _id: usize) {
+        assert_eq!(j.get("pong"), Some(&Json::Bool(true)), "{j:?}");
+    }
+    fn expect_self_hit(j: &Json, id: usize) {
+        let hits = j.get("hits").and_then(Json::as_arr).unwrap();
+        assert_eq!(hits[0].as_arr().unwrap()[1].as_usize(), Some(id), "{j:?}");
+    }
+    fn expect_error(j: &Json, _id: usize) {
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{j:?}");
+    }
+    fn expect_ok(j: &Json, _id: usize) {
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{j:?}");
+    }
+    let a = client_id % n_docs;
+    let b = (client_id * 7 + 3) % n_docs;
+    vec![
+        (r#"{"op": "ping"}"#.to_string(), expect_pong as fn(&Json, usize)),
+        (format!(r#"{{"op": "search_id", "id": {a}, "l": 3, "method": "act-1"}}"#), expect_self_hit),
+        (r#"{"op": "nope"}"#.to_string(), expect_error),
+        (format!(r#"{{"op": "search_id", "id": {b}, "l": 3, "method": "rwmd"}}"#), expect_self_hit),
+        (r#"{"op": "stats"}"#.to_string(), expect_ok),
+        (format!(r#"{{"op": "search_id", "id": {a}, "l": 2, "method": "wcd"}}"#), expect_self_hit),
+    ]
+}
+
+/// Expected ids for the two search_id positions in `mixed_script`.
+fn script_ids(client_id: usize, n_docs: usize) -> [usize; 6] {
+    let a = client_id % n_docs;
+    let b = (client_id * 7 + 3) % n_docs;
+    [0, a, 0, b, 0, a]
+}
+
+#[test]
+fn pipelined_fifo_under_concurrent_mixed_clients() {
+    let n_docs = 30;
+    let mut cfg = plain_config();
+    cfg.linger_ms = 5; // encourage cross-client batching
+    cfg.serve = ServeParams { reactors: 2, ..Default::default() };
+    let server = ReactorServer::bind(engine(cfg), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let clients = 6;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let script = mixed_script(c, n_docs);
+                let lines: Vec<String> = script.iter().map(|(l, _)| l.clone()).collect();
+                let responses = pipeline_client(addr, &lines);
+                let ids = script_ids(c, n_docs);
+                for (i, ((_, check), resp)) in script.iter().zip(&responses).enumerate() {
+                    let j = Json::parse(resp).unwrap_or_else(|e| {
+                        panic!("client {c} response {i} not json ({e}): {resp}")
+                    });
+                    check(&j, ids[i]);
+                }
+            })
+        })
+        .collect();
+    server.serve_n(clients).unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// admission control, deadlines, idle timeout, robustness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn overload_sheds_with_structured_error() {
+    let mut cfg = plain_config();
+    // hold the first search in the batcher long enough that its admission
+    // slot is still occupied when the rest of the pipeline arrives
+    cfg.linger_ms = 200;
+    cfg.max_batch = 64;
+    cfg.serve = ServeParams { max_inflight: 1, retry_after_ms: 7, ..Default::default() };
+    let search = r#"{"op": "search_id", "id": 1, "l": 3, "method": "rwmd"}"#.to_string();
+    let lines = vec![search; 6];
+    let out = reactor_roundtrip(engine(cfg), &[lines]);
+    let first = Json::parse(&out[0]).unwrap();
+    assert_eq!(first.get("ok"), Some(&Json::Bool(true)), "admitted search completes: {first:?}");
+    for resp in &out[1..] {
+        let j = Json::parse(resp).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{j:?}");
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("overloaded"), "{j:?}");
+        assert_eq!(j.get("retry_after_ms").and_then(Json::as_usize), Some(7), "{j:?}");
+    }
+}
+
+#[test]
+fn reactor_honors_per_request_deadline() {
+    let mut cfg = plain_config();
+    cfg.linger_ms = 50; // the 1ms deadline below expires inside the linger
+    cfg.max_batch = 64;
+    let lines = vec![
+        r#"{"op": "search_id", "id": 1, "l": 3, "deadline_ms": 1}"#.to_string(),
+        r#"{"op": "ping"}"#.to_string(),
+    ];
+    let out = reactor_roundtrip(engine(cfg), &[lines]);
+    let j = Json::parse(&out[0]).unwrap();
+    assert_eq!(j.get("error").and_then(Json::as_str), Some("deadline exceeded"), "{j:?}");
+    let pong = Json::parse(&out[1]).unwrap();
+    assert_eq!(pong.get("pong"), Some(&Json::Bool(true)), "connection survives the shed");
+}
+
+#[test]
+fn idle_connections_are_reaped() {
+    let mut cfg = plain_config();
+    cfg.serve = ServeParams { idle_timeout_ms: 50, ..Default::default() };
+    let server = ReactorServer::bind(engine(cfg), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let client = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut buf = [0u8; 16];
+        let t0 = Instant::now();
+        let n = stream.read(&mut buf).unwrap(); // blocks until the server closes
+        assert_eq!(n, 0, "idle connection must be closed by the server");
+        assert!(t0.elapsed() < Duration::from_secs(5), "reaped via the idle sweep, not never");
+    });
+    server.serve_n(1).unwrap();
+    client.join().unwrap();
+    assert_eq!(server.active_connections(), 0);
+}
+
+#[test]
+fn reactor_survives_oversized_and_invalid_utf8_lines() {
+    let mut cfg = plain_config();
+    cfg.serve = ServeParams { max_line_bytes: 256, ..Default::default() };
+    let server = ReactorServer::bind(engine(cfg), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let client = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(b"{\"op\": \"ping\"}\n");
+        payload.extend_from_slice(&vec![b'x'; 4096]);
+        payload.push(b'\n');
+        payload.extend_from_slice(b"{\"op\": \"ping\" \xff\xfe}\n");
+        payload.extend_from_slice(b"{\"op\": \"ping\"}\n");
+        stream.write_all(&payload).unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut out = Vec::new();
+        for _ in 0..4 {
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            out.push(Json::parse(resp.trim()).unwrap());
+        }
+        out
+    });
+    server.serve_n(1).unwrap();
+    let out = client.join().unwrap();
+    assert_eq!(out[0].get("pong"), Some(&Json::Bool(true)));
+    assert!(out[1].get("error").and_then(Json::as_str).unwrap().contains("exceeds 256 bytes"));
+    assert!(out[2].get("error").and_then(Json::as_str).unwrap().contains("invalid utf-8"));
+    assert_eq!(out[3].get("pong"), Some(&Json::Bool(true)), "connection survives both");
+}
+
+// ---------------------------------------------------------------------------
+// soak gate
+// ---------------------------------------------------------------------------
+
+/// The CI soak: concurrent pipelined clients hammering the reactor with a
+/// fresh connection per round (exercising accept, pipelining and reaping).
+/// `EMDPAR_SOAK_MS` scales the number of rounds (default ≈300ms of work
+/// locally).  Every response must arrive, in FIFO order, with the shape its
+/// request demands; the server must drain and shut down cleanly afterwards.
+#[test]
+fn soak_concurrent_pipelined_clients_zero_drops() {
+    let soak_ms: u64 = std::env::var("EMDPAR_SOAK_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    // a round (6 pipelined mixed requests) costs ~15ms on a cold CI box
+    let rounds = ((soak_ms / 15).max(1)) as usize;
+    let n_docs = 30;
+    let mut cfg = plain_config();
+    cfg.linger_ms = 2;
+    cfg.serve = ServeParams { reactors: 2, ..Default::default() };
+    let server = ReactorServer::bind(engine(cfg), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let clients = 8;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut total = 0usize;
+                let script = mixed_script(c, n_docs);
+                let lines: Vec<String> = script.iter().map(|(l, _)| l.clone()).collect();
+                let ids = script_ids(c, n_docs);
+                for _ in 0..rounds {
+                    let responses = pipeline_client(addr, &lines);
+                    assert_eq!(responses.len(), lines.len(), "dropped responses");
+                    for (i, ((_, check), resp)) in script.iter().zip(&responses).enumerate() {
+                        let j = Json::parse(resp).unwrap_or_else(|e| {
+                            panic!("client {c} response {i} not json ({e}): {resp}")
+                        });
+                        check(&j, ids[i]);
+                    }
+                    total += responses.len();
+                }
+                total
+            })
+        })
+        .collect();
+    server.serve_n(clients * rounds).unwrap();
+    let mut total = 0usize;
+    for h in handles {
+        total += h.join().unwrap();
+    }
+    assert_eq!(total, clients * rounds * 6, "every pipelined response must arrive");
+    assert_eq!(server.active_connections(), 0, "all connections drained");
+    drop(server); // Drop joins every reactor thread: clean shutdown
+}
