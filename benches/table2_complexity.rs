@@ -60,7 +60,7 @@ fn main() {
                 &ds.embeddings,
                 &vn,
                 &query,
-                PlanParams { k: 1, metric: Metric::L2, keep_d: false, threads },
+                PlanParams { k: 1, metric: Metric::L2, keep_d: false, threads, kernel: None },
             );
             std::hint::black_box(rwmd_direction_a(&plan, &ds.matrix, threads));
         });

@@ -34,14 +34,14 @@ fn main() {
                 &ds.embeddings,
                 &vn,
                 &query,
-                PlanParams { k, metric: Metric::L2, keep_d: false, threads },
+                PlanParams { k, metric: Metric::L2, keep_d: false, threads, kernel: None },
             ));
         });
         let plan = plan_query(
             &ds.embeddings,
             &vn,
             &query,
-            PlanParams { k, metric: Metric::L2, keep_d: false, threads },
+            PlanParams { k, metric: Metric::L2, keep_d: false, threads, kernel: None },
         );
         let p2 = bench.run(&format!("phase2 k={k}"), || {
             std::hint::black_box(act_direction_a(&plan, &ds.matrix, threads));
@@ -72,7 +72,7 @@ fn main() {
             &subds.embeddings,
             &subds.embeddings.row_sq_norms(),
             &subds.histogram(0),
-            PlanParams { k: 2, metric: Metric::L2, keep_d: false, threads },
+            PlanParams { k: 2, metric: Metric::L2, keep_d: false, threads, kernel: None },
         );
         let p2 = bench.run(&format!("phase2 n={sub}"), || {
             std::hint::black_box(act_direction_a(&plan, &subds.matrix, threads));

@@ -31,9 +31,9 @@
 use std::sync::Arc;
 
 use crate::config::{Backend, Config, DatasetSpec, IndexParams, ServeParams, ShardParams};
-use crate::core::{Dataset, EmdResult, Method, MethodRegistry, Metric};
+use crate::core::{CompressedKind, Dataset, EmdResult, Method, MethodRegistry, Metric};
 use crate::coordinator::SearchEngine;
-use crate::lc::{EngineParams, LcEngine};
+use crate::lc::{EngineParams, KernelBackend, LcEngine};
 
 /// Builder for the engine stack.  Starts from [`Config::default`] (or a
 /// loaded config via [`EngineBuilder::from_config`]); every setter overrides
@@ -90,6 +90,22 @@ impl EngineBuilder {
     /// Phase-1 block size `B` for the batched multi-query kernel.
     pub fn batch_block(mut self, batch_block: usize) -> EngineBuilder {
         self.config.batch_block = batch_block.max(1);
+        self
+    }
+
+    /// Force a specific SIMD kernel backend (`None` = runtime detection;
+    /// see [`KernelBackend::detected`]).  The `EMDPAR_KERNEL` environment
+    /// variable overrides both.
+    pub fn kernel(mut self, kernel: KernelBackend) -> EngineBuilder {
+        self.config.kernel = Some(kernel);
+        self
+    }
+
+    /// Compressed stage-1 residency tier ([`CompressedKind::F16`] keeps an
+    /// f16 copy of the embedding + centroid tables for candidate scoring;
+    /// the planner restores exactness with an exact-f32 rerank).
+    pub fn compressed(mut self, compressed: CompressedKind) -> EngineBuilder {
+        self.config.compressed = compressed;
         self
     }
 
@@ -219,6 +235,8 @@ impl EngineBuilder {
                 threads: self.config.threads,
                 symmetric: self.config.symmetric,
                 batch_block: self.config.batch_block,
+                kernel: self.config.kernel,
+                compressed: self.config.compressed,
             },
         ))
     }
@@ -313,6 +331,19 @@ mod tests {
         assert_eq!(b.config().serve.max_line_bytes, 256);
         let eng = b.build_search().unwrap();
         assert_eq!(eng.config().serve.max_inflight, 128);
+    }
+
+    #[test]
+    fn kernel_and_compressed_knobs_flow_into_engines() {
+        let eng = EngineBuilder::new()
+            .dataset_spec(spec())
+            .threads(1)
+            .kernel(KernelBackend::Scalar)
+            .compressed(CompressedKind::F16)
+            .build_lc()
+            .unwrap();
+        assert_eq!(eng.params().kernel, Some(KernelBackend::Scalar));
+        assert!(eng.compressed_active());
     }
 
     #[test]

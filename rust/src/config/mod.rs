@@ -7,8 +7,9 @@
 
 use std::path::{Path, PathBuf};
 
-use crate::core::{EmdError, EmdResult, Method, Metric};
+use crate::core::{CompressedKind, EmdError, EmdResult, Method, Metric, PqParams};
 use crate::emd_ensure;
+use crate::lc::KernelBackend;
 use crate::util::cli::Parsed;
 use crate::util::json::Json;
 
@@ -160,6 +161,15 @@ pub struct Config {
     pub sharded: Option<ShardParams>,
     /// serving-runtime knobs (reactor count, admission, deadlines, framing)
     pub serve: ServeParams,
+    /// forced Phase-1 kernel backend (`None` = best the host supports;
+    /// the `EMDPAR_KERNEL` env var still applies when unset).  Purely a
+    /// speed knob — every backend is bit-identical.
+    pub kernel: Option<KernelBackend>,
+    /// compressed stage-1 residency: `"f16"` builds a half-precision copy
+    /// of the embedding table (and IVF centroids) that candidate-scoring
+    /// sweeps stream; the query planner restores exactness with an f32
+    /// rerank.  Requires the native backend, L2 metric, unsharded corpus.
+    pub compressed: CompressedKind,
 }
 
 impl Default for Config {
@@ -183,6 +193,8 @@ impl Default for Config {
             index: None,
             sharded: None,
             serve: ServeParams::default(),
+            kernel: None,
+            compressed: CompressedKind::Off,
         }
     }
 }
@@ -254,6 +266,12 @@ impl Config {
         if let Some(j) = json.get("serve") {
             cfg.serve = parse_serve(j)?;
         }
+        if let Some(s) = json.get("kernel").and_then(Json::as_str) {
+            cfg.kernel = Some(parse_kernel(s)?);
+        }
+        if let Some(s) = json.get("compressed").and_then(Json::as_str) {
+            cfg.compressed = parse_compressed(s)?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -306,6 +324,16 @@ impl Config {
                     p.nlist = nlist;
                     self.index = Some(p);
                 }
+            }
+        }
+        if let Some(s) = args.opt_str("kernel") {
+            if !s.is_empty() {
+                self.kernel = Some(parse_kernel(s)?);
+            }
+        }
+        if let Some(s) = args.opt_str("compressed") {
+            if !s.is_empty() {
+                self.compressed = parse_compressed(s)?;
             }
         }
         if let Some(s) = args.opt_str("nprobe") {
@@ -363,6 +391,31 @@ impl Config {
                 "the sharded live corpus requires the native backend"
             );
         }
+        if let Some(kb) = self.kernel {
+            emd_ensure!(
+                kb.is_supported(),
+                config,
+                "kernel backend '{}' forced but this host cannot execute it",
+                kb.name()
+            );
+        }
+        if self.compressed != CompressedKind::Off {
+            emd_ensure!(
+                self.backend == Backend::Native,
+                config,
+                "compressed stage-1 residency requires the native backend"
+            );
+            emd_ensure!(
+                self.metric == Metric::L2,
+                config,
+                "compressed stage-1 residency is implemented for the L2 metric only"
+            );
+            emd_ensure!(
+                self.sharded.is_none(),
+                config,
+                "compressed stage-1 residency is not available on the sharded corpus"
+            );
+        }
         emd_ensure!(self.serve.reactors >= 1, config, "serve reactors must be >= 1");
         emd_ensure!(self.serve.max_inflight >= 1, config, "serve max_inflight must be >= 1");
         emd_ensure!(
@@ -395,6 +448,23 @@ impl Config {
                 })
             }
         })
+    }
+}
+
+fn parse_kernel(s: &str) -> EmdResult<KernelBackend> {
+    KernelBackend::parse(s).ok_or_else(|| EmdError::parse("kernel", s, "scalar | avx2 | avx512"))
+}
+
+fn parse_compressed(s: &str) -> EmdResult<CompressedKind> {
+    match s.to_ascii_lowercase().as_str() {
+        "none" | "off" | "f32" => Ok(CompressedKind::Off),
+        "f16" | "fp16" | "half" => Ok(CompressedKind::F16),
+        // PQ is declared groundwork: surface the canonical explanation
+        // instead of a bare parse error
+        "pq" => Err(PqParams::default()
+            .validate()
+            .expect_err("PQ residency is groundwork and must not validate")),
+        _ => Err(EmdError::parse("compressed", s, "none | f16")),
     }
 }
 
@@ -673,6 +743,57 @@ mod tests {
         }
         // absent -> defaults
         assert_eq!(Config::default().serve, ServeParams::default());
+    }
+
+    #[test]
+    fn kernel_and_compressed_knobs_parse_and_validate() {
+        // scalar is supported everywhere; f16 residency rides the defaults
+        let j = Json::parse(r#"{"kernel": "scalar", "compressed": "f16"}"#).unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(cfg.kernel, Some(KernelBackend::Scalar));
+        assert_eq!(cfg.compressed, CompressedKind::F16);
+        // unset -> auto-detect / exact
+        assert_eq!(Config::default().kernel, None);
+        assert_eq!(Config::default().compressed, CompressedKind::Off);
+        // unknown names are rejected
+        assert!(Config::from_json(&Json::parse(r#"{"kernel": "neon"}"#).unwrap()).is_err());
+        assert!(
+            Config::from_json(&Json::parse(r#"{"compressed": "int4"}"#).unwrap()).is_err()
+        );
+        // PQ is groundwork: rejected with the canonical message
+        let err =
+            Config::from_json(&Json::parse(r#"{"compressed": "pq"}"#).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("groundwork"), "{err}");
+        // the compressed tier needs the native backend and an unsharded corpus
+        let bad = Config {
+            compressed: CompressedKind::F16,
+            backend: Backend::Artifact,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = Config {
+            compressed: CompressedKind::F16,
+            sharded: Some(ShardParams::default()),
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        // CLI overrides flow through apply_cli
+        use crate::util::cli::CommandSpec;
+        let spec = CommandSpec::new("t", "")
+            .opt("kernel", "", "")
+            .opt("compressed", "", "");
+        let parsed = spec
+            .parse(
+                &["--kernel", "scalar", "--compressed", "f16"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect::<Vec<_>>(),
+            )
+            .unwrap();
+        let mut cfg = Config::default();
+        cfg.apply_cli(&parsed).unwrap();
+        assert_eq!(cfg.kernel, Some(KernelBackend::Scalar));
+        assert_eq!(cfg.compressed, CompressedKind::F16);
     }
 
     #[test]

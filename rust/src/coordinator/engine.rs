@@ -97,6 +97,8 @@ impl SearchEngine {
             threads: config.threads,
             symmetric: config.symmetric,
             batch_block: config.batch_block,
+            kernel: config.kernel,
+            compressed: config.compressed,
         };
         let native = Arc::new(LcEngine::new(Arc::clone(&dataset), engine_params));
         let sharded = match (&config.sharded, config.backend) {
@@ -108,7 +110,13 @@ impl SearchEngine {
         // a sharded engine trains per-shard indexes instead of one global one
         let index = match (&config.index, config.backend, &sharded) {
             (Some(params), Backend::Native, None) => {
-                Some(Arc::new(Self::build_index(&config, params, &dataset, &native)?))
+                let mut ix = Self::build_index(&config, params, &dataset, &native)?;
+                // compressed residency extends to the coarse quantizer: probe
+                // against f16 centroids when the engine's stage 1 is f16 too
+                if config.compressed != crate::core::CompressedKind::Off {
+                    ix.enable_compressed_centroids();
+                }
+                Some(Arc::new(ix))
             }
             _ => None,
         };

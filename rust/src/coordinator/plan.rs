@@ -43,11 +43,12 @@ use std::time::{Duration, Instant};
 use crate::config::Backend;
 use crate::core::{EmdError, EmdResult, Histogram, Method};
 use crate::emd_ensure;
-use crate::index::pruned_search_batch;
+use crate::index::pruned_search_batch_tiered;
 use crate::util::json::Json;
 
 use super::cascade::{admissible_rerank, provably_dominates_rwmd, rerank_stage};
 use super::engine::{SearchEngine, SearchResult};
+use super::TopL;
 
 /// The cascade stage of a request: rerank the stage-1 LC-RWMD survivors
 /// with a dominating [`Method`] (ACT-k, ICT, Sinkhorn, exact EMD).
@@ -350,8 +351,10 @@ pub enum Stage {
     /// widest trained list count on the route).
     Prune { nprobe: usize, nlist: usize },
     /// LC scoring of the candidate set through the batched Phase-1/Phase-2
-    /// pipeline (`exhaustive` = the whole database, no pruning).
-    Score { method: Method, exhaustive: bool },
+    /// pipeline (`exhaustive` = the whole database, no pruning;
+    /// `compressed` = the sweep streams the engine's f16 stage-1 tier, so
+    /// scores are approximate until a downstream exact stage rescores).
+    Score { method: Method, exhaustive: bool, compressed: bool },
     /// Per-shard local search fanned across the pool, `fanout` shards at a
     /// time (each shard engine runs on its per-shard thread budget).
     ShardFanout { shards: usize, fanout: usize },
@@ -359,17 +362,24 @@ pub enum Stage {
     Merge { l: usize },
     /// Rerank the stage-1 RWMD survivors with the dominating method.
     CascadeRerank { rerank: Method, overfetch: usize, certified: bool },
+    /// Exact-f32 rescoring of a compressed stage-1 shortlist: the top
+    /// `keep` approximate candidates are rescored through the exact table
+    /// and the final top-ℓ is ranked from those exact values — at full
+    /// probe with ample `keep` this restores bit-identity with the
+    /// uncompressed exhaustive sweep.
+    ExactRerank { keep: usize },
 }
 
 impl Stage {
     pub fn describe(&self) -> String {
         match self {
             Stage::Prune { nprobe, nlist } => format!("Prune(ivf {nprobe}/{nlist})"),
-            Stage::Score { method, exhaustive } => {
+            Stage::Score { method, exhaustive, compressed } => {
                 format!(
-                    "Score({}, {})",
+                    "Score({}, {}{})",
                     method.name(),
-                    if *exhaustive { "exhaustive" } else { "candidates" }
+                    if *exhaustive { "exhaustive" } else { "candidates" },
+                    if *compressed { ", f16" } else { "" }
                 )
             }
             Stage::ShardFanout { shards, fanout } => {
@@ -381,6 +391,7 @@ impl Stage {
                 rerank.name(),
                 if *certified { ", certified" } else { "" }
             ),
+            Stage::ExactRerank { keep } => format!("ExactRerank(top-{keep}, f32)"),
         }
     }
 }
@@ -403,6 +414,10 @@ pub struct QueryPlan {
     pub cascade: Option<CascadeSpec>,
     /// Requested fan-out thread budget (`None` = engine default).
     pub threads: Option<usize>,
+    /// Stage 1 streams the engine's f16 compressed tier (exactness is
+    /// restored by the `ExactRerank` stage, or surrendered by an
+    /// uncertified cascade whose certificate is forced false).
+    pub compressed: bool,
 }
 
 impl QueryPlan {
@@ -483,6 +498,17 @@ pub fn plan(engine: &SearchEngine, req: &SearchRequest) -> EmdResult<QueryPlan> 
     let force_exhaustive = cascade.map(|c| c.certified).unwrap_or(false);
     let nprobe = if force_exhaustive { None } else { engine.effective_nprobe(req.nprobe) };
 
+    // compressed stage-1 residency: only on the monolithic native route,
+    // only for the LC plan methods (the tier feeds Phase 1), and never
+    // under a certified cascade — a certificate requires true lower
+    // bounds, which f16-quantized scores are not
+    let compressed = config.compressed != crate::core::CompressedKind::Off
+        && config.backend == Backend::Native
+        && engine.sharded_corpus().is_none()
+        && engine.native_ref().compressed_active()
+        && matches!(method, Method::Rwmd | Method::Omr | Method::Act { .. })
+        && !cascade.map(|c| c.certified).unwrap_or(false);
+
     let mut stages = Vec::new();
     if let Some(lock) = engine.sharded_corpus() {
         let corpus = lock.read().unwrap();
@@ -500,7 +526,7 @@ pub fn plan(engine: &SearchEngine, req: &SearchRequest) -> EmdResult<QueryPlan> 
                 nlist: corpus.max_nlist().unwrap_or(0),
             });
         }
-        stages.push(Stage::Score { method, exhaustive: !pruned });
+        stages.push(Stage::Score { method, exhaustive: !pruned, compressed: false });
         let fanout = req
             .threads
             .unwrap_or(config.threads)
@@ -512,9 +538,9 @@ pub fn plan(engine: &SearchEngine, req: &SearchRequest) -> EmdResult<QueryPlan> 
         match route {
             Some((index, np)) => {
                 stages.push(Stage::Prune { nprobe: np, nlist: index.nlist() });
-                stages.push(Stage::Score { method, exhaustive: false });
+                stages.push(Stage::Score { method, exhaustive: false, compressed });
             }
-            None => stages.push(Stage::Score { method, exhaustive: true }),
+            None => stages.push(Stage::Score { method, exhaustive: true, compressed }),
         }
     }
     if let Some(spec) = cascade {
@@ -523,8 +549,16 @@ pub fn plan(engine: &SearchEngine, req: &SearchRequest) -> EmdResult<QueryPlan> 
             overfetch: spec.overfetch.unwrap_or(config.overfetch).max(1),
             certified: spec.certified,
         });
+    } else if compressed {
+        // recover exactness: rescore the top overfetch·ℓ approximate
+        // candidates through the exact f32 table and rank ℓ from those
+        let keep = l
+            .saturating_mul(config.overfetch.max(1))
+            .max(l)
+            .clamp(1, engine.num_docs().max(1));
+        stages.push(Stage::ExactRerank { keep });
     }
-    Ok(QueryPlan { stages, method, l, nprobe, cascade, threads: req.threads })
+    Ok(QueryPlan { stages, method, l, nprobe, cascade, threads: req.threads, compressed })
 }
 
 /// One query's outcome from the base (stage-1) route.
@@ -546,7 +580,9 @@ struct BaseBatch {
 
 /// Run the plan's scoring route: sharded fan-out, IVF-pruned, or exhaustive
 /// sweep.  `force_exhaustive` overrides any probe width (certified
-/// cascades).
+/// cascades).  `compressed` routes the native sweep (probe + stage 1)
+/// through the engine's f16 residency tier; the caller owns restoring
+/// exactness downstream.
 fn run_base(
     engine: &SearchEngine,
     queries: &[Histogram],
@@ -555,6 +591,7 @@ fn run_base(
     nprobe: Option<usize>,
     force_exhaustive: bool,
     fanout: Option<usize>,
+    compressed: bool,
 ) -> EmdResult<BaseBatch> {
     match engine.config().backend {
         Backend::Artifact => {
@@ -600,25 +637,34 @@ fn run_base(
             let route = if force_exhaustive { None } else { engine.pruning_route(nprobe) };
             let per_query = match route {
                 Some((index, np)) => {
-                    pruned_search_batch(engine.native_ref(), index, queries, method, l, np)?
-                        .into_iter()
-                        .map(|pr| {
-                            let labels = pr
-                                .hits
-                                .iter()
-                                .map(|&(_, id)| engine.dataset().labels[id])
-                                .collect();
-                            BaseResult {
-                                result: SearchResult { hits: pr.hits, labels },
-                                candidates: pr.candidates,
-                                lists_probed: pr.lists_probed,
-                                pruned: true,
-                            }
-                        })
-                        .collect()
+                    pruned_search_batch_tiered(
+                        engine.native_ref(),
+                        index,
+                        queries,
+                        method,
+                        l,
+                        np,
+                        compressed,
+                    )?
+                    .into_iter()
+                    .map(|pr| {
+                        let labels = pr
+                            .hits
+                            .iter()
+                            .map(|&(_, id)| engine.dataset().labels[id])
+                            .collect();
+                        BaseResult {
+                            result: SearchResult { hits: pr.hits, labels },
+                            candidates: pr.candidates,
+                            lists_probed: pr.lists_probed,
+                            pruned: true,
+                        }
+                    })
+                    .collect()
                 }
                 None => {
-                    let flat = engine.native_ref().distances_batch(queries, method);
+                    let flat =
+                        engine.native_ref().distances_batch_tiered(queries, method, compressed);
                     (0..queries.len())
                         .map(|i| BaseResult {
                             result: engine.rank_row(&flat[i * n..(i + 1) * n], l),
@@ -656,29 +702,71 @@ fn execute_base(
     plan: QueryPlan,
 ) -> EmdResult<SearchResponse> {
     let t0 = Instant::now();
-    let base =
-        run_base(engine, queries, plan.method, plan.l, plan.nprobe, false, plan.threads)?;
+    // a compressed plan overfetches `keep` stage-1 candidates so the exact
+    // rerank below can rank the final ℓ from exact-f32 values
+    let keep = plan.stages.iter().find_map(|s| match s {
+        Stage::ExactRerank { keep } => Some(*keep),
+        _ => None,
+    });
+    let fetch = keep.unwrap_or(plan.l);
+    let base = run_base(
+        engine,
+        queries,
+        plan.method,
+        fetch,
+        plan.nprobe,
+        false,
+        plan.threads,
+        plan.compressed,
+    )?;
     let metrics = engine.metrics();
     let mut stats = QueryStats { queries: queries.len(), ..QueryStats::default() };
     if let Some(m) = base.merge {
         metrics.record_merge(m);
         stats.merge_us = m.as_micros().min(u128::from(u64::MAX)) as u64;
     }
+    let mut results = Vec::with_capacity(queries.len());
+    let mut evals = Vec::with_capacity(queries.len());
+    for (r, query) in base.per_query.into_iter().zip(queries) {
+        if r.pruned {
+            metrics.record_probe(r.lists_probed, r.candidates, base.n_live);
+        }
+        stats.lists_probed += r.lists_probed;
+        stats.candidates_scored += r.candidates;
+        let mut evaluated = r.candidates;
+        let result = match keep {
+            Some(_) => {
+                // rescore the approximate shortlist through the exact f32
+                // table (ascending ids: one deterministic sub-CSR gather)
+                let mut ids: Vec<u32> =
+                    r.result.hits.iter().map(|&(_, id)| id as u32).collect();
+                ids.sort_unstable();
+                let exact = engine.native_ref().distances_batch_subset(
+                    std::slice::from_ref(query),
+                    plan.method,
+                    &ids,
+                );
+                let mut top = TopL::new(plan.l);
+                for (&id, &d) in ids.iter().zip(&exact) {
+                    top.push(d, id as usize);
+                }
+                stats.reranked += ids.len();
+                evaluated += ids.len();
+                let hits = top.into_sorted();
+                let labels =
+                    hits.iter().map(|&(_, id)| engine.dataset().labels[id]).collect();
+                SearchResult { hits, labels }
+            }
+            None => r.result,
+        };
+        evals.push(evaluated);
+        results.push(result);
+    }
     // per-query latency = the batch's amortized share of the full dispatch
     let per_query = t0.elapsed() / queries.len() as u32;
-    let results = base
-        .per_query
-        .into_iter()
-        .map(|r| {
-            if r.pruned {
-                metrics.record_probe(r.lists_probed, r.candidates, base.n_live);
-            }
-            metrics.record_query(per_query, r.candidates);
-            stats.lists_probed += r.lists_probed;
-            stats.candidates_scored += r.candidates;
-            r.result
-        })
-        .collect();
+    for e in evals {
+        metrics.record_query(per_query, e);
+    }
     Ok(SearchResponse { results, stats, plan })
 }
 
@@ -705,6 +793,7 @@ fn execute_cascade(
         plan.nprobe,
         spec.certified,
         plan.threads,
+        plan.compressed,
     )?;
 
     let metrics = engine.metrics();
@@ -745,7 +834,9 @@ fn execute_cascade(
         } else {
             (&hits[..], f32::INFINITY)
         };
-        let covers = b.candidates == base.n_live;
+        // f16-quantized stage-1 scores are not true lower bounds, so a
+        // compressed cascade can never claim the Theorem-2 certificate
+        let covers = b.candidates == base.n_live && !plan.compressed;
         let reranked = rerank_stage(
             vocab,
             dist.as_ref(),
@@ -873,6 +964,86 @@ mod tests {
         let req =
             SearchRequest::query(q).cascade(CascadeSpec::new(Method::Sinkhorn));
         assert!(eng.plan(&req).is_ok());
+    }
+
+    #[test]
+    fn compressed_plan_marks_stage1_and_appends_exact_rerank() {
+        use crate::core::CompressedKind;
+        let eng = SearchEngine::from_config(Config {
+            dataset: DatasetSpec::SynthText { n: 40, vocab: 180, dim: 8, seed: 11 },
+            threads: 2,
+            compressed: CompressedKind::F16,
+            ..Config::default()
+        })
+        .unwrap();
+        let q = eng.dataset().histogram(0);
+        let p = eng.plan(&SearchRequest::query(q.clone()).method(Method::Rwmd).topl(4)).unwrap();
+        assert!(p.compressed);
+        assert!(matches!(
+            p.stages[0],
+            Stage::Score { exhaustive: true, compressed: true, .. }
+        ));
+        assert!(matches!(p.stages.last(), Some(Stage::ExactRerank { .. })));
+        assert!(p.describe().contains("f16"), "{}", p.describe());
+        assert!(p.describe().contains("ExactRerank"), "{}", p.describe());
+        // non-LC methods serve exact rows from the tiered sweep: the plan
+        // is neither compressed nor reranked
+        let p = eng.plan(&SearchRequest::query(q.clone()).method(Method::Wcd)).unwrap();
+        assert!(!p.compressed);
+        assert!(!p.stages.iter().any(|s| matches!(s, Stage::ExactRerank { .. })));
+        // a certified cascade demands true lower bounds: never compressed
+        let p = eng
+            .plan(
+                &SearchRequest::query(q)
+                    .cascade(CascadeSpec::new(Method::Exact).certified(true)),
+            )
+            .unwrap();
+        assert!(!p.compressed);
+        assert!(!p.stages.iter().any(|s| matches!(s, Stage::ExactRerank { .. })));
+    }
+
+    #[test]
+    fn compressed_execution_restores_exact_results_at_full_probe() {
+        use crate::core::CompressedKind;
+        let base_cfg = Config {
+            dataset: DatasetSpec::SynthText { n: 40, vocab: 180, dim: 8, seed: 11 },
+            threads: 2,
+            ..Config::default()
+        };
+        let exact = SearchEngine::from_config(base_cfg.clone()).unwrap();
+        // overfetch 16 × ℓ 5 clamps keep to the whole 40-doc corpus, so the
+        // exact rerank provably restores bit-identity with the f32 sweep
+        let tiered = SearchEngine::from_config(Config {
+            compressed: CompressedKind::F16,
+            overfetch: 16,
+            ..base_cfg
+        })
+        .unwrap();
+        let queries: Vec<Histogram> =
+            [0usize, 7, 23].iter().map(|&u| exact.dataset().histogram(u)).collect();
+        let req = SearchRequest::batch(queries.clone()).method(Method::Rwmd).topl(5);
+        let want = exact.execute(&req).unwrap();
+        let got = tiered.execute(&req).unwrap();
+        assert!(got.plan.compressed && !want.plan.compressed);
+        assert!(got.stats.reranked > 0);
+        for (g, w) in got.results.iter().zip(&want.results) {
+            assert_eq!(g.hits, w.hits);
+            assert_eq!(g.labels, w.labels);
+        }
+        // an uncertified cascade over the compressed tier keeps the same
+        // hits (full-corpus shortlist, exact rerank) but its certificate is
+        // forced false: f16 stage-1 scores are not lower bounds
+        let creq = SearchRequest::batch(queries)
+            .topl(5)
+            .cascade(CascadeSpec::new(Method::Exact).overfetch(16));
+        let cwant = exact.execute(&creq).unwrap();
+        let cgot = tiered.execute(&creq).unwrap();
+        assert!(cgot.plan.compressed);
+        for (g, w) in cgot.results.iter().zip(&cwant.results) {
+            assert_eq!(g.hits, w.hits);
+        }
+        assert!(cwant.stats.certified.iter().all(|&c| c));
+        assert!(cgot.stats.certified.iter().all(|&c| !c));
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Compressed embedding residency: IEEE binary16 (f16) conversion helpers,
+//! the [`F16Tier`] stage-1 copy of an embedding table, and the
+//! product-quantization groundwork types.
+//!
+//! The crate is dependency-free, so the f32 ↔ f16 conversions are
+//! hand-rolled bit manipulation: `f32_to_f16` rounds to nearest-even
+//! (including the subnormal range), `f16_to_f32` widens exactly — every
+//! f16 value is representable as f32, so the software widening agrees
+//! bitwise with the hardware `vcvtph2ps` the SIMD kernels use
+//! ([`crate::lc::kernels`]).
+//!
+//! The tier halves the memory traffic of stage-1 candidate scoring (2
+//! bytes/coordinate instead of 4); exactness is recovered by the planner's
+//! exact-f32 rerank (see `coordinator::plan`), never assumed here.
+
+use std::sync::Arc;
+
+use super::vocab::Embeddings;
+
+/// Which compressed stage-1 tier an engine keeps (config knob
+/// `"compressed"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CompressedKind {
+    /// No compressed tier; every stage scores full-precision f32.
+    #[default]
+    Off,
+    /// IEEE binary16 copy of the embedding (and IVF centroid) tables.
+    F16,
+}
+
+impl CompressedKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            CompressedKind::Off => "none",
+            CompressedKind::F16 => "f16",
+        }
+    }
+}
+
+/// Convert an f32 to IEEE binary16 with round-to-nearest-even.  Overflow
+/// saturates to ±inf; values below the smallest subnormal round to ±0.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 255 {
+        // inf / NaN (NaN keeps a truncated payload, forced non-zero)
+        if mant == 0 {
+            return sign | 0x7c00;
+        }
+        let payload = ((mant >> 13) as u16) & 0x03ff;
+        return sign | 0x7c00 | if payload == 0 { 0x0200 } else { payload };
+    }
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e >= -14 {
+        // normal f16: 10 mantissa bits survive, 13 are rounded off
+        let mant16 = (mant >> 13) as u16;
+        let rest = mant & 0x1fff;
+        let mut h = sign | (((e + 15) as u16) << 10) | mant16;
+        if rest > 0x1000 || (rest == 0x1000 && (mant16 & 1) == 1) {
+            h += 1; // rounding up may carry into the exponent — that is correct
+        }
+        return h;
+    }
+    if e >= -25 {
+        // subnormal f16: shift the (implicit-bit-restored) mantissa right
+        let full = mant | 0x0080_0000;
+        let shift = (13 - 14 - e) as u32; // 13 dropped bits + denormalization
+        let mant16 = (full >> shift) as u16;
+        let rest = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut h = sign | mant16;
+        if rest > halfway || (rest == halfway && (mant16 & 1) == 1) {
+            h += 1;
+        }
+        return h;
+    }
+    sign // underflow to ±0
+}
+
+/// Widen an IEEE binary16 to f32 — exact for every input.
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        // inf / NaN
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp != 0 {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    } else if mant == 0 {
+        sign
+    } else {
+        // subnormal f16 (= mant × 2⁻²⁴) is a *normal* f32: renormalize
+        let n = mant.leading_zeros() - 21; // shift putting the MSB at bit 10
+        sign | ((113 - n) << 23) | (((mant << n) & 0x03ff) << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// An f16 copy of an `(v, m)` embedding table, used **only** for stage-1
+/// candidate scoring ([`crate::lc::LcEngine`] plans against it through the
+/// `dot_f16` kernels; the planner reranks survivors at exact f32).
+///
+/// Shares nothing with the source [`Embeddings`]; cheap to clone
+/// (`Arc`-backed like the source table).
+#[derive(Debug, Clone, PartialEq)]
+pub struct F16Tier {
+    data: Arc<Vec<u16>>,
+    v: usize,
+    m: usize,
+}
+
+impl F16Tier {
+    /// Encode every coordinate of `emb` (round-to-nearest-even).
+    pub fn from_embeddings(emb: &Embeddings) -> F16Tier {
+        let data = emb.as_slice().iter().map(|&x| f32_to_f16(x)).collect();
+        F16Tier { data: Arc::new(data), v: emb.num_vectors(), m: emb.dim() }
+    }
+
+    pub fn num_vectors(&self) -> usize {
+        self.v
+    }
+
+    pub fn dim(&self) -> usize {
+        self.m
+    }
+
+    /// Encoded row `i` (length `m`).
+    pub fn row(&self, i: usize) -> &[u16] {
+        &self.data[i * self.m..(i + 1) * self.m]
+    }
+
+    /// Append the decoded f32 coordinates of row `i` to `out`.
+    pub fn decode_row_into(&self, i: usize, out: &mut Vec<f32>) {
+        out.extend(self.row(i).iter().map(|&h| f16_to_f32(h)));
+    }
+
+    /// Squared norms of the *decoded* rows, with the same lane-chunked
+    /// arithmetic as [`Embeddings::row_sq_norms`] — this is the norm table
+    /// Phase 1 must pair with the tier so compressed plans are internally
+    /// consistent.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        let mut buf = Vec::with_capacity(self.m);
+        (0..self.v)
+            .map(|i| {
+                buf.clear();
+                self.decode_row_into(i, &mut buf);
+                super::vocab::sq_norm(&buf)
+            })
+            .collect()
+    }
+
+    /// Bytes the encoded table occupies (half the f32 original).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 2
+    }
+}
+
+/// Product-quantization groundwork (roadmap: PQ centroid/embedding tiers).
+///
+/// The shape is fixed here so configs can already name it — `m` subspaces
+/// of `dim/m` coordinates, each coded to `1 << bits` centroids — but no
+/// codebook trainer ships yet: [`PqParams::validate`] says so explicitly
+/// and the config layer rejects `"compressed": "pq"` with the same message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PqParams {
+    /// Number of subquantizers (must divide the embedding dim).
+    pub subspaces: usize,
+    /// Bits per code (codebook size `1 << bits` per subspace).
+    pub bits: u8,
+}
+
+impl Default for PqParams {
+    fn default() -> PqParams {
+        PqParams { subspaces: 8, bits: 8 }
+    }
+}
+
+impl PqParams {
+    /// PQ is declared but not implemented; every entry point reports the
+    /// same actionable error instead of silently falling back.
+    pub fn validate(&self) -> crate::core::EmdResult<()> {
+        Err(crate::core::EmdError::unsupported(
+            "product quantization is groundwork: only the f16 tier is implemented \
+             (set \"compressed\": \"f16\")",
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_is_exact_for_every_encoding() {
+        // every non-NaN f16 value must survive decode -> encode unchanged
+        for h in 0u16..=u16::MAX {
+            let exp = (h >> 10) & 0x1f;
+            let mant = h & 0x03ff;
+            if exp == 0x1f && mant != 0 {
+                continue; // NaN: payload equality is not guaranteed
+            }
+            let x = f16_to_f32(h);
+            assert_eq!(f32_to_f16(x), h, "h={h:#06x} x={x}");
+        }
+    }
+
+    #[test]
+    fn f16_decode_matches_reference_values() {
+        assert_eq!(f16_to_f32(0x0000), 0.0);
+        assert_eq!(f16_to_f32(0x8000), -0.0);
+        assert!(f16_to_f32(0x8000).is_sign_negative());
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_to_f32(0xc000), -2.0);
+        assert_eq!(f16_to_f32(0x7bff), 65504.0); // largest finite f16
+        assert_eq!(f16_to_f32(0x0400), 2.0f32.powi(-14)); // smallest normal
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24)); // smallest subnormal
+        assert_eq!(f16_to_f32(0x03ff), 1023.0 * 2.0f32.powi(-24)); // largest subnormal
+        assert_eq!(f16_to_f32(0x7c00), f32::INFINITY);
+        assert_eq!(f16_to_f32(0xfc00), f32::NEG_INFINITY);
+        assert!(f16_to_f32(0x7e00).is_nan());
+    }
+
+    #[test]
+    fn f16_encode_rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16 up:
+        // ties-to-even keeps the even mantissa (1.0)
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11)), 0x3c00);
+        // the next representable f32 above the tie rounds up
+        assert_eq!(f32_to_f16((1.0 + 2.0f32.powi(-11)).next_up()), 0x3c01);
+        // halfway between 0x3c01 and 0x3c02 rounds to even (0x3c02)
+        assert_eq!(f32_to_f16(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3c02);
+        // overflow saturates to inf
+        assert_eq!(f32_to_f16(1.0e9), 0x7c00);
+        assert_eq!(f32_to_f16(-1.0e9), 0xfc00);
+        // underflow collapses to signed zero
+        assert_eq!(f32_to_f16(1.0e-30), 0x0000);
+        assert_eq!(f32_to_f16(-1.0e-30), 0x8000);
+        // values straddling the smallest subnormal: just above half of it
+        // rounds up, exactly half (a tie against zero) rounds to even zero
+        assert_eq!(f32_to_f16(2.0f32.powi(-25)), 0x0000);
+        assert_eq!(f32_to_f16(2.0f32.powi(-25).next_up()), 0x0001);
+        assert_eq!(f32_to_f16(2.0f32.powi(-24)), 0x0001);
+    }
+
+    #[test]
+    fn tier_encodes_and_decodes_consistently() {
+        let emb = Embeddings::new(
+            vec![0.5, -1.25, 3.0, 0.1, -0.0, 7.5, 1.0e-8, -2.5],
+            4,
+            2,
+        );
+        let tier = emb.compressed_tier();
+        assert_eq!(tier.num_vectors(), 4);
+        assert_eq!(tier.dim(), 2);
+        assert_eq!(tier.bytes(), 16);
+        let mut out = Vec::new();
+        for i in 0..4 {
+            out.clear();
+            tier.decode_row_into(i, &mut out);
+            for (&d, &orig) in out.iter().zip(emb.row(i)) {
+                assert_eq!(d.to_bits(), f16_to_f32(f32_to_f16(orig)).to_bits());
+                if orig.abs() > 1.0e-3 {
+                    // rounding error within half an ulp at 11 significand bits
+                    assert!((d - orig).abs() <= orig.abs() * 2.0f32.powi(-11), "{d} vs {orig}");
+                }
+            }
+        }
+        // norm table matches recomputing over decoded rows
+        let norms = tier.row_sq_norms();
+        let mut buf = Vec::new();
+        for i in 0..4 {
+            buf.clear();
+            tier.decode_row_into(i, &mut buf);
+            assert_eq!(norms[i].to_bits(), crate::core::vocab::sq_norm(&buf).to_bits());
+        }
+    }
+
+    #[test]
+    fn pq_is_explicit_groundwork() {
+        let err = PqParams::default().validate().unwrap_err();
+        assert!(err.to_string().contains("groundwork"), "{err}");
+    }
+}

@@ -4,6 +4,7 @@
 //! [`Method`] enum, the [`Distance`] / [`BatchDistance`] traits and the
 //! [`MethodRegistry`] every layer dispatches through.
 
+pub mod compress;
 pub mod cost;
 pub mod dataset;
 pub mod distance;
@@ -13,6 +14,7 @@ pub mod method;
 pub mod sparse;
 pub mod vocab;
 
+pub use compress::{CompressedKind, F16Tier, PqParams};
 pub use cost::{cost_matrix, support_cost_matrix, Metric};
 pub use dataset::{Dataset, DatasetStats};
 pub use distance::{BatchDistance, Distance, MethodRegistry};

@@ -100,10 +100,18 @@ impl Embeddings {
     /// Squared L2 norm of every row, in row order.  The Phase-1 Gram
     /// expansion consumes these; computing them once per dataset (instead of
     /// per row per `plan_query` call) removes an `O(n·v·m)` term from
-    /// all-pairs sweeps.  The per-row summation order matches the serial
-    /// `Σ x²` the kernels used inline, so downstream results are bit-equal.
+    /// all-pairs sweeps.  Per row this is [`sq_norm`] — the lane-chunked
+    /// row-norm kernel contract — so norm tables computed here, by
+    /// [`crate::core::compress::F16Tier::row_sq_norms`] and by any
+    /// `lc::kernels` backend are all bit-equal.
     pub fn row_sq_norms(&self) -> Vec<f32> {
-        (0..self.v).map(|i| self.row(i).iter().map(|&x| x * x).sum::<f32>()).collect()
+        (0..self.v).map(|i| sq_norm(self.row(i))).collect()
+    }
+
+    /// An f16 copy of the table for compressed stage-1 scoring (see
+    /// [`crate::core::compress::F16Tier`]).
+    pub fn compressed_tier(&self) -> super::compress::F16Tier {
+        super::compress::F16Tier::from_embeddings(self)
     }
 
     /// Weighted centroid of a histogram's coordinates (for WCD).
@@ -117,6 +125,34 @@ impl Embeddings {
         }
         c
     }
+}
+
+/// Lane-chunked squared norm: the scalar reference for the row-norm kernel
+/// primitive (`lc::kernels::row_sq_norm_with`), shared by
+/// [`Embeddings::row_sq_norms`] and the f16 tier's norm table.  The
+/// arithmetic is exactly `dot(row, row)` under the Phase-1 bit-identity
+/// contract: 16 accumulator lanes, unfused multiply-then-add, in-order lane
+/// reduction, serial tail.
+#[inline]
+pub fn sq_norm(row: &[f32]) -> f32 {
+    const LANES: usize = 16;
+    let n = row.len();
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let rc = &row[c * LANES..c * LANES + LANES];
+        for l in 0..LANES {
+            acc[l] += rc[l] * rc[l];
+        }
+    }
+    let mut dot = 0.0f32;
+    for &x in acc.iter() {
+        dot += x;
+    }
+    for t in chunks * LANES..n {
+        dot += row[t] * row[t];
+    }
+    dot
 }
 
 #[cfg(test)]

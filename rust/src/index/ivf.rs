@@ -11,6 +11,7 @@
 //! dataset underneath it changed.
 
 use crate::config::IndexParams;
+use crate::core::compress::{f16_to_f32, f32_to_f16};
 use crate::core::{Dataset, EmdResult};
 use crate::emd_ensure;
 
@@ -30,6 +31,11 @@ pub struct IvfIndex {
     list_radius: Vec<f64>,
     /// Fingerprint of the dataset the index was trained on.
     fingerprint: u64,
+    /// Optional f16 copy of the centroid table (compressed stage-1
+    /// residency).  Never present at construction — populated only by
+    /// [`IvfIndex::enable_compressed_centroids`], so the persisted raw-parts
+    /// form stays unchanged and a reloaded index equals the original.
+    centroids_f16: Option<Vec<u16>>,
 }
 
 /// The list count training actually uses: `nlist` capped so the average
@@ -95,6 +101,7 @@ impl IvfIndex {
             list_ids,
             list_radius,
             fingerprint,
+            centroids_f16: None,
         })
     }
 
@@ -139,7 +146,15 @@ impl IvfIndex {
             emd_ensure!(!seen[u as usize], config, "index row id {u} appears twice");
             seen[u as usize] = true;
         }
-        Ok(IvfIndex { dim, centroids, list_ptr, list_ids, list_radius, fingerprint })
+        Ok(IvfIndex {
+            dim,
+            centroids,
+            list_ptr,
+            list_ids,
+            list_radius,
+            fingerprint,
+            centroids_f16: None,
+        })
     }
 
     pub fn nlist(&self) -> usize {
@@ -193,6 +208,52 @@ impl IvfIndex {
         let nprobe = nprobe.clamp(1, nlist);
         let mut order: Vec<(f64, usize)> = (0..nlist)
             .map(|c| (euclid(query_centroid, self.centroid(c)), c))
+            .collect();
+        order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        order.truncate(nprobe);
+        order.into_iter().map(|(_, c)| c).collect()
+    }
+
+    /// Build the f16 copy of the centroid table (compressed stage-1
+    /// residency).  Each f64 centroid coordinate is narrowed through f32 to
+    /// IEEE binary16 with round-to-nearest-even.  Idempotent; the exact
+    /// table is untouched, so assignment, appends and persistence are
+    /// unaffected.  [`IvfIndex::append_assigned`] never modifies the
+    /// centroid table, so an enabled tier stays valid across appends.
+    pub fn enable_compressed_centroids(&mut self) {
+        if self.centroids_f16.is_none() {
+            self.centroids_f16 =
+                Some(self.centroids.iter().map(|&x| f32_to_f16(x as f32)).collect());
+        }
+    }
+
+    /// Whether the f16 centroid tier is resident.
+    pub fn compressed_centroids_active(&self) -> bool {
+        self.centroids_f16.is_some()
+    }
+
+    /// [`IvfIndex::probe`] against the f16 centroid tier: each centroid is
+    /// decoded f16→f32→f64 and ranked by the identical
+    /// `(distance, list id)` ordering.  Falls back to the exact probe when
+    /// the tier has not been enabled.  Probe order may differ from the
+    /// exact probe only when quantization reorders near-tied centroids —
+    /// the caller (the query planner) compensates with an exact rerank of
+    /// the scored shortlist.
+    pub fn probe_compressed(&self, query_centroid: &[f64], nprobe: usize) -> Vec<usize> {
+        let Some(cf) = &self.centroids_f16 else {
+            return self.probe(query_centroid, nprobe);
+        };
+        assert_eq!(query_centroid.len(), self.dim, "query centroid dim mismatch");
+        let nlist = self.nlist();
+        let nprobe = nprobe.clamp(1, nlist);
+        let mut dec = vec![0.0f64; self.dim];
+        let mut order: Vec<(f64, usize)> = (0..nlist)
+            .map(|c| {
+                for (d, &h) in dec.iter_mut().zip(&cf[c * self.dim..(c + 1) * self.dim]) {
+                    *d = f16_to_f32(h) as f64;
+                }
+                (euclid(query_centroid, &dec), c)
+            })
             .collect();
         order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         order.truncate(nprobe);
@@ -440,6 +501,54 @@ mod tests {
             fp
         )
         .is_err());
+    }
+
+    #[test]
+    fn compressed_centroid_probe_matches_exact_probe() {
+        let pts = grid_points(60, 3, 9);
+        let mut ix = IvfIndex::train(&pts, 3, &params(6), 2, 1).unwrap();
+        let q = &pts[6..9];
+        // without the tier, probe_compressed IS the exact probe
+        assert!(!ix.compressed_centroids_active());
+        assert_eq!(ix.probe_compressed(q, 3), ix.probe(q, 3));
+        ix.enable_compressed_centroids();
+        assert!(ix.compressed_centroids_active());
+        // idempotent
+        ix.enable_compressed_centroids();
+        // a full probe covers every list regardless of quantization …
+        let exact = ix.probe(q, ix.nlist());
+        let tiered = ix.probe_compressed(q, ix.nlist());
+        let mut a = exact.clone();
+        let mut b = tiered.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "full probe must cover every list");
+        // … and the tiered order equals a from-scratch reference over the
+        // decoded f16 table (same euclid + (distance, id) tie-break)
+        let mut want: Vec<(f64, usize)> = (0..ix.nlist())
+            .map(|c| {
+                let d: f64 = ix
+                    .centroid(c)
+                    .iter()
+                    .zip(q)
+                    .map(|(&x, &y)| {
+                        let dx = f16_to_f32(f32_to_f16(x as f32)) as f64 - y;
+                        dx * dx
+                    })
+                    .sum::<f64>()
+                    .sqrt();
+                (d, c)
+            })
+            .collect();
+        want.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+        let want: Vec<usize> = want.into_iter().map(|(_, c)| c).collect();
+        assert_eq!(tiered, want);
+        // the tier rides outside the persisted raw-parts form
+        let (dim, c, p, ids, r, fp) = ix.raw_parts();
+        let reloaded =
+            IvfIndex::from_raw(dim, c.to_vec(), p.to_vec(), ids.to_vec(), r.to_vec(), fp)
+                .unwrap();
+        assert!(!reloaded.compressed_centroids_active());
     }
 
     #[test]

@@ -39,4 +39,7 @@ pub use kmeans::{kmeans, KmeansResult};
 pub use persist::{
     load as load_index, load_for as load_index_for, save as save_index, sidecar_path,
 };
-pub use search::{probe_candidates, pruned_search, pruned_search_batch, PrunedSearch};
+pub use search::{
+    probe_candidates, probe_candidates_tiered, pruned_search, pruned_search_batch,
+    pruned_search_batch_tiered, PrunedSearch,
+};

@@ -59,6 +59,21 @@ pub fn probe_candidates(
     query: &Histogram,
     nprobe: usize,
 ) -> EmdResult<Vec<u32>> {
+    probe_candidates_tiered(engine, index, query, nprobe, false)
+}
+
+/// [`probe_candidates`] with a residency-tier switch: when `compressed` is
+/// true and the index has an f16 centroid tier, list selection runs against
+/// the compressed table ([`IvfIndex::probe_compressed`]).  Candidate-set
+/// semantics are otherwise identical, and at `nprobe = nlist` both tiers
+/// return the whole database.
+pub fn probe_candidates_tiered(
+    engine: &LcEngine,
+    index: &IvfIndex,
+    query: &Histogram,
+    nprobe: usize,
+    compressed: bool,
+) -> EmdResult<Vec<u32>> {
     emd_ensure!(
         index.num_points() == engine.dataset().len(),
         config,
@@ -75,7 +90,9 @@ pub fn probe_candidates(
     );
     emd_ensure!(!query.is_empty(), config, "empty query histogram");
     let qc = crate::approx::centroid(&engine.dataset().embeddings, query);
-    let lists = index.probe(&qc, nprobe.clamp(1, index.nlist()));
+    let nprobe = nprobe.clamp(1, index.nlist());
+    let lists =
+        if compressed { index.probe_compressed(&qc, nprobe) } else { index.probe(&qc, nprobe) };
     Ok(index.candidates(&lists))
 }
 
@@ -89,13 +106,33 @@ pub fn pruned_search_batch(
     l: usize,
     nprobe: usize,
 ) -> EmdResult<Vec<PrunedSearch>> {
+    pruned_search_batch_tiered(engine, index, queries, method, l, nprobe, false)
+}
+
+/// [`pruned_search_batch`] with a residency-tier switch.  With
+/// `compressed = true` the probe uses the index's f16 centroid tier (when
+/// enabled) and candidate scoring runs through the engine's compressed
+/// stage-1 path ([`LcEngine::distances_batch_subset_tiered`]) — distances
+/// are then f16-quantized stage-1 scores, NOT the exact values, and the
+/// caller (the query planner's `ExactRerank` stage) must rescore the
+/// surviving shortlist exactly.  With `compressed = false` this is exactly
+/// the historical pruned search.
+pub fn pruned_search_batch_tiered(
+    engine: &LcEngine,
+    index: &IvfIndex,
+    queries: &[Histogram],
+    method: Method,
+    l: usize,
+    nprobe: usize,
+    compressed: bool,
+) -> EmdResult<Vec<PrunedSearch>> {
     if queries.is_empty() {
         return Ok(Vec::new());
     }
     let nprobe = nprobe.clamp(1, index.nlist());
     let mut per_query: Vec<Vec<u32>> = Vec::with_capacity(queries.len());
     for q in queries {
-        per_query.push(probe_candidates(engine, index, q, nprobe)?);
+        per_query.push(probe_candidates_tiered(engine, index, q, nprobe, compressed)?);
     }
 
     // candidate union across the batch (lists are disjoint per query but
@@ -111,7 +148,7 @@ pub fn pruned_search_batch(
 
     // one engine dispatch: (queries, union) distance block through the
     // batched Phase-1 pipeline
-    let flat = engine.distances_batch_subset(queries, method, &union);
+    let flat = engine.distances_batch_subset_tiered(queries, method, &union, compressed);
     let cols = union.len();
 
     let results = queries
@@ -212,6 +249,63 @@ mod tests {
         // a database query always finds itself: its own list is probed first
         assert_eq!(res.hits[0].1, 0);
         assert!(res.hits[0].0.abs() < 1e-5);
+    }
+
+    #[test]
+    fn compressed_tier_full_probe_matches_tiered_full_sweep() {
+        use crate::core::CompressedKind;
+        let ds = Arc::new(generate_text(&TextConfig {
+            n: 60,
+            classes: 3,
+            vocab: 250,
+            dim: 12,
+            doc_len: 25,
+            seed: 33,
+            ..Default::default()
+        }));
+        let eng = LcEngine::new(
+            Arc::clone(&ds),
+            EngineParams { threads: 2, compressed: CompressedKind::F16, ..Default::default() },
+        );
+        assert!(eng.compressed_active());
+        let fp = dataset_fingerprint(&ds);
+        let mut ix = IvfIndex::train(
+            eng.wcd_centroids(),
+            ds.embeddings.dim(),
+            &IndexParams {
+                nlist: 5,
+                nprobe: 2,
+                train_iters: 8,
+                seed: 3,
+                min_points_per_list: 1,
+            },
+            2,
+            fp,
+        )
+        .unwrap();
+        ix.enable_compressed_centroids();
+        let queries: Vec<Histogram> = [2usize, 17].iter().map(|&u| ds.histogram(u)).collect();
+        let batch = pruned_search_batch_tiered(
+            &eng,
+            &ix,
+            &queries,
+            Method::Rwmd,
+            6,
+            ix.nlist(),
+            true,
+        )
+        .unwrap();
+        // at full probe the compressed pruned path scores the whole
+        // database through the same tiered sweep the engine exposes
+        // directly, so the top-ℓ must agree bit-for-bit
+        let flat = eng.distances_batch_tiered(&queries, Method::Rwmd, true);
+        let n = ds.len();
+        for (qi, got) in batch.iter().enumerate() {
+            assert_eq!(got.candidates, n);
+            let mut want = TopL::new(6);
+            want.push_slice(&flat[qi * n..(qi + 1) * n], 0);
+            assert_eq!(got.hits, want.into_sorted());
+        }
     }
 
     #[test]

@@ -6,11 +6,20 @@
 //!
 //! Structure of the kernel: the `B` queries' support columns are
 //! concatenated into one `(Σh, m)` coordinate block; the `V×m · m×Σh`
-//! product is then walked in 2×2 register tiles ([`dot2x2`]) that load each
-//! vocabulary row and each query column once per tile instead of once per
-//! dot product — halving load traffic per FMA versus the per-pair
-//! [`dot_f32`] loop — with the per-(row, query) top-k selection fused
-//! directly behind each tile.
+//! product is then walked in 2×2 register tiles
+//! ([`crate::lc::kernels::dot2x2_with`]) that load each vocabulary row and
+//! each query column once per tile instead of once per dot product —
+//! halving load traffic per FMA versus the per-pair dot loop — with the
+//! per-(row, query) top-k selection fused directly behind each tile.  The
+//! dot-product microkernels live in [`crate::lc::kernels`] and dispatch to
+//! the best SIMD backend the host supports (or the one
+//! [`PlanParams::kernel`] forces); all backends are bit-identical.
+//!
+//! The planner can also score against an f16 compressed copy of the
+//! vocabulary ([`BatchPlanner::new_compressed`]): rows stream at half the
+//! bytes, each u16 is widened to f32 exactly, and the same lane-chunked
+//! arithmetic runs on the widened values.  Compressed plans are a stage-1
+//! shortcut — the query planner reranks survivors at exact f32.
 //!
 //! Bit-identity contract: every scalar this kernel produces is computed
 //! with the *same* lane-chunked accumulation, the same reduction order, the
@@ -25,10 +34,11 @@
 //! allocations.
 
 use crate::approx::act::row_topk;
-use crate::core::{Embeddings, Histogram, Metric};
+use crate::core::{Embeddings, F16Tier, Histogram, Metric};
+use crate::lc::kernels::{self, KernelBackend};
 use crate::util::threadpool::{parallel_for, SyncSlice};
 
-use super::plan::{dot_f32, l2_snap, snapped_distance, PlanParams, QueryPlan};
+use super::plan::{l2_snap, snapped_distance, PlanParams, QueryPlan};
 
 /// Default number of queries planned per Phase-1 block (`B`).  Large enough
 /// to amortize vocabulary streaming across the block, small enough that the
@@ -89,19 +99,53 @@ struct QuerySeg {
     k: usize,
 }
 
-/// The batched Phase-1 planner: borrows the vocabulary and its precomputed
-/// row squared-norm table (see [`Embeddings::row_sq_norms`]) and plans one
-/// or many queries per call.  Construction is free — [`crate::lc::LcEngine`]
-/// materializes one per operation on top of its cached norm table.
+/// Which representation of the vocabulary the planner streams: the exact
+/// f32 table or its f16 compressed tier.
+#[derive(Clone, Copy)]
+enum VocabRef<'a> {
+    F32(&'a Embeddings),
+    F16(&'a F16Tier),
+}
+
+impl VocabRef<'_> {
+    fn num_vectors(&self) -> usize {
+        match self {
+            VocabRef::F32(e) => e.num_vectors(),
+            VocabRef::F16(t) => t.num_vectors(),
+        }
+    }
+
+    fn dim(&self) -> usize {
+        match self {
+            VocabRef::F32(e) => e.dim(),
+            VocabRef::F16(t) => t.dim(),
+        }
+    }
+}
+
+/// The batched Phase-1 planner: borrows the vocabulary (exact f32, or its
+/// f16 compressed tier) and the matching precomputed row squared-norm table
+/// (see [`Embeddings::row_sq_norms`] / [`F16Tier::row_sq_norms`]) and plans
+/// one or many queries per call.  Construction is free —
+/// [`crate::lc::LcEngine`] materializes one per operation on top of its
+/// cached norm table.
 pub struct BatchPlanner<'a> {
-    vocab: &'a Embeddings,
+    vocab: VocabRef<'a>,
     vn: &'a [f32],
 }
 
 impl<'a> BatchPlanner<'a> {
     pub fn new(vocab: &'a Embeddings, vn: &'a [f32]) -> BatchPlanner<'a> {
         assert_eq!(vn.len(), vocab.num_vectors(), "vocab norm table size mismatch");
-        BatchPlanner { vocab, vn }
+        BatchPlanner { vocab: VocabRef::F32(vocab), vn }
+    }
+
+    /// Plan against the f16 compressed tier.  `vn` must be the **tier's**
+    /// norm table ([`F16Tier::row_sq_norms`]), not the f32 one, so the Gram
+    /// expansion stays internally consistent with the decoded coordinates.
+    pub fn new_compressed(tier: &'a F16Tier, vn: &'a [f32]) -> BatchPlanner<'a> {
+        assert_eq!(vn.len(), tier.num_vectors(), "tier norm table size mismatch");
+        BatchPlanner { vocab: VocabRef::F16(tier), vn }
     }
 
     /// Plan a block of query histograms (allocating convenience wrapper
@@ -176,7 +220,12 @@ impl<'a> BatchPlanner<'a> {
                 support.push(i);
                 qw.push(x * inv);
                 qnorms.push(vn[i as usize]);
-                coords.extend_from_slice(vocab.row(i as usize));
+                // query columns always decode to f32 (exact for f16, so the
+                // gathered block is identical to decoding the whole tier)
+                match vocab {
+                    VocabRef::F32(e) => coords.extend_from_slice(e.row(i as usize)),
+                    VocabRef::F16(t) => t.decode_row_into(i as usize, coords),
+                }
             }
             segs.push(QuerySeg { off, h, k: params.k.clamp(1, h) });
         }
@@ -219,6 +268,7 @@ impl<'a> BatchPlanner<'a> {
         let ctx = KernelCtx {
             vocab,
             vn,
+            kb: params.kernel.unwrap_or_else(kernels::active),
             metric: params.metric,
             m,
             total_h,
@@ -250,8 +300,9 @@ impl<'a> BatchPlanner<'a> {
 
 /// Everything the block kernel reads, plus the disjoint-write output views.
 struct KernelCtx<'v, 'o> {
-    vocab: &'v Embeddings,
+    vocab: VocabRef<'v>,
     vn: &'v [f32],
+    kb: KernelBackend,
     metric: Metric,
     m: usize,
     total_h: usize,
@@ -292,7 +343,6 @@ impl KernelCtx<'_, '_> {
         let mut i0 = r0;
         while i0 < r1 {
             if i0 + 1 < r1 {
-                let (v0, v1) = (self.vocab.row(i0), self.vocab.row(i0 + 1));
                 let (vn0, vn1) = (self.vn[i0], self.vn[i0 + 1]);
                 let (t0, rest) = tile.split_at_mut(th);
                 let t1 = &mut rest[..th];
@@ -300,7 +350,7 @@ impl KernelCtx<'_, '_> {
                 while c + 1 < th {
                     let q0 = &self.coords[c * m..(c + 1) * m];
                     let q1 = &self.coords[(c + 1) * m..(c + 2) * m];
-                    let dots = dot2x2(v0, v1, q0, q1, m);
+                    let dots = self.dots2x2(i0, i0 + 1, q0, q1);
                     t0[c] = l2_snap(vn0, dots[0], self.qnorms[c]);
                     t0[c + 1] = l2_snap(vn0, dots[1], self.qnorms[c + 1]);
                     t1[c] = l2_snap(vn1, dots[2], self.qnorms[c]);
@@ -309,8 +359,8 @@ impl KernelCtx<'_, '_> {
                 }
                 if c < th {
                     let qc = &self.coords[c * m..(c + 1) * m];
-                    t0[c] = l2_snap(vn0, dot_f32(v0, qc), self.qnorms[c]);
-                    t1[c] = l2_snap(vn1, dot_f32(v1, qc), self.qnorms[c]);
+                    t0[c] = l2_snap(vn0, self.dot1(i0, qc), self.qnorms[c]);
+                    t1[c] = l2_snap(vn1, self.dot1(i0 + 1, qc), self.qnorms[c]);
                 }
                 self.snap_own_coordinate(i0, t0);
                 self.snap_own_coordinate(i0 + 1, t1);
@@ -318,16 +368,39 @@ impl KernelCtx<'_, '_> {
                 self.select(i0 + 1, &tile[th..2 * th], vals, idxs);
                 i0 += 2;
             } else {
-                let vi = self.vocab.row(i0);
                 let vni = self.vn[i0];
                 for c in 0..th {
                     let qc = &self.coords[c * m..(c + 1) * m];
-                    tile[c] = l2_snap(vni, dot_f32(vi, qc), self.qnorms[c]);
+                    tile[c] = l2_snap(vni, self.dot1(i0, qc), self.qnorms[c]);
                 }
                 self.snap_own_coordinate(i0, &mut tile[..th]);
                 self.select(i0, &tile[..th], vals, idxs);
                 i0 += 1;
             }
+        }
+    }
+
+    /// One 2×2 tile of vocabulary rows `i0`/`i1` against query columns
+    /// `q0`/`q1`, dispatched to the active backend (and to the f16 variant
+    /// when planning against the compressed tier).
+    #[inline]
+    fn dots2x2(&self, i0: usize, i1: usize, q0: &[f32], q1: &[f32]) -> [f32; 4] {
+        match self.vocab {
+            VocabRef::F32(e) => {
+                kernels::dot2x2_with(self.kb, e.row(i0), e.row(i1), q0, q1, self.m)
+            }
+            VocabRef::F16(t) => {
+                kernels::dot2x2_f16_with(self.kb, t.row(i0), t.row(i1), q0, q1, self.m)
+            }
+        }
+    }
+
+    /// Single dot product of vocabulary row `i` against query column `qc`.
+    #[inline]
+    fn dot1(&self, i: usize, qc: &[f32]) -> f32 {
+        match self.vocab {
+            VocabRef::F32(e) => kernels::dot_with(self.kb, e.row(i), qc),
+            VocabRef::F16(t) => kernels::dot_f16_with(self.kb, t.row(i), qc),
         }
     }
 
@@ -343,8 +416,19 @@ impl KernelCtx<'_, '_> {
     ) {
         let th = self.total_h;
         let m = self.m;
+        // non-L2 metrics have no Gram expansion, so a compressed vocabulary
+        // is decoded row-by-row here (the config layer restricts the f16
+        // tier to L2, making this a compile-completeness path in practice)
+        let mut decoded: Vec<f32> = Vec::new();
         for i in r0..r1 {
-            let vi = self.vocab.row(i);
+            let vi: &[f32] = match self.vocab {
+                VocabRef::F32(e) => e.row(i),
+                VocabRef::F16(t) => {
+                    decoded.clear();
+                    t.decode_row_into(i, &mut decoded);
+                    &decoded
+                }
+            };
             for c in 0..th {
                 tile[c] = if self.support[c] as usize == i {
                     0.0
@@ -393,56 +477,10 @@ impl KernelCtx<'_, '_> {
     }
 }
 
-/// 2×2 register-tiled dot products: `out = [a0·b0, a0·b1, a1·b0, a1·b1]`.
-///
-/// Each operand is loaded once per tile instead of once per dot product
-/// (0.5 loads per FMA versus [`dot_f32`]'s 2), and the four lane reductions
-/// are independent, so the CPU overlaps them.  Per pair, the arithmetic —
-/// lane-chunked partial sums, reduction order, scalar tail — is *exactly*
-/// [`dot_f32`]'s, which is what makes the batched kernel bit-identical to
-/// the single-query kernel.
-#[inline]
-fn dot2x2(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32], n: usize) -> [f32; 4] {
-    const LANES: usize = 16;
-    let chunks = n / LANES;
-    let mut acc00 = [0.0f32; LANES];
-    let mut acc01 = [0.0f32; LANES];
-    let mut acc10 = [0.0f32; LANES];
-    let mut acc11 = [0.0f32; LANES];
-    for c in 0..chunks {
-        let o = c * LANES;
-        let x0 = &a0[o..o + LANES];
-        let x1 = &a1[o..o + LANES];
-        let y0 = &b0[o..o + LANES];
-        let y1 = &b1[o..o + LANES];
-        for l in 0..LANES {
-            acc00[l] += x0[l] * y0[l];
-            acc01[l] += x0[l] * y1[l];
-            acc10[l] += x1[l] * y0[l];
-            acc11[l] += x1[l] * y1[l];
-        }
-    }
-    let mut out = [0.0f32; 4];
-    for (slot, acc) in out.iter_mut().zip([&acc00, &acc01, &acc10, &acc11]) {
-        let mut dot = 0.0f32;
-        for l in 0..LANES {
-            dot += acc[l];
-        }
-        *slot = dot;
-    }
-    for t in chunks * LANES..n {
-        out[0] += a0[t] * b0[t];
-        out[1] += a0[t] * b1[t];
-        out[2] += a1[t] * b0[t];
-        out[3] += a1[t] * b1[t];
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::lc::plan::plan_query;
+    use crate::lc::plan::{dot_f32, plan_query};
     use crate::util::rng::Rng;
 
     fn setup(seed: u64, v: usize, m: usize, hs: &[usize]) -> (Embeddings, Vec<Histogram>) {
@@ -482,7 +520,7 @@ mod tests {
                 (0..n).map(|_| rng.normal() as f32).collect()
             };
             let (a0, a1, b0, b1) = (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
-            let t = dot2x2(&a0, &a1, &b0, &b1, n);
+            let t = kernels::scalar::dot2x2(&a0, &a1, &b0, &b1, n);
             assert_eq!(t[0], dot_f32(&a0, &b0), "n={n}");
             assert_eq!(t[1], dot_f32(&a0, &b1), "n={n}");
             assert_eq!(t[2], dot_f32(&a1, &b0), "n={n}");
@@ -500,7 +538,7 @@ mod tests {
             for keep_d in [false, true] {
                 for threads in [1usize, 4] {
                     let params =
-                        PlanParams { k, metric: Metric::L2, keep_d, threads };
+                        PlanParams { k, metric: Metric::L2, keep_d, threads, kernel: None };
                     let mut scratch = PlanScratch::new();
                     let plans = planner.plan_block(&queries, params, &mut scratch);
                     assert_eq!(plans.len(), queries.len());
@@ -519,7 +557,7 @@ mod tests {
         let vn = vocab.row_sq_norms();
         let planner = BatchPlanner::new(&vocab, &vn);
         for metric in [Metric::L1, Metric::Cosine, Metric::SqL2] {
-            let params = PlanParams { k: 2, metric, keep_d: true, threads: 2 };
+            let params = PlanParams { k: 2, metric, keep_d: true, threads: 2, kernel: None };
             let mut scratch = PlanScratch::new();
             let plans = planner.plan_block(&queries, params, &mut scratch);
             for (q, plan) in queries.iter().zip(&plans) {
@@ -536,7 +574,8 @@ mod tests {
         let (vocab, queries) = setup(3, 40, 6, &[8, 5, 11, 2]);
         let vn = vocab.row_sq_norms();
         let planner = BatchPlanner::new(&vocab, &vn);
-        let params = PlanParams { k: 3, metric: Metric::L2, keep_d: true, threads: 1 };
+        let params =
+            PlanParams { k: 3, metric: Metric::L2, keep_d: true, threads: 1, kernel: None };
 
         let mut fresh = PlanScratch::new();
         let want_a = planner.plan_block(&queries[..2], params, &mut fresh);
@@ -547,7 +586,7 @@ mod tests {
         // warm the arena with a differently-shaped block, then recycle
         let mut warm = planner.plan_block(
             &queries[1..],
-            PlanParams { k: 8, metric: Metric::L2, keep_d: false, threads: 1 },
+            PlanParams { k: 8, metric: Metric::L2, keep_d: false, threads: 1, kernel: None },
             &mut reused,
         );
         reused.recycle(&mut warm);
@@ -568,10 +607,39 @@ mod tests {
         let (vocab, queries) = setup(4, 25, 4, &[7]);
         let vn = vocab.row_sq_norms();
         let planner = BatchPlanner::new(&vocab, &vn);
-        let params = PlanParams { k: 2, metric: Metric::L2, keep_d: false, threads: 1 };
+        let params =
+            PlanParams { k: 2, metric: Metric::L2, keep_d: false, threads: 1, kernel: None };
         let mut scratch = PlanScratch::new();
         let plans = planner.plan_block(&queries, params, &mut scratch);
         assert_plans_equal(&plans[0], &plan_query(&vocab, &vn, &queries[0], params), "B=1");
+    }
+
+    #[test]
+    fn compressed_plans_match_decoded_vocab_plans_bitwise() {
+        // planning against the f16 tier must equal planning against an f32
+        // table holding the decoded tier values — the mixed-precision kernel
+        // widens exactly, so the two paths are the same arithmetic
+        let (vocab, queries) = setup(6, 33, 7, &[6, 9, 3]);
+        let tier = vocab.compressed_tier();
+        let tn = tier.row_sq_norms();
+        let mut data = Vec::new();
+        for i in 0..tier.num_vectors() {
+            tier.decode_row_into(i, &mut data);
+        }
+        let decoded = Embeddings::new(data, tier.num_vectors(), tier.dim());
+        let dn = decoded.row_sq_norms();
+        assert_eq!(tn, dn, "tier norm table must match decoded norms");
+
+        let params =
+            PlanParams { k: 2, metric: Metric::L2, keep_d: true, threads: 2, kernel: None };
+        let mut sc_a = PlanScratch::new();
+        let compressed =
+            BatchPlanner::new_compressed(&tier, &tn).plan_block(&queries, params, &mut sc_a);
+        let mut sc_b = PlanScratch::new();
+        let exact = BatchPlanner::new(&decoded, &dn).plan_block(&queries, params, &mut sc_b);
+        for (c, e) in compressed.iter().zip(&exact) {
+            assert_plans_equal(c, e, "compressed vs decoded");
+        }
     }
 
     #[test]
@@ -583,7 +651,7 @@ mod tests {
         let mut out = vec![QueryPlan::default()];
         planner.plan_rows_into(
             &[],
-            PlanParams { k: 1, metric: Metric::L2, keep_d: false, threads: 1 },
+            PlanParams { k: 1, metric: Metric::L2, keep_d: false, threads: 1, kernel: None },
             &mut scratch,
             &mut out,
         );

@@ -17,15 +17,17 @@ use crate::approx::{bow_distances_batch, centroids_batch, wcd_from_centroids};
 use std::sync::Arc;
 
 use crate::core::{
-    BatchDistance, CsrMatrix, Dataset, Distance, EmdResult, Histogram, Method, MethodRegistry,
-    Metric,
+    BatchDistance, CompressedKind, CsrMatrix, Dataset, Distance, EmdResult, F16Tier, Histogram,
+    Method, MethodRegistry, Metric,
 };
 use crate::util::threadpool::{parallel_for, parallel_map, SyncSlice};
 
 use super::batch_plan::{BatchPlanner, PlanScratch, DEFAULT_BATCH_BLOCK};
+use super::kernels::KernelBackend;
 use super::plan::{plan_query, PlanParams, QueryPlan};
 use super::transfers::{
-    act_direction_a_into, omr_direction_a_into, rwmd_direction_a_into, rwmd_direction_b_into,
+    act_direction_a_into, direction_a_block_into, direction_b_block_into, omr_direction_a_into,
+    rwmd_direction_a_into, rwmd_direction_b_into,
 };
 
 /// Engine configuration.
@@ -45,6 +47,16 @@ pub struct EngineParams {
     /// vocabularies (all-pairs sweeps run with `keep_d: false` and are
     /// unaffected).
     pub batch_block: usize,
+    /// Forced Phase-1 kernel backend; `None` picks the best the host
+    /// supports (overridable process-wide via `EMDPAR_KERNEL`).  Purely a
+    /// speed knob — all backends are bit-identical.
+    pub kernel: Option<KernelBackend>,
+    /// Compressed stage-1 residency: [`CompressedKind::F16`] keeps an f16
+    /// copy of the embedding table that candidate-scoring sweeps may stream
+    /// instead of the f32 original (callers opt in per call through the
+    /// `*_tiered` entry points; the query planner recovers exactness with
+    /// an f32 rerank).
+    pub compressed: CompressedKind,
 }
 
 impl Default for EngineParams {
@@ -54,8 +66,18 @@ impl Default for EngineParams {
             threads: crate::util::threadpool::default_threads(),
             symmetric: true,
             batch_block: DEFAULT_BATCH_BLOCK,
+            kernel: None,
+            compressed: CompressedKind::Off,
         }
     }
+}
+
+/// The engine's f16 stage-1 tier: the encoded table plus its own
+/// squared-norm table (decoded-value norms, so compressed Gram expansions
+/// are internally consistent).
+struct CompressedVocab {
+    tier: F16Tier,
+    vn: Vec<f32>,
 }
 
 /// The native (CPU data-parallel) LC engine over one database.
@@ -75,6 +97,8 @@ pub struct LcEngine {
     /// Built once in `new` (the seed rebuilt a registry on every
     /// per-pair call).
     registry: MethodRegistry,
+    /// `Some` when [`EngineParams::compressed`] requested a stage-1 tier.
+    compressed: Option<CompressedVocab>,
 }
 
 impl LcEngine {
@@ -94,6 +118,14 @@ impl LcEngine {
         params: EngineParams,
         precompute_threads: usize,
     ) -> LcEngine {
+        let compressed = match params.compressed {
+            CompressedKind::Off => None,
+            CompressedKind::F16 => {
+                let tier = dataset.embeddings.compressed_tier();
+                let vn = tier.row_sq_norms();
+                Some(CompressedVocab { tier, vn })
+            }
+        };
         LcEngine {
             bow_norms: dataset.matrix.row_l2_norms(),
             centroids: centroids_batch(
@@ -103,8 +135,25 @@ impl LcEngine {
             ),
             vocab_sq_norms: dataset.embeddings.row_sq_norms(),
             registry: MethodRegistry::new(params.metric),
+            compressed,
             dataset,
             params,
+        }
+    }
+
+    /// Whether this engine carries an f16 compressed stage-1 tier (the
+    /// query planner only routes compressed stages to engines where this
+    /// holds).
+    pub fn compressed_active(&self) -> bool {
+        self.compressed.is_some()
+    }
+
+    /// The Phase-1 planner for this engine: compressed-tier when requested
+    /// *and* built, the exact f32 table otherwise.
+    fn batch_planner(&self, compressed: bool) -> BatchPlanner<'_> {
+        match (&self.compressed, compressed) {
+            (Some(cv), true) => BatchPlanner::new_compressed(&cv.tier, &cv.vn),
+            _ => BatchPlanner::new(&self.dataset.embeddings, &self.vocab_sq_norms),
         }
     }
 
@@ -163,6 +212,7 @@ impl LcEngine {
                         metric: self.params.metric,
                         keep_d,
                         threads: self.params.threads,
+                        kernel: self.params.kernel,
                     },
                 );
                 let mut t = vec![0.0f32; db.nrows()];
@@ -215,6 +265,21 @@ impl LcEngine {
     /// to per-query [`LcEngine::distances`].  Plan-free and per-pair
     /// methods evaluate row by row.
     pub fn distances_batch(&self, queries: &[Histogram], method: Method) -> Vec<f32> {
+        self.distances_batch_tiered(queries, method, false)
+    }
+
+    /// [`LcEngine::distances_batch`] with an explicit residency choice:
+    /// `compressed: true` streams the f16 stage-1 tier through Phase 1
+    /// (when the engine carries one — exact f32 otherwise).  Compressed
+    /// rows are *approximate* candidate scores; callers needing exact
+    /// values rerank through the exact path (the query planner does this
+    /// automatically).
+    pub fn distances_batch_tiered(
+        &self,
+        queries: &[Histogram],
+        method: Method,
+        compressed: bool,
+    ) -> Vec<f32> {
         let n = self.dataset.len();
         if queries.is_empty() {
             return Vec::new();
@@ -234,27 +299,52 @@ impl LcEngine {
             metric: self.params.metric,
             keep_d,
             threads,
+            kernel: self.params.kernel,
         };
-        let planner = BatchPlanner::new(&self.dataset.embeddings, &self.vocab_sq_norms);
+        let planner = self.batch_planner(compressed);
         let mut scratch = PlanScratch::new();
         let mut plans: Vec<QueryPlan> = Vec::new();
         let mut out = vec![0.0f32; queries.len() * n];
         let mut tb = Vec::new();
         for (b, block) in queries.chunks(bb).enumerate() {
             planner.plan_block_into(block, params, &mut scratch, &mut plans);
-            for (i, plan) in plans.iter().enumerate() {
-                let q = b * bb + i;
-                self.phase2_into(
-                    method,
-                    plan,
-                    &self.dataset.matrix,
-                    &mut out[q * n..(q + 1) * n],
-                    threads,
-                    &mut tb,
-                );
-            }
+            let q0 = b * bb;
+            self.phase2_block_into(
+                method,
+                &plans,
+                &self.dataset.matrix,
+                &mut out[q0 * n..(q0 + plans.len()) * n],
+                threads,
+                &mut tb,
+            );
         }
         out
+    }
+
+    /// Phase 2 for a whole Phase-1 block of plans in one database pass
+    /// (each CSR row fetched once for all plans — see
+    /// [`direction_a_block_into`]), plus the direction-B max when the
+    /// plans carry D.  Bit-identical to per-plan [`LcEngine::phase2_into`]
+    /// calls because both shapes share the same per-row cost helpers.
+    fn phase2_block_into(
+        &self,
+        method: Method,
+        plans: &[QueryPlan],
+        db: &CsrMatrix,
+        out: &mut [f32],
+        threads: usize,
+        tb: &mut Vec<f32>,
+    ) {
+        direction_a_block_into(method, plans, db, threads, out);
+        if plans.iter().all(|p| p.d.is_some()) && !plans.is_empty() {
+            tb.resize(out.len(), 0.0);
+            direction_b_block_into(plans, db, threads, &mut tb[..out.len()]);
+            for (a, &b) in out.iter_mut().zip(tb.iter()) {
+                if b > *a {
+                    *a = b;
+                }
+            }
+        }
     }
 
     /// Row-major `(queries.len(), ids.len())` distances restricted to the
@@ -270,6 +360,18 @@ impl LcEngine {
         queries: &[Histogram],
         method: Method,
         ids: &[u32],
+    ) -> Vec<f32> {
+        self.distances_batch_subset_tiered(queries, method, ids, false)
+    }
+
+    /// [`LcEngine::distances_batch_subset`] with an explicit residency
+    /// choice (see [`LcEngine::distances_batch_tiered`]).
+    pub fn distances_batch_subset_tiered(
+        &self,
+        queries: &[Histogram],
+        method: Method,
+        ids: &[u32],
+        compressed: bool,
     ) -> Vec<f32> {
         if queries.is_empty() || ids.is_empty() {
             return Vec::new();
@@ -314,25 +416,24 @@ impl LcEngine {
                     metric: self.params.metric,
                     keep_d,
                     threads,
+                    kernel: self.params.kernel,
                 };
-                let planner = BatchPlanner::new(&self.dataset.embeddings, &self.vocab_sq_norms);
+                let planner = self.batch_planner(compressed);
                 let mut scratch = PlanScratch::new();
                 let mut plans: Vec<QueryPlan> = Vec::new();
                 let mut out = vec![0.0f32; queries.len() * cols];
                 let mut tb = Vec::new();
                 for (b, block) in queries.chunks(bb).enumerate() {
                     planner.plan_block_into(block, params, &mut scratch, &mut plans);
-                    for (i, plan) in plans.iter().enumerate() {
-                        let q = b * bb + i;
-                        self.phase2_into(
-                            method,
-                            plan,
-                            &sub,
-                            &mut out[q * cols..(q + 1) * cols],
-                            threads,
-                            &mut tb,
-                        );
-                    }
+                    let q0 = b * bb;
+                    self.phase2_block_into(
+                        method,
+                        &plans,
+                        &sub,
+                        &mut out[q0 * cols..(q0 + plans.len()) * cols],
+                        threads,
+                        &mut tb,
+                    );
                 }
                 out
             }
@@ -466,6 +567,7 @@ impl LcEngine {
                     metric: self.params.metric,
                     keep_d: false,
                     threads: 1,
+                    kernel: self.params.kernel,
                 };
                 let bb = self.params.batch_block.max(1);
                 let planner =
@@ -517,8 +619,6 @@ impl LcEngine {
             // Data-parallel O(n²) symmetrization.  Safe partition: the cell
             // pair {(u,v), (v,u)} is read and written only by the worker
             // that owns row min(u,v), and rows are disjoint across chunks.
-            // parallel_for's chunk stealing (~4 small chunks per worker)
-            // absorbs the triangular row-length skew.
             let slots = SyncSlice::new(&mut a);
             parallel_for(n, self.params.threads, |start, end| {
                 for u in start..end {
@@ -836,6 +936,46 @@ mod tests {
         let all: Vec<u32> = (0..n as u32).collect();
         let full = eng.distances_batch(&queries, Method::Act { k: 2 });
         assert_eq!(eng.distances_batch_subset(&queries, Method::Act { k: 2 }, &all), full);
+    }
+
+    #[test]
+    fn tiered_paths_default_to_exact_and_compressed_tier_scores() {
+        let ds = std::sync::Arc::new(tiny_dataset(10, 8, 24, 3, 5));
+        let exact_eng = LcEngine::new(
+            std::sync::Arc::clone(&ds),
+            EngineParams { threads: 2, ..Default::default() },
+        );
+        let comp_eng = LcEngine::new(
+            std::sync::Arc::clone(&ds),
+            EngineParams { threads: 2, compressed: CompressedKind::F16, ..Default::default() },
+        );
+        assert!(!exact_eng.compressed_active());
+        assert!(comp_eng.compressed_active());
+        let queries: Vec<Histogram> = (0..3).map(|u| ds.histogram(u)).collect();
+        let method = Method::Act { k: 2 };
+        // tiered(false) is bit-identical to the plain batch path
+        assert_eq!(
+            comp_eng.distances_batch_tiered(&queries, method, false),
+            comp_eng.distances_batch(&queries, method)
+        );
+        // compressed rows are finite approximate scores of the right shape
+        let c = comp_eng.distances_batch_tiered(&queries, method, true);
+        let n = ds.len();
+        assert_eq!(c.len(), queries.len() * n);
+        assert!(c.iter().all(|d| d.is_finite()));
+        // an engine without a tier serves exact rows for compressed requests
+        assert_eq!(
+            exact_eng.distances_batch_tiered(&queries, method, true),
+            exact_eng.distances_batch(&queries, method)
+        );
+        // compressed subset rows restrict the compressed full sweep exactly
+        let ids: Vec<u32> = vec![0, 2, 5, 7];
+        let sub = comp_eng.distances_batch_subset_tiered(&queries, method, &ids, true);
+        for qi in 0..queries.len() {
+            for (ci, &u) in ids.iter().enumerate() {
+                assert_eq!(sub[qi * ids.len() + ci], c[qi * n + u as usize]);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,215 @@
+//! AVX2 (+F16C) backend: 8-wide `ymm` registers.  The scalar contract's 16
+//! accumulator lanes map onto **two** `ymm` accumulators per dot product —
+//! `lo` holds lanes 0–7, `hi` lanes 8–15 — updated with an unfused
+//! `vmulps` + `vaddps` pair (never `vfmadd`: the contract rounds each
+//! product before adding, exactly like the scalar `acc[l] += a[l] * b[l]`).
+//! The final reduction stores both registers back to a 16-lane array and
+//! sums it serially in lane order, so every result is bit-identical to
+//! [`super::scalar`].
+//!
+//! All functions are `unsafe`: the caller must have verified `avx2` and
+//! `f16c` support (see [`super::KernelBackend::is_supported`]) — the
+//! dispatcher in [`super`] is the only caller.
+
+#![cfg(target_arch = "x86_64")]
+
+use std::arch::x86_64::*;
+
+use super::scalar::LANES;
+use crate::core::compress::f16_to_f32;
+
+/// # Safety
+/// Requires `avx2` (checked by the dispatcher before the call).
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc_lo = _mm256_setzero_ps();
+    let mut acc_hi = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let o = c * LANES;
+        let x_lo = _mm256_loadu_ps(ap.add(o));
+        let x_hi = _mm256_loadu_ps(ap.add(o + 8));
+        let y_lo = _mm256_loadu_ps(bp.add(o));
+        let y_hi = _mm256_loadu_ps(bp.add(o + 8));
+        acc_lo = _mm256_add_ps(acc_lo, _mm256_mul_ps(x_lo, y_lo));
+        acc_hi = _mm256_add_ps(acc_hi, _mm256_mul_ps(x_hi, y_hi));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc_lo);
+    _mm256_storeu_ps(lanes.as_mut_ptr().add(8), acc_hi);
+    let mut dot = 0.0f32;
+    for &x in lanes.iter() {
+        dot += x;
+    }
+    for t in chunks * LANES..n {
+        dot += a[t] * b[t];
+    }
+    dot
+}
+
+/// # Safety
+/// Requires `avx2`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn row_sq_norm(row: &[f32]) -> f32 {
+    dot(row, row)
+}
+
+/// # Safety
+/// Requires `avx2`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot2x2(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32], n: usize) -> [f32; 4] {
+    let chunks = n / LANES;
+    let (p0, p1, q0, q1) = (a0.as_ptr(), a1.as_ptr(), b0.as_ptr(), b1.as_ptr());
+    let mut a00l = _mm256_setzero_ps();
+    let mut a00h = _mm256_setzero_ps();
+    let mut a01l = _mm256_setzero_ps();
+    let mut a01h = _mm256_setzero_ps();
+    let mut a10l = _mm256_setzero_ps();
+    let mut a10h = _mm256_setzero_ps();
+    let mut a11l = _mm256_setzero_ps();
+    let mut a11h = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let o = c * LANES;
+        let x0l = _mm256_loadu_ps(p0.add(o));
+        let x0h = _mm256_loadu_ps(p0.add(o + 8));
+        let x1l = _mm256_loadu_ps(p1.add(o));
+        let x1h = _mm256_loadu_ps(p1.add(o + 8));
+        let y0l = _mm256_loadu_ps(q0.add(o));
+        let y0h = _mm256_loadu_ps(q0.add(o + 8));
+        let y1l = _mm256_loadu_ps(q1.add(o));
+        let y1h = _mm256_loadu_ps(q1.add(o + 8));
+        a00l = _mm256_add_ps(a00l, _mm256_mul_ps(x0l, y0l));
+        a00h = _mm256_add_ps(a00h, _mm256_mul_ps(x0h, y0h));
+        a01l = _mm256_add_ps(a01l, _mm256_mul_ps(x0l, y1l));
+        a01h = _mm256_add_ps(a01h, _mm256_mul_ps(x0h, y1h));
+        a10l = _mm256_add_ps(a10l, _mm256_mul_ps(x1l, y0l));
+        a10h = _mm256_add_ps(a10h, _mm256_mul_ps(x1h, y0h));
+        a11l = _mm256_add_ps(a11l, _mm256_mul_ps(x1l, y1l));
+        a11h = _mm256_add_ps(a11h, _mm256_mul_ps(x1h, y1h));
+    }
+    let mut out = [0.0f32; 4];
+    let mut lanes = [0.0f32; LANES];
+    for (slot, (lo, hi)) in out
+        .iter_mut()
+        .zip([(a00l, a00h), (a01l, a01h), (a10l, a10h), (a11l, a11h)])
+    {
+        _mm256_storeu_ps(lanes.as_mut_ptr(), lo);
+        _mm256_storeu_ps(lanes.as_mut_ptr().add(8), hi);
+        let mut dot = 0.0f32;
+        for &x in lanes.iter() {
+            dot += x;
+        }
+        *slot = dot;
+    }
+    for t in chunks * LANES..n {
+        out[0] += a0[t] * b0[t];
+        out[1] += a0[t] * b1[t];
+        out[2] += a1[t] * b0[t];
+        out[3] += a1[t] * b1[t];
+    }
+    out
+}
+
+/// Widen 8 consecutive f16 values at `p` to one `ymm` of f32.  `vcvtph2ps`
+/// performs the exact IEEE widening, so it agrees bitwise with the software
+/// [`f16_to_f32`] the scalar backend uses.
+///
+/// # Safety
+/// Requires `f16c`; `p` must be readable for 16 bytes.
+#[target_feature(enable = "avx2,f16c")]
+unsafe fn load_f16x8(p: *const u16) -> __m256 {
+    _mm256_cvtph_ps(_mm_loadu_si128(p as *const __m128i))
+}
+
+/// # Safety
+/// Requires `avx2` and `f16c`.
+#[target_feature(enable = "avx2,f16c")]
+pub unsafe fn dot_f16(a: &[u16], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc_lo = _mm256_setzero_ps();
+    let mut acc_hi = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let o = c * LANES;
+        let x_lo = load_f16x8(ap.add(o));
+        let x_hi = load_f16x8(ap.add(o + 8));
+        let y_lo = _mm256_loadu_ps(bp.add(o));
+        let y_hi = _mm256_loadu_ps(bp.add(o + 8));
+        acc_lo = _mm256_add_ps(acc_lo, _mm256_mul_ps(x_lo, y_lo));
+        acc_hi = _mm256_add_ps(acc_hi, _mm256_mul_ps(x_hi, y_hi));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc_lo);
+    _mm256_storeu_ps(lanes.as_mut_ptr().add(8), acc_hi);
+    let mut dot = 0.0f32;
+    for &x in lanes.iter() {
+        dot += x;
+    }
+    for t in chunks * LANES..n {
+        dot += f16_to_f32(a[t]) * b[t];
+    }
+    dot
+}
+
+/// # Safety
+/// Requires `avx2` and `f16c`.
+#[target_feature(enable = "avx2,f16c")]
+pub unsafe fn dot2x2_f16(a0: &[u16], a1: &[u16], b0: &[f32], b1: &[f32], n: usize) -> [f32; 4] {
+    let chunks = n / LANES;
+    let (p0, p1, q0, q1) = (a0.as_ptr(), a1.as_ptr(), b0.as_ptr(), b1.as_ptr());
+    let mut a00l = _mm256_setzero_ps();
+    let mut a00h = _mm256_setzero_ps();
+    let mut a01l = _mm256_setzero_ps();
+    let mut a01h = _mm256_setzero_ps();
+    let mut a10l = _mm256_setzero_ps();
+    let mut a10h = _mm256_setzero_ps();
+    let mut a11l = _mm256_setzero_ps();
+    let mut a11h = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let o = c * LANES;
+        let x0l = load_f16x8(p0.add(o));
+        let x0h = load_f16x8(p0.add(o + 8));
+        let x1l = load_f16x8(p1.add(o));
+        let x1h = load_f16x8(p1.add(o + 8));
+        let y0l = _mm256_loadu_ps(q0.add(o));
+        let y0h = _mm256_loadu_ps(q0.add(o + 8));
+        let y1l = _mm256_loadu_ps(q1.add(o));
+        let y1h = _mm256_loadu_ps(q1.add(o + 8));
+        a00l = _mm256_add_ps(a00l, _mm256_mul_ps(x0l, y0l));
+        a00h = _mm256_add_ps(a00h, _mm256_mul_ps(x0h, y0h));
+        a01l = _mm256_add_ps(a01l, _mm256_mul_ps(x0l, y1l));
+        a01h = _mm256_add_ps(a01h, _mm256_mul_ps(x0h, y1h));
+        a10l = _mm256_add_ps(a10l, _mm256_mul_ps(x1l, y0l));
+        a10h = _mm256_add_ps(a10h, _mm256_mul_ps(x1h, y0h));
+        a11l = _mm256_add_ps(a11l, _mm256_mul_ps(x1l, y1l));
+        a11h = _mm256_add_ps(a11h, _mm256_mul_ps(x1h, y1h));
+    }
+    let mut out = [0.0f32; 4];
+    let mut lanes = [0.0f32; LANES];
+    for (slot, (lo, hi)) in out
+        .iter_mut()
+        .zip([(a00l, a00h), (a01l, a01h), (a10l, a10h), (a11l, a11h)])
+    {
+        _mm256_storeu_ps(lanes.as_mut_ptr(), lo);
+        _mm256_storeu_ps(lanes.as_mut_ptr().add(8), hi);
+        let mut dot = 0.0f32;
+        for &x in lanes.iter() {
+            dot += x;
+        }
+        *slot = dot;
+    }
+    for t in chunks * LANES..n {
+        let u0 = f16_to_f32(a0[t]);
+        let u1 = f16_to_f32(a1[t]);
+        out[0] += u0 * b0[t];
+        out[1] += u0 * b1[t];
+        out[2] += u1 * b0[t];
+        out[3] += u1 * b1[t];
+    }
+    out
+}

@@ -1,0 +1,172 @@
+//! AVX-512F backend: the scalar contract's 16 accumulator lanes map onto a
+//! **single** `zmm` register per dot product, updated with an unfused
+//! `vmulps` + `vaddps` pair (never `vfmadd512`: the contract rounds each
+//! product before adding).  The reduction stores the register back to a
+//! 16-lane array and sums it serially in lane order — *not*
+//! `_mm512_reduce_add_ps`, whose tree order would change the rounding — so
+//! every result is bit-identical to [`super::scalar`].
+//!
+//! All functions are `unsafe`: the caller must have verified `avx512f`
+//! support (see [`super::KernelBackend::is_supported`]) — the dispatcher in
+//! [`super`] is the only caller.
+
+#![cfg(target_arch = "x86_64")]
+
+use std::arch::x86_64::*;
+
+use super::scalar::LANES;
+use crate::core::compress::f16_to_f32;
+
+/// # Safety
+/// Requires `avx512f` (checked by the dispatcher before the call).
+#[target_feature(enable = "avx512f")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc = _mm512_setzero_ps();
+    for c in 0..chunks {
+        let o = c * LANES;
+        let x = _mm512_loadu_ps(ap.add(o));
+        let y = _mm512_loadu_ps(bp.add(o));
+        acc = _mm512_add_ps(acc, _mm512_mul_ps(x, y));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm512_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut dot = 0.0f32;
+    for &x in lanes.iter() {
+        dot += x;
+    }
+    for t in chunks * LANES..n {
+        dot += a[t] * b[t];
+    }
+    dot
+}
+
+/// # Safety
+/// Requires `avx512f`.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn row_sq_norm(row: &[f32]) -> f32 {
+    dot(row, row)
+}
+
+/// # Safety
+/// Requires `avx512f`.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn dot2x2(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32], n: usize) -> [f32; 4] {
+    let chunks = n / LANES;
+    let (p0, p1, q0, q1) = (a0.as_ptr(), a1.as_ptr(), b0.as_ptr(), b1.as_ptr());
+    let mut acc00 = _mm512_setzero_ps();
+    let mut acc01 = _mm512_setzero_ps();
+    let mut acc10 = _mm512_setzero_ps();
+    let mut acc11 = _mm512_setzero_ps();
+    for c in 0..chunks {
+        let o = c * LANES;
+        let x0 = _mm512_loadu_ps(p0.add(o));
+        let x1 = _mm512_loadu_ps(p1.add(o));
+        let y0 = _mm512_loadu_ps(q0.add(o));
+        let y1 = _mm512_loadu_ps(q1.add(o));
+        acc00 = _mm512_add_ps(acc00, _mm512_mul_ps(x0, y0));
+        acc01 = _mm512_add_ps(acc01, _mm512_mul_ps(x0, y1));
+        acc10 = _mm512_add_ps(acc10, _mm512_mul_ps(x1, y0));
+        acc11 = _mm512_add_ps(acc11, _mm512_mul_ps(x1, y1));
+    }
+    let mut out = [0.0f32; 4];
+    let mut lanes = [0.0f32; LANES];
+    for (slot, acc) in out.iter_mut().zip([acc00, acc01, acc10, acc11]) {
+        _mm512_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut dot = 0.0f32;
+        for &x in lanes.iter() {
+            dot += x;
+        }
+        *slot = dot;
+    }
+    for t in chunks * LANES..n {
+        out[0] += a0[t] * b0[t];
+        out[1] += a0[t] * b1[t];
+        out[2] += a1[t] * b0[t];
+        out[3] += a1[t] * b1[t];
+    }
+    out
+}
+
+/// Widen 16 consecutive f16 values at `p` to one `zmm` of f32 (`vcvtph2ps`
+/// is the exact IEEE widening, bitwise-equal to the software
+/// [`f16_to_f32`]).
+///
+/// # Safety
+/// Requires `avx512f`; `p` must be readable for 32 bytes.
+#[target_feature(enable = "avx512f")]
+unsafe fn load_f16x16(p: *const u16) -> __m512 {
+    _mm512_cvtph_ps(_mm256_loadu_si256(p as *const __m256i))
+}
+
+/// # Safety
+/// Requires `avx512f`.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn dot_f16(a: &[u16], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc = _mm512_setzero_ps();
+    for c in 0..chunks {
+        let o = c * LANES;
+        let x = load_f16x16(ap.add(o));
+        let y = _mm512_loadu_ps(bp.add(o));
+        acc = _mm512_add_ps(acc, _mm512_mul_ps(x, y));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm512_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut dot = 0.0f32;
+    for &x in lanes.iter() {
+        dot += x;
+    }
+    for t in chunks * LANES..n {
+        dot += f16_to_f32(a[t]) * b[t];
+    }
+    dot
+}
+
+/// # Safety
+/// Requires `avx512f`.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn dot2x2_f16(a0: &[u16], a1: &[u16], b0: &[f32], b1: &[f32], n: usize) -> [f32; 4] {
+    let chunks = n / LANES;
+    let (p0, p1, q0, q1) = (a0.as_ptr(), a1.as_ptr(), b0.as_ptr(), b1.as_ptr());
+    let mut acc00 = _mm512_setzero_ps();
+    let mut acc01 = _mm512_setzero_ps();
+    let mut acc10 = _mm512_setzero_ps();
+    let mut acc11 = _mm512_setzero_ps();
+    for c in 0..chunks {
+        let o = c * LANES;
+        let x0 = load_f16x16(p0.add(o));
+        let x1 = load_f16x16(p1.add(o));
+        let y0 = _mm512_loadu_ps(q0.add(o));
+        let y1 = _mm512_loadu_ps(q1.add(o));
+        acc00 = _mm512_add_ps(acc00, _mm512_mul_ps(x0, y0));
+        acc01 = _mm512_add_ps(acc01, _mm512_mul_ps(x0, y1));
+        acc10 = _mm512_add_ps(acc10, _mm512_mul_ps(x1, y0));
+        acc11 = _mm512_add_ps(acc11, _mm512_mul_ps(x1, y1));
+    }
+    let mut out = [0.0f32; 4];
+    let mut lanes = [0.0f32; LANES];
+    for (slot, acc) in out.iter_mut().zip([acc00, acc01, acc10, acc11]) {
+        _mm512_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut dot = 0.0f32;
+        for &x in lanes.iter() {
+            dot += x;
+        }
+        *slot = dot;
+    }
+    for t in chunks * LANES..n {
+        let u0 = f16_to_f32(a0[t]);
+        let u1 = f16_to_f32(a1[t]);
+        out[0] += u0 * b0[t];
+        out[1] += u0 * b1[t];
+        out[2] += u1 * b0[t];
+        out[3] += u1 * b1[t];
+    }
+    out
+}

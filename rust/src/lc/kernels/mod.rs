@@ -1,0 +1,403 @@
+//! Explicit SIMD microkernels for the Phase-1 primitives with one-time
+//! runtime dispatch.
+//!
+//! Three backends implement the same five primitives — `dot`, `dot2x2`,
+//! `row_sq_norm`, and their f16-residency variants `dot_f16` /
+//! `dot2x2_f16`:
+//!
+//! | backend  | registers | requires (runtime)   | f16 decode       |
+//! |----------|-----------|----------------------|------------------|
+//! | `scalar` | —         | always available     | software widen   |
+//! | `avx2`   | 2 × ymm   | `avx2` + `f16c`      | `vcvtph2ps` xmm  |
+//! | `avx512` | 1 × zmm   | `avx512f`            | `vcvtph2ps` ymm  |
+//!
+//! **Bit-identity contract.**  [`scalar`] defines the arithmetic: 16
+//! independent f32 accumulator lanes, an unfused multiply-then-add per lane
+//! (each product rounds before the add — which is why the SIMD backends use
+//! `mul`+`add` instead of FMA), a serial in-order reduction over lanes
+//! 0..16, then a serial scalar tail.  The AVX2 backend splits the 16 lanes
+//! across two `ymm` registers (lanes 0–7 / 8–15); AVX-512 holds all 16 in
+//! one `zmm`.  Both store the accumulator back to memory and reduce it in
+//! lane order, so **every backend returns bit-identical results on every
+//! input** — asserted for odd lengths, unaligned slices and denormal-heavy
+//! inputs by the property tests below and by
+//! `rust/tests/batch_equivalence.rs` across whole plans.
+//!
+//! **Selection.**  [`active`] resolves once per process (cached in a
+//! [`OnceLock`]): the `EMDPAR_KERNEL=scalar|avx2|avx512` environment
+//! variable forces a backend (panicking if the host cannot run it — a
+//! forced-but-ignored override would silently test the wrong code), else
+//! the best detected backend wins (`avx512` > `avx2` > `scalar`).  Hot
+//! paths resolve the backend once per operation and call the `*_with`
+//! entry points; `PlanParams::kernel` / `EngineBuilder::kernel` override
+//! per engine without touching the process-wide default.
+
+use std::sync::OnceLock;
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx512;
+
+/// A kernel backend identity.  `Scalar` is always available; the SIMD
+/// backends are compiled on `x86_64` and gated at runtime by
+/// [`KernelBackend::is_supported`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelBackend {
+    /// Portable reference (the bit-identity anchor).
+    Scalar,
+    /// AVX2 + F16C, 8-wide `ymm` (two registers per 16-lane accumulator).
+    Avx2,
+    /// AVX-512F, 16-wide `zmm` (one register per accumulator).
+    Avx512,
+}
+
+impl KernelBackend {
+    /// All backends, best first (detection order).
+    pub const ALL: [KernelBackend; 3] =
+        [KernelBackend::Avx512, KernelBackend::Avx2, KernelBackend::Scalar];
+
+    /// The lowercase name used by `EMDPAR_KERNEL` and the config knob.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Avx2 => "avx2",
+            KernelBackend::Avx512 => "avx512",
+        }
+    }
+
+    /// Parse a backend name (the inverse of [`KernelBackend::name`]).
+    pub fn parse(s: &str) -> Option<KernelBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelBackend::Scalar),
+            "avx2" => Some(KernelBackend::Avx2),
+            "avx512" | "avx512f" => Some(KernelBackend::Avx512),
+            _ => None,
+        }
+    }
+
+    /// Can this host execute the backend?  (Runtime CPUID check; `Scalar`
+    /// is always supported, and on non-x86_64 targets it is the only one.)
+    pub fn is_supported(self) -> bool {
+        match self {
+            KernelBackend::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelBackend::Avx2 => {
+                std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("f16c")
+            }
+            #[cfg(target_arch = "x86_64")]
+            KernelBackend::Avx512 => std::arch::is_x86_feature_detected!("avx512f"),
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => false,
+        }
+    }
+}
+
+impl std::fmt::Display for KernelBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Every backend this host can execute, best first (always ends with
+/// `Scalar`).  The per-backend equivalence tests and the roofline bench
+/// iterate this.
+pub fn supported_backends() -> Vec<KernelBackend> {
+    KernelBackend::ALL.iter().copied().filter(|b| b.is_supported()).collect()
+}
+
+/// The best backend the host supports (ignores the env override).
+pub fn detected() -> KernelBackend {
+    static DETECTED: OnceLock<KernelBackend> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        KernelBackend::ALL
+            .iter()
+            .copied()
+            .find(|b| b.is_supported())
+            .unwrap_or(KernelBackend::Scalar)
+    })
+}
+
+/// The process-wide active backend: `EMDPAR_KERNEL` when set (panics on an
+/// unknown or unsupported value — a forced backend must never be silently
+/// ignored), the best detected backend otherwise.  Resolved once and
+/// cached; per-engine overrides go through `PlanParams::kernel` instead.
+pub fn active() -> KernelBackend {
+    static ACTIVE: OnceLock<KernelBackend> = OnceLock::new();
+    *ACTIVE.get_or_init(|| match std::env::var("EMDPAR_KERNEL") {
+        Ok(raw) if !raw.is_empty() => {
+            let kb = KernelBackend::parse(&raw).unwrap_or_else(|| {
+                panic!("EMDPAR_KERNEL={raw:?}: expected scalar | avx2 | avx512")
+            });
+            assert!(
+                kb.is_supported(),
+                "EMDPAR_KERNEL={} forced, but this host does not support it",
+                kb.name()
+            );
+            kb
+        }
+        _ => detected(),
+    })
+}
+
+/// Lane-chunked dot product on the chosen backend (bit-identical across
+/// backends; see the module docs for the contract).
+#[inline]
+pub fn dot_with(kb: KernelBackend, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert!(kb.is_supported(), "backend {kb} not supported on this host");
+    match kb {
+        KernelBackend::Scalar => scalar::dot(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: is_supported() verified the CPU feature (debug-asserted
+        // here; release callers resolve backends through active()/config
+        // validation, which only hand out supported ones).
+        KernelBackend::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        KernelBackend::Avx512 => unsafe { avx512::dot(a, b) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::dot(a, b),
+    }
+}
+
+/// 2×2 tiled dot products on the chosen backend:
+/// `[a0·b0, a0·b1, a1·b0, a1·b1]`.
+#[inline]
+pub fn dot2x2_with(
+    kb: KernelBackend,
+    a0: &[f32],
+    a1: &[f32],
+    b0: &[f32],
+    b1: &[f32],
+    n: usize,
+) -> [f32; 4] {
+    debug_assert!(kb.is_supported(), "backend {kb} not supported on this host");
+    match kb {
+        KernelBackend::Scalar => scalar::dot2x2(a0, a1, b0, b1, n),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_with.
+        KernelBackend::Avx2 => unsafe { avx2::dot2x2(a0, a1, b0, b1, n) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_with.
+        KernelBackend::Avx512 => unsafe { avx512::dot2x2(a0, a1, b0, b1, n) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::dot2x2(a0, a1, b0, b1, n),
+    }
+}
+
+/// Row squared norm (`dot(row, row)`) on the chosen backend.
+#[inline]
+pub fn row_sq_norm_with(kb: KernelBackend, row: &[f32]) -> f32 {
+    debug_assert!(kb.is_supported(), "backend {kb} not supported on this host");
+    match kb {
+        KernelBackend::Scalar => scalar::row_sq_norm(row),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_with.
+        KernelBackend::Avx2 => unsafe { avx2::row_sq_norm(row) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_with.
+        KernelBackend::Avx512 => unsafe { avx512::row_sq_norm(row) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::row_sq_norm(row),
+    }
+}
+
+/// Mixed-precision dot against an f16-encoded row on the chosen backend.
+#[inline]
+pub fn dot_f16_with(kb: KernelBackend, a: &[u16], b: &[f32]) -> f32 {
+    debug_assert!(kb.is_supported(), "backend {kb} not supported on this host");
+    match kb {
+        KernelBackend::Scalar => scalar::dot_f16(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_with (Avx2 support implies f16c).
+        KernelBackend::Avx2 => unsafe { avx2::dot_f16(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_with.
+        KernelBackend::Avx512 => unsafe { avx512::dot_f16(a, b) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::dot_f16(a, b),
+    }
+}
+
+/// 2×2 tile over two f16-encoded rows on the chosen backend.
+#[inline]
+pub fn dot2x2_f16_with(
+    kb: KernelBackend,
+    a0: &[u16],
+    a1: &[u16],
+    b0: &[f32],
+    b1: &[f32],
+    n: usize,
+) -> [f32; 4] {
+    debug_assert!(kb.is_supported(), "backend {kb} not supported on this host");
+    match kb {
+        KernelBackend::Scalar => scalar::dot2x2_f16(a0, a1, b0, b1, n),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_with.
+        KernelBackend::Avx2 => unsafe { avx2::dot2x2_f16(a0, a1, b0, b1, n) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_with.
+        KernelBackend::Avx512 => unsafe { avx512::dot2x2_f16(a0, a1, b0, b1, n) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::dot2x2_f16(a0, a1, b0, b1, n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::compress::f32_to_f16;
+    use crate::util::rng::Rng;
+
+    /// Lengths straddling the 16-lane boundary, plus long tails.
+    const SIZES: [usize; 18] = [0, 1, 2, 3, 5, 7, 8, 15, 16, 17, 31, 32, 33, 63, 64, 65, 100, 129];
+
+    fn fill(rng: &mut Rng, n: usize, denormal: bool) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                let x = rng.normal() as f32;
+                // denormal-heavy: scale most values below f32::MIN_POSITIVE
+                // so the SIMD lanes chew on subnormals (no FTZ/DAZ is set,
+                // so hardware and scalar arithmetic must still agree)
+                if denormal {
+                    x * 1.0e-41
+                } else {
+                    x
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_backends_dot_bit_equal_to_scalar() {
+        let mut rng = Rng::new(11);
+        for &n in SIZES.iter() {
+            for denormal in [false, true] {
+                // over-allocate so unaligned sub-slices stay in bounds
+                let a = fill(&mut rng, n + 3, denormal);
+                let b = fill(&mut rng, n + 3, denormal);
+                for off in [0usize, 1, 3] {
+                    let (aa, bb) = (&a[off..off + n], &b[off..off + n]);
+                    let want = scalar::dot(aa, bb);
+                    for kb in supported_backends() {
+                        let got = dot_with(kb, aa, bb);
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "{kb} dot n={n} off={off} denormal={denormal}: {got} != {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_backends_dot2x2_bit_equal_to_scalar() {
+        let mut rng = Rng::new(12);
+        for &n in SIZES.iter() {
+            for denormal in [false, true] {
+                let rows: Vec<Vec<f32>> =
+                    (0..4).map(|_| fill(&mut rng, n + 3, denormal)).collect();
+                for off in [0usize, 1, 3] {
+                    let s: Vec<&[f32]> = rows.iter().map(|r| &r[off..off + n]).collect();
+                    let want = scalar::dot2x2(s[0], s[1], s[2], s[3], n);
+                    for kb in supported_backends() {
+                        let got = dot2x2_with(kb, s[0], s[1], s[2], s[3], n);
+                        for (g, w) in got.iter().zip(&want) {
+                            assert_eq!(
+                                g.to_bits(),
+                                w.to_bits(),
+                                "{kb} dot2x2 n={n} off={off} denormal={denormal}"
+                            );
+                        }
+                        // and each pair must equal the plain dot of that pair
+                        assert_eq!(got[0].to_bits(), dot_with(kb, s[0], s[2]).to_bits());
+                        assert_eq!(got[1].to_bits(), dot_with(kb, s[0], s[3]).to_bits());
+                        assert_eq!(got[2].to_bits(), dot_with(kb, s[1], s[2]).to_bits());
+                        assert_eq!(got[3].to_bits(), dot_with(kb, s[1], s[3]).to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_backends_row_sq_norm_bit_equal_to_scalar() {
+        let mut rng = Rng::new(13);
+        for &n in SIZES.iter() {
+            for denormal in [false, true] {
+                let row = fill(&mut rng, n + 1, denormal);
+                for off in [0usize, 1] {
+                    let r = &row[off..off + n];
+                    let want = scalar::row_sq_norm(r);
+                    for kb in supported_backends() {
+                        let got = row_sq_norm_with(kb, r);
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "{kb} row_sq_norm n={n} off={off} denormal={denormal}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_backends_f16_variants_bit_equal_to_scalar() {
+        let mut rng = Rng::new(14);
+        for &n in SIZES.iter() {
+            let enc: Vec<Vec<u16>> = (0..2)
+                .map(|_| {
+                    (0..n + 3).map(|_| f32_to_f16(rng.normal() as f32)).collect()
+                })
+                .collect();
+            let cols: Vec<Vec<f32>> = (0..2).map(|_| fill(&mut rng, n + 3, false)).collect();
+            for off in [0usize, 1, 3] {
+                let a0 = &enc[0][off..off + n];
+                let a1 = &enc[1][off..off + n];
+                let b0 = &cols[0][off..off + n];
+                let b1 = &cols[1][off..off + n];
+                let want_dot = scalar::dot_f16(a0, b0);
+                let want_tile = scalar::dot2x2_f16(a0, a1, b0, b1, n);
+                for kb in supported_backends() {
+                    assert_eq!(
+                        dot_f16_with(kb, a0, b0).to_bits(),
+                        want_dot.to_bits(),
+                        "{kb} dot_f16 n={n} off={off}"
+                    );
+                    let got = dot2x2_f16_with(kb, a0, a1, b0, b1, n);
+                    for (g, w) in got.iter().zip(&want_tile) {
+                        assert_eq!(g.to_bits(), w.to_bits(), "{kb} dot2x2_f16 n={n} off={off}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn detection_is_sane() {
+        assert!(KernelBackend::Scalar.is_supported());
+        let det = detected();
+        assert!(det.is_supported());
+        let sup = supported_backends();
+        assert_eq!(sup.last(), Some(&KernelBackend::Scalar));
+        assert!(sup.contains(&det));
+        // active() resolves without panicking unless EMDPAR_KERNEL is bad,
+        // in which case the whole suite *should* abort
+        assert!(active().is_supported());
+    }
+
+    #[test]
+    fn backend_names_roundtrip() {
+        for kb in KernelBackend::ALL {
+            assert_eq!(KernelBackend::parse(kb.name()), Some(kb));
+        }
+        assert_eq!(KernelBackend::parse("AVX2"), Some(KernelBackend::Avx2));
+        assert_eq!(KernelBackend::parse("neon"), None);
+    }
+}

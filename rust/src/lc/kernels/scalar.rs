@@ -1,0 +1,162 @@
+//! Scalar reference backend: the bit-identity anchor every SIMD variant is
+//! measured against.
+//!
+//! The arithmetic contract (see the module docs in [`super`]) is defined by
+//! this file: 16 independent f32 accumulator lanes, an *unfused*
+//! multiply-then-add per lane (each product is rounded before the add — the
+//! SIMD backends must use `mul` + `add`, never `fmadd`), an in-order serial
+//! reduction over lanes 0..16, then a serial scalar tail.  These loops are
+//! written so LLVM can autovectorize them on any target; the explicit
+//! backends exist to guarantee the width regardless of what the
+//! autovectorizer decides.
+
+use crate::core::compress::f16_to_f32;
+
+pub(super) const LANES: usize = 16;
+
+/// Lane-chunked dot product — the reference [`crate::lc::plan::dot_f32`]
+/// delegates here.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let ac = &a[c * LANES..c * LANES + LANES];
+        let bc = &b[c * LANES..c * LANES + LANES];
+        for l in 0..LANES {
+            acc[l] += ac[l] * bc[l];
+        }
+    }
+    let mut dot = 0.0f32;
+    for &x in acc.iter() {
+        dot += x;
+    }
+    for t in chunks * LANES..n {
+        dot += a[t] * b[t];
+    }
+    dot
+}
+
+/// Lane-chunked row squared norm: exactly `dot(row, row)`.  This is the
+/// arithmetic [`crate::core::Embeddings::row_sq_norms`] uses, so norm tables
+/// built anywhere in the crate are bit-equal to any backend's output.
+#[inline]
+pub fn row_sq_norm(row: &[f32]) -> f32 {
+    dot(row, row)
+}
+
+/// 2×2 register-tiled dot products: `out = [a0·b0, a0·b1, a1·b0, a1·b1]`.
+///
+/// Each operand is loaded once per tile instead of once per dot product
+/// (0.5 loads per multiply-add versus [`dot`]'s 2), and the four lane
+/// reductions are independent, so the CPU overlaps them.  Per pair, the
+/// arithmetic — lane-chunked partial sums, reduction order, scalar tail —
+/// is *exactly* [`dot`]'s, which is what makes the batched kernel
+/// bit-identical to the single-query kernel.
+#[inline]
+pub fn dot2x2(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32], n: usize) -> [f32; 4] {
+    let chunks = n / LANES;
+    let mut acc00 = [0.0f32; LANES];
+    let mut acc01 = [0.0f32; LANES];
+    let mut acc10 = [0.0f32; LANES];
+    let mut acc11 = [0.0f32; LANES];
+    for c in 0..chunks {
+        let o = c * LANES;
+        let x0 = &a0[o..o + LANES];
+        let x1 = &a1[o..o + LANES];
+        let y0 = &b0[o..o + LANES];
+        let y1 = &b1[o..o + LANES];
+        for l in 0..LANES {
+            acc00[l] += x0[l] * y0[l];
+            acc01[l] += x0[l] * y1[l];
+            acc10[l] += x1[l] * y0[l];
+            acc11[l] += x1[l] * y1[l];
+        }
+    }
+    let mut out = [0.0f32; 4];
+    for (slot, acc) in out.iter_mut().zip([&acc00, &acc01, &acc10, &acc11]) {
+        let mut dot = 0.0f32;
+        for &x in acc.iter() {
+            dot += x;
+        }
+        *slot = dot;
+    }
+    for t in chunks * LANES..n {
+        out[0] += a0[t] * b0[t];
+        out[1] += a0[t] * b1[t];
+        out[2] += a1[t] * b0[t];
+        out[3] += a1[t] * b1[t];
+    }
+    out
+}
+
+/// Mixed-precision dot product against an f16-encoded row (the compressed
+/// stage-1 tier): each u16 is widened to f32 (an exact conversion — every
+/// f16 value is representable) and then fed through the same lane-chunked
+/// accumulation as [`dot`].  Bit-identical to decoding the whole row first
+/// and calling `dot`.
+#[inline]
+pub fn dot_f16(a: &[u16], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let ac = &a[c * LANES..c * LANES + LANES];
+        let bc = &b[c * LANES..c * LANES + LANES];
+        for l in 0..LANES {
+            acc[l] += f16_to_f32(ac[l]) * bc[l];
+        }
+    }
+    let mut dot = 0.0f32;
+    for &x in acc.iter() {
+        dot += x;
+    }
+    for t in chunks * LANES..n {
+        dot += f16_to_f32(a[t]) * b[t];
+    }
+    dot
+}
+
+/// 2×2 tile over two f16-encoded vocabulary rows and two f32 query columns;
+/// per pair the arithmetic is exactly [`dot_f16`]'s.
+#[inline]
+pub fn dot2x2_f16(a0: &[u16], a1: &[u16], b0: &[f32], b1: &[f32], n: usize) -> [f32; 4] {
+    let chunks = n / LANES;
+    let mut acc00 = [0.0f32; LANES];
+    let mut acc01 = [0.0f32; LANES];
+    let mut acc10 = [0.0f32; LANES];
+    let mut acc11 = [0.0f32; LANES];
+    for c in 0..chunks {
+        let o = c * LANES;
+        let x0 = &a0[o..o + LANES];
+        let x1 = &a1[o..o + LANES];
+        let y0 = &b0[o..o + LANES];
+        let y1 = &b1[o..o + LANES];
+        for l in 0..LANES {
+            let u0 = f16_to_f32(x0[l]);
+            let u1 = f16_to_f32(x1[l]);
+            acc00[l] += u0 * y0[l];
+            acc01[l] += u0 * y1[l];
+            acc10[l] += u1 * y0[l];
+            acc11[l] += u1 * y1[l];
+        }
+    }
+    let mut out = [0.0f32; 4];
+    for (slot, acc) in out.iter_mut().zip([&acc00, &acc01, &acc10, &acc11]) {
+        let mut dot = 0.0f32;
+        for &x in acc.iter() {
+            dot += x;
+        }
+        *slot = dot;
+    }
+    for t in chunks * LANES..n {
+        let u0 = f16_to_f32(a0[t]);
+        let u1 = f16_to_f32(a1[t]);
+        out[0] += u0 * b0[t];
+        out[1] += u0 * b1[t];
+        out[2] += u1 * b0[t];
+        out[3] += u1 * b1[t];
+    }
+    out
+}

@@ -10,14 +10,17 @@
 
 pub mod batch_plan;
 pub mod engine;
+pub mod kernels;
 pub mod plan;
 pub mod transfers;
 
 pub use crate::core::Method;
 pub use batch_plan::{BatchPlanner, PlanScratch, DEFAULT_BATCH_BLOCK};
 pub use engine::{EngineParams, LcBatch, LcEngine};
+pub use kernels::KernelBackend;
 pub use plan::{plan_query, snapped_distance, PlanParams, QueryPlan};
 pub use transfers::{
-    act_direction_a, act_direction_a_into, omr_direction_a, omr_direction_a_into,
-    rwmd_direction_a, rwmd_direction_a_into, rwmd_direction_b, rwmd_direction_b_into,
+    act_direction_a, act_direction_a_into, direction_a_block_into, direction_b_block_into,
+    omr_direction_a, omr_direction_a_into, rwmd_direction_a, rwmd_direction_a_into,
+    rwmd_direction_b, rwmd_direction_b_into,
 };

@@ -13,6 +13,7 @@
 
 use crate::approx::act::row_topk;
 use crate::core::{Embeddings, Histogram, Metric};
+use crate::lc::kernels::{self, KernelBackend};
 use crate::util::threadpool::{parallel_for, SyncSlice};
 
 /// Per-query preprocessing product.
@@ -42,32 +43,22 @@ pub struct PlanParams {
     /// Keep the full D matrix (needed by direction-B RWMD; costs v*h f32).
     pub keep_d: bool,
     pub threads: usize,
+    /// Forced kernel backend; `None` uses the process-wide selection
+    /// ([`crate::lc::kernels::active`]: best detected unless `EMDPAR_KERNEL`
+    /// overrides it).  Every backend is bit-identical, so this knob only
+    /// changes speed, never results.
+    pub kernel: Option<KernelBackend>,
 }
 
-/// Vectorizable dot product: 16 independent accumulator lanes let LLVM emit
-/// packed FMAs (a plain `zip().map().sum()` is a serial f32 reduction the
-/// compiler must not reorder).
+/// The crate's canonical dot-product arithmetic — now defined by the scalar
+/// kernel backend ([`crate::lc::kernels::scalar::dot`]): 16 independent
+/// accumulator lanes, unfused multiply-then-add, in-order lane reduction,
+/// serial tail.  The SIMD backends reproduce this bit-for-bit; hot paths
+/// dispatch through [`crate::lc::kernels::dot_with`] instead of calling this
+/// directly.
 #[inline]
 pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
-    const LANES: usize = 16;
-    let n = a.len().min(b.len());
-    let chunks = n / LANES;
-    let mut acc = [0.0f32; LANES];
-    for c in 0..chunks {
-        let ac = &a[c * LANES..c * LANES + LANES];
-        let bc = &b[c * LANES..c * LANES + LANES];
-        for l in 0..LANES {
-            acc[l] += ac[l] * bc[l];
-        }
-    }
-    let mut dot = 0.0f32;
-    for l in 0..LANES {
-        dot += acc[l];
-    }
-    for t in chunks * LANES..n {
-        dot += a[t] * b[t];
-    }
-    dot
+    kernels::scalar::dot(a, b)
 }
 
 /// The Gram-expansion form of the snapped distance: `d²(i,j) = |v|² −
@@ -143,6 +134,7 @@ pub fn plan_query(
     // re-summing the gathered rows: same values, same order).
     let q_norms: Vec<f32> = qn.indices().iter().map(|&i| vn[i as usize]).collect();
     let use_expansion = params.metric == Metric::L2;
+    let kb = params.kernel.unwrap_or_else(kernels::active);
 
     {
         let zs = SyncSlice::new(&mut z);
@@ -168,7 +160,7 @@ pub fn plan_query(
                     let vni = vn[i];
                     for j in 0..h {
                         let qj = q_coords_ref.row(j);
-                        row[j] = l2_snap(vni, dot_f32(vi, qj), q_norms_ref[j]);
+                        row[j] = l2_snap(vni, kernels::dot_with(kb, vi, qj), q_norms_ref[j]);
                     }
                     // the query bin that *is* this vocabulary entry must be
                     // exactly 0 regardless of rounding (indices are sorted)
@@ -229,7 +221,7 @@ mod tests {
             &vocab,
             &vocab.row_sq_norms(),
             &q,
-            PlanParams { k: 4, metric: Metric::L2, keep_d: true, threads: 2 },
+            PlanParams { k: 4, metric: Metric::L2, keep_d: true, threads: 2, kernel: None },
         );
         let d = plan.d.as_ref().unwrap();
         for i in 0..40 {
@@ -250,7 +242,7 @@ mod tests {
             &vocab,
             &vocab.row_sq_norms(),
             &q,
-            PlanParams { k: 1, metric: Metric::L2, keep_d: false, threads: 1 },
+            PlanParams { k: 1, metric: Metric::L2, keep_d: false, threads: 1, kernel: None },
         );
         // every vocabulary coordinate that is in the query support must have
         // top-1 distance zero (it overlaps itself)
@@ -269,13 +261,13 @@ mod tests {
             &vocab,
             &vn,
             &q,
-            PlanParams { k: 3, metric: Metric::L2, keep_d: true, threads: 1 },
+            PlanParams { k: 3, metric: Metric::L2, keep_d: true, threads: 1, kernel: None },
         );
         let p8 = plan_query(
             &vocab,
             &vn,
             &q,
-            PlanParams { k: 3, metric: Metric::L2, keep_d: true, threads: 8 },
+            PlanParams { k: 3, metric: Metric::L2, keep_d: true, threads: 8, kernel: None },
         );
         assert_eq!(p1.z, p8.z);
         assert_eq!(p1.s, p8.s);
@@ -289,7 +281,7 @@ mod tests {
             &vocab,
             &vocab.row_sq_norms(),
             &q,
-            PlanParams { k: 10, metric: Metric::L2, keep_d: false, threads: 1 },
+            PlanParams { k: 10, metric: Metric::L2, keep_d: false, threads: 1, kernel: None },
         );
         assert_eq!(plan.k, 3);
     }

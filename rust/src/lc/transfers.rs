@@ -6,11 +6,126 @@
 //! arrays directly — no dense scatter on the native path (the PJRT artifact
 //! path densifies into fixed tiles instead; both produce the same numbers,
 //! which the integration tests assert).
+//!
+//! Two sweep shapes share one set of per-row cost helpers:
+//!
+//! * **per-plan** (`*_direction_a_into` / `rwmd_direction_b_into`): one
+//!   query plan against every database row — the single-query and all-pairs
+//!   paths.
+//! * **per-block** ([`direction_a_block_into`] / [`direction_b_block_into`]):
+//!   a whole Phase-1 batch block of plans in **one** pass over the database
+//!   — each CSR row is fetched from memory once for all plans in the block
+//!   instead of once per plan, the Phase-2 mirror of the batched Phase-1
+//!   vocabulary streaming.  Because both shapes call the same row helpers,
+//!   block outputs are bit-identical to per-plan outputs by construction
+//!   (asserted by `rust/tests/batch_equivalence.rs`).
 
-use crate::core::CsrMatrix;
+use crate::core::{CsrMatrix, Method};
 use crate::util::threadpool::{parallel_for, SyncSlice};
 
 use super::plan::QueryPlan;
+
+/// ACT-(k-1) transfer cost of one database row into the query
+/// (eq. (6)-(9), CSR form).  f64 accumulation, cast once at the write site.
+#[inline]
+fn act_row_cost(plan: &QueryPlan, idx: &[u32], w: &[f32]) -> f64 {
+    let k = plan.k;
+    let mut t = 0.0f64;
+    for (&i, &xw) in idx.iter().zip(w) {
+        let base = i as usize * k;
+        let zrow = &plan.z[base..base + k];
+        let wrow = &plan.w[base..base + k];
+        let mut pi = xw as f64;
+        for l in 0..k - 1 {
+            let r = pi.min(wrow[l] as f64);
+            pi -= r;
+            t += r * zrow[l] as f64;
+        }
+        t += pi * zrow[k - 1] as f64;
+    }
+    t
+}
+
+/// LC-RWMD cost of one database row: every coordinate's whole weight ships
+/// at the nearest-query-coordinate distance (k = 1 special case).
+#[inline]
+fn rwmd_row_cost(plan: &QueryPlan, idx: &[u32], w: &[f32]) -> f64 {
+    let k = plan.k;
+    let mut t = 0.0f64;
+    for (&i, &xw) in idx.iter().zip(w) {
+        t += xw as f64 * plan.z[i as usize * k] as f64;
+    }
+    t
+}
+
+/// LC-OMR cost of one database row (Algorithm 1): free transfer only
+/// between *overlapping* coordinates (z1 == 0), capacity `min(x, w1)`;
+/// remainder to the second closest.  Requires `plan.k >= 2`.
+#[inline]
+fn omr_row_cost(plan: &QueryPlan, idx: &[u32], w: &[f32]) -> f64 {
+    let k = plan.k;
+    let mut t = 0.0f64;
+    for (&i, &xw) in idx.iter().zip(w) {
+        let base = i as usize * k;
+        let z1 = plan.z[base];
+        if z1 == 0.0 {
+            let cap = plan.w[base] as f64;
+            let rest = (xw as f64 - cap).max(0.0);
+            t += rest * plan.z[base + 1] as f64;
+        } else {
+            t += xw as f64 * z1 as f64;
+        }
+    }
+    t
+}
+
+/// Direction-B RWMD cost of one database row: `Σ_j qw_j · min_{i ∈ supp}
+/// D[i, j]` (masked min-plus product).  `d` is the plan's full D matrix and
+/// `r` a caller-owned scratch row of length `plan.h`.
+#[inline]
+fn rwmd_b_row_cost(plan: &QueryPlan, d: &[f32], idx: &[u32], r: &mut [f32]) -> f64 {
+    let h = plan.h;
+    if idx.is_empty() {
+        return 0.0;
+    }
+    r.copy_from_slice(&d[idx[0] as usize * h..(idx[0] as usize + 1) * h]);
+    for &i in &idx[1..] {
+        let drow = &d[i as usize * h..(i as usize + 1) * h];
+        // lane-chunked min: compiles to packed vminps (the
+        // branchy form defeats vectorization on some LLVMs)
+        const LANES: usize = 16;
+        let chunks = h / LANES;
+        for c in 0..chunks {
+            let rs = &mut r[c * LANES..c * LANES + LANES];
+            let ds_ = &drow[c * LANES..c * LANES + LANES];
+            for l in 0..LANES {
+                rs[l] = rs[l].min(ds_[l]);
+            }
+        }
+        for t in chunks * LANES..h {
+            r[t] = r[t].min(drow[t]);
+        }
+    }
+    r.iter().zip(&plan.qw).map(|(&c, &w)| c as f64 * w as f64).sum()
+}
+
+/// Direction-A cost of one row under `method` (the dispatch the engine and
+/// both sweep shapes share): RWMD, OMR (degenerating to RWMD at k = 1) or
+/// ACT for everything else.
+#[inline]
+fn direction_a_row_cost(method: Method, plan: &QueryPlan, idx: &[u32], w: &[f32]) -> f64 {
+    match method {
+        Method::Rwmd => rwmd_row_cost(plan, idx, w),
+        Method::Omr => {
+            if plan.k < 2 {
+                rwmd_row_cost(plan, idx, w)
+            } else {
+                omr_row_cost(plan, idx, w)
+            }
+        }
+        _ => act_row_cost(plan, idx, w),
+    }
+}
 
 /// ACT-(k-1) direction-A bounds written into a caller-owned slice (the
 /// zero-allocation form the batched all-pairs sweep writes matrix rows
@@ -19,26 +134,12 @@ use super::plan::QueryPlan;
 pub fn act_direction_a_into(plan: &QueryPlan, db: &CsrMatrix, threads: usize, out: &mut [f32]) {
     let n = db.nrows();
     assert_eq!(out.len(), n, "output row length mismatch");
-    let k = plan.k;
     let slots = SyncSlice::new(out);
     parallel_for(n, threads, |start, end| {
         for u in start..end {
             let (idx, w) = db.row(u);
-            let mut t = 0.0f64;
-            for (&i, &xw) in idx.iter().zip(w) {
-                let base = i as usize * k;
-                let zrow = &plan.z[base..base + k];
-                let wrow = &plan.w[base..base + k];
-                let mut pi = xw as f64;
-                for l in 0..k - 1 {
-                    let r = pi.min(wrow[l] as f64);
-                    pi -= r;
-                    t += r * zrow[l] as f64;
-                }
-                t += pi * zrow[k - 1] as f64;
-            }
             // SAFETY: row u owned by this chunk.
-            unsafe { slots.write(u, t as f32) };
+            unsafe { slots.write(u, act_row_cost(plan, idx, w) as f32) };
         }
     });
 }
@@ -56,16 +157,11 @@ pub fn act_direction_a(plan: &QueryPlan, db: &CsrMatrix, threads: usize) -> Vec<
 pub fn rwmd_direction_a_into(plan: &QueryPlan, db: &CsrMatrix, threads: usize, out: &mut [f32]) {
     let n = db.nrows();
     assert_eq!(out.len(), n, "output row length mismatch");
-    let k = plan.k;
     let slots = SyncSlice::new(out);
     parallel_for(n, threads, |start, end| {
         for u in start..end {
             let (idx, w) = db.row(u);
-            let mut t = 0.0f64;
-            for (&i, &xw) in idx.iter().zip(w) {
-                t += xw as f64 * plan.z[i as usize * k] as f64;
-            }
-            unsafe { slots.write(u, t as f32) };
+            unsafe { slots.write(u, rwmd_row_cost(plan, idx, w) as f32) };
         }
     });
 }
@@ -84,8 +180,7 @@ pub fn rwmd_direction_a(plan: &QueryPlan, db: &CsrMatrix, threads: usize) -> Vec
 pub fn omr_direction_a_into(plan: &QueryPlan, db: &CsrMatrix, threads: usize, out: &mut [f32]) {
     let n = db.nrows();
     assert_eq!(out.len(), n, "output row length mismatch");
-    let k = plan.k;
-    if k < 2 {
+    if plan.k < 2 {
         rwmd_direction_a_into(plan, db, threads, out);
         return;
     }
@@ -93,19 +188,7 @@ pub fn omr_direction_a_into(plan: &QueryPlan, db: &CsrMatrix, threads: usize, ou
     parallel_for(n, threads, |start, end| {
         for u in start..end {
             let (idx, w) = db.row(u);
-            let mut t = 0.0f64;
-            for (&i, &xw) in idx.iter().zip(w) {
-                let base = i as usize * k;
-                let z1 = plan.z[base];
-                if z1 == 0.0 {
-                    let cap = plan.w[base] as f64;
-                    let rest = (xw as f64 - cap).max(0.0);
-                    t += rest * plan.z[base + 1] as f64;
-                } else {
-                    t += xw as f64 * z1 as f64;
-                }
-            }
-            unsafe { slots.write(u, t as f32) };
+            unsafe { slots.write(u, omr_row_cost(plan, idx, w) as f32) };
         }
     });
 }
@@ -134,30 +217,7 @@ pub fn rwmd_direction_b_into(plan: &QueryPlan, db: &CsrMatrix, threads: usize, o
         let mut r = vec![0.0f32; h];
         for u in start..end {
             let (idx, _) = db.row(u);
-            if idx.is_empty() {
-                unsafe { slots.write(u, 0.0) };
-                continue;
-            }
-            r.copy_from_slice(&d[idx[0] as usize * h..(idx[0] as usize + 1) * h]);
-            for &i in &idx[1..] {
-                let drow = &d[i as usize * h..(i as usize + 1) * h];
-                // lane-chunked min: compiles to packed vminps (the
-                // branchy form defeats vectorization on some LLVMs)
-                const LANES: usize = 16;
-                let chunks = h / LANES;
-                for c in 0..chunks {
-                    let rs = &mut r[c * LANES..c * LANES + LANES];
-                    let ds_ = &drow[c * LANES..c * LANES + LANES];
-                    for l in 0..LANES {
-                        rs[l] = rs[l].min(ds_[l]);
-                    }
-                }
-                for t in chunks * LANES..h {
-                    r[t] = r[t].min(drow[t]);
-                }
-            }
-            let t: f64 = r.iter().zip(&plan.qw).map(|(&c, &w)| c as f64 * w as f64).sum();
-            unsafe { slots.write(u, t as f32) };
+            unsafe { slots.write(u, rwmd_b_row_cost(plan, d, idx, &mut r) as f32) };
         }
     });
 }
@@ -167,6 +227,76 @@ pub fn rwmd_direction_b(plan: &QueryPlan, db: &CsrMatrix, threads: usize) -> Vec
     let mut out = vec![0.0f32; db.nrows()];
     rwmd_direction_b_into(plan, db, threads, &mut out);
     out
+}
+
+/// Direction-A Phase 2 for a whole batch block of plans in **one** pass
+/// over the database: each CSR row is fetched once and scored against every
+/// plan in the block (the per-plan sweep re-streams the database per plan).
+///
+/// `out` is plan-major: `out[p * n + u]` is plan `p`'s cost for row `u`.
+/// Each `(p, u)` value comes from the same row helper as the per-plan
+/// sweeps, so this is bit-identical to `plans.len()` independent
+/// `*_direction_a_into` calls.
+pub fn direction_a_block_into(
+    method: Method,
+    plans: &[QueryPlan],
+    db: &CsrMatrix,
+    threads: usize,
+    out: &mut [f32],
+) {
+    let n = db.nrows();
+    assert_eq!(out.len(), plans.len() * n, "block output size mismatch");
+    if plans.is_empty() {
+        return;
+    }
+    let slots = SyncSlice::new(out);
+    parallel_for(n, threads, |start, end| {
+        for u in start..end {
+            let (idx, w) = db.row(u);
+            for (p, plan) in plans.iter().enumerate() {
+                let t = direction_a_row_cost(method, plan, idx, w);
+                // SAFETY: cell (p, u) is owned by the chunk owning row u.
+                unsafe { slots.write(p * n + u, t as f32) };
+            }
+        }
+    });
+}
+
+/// Direction-B RWMD for a whole batch block of plans in one database pass
+/// (see [`direction_a_block_into`] for the layout and bit-identity
+/// argument).  Every plan must carry its full D matrix (`keep_d: true`).
+pub fn direction_b_block_into(
+    plans: &[QueryPlan],
+    db: &CsrMatrix,
+    threads: usize,
+    out: &mut [f32],
+) {
+    let n = db.nrows();
+    assert_eq!(out.len(), plans.len() * n, "block output size mismatch");
+    if plans.is_empty() {
+        return;
+    }
+    let ds: Vec<&[f32]> = plans
+        .iter()
+        .map(|p| {
+            p.d.as_ref()
+                .expect("direction-B RWMD needs plan_query(.., keep_d: true)")
+                .as_slice()
+        })
+        .collect();
+    let max_h = plans.iter().map(|p| p.h).max().unwrap_or(0);
+    let slots = SyncSlice::new(out);
+    parallel_for(n, threads, |start, end| {
+        let mut r = vec![0.0f32; max_h];
+        for u in start..end {
+            let (idx, _) = db.row(u);
+            for (p, plan) in plans.iter().enumerate() {
+                let t = rwmd_b_row_cost(plan, ds[p], idx, &mut r[..plan.h]);
+                // SAFETY: cell (p, u) is owned by the chunk owning row u.
+                unsafe { slots.write(p * n + u, t as f32) };
+            }
+        }
+    });
 }
 
 #[cfg(test)]
@@ -211,7 +341,7 @@ mod tests {
                 &vocab,
                 &vocab.row_sq_norms(),
                 &q,
-                PlanParams { k, metric: Metric::L2, keep_d: true, threads: 3 },
+                PlanParams { k, metric: Metric::L2, keep_d: true, threads: 3, kernel: None },
             );
             let act = act_direction_a(&plan, &db, 3);
             let omr = omr_direction_a(&plan, &db, 3);
@@ -255,7 +385,7 @@ mod tests {
             &vocab,
             &vocab.row_sq_norms(),
             &q,
-            PlanParams { k: 1, metric: Metric::L2, keep_d: false, threads: 2 },
+            PlanParams { k: 1, metric: Metric::L2, keep_d: false, threads: 2, kernel: None },
         );
         let a = act_direction_a(&plan, &db, 2);
         let b = rwmd_direction_a(&plan, &db, 2);
@@ -273,7 +403,7 @@ mod tests {
                 &vocab,
                 &vocab.row_sq_norms(),
                 &q,
-                PlanParams { k, metric: Metric::L2, keep_d: false, threads: 2 },
+                PlanParams { k, metric: Metric::L2, keep_d: false, threads: 2, kernel: None },
             );
             let t = act_direction_a(&plan, &db, 2);
             for (u, (&cur, &pre)) in t.iter().zip(&prev).enumerate() {
@@ -293,7 +423,7 @@ mod tests {
             &vocab,
             &vocab.row_sq_norms(),
             &q,
-            PlanParams { k: 2, metric: Metric::L2, keep_d: false, threads: 1 },
+            PlanParams { k: 2, metric: Metric::L2, keep_d: false, threads: 1, kernel: None },
         );
         let t = act_direction_a(&plan, &db, 1);
         assert!(t[5].abs() < 1e-6, "self distance {}", t[5]);
@@ -308,9 +438,52 @@ mod tests {
             &vocab,
             &vocab.row_sq_norms(),
             &q,
-            PlanParams { k: 2, metric: Metric::L2, keep_d: true, threads: 1 },
+            PlanParams { k: 2, metric: Metric::L2, keep_d: true, threads: 1, kernel: None },
         );
         assert_eq!(act_direction_a(&plan, &db, 1)[2], 0.0);
         assert_eq!(rwmd_direction_b(&plan, &db, 1)[2], 0.0);
+    }
+
+    #[test]
+    fn block_sweeps_match_per_plan_sweeps_bitwise() {
+        // the one-db-pass block form must equal independent per-plan sweeps
+        // exactly, for every method and thread count (shared row helpers)
+        let (vocab, _, docs, db) = setup(6, 36, 9, 4, 14);
+        let vn = vocab.row_sq_norms();
+        let queries: Vec<Histogram> = docs[..4].to_vec();
+        let n = db.nrows();
+        for method in [Method::Rwmd, Method::Omr, Method::Act { k: 3 }] {
+            let params = PlanParams {
+                k: method.plan_k(),
+                metric: Metric::L2,
+                keep_d: true,
+                threads: 1,
+                kernel: None,
+            };
+            let plans: Vec<QueryPlan> =
+                queries.iter().map(|q| plan_query(&vocab, &vn, q, params)).collect();
+            for threads in [1usize, 3] {
+                let mut block = vec![0.0f32; plans.len() * n];
+                direction_a_block_into(method, &plans, &db, threads, &mut block);
+                let mut block_b = vec![0.0f32; plans.len() * n];
+                direction_b_block_into(&plans, &db, threads, &mut block_b);
+                for (p, plan) in plans.iter().enumerate() {
+                    let mut single = vec![0.0f32; n];
+                    match method {
+                        Method::Rwmd => rwmd_direction_a_into(plan, &db, 1, &mut single),
+                        Method::Omr => omr_direction_a_into(plan, &db, 1, &mut single),
+                        _ => act_direction_a_into(plan, &db, 1, &mut single),
+                    }
+                    assert_eq!(&block[p * n..(p + 1) * n], &single[..], "{method} plan {p}");
+                    let mut single_b = vec![0.0f32; n];
+                    rwmd_direction_b_into(plan, &db, 1, &mut single_b);
+                    assert_eq!(
+                        &block_b[p * n..(p + 1) * n],
+                        &single_b[..],
+                        "{method} plan {p} direction B"
+                    );
+                }
+            }
+        }
     }
 }

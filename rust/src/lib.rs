@@ -65,11 +65,13 @@ pub mod prelude {
         SearchEngine, SearchRequest, SearchResponse, SearchResult, Server, Stage,
     };
     pub use crate::core::{
-        BatchDistance, Dataset, Distance, EmdError, EmdResult, Embeddings, Histogram, Method,
-        MethodRegistry, Metric, METHOD_SYNTAX,
+        BatchDistance, CompressedKind, Dataset, Distance, EmdError, EmdResult, Embeddings,
+        F16Tier, Histogram, Method, MethodRegistry, Metric, METHOD_SYNTAX,
     };
     pub use crate::index::{pruned_search, pruned_search_batch, IvfIndex, PrunedSearch};
     pub use crate::serve::ReactorServer;
-    pub use crate::lc::{BatchPlanner, EngineParams, LcBatch, LcEngine, PlanScratch};
+    pub use crate::lc::{
+        BatchPlanner, EngineParams, KernelBackend, LcBatch, LcEngine, PlanScratch,
+    };
     pub use crate::shard::{AppendOutcome, ShardStat, ShardedCorpus, ShardedSearch};
 }

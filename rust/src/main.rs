@@ -84,6 +84,12 @@ fn common_opts(spec: CommandSpec) -> CommandSpec {
             "",
             "index lists probed per query (needs --nlist or a config index; >= nlist: exhaustive)",
         )
+        .opt("kernel", "", "force the SIMD kernel backend: scalar | avx2 | avx512")
+        .opt(
+            "compressed",
+            "",
+            "stage-1 residency tier: none | f16 (exact-f32 rerank keeps results exact)",
+        )
 }
 
 fn build_config(parsed: &emdpar::util::cli::Parsed) -> EmdResult<Config> {
@@ -644,6 +650,8 @@ fn cmd_eval(args: &[String]) -> EmdResult<()> {
         threads: cfg.threads,
         symmetric: cfg.symmetric,
         batch_block: cfg.batch_block,
+        kernel: cfg.kernel,
+        compressed: cfg.compressed,
     };
     let rows = if subset > 0 {
         sweep_subset(&ds, subset, &methods, &ls, params)?

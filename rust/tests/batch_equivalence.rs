@@ -12,9 +12,11 @@
 
 use std::sync::Arc;
 
-use emdpar::core::{BatchDistance, Dataset, Histogram, Method, MethodRegistry, Metric};
+use emdpar::core::{
+    BatchDistance, CompressedKind, Dataset, Histogram, Method, MethodRegistry, Metric,
+};
 use emdpar::data::{generate_text, TextConfig};
-use emdpar::lc::{BatchPlanner, EngineParams, LcEngine, PlanParams, PlanScratch};
+use emdpar::lc::{BatchPlanner, EngineParams, KernelBackend, LcEngine, PlanParams, PlanScratch};
 
 fn dataset(n: usize) -> Arc<Dataset> {
     Arc::new(generate_text(&TextConfig {
@@ -31,7 +33,7 @@ fn dataset(n: usize) -> Arc<Dataset> {
 fn engine(ds: &Arc<Dataset>, threads: usize, symmetric: bool, batch_block: usize) -> LcEngine {
     LcEngine::new(
         Arc::clone(ds),
-        EngineParams { metric: Metric::L2, threads, symmetric, batch_block },
+        EngineParams { metric: Metric::L2, threads, symmetric, batch_block, ..Default::default() },
     )
 }
 
@@ -141,7 +143,7 @@ fn scratch_reuse_across_batches_is_identical() {
     let ds = dataset(20);
     let vn = ds.embeddings.row_sq_norms();
     let planner = BatchPlanner::new(&ds.embeddings, &vn);
-    let params = PlanParams { k: 3, metric: Metric::L2, keep_d: true, threads: 2 };
+    let params = PlanParams { k: 3, metric: Metric::L2, keep_d: true, threads: 2, kernel: None };
     let batch_a: Vec<Histogram> = (0..6).map(|u| ds.histogram(u)).collect();
     let batch_b: Vec<Histogram> = (6..14).map(|u| ds.histogram(u)).collect();
 
@@ -189,6 +191,134 @@ fn trait_distances_batch_matches_per_query() {
             assert_eq!(&flat[i * ds.len()..(i + 1) * ds.len()], &single[..], "{method} q={i}");
         }
     }
+}
+
+/// ISSUE 7 acceptance: every SIMD kernel backend this host supports
+/// produces Phase-1 plans (and full batched distance rows) bit-identical to
+/// the scalar reference.  The scalar backend defines the crate's canonical
+/// arithmetic; AVX2/AVX-512 must reproduce it exactly, so forcing a backend
+/// can only ever change speed.
+#[test]
+fn every_supported_kernel_backend_is_bit_identical_to_scalar() {
+    let ds = dataset(24);
+    let vn = ds.embeddings.row_sq_norms();
+    let planner = BatchPlanner::new(&ds.embeddings, &vn);
+    let queries: Vec<Histogram> = (0..9).map(|u| ds.histogram(u)).collect();
+    let backends = emdpar::lc::kernels::supported_backends();
+    assert!(backends.contains(&KernelBackend::Scalar));
+    for k in [1usize, 3, 8] {
+        let reference = planner.plan_block(
+            &queries,
+            PlanParams {
+                k,
+                metric: Metric::L2,
+                keep_d: true,
+                threads: 2,
+                kernel: Some(KernelBackend::Scalar),
+            },
+            &mut PlanScratch::new(),
+        );
+        for &backend in &backends {
+            let got = planner.plan_block(
+                &queries,
+                PlanParams {
+                    k,
+                    metric: Metric::L2,
+                    keep_d: true,
+                    threads: 2,
+                    kernel: Some(backend),
+                },
+                &mut PlanScratch::new(),
+            );
+            for (g, w) in got.iter().zip(&reference) {
+                assert_eq!((g.k, g.h), (w.k, w.h), "{backend} k={k}");
+                assert_eq!(g.z, w.z, "{backend} k={k}");
+                assert_eq!(g.s, w.s, "{backend} k={k}");
+                assert_eq!(g.w, w.w, "{backend} k={k}");
+                assert_eq!(g.d, w.d, "{backend} k={k}");
+            }
+        }
+    }
+    // end-to-end rows through a forced-backend engine agree bitwise too
+    let scalar_eng = LcEngine::new(
+        Arc::clone(&ds),
+        EngineParams {
+            threads: 2,
+            kernel: Some(KernelBackend::Scalar),
+            ..Default::default()
+        },
+    );
+    for &backend in &backends {
+        let eng = LcEngine::new(
+            Arc::clone(&ds),
+            EngineParams { threads: 2, kernel: Some(backend), ..Default::default() },
+        );
+        for method in [Method::Rwmd, Method::Act { k: 2 }] {
+            assert_eq!(
+                eng.distances_batch(&queries, method),
+                scalar_eng.distances_batch(&queries, method),
+                "{backend} {method}"
+            );
+        }
+    }
+}
+
+/// ISSUE 7 acceptance: a full-probe search through the f16 compressed
+/// stage-1 tier returns exactly the f32 exhaustive top-ℓ — the planner's
+/// exact rerank restores bit-identity end to end.
+#[test]
+fn compressed_tier_full_probe_search_bit_equals_f32_exhaustive() {
+    use emdpar::config::{Config, DatasetSpec, IndexParams};
+    use emdpar::coordinator::{CascadeSpec, SearchEngine, SearchRequest, Stage};
+    let base = Config {
+        dataset: DatasetSpec::SynthText { n: 48, vocab: 200, dim: 9, seed: 7 },
+        threads: 2,
+        // keep = overfetch·ℓ covers the whole 48-doc corpus: the exact
+        // rerank then provably restores the uncompressed ranking bitwise
+        overfetch: 16,
+        index: Some(IndexParams {
+            nlist: 4,
+            nprobe: 4, // full probe
+            train_iters: 6,
+            seed: 5,
+            min_points_per_list: 1,
+        }),
+        ..Default::default()
+    };
+    let exact = SearchEngine::from_config(base.clone()).unwrap();
+    let tiered = SearchEngine::from_config(Config {
+        compressed: CompressedKind::F16,
+        ..base
+    })
+    .unwrap();
+    let queries: Vec<Histogram> = (0..5).map(|u| exact.dataset().histogram(u * 9)).collect();
+    for method in [Method::Rwmd, Method::Omr, Method::Act { k: 2 }] {
+        let req = SearchRequest::batch(queries.clone()).method(method).topl(5);
+        let plan = tiered.plan(&req).unwrap();
+        assert!(plan.compressed, "{method}");
+        assert!(
+            plan.stages.iter().any(|s| matches!(s, Stage::ExactRerank { .. })),
+            "{method}"
+        );
+        let want = exact.execute(&req).unwrap();
+        let got = tiered.execute(&req).unwrap();
+        for (g, w) in got.results.iter().zip(&want.results) {
+            assert_eq!(g.hits, w.hits, "{method}");
+            assert_eq!(g.labels, w.labels, "{method}");
+        }
+    }
+    // cascaded variant: same hits, but the compressed stage 1 surrenders
+    // the exactness certificate (f16 scores are not lower bounds)
+    let creq = SearchRequest::batch(queries)
+        .topl(5)
+        .cascade(CascadeSpec::new(Method::Exact).overfetch(16));
+    let want = exact.execute(&creq).unwrap();
+    let got = tiered.execute(&creq).unwrap();
+    for (g, w) in got.results.iter().zip(&want.results) {
+        assert_eq!(g.hits, w.hits);
+    }
+    assert!(want.stats.certified.iter().all(|&c| c));
+    assert!(got.stats.certified.iter().all(|&c| !c));
 }
 
 /// End-to-end: the coordinator's batched search returns the same hits as

@@ -246,6 +246,7 @@ fn plan_composes_prune_fanout_merge_rerank() {
             Stage::ShardFanout { .. } => "fanout",
             Stage::Merge { .. } => "merge",
             Stage::CascadeRerank { .. } => "rerank",
+            Stage::ExactRerank { .. } => "exact-rerank",
         })
         .collect();
     assert_eq!(kinds, ["prune", "score", "fanout", "merge", "rerank"]);
