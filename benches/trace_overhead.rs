@@ -1,0 +1,160 @@
+//! Tracing overhead: what does the observability layer cost the query path?
+//!
+//! Three modes over the same engine and query stream, interleaved so drift
+//! hits all of them equally:
+//!
+//! * `off`    — tracing disabled (the default): requests take the guard-only
+//!              path, no session, no spans.  Measured twice (split into
+//!              interleaved halves A/B) so the disabled-path cost can be
+//!              bounded against itself: any systematic difference between
+//!              two interleaved runs of identical code is the measurement
+//!              noise floor, and the acceptance gate below asserts it stays
+//!              under 1% (or 5µs absolute, whichever is larger).
+//! * `armed`  — a slow-query threshold arms per-request sessions whose
+//!              spans are recorded and discarded (never logged): the cost
+//!              of having the slow-query log on.
+//! * `traced` — `trace: true` requests: session + timeline in the response.
+//!
+//! Emits machine-readable `BENCH_trace.json`.  Run:
+//! `cargo bench --bench trace_overhead` (EMDPAR_BENCH_FULL=1 for more
+//! samples; EMDPAR_TRACE_OVERHEAD_PCT overrides the 1% disabled-path gate).
+
+use std::io::Write;
+use std::sync::Arc;
+use std::time::Instant;
+
+use emdpar::config::{Config, DatasetSpec, ServeParams};
+use emdpar::coordinator::{SearchEngine, SearchRequest};
+use emdpar::core::{Dataset, Method};
+use emdpar::util::json::Json;
+
+fn dataset(n: usize) -> Arc<Dataset> {
+    Arc::new(
+        Config {
+            dataset: DatasetSpec::SynthText { n, vocab: 400, dim: 16, seed: 11 },
+            ..Config::default()
+        }
+        .load_dataset()
+        .unwrap(),
+    )
+}
+
+fn engine(ds: &Arc<Dataset>, slow_query_us: u64) -> SearchEngine {
+    SearchEngine::with_dataset(
+        Config {
+            threads: 2,
+            serve: ServeParams { slow_query_us, ..Default::default() },
+            ..Config::default()
+        },
+        Arc::clone(ds),
+    )
+    .unwrap()
+}
+
+/// Median per-request µs over `reqs` requests in one mode.
+fn measure(eng: &SearchEngine, ds: &Dataset, reqs: usize, traced: bool, round: usize) -> f64 {
+    let mut lat = Vec::with_capacity(reqs);
+    for i in 0..reqs {
+        let q = ds.histogram((round * 31 + i * 7) % ds.len());
+        let req = SearchRequest::query(q).method(Method::Rwmd).topl(10).trace(traced);
+        let t0 = Instant::now();
+        let resp = eng.execute(&req).unwrap();
+        lat.push(t0.elapsed().as_nanos() as u64);
+        assert_eq!(resp.spans.is_some(), traced, "trace flag must decide the timeline");
+    }
+    lat.sort_unstable();
+    lat[lat.len() / 2] as f64 / 1e3
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn main() {
+    let full = std::env::var("EMDPAR_BENCH_FULL").is_ok();
+    let (n_docs, reqs, rounds) = if full { (1500, 60, 15) } else { (600, 40, 9) };
+    let ds = dataset(n_docs);
+    let eng_off = engine(&ds, 0); // tracing hardware present, disabled
+    let eng_armed = engine(&ds, u64::MAX); // slow-query sessions, never logged
+    assert!(!eng_off.tracer().enabled());
+    assert!(eng_armed.tracer().enabled());
+
+    println!("# Tracing overhead on the query path (n={n_docs}, reqs/round={reqs}, rounds={rounds})");
+
+    // interleave every mode within each round so clock drift and cache
+    // state hit all of them equally; off is sampled twice (A/B) to
+    // establish the identical-code noise floor
+    let (mut off_a, mut off_b, mut armed, mut traced) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    for r in 0..rounds {
+        off_a.push(measure(&eng_off, &ds, reqs, false, r));
+        armed.push(measure(&eng_armed, &ds, reqs, false, r));
+        traced.push(measure(&eng_off, &ds, reqs, true, r));
+        off_b.push(measure(&eng_off, &ds, reqs, false, r));
+    }
+    let (off_a, off_b) = (median(&mut off_a), median(&mut off_b));
+    let (armed, traced) = (median(&mut armed), median(&mut traced));
+    let off = off_a.min(off_b);
+
+    let disabled_delta_pct = 100.0 * (off_a - off_b).abs() / off;
+    let armed_pct = 100.0 * (armed / off - 1.0);
+    let traced_pct = 100.0 * (traced / off - 1.0);
+    println!("{:>10} {:>12} {:>12}", "mode", "p50_us", "overhead_%");
+    println!("{:>10} {:>12.1} {:>12}", "off(A)", off_a, "-");
+    println!("{:>10} {:>12.1} {:>12.2}", "off(B)", off_b, disabled_delta_pct);
+    println!("{:>10} {:>12.1} {:>12.2}", "armed", armed, armed_pct);
+    println!("{:>10} {:>12.1} {:>12.2}", "traced", traced, traced_pct);
+
+    let json = Json::obj(vec![
+        ("bench", "trace_overhead".into()),
+        ("status", "measured".into()),
+        (
+            "workload",
+            Json::obj(vec![
+                ("n", n_docs.into()),
+                ("requests_per_round", reqs.into()),
+                ("rounds", rounds.into()),
+                ("method", "rwmd".into()),
+                ("full", full.into()),
+            ]),
+        ),
+        ("off_p50_us", off.into()),
+        ("armed_p50_us", armed.into()),
+        ("traced_p50_us", traced.into()),
+        ("disabled_delta_pct", disabled_delta_pct.into()),
+        ("armed_overhead_pct", armed_pct.into()),
+        ("traced_overhead_pct", traced_pct.into()),
+        ("regenerate_with", "cargo bench --bench trace_overhead".into()),
+    ]);
+    let path = "BENCH_trace.json";
+    match std::fs::File::create(path)
+        .and_then(|mut f| writeln!(f, "{}", json.to_string_pretty()))
+    {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    // acceptance: disabled tracing stays under 1% — two interleaved runs of
+    // the guard-only path must be indistinguishable (an absolute 5µs floor
+    // absorbs timer granularity on very fast requests; the env override
+    // absorbs pathologically noisy shared runners)
+    let max_pct = std::env::var("EMDPAR_TRACE_OVERHEAD_PCT")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(1.0);
+    let abs_us = (off_a - off_b).abs();
+    if disabled_delta_pct > max_pct && abs_us > 5.0 {
+        eprintln!(
+            "FAIL: disabled-tracing delta {disabled_delta_pct:.2}% ({abs_us:.1}us) exceeds \
+             {max_pct:.2}% — the off path must be free"
+        );
+        std::process::exit(1);
+    }
+    println!("disabled-tracing delta {disabled_delta_pct:.2}% within the {max_pct:.2}% gate");
+    // sanity, not a gate: per-request sessions should cost little; traced
+    // requests may legitimately pay for timeline assembly
+    if armed_pct > 50.0 {
+        eprintln!("WARN: slow-query arming costs {armed_pct:.1}% — investigate before enabling by default");
+    }
+}

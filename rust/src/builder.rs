@@ -207,6 +207,20 @@ impl EngineBuilder {
         self
     }
 
+    /// Slow-query log threshold in µs: requests slower than this are traced
+    /// and logged at WARN with their per-stage span breakdown (0 disables;
+    /// `EMDPAR_SLOW_QUERY_US` overrides at build time).
+    pub fn slow_query_us(mut self, slow_query_us: u64) -> EngineBuilder {
+        self.config.serve.slow_query_us = slow_query_us;
+        self
+    }
+
+    /// Span ring capacity in records (~40 bytes each; clamped to >= 16).
+    pub fn trace_buffer(mut self, trace_buffer: usize) -> EngineBuilder {
+        self.config.serve.trace_buffer = trace_buffer.max(16);
+        self
+    }
+
     /// The effective configuration so far.
     pub fn config(&self) -> &Config {
         &self.config
@@ -323,14 +337,20 @@ mod tests {
             .max_inflight(128)
             .deadline_ms(250)
             .idle_timeout_ms(30_000)
-            .max_line_bytes(0); // clamps to the floor
+            .max_line_bytes(0) // clamps to the floor
+            .slow_query_us(150_000)
+            .trace_buffer(1); // clamps to the floor
         assert_eq!(b.config().serve.reactors, 4);
         assert_eq!(b.config().serve.max_inflight, 128);
         assert_eq!(b.config().serve.deadline_ms, 250);
         assert_eq!(b.config().serve.idle_timeout_ms, 30_000);
         assert_eq!(b.config().serve.max_line_bytes, 256);
+        assert_eq!(b.config().serve.slow_query_us, 150_000);
+        assert_eq!(b.config().serve.trace_buffer, 16);
         let eng = b.build_search().unwrap();
         assert_eq!(eng.config().serve.max_inflight, 128);
+        assert!(eng.slow_query_us() >= 150_000 || std::env::var("EMDPAR_SLOW_QUERY_US").is_ok());
+        assert!(eng.tracer().capacity() >= 16);
     }
 
     #[test]

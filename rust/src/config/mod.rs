@@ -100,6 +100,13 @@ pub struct ServeParams {
     pub idle_timeout_ms: u64,
     /// `retry_after_ms` hint attached to overload responses.
     pub retry_after_ms: u64,
+    /// Slow-query log threshold in µs: any request slower than this is
+    /// traced and logged at WARN with its per-stage span breakdown; 0
+    /// disables.  The `EMDPAR_SLOW_QUERY_US` env var overrides at engine
+    /// construction.
+    pub slow_query_us: u64,
+    /// Span ring capacity (records; ~40 bytes each, clamped to >= 16).
+    pub trace_buffer: usize,
 }
 
 impl Default for ServeParams {
@@ -111,6 +118,8 @@ impl Default for ServeParams {
             max_line_bytes: 1 << 20,
             idle_timeout_ms: 0,
             retry_after_ms: 2,
+            slow_query_us: 0,
+            trace_buffer: 4096,
         }
     }
 }
@@ -423,6 +432,11 @@ impl Config {
             config,
             "serve max_line_bytes must be >= 256"
         );
+        emd_ensure!(
+            self.serve.trace_buffer >= 16,
+            config,
+            "serve trace_buffer must be >= 16 span records"
+        );
         Ok(())
     }
 
@@ -518,6 +532,12 @@ fn parse_serve(j: &Json) -> EmdResult<ServeParams> {
     }
     if let Some(x) = j.get("retry_after_ms").and_then(Json::as_usize) {
         p.retry_after_ms = x as u64;
+    }
+    if let Some(x) = j.get("slow_query_us").and_then(Json::as_usize) {
+        p.slow_query_us = x as u64;
+    }
+    if let Some(x) = j.get("trace_buffer").and_then(Json::as_usize) {
+        p.trace_buffer = x;
     }
     Ok(p)
 }
@@ -712,7 +732,8 @@ mod tests {
     fn serve_params_from_json_and_validation() {
         let j = Json::parse(
             r#"{"serve": {"reactors": 4, "max_inflight": 64, "deadline_ms": 250,
-                "max_line_bytes": 4096, "idle_timeout_ms": 30000, "retry_after_ms": 5}}"#,
+                "max_line_bytes": 4096, "idle_timeout_ms": 30000, "retry_after_ms": 5,
+                "slow_query_us": 250000, "trace_buffer": 1024}}"#,
         )
         .unwrap();
         let cfg = Config::from_json(&j).unwrap();
@@ -725,6 +746,8 @@ mod tests {
                 max_line_bytes: 4096,
                 idle_timeout_ms: 30000,
                 retry_after_ms: 5,
+                slow_query_us: 250_000,
+                trace_buffer: 1024,
             }
         );
         // partial objects fill from defaults
@@ -732,11 +755,14 @@ mod tests {
         let cfg = Config::from_json(&j).unwrap();
         assert_eq!(cfg.serve.reactors, 1);
         assert_eq!(cfg.serve.max_inflight, ServeParams::default().max_inflight);
+        assert_eq!(cfg.serve.slow_query_us, 0, "slow-query log defaults off");
+        assert_eq!(cfg.serve.trace_buffer, ServeParams::default().trace_buffer);
         // degenerate values rejected
         for bad in [
             r#"{"serve": {"reactors": 0}}"#,
             r#"{"serve": {"max_inflight": 0}}"#,
             r#"{"serve": {"max_line_bytes": 16}}"#,
+            r#"{"serve": {"trace_buffer": 4}}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(Config::from_json(&j).is_err(), "{bad}");

@@ -11,6 +11,7 @@ use crate::core::{Dataset, EmdError, EmdResult, Histogram, Method, MethodRegistr
 use crate::emd_ensure;
 use crate::index::{dataset_fingerprint, load_index_for, sidecar_path, IvfIndex};
 use crate::lc::{EngineParams, LcEngine};
+use crate::obs::TraceCollector;
 use crate::runtime::{ArtifactEngine, Executor};
 use crate::shard::{
     load_manifest_for, reconstruct, save_manifest, AppendOutcome, ShardStat, ShardedCorpus,
@@ -50,6 +51,12 @@ pub struct SearchEngine {
     sharded: Option<RwLock<ShardedCorpus>>,
     executor: Option<Executor>,
     artifact_profile: Option<String>,
+    /// shared span ring every traced execute (and the reactor's conn
+    /// read/write phases) records into
+    tracer: Arc<TraceCollector>,
+    /// slow-query log threshold in µs (0 = off); `EMDPAR_SLOW_QUERY_US`
+    /// overrides `config.serve.slow_query_us` at construction
+    slow_query_us: u64,
 }
 
 impl SearchEngine {
@@ -120,6 +127,16 @@ impl SearchEngine {
             }
             _ => None,
         };
+        let slow_query_us = std::env::var("EMDPAR_SLOW_QUERY_US")
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .unwrap_or(config.serve.slow_query_us);
+        let tracer = Arc::new(TraceCollector::new(config.serve.trace_buffer));
+        if slow_query_us > 0 {
+            // arm ambient collection so even untraced requests land spans
+            // for the slow-query log to report
+            tracer.set_enabled(true);
+        }
         Ok(SearchEngine {
             dataset,
             config,
@@ -130,6 +147,8 @@ impl SearchEngine {
             sharded,
             executor,
             artifact_profile,
+            tracer,
+            slow_query_us,
         })
     }
 
@@ -336,6 +355,22 @@ impl SearchEngine {
 
     pub fn metrics(&self) -> Arc<Metrics> {
         Arc::clone(&self.metrics)
+    }
+
+    /// The engine's shared span ring (borrowed; see
+    /// [`SearchEngine::tracer_arc`] for a clonable handle).
+    pub fn tracer(&self) -> &TraceCollector {
+        &self.tracer
+    }
+
+    /// Clonable handle to the span ring (the reactor path holds one).
+    pub fn tracer_arc(&self) -> Arc<TraceCollector> {
+        Arc::clone(&self.tracer)
+    }
+
+    /// Slow-query log threshold in µs (0 = disabled).
+    pub fn slow_query_us(&self) -> u64 {
+        self.slow_query_us
     }
 
     pub fn config(&self) -> &Config {

@@ -8,13 +8,17 @@ use crate::util::json::Json;
 /// Exponential latency histogram: bucket i covers [2^i, 2^(i+1)) microseconds.
 const BUCKETS: usize = 24;
 
-/// A log-bucketed latency histogram with a running sum, usable lock-free
-/// from any number of threads.  Percentiles report the upper bucket bound,
-/// so they are exact to within 2× — plenty for the dashboards the `stats`
-/// op feeds.
+/// A log-bucketed latency histogram with running per-bucket sums, usable
+/// lock-free from any number of threads.  Percentiles interpolate within
+/// the hit bucket using its recorded mean, so a bucket filled by identical
+/// samples reports their exact value (a single 10 µs sample yields
+/// p50 = 10, not the old 16 µs upper bound).
 #[derive(Debug, Default)]
 pub struct LatencyHist {
     buckets: [AtomicU64; BUCKETS],
+    /// Sum of the samples that landed in each bucket — the interpolation
+    /// anchor for percentiles and the exposition layer's `_sum` series.
+    bucket_sums: [AtomicU64; BUCKETS],
     sum_us: AtomicU64,
     count: AtomicU64,
 }
@@ -29,6 +33,7 @@ impl LatencyHist {
         self.sum_us.fetch_add(us, Ordering::Relaxed);
         let bucket = (63 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
         self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.bucket_sums[bucket].fetch_add(us, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
@@ -48,7 +53,11 @@ impl LatencyHist {
         }
     }
 
-    /// Approximate percentile (upper bucket bound), microseconds.
+    /// Approximate percentile, microseconds.  Walks the buckets to the one
+    /// holding the requested rank, then interpolates within it using the
+    /// bucket's recorded mean (clamped to the bucket bounds) — exact when
+    /// the hit bucket holds one distinct value, within the bucket span
+    /// otherwise.
     pub fn percentile_us(&self, q: f64) -> u64 {
         let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
         let total: u64 = counts.iter().sum();
@@ -59,11 +68,45 @@ impl LatencyHist {
         let mut seen = 0;
         for (i, &c) in counts.iter().enumerate() {
             seen += c;
-            if seen >= want {
-                return 1u64 << (i + 1);
+            if seen >= want && c > 0 {
+                let lo = if i == 0 { 0 } else { 1u64 << i };
+                let hi = if i + 1 >= BUCKETS { u64::MAX } else { (1u64 << (i + 1)) - 1 };
+                let mean = self.bucket_sums[i].load(Ordering::Relaxed) / c;
+                return mean.clamp(lo, hi);
             }
         }
         1u64 << BUCKETS
+    }
+
+    /// Per-bucket counts (non-cumulative), index i covering
+    /// `[2^i, 2^(i+1))` µs — the exposition layer's raw series.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Upper bound of bucket `i` in µs; `None` marks the last,
+    /// unbounded bucket (`+Inf` in Prometheus terms).
+    pub fn bucket_bound(i: usize) -> Option<u64> {
+        if i + 1 >= BUCKETS {
+            None
+        } else {
+            Some(1u64 << (i + 1))
+        }
+    }
+
+    /// Zero every counter.  Not atomic as a whole: samples recorded while
+    /// the reset sweeps may survive in some arrays and not others, but
+    /// every individual counter stays monotonic between resets — good
+    /// enough for zeroing between bench phases.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        for b in &self.bucket_sums {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.sum_us.store(0, Ordering::Relaxed);
+        self.count.store(0, Ordering::Relaxed);
     }
 
     /// Snapshot: `{count, mean_us, p50_us, p95_us, p99_us}`.
@@ -190,9 +233,42 @@ impl Metrics {
         1.0 - scored as f64 / possible as f64
     }
 
-    /// Approximate latency percentile (upper bucket bound), microseconds.
+    /// Approximate latency percentile (bucket-mean interpolated),
+    /// microseconds.
     pub fn latency_percentile_us(&self, q: f64) -> u64 {
         self.latency.percentile_us(q)
+    }
+
+    /// Zero every counter and histogram (the `stats` op's
+    /// `{"reset": true}`).  Racy-but-monotonic: a query racing the reset
+    /// may land some of its increments before the sweep and some after, so
+    /// cross-counter invariants (e.g. `queries >= cascade_queries`) can be
+    /// off by in-flight work — each counter individually restarts from a
+    /// value ≤ its true post-reset count and only grows.
+    pub fn reset(&self) {
+        for c in [
+            &self.queries,
+            &self.batches,
+            &self.errors,
+            &self.distance_evals,
+            &self.index_queries,
+            &self.lists_probed,
+            &self.candidates_scored,
+            &self.index_possible,
+            &self.cascade_queries,
+            &self.reranked_total,
+            &self.shard_batches,
+            &self.merge_sum_us,
+            &self.admitted,
+            &self.shed,
+            &self.deadline_expired,
+        ] {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.latency.reset();
+        self.queue_wait.reset();
+        self.execute.reset();
+        self.e2e.reset();
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -270,8 +346,9 @@ mod tests {
         assert_eq!(m.queries.load(Ordering::Relaxed), 2);
         assert_eq!(m.distance_evals.load(Ordering::Relaxed), 100);
         assert!((m.mean_latency_us() - 150.0).abs() < 1e-9);
-        let p50 = m.latency_percentile_us(0.5);
-        assert!(p50 >= 128 && p50 <= 256, "p50 {p50}");
+        // 100 µs and 200 µs land in different buckets; the median bucket
+        // holds only the 100 µs sample, so interpolation reports it exactly
+        assert_eq!(m.latency_percentile_us(0.5), 100);
     }
 
     #[test]
@@ -337,13 +414,96 @@ mod tests {
         }
         assert_eq!(h.count(), 4);
         assert!((h.mean_us() - 1302.5).abs() < 1e-9);
-        let p50 = h.percentile_us(0.5);
-        assert!((64..=256).contains(&p50), "p50 {p50}");
-        let p99 = h.percentile_us(0.99);
-        assert!(p99 >= 4096, "p99 {p99} must cover the 5ms outlier");
+        // rank 2 of 4 falls in the [64,128) bucket holding both 100 µs
+        // samples; rank 4 (p99) is the 5 ms outlier alone in its bucket —
+        // bucket-mean interpolation recovers both exactly
+        assert_eq!(h.percentile_us(0.5), 100);
+        assert_eq!(h.percentile_us(0.99), 5000);
         let j = h.to_json();
         assert_eq!(j.get("count").and_then(Json::as_usize), Some(4));
         assert!(j.get("p99_us").is_some());
+    }
+
+    #[test]
+    fn percentile_interpolates_within_the_hit_bucket() {
+        // the motivating defect: a single 10 µs sample used to report its
+        // bucket's upper bound (16 µs) for every percentile
+        let h = LatencyHist::default();
+        h.record_us(10);
+        assert_eq!(h.percentile_us(0.5), 10);
+        assert_eq!(h.percentile_us(0.99), 10);
+        // a mixed bucket reports its (clamped) mean: 9 and 15 share [8,16)
+        let h2 = LatencyHist::default();
+        h2.record_us(9);
+        h2.record_us(15);
+        assert_eq!(h2.percentile_us(0.5), 12);
+        // the mean never escapes the bucket bounds
+        assert!(h2.percentile_us(0.99) < 16);
+    }
+
+    #[test]
+    fn hist_reset_zeroes_counts_and_sums() {
+        let h = LatencyHist::default();
+        h.record_us(10);
+        h.record_us(300);
+        assert_eq!(h.count(), 2);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum_us(), 0);
+        assert_eq!(h.percentile_us(0.5), 0);
+        assert!(h.bucket_counts().iter().all(|&c| c == 0));
+        // and keeps recording after the reset
+        h.record_us(20);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile_us(0.5), 20);
+    }
+
+    #[test]
+    fn metrics_reset_zeroes_every_counter() {
+        let m = Metrics::new();
+        m.record_query(Duration::from_micros(100), 50);
+        m.record_batch();
+        m.record_probe(4, 25, 100);
+        m.record_cascade(3, 24);
+        m.record_merge(Duration::from_micros(40));
+        m.record_admitted();
+        m.record_shed();
+        m.record_deadline_expired();
+        m.queue_wait.record(Duration::from_micros(40));
+        m.e2e.record(Duration::from_micros(450));
+        m.reset();
+        let j = m.to_json();
+        for key in [
+            "queries",
+            "batches",
+            "errors",
+            "distance_evals",
+            "index_queries",
+            "lists_probed",
+            "candidates_scored",
+            "cascade_queries",
+            "reranked_total",
+            "shard_batches",
+            "merge_us_total",
+            "admitted",
+            "shed",
+            "deadline_expired",
+        ] {
+            assert_eq!(j.get(key).and_then(Json::as_usize), Some(0), "{key} not reset");
+        }
+        assert_eq!(m.pruned_fraction(), 0.0);
+        assert_eq!(m.latency_percentile_us(0.5), 0);
+        assert_eq!(
+            j.get("e2e").and_then(|e| e.get("count")).and_then(Json::as_usize),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn bucket_bounds_are_powers_of_two_with_inf_tail() {
+        assert_eq!(LatencyHist::bucket_bound(0), Some(2));
+        assert_eq!(LatencyHist::bucket_bound(6), Some(128));
+        assert_eq!(LatencyHist::bucket_bound(BUCKETS - 1), None);
     }
 
     #[test]

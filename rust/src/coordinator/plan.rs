@@ -43,7 +43,8 @@ use std::time::{Duration, Instant};
 use crate::config::Backend;
 use crate::core::{EmdError, EmdResult, Histogram, Method};
 use crate::emd_ensure;
-use crate::index::pruned_search_batch_tiered;
+use crate::obs::{SpanName, SpanRec, TraceSession, ROOT_SPAN};
+use crate::index::pruned_search_batch_tiered_timed;
 use crate::util::json::Json;
 
 use super::cascade::{admissible_rerank, provably_dominates_rwmd, rerank_stage};
@@ -134,6 +135,11 @@ pub struct SearchRequest {
     /// engine's configured pool).  Kernel-internal parallelism stays on the
     /// engine's own budget.
     pub threads: Option<usize>,
+    /// Opt into span tracing: the response embeds its per-stage span
+    /// timeline and the spans land in the engine's trace ring.  Neutral to
+    /// batch grouping (a traced and an untraced request share a dispatch)
+    /// and to results — traced and untraced runs are bit-identical.
+    pub trace: bool,
 }
 
 impl SearchRequest {
@@ -145,7 +151,15 @@ impl SearchRequest {
     /// A multi-query request (one grouped dispatch through the multi-query
     /// kernels; results are bit-identical to per-query requests).
     pub fn batch(queries: Vec<Histogram>) -> SearchRequest {
-        SearchRequest { queries, method: None, l: None, nprobe: None, cascade: None, threads: None }
+        SearchRequest {
+            queries,
+            method: None,
+            l: None,
+            nprobe: None,
+            cascade: None,
+            threads: None,
+            trace: false,
+        }
     }
 
     pub fn method(mut self, method: Method) -> SearchRequest {
@@ -170,6 +184,11 @@ impl SearchRequest {
 
     pub fn threads(mut self, threads: usize) -> SearchRequest {
         self.threads = Some(threads.max(1));
+        self
+    }
+
+    pub fn trace(mut self, trace: bool) -> SearchRequest {
+        self.trace = trace;
         self
     }
 
@@ -251,6 +270,9 @@ impl SearchRequest {
         if let Some(t) = j.get("threads").and_then(Json::as_usize) {
             req.threads = Some(t.max(1));
         }
+        if let Some(t) = j.get("trace").and_then(Json::as_bool) {
+            req.trace = t;
+        }
         Ok(req)
     }
 
@@ -270,6 +292,11 @@ impl SearchRequest {
         }
         if let Some(t) = self.threads {
             pairs.push(("threads", t.into()));
+        }
+        // omitted when false so untraced requests stay byte-identical to
+        // the pre-tracing wire format
+        if self.trace {
+            pairs.push(("trace", true.into()));
         }
         match self.queries.len() {
             1 => pairs.push(("query", histogram_json(&self.queries[0]))),
@@ -441,6 +468,19 @@ pub struct QueryStats {
     pub reranked: usize,
     /// Cross-shard merge time (the fan-out overhead).
     pub merge_us: u64,
+    /// IVF probe time (zero when no pruning stage ran).  Per-stage times
+    /// are whole-batch wall-clock, always measured (tracing or not).
+    pub prune_us: u64,
+    /// Stage-1 scoring time (monolithic routes; zero on the sharded route,
+    /// where probe+score run inside each shard's fan-out lane).
+    pub score_us: u64,
+    /// Sharded fan-out wall time: parallel per-shard probe+score, up to the
+    /// start of the cross-shard merge.
+    pub fanout_us: u64,
+    /// Rerank stage time (cascade or exact-f32 rerank; zero otherwise).
+    pub rerank_us: u64,
+    /// End-to-end execute time for the whole batch.
+    pub total_us: u64,
     /// Per-query exactness certificates (cascade requests only; empty
     /// otherwise).  Aligned with [`SearchResponse::results`].
     pub certified: Vec<bool>,
@@ -454,6 +494,9 @@ pub struct SearchResponse {
     pub stats: QueryStats,
     /// The plan that produced the results.
     pub plan: QueryPlan,
+    /// The request's span timeline ([`SearchRequest::trace`] only):
+    /// session-relative, root first.
+    pub spans: Option<Vec<SpanRec>>,
 }
 
 /// Build the execution plan for `req` without running it: resolve every
@@ -576,6 +619,22 @@ struct BaseBatch {
     merge: Option<Duration>,
     /// Corpus size at dispatch time (the coverage denominator).
     n_live: usize,
+    /// Stage wall-times, always measured (spans are recorded from these
+    /// only when a trace session is active).
+    timing: BaseTiming,
+}
+
+/// Per-stage wall-clock of one base-route dispatch; zero = stage not run.
+#[derive(Default)]
+struct BaseTiming {
+    /// IVF probe (monolithic pruned route).
+    prune: Duration,
+    /// Stage-1 scoring (monolithic routes).
+    score: Duration,
+    /// Parallel shard fan-out (sharded route; probe+score run per shard).
+    fanout: Duration,
+    /// Per-shard lanes: (start offset from fan-out entry, duration).
+    shards: Vec<(Duration, Duration)>,
 }
 
 /// Run the plan's scoring route: sharded fan-out, IVF-pruned, or exhaustive
@@ -597,6 +656,7 @@ fn run_base(
         Backend::Artifact => {
             // the artifact runtime plans one query at a time; no index or
             // shards on this backend
+            let t0 = Instant::now();
             let n = engine.dataset().len();
             let mut per_query = Vec::with_capacity(queries.len());
             for q in queries {
@@ -608,7 +668,8 @@ fn run_base(
                     pruned: false,
                 });
             }
-            Ok(BaseBatch { per_query, merge: None, n_live: n })
+            let timing = BaseTiming { score: t0.elapsed(), ..BaseTiming::default() };
+            Ok(BaseBatch { per_query, merge: None, n_live: n, timing })
         }
         Backend::Native => {
             if let Some(lock) = engine.sharded_corpus() {
@@ -631,13 +692,24 @@ fn run_base(
                         pruned: r.pruned,
                     })
                     .collect();
-                return Ok(BaseBatch { per_query, merge: Some(batch.merge_time), n_live });
+                let timing = BaseTiming {
+                    fanout: batch.fanout_time,
+                    shards: batch.shard_times,
+                    ..BaseTiming::default()
+                };
+                return Ok(BaseBatch {
+                    per_query,
+                    merge: Some(batch.merge_time),
+                    n_live,
+                    timing,
+                });
             }
             let n = engine.dataset().len();
             let route = if force_exhaustive { None } else { engine.pruning_route(nprobe) };
+            let mut timing = BaseTiming::default();
             let per_query = match route {
                 Some((index, np)) => {
-                    pruned_search_batch_tiered(
+                    let (pruned, t) = pruned_search_batch_tiered_timed(
                         engine.native_ref(),
                         index,
                         queries,
@@ -645,61 +717,143 @@ fn run_base(
                         l,
                         np,
                         compressed,
-                    )?
-                    .into_iter()
-                    .map(|pr| {
-                        let labels = pr
-                            .hits
-                            .iter()
-                            .map(|&(_, id)| engine.dataset().labels[id])
-                            .collect();
-                        BaseResult {
-                            result: SearchResult { hits: pr.hits, labels },
-                            candidates: pr.candidates,
-                            lists_probed: pr.lists_probed,
-                            pruned: true,
-                        }
-                    })
-                    .collect()
+                    )?;
+                    timing.prune = t.probe;
+                    timing.score = t.score;
+                    pruned
+                        .into_iter()
+                        .map(|pr| {
+                            let labels = pr
+                                .hits
+                                .iter()
+                                .map(|&(_, id)| engine.dataset().labels[id])
+                                .collect();
+                            BaseResult {
+                                result: SearchResult { hits: pr.hits, labels },
+                                candidates: pr.candidates,
+                                lists_probed: pr.lists_probed,
+                                pruned: true,
+                            }
+                        })
+                        .collect()
                 }
                 None => {
+                    let t0 = Instant::now();
                     let flat =
                         engine.native_ref().distances_batch_tiered(queries, method, compressed);
-                    (0..queries.len())
+                    let out: Vec<BaseResult> = (0..queries.len())
                         .map(|i| BaseResult {
                             result: engine.rank_row(&flat[i * n..(i + 1) * n], l),
                             candidates: n,
                             lists_probed: 0,
                             pruned: false,
                         })
-                        .collect()
+                        .collect();
+                    timing.score = t0.elapsed();
+                    out
                 }
             };
-            Ok(BaseBatch { per_query, merge: None, n_live: n })
+            Ok(BaseBatch { per_query, merge: None, n_live: n, timing })
         }
+    }
+}
+
+/// Saturating µs of one wall-clock duration.
+fn us(d: Duration) -> u64 {
+    d.as_micros().min(u128::from(u64::MAX)) as u64
+}
+
+/// Record the base route's stage spans: sequential stage layout from `off`
+/// (the session-relative µs at which the base dispatch started), with
+/// per-shard lanes as children of the fan-out span.
+fn record_base_spans(
+    s: &mut TraceSession,
+    timing: &BaseTiming,
+    merge: Option<Duration>,
+    off: u64,
+) {
+    let mut cursor = off;
+    if timing.prune != Duration::ZERO {
+        s.add(SpanName::Prune, ROOT_SPAN, cursor, us(timing.prune));
+        cursor += us(timing.prune);
+    }
+    if timing.score != Duration::ZERO {
+        s.add(SpanName::Score, ROOT_SPAN, cursor, us(timing.score));
+        cursor += us(timing.score);
+    }
+    if !timing.shards.is_empty() || timing.fanout != Duration::ZERO {
+        let fan = s.add(SpanName::ShardFanout, ROOT_SPAN, cursor, us(timing.fanout));
+        for (i, &(start, dur)) in timing.shards.iter().enumerate() {
+            s.add_lane(SpanName::Shard, fan, cursor + us(start), us(dur), i as u16);
+        }
+        cursor += us(timing.fanout);
+    }
+    if let Some(m) = merge {
+        s.add(SpanName::Merge, ROOT_SPAN, cursor, us(m));
     }
 }
 
 /// Plan and execute one request (the one entry point every serving surface
 /// funnels through).  Results are bit-identical to the legacy per-route
-/// entry points for the same resolved parameters.
+/// entry points for the same resolved parameters — and to an untraced run
+/// of the same request: tracing only reads clocks and appends to a
+/// session-local `Vec`.
 pub fn execute(engine: &SearchEngine, req: &SearchRequest) -> EmdResult<SearchResponse> {
     let plan = plan(engine, req)?;
     engine.metrics().record_batch();
     let queries = req.queries();
     if queries.is_empty() {
-        return Ok(SearchResponse { results: Vec::new(), stats: QueryStats::default(), plan });
+        return Ok(SearchResponse {
+            results: Vec::new(),
+            stats: QueryStats::default(),
+            plan,
+            spans: None,
+        });
     }
-    match plan.cascade {
-        Some(spec) => execute_cascade(engine, queries, spec, plan),
-        None => execute_base(engine, queries, plan),
+    // span recording is opt-in per request, or armed process-wide by the
+    // slow-query log; when off the only cost here is this branch
+    let slow_us = engine.slow_query_us();
+    let mut session = if req.trace || slow_us > 0 {
+        engine.tracer().set_enabled(true);
+        Some(TraceSession::start(engine.tracer()))
+    } else {
+        None
+    };
+    let mut resp = match plan.cascade {
+        Some(spec) => execute_cascade(engine, queries, spec, plan, &mut session),
+        None => execute_base(engine, queries, plan, &mut session),
+    }?;
+    if let Some(s) = session {
+        let total = s.now_us();
+        let spans = s.finish(engine.tracer());
+        if slow_us > 0 && total >= slow_us {
+            let breakdown: Vec<String> = spans
+                .iter()
+                .skip(1) // the root restates `total`
+                .map(|sp| format!("{}={}us", sp.name_str(), sp.dur_us))
+                .collect();
+            crate::log_warn!(
+                "emdpar::slow_query",
+                "trace {} took {}us (threshold {}us, {} queries): {}",
+                spans[0].trace_id,
+                total,
+                slow_us,
+                queries.len(),
+                breakdown.join(" ")
+            );
+        }
+        if req.trace {
+            resp.spans = Some(spans);
+        }
     }
+    Ok(resp)
 }
 
 fn execute_base(
     engine: &SearchEngine,
     queries: &[Histogram],
     plan: QueryPlan,
+    session: &mut Option<TraceSession>,
 ) -> EmdResult<SearchResponse> {
     let t0 = Instant::now();
     // a compressed plan overfetches `keep` stage-1 candidates so the exact
@@ -709,6 +863,7 @@ fn execute_base(
         _ => None,
     });
     let fetch = keep.unwrap_or(plan.l);
+    let base_off = session.as_ref().map(|s| s.now_us()).unwrap_or(0);
     let base = run_base(
         engine,
         queries,
@@ -721,10 +876,18 @@ fn execute_base(
     )?;
     let metrics = engine.metrics();
     let mut stats = QueryStats { queries: queries.len(), ..QueryStats::default() };
+    stats.prune_us = us(base.timing.prune);
+    stats.score_us = us(base.timing.score);
+    stats.fanout_us = us(base.timing.fanout);
     if let Some(m) = base.merge {
         metrics.record_merge(m);
-        stats.merge_us = m.as_micros().min(u128::from(u64::MAX)) as u64;
+        stats.merge_us = us(m);
     }
+    if let Some(s) = session.as_mut() {
+        record_base_spans(s, &base.timing, base.merge, base_off);
+    }
+    let rerank_off = session.as_ref().map(|s| s.now_us()).unwrap_or(0);
+    let rerank_t0 = Instant::now();
     let mut results = Vec::with_capacity(queries.len());
     let mut evals = Vec::with_capacity(queries.len());
     for (r, query) in base.per_query.into_iter().zip(queries) {
@@ -762,12 +925,19 @@ fn execute_base(
         evals.push(evaluated);
         results.push(result);
     }
+    if keep.is_some() {
+        stats.rerank_us = us(rerank_t0.elapsed());
+        if let Some(s) = session.as_mut() {
+            s.add(SpanName::ExactRerank, ROOT_SPAN, rerank_off, stats.rerank_us);
+        }
+    }
     // per-query latency = the batch's amortized share of the full dispatch
     let per_query = t0.elapsed() / queries.len() as u32;
     for e in evals {
         metrics.record_query(per_query, e);
     }
-    Ok(SearchResponse { results, stats, plan })
+    stats.total_us = us(t0.elapsed());
+    Ok(SearchResponse { results, stats, plan, spans: None })
 }
 
 fn execute_cascade(
@@ -775,6 +945,7 @@ fn execute_cascade(
     queries: &[Histogram],
     spec: CascadeSpec,
     plan: QueryPlan,
+    session: &mut Option<TraceSession>,
 ) -> EmdResult<SearchResponse> {
     let t0 = Instant::now();
     let l = plan.l;
@@ -785,6 +956,7 @@ fn execute_cascade(
     // stage 1 fetches one extra candidate: the (keep+1)-th best stage-1
     // bound is exactly the tightest *discarded* bound — the certificate's
     // pruned floor — so no separate full-row scan is needed
+    let base_off = session.as_ref().map(|s| s.now_us()).unwrap_or(0);
     let base = run_base(
         engine,
         queries,
@@ -798,10 +970,18 @@ fn execute_cascade(
 
     let metrics = engine.metrics();
     let mut stats = QueryStats { queries: queries.len(), ..QueryStats::default() };
+    stats.prune_us = us(base.timing.prune);
+    stats.score_us = us(base.timing.score);
+    stats.fanout_us = us(base.timing.fanout);
     if let Some(m) = base.merge {
         metrics.record_merge(m);
-        stats.merge_us = m.as_micros().min(u128::from(u64::MAX)) as u64;
+        stats.merge_us = us(m);
     }
+    if let Some(s) = session.as_mut() {
+        record_base_spans(s, &base.timing, base.merge, base_off);
+    }
+    let rerank_off = session.as_ref().map(|s| s.now_us()).unwrap_or(0);
+    let rerank_t0 = Instant::now();
 
     // stage 2: rerank survivors through the registry's boxed object, with
     // documents resolved from the live corpus (sharded) or the dataset.
@@ -859,12 +1039,17 @@ fn execute_cascade(
         let labels = reranked.hits.iter().map(|&(_, id)| label(id)).collect();
         results.push(SearchResult { hits: reranked.hits, labels });
     }
+    stats.rerank_us = us(rerank_t0.elapsed());
+    if let Some(s) = session.as_mut() {
+        s.add(SpanName::CascadeRerank, ROOT_SPAN, rerank_off, stats.rerank_us);
+    }
     let per_query = t0.elapsed() / queries.len() as u32;
     for e in evals {
         metrics.record_query(per_query, e);
     }
     metrics.record_cascade(queries.len(), stats.reranked);
-    Ok(SearchResponse { results, stats, plan })
+    stats.total_us = us(t0.elapsed());
+    Ok(SearchResponse { results, stats, plan, spans: None })
 }
 
 #[cfg(test)]

@@ -11,6 +11,9 @@
 //! {"op": "add_docs", "docs": [[[vocab_idx, weight], ...], ...],
 //!  "labels": [0, 1]}
 //! {"op": "stats"}
+//! {"op": "stats", "reset": true}
+//! {"op": "metrics"}
+//! {"op": "trace"}
 //! {"op": "ping"}
 //! ```
 //! `"nprobe"` is optional: with an IVF index configured it overrides the
@@ -27,7 +30,18 @@
 //! index shape plus pruning counters when an index is active, per-shard
 //! document counts / index shapes (`"shards"`) when the corpus is sharded,
 //! and the serving histograms / admission counters.
-//! Search requests additionally accept `"deadline_ms"`: a per-request
+//! `{"op": "stats", "reset": true}` additionally zeroes every counter and
+//! latency histogram after snapshotting (the response reports the
+//! *post-reset* state, so a scrape-and-reset client sees zeros).
+//! `{"op": "metrics"}` answers `{"ok": true, "metrics": "..."}` with the
+//! Prometheus text-format (0.0.4) exposition of the same counters — the
+//! line-protocol twin of `emdpar serve --metrics-addr`'s `GET /metrics`.
+//! `{"op": "trace"}` answers the collector ring as Chrome trace-event JSON
+//! (`{"ok": true, "dropped": n, "traceEvents": [...]}`) that loads directly
+//! into `chrome://tracing` / Perfetto; `emdpar trace dump` wraps it.
+//! Search requests additionally accept `"trace": true` — the response then
+//! carries `"trace": [...]`, the per-stage span timeline of the executing
+//! plan (see [`crate::obs`]) — and `"deadline_ms"`: a per-request
 //! budget (overriding the server's `serve.deadline_ms` default; 0 disables)
 //! after which the job is shed with `{"ok": false, "error": "deadline
 //! exceeded"}` instead of burning compute.
@@ -99,7 +113,12 @@ pub(crate) fn process_line(
     }
     let result = match wire::decode_line(trimmed) {
         Decoded::Ping => Ok(Handled::Line(PING_LINE.to_vec())),
-        Decoded::Stats => Ok(Handled::Line(stats_json(engine).to_string_compact().into_bytes())),
+        Decoded::Stats { reset } => {
+            if reset {
+                engine.metrics().reset();
+            }
+            Ok(Handled::Line(stats_json(engine).to_string_compact().into_bytes()))
+        }
         Decoded::Search { req, id, deadline_ms } => {
             finish_search(req, id, deadline_ms, engine, default_deadline_ms)
         }
@@ -125,7 +144,14 @@ fn handle_cold(
     let req = Json::parse(line).map_err(|e| EmdError::protocol(format!("bad json: {e}")))?;
     match req.get("op").and_then(Json::as_str).unwrap_or("search") {
         "ping" => Ok(Handled::Line(PING_LINE.to_vec())),
-        "stats" => Ok(Handled::Line(stats_json(engine).to_string_compact().into_bytes())),
+        "stats" => {
+            if req.get("reset").and_then(Json::as_bool) == Some(true) {
+                engine.metrics().reset();
+            }
+            Ok(Handled::Line(stats_json(engine).to_string_compact().into_bytes()))
+        }
+        "metrics" => Ok(Handled::Line(metrics_json(engine).to_string_compact().into_bytes())),
+        "trace" => Ok(Handled::Line(trace_json(engine).to_string_compact().into_bytes())),
         "add_docs" => {
             Ok(Handled::Line(add_docs_json(&req, engine)?.to_string_compact().into_bytes()))
         }
@@ -221,6 +247,21 @@ fn stats_json(engine: &SearchEngine) -> Json {
         }
     }
     j
+}
+
+/// The `metrics` op: Prometheus text exposition carried over the line
+/// protocol (the HTTP listener serves the same bytes at `GET /metrics`).
+fn metrics_json(engine: &SearchEngine) -> Json {
+    let text = crate::obs::prom::render(&engine.metrics(), Some(engine.tracer()));
+    Json::obj(vec![("ok", true.into()), ("metrics", Json::Str(text))])
+}
+
+/// The `trace` op: the span ring as Chrome trace-event JSON.  Extra
+/// top-level keys (`ok`, `dropped`) are ignored by trace viewers, so the
+/// response line loads into `chrome://tracing` unmodified.
+fn trace_json(engine: &SearchEngine) -> Json {
+    let snap = engine.tracer().snapshot();
+    crate::obs::chrome::render(&snap.spans, snap.dropped)
 }
 
 /// The `add_docs` op: append documents to the sharded live corpus.
@@ -474,6 +515,45 @@ mod tests {
         assert_eq!(out[0].get("pong"), Some(&Json::Bool(true)));
         assert_eq!(out[1].get("ok"), Some(&Json::Bool(true)));
         assert_eq!(out[1].get("n").and_then(Json::as_usize), Some(30));
+    }
+
+    #[test]
+    fn metrics_trace_and_reset_ops() {
+        let out = roundtrip(&[
+            // a traced search first so the ring has spans and the counters
+            // have something to reset
+            "{\"op\": \"search_id\", \"id\": 1, \"l\": 2, \"trace\": true}".into(),
+            "{\"op\": \"metrics\"}".into(),
+            "{\"op\": \"trace\"}".into(),
+            "{\"op\": \"stats\", \"reset\": true}".into(),
+            "{\"op\": \"stats\"}".into(),
+        ]);
+        // traced search embeds its per-stage timeline
+        assert_eq!(out[0].get("ok"), Some(&Json::Bool(true)), "{:?}", out[0]);
+        let tl = out[0].get("trace").and_then(Json::as_arr).expect("timeline embedded");
+        assert_eq!(tl[0].get("name").and_then(Json::as_str), Some("request"));
+        assert!(tl.len() >= 2, "root plus at least one stage span: {tl:?}");
+        // metrics: Prometheus text riding in a JSON string
+        assert_eq!(out[1].get("ok"), Some(&Json::Bool(true)));
+        let text = out[1].get("metrics").and_then(Json::as_str).unwrap();
+        assert!(text.contains("emdpar_queries_total 1"), "{text}");
+        assert!(text.contains("emdpar_trace_spans_total"), "{text}");
+        // trace: chrome trace-event export carrying the search's spans
+        let events = out[2].get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(!events.is_empty(), "ring holds the traced search's spans");
+        assert!(out[2].get("dropped").and_then(Json::as_usize).is_some());
+        // reset zeroes the counters; both replies are post-reset snapshots
+        assert_eq!(out[3].get("queries").and_then(Json::as_usize), Some(0));
+        assert_eq!(out[4].get("queries").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn untraced_search_response_has_no_trace_field() {
+        let out = roundtrip(&[
+            "{\"op\": \"search_id\", \"id\": 1, \"l\": 2}".into(),
+        ]);
+        assert_eq!(out[0].get("ok"), Some(&Json::Bool(true)));
+        assert!(out[0].get("trace").is_none(), "{:?}", out[0]);
     }
 
     #[test]

@@ -41,5 +41,5 @@ pub use persist::{
 };
 pub use search::{
     probe_candidates, probe_candidates_tiered, pruned_search, pruned_search_batch,
-    pruned_search_batch_tiered, PrunedSearch,
+    pruned_search_batch_tiered, pruned_search_batch_tiered_timed, PrunedSearch, PrunedTiming,
 };

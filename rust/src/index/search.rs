@@ -15,6 +15,8 @@
 //! batched pruned search returns exactly what per-query pruned search
 //! returns.
 
+use std::time::{Duration, Instant};
+
 use crate::core::{EmdResult, Histogram, Method};
 use crate::coordinator::TopL;
 use crate::emd_ensure;
@@ -126,9 +128,37 @@ pub fn pruned_search_batch_tiered(
     nprobe: usize,
     compressed: bool,
 ) -> EmdResult<Vec<PrunedSearch>> {
+    pruned_search_batch_tiered_timed(engine, index, queries, method, l, nprobe, compressed)
+        .map(|(results, _)| results)
+}
+
+/// Probe/score wall-time split of one pruned batch dispatch — the query
+/// planner's `Prune` and `Score` stage timings.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrunedTiming {
+    /// IVF list selection plus candidate-union assembly.
+    pub probe: Duration,
+    /// Candidate scoring through the batched subset pipeline, including
+    /// the per-query top-ℓ ranking.
+    pub score: Duration,
+}
+
+/// [`pruned_search_batch_tiered`] returning the probe/score wall-time
+/// split alongside the results (identical results, zero extra work beyond
+/// two `Instant` reads).
+pub fn pruned_search_batch_tiered_timed(
+    engine: &LcEngine,
+    index: &IvfIndex,
+    queries: &[Histogram],
+    method: Method,
+    l: usize,
+    nprobe: usize,
+    compressed: bool,
+) -> EmdResult<(Vec<PrunedSearch>, PrunedTiming)> {
     if queries.is_empty() {
-        return Ok(Vec::new());
+        return Ok((Vec::new(), PrunedTiming::default()));
     }
+    let t0 = Instant::now();
     let nprobe = nprobe.clamp(1, index.nlist());
     let mut per_query: Vec<Vec<u32>> = Vec::with_capacity(queries.len());
     for q in queries {
@@ -145,6 +175,7 @@ pub fn pruned_search_batch_tiered(
         u.dedup();
         u
     };
+    let probe_time = t0.elapsed();
 
     // one engine dispatch: (queries, union) distance block through the
     // batched Phase-1 pipeline
@@ -168,7 +199,8 @@ pub fn pruned_search_batch_tiered(
             }
         })
         .collect();
-    Ok(results)
+    let score_time = t0.elapsed().saturating_sub(probe_time);
+    Ok((results, PrunedTiming { probe: probe_time, score: score_time }))
 }
 
 #[cfg(test)]

@@ -35,6 +35,9 @@
 //! * [`serve`] — the async serving runtime: poll(2) event-loop reactors,
 //!   admission control with deadlines, and a zero-copy wire path; the
 //!   legacy thread-per-connection `Server` stays as a compatibility shim.
+//! * [`obs`] — observability: the lock-free span tracer every execute
+//!   path records into, Chrome trace-event export, and Prometheus text
+//!   exposition (`metrics`/`trace` wire ops, `--metrics-addr`).
 //! * [`builder`] — `EngineBuilder`, the one place configuration becomes
 //!   running engines.
 //! * [`data`] — synthetic MNIST-like / 20News-like dataset generators.
@@ -50,6 +53,7 @@ pub mod eval;
 pub mod exact;
 pub mod index;
 pub mod lc;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod shard;
@@ -69,6 +73,7 @@ pub mod prelude {
         F16Tier, Histogram, Method, MethodRegistry, Metric, METHOD_SYNTAX,
     };
     pub use crate::index::{pruned_search, pruned_search_batch, IvfIndex, PrunedSearch};
+    pub use crate::obs::{SpanName, SpanRec, TraceCollector, TraceSession};
     pub use crate::serve::ReactorServer;
     pub use crate::lc::{
         BatchPlanner, EngineParams, KernelBackend, LcBatch, LcEngine, PlanScratch,

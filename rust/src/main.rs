@@ -8,6 +8,7 @@
 //! * `shard`           build / inspect / append to / query the sharded live corpus
 //! * `eval`            reproduce the paper's accuracy tables (5, 6) & sweeps
 //! * `serve`           run the TCP search server
+//! * `trace`           dump a running server's span ring as Chrome trace-event JSON
 //! * `artifacts-check` compile every artifact and cross-check PJRT vs native
 //!
 //! All method dispatch goes through the canonical [`Method`] enum and the
@@ -42,6 +43,7 @@ fn main() {
         "shard" => cmd_shard(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
+        "trace" => cmd_trace(rest),
         "artifacts-check" => cmd_artifacts_check(rest),
         other => {
             eprintln!("unknown subcommand '{other}'\n");
@@ -67,6 +69,7 @@ fn print_help() {
          \x20 shard            build / inspect / append to / query the sharded live corpus (--help)\n\
          \x20 eval             reproduce accuracy tables / sweeps (--help)\n\
          \x20 serve            run the TCP search server (--help)\n\
+         \x20 trace            dump a server's span ring as Chrome trace-event JSON (--help)\n\
          \x20 artifacts-check  compile artifacts, verify PJRT == native\n"
     );
 }
@@ -674,7 +677,19 @@ fn cmd_serve(args: &[String]) -> EmdResult<()> {
         .opt("max-inflight", "", "admission budget: searches in flight before shedding")
         .opt("deadline-ms", "", "default per-request deadline, ms (0 = none)")
         .opt("idle-timeout-ms", "", "close idle connections after this many ms (0 = never)")
-        .opt("max-line-bytes", "", "hard request-line length cap in bytes");
+        .opt("max-line-bytes", "", "hard request-line length cap in bytes")
+        .opt(
+            "slow-query-us",
+            "",
+            "WARN-log requests slower than this many µs with their per-stage \
+             breakdown (0 = off; EMDPAR_SLOW_QUERY_US overrides)",
+        )
+        .opt("trace-buffer", "", "span ring capacity in records (~40 bytes each, min 16)")
+        .opt(
+            "metrics-addr",
+            "",
+            "also serve Prometheus text at http://<addr>/metrics (empty = off)",
+        );
     if args.iter().any(|a| a == "--help") {
         println!("{}", spec.usage("emdpar"));
         return Ok(());
@@ -702,9 +717,23 @@ fn cmd_serve(args: &[String]) -> EmdResult<()> {
     if !p.str("max-line-bytes").is_empty() {
         cfg.serve.max_line_bytes = p.usize("max-line-bytes")?;
     }
+    if !p.str("slow-query-us").is_empty() {
+        cfg.serve.slow_query_us = p.usize("slow-query-us")? as u64;
+    }
+    if !p.str("trace-buffer").is_empty() {
+        cfg.serve.trace_buffer = p.usize("trace-buffer")?;
+    }
     let runtime = p.str("runtime").to_string();
     let listen = cfg.listen.clone();
     let engine = EngineBuilder::from_config(cfg).build_search()?;
+    if let Some(maddr) = p.opt_str("metrics-addr").filter(|s| !s.is_empty()) {
+        let metrics = engine.metrics();
+        let tracer = engine.tracer_arc();
+        let render: std::sync::Arc<dyn Fn() -> String + Send + Sync> =
+            std::sync::Arc::new(move || emdpar::obs::prom::render(&metrics, Some(&tracer)));
+        let (bound, _handle) = emdpar::obs::http::spawn_metrics(maddr, render)?;
+        println!("metrics: http://{bound}/metrics (Prometheus text 0.0.4)");
+    }
     println!(
         "dataset '{}' ({} docs) ready; listening on {listen} ({runtime} runtime)",
         engine.dataset().name,
@@ -717,6 +746,48 @@ fn cmd_serve(args: &[String]) -> EmdResult<()> {
             "unknown --runtime '{other}' (expected 'reactor' or 'threads')"
         ))),
     }
+}
+
+fn cmd_trace(args: &[String]) -> EmdResult<()> {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    let spec = CommandSpec::new(
+        "trace",
+        "dump a running server's span ring as Chrome trace-event JSON",
+    )
+    .opt("op", "dump", "dump")
+    .opt("addr", "127.0.0.1:7878", "server address (the line-protocol listener)")
+    .opt("out", "", "write the JSON here (default: stdout)");
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage("emdpar"));
+        return Ok(());
+    }
+    let p = spec.parse(args)?;
+    emdpar::emd_ensure!(
+        p.str("op") == "dump",
+        "unknown trace op '{}' (expected 'dump')",
+        p.str("op")
+    );
+    let addr = p.str("addr");
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut w = stream;
+    w.write_all(b"{\"op\":\"trace\"}\n")?;
+    w.flush()?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let line = line.trim();
+    emdpar::emd_ensure!(!line.is_empty(), "empty response from {addr}");
+    // the response line IS the trace-event JSON (extra top-level keys are
+    // ignored by chrome://tracing / Perfetto)
+    match p.opt_str("out") {
+        Some(path) if !path.is_empty() => {
+            std::fs::write(path, format!("{line}\n"))?;
+            eprintln!("wrote {path}");
+        }
+        _ => println!("{line}"),
+    }
+    Ok(())
 }
 
 fn cmd_artifacts_check(args: &[String]) -> EmdResult<()> {

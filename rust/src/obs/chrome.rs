@@ -1,0 +1,111 @@
+//! Chrome trace-event JSON export of recorded spans.
+//!
+//! The emitted object follows the Trace Event Format's "JSON Object
+//! Format": a `traceEvents` array of complete (`"ph":"X"`) events with
+//! microsecond `ts`/`dur`.  Extra top-level keys are ignored by the
+//! loaders, so the `trace` wire op's response line — which also carries
+//! `"ok"` and `"dropped"` — loads directly into `chrome://tracing` or
+//! Perfetto.
+
+use crate::obs::trace::SpanRec;
+use crate::util::json::Json;
+
+/// Render spans as a Trace-Event JSON object (single line).
+/// `dropped` reports ring-wraparound losses alongside the events.
+pub fn render(spans: &[SpanRec], dropped: u64) -> Json {
+    let events: Vec<Json> = spans.iter().map(event).collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("dropped", Json::Num(dropped as f64)),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// One complete event.  `pid` groups everything under one process row;
+/// `tid` separates fan-out lanes (shard index, connection token) so
+/// parallel children render stacked instead of overlapping.
+fn event(s: &SpanRec) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(s.name_str().to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("ts", Json::Num(s.start_us as f64)),
+        ("dur", Json::Num(s.dur_us as f64)),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(s.tid as f64)),
+        (
+            "args",
+            Json::obj(vec![
+                ("trace_id", Json::Num(s.trace_id as f64)),
+                ("span_id", Json::Num(s.span_id as f64)),
+                ("parent_id", Json::Num(s.parent_id as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Render the per-response span timeline (session-relative starts) as a
+/// plain JSON array — the `"trace"` field of a traced search response.
+pub fn timeline(spans: &[SpanRec]) -> Json {
+    Json::Arr(
+        spans
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::Str(s.name_str().to_string())),
+                    ("id", Json::Num(s.span_id as f64)),
+                    ("parent", Json::Num(s.parent_id as f64)),
+                    ("tid", Json::Num(s.tid as f64)),
+                    ("start_us", Json::Num(s.start_us as f64)),
+                    ("dur_us", Json::Num(s.dur_us as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::SpanName;
+
+    fn span(id: u16, parent: u16, name: SpanName) -> SpanRec {
+        SpanRec {
+            trace_id: 9,
+            span_id: id,
+            parent_id: parent,
+            name: name as u16,
+            tid: 0,
+            start_us: 5 * id as u64,
+            dur_us: 4,
+        }
+    }
+
+    #[test]
+    fn export_is_valid_json_with_complete_events() {
+        let spans =
+            [span(1, 0, SpanName::Request), span(2, 1, SpanName::Prune), span(3, 1, SpanName::Score)];
+        let j = render(&spans, 2);
+        let text = j.to_string_compact();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(back.get("dropped").unwrap().as_usize(), Some(2));
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        for ev in events {
+            assert_eq!(ev.get("ph").unwrap().as_str(), Some("X"));
+            assert!(ev.get("ts").is_some() && ev.get("dur").is_some());
+            assert!(ev.get("pid").is_some() && ev.get("tid").is_some());
+            assert!(ev.get("args").unwrap().get("trace_id").is_some());
+        }
+        assert_eq!(events[1].get("name").unwrap().as_str(), Some("prune"));
+    }
+
+    #[test]
+    fn timeline_carries_parent_links() {
+        let spans = [span(1, 0, SpanName::Request), span(2, 1, SpanName::Merge)];
+        let arr = timeline(&spans);
+        let items = arr.as_arr().unwrap();
+        assert_eq!(items[1].get("parent").unwrap().as_usize(), Some(1));
+        assert_eq!(items[1].get("name").unwrap().as_str(), Some("merge"));
+    }
+}

@@ -1,0 +1,145 @@
+//! Dependency-free mini HTTP/1.0 listener for Prometheus scrapes.
+//!
+//! Serves exactly one route — `GET /metrics` — with `Connection: close`
+//! semantics; anything else is a 404.  One connection is handled at a
+//! time: a scrape renders a few KiB of text, so serialization is cheaper
+//! than threads, and a stuck scraper can't pile up sockets (reads are
+//! capped and time-limited).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::core::EmdResult;
+
+/// Most generous request head we accept before answering anyway: scrape
+/// requests are one line plus a handful of headers.
+const MAX_HEAD: usize = 4096;
+
+/// Bind `addr` and serve `GET /metrics` forever on a background thread,
+/// rendering the body through `render` per scrape.  Returns the bound
+/// address (port 0 resolves an ephemeral port for tests) and the listener
+/// thread handle.
+pub fn spawn_metrics(
+    addr: &str,
+    render: Arc<dyn Fn() -> String + Send + Sync>,
+) -> EmdResult<(SocketAddr, JoinHandle<()>)> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let handle = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { continue };
+            let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+            let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+            let path = read_request_path(&mut stream);
+            let response = match path.as_deref() {
+                Some("/metrics") | Some("/metrics/") => ok_response(&render()),
+                Some(_) => not_found(),
+                None => bad_request(),
+            };
+            let _ = stream.write_all(response.as_bytes());
+        }
+    });
+    Ok((local, handle))
+}
+
+/// Read up to the end of the request head (blank line) and return the
+/// request-target of the first line, or `None` on malformed input.
+fn read_request_path(stream: &mut impl Read) -> Option<String> {
+    let mut head = Vec::with_capacity(512);
+    let mut buf = [0u8; 512];
+    let complete = |h: &[u8]| {
+        // blank line ends the head; a bare-LF pair works too
+        h.windows(4).any(|w| w == b"\r\n\r\n") || h.windows(2).any(|w| w == b"\n\n")
+    };
+    while head.len() < MAX_HEAD && !complete(&head) {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&buf[..n]),
+            Err(_) => break,
+        }
+    }
+    let first = head.split(|&b| b == b'\n').next()?;
+    let line = std::str::from_utf8(first).ok()?.trim_end_matches('\r');
+    let mut parts = line.split(' ');
+    let method = parts.next()?;
+    let target = parts.next()?;
+    if method != "GET" {
+        return None;
+    }
+    Some(target.to_string())
+}
+
+fn ok_response(body: &str) -> String {
+    format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )
+}
+
+fn not_found() -> String {
+    let body = "not found\n";
+    format!(
+        "HTTP/1.0 404 Not Found\r\nContent-Type: text/plain\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )
+}
+
+fn bad_request() -> String {
+    let body = "bad request\n";
+    format!(
+        "HTTP/1.0 400 Bad Request\r\nContent-Type: text/plain\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpStream;
+
+    fn scrape(addr: SocketAddr, request: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_everything_else() {
+        let body = Arc::new(|| "emdpar_up 1\n".to_string());
+        let (addr, _handle) = spawn_metrics("127.0.0.1:0", body).unwrap();
+        let ok = scrape(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(ok.starts_with("HTTP/1.0 200 OK"), "{ok}");
+        assert!(ok.contains("text/plain; version=0.0.4"));
+        assert!(ok.ends_with("emdpar_up 1\n"));
+        let missing = scrape(addr, "GET /other HTTP/1.1\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.0 404"), "{missing}");
+        let bad = scrape(addr, "POST /metrics HTTP/1.1\r\n\r\n");
+        assert!(bad.starts_with("HTTP/1.0 400"), "{bad}");
+    }
+
+    #[test]
+    fn content_length_matches_body() {
+        let body = Arc::new(|| "emdpar_queries_total 7\n".to_string());
+        let (addr, _handle) = spawn_metrics("127.0.0.1:0", body).unwrap();
+        let resp = scrape(addr, "GET /metrics HTTP/1.0\r\n\r\n");
+        let (head, payload) = resp.split_once("\r\n\r\n").unwrap();
+        let len: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(len, payload.len());
+    }
+}

@@ -1,0 +1,26 @@
+//! Observability: end-to-end query tracing and metrics exposition.
+//!
+//! Layers:
+//! * [`trace`] — the span model: a lock-free ring-buffer [`TraceCollector`]
+//!   with bounded memory and drop counting, plus the per-request
+//!   [`TraceSession`] recorder the execute paths write into,
+//! * [`chrome`] — Chrome trace-event JSON export (`chrome://tracing` /
+//!   Perfetto loadable) of the collector ring,
+//! * [`prom`] — Prometheus text exposition (version 0.0.4) of the
+//!   aggregate [`crate::coordinator::Metrics`],
+//! * [`http`] — a dependency-free mini HTTP listener serving `/metrics`
+//!   (`emdpar serve --metrics-addr`).
+//!
+//! Tracing is opt-in per request (`SearchRequest::trace`) or armed globally
+//! by the slow-query log (`ServeParams::slow_query_us` /
+//! `EMDPAR_SLOW_QUERY_US`).  When neither is active the execute paths only
+//! take a handful of stage-boundary `Instant` timestamps (to fill the
+//! always-on per-stage `QueryStats` fields) and skip span recording after a
+//! single relaxed atomic check — results are bit-identical either way.
+
+pub mod chrome;
+pub mod http;
+pub mod prom;
+pub mod trace;
+
+pub use trace::{SpanName, SpanRec, TraceCollector, TraceSession, TraceSnapshot, ROOT_SPAN};

@@ -1,0 +1,190 @@
+//! Prometheus text exposition (format version 0.0.4) of the aggregate
+//! engine metrics — served by the `metrics` wire op and the
+//! `--metrics-addr` mini HTTP listener.
+//!
+//! Counters map to `emdpar_*_total`; the log-bucketed [`LatencyHist`]s map
+//! to native Prometheus histograms with cumulative `_bucket{le=...}`
+//! series (upper bounds are the power-of-two bucket edges), `_sum` and
+//! `_count`.
+
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+
+use crate::coordinator::metrics::{LatencyHist, Metrics};
+use crate::obs::trace::TraceCollector;
+
+/// Render the full exposition page.  `tracer` is optional so callers
+/// without a collector (unit tests, the legacy server) can still expose
+/// the counter set.
+pub fn render(metrics: &Metrics, tracer: Option<&TraceCollector>) -> String {
+    let mut out = String::with_capacity(4096);
+    let counters: &[(&str, &str, u64)] = &[
+        ("queries", "Queries answered", metrics.queries.load(Ordering::Relaxed)),
+        ("batches", "Plan executions (dispatch groups)", metrics.batches.load(Ordering::Relaxed)),
+        ("errors", "Request errors", metrics.errors.load(Ordering::Relaxed)),
+        (
+            "distance_evals",
+            "Distance evaluations",
+            metrics.distance_evals.load(Ordering::Relaxed),
+        ),
+        (
+            "index_queries",
+            "Queries routed through the IVF index",
+            metrics.index_queries.load(Ordering::Relaxed),
+        ),
+        (
+            "lists_probed",
+            "Inverted lists visited",
+            metrics.lists_probed.load(Ordering::Relaxed),
+        ),
+        (
+            "candidates_scored",
+            "Candidates scored by index-routed queries",
+            metrics.candidates_scored.load(Ordering::Relaxed),
+        ),
+        (
+            "cascade_queries",
+            "Queries answered through a cascade plan",
+            metrics.cascade_queries.load(Ordering::Relaxed),
+        ),
+        (
+            "reranked",
+            "Candidates rescored by rerank stages",
+            metrics.reranked_total.load(Ordering::Relaxed),
+        ),
+        (
+            "shard_batches",
+            "Sharded fan-out dispatches",
+            metrics.shard_batches.load(Ordering::Relaxed),
+        ),
+        ("merge_us", "Microseconds spent in cross-shard merges", metrics.merge_us()),
+        ("admitted", "Searches admitted into the bridge", metrics.admitted.load(Ordering::Relaxed)),
+        ("shed", "Searches shed at admission", metrics.shed.load(Ordering::Relaxed)),
+        (
+            "deadline_expired",
+            "Searches shed on an expired deadline",
+            metrics.deadline_expired.load(Ordering::Relaxed),
+        ),
+    ];
+    for &(name, help, value) in counters {
+        let _ = writeln!(out, "# HELP emdpar_{name}_total {help}");
+        let _ = writeln!(out, "# TYPE emdpar_{name}_total counter");
+        let _ = writeln!(out, "emdpar_{name}_total {value}");
+    }
+    let _ = writeln!(out, "# HELP emdpar_pruned_fraction Database fraction not scored by index-routed queries");
+    let _ = writeln!(out, "# TYPE emdpar_pruned_fraction gauge");
+    let _ = writeln!(out, "emdpar_pruned_fraction {}", metrics.pruned_fraction());
+    if let Some(t) = tracer {
+        let _ = writeln!(out, "# HELP emdpar_trace_spans_total Spans pushed into the trace ring");
+        let _ = writeln!(out, "# TYPE emdpar_trace_spans_total counter");
+        let _ = writeln!(out, "emdpar_trace_spans_total {}", t.total());
+        let _ = writeln!(out, "# HELP emdpar_trace_dropped_total Spans lost to ring wraparound");
+        let _ = writeln!(out, "# TYPE emdpar_trace_dropped_total counter");
+        let _ = writeln!(out, "emdpar_trace_dropped_total {}", t.dropped());
+    }
+    histogram(&mut out, "queue_wait_us", "Enqueue to batch-drain wait", &metrics.queue_wait);
+    histogram(&mut out, "execute_us", "Engine execute time per dispatch group", &metrics.execute);
+    histogram(&mut out, "e2e_us", "Enqueue to response-serialized end-to-end time", &metrics.e2e);
+    out
+}
+
+/// Emit one histogram: cumulative `le` buckets, `+Inf`, `_sum`, `_count`.
+fn histogram(out: &mut String, name: &str, help: &str, h: &LatencyHist) {
+    let _ = writeln!(out, "# HELP emdpar_{name} {help}");
+    let _ = writeln!(out, "# TYPE emdpar_{name} histogram");
+    let mut cumulative = 0u64;
+    for (i, count) in h.bucket_counts().into_iter().enumerate() {
+        cumulative += count;
+        match LatencyHist::bucket_bound(i) {
+            Some(le) => {
+                let _ = writeln!(out, "emdpar_{name}_bucket{{le=\"{le}\"}} {cumulative}");
+            }
+            None => {
+                let _ = writeln!(out, "emdpar_{name}_bucket{{le=\"+Inf\"}} {cumulative}");
+            }
+        }
+    }
+    let _ = writeln!(out, "emdpar_{name}_sum {}", h.sum_us());
+    let _ = writeln!(out, "emdpar_{name}_count {}", h.count());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// A minimal exposition-format grammar check shared with the CI lint:
+    /// every line is a comment or `name[{labels}] value`.
+    pub fn lint(text: &str) -> Result<(), String> {
+        let name_ok = |s: &str| {
+            !s.is_empty()
+                && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        };
+        for (ln, line) in text.lines().enumerate() {
+            if line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+                continue;
+            }
+            let (series, value) = line
+                .rsplit_once(' ')
+                .ok_or_else(|| format!("line {}: no value: {line:?}", ln + 1))?;
+            value
+                .parse::<f64>()
+                .map_err(|_| format!("line {}: bad value {value:?}", ln + 1))?;
+            let base = match series.split_once('{') {
+                Some((base, labels)) => {
+                    if !labels.ends_with('}') {
+                        return Err(format!("line {}: unclosed labels", ln + 1));
+                    }
+                    base
+                }
+                None => series,
+            };
+            if !name_ok(base) {
+                return Err(format!("line {}: bad metric name {base:?}", ln + 1));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn exposition_passes_the_format_lint() {
+        let m = Metrics::new();
+        m.record_query(Duration::from_micros(120), 40);
+        m.record_probe(4, 25, 100);
+        m.e2e.record(Duration::from_micros(300));
+        let t = TraceCollector::new(32);
+        let text = render(&m, Some(&t));
+        lint(&text).unwrap();
+        assert!(text.contains("emdpar_queries_total 1"));
+        assert!(text.contains("emdpar_trace_dropped_total 0"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_inf() {
+        let m = Metrics::new();
+        // 10 µs -> le=16 bucket; 5000 µs -> le=8192 bucket
+        m.e2e.record_us(10);
+        m.e2e.record_us(5000);
+        let text = render(&m, None);
+        assert!(text.contains("emdpar_e2e_us_bucket{le=\"16\"} 1"));
+        assert!(text.contains("emdpar_e2e_us_bucket{le=\"8192\"} 2"));
+        assert!(text.contains("emdpar_e2e_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("emdpar_e2e_us_sum 5010"));
+        assert!(text.contains("emdpar_e2e_us_count 2"));
+        // cumulative counts never decrease within one histogram
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("emdpar_e2e_us_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "non-cumulative bucket: {line}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn lint_rejects_malformed_lines() {
+        assert!(lint("emdpar_ok_total 1").is_ok());
+        assert!(lint("no-dashes-allowed 1").is_err());
+        assert!(lint("emdpar_x_total notanumber").is_err());
+        assert!(lint("emdpar_x_bucket{le=\"2\" 3").is_err());
+    }
+}

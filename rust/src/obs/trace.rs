@@ -1,0 +1,498 @@
+//! Lock-free span tracer: a bounded ring-buffer collector plus the
+//! per-request session recorder.
+//!
+//! Every span is four machine words (trace id, packed ids/name, start,
+//! duration) written into a fixed-capacity ring guarded by a per-slot
+//! sequence counter (a seqlock built entirely from `AtomicU64`s — no
+//! `unsafe`).  Writers claim a slot with a single `fetch_add` ticket;
+//! readers skip slots whose sequence changes mid-read.  When the ring
+//! wraps, the oldest spans are overwritten and counted as dropped —
+//! memory stays bounded no matter how long the process traces.
+//!
+//! Span names are indices into a static table ([`SpanName`]) so a record
+//! never carries a pointer that could tear.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Stage names a span can carry.  The discriminant is the wire id; the
+/// static table below maps it back to a label.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u16)]
+pub enum SpanName {
+    /// Whole-request root span (one per traced `execute`).
+    Request = 0,
+    /// IVF probe: selecting candidate lists per query.
+    Prune = 1,
+    /// Phase-1/2 scoring of the candidate set.
+    Score = 2,
+    /// Parallel dispatch over the sharded corpus.
+    ShardFanout = 3,
+    /// One shard's probe+score work (child of `ShardFanout`; `tid` = shard).
+    Shard = 4,
+    /// k-way merge of per-shard top-ℓ rows.
+    Merge = 5,
+    /// Bound-certified cascade rerank of stage-1 survivors.
+    CascadeRerank = 6,
+    /// Exact-f32 rescoring after a compressed stage 1.
+    ExactRerank = 7,
+    /// Batcher linger: first enqueue until the group dispatched.
+    BatchGather = 8,
+    /// Bridge dispatch of one grouped `engine.execute`.
+    Dispatch = 9,
+    /// Reactor connection read phase (`tid` = connection token).
+    ConnRead = 10,
+    /// Reactor connection write phase (`tid` = connection token).
+    ConnWrite = 11,
+}
+
+/// Label table indexed by the `SpanName` discriminant.
+pub const SPAN_NAMES: &[&str] = &[
+    "request",
+    "prune",
+    "score",
+    "shard_fanout",
+    "shard",
+    "merge",
+    "cascade_rerank",
+    "exact_rerank",
+    "batch_gather",
+    "dispatch",
+    "conn_read",
+    "conn_write",
+];
+
+impl SpanName {
+    pub fn as_str(self) -> &'static str {
+        SPAN_NAMES[self as u16 as usize]
+    }
+
+    /// Reverse lookup for ids read back out of the ring; unknown ids (from
+    /// a torn wrap-race record) fall back to `Request`.
+    pub fn from_u16(id: u16) -> SpanName {
+        match id {
+            1 => SpanName::Prune,
+            2 => SpanName::Score,
+            3 => SpanName::ShardFanout,
+            4 => SpanName::Shard,
+            5 => SpanName::Merge,
+            6 => SpanName::CascadeRerank,
+            7 => SpanName::ExactRerank,
+            8 => SpanName::BatchGather,
+            9 => SpanName::Dispatch,
+            10 => SpanName::ConnRead,
+            11 => SpanName::ConnWrite,
+            _ => SpanName::Request,
+        }
+    }
+}
+
+/// One recorded span.  `start_us` is relative to the session root when the
+/// record sits in a response timeline, and relative to the collector epoch
+/// when it sits in the ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanRec {
+    pub trace_id: u64,
+    /// 1-based span id unique within the trace; the root is always 1.
+    pub span_id: u16,
+    /// Parent span id; 0 marks the root.
+    pub parent_id: u16,
+    /// Index into [`SPAN_NAMES`].
+    pub name: u16,
+    /// Lane: shard index / connection token for fan-out spans, else 0.
+    pub tid: u16,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl SpanRec {
+    pub fn name_str(&self) -> &'static str {
+        SpanName::from_u16(self.name).as_str()
+    }
+
+    fn pack_ids(&self) -> u64 {
+        ((self.span_id as u64) << 48)
+            | ((self.parent_id as u64) << 32)
+            | ((self.name as u64) << 16)
+            | self.tid as u64
+    }
+
+    fn from_words(w: [u64; 4]) -> SpanRec {
+        SpanRec {
+            trace_id: w[0],
+            span_id: (w[1] >> 48) as u16,
+            parent_id: (w[1] >> 32) as u16,
+            name: (w[1] >> 16) as u16,
+            tid: w[1] as u16,
+            start_us: w[2],
+            dur_us: w[3],
+        }
+    }
+}
+
+/// One ring slot: a sequence counter plus the four record words.  Odd
+/// sequence = write in progress; readers accept a slot only when the
+/// sequence is even and unchanged across the read.
+struct Slot {
+    seq: AtomicU64,
+    words: [AtomicU64; 4],
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            words: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+        }
+    }
+}
+
+/// A consistent copy of the ring at one point in time.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSnapshot {
+    /// Readable spans sorted by start time (collector-epoch relative).
+    pub spans: Vec<SpanRec>,
+    /// Spans overwritten by ring wraparound since the last reset.
+    pub dropped: u64,
+    /// Total spans ever pushed.
+    pub total: u64,
+}
+
+/// Bounded lock-free span sink shared by every layer of the engine.
+pub struct TraceCollector {
+    epoch: Instant,
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+    enabled: AtomicBool,
+    next_trace: AtomicU64,
+}
+
+impl TraceCollector {
+    /// `capacity` is clamped to at least 16 slots; memory is
+    /// `capacity * 40` bytes, fixed for the collector's lifetime.
+    pub fn new(capacity: usize) -> TraceCollector {
+        let cap = capacity.max(16);
+        TraceCollector {
+            epoch: Instant::now(),
+            slots: (0..cap).map(|_| Slot::empty()).collect(),
+            head: AtomicU64::new(0),
+            enabled: AtomicBool::new(false),
+            next_trace: AtomicU64::new(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The hot-path guard: a single relaxed load.  Execute paths skip all
+    /// span recording when this is false.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Arm (or disarm) ambient span collection — flipped on by the first
+    /// traced request or a configured slow-query threshold.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Microseconds since the collector epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    pub fn next_trace_id(&self) -> u64 {
+        self.next_trace.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Push one span into the ring, overwriting the oldest when full.
+    ///
+    /// Writer protocol: claim a monotonically increasing ticket, mark the
+    /// slot odd, write the words, mark it even with the ticket's own
+    /// sequence.  `fetch_max` keeps the sequence monotonic when a lapped
+    /// writer races a faster one on the same slot; the reader's
+    /// same-sequence recheck rejects any mixed read.  (Two writers a full
+    /// ring apart can interleave word writes — last-writer-wins on a
+    /// diagnostic record, never on search results.)
+    pub fn push(&self, rec: SpanRec) {
+        let ticket = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(ticket % self.slots.len() as u64) as usize];
+        let odd = ticket * 2 + 1;
+        slot.seq.fetch_max(odd, Ordering::SeqCst);
+        slot.words[0].store(rec.trace_id, Ordering::Relaxed);
+        slot.words[1].store(rec.pack_ids(), Ordering::Relaxed);
+        slot.words[2].store(rec.start_us, Ordering::Relaxed);
+        slot.words[3].store(rec.dur_us, Ordering::Relaxed);
+        slot.seq.fetch_max(odd + 1, Ordering::SeqCst);
+    }
+
+    /// Total spans ever pushed.
+    pub fn total(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Spans lost to ring wraparound: everything past capacity.
+    pub fn dropped(&self) -> u64 {
+        self.total().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Copy out every readable span, oldest first.
+    pub fn snapshot(&self) -> TraceSnapshot {
+        let mut spans = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            let s1 = slot.seq.load(Ordering::SeqCst);
+            if s1 == 0 || s1 % 2 == 1 {
+                continue; // never written, or a write in progress
+            }
+            let words = [
+                slot.words[0].load(Ordering::Relaxed),
+                slot.words[1].load(Ordering::Relaxed),
+                slot.words[2].load(Ordering::Relaxed),
+                slot.words[3].load(Ordering::Relaxed),
+            ];
+            if slot.seq.load(Ordering::SeqCst) != s1 {
+                continue; // overwritten while reading
+            }
+            spans.push(SpanRec::from_words(words));
+        }
+        spans.sort_by_key(|s| (s.start_us, s.trace_id, s.span_id));
+        TraceSnapshot { spans, dropped: self.dropped(), total: self.total() }
+    }
+}
+
+/// Per-request span recorder.  Lives on the executing thread's stack, so
+/// `add` is a plain `Vec::push`; the finished timeline is flushed into the
+/// shared ring in one pass.
+pub struct TraceSession {
+    trace_id: u64,
+    t0: Instant,
+    /// Offset of `t0` from the collector epoch (ring records are
+    /// epoch-relative so one Chrome export holds many requests).
+    base_us: u64,
+    spans: Vec<SpanRec>,
+    next_id: u16,
+}
+
+/// Parent id of top-level stage spans (the implicit `Request` root).
+pub const ROOT_SPAN: u16 = 1;
+
+impl TraceSession {
+    pub fn start(col: &TraceCollector) -> TraceSession {
+        TraceSession {
+            trace_id: col.next_trace_id(),
+            t0: Instant::now(),
+            base_us: col.now_us(),
+            spans: Vec::with_capacity(8),
+            next_id: ROOT_SPAN, // root takes id 1; children start at 2
+        }
+    }
+
+    pub fn trace_id(&self) -> u64 {
+        self.trace_id
+    }
+
+    /// Microseconds since the session root started.
+    pub fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    /// Record one span (session-relative start) and return its id for use
+    /// as a child's parent.
+    pub fn add(&mut self, name: SpanName, parent: u16, start_us: u64, dur_us: u64) -> u16 {
+        self.add_lane(name, parent, start_us, dur_us, 0)
+    }
+
+    /// [`TraceSession::add`] with an explicit lane (shard index etc).
+    pub fn add_lane(
+        &mut self,
+        name: SpanName,
+        parent: u16,
+        start_us: u64,
+        dur_us: u64,
+        tid: u16,
+    ) -> u16 {
+        self.next_id = self.next_id.saturating_add(1);
+        let id = self.next_id;
+        self.spans.push(SpanRec {
+            trace_id: self.trace_id,
+            span_id: id,
+            parent_id: parent,
+            name: name as u16,
+            tid,
+            start_us,
+            dur_us,
+        });
+        id
+    }
+
+    /// Close the root span, flush everything into the ring
+    /// (epoch-relative), and return the session-relative timeline for
+    /// embedding in the response.
+    pub fn finish(mut self, col: &TraceCollector) -> Vec<SpanRec> {
+        let root = SpanRec {
+            trace_id: self.trace_id,
+            span_id: ROOT_SPAN,
+            parent_id: 0,
+            name: SpanName::Request as u16,
+            tid: 0,
+            start_us: 0,
+            dur_us: self.now_us(),
+        };
+        self.spans.insert(0, root);
+        for span in &self.spans {
+            let mut ring = *span;
+            ring.start_us += self.base_us;
+            col.push(ring);
+        }
+        self.spans
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(trace: u64, id: u16, start: u64) -> SpanRec {
+        SpanRec {
+            trace_id: trace,
+            span_id: id,
+            parent_id: if id == 1 { 0 } else { 1 },
+            name: SpanName::Score as u16,
+            tid: 3,
+            start_us: start,
+            dur_us: 7,
+        }
+    }
+
+    #[test]
+    fn pack_roundtrips_every_field() {
+        let r = SpanRec {
+            trace_id: u64::MAX,
+            span_id: 0xBEEF,
+            parent_id: 0x1234,
+            name: SpanName::ConnWrite as u16,
+            tid: 0xFFFF,
+            start_us: 123_456_789,
+            dur_us: 42,
+        };
+        let back = SpanRec::from_words([r.trace_id, r.pack_ids(), r.start_us, r.dur_us]);
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn name_table_matches_discriminants() {
+        for id in 0..SPAN_NAMES.len() as u16 {
+            let n = SpanName::from_u16(id);
+            assert_eq!(n as u16, id);
+            assert_eq!(n.as_str(), SPAN_NAMES[id as usize]);
+        }
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_counts_drops() {
+        let col = TraceCollector::new(16);
+        assert_eq!(col.capacity(), 16);
+        for i in 0..40u64 {
+            col.push(rec(i, 1, i));
+        }
+        let snap = col.snapshot();
+        assert_eq!(snap.total, 40);
+        assert_eq!(snap.dropped, 24, "40 pushed into 16 slots drops 24");
+        assert_eq!(snap.spans.len(), 16);
+        // exactly the newest 16 survive, in start order
+        let traces: Vec<u64> = snap.spans.iter().map(|s| s.trace_id).collect();
+        assert_eq!(traces, (24..40).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn snapshot_of_partial_ring_skips_unwritten_slots() {
+        let col = TraceCollector::new(64);
+        for i in 0..5u64 {
+            col.push(rec(i, 1, 100 + i));
+        }
+        let snap = col.snapshot();
+        assert_eq!(snap.spans.len(), 5);
+        assert_eq!(snap.dropped, 0);
+    }
+
+    #[test]
+    fn concurrent_pushes_never_yield_torn_records() {
+        let col = std::sync::Arc::new(TraceCollector::new(32));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let col = std::sync::Arc::clone(&col);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    // every field derives from the trace id, so a mixed
+                    // record is detectable below
+                    let v = t * 1000 + i;
+                    col.push(SpanRec {
+                        trace_id: v,
+                        span_id: (v % 7) as u16 + 1,
+                        parent_id: 0,
+                        name: (v % SPAN_NAMES.len() as u64) as u16,
+                        tid: (v % 13) as u16,
+                        start_us: v * 3,
+                        dur_us: v * 5,
+                    });
+                }
+            }));
+        }
+        for _ in 0..50 {
+            for s in col.snapshot().spans {
+                assert_eq!(s.span_id as u64, s.trace_id % 7 + 1, "torn record {s:?}");
+                assert_eq!(s.start_us, s.trace_id * 3, "torn record {s:?}");
+                assert_eq!(s.dur_us, s.trace_id * 5, "torn record {s:?}");
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(col.total(), 2000);
+        assert_eq!(col.dropped(), 2000 - 32);
+    }
+
+    #[test]
+    fn session_builds_rooted_timeline_and_flushes_ring() {
+        let col = TraceCollector::new(64);
+        let mut s = TraceSession::start(&col);
+        let prune = s.add(SpanName::Prune, ROOT_SPAN, 0, 10);
+        let score = s.add(SpanName::Score, ROOT_SPAN, 10, 30);
+        s.add_lane(SpanName::Shard, score, 12, 9, 2);
+        let spans = s.finish(&col);
+        assert_eq!(spans[0].name_str(), "request");
+        assert_eq!(spans[0].span_id, ROOT_SPAN);
+        assert_eq!(spans[0].parent_id, 0);
+        assert!(spans[1..].iter().all(|s| s.trace_id == spans[0].trace_id));
+        assert_eq!(spans[1].span_id, prune);
+        assert_eq!(spans[1].parent_id, ROOT_SPAN);
+        assert_eq!(spans[3].parent_id, score);
+        assert_eq!(spans[3].tid, 2);
+        // the ring got the same four spans
+        assert_eq!(col.total(), 4);
+        assert_eq!(col.snapshot().spans.len(), 4);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_per_session() {
+        let col = TraceCollector::new(16);
+        let a = TraceSession::start(&col).trace_id();
+        let b = TraceSession::start(&col).trace_id();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn enabled_flag_defaults_off() {
+        let col = TraceCollector::new(16);
+        assert!(!col.enabled());
+        col.set_enabled(true);
+        assert!(col.enabled());
+    }
+}

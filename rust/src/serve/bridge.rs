@@ -20,6 +20,7 @@ use crate::coordinator::batcher::{next_batch, BatchPolicy, Pending};
 use crate::coordinator::engine::SearchEngine;
 use crate::coordinator::plan::{GroupKey, SearchRequest};
 use crate::core::Histogram;
+use crate::obs::{SpanName, SpanRec, TraceCollector};
 
 use super::admission::Permit;
 use super::reactor::WireDone;
@@ -49,6 +50,10 @@ struct Ticket {
     permit: Option<Permit>,
     deadline: Option<Instant>,
     enqueued: Instant,
+    /// The request asked for its span timeline ([`SearchRequest::trace`]).
+    /// Kept on the ticket because grouping rebuilds the request from the
+    /// trace-neutral [`GroupKey`], which would otherwise lose the flag.
+    trace: bool,
 }
 
 struct Member {
@@ -60,12 +65,34 @@ struct Member {
 fn into_member(p: Pending<Job, JobResult>) -> Member {
     let Pending { query, respond, enqueued } = p;
     let Job { req, key, deadline, wire, permit } = query;
+    let trace = req.trace;
     let mut qs = req.into_queries();
     Member {
         q: qs.pop().expect("one query per job"),
         key,
-        ticket: Ticket { respond, wire, permit, deadline, enqueued },
+        ticket: Ticket { respond, wire, permit, deadline, enqueued, trace },
     }
+}
+
+/// Push one ambient serving-layer span (batch gather, dispatch, reactor
+/// read/write) straight into the ring.  These are not tied to a request
+/// trace (`trace_id` 0) — they give the `trace` export the server-side
+/// picture around the per-request timelines.  A disabled collector costs
+/// one relaxed load.
+pub(crate) fn push_stage(col: &TraceCollector, name: SpanName, dur: std::time::Duration, tid: u16) {
+    if !col.enabled() {
+        return;
+    }
+    let dur_us = dur.as_micros().min(u128::from(u64::MAX)) as u64;
+    col.push(SpanRec {
+        trace_id: 0,
+        span_id: 0,
+        parent_id: 0,
+        name: name as u16,
+        tid,
+        start_us: col.now_us().saturating_sub(dur_us),
+        dur_us,
+    });
 }
 
 fn expired(deadline: Option<Instant>, now: Instant) -> bool {
@@ -136,27 +163,37 @@ pub(crate) fn spawn_dispatcher(engine: Arc<SearchEngine>) -> Sender<Pending<Job,
             for (key, members) in groups {
                 let (queries, tickets): (Vec<Histogram>, Vec<Ticket>) =
                     members.into_iter().map(|m| (m.q, m.ticket)).unzip();
-                let per_query = |q: &Histogram| -> JobResult {
-                    let single = key.request(vec![q.clone()]);
+                // the gather window: first member enqueued → group dispatch
+                if let Some(first) = tickets.iter().map(|t| t.enqueued).min() {
+                    push_stage(
+                        engine.tracer(),
+                        SpanName::BatchGather,
+                        Instant::now().saturating_duration_since(first),
+                        tickets.len().min(u16::MAX as usize) as u16,
+                    );
+                }
+                let per_query = |q: &Histogram, traced: bool| -> JobResult {
+                    let single = key.request(vec![q.clone()]).trace(traced);
                     let t0 = Instant::now();
                     let out = engine.execute(&single);
                     engine.metrics().execute.record(t0.elapsed());
+                    push_stage(engine.tracer(), SpanName::Dispatch, t0.elapsed(), 0);
                     out.map(|mut resp| {
                         let cert = resp.stats.certified.first().copied();
                         let res = resp.results.pop().expect("one query in, one result out");
-                        wire::search_result_line(&res, cert)
+                        wire::search_result_line(&res, cert, resp.spans.as_deref())
                     })
                     .map_err(|e| e.to_string())
                 };
                 // per-query dispatch with a deadline recheck: sequential
                 // batchmates can burn past a later job's deadline, so this
                 // is a stage boundary too
-                let run_one = |q: &Histogram, deadline: Option<Instant>| -> JobResult {
-                    if expired(deadline, Instant::now()) {
+                let run_one = |q: &Histogram, t: &Ticket| -> JobResult {
+                    if expired(t.deadline, Instant::now()) {
                         engine.metrics().record_deadline_expired();
                         return Err(wire::DEADLINE_MSG.to_string());
                     }
-                    per_query(q)
+                    per_query(q, t.trace)
                 };
                 // the native grouped plan either succeeds for everyone or
                 // fails before any query is scored (then each job is
@@ -165,24 +202,36 @@ pub(crate) fn spawn_dispatcher(engine: Arc<SearchEngine>) -> Sender<Pending<Job,
                 // — one failing query neither fails its batchmates nor
                 // forces re-runs
                 let results: Vec<JobResult> = if engine.config().backend == Backend::Artifact {
-                    queries
-                        .iter()
-                        .zip(&tickets)
-                        .map(|(q, t)| run_one(q, t.deadline))
-                        .collect()
+                    queries.iter().zip(&tickets).map(|(q, t)| run_one(q, t)).collect()
                 } else {
-                    let group_req = key.request(queries);
+                    // the GroupKey is trace-neutral (a traced request batches
+                    // with untraced ones), so the rebuilt group request must
+                    // re-arm tracing when any member asked for it; members
+                    // that did not stay untraced on the wire
+                    let any_traced = tickets.iter().any(|t| t.trace);
+                    let group_req = key.request(queries).trace(any_traced);
                     let t0 = Instant::now();
                     let out = engine.execute(&group_req);
                     engine.metrics().execute.record(t0.elapsed());
+                    push_stage(engine.tracer(), SpanName::Dispatch, t0.elapsed(), 0);
                     match out {
                         Ok(resp) => {
                             let certs = resp.stats.certified;
+                            // one grouped execute, one shared timeline: each
+                            // traced member gets the whole group's spans
+                            let group_spans = resp.spans;
                             resp.results
                                 .into_iter()
+                                .zip(&tickets)
                                 .enumerate()
-                                .map(|(i, res)| {
-                                    Ok(wire::search_result_line(&res, certs.get(i).copied()))
+                                .map(|(i, (res, t))| {
+                                    let tl =
+                                        if t.trace { group_spans.as_deref() } else { None };
+                                    Ok(wire::search_result_line(
+                                        &res,
+                                        certs.get(i).copied(),
+                                        tl,
+                                    ))
                                 })
                                 .collect()
                         }
@@ -190,7 +239,7 @@ pub(crate) fn spawn_dispatcher(engine: Arc<SearchEngine>) -> Sender<Pending<Job,
                             .queries()
                             .iter()
                             .zip(&tickets)
-                            .map(|(q, t)| run_one(q, t.deadline))
+                            .map(|(q, t)| run_one(q, t))
                             .collect(),
                     }
                 };
@@ -248,6 +297,38 @@ mod tests {
         assert_eq!(hits[0].as_arr().unwrap()[1].as_usize(), Some(3), "finds itself");
         assert!(engine.metrics().e2e.count() >= 1);
         assert!(engine.metrics().queue_wait.count() >= 1);
+    }
+
+    #[test]
+    fn traced_job_gets_a_span_timeline() {
+        let engine = test_engine();
+        let tx = spawn_dispatcher(Arc::clone(&engine));
+        let (rtx, rrx) = channel();
+        let mut job = search_job(&engine, 2, None);
+        job.req.trace = true;
+        tx.send(Pending { query: job, respond: rtx, enqueued: Instant::now() }).unwrap();
+        let line = rrx.recv().unwrap().expect("search succeeds");
+        let j = Json::parse(std::str::from_utf8(&line).unwrap()).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        let tl = j.get("trace").and_then(Json::as_arr).expect("timeline embedded");
+        assert_eq!(tl[0].get("name").and_then(Json::as_str), Some("request"));
+        assert!(engine.tracer().total() >= 1, "spans flushed into the shared ring");
+    }
+
+    #[test]
+    fn untraced_job_stays_byte_identical() {
+        let engine = test_engine();
+        let tx = spawn_dispatcher(Arc::clone(&engine));
+        let (rtx, rrx) = channel();
+        tx.send(Pending {
+            query: search_job(&engine, 2, None),
+            respond: rtx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        let line = rrx.recv().unwrap().expect("search succeeds");
+        let j = Json::parse(std::str::from_utf8(&line).unwrap()).unwrap();
+        assert!(j.get("trace").is_none(), "no timeline on untraced responses");
     }
 
     #[test]

@@ -18,8 +18,10 @@ use std::time::{Duration, Instant};
 use crate::coordinator::batcher::Pending;
 use crate::coordinator::engine::SearchEngine;
 
+use crate::obs::SpanName;
+
 use super::admission::Admission;
-use super::bridge::{Job, JobResult};
+use super::bridge::{push_stage, Job, JobResult};
 use super::conn::{Conn, ConnCtx};
 use super::sys::{fd_of, Event, Fd, Interest, Poller, Waker};
 
@@ -162,11 +164,24 @@ pub(crate) fn run(
                 retry_after_ms: cfg.retry_after_ms,
                 default_deadline_ms: cfg.default_deadline_ms,
             };
+            // span the two phases only when the collector is armed (a
+            // traced request or the slow-query log); `tid` carries the
+            // connection token so lanes stack per connection in the export
+            let traced = engine.tracer().enabled();
+            let lane = ev.token.min(u16::MAX as usize) as u16;
             if ev.readable {
+                let t0 = Instant::now();
                 conn.on_readable(&ctx);
+                if traced {
+                    push_stage(engine.tracer(), SpanName::ConnRead, t0.elapsed(), lane);
+                }
             }
             if ev.writable && !conn.dead {
+                let t0 = Instant::now();
                 conn.on_writable();
+                if traced {
+                    push_stage(engine.tracer(), SpanName::ConnWrite, t0.elapsed(), lane);
+                }
             }
         }
 

@@ -21,6 +21,7 @@
 use crate::coordinator::engine::SearchResult;
 use crate::coordinator::plan::{CascadeSpec, SearchRequest};
 use crate::core::{Histogram, Method};
+use crate::obs::{chrome, SpanRec};
 use crate::util::json::{write_escaped, write_number};
 
 /// Shed/deadline error strings (shared so both servers answer identically).
@@ -33,7 +34,8 @@ pub(crate) const DISPATCHER_DROPPED_MSG: &str = "internal error: dispatcher drop
 #[derive(Debug)]
 pub(crate) enum Decoded {
     Ping,
-    Stats,
+    /// `{"op":"stats"}`; `reset` mirrors the tree path's `"reset": true`.
+    Stats { reset: bool },
     /// A `search` / `search_id` request decoded without a tree.
     Search { req: SearchRequest, id: Option<usize>, deadline_ms: Option<u64> },
     /// Cold or uncertain path: re-parse through the tree codec.
@@ -50,10 +52,16 @@ pub(crate) fn decode_line(line: &str) -> Decoded {
 // ---------------------------------------------------------------------------
 
 /// Serialize one search success straight into bytes:
-/// `{"certified":…,"hits":[[d,id,label],…],"ok":true}` — identical to
-/// serializing the tree the legacy server used to build (object keys in
-/// BTreeMap order).
-pub(crate) fn search_result_line(res: &SearchResult, certified: Option<bool>) -> Vec<u8> {
+/// `{"certified":…,"hits":[[d,id,label],…],"ok":true,"trace":[…]}` —
+/// identical to serializing the tree the legacy server used to build
+/// (object keys in BTreeMap order).  `trace` is the per-request span
+/// timeline, present only on `"trace": true` requests, so untraced
+/// responses stay byte-for-byte what they were before tracing existed.
+pub(crate) fn search_result_line(
+    res: &SearchResult,
+    certified: Option<bool>,
+    trace: Option<&[SpanRec]>,
+) -> Vec<u8> {
     let mut s = String::with_capacity(24 + res.hits.len() * 24);
     s.push('{');
     if let Some(c) = certified {
@@ -74,7 +82,15 @@ pub(crate) fn search_result_line(res: &SearchResult, certified: Option<bool>) ->
         write_number(&mut s, lab as f64);
         s.push(']');
     }
-    s.push_str("],\"ok\":true}");
+    s.push_str("],\"ok\":true");
+    if let Some(spans) = trace {
+        s.push_str(",\"trace\":");
+        // the timeline rides through the tree serializer: it is cold
+        // (explicitly requested), and reusing the tree keeps key order
+        // and number formatting canonical by construction
+        s.push_str(&chrome::timeline(spans).to_string_compact());
+    }
+    s.push('}');
     s.into_bytes()
 }
 
@@ -396,6 +412,8 @@ fn decode_inner(line: &str) -> Option<Decoded> {
     let mut deadline_ms: Option<usize> = None;
     let mut query: Option<Vec<(u32, f32)>> = None;
     let mut cascade: Option<CascadeSpec> = None;
+    let mut trace: Option<bool> = None;
+    let mut reset: Option<bool> = None;
     let mut saw_queries = false;
 
     if lx.peek() == Some(b'}') {
@@ -442,6 +460,8 @@ fn decode_inner(line: &str) -> Option<Decoded> {
                     lx.skip_value()?;
                 }
                 "cascade" => cascade = Some(lx.cascade()?),
+                "trace" => trace = lx.bool_value()?,
+                "reset" => reset = lx.bool_value()?,
                 _ => lx.skip_value()?,
             }
             lx.ws();
@@ -462,7 +482,7 @@ fn decode_inner(line: &str) -> Option<Decoded> {
 
     match op.unwrap_or("search") {
         "ping" => Some(Decoded::Ping),
-        "stats" => Some(Decoded::Stats),
+        "stats" => Some(Decoded::Stats { reset: reset == Some(true) }),
         "search" | "search_id" => {
             // "query" wins over "queries" whatever the key order, exactly
             // like `SearchRequest::from_json`; a "queries"-only request is
@@ -485,6 +505,9 @@ fn decode_inner(line: &str) -> Option<Decoded> {
             req.cascade = cascade;
             if let Some(t) = threads {
                 req.threads = Some(t.max(1));
+            }
+            if let Some(t) = trace {
+                req.trace = t;
             }
             Some(Decoded::Search { req, id, deadline_ms: deadline_ms.map(|x| x as u64) })
         }
@@ -528,6 +551,9 @@ mod tests {
             r#"{"l": true, "query": [[0, 1.0]], "unknown": {"nested": [1, "x", null]}}"#,
             r#"{"query": [[0, 1.5e-2]], "nprobe": 0}"#,
             r#"{"op":"search","query":[[0,1.0]],"cascade":{"rerank":"emd"}}"#,
+            r#"{"op":"search","query":[[0,1.0]],"l":3,"trace":true}"#,
+            r#"{"op":"search","query":[[0,1.0]],"trace":false}"#,
+            r#"{"op":"search","query":[[0,1.0]],"trace":null}"#,
             r#"{}"#,
         ];
         for line in lines {
@@ -547,9 +573,35 @@ mod tests {
     #[test]
     fn lexer_fast_paths_ping_and_stats() {
         assert!(matches!(decode_line(r#"{"op": "ping"}"#), Decoded::Ping));
-        assert!(matches!(decode_line(r#"{"op":"stats"}"#), Decoded::Stats));
+        assert!(matches!(decode_line(r#"{"op":"stats"}"#), Decoded::Stats { reset: false }));
+        // the reset flag must not be swallowed by the unknown-key skip
+        assert!(matches!(
+            decode_line(r#"{"op":"stats","reset":true}"#),
+            Decoded::Stats { reset: true }
+        ));
+        assert!(matches!(
+            decode_line(r#"{"op":"stats","reset":false}"#),
+            Decoded::Stats { reset: false }
+        ));
+        // non-boolean reset reads as absent, like the tree's as_bool
+        assert!(matches!(
+            decode_line(r#"{"op":"stats","reset":1}"#),
+            Decoded::Stats { reset: false }
+        ));
         // non-string op falls through to the "search" default, like the tree
         assert!(matches!(decode_line(r#"{"op": 3}"#), Decoded::Search { .. }));
+    }
+
+    #[test]
+    fn lexer_reads_the_trace_flag() {
+        match decode_line(r#"{"op":"search","query":[[0,1.0]],"trace":true}"#) {
+            Decoded::Search { req, .. } => assert!(req.trace),
+            other => panic!("expected fast-path search, got {other:?}"),
+        }
+        match decode_line(r#"{"op":"search","query":[[0,1.0]]}"#) {
+            Decoded::Search { req, .. } => assert!(!req.trace, "default is untraced"),
+            other => panic!("expected fast-path search, got {other:?}"),
+        }
     }
 
     #[test]
@@ -604,9 +656,37 @@ mod tests {
                 map.insert("certified".into(), Json::Bool(c));
             }
             let tree = Json::Obj(map).to_string_compact();
-            let streamed = String::from_utf8(search_result_line(&res, certified)).unwrap();
+            let streamed =
+                String::from_utf8(search_result_line(&res, certified, None)).unwrap();
             assert_eq!(streamed, tree);
         }
+    }
+
+    #[test]
+    fn traced_result_line_appends_the_timeline_after_ok() {
+        let res = SearchResult { hits: vec![(0.5, 2)], labels: vec![1] };
+        let spans = [SpanRec {
+            trace_id: 3,
+            span_id: 1,
+            parent_id: 0,
+            name: 0,
+            tid: 0,
+            start_us: 0,
+            dur_us: 120,
+        }];
+        let line = String::from_utf8(search_result_line(&res, None, Some(&spans))).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        let tl = j.get("trace").and_then(Json::as_arr).expect("timeline present");
+        assert_eq!(tl.len(), 1);
+        assert_eq!(tl[0].get("name").and_then(Json::as_str), Some("request"));
+        assert_eq!(tl[0].get("dur_us").and_then(Json::as_usize), Some(120));
+        // BTreeMap key order is preserved: the timeline rides after "ok"
+        assert!(line.ends_with("}]}"), "{line}");
+        assert_eq!(line, Json::parse(&line).unwrap().to_string_compact(), "canonical form");
+        // and the untraced line is a strict prefix + '}' of the traced one
+        let plain = String::from_utf8(search_result_line(&res, None, None)).unwrap();
+        assert!(line.starts_with(plain.trim_end_matches('}')), "{plain} vs {line}");
     }
 
     #[test]

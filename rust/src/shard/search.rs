@@ -55,6 +55,12 @@ pub struct ShardedBatch {
     /// Wall time of the final cross-shard k-way merge (the fan-out
     /// overhead a monolithic corpus does not pay).
     pub merge_time: Duration,
+    /// Wall time of the parallel fan-out (every shard probed + scored),
+    /// up to the start of the merge.
+    pub fanout_time: Duration,
+    /// Per-shard lanes in shard order: (start offset from fan-out entry,
+    /// duration) — the span timeline's `ShardFanout` children.
+    pub shard_times: Vec<(Duration, Duration)>,
 }
 
 /// One shard's contribution to a fan-out batch: per-query top-ℓ
@@ -157,7 +163,12 @@ pub fn search_batch_budgeted(
 ) -> EmdResult<ShardedBatch> {
     let nq = queries.len();
     if nq == 0 {
-        return Ok(ShardedBatch { results: Vec::new(), merge_time: Duration::ZERO });
+        return Ok(ShardedBatch {
+            results: Vec::new(),
+            merge_time: Duration::ZERO,
+            fanout_time: Duration::ZERO,
+            shard_times: Vec::new(),
+        });
     }
     let l = l.max(1);
     let np = corpus.effective_nprobe(nprobe, corpus.index_params().map(|p| p.nprobe));
@@ -168,25 +179,32 @@ pub fn search_batch_budgeted(
     let width = fanout
         .unwrap_or(corpus.engine_params().threads)
         .clamp(1, nshards.max(1));
-    let mut slots: Vec<Option<EmdResult<ShardContribution>>> =
+    let t_fan = Instant::now();
+    let mut slots: Vec<Option<(EmdResult<ShardContribution>, Duration, Duration)>> =
         (0..nshards).map(|_| None).collect();
     {
         let sync = SyncSlice::new(&mut slots);
         parallel_for(nshards, width, |start, end| {
             for s in start..end {
+                let begin = t_fan.elapsed();
                 let contribution = search_shard(&corpus.shards()[s], queries, method, l, np);
+                let dur = t_fan.elapsed().saturating_sub(begin);
                 // SAFETY: slot s is owned by exactly this chunk.
-                unsafe { sync.write(s, Some(contribution)) };
+                unsafe { sync.write(s, Some((contribution, begin, dur))) };
             }
         });
     }
+    let fanout_time = t_fan.elapsed();
 
     let mut shard_accs: Vec<Vec<TopL>> = Vec::with_capacity(nshards);
+    let mut shard_times = Vec::with_capacity(nshards);
     let mut candidates = vec![0usize; nq];
     let mut lists_probed = vec![0usize; nq];
     let mut pruned_any = false;
     for slot in slots {
-        let contribution = slot.expect("every shard searched")?;
+        let (contribution, begin, dur) = slot.expect("every shard searched");
+        let contribution = contribution?;
+        shard_times.push((begin, dur));
         for q in 0..nq {
             candidates[q] += contribution.candidates[q];
             lists_probed[q] += contribution.lists_probed[q];
@@ -215,7 +233,7 @@ pub fn search_batch_budgeted(
             }
         })
         .collect();
-    Ok(ShardedBatch { results, merge_time })
+    Ok(ShardedBatch { results, merge_time, fanout_time, shard_times })
 }
 
 /// Single-query convenience wrapper around [`search_batch`].

@@ -40,12 +40,26 @@ impl Level {
 static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
 static START: OnceLock<Instant> = OnceLock::new();
 
+/// Parse one `EMDPAR_LOG` value; `Err` carries the warning emitted for an
+/// invalid setting, naming the bad value and the accepted levels.
+fn parse_env_value(s: &str) -> Result<Level, String> {
+    Level::from_str(s).ok_or_else(|| {
+        format!(
+            "ignoring invalid EMDPAR_LOG={s:?}; accepted levels: \
+             error, warn, info, debug, trace"
+        )
+    })
+}
+
 /// Initialize from the `EMDPAR_LOG` environment variable (idempotent).
+/// An unrecognized value keeps the current level and warns instead of
+/// silently doing nothing.
 pub fn init_from_env() {
     START.get_or_init(Instant::now);
     if let Ok(s) = std::env::var("EMDPAR_LOG") {
-        if let Some(l) = Level::from_str(&s) {
-            set_level(l);
+        match parse_env_value(&s) {
+            Ok(l) => set_level(l),
+            Err(msg) => log(Level::Warn, "emdpar::log", &msg),
         }
     }
 }
@@ -112,5 +126,15 @@ mod tests {
     fn parse_levels() {
         assert_eq!(Level::from_str("DEBUG"), Some(Level::Debug));
         assert_eq!(Level::from_str("bogus"), None);
+    }
+
+    #[test]
+    fn invalid_env_value_warns_with_the_bad_value_and_the_accepted_levels() {
+        assert_eq!(parse_env_value("Trace"), Ok(Level::Trace));
+        let msg = parse_env_value("verbose").unwrap_err();
+        assert!(msg.contains("\"verbose\""), "{msg}");
+        for level in ["error", "warn", "info", "debug", "trace"] {
+            assert!(msg.contains(level), "missing {level} in {msg}");
+        }
     }
 }

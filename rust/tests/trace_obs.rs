@@ -1,0 +1,318 @@
+//! Observability acceptance (ISSUE 8): end-to-end query tracing.
+//!
+//! * traced requests return a span timeline whose tree **nests**: every
+//!   child lies inside its parent's window, top-level stages are laid out
+//!   in order, and the per-stage spans sum within the end-to-end envelope
+//!   — across {plain, indexed, sharded, indexed+sharded} × {base, cascade};
+//! * tracing is **bit-identity neutral**: hits/labels/certificates match
+//!   exactly with tracing on vs off;
+//! * `QueryStats` carries per-stage microseconds on every request (traced
+//!   or not);
+//! * the `trace` request field round-trips the wire and stays absent from
+//!   untraced request JSON (byte-compat);
+//! * the ring collector survives wraparound with accurate drop counts;
+//! * a slow-query threshold arms ambient collection without touching the
+//!   response;
+//! * the Prometheus exposition of a live engine passes a format lint.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use emdpar::config::{Config, DatasetSpec, IndexParams, ServeParams, ShardParams};
+use emdpar::coordinator::{CascadeSpec, SearchEngine, SearchRequest};
+use emdpar::core::{Dataset, Method};
+use emdpar::obs::{SpanRec, TraceCollector};
+use emdpar::util::json::Json;
+
+fn dataset() -> Arc<Dataset> {
+    Arc::new(
+        Config {
+            dataset: DatasetSpec::SynthText { n: 60, vocab: 240, dim: 10, seed: 33 },
+            ..Config::default()
+        }
+        .load_dataset()
+        .unwrap(),
+    )
+}
+
+fn engine(ds: &Arc<Dataset>, index: bool, shards: Option<usize>) -> SearchEngine {
+    SearchEngine::with_dataset(
+        Config {
+            threads: 2,
+            index: index.then(|| IndexParams {
+                nlist: 5,
+                nprobe: 2,
+                train_iters: 6,
+                seed: 4,
+                min_points_per_list: 1,
+            }),
+            sharded: shards.map(|s| ShardParams { shards: s, max_docs_per_shard: 1 << 20 }),
+            ..Config::default()
+        },
+        Arc::clone(ds),
+    )
+    .unwrap()
+}
+
+/// Structural invariants of one returned timeline: a single root at id 1
+/// covering [0, dur], every other span parented to an existing span and
+/// contained in its parent's window.
+fn check_nesting(spans: &[SpanRec], tag: &str) {
+    assert!(!spans.is_empty(), "{tag}: empty timeline");
+    let root = &spans[0];
+    assert_eq!(root.span_id, 1, "{tag}: root id");
+    assert_eq!(root.parent_id, 0, "{tag}: root parent");
+    assert_eq!(root.name_str(), "request", "{tag}: root name");
+    assert_eq!(root.start_us, 0, "{tag}: root starts the session clock");
+    let by_id: BTreeMap<u16, &SpanRec> = spans.iter().map(|s| (s.span_id, s)).collect();
+    assert_eq!(by_id.len(), spans.len(), "{tag}: span ids unique");
+    let mut prev_top_start = 0u64;
+    for s in &spans[1..] {
+        let parent = by_id
+            .get(&s.parent_id)
+            .unwrap_or_else(|| panic!("{tag}: span {} orphaned (parent {})", s.span_id, s.parent_id));
+        assert!(
+            s.start_us >= parent.start_us,
+            "{tag}: {} starts before its parent {}",
+            s.name_str(),
+            parent.name_str()
+        );
+        assert!(
+            s.start_us + s.dur_us <= parent.start_us + parent.dur_us,
+            "{tag}: {} [{}, +{}] escapes parent {} [{}, +{}]",
+            s.name_str(),
+            s.start_us,
+            s.dur_us,
+            parent.name_str(),
+            parent.start_us,
+            parent.dur_us
+        );
+        if s.parent_id == 1 {
+            assert!(s.start_us >= prev_top_start, "{tag}: top-level stages out of order");
+            prev_top_start = s.start_us;
+        }
+    }
+}
+
+fn names(spans: &[SpanRec]) -> Vec<&'static str> {
+    spans.iter().map(SpanRec::name_str).collect()
+}
+
+#[test]
+fn traced_requests_return_nested_ordered_timelines() {
+    let ds = dataset();
+    let shapes: [(&str, SearchEngine); 4] = [
+        ("plain", engine(&ds, false, None)),
+        ("indexed", engine(&ds, true, None)),
+        ("sharded", engine(&ds, false, Some(3))),
+        ("indexed+sharded", engine(&ds, true, Some(3))),
+    ];
+    for (tag, eng) in &shapes {
+        let req = SearchRequest::query(ds.histogram(7))
+            .method(Method::Rwmd)
+            .topl(4)
+            .trace(true);
+        let resp = eng.execute(&req).unwrap();
+        let spans = resp.spans.as_deref().expect("traced request returns spans");
+        check_nesting(spans, tag);
+        let ns = names(spans);
+        if tag.contains("sharded") {
+            assert!(ns.contains(&"shard_fanout"), "{tag}: {ns:?}");
+            assert!(ns.contains(&"merge"), "{tag}: {ns:?}");
+            // one child lane per shard, tid = shard index
+            let fan = spans.iter().find(|s| s.name_str() == "shard_fanout").unwrap();
+            let lanes: Vec<u16> = spans
+                .iter()
+                .filter(|s| s.parent_id == fan.span_id)
+                .map(|s| s.tid)
+                .collect();
+            assert_eq!(lanes, vec![0, 1, 2], "{tag}: shard lanes");
+        } else {
+            assert!(ns.contains(&"score"), "{tag}: {ns:?}");
+        }
+        if tag.contains("indexed") && !tag.contains("sharded") {
+            assert!(ns.contains(&"prune"), "{tag}: {ns:?}");
+        }
+        // the ring got the same spans (epoch-relative)
+        assert!(eng.tracer().total() >= spans.len() as u64, "{tag}: ring flushed");
+    }
+}
+
+#[test]
+fn sharded_cascade_spans_sum_within_the_e2e_envelope() {
+    // the acceptance shape: sharded + indexed engine, certified cascade
+    let ds = dataset();
+    let eng = engine(&ds, true, Some(3));
+    let req = SearchRequest::query(ds.histogram(5))
+        .topl(4)
+        .cascade(CascadeSpec::new(Method::Exact).overfetch(ds.len()).certified(true))
+        .trace(true);
+    let resp = eng.execute(&req).unwrap();
+    let spans = resp.spans.as_deref().unwrap();
+    check_nesting(spans, "sharded cascade");
+    let ns = names(spans);
+    assert!(ns.contains(&"cascade_rerank"), "{ns:?}");
+    assert!(ns.contains(&"shard_fanout"), "{ns:?}");
+    // per-stage spans sum within the end-to-end envelope: the root covers
+    // every top-level stage, and the engine's total covers the stage stats
+    let root_dur = spans[0].dur_us;
+    let stage_sum: u64 =
+        spans.iter().filter(|s| s.parent_id == 1).map(|s| s.dur_us).sum();
+    assert!(
+        stage_sum <= root_dur,
+        "stage sum {stage_sum}us exceeds the {root_dur}us request envelope"
+    );
+    assert!(root_dur >= resp.stats.total_us, "root covers the executed plan");
+    let stats_sum = resp.stats.prune_us
+        + resp.stats.score_us
+        + resp.stats.fanout_us
+        + resp.stats.merge_us
+        + resp.stats.rerank_us;
+    assert!(
+        stats_sum <= resp.stats.total_us,
+        "stage stats {stats_sum}us exceed total {}us",
+        resp.stats.total_us
+    );
+    assert!(resp.stats.total_us > 0, "an exact-rerank cascade takes measurable time");
+    assert!(resp.stats.certified[0], "tracing must not break certification");
+}
+
+#[test]
+fn tracing_is_bit_identity_neutral() {
+    let ds = dataset();
+    for (tag, eng) in [
+        ("plain", engine(&ds, false, None)),
+        ("indexed+sharded", engine(&ds, true, Some(3))),
+    ] {
+        for method in [Method::Rwmd, Method::Act { k: 2 }] {
+            let base = SearchRequest::query(ds.histogram(11)).method(method).topl(5);
+            let off = eng.execute(&base.clone().trace(false)).unwrap();
+            let on = eng.execute(&base.trace(true)).unwrap();
+            assert_eq!(off.results[0].hits, on.results[0].hits, "{tag} {method}");
+            assert_eq!(off.results[0].labels, on.results[0].labels, "{tag} {method}");
+            assert!(off.spans.is_none() && on.spans.is_some(), "{tag} {method}");
+        }
+        // and through a certified cascade
+        let base = SearchRequest::query(ds.histogram(2))
+            .topl(3)
+            .cascade(CascadeSpec::new(Method::Ict).overfetch(ds.len()).certified(true));
+        let off = eng.execute(&base.clone()).unwrap();
+        let on = eng.execute(&base.trace(true)).unwrap();
+        assert_eq!(off.results[0].hits, on.results[0].hits, "{tag} cascade");
+        assert_eq!(off.stats.certified, on.stats.certified, "{tag} cascade");
+    }
+}
+
+#[test]
+fn query_stats_carry_stage_micros_without_tracing() {
+    let ds = dataset();
+    let eng = engine(&ds, true, Some(3));
+    let resp = eng
+        .execute(&SearchRequest::query(ds.histogram(0)).method(Method::Rwmd).topl(4))
+        .unwrap();
+    assert!(resp.spans.is_none(), "untraced request");
+    // the sharded route fills fanout/merge; every route fills total
+    assert!(resp.stats.total_us >= resp.stats.fanout_us);
+    assert!(
+        resp.stats.fanout_us + resp.stats.merge_us <= resp.stats.total_us,
+        "stage micros fit inside the total"
+    );
+    // the pruned (non-sharded) route fills prune/score instead
+    let eng = engine(&ds, true, None);
+    let resp = eng
+        .execute(&SearchRequest::query(ds.histogram(0)).method(Method::Rwmd).topl(4))
+        .unwrap();
+    assert!(resp.stats.prune_us + resp.stats.score_us <= resp.stats.total_us);
+}
+
+#[test]
+fn trace_flag_round_trips_the_wire_and_stays_absent_when_off() {
+    let req = SearchRequest::query(emdpar::core::Histogram::from_pairs(vec![(1, 1.0)]))
+        .topl(3)
+        .trace(true);
+    let wire = req.to_json().to_string_compact();
+    assert!(wire.contains("\"trace\":true"), "{wire}");
+    let back = SearchRequest::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    assert_eq!(back, req, "traced request round-trips");
+    // untraced requests serialize exactly as before the field existed
+    let req = SearchRequest::query(emdpar::core::Histogram::from_pairs(vec![(1, 1.0)])).topl(3);
+    let wire = req.to_json().to_string_compact();
+    assert!(!wire.contains("trace"), "byte-compat broken: {wire}");
+    let back = SearchRequest::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    assert!(!back.trace, "absent means off");
+}
+
+#[test]
+fn ring_wraparound_keeps_newest_and_counts_drops() {
+    let col = TraceCollector::new(16);
+    col.set_enabled(true);
+    for i in 0..40u64 {
+        col.push(SpanRec {
+            trace_id: i,
+            span_id: 1,
+            parent_id: 0,
+            name: 0,
+            tid: 0,
+            start_us: i,
+            dur_us: 1,
+        });
+    }
+    let snap = col.snapshot();
+    assert_eq!(snap.total, 40);
+    assert_eq!(snap.dropped, 24, "40 pushed into 16 slots");
+    assert_eq!(snap.spans.len(), 16);
+    let starts: Vec<u64> = snap.spans.iter().map(|s| s.start_us).collect();
+    assert_eq!(starts, (24..40).collect::<Vec<u64>>(), "oldest overwritten, newest kept");
+}
+
+#[test]
+fn slow_query_threshold_arms_ambient_collection() {
+    // a 1µs threshold marks every query slow: spans land in the ring even
+    // though the response carries none
+    let ds = dataset();
+    let eng = SearchEngine::with_dataset(
+        Config {
+            threads: 2,
+            serve: ServeParams { slow_query_us: 1, ..Default::default() },
+            ..Config::default()
+        },
+        Arc::clone(&ds),
+    )
+    .unwrap();
+    assert!(eng.tracer().enabled(), "configured threshold arms the collector at build");
+    let resp = eng
+        .execute(&SearchRequest::query(ds.histogram(3)).method(Method::Rwmd).topl(3))
+        .unwrap();
+    assert!(resp.spans.is_none(), "slow-query logging never leaks into responses");
+    assert!(eng.tracer().total() >= 1, "the slow query's spans reached the ring");
+}
+
+#[test]
+fn live_engine_prometheus_exposition_passes_a_format_lint() {
+    let ds = dataset();
+    let eng = engine(&ds, true, Some(2));
+    eng.execute(&SearchRequest::query(ds.histogram(1)).topl(3).trace(true)).unwrap();
+    let text = emdpar::obs::prom::render(&eng.metrics(), Some(eng.tracer()));
+    // exposition-format grammar: every line is `# HELP|TYPE ...` or
+    // `name[{labels}] value` with a conforming metric name
+    for (ln, line) in text.lines().enumerate() {
+        if line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+            continue;
+        }
+        let (series, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("line {}: {line:?}", ln + 1));
+        value.parse::<f64>().unwrap_or_else(|_| panic!("line {}: bad value {value:?}", ln + 1));
+        let base = series.split_once('{').map_or(series, |(b, _)| b);
+        assert!(
+            !base.is_empty()
+                && base
+                    .chars()
+                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+            "line {}: bad metric name {base:?}",
+            ln + 1
+        );
+    }
+    assert!(text.contains("emdpar_queries_total 1"), "{text}");
+    assert!(text.contains("emdpar_trace_spans_total"), "{text}");
+    assert!(text.contains("emdpar_e2e_us_bucket{le=\"+Inf\"}"), "{text}");
+}
