@@ -221,6 +221,20 @@ impl EngineBuilder {
         self
     }
 
+    /// Telemetry window duration in ms for the sliding-window workload
+    /// store (0 leaves telemetry disarmed).
+    pub fn telemetry_window_ms(mut self, telemetry_window_ms: u64) -> EngineBuilder {
+        self.config.serve.telemetry_window_ms = telemetry_window_ms;
+        self
+    }
+
+    /// Online recall auditing: replay 1 in `audit_sample` served searches
+    /// at full probe off the hot path (0 disables).
+    pub fn audit_sample(mut self, audit_sample: u64) -> EngineBuilder {
+        self.config.serve.audit_sample = audit_sample;
+        self
+    }
+
     /// The effective configuration so far.
     pub fn config(&self) -> &Config {
         &self.config
@@ -339,7 +353,9 @@ mod tests {
             .idle_timeout_ms(30_000)
             .max_line_bytes(0) // clamps to the floor
             .slow_query_us(150_000)
-            .trace_buffer(1); // clamps to the floor
+            .trace_buffer(1) // clamps to the floor
+            .telemetry_window_ms(500)
+            .audit_sample(64);
         assert_eq!(b.config().serve.reactors, 4);
         assert_eq!(b.config().serve.max_inflight, 128);
         assert_eq!(b.config().serve.deadline_ms, 250);
@@ -347,10 +363,15 @@ mod tests {
         assert_eq!(b.config().serve.max_line_bytes, 256);
         assert_eq!(b.config().serve.slow_query_us, 150_000);
         assert_eq!(b.config().serve.trace_buffer, 16);
+        assert_eq!(b.config().serve.telemetry_window_ms, 500);
+        assert_eq!(b.config().serve.audit_sample, 64);
         let eng = b.build_search().unwrap();
         assert_eq!(eng.config().serve.max_inflight, 128);
         assert!(eng.slow_query_us() >= 150_000 || std::env::var("EMDPAR_SLOW_QUERY_US").is_ok());
         assert!(eng.tracer().capacity() >= 16);
+        assert!(eng.telemetry().armed(), "window > 0 arms the store");
+        assert_eq!(eng.telemetry().window_ms(), 500);
+        assert_eq!(eng.auditor().sample(), 64);
     }
 
     #[test]

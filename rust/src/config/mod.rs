@@ -107,6 +107,15 @@ pub struct ServeParams {
     pub slow_query_us: u64,
     /// Span ring capacity (records; ~40 bytes each, clamped to >= 16).
     pub trace_buffer: usize,
+    /// Telemetry window duration, milliseconds: the sliding-window
+    /// workload store aggregates per-`GroupKey` rates over a ring of
+    /// windows this wide.  0 leaves the store disarmed (recording is a
+    /// single branch and the serving path stays byte-identical).
+    pub telemetry_window_ms: u64,
+    /// Online recall auditing: deterministically sample 1 in this many
+    /// served searches and replay them at full probe off the hot path.
+    /// 0 disables auditing entirely.
+    pub audit_sample: u64,
 }
 
 impl Default for ServeParams {
@@ -120,6 +129,8 @@ impl Default for ServeParams {
             retry_after_ms: 2,
             slow_query_us: 0,
             trace_buffer: 4096,
+            telemetry_window_ms: 1000,
+            audit_sample: 0,
         }
     }
 }
@@ -437,6 +448,12 @@ impl Config {
             config,
             "serve trace_buffer must be >= 16 span records"
         );
+        emd_ensure!(
+            self.serve.audit_sample == 0 || self.serve.telemetry_window_ms > 0,
+            config,
+            "serve audit_sample requires telemetry (telemetry_window_ms > 0) to \
+             publish its recall estimates"
+        );
         Ok(())
     }
 
@@ -538,6 +555,12 @@ fn parse_serve(j: &Json) -> EmdResult<ServeParams> {
     }
     if let Some(x) = j.get("trace_buffer").and_then(Json::as_usize) {
         p.trace_buffer = x;
+    }
+    if let Some(x) = j.get("telemetry_window_ms").and_then(Json::as_usize) {
+        p.telemetry_window_ms = x as u64;
+    }
+    if let Some(x) = j.get("audit_sample").and_then(Json::as_usize) {
+        p.audit_sample = x as u64;
     }
     Ok(p)
 }
@@ -733,7 +756,8 @@ mod tests {
         let j = Json::parse(
             r#"{"serve": {"reactors": 4, "max_inflight": 64, "deadline_ms": 250,
                 "max_line_bytes": 4096, "idle_timeout_ms": 30000, "retry_after_ms": 5,
-                "slow_query_us": 250000, "trace_buffer": 1024}}"#,
+                "slow_query_us": 250000, "trace_buffer": 1024,
+                "telemetry_window_ms": 500, "audit_sample": 64}}"#,
         )
         .unwrap();
         let cfg = Config::from_json(&j).unwrap();
@@ -748,6 +772,8 @@ mod tests {
                 retry_after_ms: 5,
                 slow_query_us: 250_000,
                 trace_buffer: 1024,
+                telemetry_window_ms: 500,
+                audit_sample: 64,
             }
         );
         // partial objects fill from defaults
@@ -757,12 +783,16 @@ mod tests {
         assert_eq!(cfg.serve.max_inflight, ServeParams::default().max_inflight);
         assert_eq!(cfg.serve.slow_query_us, 0, "slow-query log defaults off");
         assert_eq!(cfg.serve.trace_buffer, ServeParams::default().trace_buffer);
+        assert_eq!(cfg.serve.telemetry_window_ms, 1000, "telemetry defaults to 1 s windows");
+        assert_eq!(cfg.serve.audit_sample, 0, "recall auditing defaults off");
         // degenerate values rejected
         for bad in [
             r#"{"serve": {"reactors": 0}}"#,
             r#"{"serve": {"max_inflight": 0}}"#,
             r#"{"serve": {"max_line_bytes": 16}}"#,
             r#"{"serve": {"trace_buffer": 4}}"#,
+            // auditing needs the telemetry surface to publish through
+            r#"{"serve": {"telemetry_window_ms": 0, "audit_sample": 64}}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(Config::from_json(&j).is_err(), "{bad}");

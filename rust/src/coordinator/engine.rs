@@ -54,6 +54,12 @@ pub struct SearchEngine {
     /// shared span ring every traced execute (and the reactor's conn
     /// read/write phases) records into
     tracer: Arc<TraceCollector>,
+    /// sliding-window per-workload telemetry store the serving bridge
+    /// records into (armed iff `config.serve.telemetry_window_ms > 0`)
+    telemetry: Arc<crate::obs::agg::Telemetry>,
+    /// online recall auditor (sampling off when
+    /// `config.serve.audit_sample == 0`); the bridge spawns its worker
+    auditor: Arc<crate::obs::audit::Auditor>,
     /// slow-query log threshold in µs (0 = off); `EMDPAR_SLOW_QUERY_US`
     /// overrides `config.serve.slow_query_us` at construction
     slow_query_us: u64,
@@ -137,6 +143,9 @@ impl SearchEngine {
             // for the slow-query log to report
             tracer.set_enabled(true);
         }
+        let telemetry =
+            Arc::new(crate::obs::agg::Telemetry::new(config.serve.telemetry_window_ms));
+        let auditor = Arc::new(crate::obs::audit::Auditor::new(config.serve.audit_sample));
         Ok(SearchEngine {
             dataset,
             config,
@@ -148,6 +157,8 @@ impl SearchEngine {
             executor,
             artifact_profile,
             tracer,
+            telemetry,
+            auditor,
             slow_query_us,
         })
     }
@@ -366,6 +377,47 @@ impl SearchEngine {
     /// Clonable handle to the span ring (the reactor path holds one).
     pub fn tracer_arc(&self) -> Arc<TraceCollector> {
         Arc::clone(&self.tracer)
+    }
+
+    /// The per-workload sliding-window telemetry store (borrowed).
+    pub fn telemetry(&self) -> &crate::obs::agg::Telemetry {
+        &self.telemetry
+    }
+
+    /// Clonable handle to the telemetry store (the metrics listener and
+    /// shutdown flush hold one).
+    pub fn telemetry_arc(&self) -> Arc<crate::obs::agg::Telemetry> {
+        Arc::clone(&self.telemetry)
+    }
+
+    /// The online recall auditor (borrowed).
+    pub fn auditor(&self) -> &crate::obs::audit::Auditor {
+        &self.auditor
+    }
+
+    /// Clonable handle to the auditor (the replay worker holds one).
+    pub fn auditor_arc(&self) -> Arc<crate::obs::audit::Auditor> {
+        Arc::clone(&self.auditor)
+    }
+
+    /// Readiness for `/readyz`: the corpus is loaded and every configured
+    /// pruning index is trained.  (Admission saturation is layered on by
+    /// the serving runtime, which owns the in-flight budget.)
+    pub fn ready(&self) -> bool {
+        if self.num_docs() == 0 {
+            return false;
+        }
+        if self.config.index.is_none() {
+            return true;
+        }
+        match &self.sharded {
+            // every shard of an index-configured corpus must have trained
+            // centroids before pruned routes answer faithfully
+            Some(lock) => {
+                lock.read().unwrap().shards().iter().all(|s| s.index().is_some())
+            }
+            None => self.index.is_some(),
+        }
     }
 
     /// Slow-query log threshold in µs (0 = disabled).

@@ -64,24 +64,45 @@ impl LatencyHist {
         if total == 0 {
             return 0;
         }
-        let want = ((total as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in counts.iter().enumerate() {
-            seen += c;
-            if seen >= want && c > 0 {
-                let lo = if i == 0 { 0 } else { 1u64 << i };
-                let hi = if i + 1 >= BUCKETS { u64::MAX } else { (1u64 << (i + 1)) - 1 };
-                let mean = self.bucket_sums[i].load(Ordering::Relaxed) / c;
-                return mean.clamp(lo, hi);
-            }
-        }
-        1u64 << BUCKETS
+        let sums: Vec<u64> =
+            self.bucket_sums.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        percentile_from(&counts, &sums, total, q)
     }
 
     /// Per-bucket counts (non-cumulative), index i covering
     /// `[2^i, 2^(i+1))` µs — the exposition layer's raw series.
     pub fn bucket_counts(&self) -> Vec<u64> {
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Fold every sample recorded in `other` into `self` (atomic adds, so
+    /// both histograms may keep recording concurrently).  The merged
+    /// histogram reports exactly what a single histogram fed both sample
+    /// streams serially would.
+    pub fn merge(&self, other: &LatencyHist) {
+        for i in 0..BUCKETS {
+            let c = other.buckets[i].load(Ordering::Relaxed);
+            if c > 0 {
+                self.buckets[i].fetch_add(c, Ordering::Relaxed);
+                self.bucket_sums[i]
+                    .fetch_add(other.bucket_sums[i].load(Ordering::Relaxed), Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_us.fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Plain-value copy of the current state — the telemetry windows' unit
+    /// of storage, diffable via [`HistSnapshot::delta`].
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut s = HistSnapshot::default();
+        for i in 0..BUCKETS {
+            s.buckets[i] = self.buckets[i].load(Ordering::Relaxed);
+            s.bucket_sums[i] = self.bucket_sums[i].load(Ordering::Relaxed);
+        }
+        s.count = self.count.load(Ordering::Relaxed);
+        s.sum_us = self.sum_us.load(Ordering::Relaxed);
+        s
     }
 
     /// Upper bound of bucket `i` in µs; `None` marks the last,
@@ -113,6 +134,115 @@ impl LatencyHist {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("count", (self.count() as usize).into()),
+            ("mean_us", self.mean_us().into()),
+            ("p50_us", (self.percentile_us(0.5) as usize).into()),
+            ("p95_us", (self.percentile_us(0.95) as usize).into()),
+            ("p99_us", (self.percentile_us(0.99) as usize).into()),
+        ])
+    }
+}
+
+/// Shared percentile walk over plain bucket arrays: find the bucket holding
+/// the requested rank and interpolate within it using the bucket's recorded
+/// mean.  `0` for an empty histogram — including the (racy-snapshot) case
+/// where `total > 0` but every per-bucket count read back as zero, which
+/// used to fall through to a fictitious bucket edge.
+fn percentile_from(counts: &[u64], sums: &[u64], total: u64, q: f64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let want = ((total as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
+    let mut seen = 0;
+    for (i, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= want && c > 0 {
+            let lo = if i == 0 { 0 } else { 1u64 << i };
+            let hi = if i + 1 >= BUCKETS { u64::MAX } else { (1u64 << (i + 1)) - 1 };
+            let mean = sums[i] / c;
+            return mean.clamp(lo, hi);
+        }
+    }
+    // every count read as zero while `total` claimed samples: a torn
+    // concurrent snapshot — report empty rather than inventing an edge
+    0
+}
+
+/// A plain-value copy of a [`LatencyHist`] at one instant.  Two snapshots
+/// of the same histogram diff into the samples recorded between them —
+/// the telemetry store's per-window latency delta.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub bucket_sums: [u64; BUCKETS],
+    pub sum_us: u64,
+    pub count: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> HistSnapshot {
+        HistSnapshot {
+            buckets: [0; BUCKETS],
+            bucket_sums: [0; BUCKETS],
+            sum_us: 0,
+            count: 0,
+        }
+    }
+}
+
+impl HistSnapshot {
+    /// The samples recorded between `earlier` and `self` (both snapshots of
+    /// one monotonic histogram; saturating, so a reset racing the pair
+    /// yields zeros rather than wrapping).
+    pub fn delta(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let mut d = HistSnapshot::default();
+        for i in 0..BUCKETS {
+            d.buckets[i] = self.buckets[i].saturating_sub(earlier.buckets[i]);
+            d.bucket_sums[i] = self.bucket_sums[i].saturating_sub(earlier.bucket_sums[i]);
+        }
+        d.count = self.count.saturating_sub(earlier.count);
+        d.sum_us = self.sum_us.saturating_sub(earlier.sum_us);
+        d
+    }
+
+    /// Record one sample directly (plain-value histograms owned by a lock,
+    /// e.g. a telemetry window under its ring mutex).  Same bucketing as
+    /// [`LatencyHist::record_us`], so merged snapshots and atomic
+    /// histograms stay comparable.
+    pub fn record_us(&mut self, us: u64) {
+        self.count += 1;
+        self.sum_us += us;
+        let bucket = (63 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[bucket] += 1;
+        self.bucket_sums[bucket] += us;
+    }
+
+    /// Accumulate another snapshot (merging window deltas).
+    pub fn add(&mut self, other: &HistSnapshot) {
+        for i in 0..BUCKETS {
+            self.buckets[i] += other.buckets[i];
+            self.bucket_sums[i] += other.bucket_sums[i];
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Bucket-mean-interpolated percentile; `0` when empty.
+    pub fn percentile_us(&self, q: f64) -> u64 {
+        percentile_from(&self.buckets, &self.bucket_sums, self.count, q)
+    }
+
+    /// Same shape as [`LatencyHist::to_json`].
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", (self.count as usize).into()),
             ("mean_us", self.mean_us().into()),
             ("p50_us", (self.percentile_us(0.5) as usize).into()),
             ("p95_us", (self.percentile_us(0.95) as usize).into()),
@@ -497,6 +627,75 @@ mod tests {
             j.get("e2e").and_then(|e| e.get("count")).and_then(Json::as_usize),
             Some(0)
         );
+    }
+
+    #[test]
+    fn merged_hist_equals_serial_recording() {
+        // the satellite contract: recording two sample streams into two
+        // histograms and merging must be indistinguishable from recording
+        // both streams into one histogram serially
+        let stream_a = [10u64, 100, 100, 5000, 9, 15];
+        let stream_b = [3u64, 10, 260, 70_000, 1];
+        let serial = LatencyHist::default();
+        for &us in stream_a.iter().chain(&stream_b) {
+            serial.record_us(us);
+        }
+        let (a, b) = (LatencyHist::default(), LatencyHist::default());
+        for &us in &stream_a {
+            a.record_us(us);
+        }
+        for &us in &stream_b {
+            b.record_us(us);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), serial.count());
+        assert_eq!(a.sum_us(), serial.sum_us());
+        assert_eq!(a.bucket_counts(), serial.bucket_counts());
+        for q in [0.0, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(a.percentile_us(q), serial.percentile_us(q), "q={q}");
+        }
+        assert_eq!(a.snapshot(), serial.snapshot());
+    }
+
+    #[test]
+    fn snapshot_delta_isolates_a_window() {
+        let h = LatencyHist::default();
+        h.record_us(10);
+        h.record_us(100);
+        let t0 = h.snapshot();
+        h.record_us(100);
+        h.record_us(5000);
+        let t1 = h.snapshot();
+        let win = t1.delta(&t0);
+        assert_eq!(win.count, 2);
+        assert_eq!(win.sum_us, 5100);
+        // the window holds exactly the two new samples: one 100 µs, one 5 ms
+        assert_eq!(win.percentile_us(0.5), 100);
+        assert_eq!(win.percentile_us(0.99), 5000);
+        // deltas accumulate back into the full window sum
+        let mut acc = t0.delta(&HistSnapshot::default());
+        acc.add(&win);
+        assert_eq!(acc, t1);
+        // a reset racing the pair saturates to empty instead of wrapping
+        h.reset();
+        let after = h.snapshot().delta(&t1);
+        assert_eq!(after.count, 0);
+        assert_eq!(after.percentile_us(0.5), 0);
+    }
+
+    #[test]
+    fn empty_snapshot_percentile_is_zero_not_a_bucket_edge() {
+        let s = HistSnapshot::default();
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(s.percentile_us(q), 0);
+        }
+        assert_eq!(s.mean_us(), 0.0);
+        // a torn snapshot (count claimed, buckets empty) also reports 0
+        let torn = HistSnapshot { count: 3, ..HistSnapshot::default() };
+        assert_eq!(torn.percentile_us(0.99), 0);
+        let j = s.to_json();
+        assert_eq!(j.get("count").and_then(Json::as_usize), Some(0));
+        assert_eq!(j.get("p99_us").and_then(Json::as_usize), Some(0));
     }
 
     #[test]

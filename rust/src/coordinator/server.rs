@@ -13,6 +13,7 @@
 //! {"op": "stats"}
 //! {"op": "stats", "reset": true}
 //! {"op": "metrics"}
+//! {"op": "telemetry"}
 //! {"op": "trace"}
 //! {"op": "ping"}
 //! ```
@@ -36,9 +37,16 @@
 //! `{"op": "metrics"}` answers `{"ok": true, "metrics": "..."}` with the
 //! Prometheus text-format (0.0.4) exposition of the same counters — the
 //! line-protocol twin of `emdpar serve --metrics-addr`'s `GET /metrics`.
+//! `{"op": "telemetry"}` answers `{"ok": true, "telemetry": {...},
+//! "audit": {...}}`: the sliding-window per-workload rates (QPS,
+//! shed/deadline counts, per-stage micros, latency percentiles, probe /
+//! candidate / rerank fractions keyed by the resolved [`GroupKey`]) plus
+//! the online recall-audit estimates; `emdpar telemetry` wraps it.
 //! `{"op": "trace"}` answers the collector ring as Chrome trace-event JSON
 //! (`{"ok": true, "dropped": n, "traceEvents": [...]}`) that loads directly
-//! into `chrome://tracing` / Perfetto; `emdpar trace dump` wraps it.
+//! into `chrome://tracing` / Perfetto; `emdpar trace dump` wraps it.  A
+//! grown `dropped` count (the ring wrapped since the last export) logs one
+//! WARN per burst so operators notice undersized rings without log spam.
 //! Search requests additionally accept `"trace": true` — the response then
 //! carries `"trace": [...]`, the per-stage span timeline of the executing
 //! plan (see [`crate::obs`]) — and `"deadline_ms"`: a per-request
@@ -151,6 +159,9 @@ fn handle_cold(
             Ok(Handled::Line(stats_json(engine).to_string_compact().into_bytes()))
         }
         "metrics" => Ok(Handled::Line(metrics_json(engine).to_string_compact().into_bytes())),
+        "telemetry" => {
+            Ok(Handled::Line(telemetry_json(engine).to_string_compact().into_bytes()))
+        }
         "trace" => Ok(Handled::Line(trace_json(engine).to_string_compact().into_bytes())),
         "add_docs" => {
             Ok(Handled::Line(add_docs_json(&req, engine)?.to_string_compact().into_bytes()))
@@ -252,8 +263,18 @@ fn stats_json(engine: &SearchEngine) -> Json {
 /// The `metrics` op: Prometheus text exposition carried over the line
 /// protocol (the HTTP listener serves the same bytes at `GET /metrics`).
 fn metrics_json(engine: &SearchEngine) -> Json {
-    let text = crate::obs::prom::render(&engine.metrics(), Some(engine.tracer()));
+    let text = crate::obs::prom::render_engine(engine);
     Json::obj(vec![("ok", true.into()), ("metrics", Json::Str(text))])
+}
+
+/// The `telemetry` op: the sliding-window workload aggregates plus the
+/// online recall-audit estimates (`emdpar telemetry` wraps this line).
+fn telemetry_json(engine: &SearchEngine) -> Json {
+    Json::obj(vec![
+        ("ok", true.into()),
+        ("telemetry", engine.telemetry().snapshot().to_json()),
+        ("audit", engine.auditor().to_json()),
+    ])
 }
 
 /// The `trace` op: the span ring as Chrome trace-event JSON.  Extra
@@ -261,6 +282,7 @@ fn metrics_json(engine: &SearchEngine) -> Json {
 /// response line loads into `chrome://tracing` unmodified.
 fn trace_json(engine: &SearchEngine) -> Json {
     let snap = engine.tracer().snapshot();
+    engine.tracer().warn_on_new_drops(snap.dropped);
     crate::obs::chrome::render(&snap.spans, snap.dropped)
 }
 
@@ -314,6 +336,11 @@ impl Server {
 
     pub fn local_addr(&self) -> EmdResult<std::net::SocketAddr> {
         Ok(self.listener.local_addr()?)
+    }
+
+    /// The engine this server fronts (metrics/health listener wiring).
+    pub fn engine(&self) -> &Arc<SearchEngine> {
+        &self.engine
     }
 
     /// Accept loop; blocks forever (run in a dedicated thread if needed).
@@ -545,6 +572,27 @@ mod tests {
         // reset zeroes the counters; both replies are post-reset snapshots
         assert_eq!(out[3].get("queries").and_then(Json::as_usize), Some(0));
         assert_eq!(out[4].get("queries").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn telemetry_op_reports_workloads_and_audit() {
+        let out = roundtrip(&[
+            "{\"op\": \"search_id\", \"id\": 1, \"l\": 2}".into(),
+            "{\"op\": \"search_id\", \"id\": 2, \"l\": 2}".into(),
+            "{\"op\": \"telemetry\"}".into(),
+        ]);
+        assert_eq!(out[2].get("ok"), Some(&Json::Bool(true)), "{:?}", out[2]);
+        let tel = out[2].get("telemetry").expect("telemetry payload");
+        let workloads = tel.get("workloads").and_then(Json::as_arr).unwrap();
+        assert!(!workloads.is_empty(), "searches landed in the window: {tel:?}");
+        let w = &workloads[0];
+        assert_eq!(w.get("queries").and_then(Json::as_usize), Some(2));
+        assert!(w.get("qps").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(w.get("label").and_then(Json::as_str).unwrap().contains("_l2"));
+        // auditing is off by default: the estimate store is empty but present
+        let audit = out[2].get("audit").expect("audit payload");
+        assert_eq!(audit.get("sample").and_then(Json::as_usize), Some(0));
+        assert_eq!(audit.get("workloads").and_then(Json::as_arr).unwrap().len(), 0);
     }
 
     #[test]

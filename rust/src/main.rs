@@ -9,6 +9,7 @@
 //! * `eval`            reproduce the paper's accuracy tables (5, 6) & sweeps
 //! * `serve`           run the TCP search server
 //! * `trace`           dump a running server's span ring as Chrome trace-event JSON
+//! * `telemetry`       snapshot a running server's workload telemetry + audited recall
 //! * `artifacts-check` compile every artifact and cross-check PJRT vs native
 //!
 //! All method dispatch goes through the canonical [`Method`] enum and the
@@ -44,6 +45,7 @@ fn main() {
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
         "trace" => cmd_trace(rest),
+        "telemetry" => cmd_telemetry(rest),
         "artifacts-check" => cmd_artifacts_check(rest),
         other => {
             eprintln!("unknown subcommand '{other}'\n");
@@ -70,6 +72,7 @@ fn print_help() {
          \x20 eval             reproduce accuracy tables / sweeps (--help)\n\
          \x20 serve            run the TCP search server (--help)\n\
          \x20 trace            dump a server's span ring as Chrome trace-event JSON (--help)\n\
+         \x20 telemetry        snapshot a server's workload telemetry + audited recall (--help)\n\
          \x20 artifacts-check  compile artifacts, verify PJRT == native\n"
     );
 }
@@ -688,7 +691,25 @@ fn cmd_serve(args: &[String]) -> EmdResult<()> {
         .opt(
             "metrics-addr",
             "",
-            "also serve Prometheus text at http://<addr>/metrics (empty = off)",
+            "also serve Prometheus text at http://<addr>/metrics plus \
+             /healthz and /readyz health probes (empty = off)",
+        )
+        .opt(
+            "telemetry-window-ms",
+            "",
+            "sliding telemetry window duration, ms (0 = telemetry off)",
+        )
+        .opt(
+            "audit-sample",
+            "",
+            "replay 1-in-N served queries at full probe for online recall \
+             auditing (0 = off)",
+        )
+        .opt(
+            "telemetry-out",
+            "",
+            "on graceful shutdown (SIGINT/SIGTERM, reactor runtime), flush \
+             a final telemetry+audit JSON snapshot to this file",
         );
     if args.iter().any(|a| a == "--help") {
         println!("{}", spec.usage("emdpar"));
@@ -723,29 +744,83 @@ fn cmd_serve(args: &[String]) -> EmdResult<()> {
     if !p.str("trace-buffer").is_empty() {
         cfg.serve.trace_buffer = p.usize("trace-buffer")?;
     }
+    if !p.str("telemetry-window-ms").is_empty() {
+        cfg.serve.telemetry_window_ms = p.usize("telemetry-window-ms")? as u64;
+    }
+    if !p.str("audit-sample").is_empty() {
+        cfg.serve.audit_sample = p.usize("audit-sample")? as u64;
+    }
+    cfg.validate()?;
     let runtime = p.str("runtime").to_string();
     let listen = cfg.listen.clone();
+    let maddr = p.opt_str("metrics-addr").filter(|s| !s.is_empty()).map(String::from);
+    let telemetry_out = p.opt_str("telemetry-out").filter(|s| !s.is_empty()).map(String::from);
     let engine = EngineBuilder::from_config(cfg).build_search()?;
-    if let Some(maddr) = p.opt_str("metrics-addr").filter(|s| !s.is_empty()) {
-        let metrics = engine.metrics();
-        let tracer = engine.tracer_arc();
-        let render: std::sync::Arc<dyn Fn() -> String + Send + Sync> =
-            std::sync::Arc::new(move || emdpar::obs::prom::render(&metrics, Some(&tracer)));
-        let (bound, _handle) = emdpar::obs::http::spawn_metrics(maddr, render)?;
-        println!("metrics: http://{bound}/metrics (Prometheus text 0.0.4)");
-    }
     println!(
         "dataset '{}' ({} docs) ready; listening on {listen} ({runtime} runtime)",
         engine.dataset().name,
         engine.dataset().len()
     );
     match runtime.as_str() {
-        "reactor" => ReactorServer::bind(engine, &listen)?.serve(),
-        "threads" => Server::bind(engine, &listen)?.serve(),
+        "reactor" => {
+            let server = ReactorServer::bind(engine, &listen)?;
+            spawn_obs(maddr.as_deref(), server.engine(), Some(server.ready_probe()))?;
+            // graceful SIGINT/SIGTERM: stop accepting, drain the reactors,
+            // then flush the final telemetry snapshot before exiting
+            emdpar::serve::sys::arm_shutdown_signals();
+            server.serve_until(emdpar::serve::sys::shutdown_flag())?;
+            let engine = std::sync::Arc::clone(server.engine());
+            drop(server); // joins the reactor threads
+            flush_telemetry_snapshot(&engine, telemetry_out.as_deref())
+        }
+        "threads" => {
+            let server = Server::bind(engine, &listen)?;
+            let probe_engine = std::sync::Arc::clone(server.engine());
+            let probe: emdpar::obs::http::ReadyProbe = std::sync::Arc::new(move || {
+                if probe_engine.ready() {
+                    Ok(())
+                } else {
+                    Err("not ready: corpus empty or index untrained".to_string())
+                }
+            });
+            spawn_obs(maddr.as_deref(), server.engine(), Some(probe))?;
+            server.serve()
+        }
         other => Err(EmdError::config(format!(
             "unknown --runtime '{other}' (expected 'reactor' or 'threads')"
         ))),
     }
+}
+
+/// Spawn the metrics/health HTTP listener when `--metrics-addr` is set.
+fn spawn_obs(
+    maddr: Option<&str>,
+    engine: &std::sync::Arc<emdpar::prelude::SearchEngine>,
+    ready: Option<emdpar::obs::http::ReadyProbe>,
+) -> EmdResult<()> {
+    let Some(maddr) = maddr else { return Ok(()) };
+    let engine = std::sync::Arc::clone(engine);
+    let render: std::sync::Arc<dyn Fn() -> String + Send + Sync> =
+        std::sync::Arc::new(move || emdpar::obs::prom::render_engine(&engine));
+    let (bound, _handle) = emdpar::obs::http::spawn_listener(maddr, render, ready)?;
+    println!("metrics: http://{bound}/metrics (Prometheus text 0.0.4; health: /healthz, /readyz)");
+    Ok(())
+}
+
+/// Write the final `{"telemetry":…,"audit":…}` snapshot on graceful
+/// shutdown so a scrape gap at exit never loses the last window.
+fn flush_telemetry_snapshot(
+    engine: &emdpar::prelude::SearchEngine,
+    path: Option<&str>,
+) -> EmdResult<()> {
+    let Some(path) = path else { return Ok(()) };
+    let snap = emdpar::util::json::Json::obj(vec![
+        ("telemetry", engine.telemetry().snapshot().to_json()),
+        ("audit", engine.auditor().to_json()),
+    ]);
+    std::fs::write(path, snap.to_string_pretty() + "\n")?;
+    eprintln!("wrote final telemetry snapshot to {path}");
+    Ok(())
 }
 
 fn cmd_trace(args: &[String]) -> EmdResult<()> {
@@ -786,6 +861,46 @@ fn cmd_trace(args: &[String]) -> EmdResult<()> {
             eprintln!("wrote {path}");
         }
         _ => println!("{line}"),
+    }
+    Ok(())
+}
+
+fn cmd_telemetry(args: &[String]) -> EmdResult<()> {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    let spec = CommandSpec::new(
+        "telemetry",
+        "snapshot a running server's workload telemetry + audited recall",
+    )
+    .opt("addr", "127.0.0.1:7878", "server address (the line-protocol listener)")
+    .opt("out", "", "write the JSON snapshot here (default: stdout)")
+    .flag("pretty", "pretty-print the JSON");
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage("emdpar"));
+        return Ok(());
+    }
+    let p = spec.parse(args)?;
+    let addr = p.str("addr");
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut w = stream;
+    w.write_all(b"{\"op\":\"telemetry\"}\n")?;
+    w.flush()?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let line = line.trim();
+    emdpar::emd_ensure!(!line.is_empty(), "empty response from {addr}");
+    let payload = if p.flag("pretty") {
+        emdpar::util::json::Json::parse(line)?.to_string_pretty()
+    } else {
+        line.to_string()
+    };
+    match p.opt_str("out") {
+        Some(path) if !path.is_empty() => {
+            std::fs::write(path, format!("{payload}\n"))?;
+            eprintln!("wrote {path}");
+        }
+        _ => println!("{payload}"),
     }
     Ok(())
 }

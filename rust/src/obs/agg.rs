@@ -1,0 +1,478 @@
+//! Sliding-window workload telemetry: per-[`GroupKey`] rates over a ring
+//! of fixed-duration windows.
+//!
+//! The serving bridge records one entry per dispatched group (plus shed /
+//! deadline events), keyed by the same plan-normalized [`GroupKey`] the
+//! batcher groups on — so "workload" here means exactly one resolved
+//! parameter combination (method × ℓ × probe width × cascade × threads).
+//! Storage is a bounded ring of [`WINDOW_RETAIN`] windows behind one
+//! mutex; the hot path takes that lock once per *dispatch group* (not per
+//! query), after a single relaxed-atomic `armed` check.  Unarmed, the
+//! entire layer is one branch — the serving path stays byte-identical.
+//!
+//! Snapshots aggregate the retained windows into per-workload QPS,
+//! shed/deadline counts, per-stage micros, latency percentiles (via
+//! [`HistSnapshot`] window deltas) and probe/candidate/rerank fractions —
+//! the `{"op":"telemetry"}` payload, the Prometheus gauge source, and the
+//! training data the ROADMAP's cost-model planner will fit against.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::metrics::HistSnapshot;
+use crate::coordinator::plan::{GroupKey, QueryStats};
+use crate::util::json::Json;
+
+/// Windows retained by the ring (closed windows + the live one).  With the
+/// default 1 s window this is an 8 s sliding view.
+pub const WINDOW_RETAIN: usize = 8;
+
+/// One workload's accumulator inside one window.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkloadWindow {
+    /// Queries answered (summed over dispatch groups).
+    pub queries: u64,
+    /// Dispatch groups executed.
+    pub batches: u64,
+    /// Members shed because their deadline expired before dispatch.
+    pub deadline_expired: u64,
+    /// Per-query failures surfaced on this workload's retry path.
+    pub errors: u64,
+    /// Inverted lists visited by index-routed members.
+    pub lists_probed: u64,
+    /// Stage-1 candidates scored.
+    pub candidates_scored: u64,
+    /// Candidates rescored by rerank stages.
+    pub reranked: u64,
+    /// Queries carrying a Theorem-2 exactness certificate.
+    pub certified: u64,
+    /// Per-stage wall micros, summed over dispatches.
+    pub prune_us: u64,
+    pub score_us: u64,
+    pub fanout_us: u64,
+    pub merge_us: u64,
+    pub rerank_us: u64,
+    pub total_us: u64,
+    /// Per-query amortized execute latency (the window's `LatencyHist`
+    /// delta, recorded as a plain-value snapshot under the ring mutex).
+    pub latency: HistSnapshot,
+}
+
+impl WorkloadWindow {
+    fn absorb(&mut self, stats: &QueryStats) {
+        let n = stats.queries.max(1) as u64;
+        self.queries += stats.queries as u64;
+        self.batches += 1;
+        self.lists_probed += stats.lists_probed as u64;
+        self.candidates_scored += stats.candidates_scored as u64;
+        self.reranked += stats.reranked as u64;
+        self.certified += stats.certified.iter().filter(|&&c| c).count() as u64;
+        self.prune_us += stats.prune_us;
+        self.score_us += stats.score_us;
+        self.fanout_us += stats.fanout_us;
+        self.merge_us += stats.merge_us;
+        self.rerank_us += stats.rerank_us;
+        self.total_us += stats.total_us;
+        let per_query = stats.total_us / n;
+        for _ in 0..stats.queries {
+            self.latency.record_us(per_query);
+        }
+    }
+
+    fn add(&mut self, other: &WorkloadWindow) {
+        self.queries += other.queries;
+        self.batches += other.batches;
+        self.deadline_expired += other.deadline_expired;
+        self.errors += other.errors;
+        self.lists_probed += other.lists_probed;
+        self.candidates_scored += other.candidates_scored;
+        self.reranked += other.reranked;
+        self.certified += other.certified;
+        self.prune_us += other.prune_us;
+        self.score_us += other.score_us;
+        self.fanout_us += other.fanout_us;
+        self.merge_us += other.merge_us;
+        self.rerank_us += other.rerank_us;
+        self.total_us += other.total_us;
+        self.latency.add(&other.latency);
+    }
+}
+
+/// One fixed-duration window: a keyed Vec of workload accumulators (the
+/// same linear-scan idiom the batcher uses — `GroupKey` is deliberately
+/// un-`Hash`ed) plus events that arrive before a request resolves a key.
+#[derive(Debug, Default)]
+struct Window {
+    /// `now_ms / window_ms` at open time.
+    index: u64,
+    groups: Vec<(GroupKey, WorkloadWindow)>,
+    /// Admission sheds (no parsed request, so no workload key).
+    shed_unkeyed: u64,
+}
+
+impl Window {
+    fn group(&mut self, key: &GroupKey) -> &mut WorkloadWindow {
+        if let Some(i) = self.groups.iter().position(|(k, _)| k == key) {
+            return &mut self.groups[i].1;
+        }
+        self.groups.push((*key, WorkloadWindow::default()));
+        &mut self.groups.last_mut().unwrap().1
+    }
+}
+
+/// Aggregated view over the retained windows at one instant.
+#[derive(Debug, Clone)]
+pub struct TelemetrySnapshot {
+    pub window_ms: u64,
+    /// Windows aggregated (≤ [`WINDOW_RETAIN`]).
+    pub windows: usize,
+    /// Wall span the aggregate covers, ms (QPS denominator).
+    pub span_ms: u64,
+    pub shed_unkeyed: u64,
+    /// Per-workload aggregates with their windowed QPS.
+    pub workloads: Vec<(GroupKey, WorkloadWindow, f64)>,
+}
+
+impl TelemetrySnapshot {
+    pub fn to_json(&self) -> Json {
+        let workloads = self
+            .workloads
+            .iter()
+            .map(|(key, w, qps)| {
+                let queries = w.queries.max(1) as f64;
+                let candidates = w.candidates_scored.max(1) as f64;
+                Json::obj(vec![
+                    ("key", key_json(key)),
+                    ("label", key_label(key).into()),
+                    ("qps", (*qps).into()),
+                    ("queries", (w.queries as usize).into()),
+                    ("batches", (w.batches as usize).into()),
+                    ("deadline_expired", (w.deadline_expired as usize).into()),
+                    ("errors", (w.errors as usize).into()),
+                    ("lists_probed", (w.lists_probed as usize).into()),
+                    ("candidates_scored", (w.candidates_scored as usize).into()),
+                    ("reranked", (w.reranked as usize).into()),
+                    ("certified", (w.certified as usize).into()),
+                    ("lists_per_query", (w.lists_probed as f64 / queries).into()),
+                    ("candidates_per_query", (w.candidates_scored as f64 / queries).into()),
+                    ("rerank_fraction", (w.reranked as f64 / candidates).into()),
+                    (
+                        "stage_us",
+                        Json::obj(vec![
+                            ("prune", (w.prune_us as usize).into()),
+                            ("score", (w.score_us as usize).into()),
+                            ("fanout", (w.fanout_us as usize).into()),
+                            ("merge", (w.merge_us as usize).into()),
+                            ("rerank", (w.rerank_us as usize).into()),
+                            ("total", (w.total_us as usize).into()),
+                        ]),
+                    ),
+                    ("latency", w.latency.to_json()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("window_ms", (self.window_ms as usize).into()),
+            ("windows", self.windows.into()),
+            ("span_ms", (self.span_ms as usize).into()),
+            ("shed_unkeyed", (self.shed_unkeyed as usize).into()),
+            ("workloads", Json::Arr(workloads)),
+        ])
+    }
+}
+
+/// The store: an `armed` gate in front of a mutex-guarded window ring.
+pub struct Telemetry {
+    armed: AtomicBool,
+    window_ms: u64,
+    epoch: Instant,
+    inner: Mutex<VecDeque<Window>>,
+}
+
+impl Telemetry {
+    /// `window_ms = 0` builds the store disarmed (recording is a single
+    /// branch); any later [`Telemetry::set_armed`] uses a 1 s window.
+    pub fn new(window_ms: u64) -> Telemetry {
+        Telemetry {
+            armed: AtomicBool::new(window_ms > 0),
+            window_ms: if window_ms == 0 { 1000 } else { window_ms },
+            epoch: Instant::now(),
+            inner: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// The hot-path guard: one relaxed load.
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.armed.load(Ordering::Relaxed)
+    }
+
+    pub fn set_armed(&self, on: bool) {
+        self.armed.store(on, Ordering::Relaxed);
+    }
+
+    pub fn window_ms(&self) -> u64 {
+        self.window_ms
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis().min(u128::from(u64::MAX)) as u64
+    }
+
+    /// The window for "now", rotating and bounding the ring as needed.
+    fn current<'a>(&self, ring: &'a mut VecDeque<Window>) -> &'a mut Window {
+        let index = self.now_ms() / self.window_ms;
+        if ring.back().map(|w| w.index) != Some(index) {
+            ring.push_back(Window { index, ..Window::default() });
+            while ring.len() > WINDOW_RETAIN {
+                ring.pop_front();
+            }
+        }
+        ring.back_mut().unwrap()
+    }
+
+    /// Record one dispatched group's accounting under its workload key.
+    pub fn record(&self, key: &GroupKey, stats: &QueryStats) {
+        if !self.armed() {
+            return;
+        }
+        let mut ring = self.inner.lock().unwrap();
+        self.current(&mut ring).group(key).absorb(stats);
+    }
+
+    /// Record one deadline-expired shed for `key`'s workload.
+    pub fn record_deadline(&self, key: &GroupKey) {
+        if !self.armed() {
+            return;
+        }
+        let mut ring = self.inner.lock().unwrap();
+        self.current(&mut ring).group(key).deadline_expired += 1;
+    }
+
+    /// Record one per-query failure for `key`'s workload.
+    pub fn record_error(&self, key: &GroupKey) {
+        if !self.armed() {
+            return;
+        }
+        let mut ring = self.inner.lock().unwrap();
+        self.current(&mut ring).group(key).errors += 1;
+    }
+
+    /// Record one admission shed (no request parsed yet, so no key).
+    pub fn record_shed(&self) {
+        if !self.armed() {
+            return;
+        }
+        let mut ring = self.inner.lock().unwrap();
+        self.current(&mut ring).shed_unkeyed += 1;
+    }
+
+    /// Aggregate the retained windows.  Workloads sort by descending query
+    /// volume so the heaviest workload leads the exposition.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let ring = self.inner.lock().unwrap();
+        let mut workloads: Vec<(GroupKey, WorkloadWindow)> = Vec::new();
+        let mut shed_unkeyed = 0;
+        for win in ring.iter() {
+            shed_unkeyed += win.shed_unkeyed;
+            for (key, w) in &win.groups {
+                match workloads.iter_mut().find(|(k, _)| k == key) {
+                    Some((_, agg)) => agg.add(w),
+                    None => workloads.push((*key, w.clone())),
+                }
+            }
+        }
+        // span = from the oldest retained window's open edge to now; the
+        // live window contributes its elapsed fraction, so QPS is not
+        // diluted by the unfilled remainder
+        let span_ms = match ring.front() {
+            Some(front) => (self.now_ms() - front.index * self.window_ms).max(1),
+            None => self.window_ms,
+        };
+        let secs = span_ms as f64 / 1e3;
+        let mut out: Vec<(GroupKey, WorkloadWindow, f64)> = workloads
+            .into_iter()
+            .map(|(k, w)| {
+                let qps = w.queries as f64 / secs;
+                (k, w, qps)
+            })
+            .collect();
+        out.sort_by(|a, b| b.1.queries.cmp(&a.1.queries));
+        TelemetrySnapshot {
+            window_ms: self.window_ms,
+            windows: ring.len(),
+            span_ms,
+            shed_unkeyed,
+            workloads: out,
+        }
+    }
+}
+
+/// Protocol form of a workload key, mirroring the request fields it was
+/// resolved from.
+pub fn key_json(key: &GroupKey) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("method", key.method.name().into()),
+        ("l", key.l.into()),
+    ];
+    pairs.push(("nprobe", match key.nprobe {
+        Some(np) => np.into(),
+        None => Json::Null,
+    }));
+    if let Some((rerank, overfetch, certified)) = key.cascade {
+        pairs.push((
+            "cascade",
+            Json::obj(vec![
+                ("rerank", rerank.name().into()),
+                ("overfetch", overfetch.into()),
+                ("certified", certified.into()),
+            ]),
+        ));
+    }
+    if let Some(t) = key.threads {
+        pairs.push(("threads", t.into()));
+    }
+    Json::obj(pairs)
+}
+
+/// Compact single-token workload label, safe for a Prometheus label value
+/// (lowercase + digits + `_`), e.g. `rwmd_l10_np4` or
+/// `rwmd_l5_full_cas_emd_x8_cert`.
+pub fn key_label(key: &GroupKey) -> String {
+    let mut s = format!("{}_l{}", key.method.name().to_lowercase(), key.l);
+    s = s.replace('-', "_");
+    match key.nprobe {
+        Some(np) => s.push_str(&format!("_np{np}")),
+        None => s.push_str("_full"),
+    }
+    if let Some((rerank, overfetch, certified)) = key.cascade {
+        s.push_str(&format!(
+            "_cas_{}_x{overfetch}",
+            rerank.name().to_lowercase().replace('-', "_")
+        ));
+        if certified {
+            s.push_str("_cert");
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Method;
+
+    fn key(l: usize) -> GroupKey {
+        GroupKey { method: Method::Rwmd, l, nprobe: Some(4), cascade: None, threads: Some(2) }
+    }
+
+    fn stats(queries: usize, total_us: u64) -> QueryStats {
+        QueryStats {
+            queries,
+            lists_probed: 4 * queries,
+            candidates_scored: 25 * queries,
+            reranked: 5 * queries,
+            total_us,
+            score_us: total_us / 2,
+            ..QueryStats::default()
+        }
+    }
+
+    #[test]
+    fn unarmed_store_records_nothing() {
+        let t = Telemetry::new(0);
+        assert!(!t.armed());
+        t.record(&key(10), &stats(3, 300));
+        t.record_shed();
+        t.record_deadline(&key(10));
+        let snap = t.snapshot();
+        assert!(snap.workloads.is_empty());
+        assert_eq!(snap.shed_unkeyed, 0);
+        // arming later activates the 1 s fallback window
+        t.set_armed(true);
+        t.record(&key(10), &stats(1, 50));
+        assert_eq!(t.snapshot().workloads.len(), 1);
+        assert_eq!(t.window_ms(), 1000);
+    }
+
+    #[test]
+    fn groups_accumulate_by_workload_key() {
+        let t = Telemetry::new(1000);
+        t.record(&key(10), &stats(3, 300));
+        t.record(&key(10), &stats(2, 100));
+        t.record(&key(5), &stats(1, 40));
+        t.record_deadline(&key(5));
+        t.record_shed();
+        let snap = t.snapshot();
+        assert_eq!(snap.workloads.len(), 2);
+        // heaviest workload first
+        let (k0, w0, qps) = &snap.workloads[0];
+        assert_eq!(k0.l, 10);
+        assert_eq!(w0.queries, 5);
+        assert_eq!(w0.batches, 2);
+        assert_eq!(w0.lists_probed, 20);
+        assert_eq!(w0.candidates_scored, 125);
+        assert_eq!(w0.latency.count, 5);
+        assert!(*qps > 0.0);
+        let (k1, w1, _) = &snap.workloads[1];
+        assert_eq!(k1.l, 5);
+        assert_eq!(w1.deadline_expired, 1);
+        assert_eq!(snap.shed_unkeyed, 1);
+    }
+
+    #[test]
+    fn window_ring_rotates_and_stays_bounded() {
+        let t = Telemetry::new(1);
+        for _ in 0..3 * WINDOW_RETAIN {
+            t.record(&key(10), &stats(1, 10));
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let snap = t.snapshot();
+        assert!(snap.windows <= WINDOW_RETAIN, "{} windows retained", snap.windows);
+        // old windows aged out: the aggregate holds fewer than all records
+        assert!(snap.workloads[0].1.queries < 3 * WINDOW_RETAIN as u64);
+    }
+
+    #[test]
+    fn snapshot_json_carries_rates_and_stage_micros() {
+        let t = Telemetry::new(1000);
+        t.record(&key(10), &stats(4, 400));
+        let j = t.snapshot().to_json();
+        assert_eq!(j.get("window_ms").and_then(Json::as_usize), Some(1000));
+        let w = &j.get("workloads").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(w.get("queries").and_then(Json::as_usize), Some(4));
+        assert_eq!(w.get("lists_per_query").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(w.get("rerank_fraction").and_then(Json::as_f64), Some(0.2));
+        assert_eq!(
+            w.get("stage_us").and_then(|s| s.get("total")).and_then(Json::as_usize),
+            Some(400)
+        );
+        assert_eq!(
+            w.get("latency").and_then(|l| l.get("count")).and_then(Json::as_usize),
+            Some(4)
+        );
+        assert_eq!(w.get("label").and_then(Json::as_str), Some("rwmd_l10_np4"));
+    }
+
+    #[test]
+    fn key_labels_are_prometheus_safe() {
+        let cascaded = GroupKey {
+            method: Method::Rwmd,
+            l: 5,
+            nprobe: None,
+            cascade: Some((Method::Act { k: 3 }, 8, true)),
+            threads: Some(1),
+        };
+        for k in [key(10), cascaded] {
+            let label = key_label(&k);
+            assert!(
+                label.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+                "unsafe label {label:?}"
+            );
+        }
+        // Method::Act{k}.name() prints ACT-(k-1)
+        assert_eq!(key_label(&cascaded), "rwmd_l5_full_cas_act_2_x8_cert");
+    }
+}

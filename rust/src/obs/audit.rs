@@ -1,0 +1,324 @@
+//! Online recall auditing: deterministically sample 1-in-N production
+//! queries and replay them off the hot path at full probe.
+//!
+//! The serving bridge asks [`Auditor::should_sample`] once per member
+//! (with sampling off this is a single branch on an immutable field — the
+//! serving path stays byte-identical), clones the sampled query plus the
+//! hit ids it served, and hands the job to a bounded channel.  One
+//! background worker replays each job through the normal
+//! `SearchEngine::execute` with the probe width forced exhaustive — the
+//! same override a certified cascade uses, so the replay is the full-probe
+//! reference the bit-identity tests assert against, and the `DocView`
+//! snapshotting inside `execute` means audits never block corpus appends.
+//! The served ids are scored against the replay with
+//! [`crate::eval::recall_at`], and per-workload estimates accumulate in a
+//! keyed list for the telemetry op, the Prometheus gauges and `/readyz`
+//! consumers.
+//!
+//! The channel is lossy by design: if the worker falls behind, new samples
+//! are dropped (and counted) rather than ever back-pressuring serving.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::engine::SearchEngine;
+use crate::coordinator::plan::GroupKey;
+use crate::core::Histogram;
+use crate::eval::recall_at;
+use crate::util::json::Json;
+
+use super::agg::{key_json, key_label};
+
+/// Bounded audit queue: behind this, samples drop (counted) instead of
+/// blocking the dispatcher.
+const QUEUE_DEPTH: usize = 256;
+
+/// The probe-width override that collapses every pruning route to the
+/// exhaustive sweep (mirrors the certified-cascade override in the
+/// planner).
+const FULL_PROBE: usize = usize::MAX >> 1;
+
+/// One sampled production query awaiting replay.
+pub struct AuditJob {
+    pub key: GroupKey,
+    pub query: Histogram,
+    /// Doc ids the production response served, request order.
+    pub served: Vec<usize>,
+}
+
+/// Accumulated recall estimate for one workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecallStat {
+    pub audits: u64,
+    pub recall_sum: f64,
+    pub min_recall: f64,
+    pub last_recall: f64,
+    /// Total replay wall micros (the audit pipeline's own cost).
+    pub replay_us: u64,
+}
+
+impl RecallStat {
+    pub fn mean(&self) -> f64 {
+        if self.audits == 0 {
+            0.0
+        } else {
+            self.recall_sum / self.audits as f64
+        }
+    }
+}
+
+/// The sampler + estimate store.  One per engine; the worker thread is
+/// spawned by the serving bridge ([`spawn_worker`]).
+pub struct Auditor {
+    /// Sample 1 in `sample` members; 0 = auditing off.
+    sample: u64,
+    counter: AtomicU64,
+    audited: AtomicU64,
+    /// Samples dropped at the full queue, plus replay failures.
+    lost: AtomicU64,
+    tx: Option<SyncSender<AuditJob>>,
+    rx: Mutex<Option<Receiver<AuditJob>>>,
+    estimates: Mutex<Vec<(GroupKey, RecallStat)>>,
+}
+
+impl Auditor {
+    pub fn new(sample: u64) -> Auditor {
+        let (tx, rx) = if sample == 0 {
+            (None, None)
+        } else {
+            let (tx, rx) = sync_channel(QUEUE_DEPTH);
+            (Some(tx), Some(rx))
+        };
+        Auditor {
+            sample,
+            counter: AtomicU64::new(0),
+            audited: AtomicU64::new(0),
+            lost: AtomicU64::new(0),
+            tx,
+            rx: Mutex::new(rx),
+            estimates: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The configured 1-in-N rate (0 = off).
+    pub fn sample(&self) -> u64 {
+        self.sample
+    }
+
+    /// Deterministic sampler: every `sample`-th call returns true.  Off
+    /// (`sample == 0`) this is one branch on an immutable field — no
+    /// atomics touched.
+    #[inline]
+    pub fn should_sample(&self) -> bool {
+        self.sample != 0 && self.counter.fetch_add(1, Ordering::Relaxed) % self.sample == 0
+    }
+
+    /// Enqueue one sampled job; drops (and counts) when the worker is
+    /// behind or auditing is off.
+    pub fn submit(&self, job: AuditJob) {
+        match &self.tx {
+            Some(tx) if tx.try_send(job).is_ok() => {}
+            _ => {
+                self.lost.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Hand the job queue to the worker (first caller wins; the bridge may
+    /// be spawned more than once per engine).
+    pub fn take_receiver(&self) -> Option<Receiver<AuditJob>> {
+        self.rx.lock().unwrap().take()
+    }
+
+    /// Fold one replay outcome into `key`'s estimate.
+    pub fn publish(&self, key: &GroupKey, recall: f64, replay_us: u64) {
+        self.audited.fetch_add(1, Ordering::Relaxed);
+        let mut est = self.estimates.lock().unwrap();
+        match est.iter_mut().find(|(k, _)| k == key) {
+            Some((_, s)) => {
+                s.audits += 1;
+                s.recall_sum += recall;
+                s.min_recall = s.min_recall.min(recall);
+                s.last_recall = recall;
+                s.replay_us += replay_us;
+            }
+            None => est.push((
+                *key,
+                RecallStat {
+                    audits: 1,
+                    recall_sum: recall,
+                    min_recall: recall,
+                    last_recall: recall,
+                    replay_us,
+                },
+            )),
+        }
+    }
+
+    /// Count one failed replay.
+    pub fn record_failure(&self) {
+        self.lost.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Completed audits.
+    pub fn audited(&self) -> u64 {
+        self.audited.load(Ordering::Relaxed)
+    }
+
+    /// Samples lost (queue overflow + replay failures).
+    pub fn lost(&self) -> u64 {
+        self.lost.load(Ordering::Relaxed)
+    }
+
+    /// Per-workload estimates, heaviest (most-audited) first.
+    pub fn estimates(&self) -> Vec<(GroupKey, RecallStat)> {
+        let mut est = self.estimates.lock().unwrap().clone();
+        est.sort_by(|a, b| b.1.audits.cmp(&a.1.audits));
+        est
+    }
+
+    /// The telemetry op's `audit` sub-object.
+    pub fn to_json(&self) -> Json {
+        let workloads = self
+            .estimates()
+            .iter()
+            .map(|(key, s)| {
+                Json::obj(vec![
+                    ("key", key_json(key)),
+                    ("label", key_label(key).into()),
+                    ("audits", (s.audits as usize).into()),
+                    ("recall", s.mean().into()),
+                    ("min_recall", s.min_recall.into()),
+                    ("last_recall", s.last_recall.into()),
+                    ("replay_us", (s.replay_us as usize).into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("sample", (self.sample as usize).into()),
+            ("audited", (self.audited() as usize).into()),
+            ("lost", (self.lost() as usize).into()),
+            ("workloads", Json::Arr(workloads)),
+        ])
+    }
+}
+
+/// Spawn the replay worker for `engine`'s auditor.  Returns `None` when
+/// auditing is off or a worker already owns the queue.  The worker holds
+/// only a `Weak` engine reference so it can never keep the engine alive;
+/// it exits when the engine drops (checked on a 200 ms idle tick) or the
+/// sender side closes.
+pub fn spawn_worker(engine: &Arc<SearchEngine>) -> Option<JoinHandle<()>> {
+    let auditor = engine.auditor_arc();
+    let rx = auditor.take_receiver()?;
+    let weak: Weak<SearchEngine> = Arc::downgrade(engine);
+    Some(
+        std::thread::Builder::new()
+            .name("emdpar-audit".into())
+            .spawn(move || loop {
+                match rx.recv_timeout(Duration::from_millis(200)) {
+                    Ok(job) => {
+                        let Some(engine) = weak.upgrade() else { break };
+                        replay(&engine, &auditor, job);
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        if weak.upgrade().is_none() {
+                            break;
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            })
+            .expect("spawn audit worker"),
+    )
+}
+
+/// Replay one sampled query at full probe and score the served ids
+/// against the exhaustive reference.
+fn replay(engine: &SearchEngine, auditor: &Auditor, job: AuditJob) {
+    let req = job.key.request(vec![job.query]).nprobe(FULL_PROBE);
+    let t0 = Instant::now();
+    match engine.execute(&req) {
+        Ok(resp) if !resp.results.is_empty() => {
+            let truth: Vec<usize> =
+                resp.results[0].hits.iter().map(|&(_, id)| id).collect();
+            let recall = recall_at(&truth, &job.served);
+            let us = t0.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+            auditor.publish(&job.key, recall, us);
+        }
+        _ => auditor.record_failure(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Method;
+
+    fn key() -> GroupKey {
+        GroupKey {
+            method: Method::Rwmd,
+            l: 5,
+            nprobe: Some(2),
+            cascade: None,
+            threads: Some(1),
+        }
+    }
+
+    #[test]
+    fn sampling_off_touches_no_atomics() {
+        let a = Auditor::new(0);
+        for _ in 0..100 {
+            assert!(!a.should_sample());
+        }
+        assert_eq!(a.counter.load(Ordering::Relaxed), 0, "off path must not count");
+        // submits with no queue are counted as lost, not panicking
+        a.submit(AuditJob { key: key(), query: Histogram::from_pairs(vec![(0, 1.0)]), served: vec![] });
+        assert_eq!(a.lost(), 1);
+    }
+
+    #[test]
+    fn sampler_is_deterministic_one_in_n() {
+        let a = Auditor::new(4);
+        let picks: Vec<bool> = (0..12).map(|_| a.should_sample()).collect();
+        let expect: Vec<bool> = (0..12).map(|i| i % 4 == 0).collect();
+        assert_eq!(picks, expect);
+    }
+
+    #[test]
+    fn estimates_accumulate_per_workload() {
+        let a = Auditor::new(1);
+        a.publish(&key(), 1.0, 100);
+        a.publish(&key(), 0.5, 100);
+        let other = GroupKey { l: 9, ..key() };
+        a.publish(&other, 0.25, 10);
+        let est = a.estimates();
+        assert_eq!(est.len(), 2);
+        assert_eq!(est[0].0, key(), "most-audited workload first");
+        assert_eq!(est[0].1.audits, 2);
+        assert!((est[0].1.mean() - 0.75).abs() < 1e-12);
+        assert_eq!(est[0].1.min_recall, 0.5);
+        assert_eq!(est[0].1.last_recall, 0.5);
+        let j = a.to_json();
+        assert_eq!(j.get("audited").and_then(Json::as_usize), Some(3));
+        let w = &j.get("workloads").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(w.get("audits").and_then(Json::as_usize), Some(2));
+    }
+
+    #[test]
+    fn queue_overflow_drops_instead_of_blocking() {
+        let a = Auditor::new(1);
+        // nobody drains the queue: the first QUEUE_DEPTH fit, the rest drop
+        for _ in 0..QUEUE_DEPTH + 5 {
+            a.submit(AuditJob {
+                key: key(),
+                query: Histogram::from_pairs(vec![(0, 1.0)]),
+                served: vec![1],
+            });
+        }
+        assert_eq!(a.lost(), 5);
+    }
+}

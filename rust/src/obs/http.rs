@@ -1,10 +1,20 @@
-//! Dependency-free mini HTTP/1.0 listener for Prometheus scrapes.
+//! Dependency-free mini HTTP/1.0 listener for Prometheus scrapes and
+//! health probes.
 //!
-//! Serves exactly one route — `GET /metrics` — with `Connection: close`
-//! semantics; anything else is a 404.  One connection is handled at a
-//! time: a scrape renders a few KiB of text, so serialization is cheaper
-//! than threads, and a stuck scraper can't pile up sockets (reads are
-//! capped and time-limited).
+//! Routes (all GET-only, `Connection: close` semantics):
+//! * `/metrics` — the Prometheus text exposition, rendered per scrape,
+//! * `/healthz` — process liveness: answers `200 ok` whenever the
+//!   listener thread is alive,
+//! * `/readyz` — serving readiness through an optional probe closure
+//!   (corpus loaded + index trained + admission not saturated when wired
+//!   by `emdpar serve`); `200 ready` or `503` with the reason.
+//!
+//! Anything else is a 404; a non-GET method is a 405; a malformed request
+//! head is a 400.  One connection is handled at a time: a scrape renders
+//! a few KiB of text, so serialization is cheaper than threads, and a
+//! stuck scraper can't pile up sockets (reads are capped and
+//! time-limited).  Write errors are swallowed per connection — a probe
+//! that disconnects mid-response never takes the listener down.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener};
@@ -18,13 +28,27 @@ use crate::core::EmdResult;
 /// requests are one line plus a handful of headers.
 const MAX_HEAD: usize = 4096;
 
-/// Bind `addr` and serve `GET /metrics` forever on a background thread,
-/// rendering the body through `render` per scrape.  Returns the bound
-/// address (port 0 resolves an ephemeral port for tests) and the listener
-/// thread handle.
+/// Readiness probe for `/readyz`: `Ok(())` is ready, `Err(why)` answers
+/// 503 with the reason in the body.
+pub type ReadyProbe = Arc<dyn Fn() -> Result<(), String> + Send + Sync>;
+
+/// Bind `addr` and serve `GET /metrics` (+ `/healthz`) forever on a
+/// background thread, rendering the body through `render` per scrape.
+/// `/readyz` answers 404 until a probe is wired via [`spawn_listener`].
+/// Returns the bound address (port 0 resolves an ephemeral port for
+/// tests) and the listener thread handle.
 pub fn spawn_metrics(
     addr: &str,
     render: Arc<dyn Fn() -> String + Send + Sync>,
+) -> EmdResult<(SocketAddr, JoinHandle<()>)> {
+    spawn_listener(addr, render, None)
+}
+
+/// [`spawn_metrics`] plus an optional `/readyz` probe.
+pub fn spawn_listener(
+    addr: &str,
+    render: Arc<dyn Fn() -> String + Send + Sync>,
+    ready: Option<ReadyProbe>,
 ) -> EmdResult<(SocketAddr, JoinHandle<()>)> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
@@ -33,21 +57,46 @@ pub fn spawn_metrics(
             let Ok(mut stream) = stream else { continue };
             let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
             let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
-            let path = read_request_path(&mut stream);
-            let response = match path.as_deref() {
-                Some("/metrics") | Some("/metrics/") => ok_response(&render()),
-                Some(_) => not_found(),
-                None => bad_request(),
+            let response = match read_request_line(&mut stream) {
+                None => text_response("400 Bad Request", "bad request\n"),
+                Some((method, target)) => route(&method, &target, &render, ready.as_ref()),
             };
+            // a peer that vanished mid-write is its problem, not the
+            // listener's
             let _ = stream.write_all(response.as_bytes());
         }
     });
     Ok((local, handle))
 }
 
+/// Dispatch one parsed request line.
+fn route(
+    method: &str,
+    target: &str,
+    render: &Arc<dyn Fn() -> String + Send + Sync>,
+    ready: Option<&ReadyProbe>,
+) -> String {
+    if method != "GET" {
+        return method_not_allowed();
+    }
+    match target.trim_end_matches('/') {
+        "/metrics" => metrics_response(&render()),
+        "/healthz" => text_response("200 OK", "ok\n"),
+        "/readyz" => match ready {
+            Some(probe) => match probe() {
+                Ok(()) => text_response("200 OK", "ready\n"),
+                Err(why) => text_response("503 Service Unavailable", &format!("{why}\n")),
+            },
+            None => text_response("404 Not Found", "not found\n"),
+        },
+        _ => text_response("404 Not Found", "not found\n"),
+    }
+}
+
 /// Read up to the end of the request head (blank line) and return the
-/// request-target of the first line, or `None` on malformed input.
-fn read_request_path(stream: &mut impl Read) -> Option<String> {
+/// method and request-target of the first line, or `None` on malformed
+/// input.
+fn read_request_line(stream: &mut impl Read) -> Option<(String, String)> {
     let mut head = Vec::with_capacity(512);
     let mut buf = [0u8; 512];
     let complete = |h: &[u8]| {
@@ -64,15 +113,13 @@ fn read_request_path(stream: &mut impl Read) -> Option<String> {
     let first = head.split(|&b| b == b'\n').next()?;
     let line = std::str::from_utf8(first).ok()?.trim_end_matches('\r');
     let mut parts = line.split(' ');
-    let method = parts.next()?;
+    let method = parts.next().filter(|m| !m.is_empty())?;
     let target = parts.next()?;
-    if method != "GET" {
-        return None;
-    }
-    Some(target.to_string())
+    Some((method.to_string(), target.to_string()))
 }
 
-fn ok_response(body: &str) -> String {
+/// The `/metrics` 200: Prometheus exposition content type.
+fn metrics_response(body: &str) -> String {
     format!(
         "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n{}",
@@ -81,21 +128,20 @@ fn ok_response(body: &str) -> String {
     )
 }
 
-fn not_found() -> String {
-    let body = "not found\n";
+/// A plain-text response with the given status line suffix.
+fn text_response(status: &str, body: &str) -> String {
     format!(
-        "HTTP/1.0 404 Not Found\r\nContent-Type: text/plain\r\nContent-Length: {}\r\n\
-         Connection: close\r\n\r\n{}",
+        "HTTP/1.0 {status}\r\nContent-Type: text/plain\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
         body.len(),
-        body
     )
 }
 
-fn bad_request() -> String {
-    let body = "bad request\n";
+fn method_not_allowed() -> String {
+    let body = "method not allowed\n";
     format!(
-        "HTTP/1.0 400 Bad Request\r\nContent-Type: text/plain\r\nContent-Length: {}\r\n\
-         Connection: close\r\n\r\n{}",
+        "HTTP/1.0 405 Method Not Allowed\r\nAllow: GET\r\nContent-Type: text/plain\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
         body.len(),
         body
     )
@@ -114,18 +160,81 @@ mod tests {
         out
     }
 
+    fn render() -> Arc<dyn Fn() -> String + Send + Sync> {
+        Arc::new(|| "emdpar_up 1\n".to_string())
+    }
+
     #[test]
-    fn serves_metrics_and_404s_everything_else() {
-        let body = Arc::new(|| "emdpar_up 1\n".to_string());
-        let (addr, _handle) = spawn_metrics("127.0.0.1:0", body).unwrap();
+    fn serves_metrics_and_404s_unknown_paths() {
+        let (addr, _handle) = spawn_metrics("127.0.0.1:0", render()).unwrap();
         let ok = scrape(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
         assert!(ok.starts_with("HTTP/1.0 200 OK"), "{ok}");
         assert!(ok.contains("text/plain; version=0.0.4"));
         assert!(ok.ends_with("emdpar_up 1\n"));
         let missing = scrape(addr, "GET /other HTTP/1.1\r\n\r\n");
         assert!(missing.starts_with("HTTP/1.0 404"), "{missing}");
-        let bad = scrape(addr, "POST /metrics HTTP/1.1\r\n\r\n");
+    }
+
+    #[test]
+    fn non_get_is_405_and_malformed_is_400() {
+        let (addr, _handle) = spawn_metrics("127.0.0.1:0", render()).unwrap();
+        let post = scrape(addr, "POST /metrics HTTP/1.1\r\n\r\n");
+        assert!(post.starts_with("HTTP/1.0 405"), "{post}");
+        assert!(post.contains("Allow: GET"), "{post}");
+        let delete = scrape(addr, "DELETE /healthz HTTP/1.1\r\n\r\n");
+        assert!(delete.starts_with("HTTP/1.0 405"), "{delete}");
+        // no target at all: malformed, not a 404
+        let bad = scrape(addr, "GARBAGE\r\n\r\n");
         assert!(bad.starts_with("HTTP/1.0 400"), "{bad}");
+    }
+
+    #[test]
+    fn healthz_is_always_ok_and_readyz_follows_the_probe() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let ready = Arc::new(AtomicBool::new(false));
+        let probe_ready = Arc::clone(&ready);
+        let probe: ReadyProbe = Arc::new(move || {
+            if probe_ready.load(Ordering::Relaxed) {
+                Ok(())
+            } else {
+                Err("index not trained".to_string())
+            }
+        });
+        let (addr, _handle) =
+            spawn_listener("127.0.0.1:0", render(), Some(probe)).unwrap();
+        let health = scrape(addr, "GET /healthz HTTP/1.0\r\n\r\n");
+        assert!(health.starts_with("HTTP/1.0 200"), "{health}");
+        assert!(health.ends_with("ok\n"));
+        let not_ready = scrape(addr, "GET /readyz HTTP/1.0\r\n\r\n");
+        assert!(not_ready.starts_with("HTTP/1.0 503"), "{not_ready}");
+        assert!(not_ready.ends_with("index not trained\n"));
+        ready.store(true, Ordering::Relaxed);
+        let now_ready = scrape(addr, "GET /readyz HTTP/1.0\r\n\r\n");
+        assert!(now_ready.starts_with("HTTP/1.0 200"), "{now_ready}");
+        assert!(now_ready.ends_with("ready\n"));
+    }
+
+    #[test]
+    fn readyz_without_a_probe_is_404() {
+        let (addr, _handle) = spawn_metrics("127.0.0.1:0", render()).unwrap();
+        let resp = scrape(addr, "GET /readyz HTTP/1.0\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.0 404"), "{resp}");
+    }
+
+    #[test]
+    fn connection_dropped_mid_write_keeps_listener_alive() {
+        // a big body forces the response past one socket buffer so the
+        // peer's early close surfaces as a write error on the listener
+        let big = Arc::new(|| "x".repeat(1 << 20));
+        let (addr, _handle) = spawn_metrics("127.0.0.1:0", big).unwrap();
+        for _ in 0..3 {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+            drop(s); // vanish without reading the response
+        }
+        // the listener must still answer a well-behaved client
+        let resp = scrape(addr, "GET /healthz HTTP/1.0\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.0 200"), "{resp}");
     }
 
     #[test]

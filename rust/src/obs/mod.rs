@@ -6,10 +6,16 @@
 //!   [`TraceSession`] recorder the execute paths write into,
 //! * [`chrome`] — Chrome trace-event JSON export (`chrome://tracing` /
 //!   Perfetto loadable) of the collector ring,
+//! * [`agg`] — sliding-window per-workload telemetry (QPS, shed/deadline
+//!   counts, stage micros, latency deltas) keyed by the batcher's
+//!   [`crate::coordinator::GroupKey`],
+//! * [`audit`] — online recall auditing: 1-in-N sampled production queries
+//!   replayed at full probe off the hot path, per-workload recall@ℓ,
 //! * [`prom`] — Prometheus text exposition (version 0.0.4) of the
-//!   aggregate [`crate::coordinator::Metrics`],
-//! * [`http`] — a dependency-free mini HTTP listener serving `/metrics`
-//!   (`emdpar serve --metrics-addr`).
+//!   aggregate [`crate::coordinator::Metrics`] plus the windowed telemetry
+//!   and audited-recall gauges,
+//! * [`http`] — a dependency-free mini HTTP listener serving `/metrics`,
+//!   `/healthz` and `/readyz` (`emdpar serve --metrics-addr`).
 //!
 //! Tracing is opt-in per request (`SearchRequest::trace`) or armed globally
 //! by the slow-query log (`ServeParams::slow_query_us` /
@@ -18,6 +24,8 @@
 //! always-on per-stage `QueryStats` fields) and skip span recording after a
 //! single relaxed atomic check — results are bit-identical either way.
 
+pub mod agg;
+pub mod audit;
 pub mod chrome;
 pub mod http;
 pub mod prom;

@@ -10,7 +10,10 @@
 use std::fmt::Write as _;
 use std::sync::atomic::Ordering;
 
+use crate::coordinator::engine::SearchEngine;
 use crate::coordinator::metrics::{LatencyHist, Metrics};
+use crate::obs::agg::{key_label, TelemetrySnapshot};
+use crate::obs::audit::Auditor;
 use crate::obs::trace::TraceCollector;
 
 /// Render the full exposition page.  `tracer` is optional so callers
@@ -86,6 +89,76 @@ pub fn render(metrics: &Metrics, tracer: Option<&TraceCollector>) -> String {
     histogram(&mut out, "execute_us", "Engine execute time per dispatch group", &metrics.execute);
     histogram(&mut out, "e2e_us", "Enqueue to response-serialized end-to-end time", &metrics.e2e);
     out
+}
+
+/// The full page for a live engine: [`render`]'s counter/histogram set
+/// plus the sliding-window workload gauges and audited-recall gauges.
+/// This is the body behind `--metrics-addr` in `emdpar serve` and the
+/// `metrics` wire op.
+pub fn render_engine(engine: &SearchEngine) -> String {
+    let metrics = engine.metrics();
+    let mut out = render(&metrics, Some(engine.tracer()));
+    telemetry_gauges(&mut out, &engine.telemetry().snapshot());
+    audit_gauges(&mut out, engine.auditor());
+    out
+}
+
+/// Windowed per-workload gauges from one telemetry snapshot: one
+/// `{workload="<label>"}` series per resolved parameter combination,
+/// covering the retained window ring (rates, not lifetime counters).
+pub fn telemetry_gauges(out: &mut String, snap: &TelemetrySnapshot) {
+    let _ = writeln!(out, "# HELP emdpar_telemetry_span_ms Wall span covered by the telemetry window ring");
+    let _ = writeln!(out, "# TYPE emdpar_telemetry_span_ms gauge");
+    let _ = writeln!(out, "emdpar_telemetry_span_ms {}", snap.span_ms);
+    let _ = writeln!(out, "# HELP emdpar_telemetry_shed_unkeyed Admission sheds in the window (shed before a workload key exists)");
+    let _ = writeln!(out, "# TYPE emdpar_telemetry_shed_unkeyed gauge");
+    let _ = writeln!(out, "emdpar_telemetry_shed_unkeyed {}", snap.shed_unkeyed);
+    let labeled: Vec<(String, &crate::obs::agg::WorkloadWindow, f64)> = snap
+        .workloads
+        .iter()
+        .map(|(key, w, qps)| (key_label(key), w, *qps))
+        .collect();
+    workload_gauge(out, "workload_qps", "Windowed queries per second", labeled.iter().map(|(l, _, qps)| (l.as_str(), *qps)));
+    workload_gauge(out, "workload_queries", "Queries answered in the window", labeled.iter().map(|(l, w, _)| (l.as_str(), w.queries as f64)));
+    workload_gauge(out, "workload_deadline_expired", "Deadline sheds in the window", labeled.iter().map(|(l, w, _)| (l.as_str(), w.deadline_expired as f64)));
+    workload_gauge(out, "workload_errors", "Per-query failures in the window", labeled.iter().map(|(l, w, _)| (l.as_str(), w.errors as f64)));
+    workload_gauge(out, "workload_p99_us", "Windowed p99 execute latency, microseconds", labeled.iter().map(|(l, w, _)| (l.as_str(), w.latency.percentile_us(0.99) as f64)));
+    workload_gauge(out, "workload_lists_per_query", "Mean inverted lists probed per query in the window", labeled.iter().map(|(l, w, _)| (l.as_str(), w.lists_probed as f64 / w.queries.max(1) as f64)));
+    workload_gauge(out, "workload_rerank_fraction", "Fraction of windowed candidates rescored by rerank stages", labeled.iter().map(|(l, w, _)| (l.as_str(), w.reranked as f64 / w.candidates_scored.max(1) as f64)));
+}
+
+/// Online recall-audit gauges: the sampling rate, the audit pipeline's own
+/// counters, and the per-workload recall estimates.
+pub fn audit_gauges(out: &mut String, auditor: &Auditor) {
+    let _ = writeln!(out, "# HELP emdpar_audit_sample Recall-audit sampling rate, 1-in-N (0 = off)");
+    let _ = writeln!(out, "# TYPE emdpar_audit_sample gauge");
+    let _ = writeln!(out, "emdpar_audit_sample {}", auditor.sample());
+    let _ = writeln!(out, "# HELP emdpar_audits_total Sampled queries replayed at full probe");
+    let _ = writeln!(out, "# TYPE emdpar_audits_total counter");
+    let _ = writeln!(out, "emdpar_audits_total {}", auditor.audited());
+    let _ = writeln!(out, "# HELP emdpar_audit_lost_total Samples dropped at the audit queue plus failed replays");
+    let _ = writeln!(out, "# TYPE emdpar_audit_lost_total counter");
+    let _ = writeln!(out, "emdpar_audit_lost_total {}", auditor.lost());
+    let est = auditor.estimates();
+    let labeled: Vec<(String, crate::obs::audit::RecallStat)> =
+        est.iter().map(|(key, s)| (key_label(key), *s)).collect();
+    workload_gauge(out, "audit_recall", "Mean audited recall against the full-probe replay", labeled.iter().map(|(l, s)| (l.as_str(), s.mean())));
+    workload_gauge(out, "audit_last_recall", "Most recent audited recall", labeled.iter().map(|(l, s)| (l.as_str(), s.last_recall)));
+    workload_gauge(out, "audit_min_recall", "Worst audited recall observed", labeled.iter().map(|(l, s)| (l.as_str(), s.min_recall)));
+}
+
+/// One gauge family with a `workload` label per series.
+fn workload_gauge<'a>(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    series: impl Iterator<Item = (&'a str, f64)>,
+) {
+    let _ = writeln!(out, "# HELP emdpar_{name} {help}");
+    let _ = writeln!(out, "# TYPE emdpar_{name} gauge");
+    for (label, value) in series {
+        let _ = writeln!(out, "emdpar_{name}{{workload=\"{label}\"}} {value}");
+    }
 }
 
 /// Emit one histogram: cumulative `le` buckets, `+Inf`, `_sum`, `_count`.
@@ -178,6 +251,45 @@ mod tests {
             assert!(v >= last, "non-cumulative bucket: {line}");
             last = v;
         }
+    }
+
+    #[test]
+    fn telemetry_and_audit_gauges_pass_the_lint() {
+        use crate::coordinator::plan::{GroupKey, QueryStats};
+        use crate::core::Method;
+        let key = GroupKey {
+            method: Method::Rwmd,
+            l: 10,
+            nprobe: Some(4),
+            cascade: None,
+            threads: Some(2),
+        };
+        let t = crate::obs::agg::Telemetry::new(1000);
+        t.record(
+            &key,
+            &QueryStats {
+                queries: 3,
+                lists_probed: 12,
+                candidates_scored: 75,
+                reranked: 15,
+                total_us: 300,
+                ..QueryStats::default()
+            },
+        );
+        t.record_shed();
+        let a = Auditor::new(64);
+        a.publish(&key, 1.0, 250);
+        let mut out = String::new();
+        telemetry_gauges(&mut out, &t.snapshot());
+        audit_gauges(&mut out, &a);
+        lint(&out).unwrap();
+        assert!(out.contains("emdpar_workload_qps{workload=\"rwmd_l10_np4\"}"), "{out}");
+        assert!(out.contains("emdpar_workload_queries{workload=\"rwmd_l10_np4\"} 3"), "{out}");
+        assert!(out.contains("emdpar_workload_rerank_fraction{workload=\"rwmd_l10_np4\"} 0.2"), "{out}");
+        assert!(out.contains("emdpar_telemetry_shed_unkeyed 1"), "{out}");
+        assert!(out.contains("emdpar_audit_sample 64"), "{out}");
+        assert!(out.contains("emdpar_audits_total 1"), "{out}");
+        assert!(out.contains("emdpar_audit_recall{workload=\"rwmd_l10_np4\"} 1"), "{out}");
     }
 
     #[test]

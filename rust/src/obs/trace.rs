@@ -170,6 +170,9 @@ pub struct TraceCollector {
     head: AtomicU64,
     enabled: AtomicBool,
     next_trace: AtomicU64,
+    /// `dropped` as of the last wraparound WARN (see
+    /// [`TraceCollector::warn_on_new_drops`]).
+    warned_dropped: AtomicU64,
 }
 
 impl TraceCollector {
@@ -183,6 +186,7 @@ impl TraceCollector {
             head: AtomicU64::new(0),
             enabled: AtomicBool::new(false),
             next_trace: AtomicU64::new(1),
+            warned_dropped: AtomicU64::new(0),
         }
     }
 
@@ -241,6 +245,24 @@ impl TraceCollector {
     /// Spans lost to ring wraparound: everything past capacity.
     pub fn dropped(&self) -> u64 {
         self.total().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Log one WARN when `dropped` has grown since the last call — one
+    /// line per wraparound burst, not one per lost span, so an undersized
+    /// ring (`--trace-buffer`) is visible without flooding the log.
+    /// Returns the number of spans dropped since the last warning.
+    pub fn warn_on_new_drops(&self, dropped: u64) -> u64 {
+        let last = self.warned_dropped.fetch_max(dropped, Ordering::Relaxed);
+        let new = dropped.saturating_sub(last);
+        if new > 0 {
+            crate::log_warn!(
+                "trace",
+                "span ring wrapped: {new} spans dropped since last export \
+                 ({dropped} total; raise --trace-buffer past {} to keep more)",
+                self.capacity()
+            );
+        }
+        new
     }
 
     /// Copy out every readable span, oldest first.
@@ -486,6 +508,22 @@ mod tests {
         let a = TraceSession::start(&col).trace_id();
         let b = TraceSession::start(&col).trace_id();
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn wraparound_warns_once_per_burst() {
+        let col = TraceCollector::new(16);
+        for i in 0..20u64 {
+            col.push(rec(i, 1, i));
+        }
+        let d = col.dropped();
+        assert_eq!(d, 4);
+        assert_eq!(col.warn_on_new_drops(d), 4, "first export after a wrap warns");
+        assert_eq!(col.warn_on_new_drops(d), 0, "steady ring stays quiet");
+        for i in 0..3u64 {
+            col.push(rec(100 + i, 1, i));
+        }
+        assert_eq!(col.warn_on_new_drops(col.dropped()), 3, "a new burst warns again");
     }
 
     #[test]

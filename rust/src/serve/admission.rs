@@ -43,6 +43,17 @@ impl Admission {
     pub fn in_flight(&self) -> usize {
         self.inflight.load(Ordering::Acquire)
     }
+
+    /// The configured budget (`/readyz` reports saturation against this).
+    pub fn capacity(&self) -> usize {
+        self.max
+    }
+
+    /// True when every slot is taken — new requests are being shed right
+    /// now, so a readiness probe should steer traffic away.
+    pub fn saturated(&self) -> bool {
+        self.in_flight() >= self.max
+    }
 }
 
 impl Drop for Permit {

@@ -10,6 +10,13 @@
 //! at dequeue (before a job's group is formed) and at the group→per-query
 //! retry stage boundary.  Shed jobs answer `deadline exceeded` immediately
 //! instead of burning engine time.
+//!
+//! The bridge is also where workload telemetry and recall auditing hook
+//! in: each dispatched group feeds one [`crate::obs::agg::Telemetry`]
+//! record (one mutex take per *group*), and the
+//! [`crate::obs::audit::Auditor`] samples 1-in-N members for off-path
+//! full-probe replay.  Both are gated by single branches when off, so the
+//! serving path stays byte-identical.
 
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
@@ -20,6 +27,7 @@ use crate::coordinator::batcher::{next_batch, BatchPolicy, Pending};
 use crate::coordinator::engine::SearchEngine;
 use crate::coordinator::plan::{GroupKey, SearchRequest};
 use crate::core::Histogram;
+use crate::obs::audit::AuditJob;
 use crate::obs::{SpanName, SpanRec, TraceCollector};
 
 use super::admission::Permit;
@@ -129,6 +137,9 @@ pub(crate) fn spawn_dispatcher(engine: Arc<SearchEngine>) -> Sender<Pending<Job,
         max_batch: engine.config().max_batch,
         linger: std::time::Duration::from_millis(engine.config().linger_ms),
     };
+    // the audit replay worker rides with the dispatcher: no-op unless
+    // sampling is configured (and only the first dispatcher gets the queue)
+    crate::obs::audit::spawn_worker(&engine);
     let (batch_tx, batch_rx) = channel::<Pending<Job, JobResult>>();
     std::thread::spawn(move || {
         while let Some(batch) = next_batch(&batch_rx, policy) {
@@ -141,6 +152,7 @@ pub(crate) fn spawn_dispatcher(engine: Arc<SearchEngine>) -> Sender<Pending<Job,
                 let m = into_member(p);
                 if expired(m.ticket.deadline, now) {
                     engine.metrics().record_deadline_expired();
+                    engine.telemetry().record_deadline(&m.key);
                     deliver(&engine, m.ticket, Err(wire::DEADLINE_MSG.to_string()));
                 } else {
                     live.push(m);
@@ -178,12 +190,26 @@ pub(crate) fn spawn_dispatcher(engine: Arc<SearchEngine>) -> Sender<Pending<Job,
                     let out = engine.execute(&single);
                     engine.metrics().execute.record(t0.elapsed());
                     push_stage(engine.tracer(), SpanName::Dispatch, t0.elapsed(), 0);
-                    out.map(|mut resp| {
-                        let cert = resp.stats.certified.first().copied();
-                        let res = resp.results.pop().expect("one query in, one result out");
-                        wire::search_result_line(&res, cert, resp.spans.as_deref())
-                    })
-                    .map_err(|e| e.to_string())
+                    match out {
+                        Ok(mut resp) => {
+                            engine.telemetry().record(&key, &resp.stats);
+                            let cert = resp.stats.certified.first().copied();
+                            let res =
+                                resp.results.pop().expect("one query in, one result out");
+                            if engine.auditor().should_sample() {
+                                engine.auditor().submit(AuditJob {
+                                    key,
+                                    query: q.clone(),
+                                    served: res.hits.iter().map(|&(_, id)| id).collect(),
+                                });
+                            }
+                            Ok(wire::search_result_line(&res, cert, resp.spans.as_deref()))
+                        }
+                        Err(e) => {
+                            engine.telemetry().record_error(&key);
+                            Err(e.to_string())
+                        }
+                    }
                 };
                 // per-query dispatch with a deadline recheck: sequential
                 // batchmates can burn past a later job's deadline, so this
@@ -191,6 +217,7 @@ pub(crate) fn spawn_dispatcher(engine: Arc<SearchEngine>) -> Sender<Pending<Job,
                 let run_one = |q: &Histogram, t: &Ticket| -> JobResult {
                     if expired(t.deadline, Instant::now()) {
                         engine.metrics().record_deadline_expired();
+                        engine.telemetry().record_deadline(&key);
                         return Err(wire::DEADLINE_MSG.to_string());
                     }
                     per_query(q, t.trace)
@@ -216,6 +243,7 @@ pub(crate) fn spawn_dispatcher(engine: Arc<SearchEngine>) -> Sender<Pending<Job,
                     push_stage(engine.tracer(), SpanName::Dispatch, t0.elapsed(), 0);
                     match out {
                         Ok(resp) => {
+                            engine.telemetry().record(&key, &resp.stats);
                             let certs = resp.stats.certified;
                             // one grouped execute, one shared timeline: each
                             // traced member gets the whole group's spans
@@ -225,6 +253,17 @@ pub(crate) fn spawn_dispatcher(engine: Arc<SearchEngine>) -> Sender<Pending<Job,
                                 .zip(&tickets)
                                 .enumerate()
                                 .map(|(i, (res, t))| {
+                                    if engine.auditor().should_sample() {
+                                        engine.auditor().submit(AuditJob {
+                                            key,
+                                            query: group_req.queries()[i].clone(),
+                                            served: res
+                                                .hits
+                                                .iter()
+                                                .map(|&(_, id)| id)
+                                                .collect(),
+                                        });
+                                    }
                                     let tl =
                                         if t.trace { group_spans.as_deref() } else { None };
                                     Ok(wire::search_result_line(
@@ -345,6 +384,63 @@ mod tests {
         let out = rrx.recv().unwrap();
         assert_eq!(out, Err(wire::DEADLINE_MSG.to_string()));
         assert_eq!(engine.metrics().deadline_expired.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn telemetry_records_each_dispatch_group() {
+        let engine = test_engine(); // default telemetry_window_ms=1000 → armed
+        let tx = spawn_dispatcher(Arc::clone(&engine));
+        let (rtx, rrx) = channel();
+        tx.send(Pending {
+            query: search_job(&engine, 3, None),
+            respond: rtx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        rrx.recv().unwrap().expect("search succeeds");
+        let snap = engine.telemetry().snapshot();
+        assert_eq!(snap.workloads.len(), 1, "one workload key seen");
+        let (key, w, _) = &snap.workloads[0];
+        assert_eq!(key.l, 3);
+        assert_eq!(w.queries, 1);
+        assert_eq!(w.batches, 1);
+        assert_eq!(w.latency.count, 1);
+    }
+
+    #[test]
+    fn sampled_jobs_are_audited_at_full_probe() {
+        let mut cfg = Config {
+            dataset: DatasetSpec::SynthText { n: 30, vocab: 150, dim: 8, seed: 9 },
+            threads: 2,
+            linger_ms: 1,
+            ..Default::default()
+        };
+        cfg.serve.audit_sample = 1; // audit every member
+        let engine = Arc::new(SearchEngine::from_config(cfg).unwrap());
+        let tx = spawn_dispatcher(Arc::clone(&engine));
+        let (rtx, rrx) = channel();
+        tx.send(Pending {
+            query: search_job(&engine, 3, None),
+            respond: rtx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        rrx.recv().unwrap().expect("search succeeds");
+        // the replay runs on the audit worker; wait for it to land
+        let t0 = Instant::now();
+        while engine.auditor().audited() == 0
+            && t0.elapsed() < std::time::Duration::from_secs(10)
+        {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let est = engine.auditor().estimates();
+        assert_eq!(est.len(), 1, "audit landed");
+        assert_eq!(
+            est[0].1.last_recall,
+            1.0,
+            "an unpruned engine replays its own serving route bit-identically"
+        );
+        assert!(est[0].1.replay_us > 0);
     }
 
     #[test]

@@ -184,6 +184,7 @@ impl Conn {
             Handled::Search { req, key, deadline } => match ctx.admission.try_admit() {
                 None => {
                     ctx.engine.metrics().record_shed();
+                    ctx.engine.telemetry().record_shed();
                     self.push_ready(wire::overload_line(ctx.retry_after_ms));
                 }
                 Some(permit) => {

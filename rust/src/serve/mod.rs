@@ -24,10 +24,10 @@ pub mod sys;
 pub(crate) mod wire;
 
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::engine::SearchEngine;
 use crate::core::EmdResult;
@@ -52,6 +52,7 @@ pub struct ReactorServer {
     handles: Vec<ReactorHandle>,
     active: Arc<AtomicUsize>,
     next: AtomicUsize,
+    admission: Admission,
 }
 
 impl ReactorServer {
@@ -90,7 +91,46 @@ impl ReactorServer {
             };
             handles.push(ReactorHandle { injector, thread: Some(thread) });
         }
-        Ok(ReactorServer { engine, listener, handles, active, next: AtomicUsize::new(0) })
+        Ok(ReactorServer {
+            engine,
+            listener,
+            handles,
+            active,
+            next: AtomicUsize::new(0),
+            admission,
+        })
+    }
+
+    /// The engine this server fronts.
+    pub fn engine(&self) -> &Arc<SearchEngine> {
+        &self.engine
+    }
+
+    /// The shared admission budget (readiness probes report saturation
+    /// against it).
+    pub fn admission(&self) -> &Admission {
+        &self.admission
+    }
+
+    /// Build the `/readyz` probe for this server: ready means the corpus
+    /// is loaded, every configured index is trained, and admission is not
+    /// saturated (traffic is not being shed right now).
+    pub fn ready_probe(&self) -> crate::obs::http::ReadyProbe {
+        let engine = Arc::clone(&self.engine);
+        let admission = self.admission.clone();
+        Arc::new(move || {
+            if !engine.ready() {
+                return Err("not ready: corpus empty or index untrained".to_string());
+            }
+            if admission.saturated() {
+                return Err(format!(
+                    "not ready: admission saturated ({}/{} in flight)",
+                    admission.in_flight(),
+                    admission.capacity()
+                ));
+            }
+            Ok(())
+        })
     }
 
     pub fn local_addr(&self) -> EmdResult<std::net::SocketAddr> {
@@ -114,6 +154,44 @@ impl ReactorServer {
         );
         for stream in self.listener.incoming() {
             self.inject(stream?);
+        }
+        Ok(())
+    }
+
+    /// Accept until `stop` flips true, then drain: stop accepting, wait
+    /// (bounded) for the reactors' in-flight connections to finish their
+    /// pipelined work, and return so the caller can flush final snapshots.
+    /// The `Drop` impl then shuts the reactor threads down cleanly.  This
+    /// is the graceful SIGINT/SIGTERM path of `emdpar serve`.
+    pub fn serve_until(&self, stop: &AtomicBool) -> EmdResult<()> {
+        crate::log_info!(
+            "serve",
+            "reactor server listening on {} ({} reactors, max_inflight {})",
+            self.local_addr()?,
+            self.handles.len(),
+            self.engine.config().serve.max_inflight
+        );
+        self.listener.set_nonblocking(true)?;
+        while !stop.load(Ordering::Acquire) {
+            match self.listener.accept() {
+                Ok((stream, _)) => self.inject(stream),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        crate::log_info!(
+            "serve",
+            "shutdown requested: draining {} active connection(s)",
+            self.active.load(Ordering::Acquire)
+        );
+        // bounded drain: clients with in-flight pipelines get a grace
+        // window; idle keep-alive connections are closed by Drop after it
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while self.active.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
         }
         Ok(())
     }
@@ -147,5 +225,58 @@ impl Drop for ReactorServer {
                 let _ = t.join();
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, DatasetSpec};
+    use std::io::{BufRead, BufReader, Write};
+
+    fn test_engine() -> SearchEngine {
+        SearchEngine::from_config(Config {
+            dataset: DatasetSpec::SynthText { n: 20, vocab: 100, dim: 8, seed: 3 },
+            threads: 2,
+            linger_ms: 1,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn serve_until_accepts_then_stops_on_flag() {
+        let server = ReactorServer::bind(test_engine(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let loop_handle = s.spawn(|| server.serve_until(&stop));
+            // a live round trip proves the loop accepts while running
+            let mut c = std::net::TcpStream::connect(addr).unwrap();
+            c.write_all(b"{\"op\": \"ping\"}\n").unwrap();
+            let mut line = String::new();
+            BufReader::new(c.try_clone().unwrap()).read_line(&mut line).unwrap();
+            assert!(line.contains("pong"), "{line}");
+            drop(c);
+            stop.store(true, Ordering::Release);
+            loop_handle.join().unwrap().expect("graceful exit");
+        });
+    }
+
+    #[test]
+    fn ready_probe_tracks_engine_and_admission() {
+        let server = ReactorServer::bind(test_engine(), "127.0.0.1:0").unwrap();
+        let probe = server.ready_probe();
+        assert!(probe().is_ok(), "loaded un-indexed corpus is ready");
+        assert_eq!(server.admission().capacity(), 1024);
+        assert!(!server.admission().saturated());
+        // exhaust the budget: the probe must flip to not-ready
+        let permits: Vec<Permit> =
+            (0..1024).map(|_| server.admission().try_admit().unwrap()).collect();
+        assert!(server.admission().saturated());
+        let why = probe().expect_err("saturated admission is not ready");
+        assert!(why.contains("saturated"), "{why}");
+        drop(permits);
+        assert!(probe().is_ok(), "released permits restore readiness");
     }
 }

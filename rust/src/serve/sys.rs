@@ -10,6 +10,48 @@
 //! efficient) without any platform bindings.
 
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Process-wide graceful-shutdown flag; see [`arm_shutdown_signals`].
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// The flag `emdpar serve` polls in its accept loop: flipped by
+/// SIGINT/SIGTERM once [`arm_shutdown_signals`] has run, or
+/// programmatically by [`request_shutdown`].
+pub fn shutdown_flag() -> &'static AtomicBool {
+    &SHUTDOWN
+}
+
+/// Request a graceful shutdown (the signal handler's body, and the test
+/// hook).
+pub fn request_shutdown() {
+    SHUTDOWN.store(true, Ordering::Release);
+}
+
+/// Install SIGINT/SIGTERM handlers that flip [`shutdown_flag`].  The
+/// handler body is a single atomic store — async-signal-safe.  On
+/// non-unix targets this is a no-op and Ctrl-C terminates the process as
+/// before.
+#[cfg(unix)]
+pub fn arm_shutdown_signals() {
+    use std::os::raw::c_int;
+    const SIGINT: c_int = 2;
+    const SIGTERM: c_int = 15;
+    extern "C" fn on_signal(_sig: c_int) {
+        SHUTDOWN.store(true, Ordering::Release);
+    }
+    extern "C" {
+        fn signal(signum: c_int, handler: extern "C" fn(c_int)) -> usize;
+    }
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+/// Non-unix targets: no signal bindings; shutdown stays programmatic.
+#[cfg(not(unix))]
+pub fn arm_shutdown_signals() {}
 
 /// What a registration wants to be told about.
 #[derive(Debug, Clone, Copy, Default)]

@@ -1,0 +1,232 @@
+//! Workload-telemetry & recall-audit acceptance (ISSUE 9).
+//!
+//! * telemetry + auditing are **byte-identity neutral**: with the store
+//!   unarmed and sampling off, and with both fully on, the reactor answers
+//!   the same request script with byte-for-byte identical responses;
+//! * the `{"op":"telemetry"}` wire op reports per-workload windowed
+//!   aggregates, and at 1-in-1 sampling the background auditor replays
+//!   served queries at full probe — for a workload already running at
+//!   full probe the audited recall@ℓ is exactly 1.0;
+//! * an unarmed store (`telemetry_window_ms = 0`) records nothing;
+//! * the `--metrics-addr` HTTP listener wired to a live [`ReactorServer`]
+//!   answers `/healthz`, `/readyz` (via the engine+admission probe) and
+//!   exposes the per-workload Prometheus gauges.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use emdpar::coordinator::SearchEngine;
+use emdpar::prelude::{Config, DatasetSpec, ReactorServer, ServeParams};
+use emdpar::util::json::Json;
+
+fn config(telemetry_window_ms: u64, audit_sample: u64) -> Config {
+    Config {
+        dataset: DatasetSpec::SynthText { n: 40, vocab: 160, dim: 8, seed: 21 },
+        threads: 2,
+        linger_ms: 1,
+        serve: ServeParams { telemetry_window_ms, audit_sample, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn engine(cfg: Config) -> SearchEngine {
+    SearchEngine::from_config(cfg).unwrap()
+}
+
+/// Pipeline `lines` down one reactor connection, one response per line.
+fn roundtrip(cfg: Config, lines: &[String]) -> Vec<String> {
+    let server = ReactorServer::bind(engine(cfg), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let lines = lines.to_vec();
+    let client = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let mut payload = String::new();
+        for line in &lines {
+            payload.push_str(line);
+            payload.push('\n');
+        }
+        w.write_all(payload.as_bytes()).unwrap();
+        w.flush().unwrap();
+        let mut out = Vec::with_capacity(lines.len());
+        for _ in 0..lines.len() {
+            let mut resp = String::new();
+            r.read_line(&mut resp).unwrap();
+            out.push(resp.trim_end_matches('\n').to_string());
+        }
+        out
+    });
+    server.serve_n(1).unwrap();
+    client.join().unwrap()
+}
+
+/// Deterministic request script (no `stats`: latency histograms may differ).
+fn script() -> Vec<String> {
+    [
+        r#"{"op": "ping"}"#,
+        r#"{"op": "search_id", "id": 3, "l": 4, "method": "act-1"}"#,
+        r#"{"op": "search", "l": 3, "query": [[0, 0.5], [3, 0.5]], "method": "rwmd"}"#,
+        r#"{"op": "search_id", "id": 2, "l": 3, "method": "emd"}"#,
+        r#"{"op": "search_id", "id": 4, "l": 3, "cascade": {"rerank": "emd", "overfetch": 16, "certified": true}}"#,
+        r#"{not json"#,
+        r#"{"op": "search", "query": []}"#,
+        r#"{"op": "search_id", "id": 7, "l": 3, "method": "rwmd"}"#,
+    ]
+    .into_iter()
+    .map(String::from)
+    .collect()
+}
+
+#[test]
+fn telemetry_and_auditing_leave_the_wire_byte_identical() {
+    let lines = script();
+    let off = roundtrip(config(0, 0), &lines);
+    let on = roundtrip(config(1000, 2), &lines);
+    assert_eq!(off.len(), lines.len());
+    for (i, (o, n)) in off.iter().zip(&on).enumerate() {
+        assert_eq!(o, n, "response {i} diverged for request {}", lines[i]);
+    }
+}
+
+#[test]
+fn unarmed_store_records_nothing_over_the_wire() {
+    let server = ReactorServer::bind(engine(config(0, 0)), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let client = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        w.write_all(
+            b"{\"op\": \"search_id\", \"id\": 1, \"l\": 3}\n{\"op\":\"telemetry\"}\n",
+        )
+        .unwrap();
+        let mut hits = String::new();
+        r.read_line(&mut hits).unwrap();
+        let mut tele = String::new();
+        r.read_line(&mut tele).unwrap();
+        let j = Json::parse(tele.trim()).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{tele}");
+        let t = j.get("telemetry").unwrap();
+        assert_eq!(
+            t.get("workloads").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(0),
+            "unarmed store must stay empty: {tele}"
+        );
+        let a = j.get("audit").unwrap();
+        assert_eq!(a.get("sample").and_then(Json::as_usize), Some(0), "{tele}");
+        assert_eq!(a.get("audited").and_then(Json::as_usize), Some(0), "{tele}");
+    });
+    server.serve_n(1).unwrap();
+    client.join().unwrap();
+}
+
+#[test]
+fn full_probe_workload_audits_to_recall_one_over_the_wire() {
+    // no index configured: the served route IS the exhaustive reference,
+    // so every full-probe replay must agree exactly
+    let server = ReactorServer::bind(engine(config(1000, 1)), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let client = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        for id in 0..4 {
+            w.write_all(
+                format!("{{\"op\": \"search_id\", \"id\": {id}, \"l\": 3, \"method\": \"rwmd\"}}\n")
+                    .as_bytes(),
+            )
+            .unwrap();
+            let mut resp = String::new();
+            r.read_line(&mut resp).unwrap();
+            let j = Json::parse(resp.trim()).unwrap();
+            assert!(j.get("hits").is_some(), "{resp}");
+        }
+        // poll the telemetry op until the background worker has replayed
+        // all four samples (1-in-1 sampling)
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            w.write_all(b"{\"op\":\"telemetry\"}\n").unwrap();
+            let mut resp = String::new();
+            r.read_line(&mut resp).unwrap();
+            let j = Json::parse(resp.trim()).unwrap();
+            let tele = j.get("telemetry").unwrap();
+            let workloads = tele.get("workloads").and_then(Json::as_arr).unwrap();
+            assert!(!workloads.is_empty(), "served queries must land in the window: {resp}");
+            assert_eq!(
+                workloads[0].get("queries").and_then(Json::as_usize),
+                Some(4),
+                "{resp}"
+            );
+            assert!(
+                workloads[0].get("qps").and_then(Json::as_f64).unwrap() > 0.0,
+                "{resp}"
+            );
+            let audit = j.get("audit").unwrap();
+            assert_eq!(audit.get("sample").and_then(Json::as_usize), Some(1), "{resp}");
+            if audit.get("audited").and_then(Json::as_usize).unwrap_or(0) >= 4 {
+                let est = audit.get("workloads").and_then(Json::as_arr).unwrap();
+                assert_eq!(est.len(), 1, "one workload audited: {resp}");
+                assert_eq!(est[0].get("audits").and_then(Json::as_usize), Some(4), "{resp}");
+                assert_eq!(est[0].get("recall").and_then(Json::as_f64), Some(1.0), "{resp}");
+                assert_eq!(est[0].get("min_recall").and_then(Json::as_f64), Some(1.0), "{resp}");
+                assert!(
+                    est[0].get("replay_us").and_then(Json::as_usize).unwrap() > 0,
+                    "{resp}"
+                );
+                break;
+            }
+            assert!(Instant::now() < deadline, "audits never completed: {resp}");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    });
+    server.serve_n(1).unwrap();
+    client.join().unwrap();
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+#[test]
+fn health_surface_and_workload_gauges_ride_the_metrics_listener() {
+    let server = ReactorServer::bind(engine(config(1000, 0)), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let render_engine = Arc::clone(server.engine());
+    let render: Arc<dyn Fn() -> String + Send + Sync> =
+        Arc::new(move || emdpar::obs::prom::render_engine(&render_engine));
+    let (maddr, _handle) =
+        emdpar::obs::http::spawn_listener("127.0.0.1:0", render, Some(server.ready_probe()))
+            .unwrap();
+    // drive one search so a workload lands in the live window
+    let client = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        w.write_all(b"{\"op\": \"search_id\", \"id\": 5, \"l\": 3, \"method\": \"rwmd\"}\n")
+            .unwrap();
+        let mut resp = String::new();
+        r.read_line(&mut resp).unwrap();
+        assert!(resp.contains("hits"), "{resp}");
+    });
+    server.serve_n(1).unwrap();
+    client.join().unwrap();
+
+    let health = http_get(maddr, "/healthz");
+    assert!(health.starts_with("HTTP/1.0 200"), "{health}");
+    let ready = http_get(maddr, "/readyz");
+    assert!(ready.starts_with("HTTP/1.0 200"), "{ready}");
+    assert!(ready.ends_with("ready\n"), "{ready}");
+    let metrics = http_get(maddr, "/metrics");
+    assert!(metrics.contains("emdpar_queries_total 1"), "{metrics}");
+    assert!(metrics.contains("emdpar_workload_qps{workload=\"rwmd_l3_full\"}"), "{metrics}");
+    assert!(metrics.contains("emdpar_workload_queries{workload=\"rwmd_l3_full\"} 1"), "{metrics}");
+    assert!(metrics.contains("emdpar_audit_sample 0"), "{metrics}");
+    assert!(metrics.contains("emdpar_audits_total 0"), "{metrics}");
+}
