@@ -1,0 +1,210 @@
+//! Remote fan-out overhead: the hedged TCP fan-out (`emdpar node` shard
+//! servers behind [`RemoteFleet`]) against the in-process sharded fan-out
+//! on the same corpus, plus the hedge's tail-rescue behaviour with a
+//! stalled primary replica.
+//!
+//! Emits machine-readable `BENCH_remote.json` in the working directory
+//! (the repo root under `cargo bench`).  The run doubles as a correctness
+//! gate: it exits non-zero when the remote results are not bit-identical
+//! to the in-process merge or when the hedged query loses a shard.
+//!
+//! Run: `cargo bench --bench remote_fanout` (EMDPAR_BENCH_FULL=1 for the
+//! bigger workload).
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::Ordering;
+
+use emdpar::config::{RemoteParams, ShardParams};
+use emdpar::data::{generate_text, TextConfig};
+use emdpar::prelude::{
+    spawn_node, Config, DatasetSpec, Histogram, Method, SearchEngine, SearchRequest, Topology,
+};
+use emdpar::util::json::Json;
+use emdpar::util::stats::timed;
+
+/// An endpoint that accepts and then never answers — the stalled primary
+/// of the hedged scenario.
+fn stalled_endpoint() -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { return };
+            std::thread::spawn(move || {
+                use std::io::Read;
+                let mut buf = [0u8; 512];
+                let mut r = &stream;
+                while matches!(r.read(&mut buf), Ok(x) if x > 0) {}
+            });
+        }
+    });
+    addr
+}
+
+fn write_topology(path: &std::path::Path, lists: Vec<Vec<String>>) -> String {
+    let topo = Topology::new(lists).unwrap();
+    std::fs::write(path, topo.to_json().to_string_compact()).unwrap();
+    path.to_string_lossy().into_owned()
+}
+
+fn main() {
+    let full = std::env::var("EMDPAR_BENCH_FULL").is_ok();
+    let (n, v, m, doc_len, nq, iters) =
+        if full { (6000, 6000, 64, 60, 64, 5) } else { (1200, 1500, 32, 40, 32, 3) };
+    let method = Method::Rwmd;
+    let l = 10;
+    let threads = emdpar::util::threadpool::default_threads();
+
+    println!("# Remote fan-out: two emdpar nodes vs the in-process sharded merge");
+    println!("# n={n} v={v} m={m} doc_len={doc_len} queries={nq} threads={threads}\n");
+
+    let dir = std::env::temp_dir().join("emdpar_bench_remote");
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = dir.join("base.bin");
+    let ds = generate_text(&TextConfig {
+        n,
+        vocab: v,
+        dim: m,
+        doc_len,
+        topic_frac: 0.75,
+        spread: 0.3,
+        seed: 17,
+        ..Default::default()
+    });
+    emdpar::data::save(&ds, &base).unwrap();
+
+    let node_cfg = Config {
+        dataset: DatasetSpec::File(base.clone()),
+        threads,
+        linger_ms: 1,
+        ..Default::default()
+    };
+    let n0 = spawn_node(node_cfg.clone(), 0, 2, "127.0.0.1:0").unwrap();
+    let n1 = spawn_node(node_cfg, 1, 2, "127.0.0.1:0").unwrap();
+    let (a0, a1) = (n0.addr().unwrap().to_string(), n1.addr().unwrap().to_string());
+
+    let topo = write_topology(&dir.join("topo.json"), vec![vec![a0.clone()], vec![a1.clone()]]);
+    let hedged_topo = write_topology(
+        &dir.join("topo_hedged.json"),
+        vec![vec![stalled_endpoint().to_string(), a0], vec![a1]],
+    );
+
+    let mk = |remote: Option<RemoteParams>| Config {
+        dataset: DatasetSpec::File(base.clone()),
+        threads,
+        sharded: Some(ShardParams { shards: 2, max_docs_per_shard: usize::MAX >> 1 }),
+        remote,
+        ..Default::default()
+    };
+    let local = SearchEngine::from_config(mk(None)).unwrap();
+    let remote = SearchEngine::from_config(mk(Some(RemoteParams {
+        topology: topo,
+        shard_timeout_ms: 10_000,
+        hedge_ms: 0,
+        pool: 4,
+        retries: 2,
+    })))
+    .unwrap();
+
+    let queries: Vec<Histogram> = (0..nq).map(|i| ds.histogram(i * n / nq)).collect();
+    let req = SearchRequest::batch(queries).method(method).topl(l);
+
+    // warm both paths (page cache, connection pools), checking identity on
+    // the warm-up responses
+    let local_resp = local.execute(&req).unwrap();
+    let remote_resp = remote.execute(&req).unwrap();
+    let bit_identical = local_resp.results.iter().zip(&remote_resp.results).all(|(a, b)| {
+        a.hits
+            .iter()
+            .map(|&(d, id)| (d.to_bits(), id))
+            .eq(b.hits.iter().map(|&(d, id)| (d.to_bits(), id)))
+    });
+    println!(
+        "bit-identical at full probe: {bit_identical} (partial: {})",
+        remote_resp.stats.partial
+    );
+
+    let mut t_local = f64::MAX;
+    let mut t_remote = f64::MAX;
+    for _ in 0..iters {
+        let (_, t) = timed(|| local.execute(&req).unwrap());
+        t_local = t_local.min(t.as_secs_f64());
+        let (_, t) = timed(|| remote.execute(&req).unwrap());
+        t_remote = t_remote.min(t.as_secs_f64());
+    }
+    let local_qps = nq as f64 / t_local;
+    let remote_qps = nq as f64 / t_remote;
+    let overhead = t_remote / t_local;
+    println!("in-process: {local_qps:>8.1} queries/s");
+    println!("remote:     {remote_qps:>8.1} queries/s ({overhead:.2}x the in-process time)\n");
+
+    // tail rescue: shard 0's primary stalls forever; the hedge must answer
+    // from the replica without dropping the shard
+    let hedging = SearchEngine::from_config(mk(Some(RemoteParams {
+        topology: hedged_topo,
+        shard_timeout_ms: 10_000,
+        hedge_ms: 2,
+        pool: 4,
+        retries: 2,
+    })))
+    .unwrap();
+    let (hedge_resp, t_hedge) = timed(|| hedging.execute(&req).unwrap());
+    let hedges = hedging.metrics().remote_hedges.load(Ordering::Relaxed);
+    let hedge_partial = hedge_resp.stats.partial;
+    println!(
+        "hedged (stalled primary): {:.1} queries/s, {hedges} hedge(s), partial: {hedge_partial}",
+        nq as f64 / t_hedge.as_secs_f64()
+    );
+
+    let json = Json::obj(vec![
+        ("bench", "remote_fanout".into()),
+        ("status", "measured".into()),
+        (
+            "workload",
+            Json::obj(vec![
+                ("n", n.into()),
+                ("v", v.into()),
+                ("m", m.into()),
+                ("doc_len", doc_len.into()),
+                ("queries", nq.into()),
+                ("method", method.name().into()),
+                ("l", l.into()),
+                ("threads", threads.into()),
+                ("shards", 2.into()),
+                ("full", full.into()),
+            ]),
+        ),
+        ("bit_identical_full_probe", bit_identical.into()),
+        ("in_process_queries_per_s", local_qps.into()),
+        ("remote_queries_per_s", remote_qps.into()),
+        ("remote_overhead_x", overhead.into()),
+        (
+            "hedged_stalled_primary",
+            Json::obj(vec![
+                ("queries_per_s", (nq as f64 / t_hedge.as_secs_f64()).into()),
+                ("hedges", (hedges as usize).into()),
+                ("partial", hedge_partial.into()),
+            ]),
+        ),
+        ("regenerate_with", "cargo bench --bench remote_fanout".into()),
+    ]);
+    let path = "BENCH_remote.json";
+    match std::fs::File::create(path)
+        .and_then(|mut f| writeln!(f, "{}", json.to_string_pretty()))
+    {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    // correctness gates: a silent merge divergence or a dropped shard under
+    // hedging fails the bench run outright
+    if !bit_identical {
+        eprintln!("FAIL: remote fan-out diverged from the in-process merge at full probe");
+        std::process::exit(1);
+    }
+    if hedge_partial {
+        eprintln!("FAIL: hedged query lost a shard despite a live replica");
+        std::process::exit(1);
+    }
+}

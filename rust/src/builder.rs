@@ -30,7 +30,9 @@
 
 use std::sync::Arc;
 
-use crate::config::{Backend, Config, DatasetSpec, IndexParams, ServeParams, ShardParams};
+use crate::config::{
+    Backend, Config, DatasetSpec, IndexParams, RemoteParams, ServeParams, ShardParams,
+};
 use crate::core::{CompressedKind, Dataset, EmdResult, Method, MethodRegistry, Metric};
 use crate::coordinator::SearchEngine;
 use crate::lc::{EngineParams, KernelBackend, LcEngine};
@@ -150,6 +152,25 @@ impl EngineBuilder {
     /// [`crate::coordinator::SearchEngine::add_docs`].  See `crate::shard`.
     pub fn sharded(mut self, params: ShardParams) -> EngineBuilder {
         self.config.sharded = Some(params);
+        self
+    }
+
+    /// Replace the whole remote fan-out block (see [`RemoteParams`]):
+    /// the coordinator dispatches its sharded fan-out over TCP to the
+    /// `emdpar node` replicas named by the topology manifest.  Requires
+    /// [`EngineBuilder::sharded`].
+    pub fn remote(mut self, params: RemoteParams) -> EngineBuilder {
+        self.config.remote = Some(params);
+        self
+    }
+
+    /// Enable remote fan-out with this topology manifest, keeping the
+    /// remaining [`RemoteParams`] at their defaults (or the configured
+    /// values when a `remote` block already exists).
+    pub fn topology(mut self, path: impl Into<String>) -> EngineBuilder {
+        let mut p = self.config.remote.take().unwrap_or_default();
+        p.topology = path.into();
+        self.config.remote = Some(p);
         self
     }
 
@@ -372,6 +393,25 @@ mod tests {
         assert!(eng.telemetry().armed(), "window > 0 arms the store");
         assert_eq!(eng.telemetry().window_ms(), 500);
         assert_eq!(eng.auditor().sample(), 64);
+    }
+
+    #[test]
+    fn remote_knobs_flow_into_config() {
+        let b = EngineBuilder::new()
+            .dataset_spec(spec())
+            .sharded(ShardParams::default())
+            .topology("topo.json");
+        assert_eq!(b.config().remote.as_ref().unwrap().topology, "topo.json");
+        // topology() on an existing block repoints only the manifest path
+        let b = b
+            .remote(RemoteParams { topology: "a.json".into(), hedge_ms: 0, ..Default::default() })
+            .topology("b.json");
+        let rp = b.config().remote.as_ref().unwrap();
+        assert_eq!(rp.topology, "b.json");
+        assert_eq!(rp.hedge_ms, 0);
+        // remote fan-out without a sharded corpus is rejected at build
+        let err = EngineBuilder::new().dataset_spec(spec()).topology("t.json").build_search();
+        assert!(err.is_err());
     }
 
     #[test]

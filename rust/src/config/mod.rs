@@ -135,11 +135,54 @@ impl Default for ServeParams {
     }
 }
 
+/// Remote shard fan-out configuration (see DESIGN.md "Distributed
+/// corpus").  `None` in [`Config::remote`] keeps the fan-out in-process;
+/// set, the coordinator loads the topology manifest and dispatches its
+/// `ShardFanout` stage to `emdpar node` replicas over TCP.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RemoteParams {
+    /// Path to the topology manifest (shard id → replica endpoints).
+    pub topology: String,
+    /// Per-shard dispatch deadline, milliseconds.  A shard that produces
+    /// no response by then (after retries and hedging) is dropped from the
+    /// merge and the response is marked `"partial": true`.
+    pub shard_timeout_ms: u64,
+    /// Hedge delay, milliseconds: with more than one replica, a second
+    /// attempt races the first after this long.  Once enough latency
+    /// samples exist the observed per-shard p99 takes over (clamped to
+    /// `[1ms, shard_timeout/2]`).  0 disables hedging.
+    pub hedge_ms: u64,
+    /// Pooled connections kept per replica.
+    pub pool: usize,
+    /// Retries after every in-flight attempt for a shard has failed
+    /// (jittered exponential backoff; a node's `retry_after_ms` shed hint
+    /// overrides the backoff base).
+    pub retries: usize,
+}
+
+impl Default for RemoteParams {
+    fn default() -> Self {
+        RemoteParams {
+            topology: String::new(),
+            shard_timeout_ms: 1000,
+            hedge_ms: 50,
+            pool: 2,
+            retries: 2,
+        }
+    }
+}
+
 /// Dataset source.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DatasetSpec {
     /// Load a serialized `.bin` dataset.
     File(PathBuf),
+    /// One contiguous shard slice of a serialized dataset: the rows the
+    /// [`crate::coordinator::Router`] partition assigns to `shard` out of
+    /// `of`.  This is what an `emdpar node` serves — the same rows, bit
+    /// for bit, that the coordinator's in-process shard `shard` would
+    /// hold when built with `of` shards.
+    Slice { file: PathBuf, shard: usize, of: usize },
     /// Generate the synthetic MNIST substitute.
     SynthMnist { n: usize, background: f32, seed: u64 },
     /// Generate the synthetic 20News substitute.
@@ -179,6 +222,9 @@ pub struct Config {
     /// sharded live corpus: per-shard engines + IVF, appendable at runtime
     /// (None = single monolithic corpus)
     pub sharded: Option<ShardParams>,
+    /// remote shard fan-out: dispatch the shard stage to `emdpar node`
+    /// replicas over TCP (None = in-process fan-out)
+    pub remote: Option<RemoteParams>,
     /// serving-runtime knobs (reactor count, admission, deadlines, framing)
     pub serve: ServeParams,
     /// forced Phase-1 kernel backend (`None` = best the host supports;
@@ -212,6 +258,7 @@ impl Default for Config {
             shards: 4,
             index: None,
             sharded: None,
+            remote: None,
             serve: ServeParams::default(),
             kernel: None,
             compressed: CompressedKind::Off,
@@ -282,6 +329,9 @@ impl Config {
         }
         if let Some(j) = json.get("shard") {
             cfg.sharded = Some(parse_shard(j)?);
+        }
+        if let Some(j) = json.get("remote") {
+            cfg.remote = Some(parse_remote(j)?);
         }
         if let Some(j) = json.get("serve") {
             cfg.serve = parse_serve(j)?;
@@ -354,6 +404,52 @@ impl Config {
         if let Some(s) = args.opt_str("compressed") {
             if !s.is_empty() {
                 self.compressed = parse_compressed(s)?;
+            }
+        }
+        // --topology enables remote fan-out (or repoints a configured
+        // one); the remaining remote flags only tune an already-enabled
+        // fan-out, mirroring the --nlist / --nprobe convention
+        if let Some(s) = args.opt_str("topology") {
+            if !s.is_empty() {
+                let mut p = self.remote.clone().unwrap_or_default();
+                p.topology = s.to_string();
+                self.remote = Some(p);
+            }
+        }
+        let parse_u64 = |flag: &str, s: &str| {
+            s.parse::<u64>().map_err(|_| EmdError::config(format!("bad --{flag} '{s}'")))
+        };
+        let need_remote = |flag: &str| {
+            EmdError::config(format!(
+                "--{flag} requires remote fan-out (pass --topology or set 'remote' \
+                 in the config file)"
+            ))
+        };
+        if let Some(s) = args.opt_str("shard-timeout-ms") {
+            if !s.is_empty() {
+                let v = parse_u64("shard-timeout-ms", s)?.max(1);
+                self.remote
+                    .as_mut()
+                    .ok_or_else(|| need_remote("shard-timeout-ms"))?
+                    .shard_timeout_ms = v;
+            }
+        }
+        if let Some(s) = args.opt_str("hedge-ms") {
+            if !s.is_empty() {
+                let v = parse_u64("hedge-ms", s)?;
+                self.remote.as_mut().ok_or_else(|| need_remote("hedge-ms"))?.hedge_ms = v;
+            }
+        }
+        if let Some(s) = args.opt_str("remote-pool") {
+            if !s.is_empty() {
+                let v = (parse_u64("remote-pool", s)? as usize).max(1);
+                self.remote.as_mut().ok_or_else(|| need_remote("remote-pool"))?.pool = v;
+            }
+        }
+        if let Some(s) = args.opt_str("remote-retries") {
+            if !s.is_empty() {
+                let v = parse_u64("remote-retries", s)? as usize;
+                self.remote.as_mut().ok_or_else(|| need_remote("remote-retries"))?.retries = v;
             }
         }
         if let Some(s) = args.opt_str("nprobe") {
@@ -436,6 +532,33 @@ impl Config {
                 "compressed stage-1 residency is not available on the sharded corpus"
             );
         }
+        if let DatasetSpec::Slice { shard, of, .. } = &self.dataset {
+            emd_ensure!(*of >= 1, config, "dataset slice shard count must be >= 1");
+            emd_ensure!(
+                shard < of,
+                config,
+                "dataset slice shard {shard} out of range: must be < {of}"
+            );
+        }
+        if let Some(rp) = &self.remote {
+            emd_ensure!(
+                !rp.topology.trim().is_empty(),
+                config,
+                "remote topology path must not be empty"
+            );
+            emd_ensure!(rp.shard_timeout_ms >= 1, config, "remote shard_timeout_ms must be >= 1");
+            emd_ensure!(rp.pool >= 1, config, "remote pool must be >= 1");
+            emd_ensure!(
+                self.sharded.is_some(),
+                config,
+                "remote fan-out requires the sharded corpus (set 'shard' in the config)"
+            );
+            emd_ensure!(
+                self.backend == Backend::Native,
+                config,
+                "remote fan-out requires the native backend"
+            );
+        }
         emd_ensure!(self.serve.reactors >= 1, config, "serve reactors must be >= 1");
         emd_ensure!(self.serve.max_inflight >= 1, config, "serve max_inflight must be >= 1");
         emd_ensure!(
@@ -461,6 +584,21 @@ impl Config {
     pub fn load_dataset(&self) -> EmdResult<crate::core::Dataset> {
         Ok(match &self.dataset {
             DatasetSpec::File(path) => crate::data::load(path)?,
+            DatasetSpec::Slice { file, shard, of } => {
+                let full = crate::data::load(file)?;
+                let router = crate::coordinator::Router::new(full.len(), *of);
+                emd_ensure!(
+                    *shard < router.num_shards(),
+                    config,
+                    "slice {shard}/{of}: dataset {file:?} has {} rows, only {} shards",
+                    full.len(),
+                    router.num_shards()
+                );
+                let range = router.shard(*shard);
+                let globals: Vec<u32> = (range.start as u32..range.end as u32).collect();
+                let name = format!("{}@{shard}/{of}", full.name);
+                crate::shard::corpus::gather_rows(&full, &globals, name)
+            }
             DatasetSpec::SynthMnist { n, background, seed } => {
                 crate::data::generate_mnist(&crate::data::MnistConfig {
                     n: *n,
@@ -530,6 +668,26 @@ fn parse_shard(j: &Json) -> EmdResult<ShardParams> {
     Ok(p)
 }
 
+fn parse_remote(j: &Json) -> EmdResult<RemoteParams> {
+    let mut p = RemoteParams::default();
+    if let Some(s) = j.get("topology").and_then(Json::as_str) {
+        p.topology = s.to_string();
+    }
+    if let Some(x) = j.get("shard_timeout_ms").and_then(Json::as_usize) {
+        p.shard_timeout_ms = x as u64;
+    }
+    if let Some(x) = j.get("hedge_ms").and_then(Json::as_usize) {
+        p.hedge_ms = x as u64;
+    }
+    if let Some(x) = j.get("pool").and_then(Json::as_usize) {
+        p.pool = x;
+    }
+    if let Some(x) = j.get("retries").and_then(Json::as_usize) {
+        p.retries = x;
+    }
+    Ok(p)
+}
+
 fn parse_serve(j: &Json) -> EmdResult<ServeParams> {
     let mut p = ServeParams::default();
     if let Some(x) = j.get("reactors").and_then(Json::as_usize) {
@@ -581,6 +739,21 @@ fn parse_dataset(j: &Json) -> EmdResult<DatasetSpec> {
                 .and_then(Json::as_str)
                 .ok_or_else(|| EmdError::config("file dataset needs 'path'"))?,
         )),
+        "slice" => DatasetSpec::Slice {
+            file: PathBuf::from(
+                j.get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| EmdError::config("slice dataset needs 'path'"))?,
+            ),
+            shard: j
+                .get("shard")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| EmdError::config("slice dataset needs 'shard'"))?,
+            of: j
+                .get("of")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| EmdError::config("slice dataset needs 'of'"))?,
+        },
         "synth-mnist" => DatasetSpec::SynthMnist {
             n,
             background: j.get("background").and_then(Json::as_f64).unwrap_or(0.0) as f32,
@@ -593,12 +766,17 @@ fn parse_dataset(j: &Json) -> EmdResult<DatasetSpec> {
             seed,
         },
         other => {
-            return Err(EmdError::parse("dataset kind", other, "file | synth-mnist | synth-text"))
+            return Err(EmdError::parse(
+                "dataset kind",
+                other,
+                "file | slice | synth-mnist | synth-text",
+            ))
         }
     })
 }
 
-/// CLI shorthand: `path.bin` | `synth-mnist:<n>` | `synth-text:<n>`.
+/// CLI shorthand: `path.bin` | `path.bin@<shard>/<of>` | `synth-mnist:<n>`
+/// | `synth-text:<n>`.
 fn parse_dataset_str(s: &str) -> EmdResult<DatasetSpec> {
     if let Some(rest) = s.strip_prefix("synth-mnist") {
         let n = rest
@@ -617,6 +795,14 @@ fn parse_dataset_str(s: &str) -> EmdResult<DatasetSpec> {
             .map_err(|_| EmdError::config("bad synth-text size"))?
             .unwrap_or(1000);
         return Ok(DatasetSpec::SynthText { n, vocab: 8000, dim: 64, seed: 1234 });
+    }
+    // `path@s/of` picks one Router shard slice of a serialized dataset
+    if let Some((path, rest)) = s.rsplit_once('@') {
+        if let Some((shard, of)) = rest.split_once('/') {
+            if let (Ok(shard), Ok(of)) = (shard.parse::<usize>(), of.parse::<usize>()) {
+                return Ok(DatasetSpec::Slice { file: PathBuf::from(path), shard, of });
+            }
+        }
     }
     Ok(DatasetSpec::File(PathBuf::from(s)))
 }
@@ -749,6 +935,107 @@ mod tests {
         assert!(Config::from_json(&j).is_err());
         // no shard object -> monolithic corpus
         assert_eq!(Config::default().sharded, None);
+    }
+
+    #[test]
+    fn remote_params_from_json_and_validation() {
+        let j = Json::parse(
+            r#"{"shard": {"shards": 2},
+                "remote": {"topology": "topo.json", "shard_timeout_ms": 250,
+                           "hedge_ms": 10, "pool": 3, "retries": 1}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(
+            cfg.remote,
+            Some(RemoteParams {
+                topology: "topo.json".into(),
+                shard_timeout_ms: 250,
+                hedge_ms: 10,
+                pool: 3,
+                retries: 1,
+            })
+        );
+        // partial objects fill from defaults
+        let j = Json::parse(r#"{"shard": {}, "remote": {"topology": "t.json"}}"#).unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        let p = cfg.remote.unwrap();
+        assert_eq!(p.shard_timeout_ms, RemoteParams::default().shard_timeout_ms);
+        assert_eq!(p.hedge_ms, 50);
+        assert_eq!((p.pool, p.retries), (2, 2));
+        // degenerate or inconsistent configurations rejected
+        for bad in [
+            // remote without the sharded corpus
+            r#"{"remote": {"topology": "t.json"}}"#,
+            // empty topology path
+            r#"{"shard": {}, "remote": {"topology": "  "}}"#,
+            r#"{"shard": {}, "remote": {"topology": "t.json", "pool": 0}}"#,
+            r#"{"shard": {}, "remote": {"topology": "t.json", "shard_timeout_ms": 0}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Config::from_json(&j).is_err(), "{bad}");
+        }
+        // no remote object -> in-process fan-out
+        assert_eq!(Config::default().remote, None);
+    }
+
+    #[test]
+    fn remote_flags_require_a_topology() {
+        use crate::util::cli::CommandSpec;
+        let spec = CommandSpec::new("t", "")
+            .opt("topology", "", "")
+            .opt("shard-timeout-ms", "", "")
+            .opt("hedge-ms", "", "");
+        let parse = |args: &[&str]| {
+            spec.parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+        };
+        // tuning flags alone must not silently enable remote fan-out
+        let mut cfg = Config { sharded: Some(ShardParams::default()), ..Default::default() };
+        assert!(cfg.apply_cli(&parse(&["--hedge-ms", "5"])).is_err());
+        // --topology enables it; the tuning flags then apply
+        let mut cfg = Config { sharded: Some(ShardParams::default()), ..Default::default() };
+        cfg.apply_cli(&parse(&[
+            "--topology",
+            "topo.json",
+            "--shard-timeout-ms",
+            "300",
+            "--hedge-ms",
+            "0",
+        ]))
+        .unwrap();
+        let p = cfg.remote.unwrap();
+        assert_eq!(p.topology, "topo.json");
+        assert_eq!((p.shard_timeout_ms, p.hedge_ms), (300, 0));
+        // remote fan-out still requires the sharded corpus
+        let mut cfg = Config::default();
+        assert!(cfg.apply_cli(&parse(&["--topology", "topo.json"])).is_err());
+    }
+
+    #[test]
+    fn slice_dataset_parses_and_validates() {
+        // CLI shorthand
+        assert_eq!(
+            parse_dataset_str("corpus.bin@1/4").unwrap(),
+            DatasetSpec::Slice { file: PathBuf::from("corpus.bin"), shard: 1, of: 4 }
+        );
+        // a plain path with no slice suffix stays a file spec
+        assert!(matches!(parse_dataset_str("we@ird.bin").unwrap(), DatasetSpec::File(_)));
+        // JSON object form
+        let j = Json::parse(
+            r#"{"dataset": {"kind": "slice", "path": "corpus.bin", "shard": 0, "of": 2}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(
+            cfg.dataset,
+            DatasetSpec::Slice { file: PathBuf::from("corpus.bin"), shard: 0, of: 2 }
+        );
+        // shard index must be in range
+        let bad = Config {
+            dataset: DatasetSpec::Slice { file: PathBuf::from("x.bin"), shard: 2, of: 2 },
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

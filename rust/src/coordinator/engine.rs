@@ -4,6 +4,8 @@
 //! CLI and the examples all drive.  Construct it through
 //! [`crate::builder::EngineBuilder`] or from a [`Config`].
 
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::config::{Backend, Config, DatasetSpec, IndexParams, ShardParams};
@@ -12,9 +14,11 @@ use crate::emd_ensure;
 use crate::index::{dataset_fingerprint, load_index_for, sidecar_path, IvfIndex};
 use crate::lc::{EngineParams, LcEngine};
 use crate::obs::TraceCollector;
+use crate::remote::{RemoteFleet, Topology};
 use crate::runtime::{ArtifactEngine, Executor};
 use crate::shard::{
-    load_manifest_for, reconstruct, save_manifest, AppendOutcome, ShardStat, ShardedCorpus,
+    append_segment, clear_segments, load_manifest_for, reconstruct, replay_segments,
+    save_manifest, segments_dir, AppendOutcome, ShardStat, ShardedCorpus,
 };
 
 use super::metrics::Metrics;
@@ -49,6 +53,14 @@ pub struct SearchEngine {
     /// fan-out route replaces the monolithic sweep and the corpus accepts
     /// appended documents behind the write lock
     sharded: Option<RwLock<ShardedCorpus>>,
+    /// remote shard fleet (`config.remote`): the shard fan-out stage
+    /// dispatches over TCP to `emdpar node` replicas instead of the
+    /// in-process shard engines, with hedging and per-shard deadlines
+    remote: Option<Arc<RemoteFleet>>,
+    /// fingerprint of the persisted base dataset that `EMDX` v3 append
+    /// segments chain onto; refreshed when [`SearchEngine::persist_shards`]
+    /// folds the segments into a rewritten base (0 when nothing on disk)
+    base_fingerprint: AtomicU64,
     executor: Option<Executor>,
     artifact_profile: Option<String>,
     /// shared span ring every traced execute (and the reactor's conn
@@ -120,6 +132,33 @@ impl SearchEngine {
             }
             _ => None,
         };
+        let remote = match &config.remote {
+            Some(rp) => {
+                let lock = sharded.as_ref().ok_or_else(|| {
+                    EmdError::config(
+                        "remote fan-out requires the sharded corpus (set 'shard' in the config)",
+                    )
+                })?;
+                let topo = Topology::from_file(Path::new(&rp.topology))?;
+                let corpus_shards = lock.read().unwrap().num_shards();
+                emd_ensure!(
+                    topo.num_shards() == corpus_shards,
+                    config,
+                    "topology {} declares {} shards but the corpus has {}",
+                    rp.topology,
+                    topo.num_shards(),
+                    corpus_shards
+                );
+                Some(Arc::new(RemoteFleet::new(&topo, rp.clone())))
+            }
+            None => None,
+        };
+        // appends chain onto the persisted base by fingerprint; only a
+        // file-backed sharded corpus has a base on disk
+        let base_fingerprint = match (&sharded, Self::segment_base(&config.dataset)) {
+            (Some(_), Some(_)) => dataset_fingerprint(&dataset),
+            _ => 0,
+        };
         // a sharded engine trains per-shard indexes instead of one global one
         let index = match (&config.index, config.backend, &sharded) {
             (Some(params), Backend::Native, None) => {
@@ -154,6 +193,8 @@ impl SearchEngine {
             native,
             index,
             sharded,
+            remote,
+            base_fingerprint: AtomicU64::new(base_fingerprint),
             executor,
             artifact_profile,
             tracer,
@@ -163,11 +204,38 @@ impl SearchEngine {
         })
     }
 
-    /// Load the dataset's `EMDX` **v2** shard manifest when it exists and
-    /// matches the dataset's fingerprint (a restarted server reloads the
-    /// same live layout, including appended documents and per-shard
-    /// indexes); otherwise partition the dataset fresh from the config.
+    /// Build the sharded live corpus, then replay the dataset's `EMDX`
+    /// **v3** append-segment chain (documents appended since the base file
+    /// was last rewritten) through the deterministic append placement.  A
+    /// stale or broken chain is a hard error — silently dropping persisted
+    /// appends would be data loss; the operator removes the segment
+    /// directory to accept it.
     fn build_shards(
+        config: &Config,
+        sp: &ShardParams,
+        dataset: &Dataset,
+        engine_params: EngineParams,
+    ) -> EmdResult<ShardedCorpus> {
+        let mut corpus = Self::base_shards(config, sp, dataset, engine_params)?;
+        if let Some(base) = Self::segment_base(&config.dataset) {
+            let dir = segments_dir(&base);
+            let replayed = replay_segments(&mut corpus, &dir, dataset_fingerprint(dataset))?;
+            if replayed > 0 {
+                crate::log_info!(
+                    "shard",
+                    "replayed {replayed} appended docs from {dir:?} ({} live docs)",
+                    corpus.len()
+                );
+            }
+        }
+        Ok(corpus)
+    }
+
+    /// The base corpus before segment replay: the dataset's `EMDX` **v2**
+    /// shard manifest when it exists and matches the dataset's fingerprint
+    /// (a restarted server reloads the same live layout and per-shard
+    /// indexes); otherwise a fresh partition from the config.
+    fn base_shards(
         config: &Config,
         sp: &ShardParams,
         dataset: &Dataset,
@@ -203,6 +271,26 @@ impl SearchEngine {
             }
         }
         ShardedCorpus::build(dataset, *sp, engine_params, config.index.as_ref())
+    }
+
+    /// The on-disk base that append segments chain onto: the dataset file
+    /// itself, or a per-slice sibling for node slices (`data.bin.s2of4` for
+    /// shard 2 of 4) so every node of a shared base file keeps its own
+    /// segment directory.  `None` for synthetic datasets — nothing on disk
+    /// to persist against.
+    fn segment_base(dataset: &DatasetSpec) -> Option<PathBuf> {
+        match dataset {
+            DatasetSpec::File(path) => Some(path.clone()),
+            DatasetSpec::Slice { file, shard, of } => {
+                let mut name = match file.file_name() {
+                    Some(n) => n.to_string_lossy().into_owned(),
+                    None => "dataset".to_string(),
+                };
+                name.push_str(&format!(".s{shard}of{of}"));
+                Some(file.with_file_name(name))
+            }
+            _ => None,
+        }
     }
 
     /// Load the dataset's `EMDX` sidecar when it exists and matches the
@@ -318,10 +406,11 @@ impl SearchEngine {
     /// Append documents to the sharded live corpus: each lands in the
     /// smallest shard (or a fresh shard past the configured size
     /// threshold), joins that shard's already-trained IVF centroids without
-    /// retraining, and becomes immediately searchable.  File-backed
-    /// datasets are re-persisted (dataset + `EMDX` v2 manifest) so a
-    /// restarted server reloads the same live corpus.  `labels` may be
-    /// empty (label 0) or one per document.
+    /// retraining, and becomes immediately searchable.  File-backed (and
+    /// slice-backed) datasets persist the batch as one `O(batch)` `EMDX`
+    /// v3 append segment — the base dataset file is **not** rewritten; a
+    /// restart replays the segment chain.  `labels` may be empty (label 0)
+    /// or one per document.
     ///
     /// If persistence fails (e.g. disk full) the documents are **already
     /// live in memory** — the returned error says so explicitly; do not
@@ -334,12 +423,22 @@ impl SearchEngine {
                  EngineBuilder::sharded)",
             )
         })?;
-        let outcome = lock.write().unwrap().append(docs, labels)?;
-        if let Err(e) = self.persist_shards() {
+        // the segment write stays under the corpus write lock so concurrent
+        // appends land segments in placement order — an interleaved chain
+        // would fail the base_global continuity check on replay
+        let (outcome, persisted) = {
+            let mut corpus = lock.write().unwrap();
+            let base_global = corpus.len();
+            let outcome = corpus.append(docs, labels)?;
+            let persisted = self.persist_append(docs, labels, base_global);
+            (outcome, persisted)
+        };
+        if let Err(e) = persisted {
             return Err(EmdError::io(format!(
                 "appended {} docs (ids {:?}) into the live corpus but persisting the \
-                 dataset/manifest failed: {e}; the documents ARE searchable in this \
-                 process — do not retry the append, repair the disk and re-persist",
+                 append segment failed: {e}; the documents ARE searchable in this \
+                 process — do not retry the append, repair the disk and call \
+                 persist_shards",
                 outcome.ids.len(),
                 outcome.ids
             )));
@@ -347,11 +446,37 @@ impl SearchEngine {
         Ok(outcome)
     }
 
-    /// Persist the sharded live corpus next to its file-backed dataset:
-    /// rewrite the `EMD1` dataset (appended documents included, existing
-    /// rows bit-exact) and the `EMDX` v2 shard manifest.  Returns `false`
-    /// when the engine is not sharded or the dataset is not file-backed
-    /// (nothing to persist to).
+    /// Persist one accepted append batch as an `EMDX` v3 segment chained
+    /// onto the current base fingerprint.  `O(batch)` disk work; the base
+    /// dataset file is never touched.  `Ok(false)` when there is no on-disk
+    /// base (synthetic dataset).
+    fn persist_append(
+        &self,
+        docs: &[Histogram],
+        labels: &[u16],
+        base_global: usize,
+    ) -> EmdResult<bool> {
+        let base = match Self::segment_base(&self.config.dataset) {
+            Some(base) => base,
+            None => return Ok(false),
+        };
+        append_segment(
+            &segments_dir(&base),
+            self.base_fingerprint.load(Ordering::Relaxed),
+            base_global,
+            docs,
+            labels,
+        )?;
+        Ok(true)
+    }
+
+    /// Fold the sharded live corpus into its file-backed base: rewrite the
+    /// `EMD1` dataset (appended documents included, existing rows
+    /// bit-exact) and the `EMDX` v2 shard manifest, then clear the append
+    /// segments the rewrite absorbed.  Returns `false` when the engine is
+    /// not sharded or the dataset is not file-backed (slice-backed nodes
+    /// never rewrite the shared base file — their appends live in the
+    /// per-slice segment chain).
     pub fn persist_shards(&self) -> EmdResult<bool> {
         let (lock, path) = match (&self.sharded, &self.config.dataset) {
             (Some(lock), DatasetSpec::File(path)) => (lock, path.clone()),
@@ -360,7 +485,12 @@ impl SearchEngine {
         let corpus = lock.read().unwrap();
         let full = corpus.to_dataset(self.dataset.name.clone());
         crate::data::save(&full, &path)?;
-        save_manifest(&corpus, dataset_fingerprint(&full), &sidecar_path(&path))?;
+        let fingerprint = dataset_fingerprint(&full);
+        save_manifest(&corpus, fingerprint, &sidecar_path(&path))?;
+        // the rewrite absorbed every appended batch: the segment chain is
+        // stale by construction, and future appends chain onto the new base
+        clear_segments(&segments_dir(&path))?;
+        self.base_fingerprint.store(fingerprint, Ordering::Relaxed);
         Ok(true)
     }
 
@@ -490,6 +620,13 @@ impl SearchEngine {
     /// The sharded live corpus, when configured (planner-internal).
     pub(crate) fn sharded_corpus(&self) -> Option<&RwLock<ShardedCorpus>> {
         self.sharded.as_ref()
+    }
+
+    /// The remote shard fleet, when `config.remote` is set (the planner
+    /// dispatches the fan-out stage through it; the serving surfaces
+    /// report its health).
+    pub fn remote_fleet(&self) -> Option<&Arc<RemoteFleet>> {
+        self.remote.as_ref()
     }
 
     /// Full distance row for a query under the configured backend.

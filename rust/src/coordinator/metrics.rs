@@ -285,6 +285,14 @@ pub struct Metrics {
     pub shed: AtomicU64,
     /// Searches shed because their deadline expired before/during compute.
     pub deadline_expired: AtomicU64,
+    /// Hedged remote shard requests (a replica was raced after the hedge
+    /// delay elapsed without a primary response).
+    pub remote_hedges: AtomicU64,
+    /// Remote shard attempts retried after a connection/overload error.
+    pub remote_retries: AtomicU64,
+    /// Remote shards dropped from a merge on their per-shard timeout
+    /// (the response is marked `partial`).
+    pub remote_timeouts: AtomicU64,
     /// Enqueue → batch-drain wait per search.
     pub queue_wait: LatencyHist,
     /// Engine execute time per dispatch group.
@@ -347,6 +355,18 @@ impl Metrics {
         self.deadline_expired.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_remote_hedge(&self) {
+        self.remote_hedges.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_remote_retry(&self) {
+        self.remote_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_remote_timeout(&self) {
+        self.remote_timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Total microseconds spent in cross-shard top-ℓ merges.
     pub fn merge_us(&self) -> u64 {
         self.merge_sum_us.load(Ordering::Relaxed)
@@ -392,6 +412,9 @@ impl Metrics {
             &self.admitted,
             &self.shed,
             &self.deadline_expired,
+            &self.remote_hedges,
+            &self.remote_retries,
+            &self.remote_timeouts,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -455,6 +478,18 @@ impl Metrics {
             (
                 "deadline_expired",
                 (self.deadline_expired.load(Ordering::Relaxed) as usize).into(),
+            ),
+            (
+                "remote_hedges",
+                (self.remote_hedges.load(Ordering::Relaxed) as usize).into(),
+            ),
+            (
+                "remote_retries",
+                (self.remote_retries.load(Ordering::Relaxed) as usize).into(),
+            ),
+            (
+                "remote_timeouts",
+                (self.remote_timeouts.load(Ordering::Relaxed) as usize).into(),
             ),
             ("queue_wait", self.queue_wait.to_json()),
             ("execute", self.execute.to_json()),
@@ -599,6 +634,9 @@ mod tests {
         m.record_admitted();
         m.record_shed();
         m.record_deadline_expired();
+        m.record_remote_hedge();
+        m.record_remote_retry();
+        m.record_remote_timeout();
         m.queue_wait.record(Duration::from_micros(40));
         m.e2e.record(Duration::from_micros(450));
         m.reset();
@@ -618,6 +656,9 @@ mod tests {
             "admitted",
             "shed",
             "deadline_expired",
+            "remote_hedges",
+            "remote_retries",
+            "remote_timeouts",
         ] {
             assert_eq!(j.get(key).and_then(Json::as_usize), Some(0), "{key} not reset");
         }

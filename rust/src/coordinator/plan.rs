@@ -484,6 +484,11 @@ pub struct QueryStats {
     /// Per-query exactness certificates (cascade requests only; empty
     /// otherwise).  Aligned with [`SearchResponse::results`].
     pub certified: Vec<bool>,
+    /// `true` when the remote fan-out dropped at least one shard from the
+    /// merge (deadline or exhausted retries): the results cover the
+    /// surviving shards only.  Always `false` on in-process routes; the
+    /// wire response carries it as `"partial": true`.
+    pub partial: bool,
 }
 
 /// Ranked hits plus the executed plan and its work accounting.
@@ -619,6 +624,8 @@ struct BaseBatch {
     merge: Option<Duration>,
     /// Corpus size at dispatch time (the coverage denominator).
     n_live: usize,
+    /// Remote fan-out dropped at least one shard from the merge.
+    partial: bool,
     /// Stage wall-times, always measured (spans are recorded from these
     /// only when a trace session is active).
     timing: BaseTiming,
@@ -669,7 +676,7 @@ fn run_base(
                 });
             }
             let timing = BaseTiming { score: t0.elapsed(), ..BaseTiming::default() };
-            Ok(BaseBatch { per_query, merge: None, n_live: n, timing })
+            Ok(BaseBatch { per_query, merge: None, n_live: n, partial: false, timing })
         }
         Backend::Native => {
             if let Some(lock) = engine.sharded_corpus() {
@@ -677,9 +684,28 @@ fn run_base(
                 // bit-identical subset pipeline, k-way-merge top-ℓ
                 let corpus = lock.read().unwrap();
                 let np = if force_exhaustive { Some(usize::MAX >> 1) } else { nprobe };
-                let batch = crate::shard::search_batch_budgeted(
-                    &corpus, queries, method, l, np, fanout,
-                )?;
+                // remote fleet configured: the same fan-out runs over TCP
+                // shard nodes — same merge, same bits at full probe; a
+                // shard past its deadline is dropped and marked partial
+                let (batch, partial) = match engine.remote_fleet() {
+                    Some(fleet) => {
+                        let remote = fleet.search_batch(
+                            &corpus,
+                            queries,
+                            method,
+                            l,
+                            np,
+                            &engine.metrics(),
+                        )?;
+                        (remote.batch, remote.partial)
+                    }
+                    None => (
+                        crate::shard::search_batch_budgeted(
+                            &corpus, queries, method, l, np, fanout,
+                        )?,
+                        false,
+                    ),
+                };
                 let n_live = corpus.len();
                 drop(corpus);
                 let per_query = batch
@@ -701,6 +727,7 @@ fn run_base(
                     per_query,
                     merge: Some(batch.merge_time),
                     n_live,
+                    partial,
                     timing,
                 });
             }
@@ -753,7 +780,7 @@ fn run_base(
                     out
                 }
             };
-            Ok(BaseBatch { per_query, merge: None, n_live: n, timing })
+            Ok(BaseBatch { per_query, merge: None, n_live: n, partial: false, timing })
         }
     }
 }
@@ -876,6 +903,7 @@ fn execute_base(
     )?;
     let metrics = engine.metrics();
     let mut stats = QueryStats { queries: queries.len(), ..QueryStats::default() };
+    stats.partial = base.partial;
     stats.prune_us = us(base.timing.prune);
     stats.score_us = us(base.timing.score);
     stats.fanout_us = us(base.timing.fanout);
@@ -970,6 +998,9 @@ fn execute_cascade(
 
     let metrics = engine.metrics();
     let mut stats = QueryStats { queries: queries.len(), ..QueryStats::default() };
+    // a partial fan-out also voids every certificate below: `covers`
+    // compares candidates against the full live corpus
+    stats.partial = base.partial;
     stats.prune_us = us(base.timing.prune);
     stats.score_us = us(base.timing.score);
     stats.fanout_us = us(base.timing.fanout);

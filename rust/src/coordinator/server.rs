@@ -268,13 +268,19 @@ fn metrics_json(engine: &SearchEngine) -> Json {
 }
 
 /// The `telemetry` op: the sliding-window workload aggregates plus the
-/// online recall-audit estimates (`emdpar telemetry` wraps this line).
+/// online recall-audit estimates (`emdpar telemetry` wraps this line).  A
+/// remote fan-out coordinator additionally reports per-shard connectivity
+/// (`connected` / `degraded` / `down` with per-replica reachability).
 fn telemetry_json(engine: &SearchEngine) -> Json {
-    Json::obj(vec![
+    let mut pairs: Vec<(&str, Json)> = vec![
         ("ok", true.into()),
         ("telemetry", engine.telemetry().snapshot().to_json()),
         ("audit", engine.auditor().to_json()),
-    ])
+    ];
+    if let Some(fleet) = engine.remote_fleet() {
+        pairs.push(("remote", fleet.status_json()));
+    }
+    Json::obj(pairs)
 }
 
 /// The `trace` op: the span ring as Chrome trace-event JSON.  Extra

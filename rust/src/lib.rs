@@ -35,6 +35,9 @@
 //! * [`serve`] — the async serving runtime: poll(2) event-loop reactors,
 //!   admission control with deadlines, and a zero-copy wire path; the
 //!   legacy thread-per-connection `Server` stays as a compatibility shim.
+//! * [`remote`] — distributed corpus: `emdpar node` shard servers over
+//!   dataset slices, a topology manifest, and the hedged, deadline-aware
+//!   fan-out RPC client the coordinator merges bit-identically.
 //! * [`obs`] — observability: the lock-free span tracer every execute
 //!   path records into, Chrome trace-event export, and Prometheus text
 //!   exposition (`metrics`/`trace` wire ops, `--metrics-addr`).
@@ -54,6 +57,7 @@ pub mod exact;
 pub mod index;
 pub mod lc;
 pub mod obs;
+pub mod remote;
 pub mod runtime;
 pub mod serve;
 pub mod shard;
@@ -63,7 +67,9 @@ pub mod util;
 /// engine, and run searches.
 pub mod prelude {
     pub use crate::builder::EngineBuilder;
-    pub use crate::config::{Backend, Config, DatasetSpec, IndexParams, ServeParams, ShardParams};
+    pub use crate::config::{
+        Backend, Config, DatasetSpec, IndexParams, RemoteParams, ServeParams, ShardParams,
+    };
     pub use crate::coordinator::{
         cascade_search, cascade_search_pruned, CascadeResult, CascadeSpec, QueryPlan, QueryStats,
         SearchEngine, SearchRequest, SearchResponse, SearchResult, Server, Stage,
@@ -74,6 +80,7 @@ pub mod prelude {
     };
     pub use crate::index::{pruned_search, pruned_search_batch, IvfIndex, PrunedSearch};
     pub use crate::obs::{SpanName, SpanRec, TraceCollector, TraceSession};
+    pub use crate::remote::{spawn_node, NodeHandle, RemoteFleet, Topology};
     pub use crate::serve::ReactorServer;
     pub use crate::lc::{
         BatchPlanner, EngineParams, KernelBackend, LcBatch, LcEngine, PlanScratch,

@@ -8,6 +8,7 @@
 //! * `shard`           build / inspect / append to / query the sharded live corpus
 //! * `eval`            reproduce the paper's accuracy tables (5, 6) & sweeps
 //! * `serve`           run the TCP search server
+//! * `node`            serve one shard of a file-backed dataset to a remote coordinator
 //! * `trace`           dump a running server's span ring as Chrome trace-event JSON
 //! * `telemetry`       snapshot a running server's workload telemetry + audited recall
 //! * `artifacts-check` compile every artifact and cross-check PJRT vs native
@@ -44,6 +45,7 @@ fn main() {
         "shard" => cmd_shard(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
+        "node" => cmd_node(rest),
         "trace" => cmd_trace(rest),
         "telemetry" => cmd_telemetry(rest),
         "artifacts-check" => cmd_artifacts_check(rest),
@@ -71,6 +73,7 @@ fn print_help() {
          \x20 shard            build / inspect / append to / query the sharded live corpus (--help)\n\
          \x20 eval             reproduce accuracy tables / sweeps (--help)\n\
          \x20 serve            run the TCP search server (--help)\n\
+         \x20 node             serve one dataset shard to a remote coordinator (--help)\n\
          \x20 trace            dump a server's span ring as Chrome trace-event JSON (--help)\n\
          \x20 telemetry        snapshot a server's workload telemetry + audited recall (--help)\n\
          \x20 artifacts-check  compile artifacts, verify PJRT == native\n"
@@ -710,13 +713,49 @@ fn cmd_serve(args: &[String]) -> EmdResult<()> {
             "",
             "on graceful shutdown (SIGINT/SIGTERM, reactor runtime), flush \
              a final telemetry+audit JSON snapshot to this file",
-        );
+        )
+        .opt(
+            "corpus-shards",
+            "",
+            "serve the sharded live corpus with this many shards (0 = monolithic)",
+        )
+        .opt(
+            "topology",
+            "",
+            "topology manifest mapping shard ids to `emdpar node` replicas; \
+             enables remote fan-out (needs --corpus-shards or a 'shard' config)",
+        )
+        .opt("shard-timeout-ms", "", "per-remote-shard deadline, ms")
+        .opt(
+            "hedge-ms",
+            "",
+            "hedge delay before racing a second replica, ms (0 = no hedging; \
+             adapts toward the observed p99 once warmed up)",
+        )
+        .opt("remote-pool", "", "pooled connections kept per replica endpoint")
+        .opt("remote-retries", "", "extra attempts per shard dispatch after a failure");
     if args.iter().any(|a| a == "--help") {
         println!("{}", spec.usage("emdpar"));
         return Ok(());
     }
     let p = spec.parse(args)?;
-    let mut cfg = build_config(&p)?;
+    let mut cfg = match p.opt_str("config") {
+        Some(path) if !path.is_empty() => Config::from_file(Path::new(path))?,
+        _ => Config::default(),
+    };
+    // --corpus-shards must land before apply_cli: validation there rejects
+    // a --topology without a sharded corpus to fan out over
+    if !p.str("corpus-shards").is_empty() {
+        cfg.sharded = match p.usize("corpus-shards")? {
+            0 => None,
+            n => {
+                let mut sp = cfg.sharded.unwrap_or_default();
+                sp.shards = n;
+                Some(sp)
+            }
+        };
+    }
+    cfg.apply_cli(&p)?;
     if let Some(listen) = p.opt_str("listen") {
         if !listen.is_empty() {
             cfg.listen = listen.to_string();
@@ -821,6 +860,70 @@ fn flush_telemetry_snapshot(
     std::fs::write(path, snap.to_string_pretty() + "\n")?;
     eprintln!("wrote final telemetry snapshot to {path}");
     Ok(())
+}
+
+fn cmd_node(args: &[String]) -> EmdResult<()> {
+    let spec = common_opts(CommandSpec::new(
+        "node",
+        "serve one shard of a file-backed dataset to a remote coordinator",
+    ))
+    .opt("shard", "0", "this node's shard id (0-based row-range slice of the dataset)")
+    .opt("of", "1", "total shard count in the topology")
+    .opt("listen", "", "bind address (default from config)")
+    .opt("reactors", "", "reactor threads (default from config)")
+    .opt("max-inflight", "", "admission budget: searches in flight before shedding")
+    .opt("idle-timeout-ms", "", "close idle connections after this many ms (0 = never)")
+    .opt(
+        "max-docs",
+        "",
+        "appends open a fresh local shard once this node holds this many docs",
+    )
+    .opt(
+        "metrics-addr",
+        "",
+        "also serve Prometheus text at http://<addr>/metrics plus \
+         /healthz and /readyz health probes (empty = off)",
+    );
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage("emdpar"));
+        return Ok(());
+    }
+    let p = spec.parse(args)?;
+    let mut cfg = build_config(&p)?;
+    if let Some(listen) = p.opt_str("listen") {
+        if !listen.is_empty() {
+            cfg.listen = listen.to_string();
+        }
+    }
+    if !p.str("reactors").is_empty() {
+        cfg.serve.reactors = p.usize("reactors")?;
+    }
+    if !p.str("max-inflight").is_empty() {
+        cfg.serve.max_inflight = p.usize("max-inflight")?;
+    }
+    if !p.str("idle-timeout-ms").is_empty() {
+        cfg.serve.idle_timeout_ms = p.usize("idle-timeout-ms")? as u64;
+    }
+    if !p.str("max-docs").is_empty() {
+        let mut sp = cfg.sharded.unwrap_or_default();
+        sp.max_docs_per_shard = p.usize("max-docs")?.max(1);
+        cfg.sharded = Some(sp);
+    }
+    let shard = p.usize("shard")?;
+    let of = p.usize("of")?;
+    let cfg = emdpar::remote::node_config(cfg, shard, of)?;
+    let listen = cfg.listen.clone();
+    let maddr = p.opt_str("metrics-addr").filter(|s| !s.is_empty()).map(String::from);
+    let engine = EngineBuilder::from_config(cfg).build_search()?;
+    println!(
+        "node shard {shard}/{of}: '{}' ({} docs) ready; listening on {listen}",
+        engine.dataset().name,
+        engine.num_docs()
+    );
+    let server = ReactorServer::bind(engine, &listen)?;
+    spawn_obs(maddr.as_deref(), server.engine(), Some(server.ready_probe()))?;
+    emdpar::serve::sys::arm_shutdown_signals();
+    server.serve_until(emdpar::serve::sys::shutdown_flag())
 }
 
 fn cmd_trace(args: &[String]) -> EmdResult<()> {

@@ -68,6 +68,21 @@ pub fn render(metrics: &Metrics, tracer: Option<&TraceCollector>) -> String {
             "Searches shed on an expired deadline",
             metrics.deadline_expired.load(Ordering::Relaxed),
         ),
+        (
+            "remote_hedges",
+            "Hedged replica requests launched by the remote fan-out",
+            metrics.remote_hedges.load(Ordering::Relaxed),
+        ),
+        (
+            "remote_retries",
+            "Remote shard attempts retried after a failure",
+            metrics.remote_retries.load(Ordering::Relaxed),
+        ),
+        (
+            "remote_timeouts",
+            "Remote shards dropped from a merge on deadline",
+            metrics.remote_timeouts.load(Ordering::Relaxed),
+        ),
     ];
     for &(name, help, value) in counters {
         let _ = writeln!(out, "# HELP emdpar_{name}_total {help}");

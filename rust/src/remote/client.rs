@@ -1,0 +1,723 @@
+//! The hedged fan-out RPC client: [`RemoteFleet`].
+//!
+//! A coordinator running with a [`Topology`] dispatches its `ShardFanout`
+//! stage here instead of the in-process shard engines.  Each shard is
+//! served by one or more replica nodes (`emdpar node`) speaking the same
+//! newline-delimited JSON line protocol as the coordinator itself, so a
+//! node is just a small single-shard server.
+//!
+//! Per shard dispatch is deadline-bounded and self-defending:
+//!
+//! * **pooling** — replica connections are kept in a small per-replica
+//!   pool (`remote.pool`) and reused across queries; a stale pooled
+//!   connection surfaces as a read error and flows through the retry path.
+//! * **retry** — when every in-flight attempt for a shard has failed, the
+//!   dispatch retries on the next replica (round-robin) after a jittered
+//!   exponential backoff; an `{"error":"overloaded","retry_after_ms":N}`
+//!   shed response replaces the backoff base with the node's own hint.
+//! * **hedging** — with more than one replica, a second attempt races the
+//!   first after a hedge delay: the observed per-shard p99 once enough
+//!   samples exist ([`HEDGE_MIN_SAMPLES`], clamped to
+//!   `[1ms, shard_timeout/2]`), the configured `remote.hedge_ms` before
+//!   that.  The first response wins; the loser's socket is shut down so
+//!   its worker dies instead of lingering.  `hedge_ms = 0` disables
+//!   hedging.
+//! * **deadline** — a shard that produces nothing within
+//!   `remote.shard_timeout_ms` is dropped from the merge; the query
+//!   completes over the surviving shards and is marked `partial`.
+//!
+//! Bit-identity: a node runs the same engine over the same `Router`
+//! partition slice, so its top-ℓ set per query equals the in-process
+//! shard's, local ids map to globals through the strictly-ascending
+//! `Shard::globals` table (order-preserving), and [`TopL`] ordering is
+//! value-based (`(distance, id)`, never insertion order) — re-pushing the
+//! wire hits therefore reproduces the in-process accumulators exactly,
+//! and the shard-order k-way merge does the rest.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::RemoteParams;
+use crate::coordinator::metrics::LatencyHist;
+use crate::coordinator::{merge_query_rows, Metrics, TopL};
+use crate::core::{EmdError, EmdResult, Histogram, Method};
+use crate::emd_ensure;
+use crate::shard::{ShardedBatch, ShardedCorpus, ShardedSearch};
+use crate::util::json::Json;
+
+use super::Topology;
+
+/// Latency samples required before the hedge delay switches from the
+/// configured `hedge_ms` to the observed per-shard p99.
+pub const HEDGE_MIN_SAMPLES: u64 = 32;
+
+/// First-retry backoff base (doubles per round, jittered to `[b/2, b]`).
+const BACKOFF_BASE_MS: u64 = 2;
+
+/// Replica health, refreshed by every attempt and by [`RemoteFleet::refresh`].
+const UNTRIED: u64 = 0;
+const UP: u64 = 1;
+const DOWN: u64 = 2;
+
+/// One replica endpoint: a pooled-connection slot plus last-known health.
+struct Replica {
+    addr: String,
+    pool: Mutex<Vec<TcpStream>>,
+    state: AtomicU64,
+}
+
+/// One remote shard: its replicas and the latency history that drives the
+/// adaptive hedge delay.
+struct RemoteShard {
+    id: usize,
+    replicas: Vec<Replica>,
+    latency: LatencyHist,
+}
+
+/// Per-query hits as a node returns them: (distance, node-local id).
+type RemoteRows = Vec<Vec<(f32, usize)>>;
+
+/// Why one attempt failed (carries the node's shed hint when present).
+struct AttemptFail {
+    msg: String,
+    retry_after_ms: Option<u64>,
+}
+
+type AttemptResult = Result<(RemoteRows, TcpStream), AttemptFail>;
+/// (attempt id, replica index, outcome).
+type AttemptMsg = (u64, usize, AttemptResult);
+
+/// A remote fan-out result: the same shape the in-process fan-out
+/// produces, plus the partial-coverage marker.
+pub struct RemoteBatch {
+    pub batch: ShardedBatch,
+    /// `true` when at least one shard was dropped from the merge (deadline
+    /// or exhausted retries); results then cover the surviving shards only.
+    pub partial: bool,
+    /// Number of shards that contributed nothing.
+    pub dropped: usize,
+}
+
+/// Connection-pooled, hedging, retrying client over every remote shard.
+pub struct RemoteFleet {
+    shards: Vec<RemoteShard>,
+    params: RemoteParams,
+    jitter: AtomicU64,
+}
+
+impl RemoteFleet {
+    pub fn new(topology: &Topology, params: RemoteParams) -> RemoteFleet {
+        let shards = (0..topology.num_shards())
+            .map(|s| RemoteShard {
+                id: s,
+                replicas: topology
+                    .replicas(s)
+                    .iter()
+                    .map(|a| Replica {
+                        addr: a.clone(),
+                        pool: Mutex::new(Vec::new()),
+                        state: AtomicU64::new(UNTRIED),
+                    })
+                    .collect(),
+                latency: LatencyHist::default(),
+            })
+            .collect();
+        RemoteFleet { shards, params, jitter: AtomicU64::new(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn params(&self) -> &RemoteParams {
+        &self.params
+    }
+
+    /// Fan one query batch out to every remote shard and k-way-merge the
+    /// per-shard top-ℓ rows, exactly like the in-process
+    /// [`crate::shard::search_batch`] route.  Shards that miss their
+    /// deadline (after retries and hedging) are dropped from the merge and
+    /// the batch is marked [`RemoteBatch::partial`]; only when *every*
+    /// shard fails does the whole batch error.
+    pub fn search_batch(
+        &self,
+        corpus: &ShardedCorpus,
+        queries: &[Histogram],
+        method: Method,
+        l: usize,
+        nprobe: Option<usize>,
+        metrics: &Metrics,
+    ) -> EmdResult<RemoteBatch> {
+        emd_ensure!(
+            self.shards.len() == corpus.num_shards(),
+            config,
+            "topology has {} shards but the corpus has {}",
+            self.shards.len(),
+            corpus.num_shards()
+        );
+        let nq = queries.len();
+        let l = l.max(1);
+        if nq == 0 {
+            let batch = ShardedBatch {
+                results: Vec::new(),
+                merge_time: Duration::ZERO,
+                fanout_time: Duration::ZERO,
+                shard_times: Vec::new(),
+            };
+            return Ok(RemoteBatch { batch, partial: false, dropped: 0 });
+        }
+
+        // Serialize the request lines once; every shard receives the same
+        // bytes.  `nprobe` is always explicit so a node never falls back
+        // to its own default probe width: `None` (no index configured)
+        // must stay exhaustive remotely too.
+        let np_wire = nprobe.unwrap_or(usize::MAX >> 1).min(1 << 30);
+        let lines = Arc::new(request_lines(queries, method, l, np_wire));
+
+        let t_fan = Instant::now();
+        let lanes: Vec<(Duration, Duration, Result<RemoteRows, String>)> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .shards
+                    .iter()
+                    .map(|shard| {
+                        let lines = &lines;
+                        scope.spawn(move || {
+                            let begin = t_fan.elapsed();
+                            let out = self.dispatch_shard(shard, lines, nq, metrics);
+                            (begin, t_fan.elapsed().saturating_sub(begin), out)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("remote fan-out worker panicked"))
+                    .collect()
+            });
+        let fanout_time = t_fan.elapsed();
+
+        // Map node-local ids to globals; a dropped shard contributes empty
+        // accumulators so the merge order (and thus tie-breaking) is
+        // untouched.
+        let mut shard_accs: Vec<Vec<TopL>> = Vec::with_capacity(self.shards.len());
+        let mut shard_times = Vec::with_capacity(self.shards.len());
+        let mut candidates = 0usize;
+        let mut partial = false;
+        let mut dropped = 0usize;
+        let mut first_err: Option<String> = None;
+        for (s, (begin, dur, out)) in lanes.into_iter().enumerate() {
+            shard_times.push((begin, dur));
+            let shard = &corpus.shards()[s];
+            match out {
+                Ok(rows) => {
+                    let globals = shard.globals();
+                    let mut accs = Vec::with_capacity(nq);
+                    for row in &rows {
+                        let mut acc = TopL::new(l);
+                        for &(d, local) in row {
+                            emd_ensure!(
+                                local < globals.len(),
+                                protocol,
+                                "remote shard {s} returned local id {local} \
+                                 out of range ({} docs)",
+                                globals.len()
+                            );
+                            acc.push(d, globals[local] as usize);
+                        }
+                        accs.push(acc);
+                    }
+                    shard_accs.push(accs);
+                    // The shard's contribution is exhaustive when it has no
+                    // index or the probe covers every list (mirrors the
+                    // in-process candidate accounting, which certification
+                    // relies on).
+                    let exhaustive = match shard.index() {
+                        Some(ix) => np_wire >= ix.nlist(),
+                        None => true,
+                    };
+                    if exhaustive {
+                        candidates += shard.len();
+                    }
+                }
+                Err(e) => {
+                    crate::log_warn!("remote shard {s} dropped from merge: {e}");
+                    partial = true;
+                    dropped += 1;
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                    shard_accs.push(vec![TopL::new(l); nq]);
+                }
+            }
+        }
+        if dropped == self.shards.len() {
+            return Err(EmdError::io(format!(
+                "all {} remote shards failed: {}",
+                self.shards.len(),
+                first_err.unwrap_or_default()
+            )));
+        }
+
+        let t_merge = Instant::now();
+        let merged = merge_query_rows(&shard_accs, nq, l, corpus.engine_params().threads);
+        let merge_time = t_merge.elapsed();
+
+        let results = merged
+            .into_iter()
+            .map(|acc| {
+                let hits = acc.into_sorted();
+                let labels = hits.iter().map(|&(_, g)| corpus.label(g)).collect();
+                ShardedSearch { hits, labels, candidates, lists_probed: 0, pruned: false }
+            })
+            .collect();
+
+        let batch = ShardedBatch { results, merge_time, fanout_time, shard_times };
+        Ok(RemoteBatch { batch, partial, dropped })
+    }
+
+    // -----------------------------------------------------------------
+    // per-shard dispatch: retry + hedge + deadline
+    // -----------------------------------------------------------------
+
+    fn dispatch_shard(
+        &self,
+        shard: &RemoteShard,
+        lines: &Arc<Vec<u8>>,
+        nq: usize,
+        metrics: &Metrics,
+    ) -> Result<RemoteRows, String> {
+        let started = Instant::now();
+        let deadline = started + Duration::from_millis(self.params.shard_timeout_ms.max(1));
+        let (tx, rx) = mpsc::channel::<AttemptMsg>();
+        // In-flight attempts: (attempt id, replica index, cancel handle).
+        let mut inflight: Vec<(u64, usize, TcpStream)> = Vec::new();
+        let n_replicas = shard.replicas.len();
+        let mut next_attempt: u64 = 0;
+        let mut next_replica: usize = 0;
+        let mut retries_left = self.params.retries;
+        let mut hedged = false;
+        let mut retry_hint: Option<u64> = None;
+        let mut last_err = format!("shard {} has no reachable replica", shard.id);
+
+        // Start one attempt on the first connectable replica (round-robin
+        // so a retry moves on instead of hammering the same endpoint).
+        let mut launch = |inflight: &mut Vec<(u64, usize, TcpStream)>,
+                          next_attempt: &mut u64,
+                          next_replica: &mut usize,
+                          last_err: &mut String|
+         -> bool {
+            for _ in 0..n_replicas {
+                let r = *next_replica % n_replicas;
+                *next_replica += 1;
+                match self.launch_attempt(shard, r, lines, nq, deadline, *next_attempt, &tx) {
+                    Ok(cancel) => {
+                        inflight.push((*next_attempt, r, cancel));
+                        *next_attempt += 1;
+                        return true;
+                    }
+                    Err(e) => {
+                        shard.replicas[r].state.store(DOWN, Ordering::Relaxed);
+                        *last_err = e;
+                    }
+                }
+            }
+            false
+        };
+
+        launch(&mut inflight, &mut next_attempt, &mut next_replica, &mut last_err);
+
+        loop {
+            if inflight.is_empty() {
+                // Every attempt failed: back off and retry, or give up.
+                if retries_left == 0 {
+                    return Err(last_err);
+                }
+                retries_left -= 1;
+                metrics.record_remote_retry();
+                let round = self.params.retries - retries_left; // 1-based
+                let base = retry_hint.take().unwrap_or(BACKOFF_BASE_MS << (round - 1).min(8));
+                let backoff = Duration::from_millis(self.jittered_ms(base.max(1)));
+                if deadline.saturating_duration_since(Instant::now()) <= backoff {
+                    metrics.record_remote_timeout();
+                    return Err(format!("{last_err} (shard {} deadline exhausted)", shard.id));
+                }
+                std::thread::sleep(backoff);
+                launch(&mut inflight, &mut next_attempt, &mut next_replica, &mut last_err);
+                continue;
+            }
+
+            let now = Instant::now();
+            if now >= deadline {
+                for (_, _, cancel) in &inflight {
+                    cancel.shutdown(Shutdown::Both).ok();
+                }
+                metrics.record_remote_timeout();
+                return Err(format!(
+                    "shard {} timed out after {}ms (last error: {last_err})",
+                    shard.id, self.params.shard_timeout_ms
+                ));
+            }
+            let remaining = deadline - now;
+            let can_hedge =
+                !hedged && self.params.hedge_ms > 0 && n_replicas > 1 && inflight.len() == 1;
+            let wait = if can_hedge { self.hedge_delay(shard).min(remaining) } else { remaining };
+
+            match rx.recv_timeout(wait) {
+                Ok((attempt, replica_idx, Ok((rows, stream)))) => {
+                    // Winner: cancel every other racer so its worker dies.
+                    for (a, _, cancel) in &inflight {
+                        if *a != attempt {
+                            cancel.shutdown(Shutdown::Both).ok();
+                        }
+                    }
+                    self.checkin(&shard.replicas[replica_idx], stream);
+                    shard.replicas[replica_idx].state.store(UP, Ordering::Relaxed);
+                    shard.latency.record(started.elapsed());
+                    return Ok(rows);
+                }
+                Ok((attempt, replica_idx, Err(fail))) => {
+                    shard.replicas[replica_idx].state.store(DOWN, Ordering::Relaxed);
+                    retry_hint = fail.retry_after_ms.or(retry_hint);
+                    last_err = format!("{}: {}", shard.replicas[replica_idx].addr, fail.msg);
+                    inflight.retain(|(a, _, _)| *a != attempt);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if can_hedge {
+                        hedged = true;
+                        if launch(
+                            &mut inflight,
+                            &mut next_attempt,
+                            &mut next_replica,
+                            &mut last_err,
+                        ) {
+                            metrics.record_remote_hedge();
+                        }
+                    }
+                    // Otherwise the deadline check at the top of the loop
+                    // fires on the next iteration.
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // Unreachable (we hold a sender), but fail safe.
+                    return Err(last_err);
+                }
+            }
+        }
+    }
+
+    /// Check a connection out, spawn the attempt worker on it, and return
+    /// the cancellation handle (a stream clone whose shutdown aborts the
+    /// worker's blocking I/O).
+    fn launch_attempt(
+        &self,
+        shard: &RemoteShard,
+        replica_idx: usize,
+        lines: &Arc<Vec<u8>>,
+        nq: usize,
+        deadline: Instant,
+        attempt: u64,
+        tx: &mpsc::Sender<AttemptMsg>,
+    ) -> Result<TcpStream, String> {
+        let replica = &shard.replicas[replica_idx];
+        let remaining = deadline
+            .saturating_duration_since(Instant::now())
+            .max(Duration::from_millis(1));
+        let stream = self.checkout(replica, self.connect_timeout().min(remaining))?;
+        let cancel = stream
+            .try_clone()
+            .map_err(|e| format!("cannot clone socket for {}: {e}", replica.addr))?;
+        let lines = Arc::clone(lines);
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let out = attempt_io(&stream, &lines, nq, deadline);
+            let out = out.map(|rows| (rows, stream));
+            tx.send((attempt, replica_idx, out)).ok();
+        });
+        Ok(cancel)
+    }
+
+    // -----------------------------------------------------------------
+    // connection pool
+    // -----------------------------------------------------------------
+
+    fn connect_timeout(&self) -> Duration {
+        Duration::from_millis((self.params.shard_timeout_ms / 4).clamp(10, 1000))
+    }
+
+    fn checkout(&self, replica: &Replica, timeout: Duration) -> Result<TcpStream, String> {
+        if let Some(s) = replica.pool.lock().unwrap().pop() {
+            return Ok(s);
+        }
+        let addr = replica
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| format!("cannot resolve {}: {e}", replica.addr))?
+            .next()
+            .ok_or_else(|| format!("no address for {}", replica.addr))?;
+        let stream = TcpStream::connect_timeout(&addr, timeout)
+            .map_err(|e| format!("cannot connect to {}: {e}", replica.addr))?;
+        stream.set_nodelay(true).ok();
+        Ok(stream)
+    }
+
+    fn checkin(&self, replica: &Replica, stream: TcpStream) {
+        stream.set_read_timeout(None).ok();
+        stream.set_write_timeout(None).ok();
+        let mut pool = replica.pool.lock().unwrap();
+        if pool.len() < self.params.pool {
+            pool.push(stream);
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // hedge delay + jitter
+    // -----------------------------------------------------------------
+
+    fn hedge_delay(&self, shard: &RemoteShard) -> Duration {
+        let cap_us = (self.params.shard_timeout_ms.max(1) * 1000) / 2;
+        let us = if shard.latency.count() >= HEDGE_MIN_SAMPLES {
+            shard.latency.percentile_us(0.99).clamp(1_000, cap_us.max(1_000))
+        } else {
+            (self.params.hedge_ms * 1_000).max(1)
+        };
+        Duration::from_micros(us)
+    }
+
+    /// splitmix64 over an atomic counter: cheap decorrelation for backoff,
+    /// deliberately not a real entropy source.
+    fn next_jitter(&self) -> u64 {
+        let mut z = self
+            .jitter
+            .fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed)
+            .wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[base/2, base]` milliseconds.
+    fn jittered_ms(&self, base: u64) -> u64 {
+        let half = base / 2;
+        half + self.next_jitter() % (base - half + 1)
+    }
+
+    // -----------------------------------------------------------------
+    // health: status for telemetry, active probe for readiness
+    // -----------------------------------------------------------------
+
+    /// Ping replicas to refresh their health (`only_stale` limits the
+    /// probe to replicas not currently known-up).  Each probe is one
+    /// `{"op":"ping"}` round-trip on a pooled connection, bounded by the
+    /// connect timeout.
+    pub fn refresh(&self, only_stale: bool) {
+        let timeout = self.connect_timeout();
+        for shard in &self.shards {
+            for replica in &shard.replicas {
+                if only_stale && replica.state.load(Ordering::Relaxed) == UP {
+                    continue;
+                }
+                match self.ping(replica, timeout) {
+                    Ok(stream) => {
+                        self.checkin(replica, stream);
+                        replica.state.store(UP, Ordering::Relaxed);
+                    }
+                    Err(_) => replica.state.store(DOWN, Ordering::Relaxed),
+                }
+            }
+        }
+    }
+
+    fn ping(&self, replica: &Replica, timeout: Duration) -> Result<TcpStream, String> {
+        let stream = self.checkout(replica, timeout)?;
+        stream.set_write_timeout(Some(timeout)).ok();
+        stream.set_read_timeout(Some(timeout)).ok();
+        let mut w = &stream;
+        w.write_all(b"{\"op\":\"ping\"}\n")
+            .and_then(|()| w.flush())
+            .map_err(|e| format!("{}: ping write failed: {e}", replica.addr))?;
+        let mut reader = BufReader::new(&stream);
+        let mut line = String::new();
+        let n = reader
+            .read_line(&mut line)
+            .map_err(|e| format!("{}: ping read failed: {e}", replica.addr))?;
+        drop(reader);
+        if n == 0 {
+            return Err(format!("{}: connection closed on ping", replica.addr));
+        }
+        let ok = Json::parse(line.trim())
+            .ok()
+            .and_then(|j| j.get("ok").and_then(Json::as_bool))
+            .unwrap_or(false);
+        if ok {
+            Ok(stream)
+        } else {
+            Err(format!("{}: bad ping response", replica.addr))
+        }
+    }
+
+    /// Readiness probe: actively ping every not-known-up replica, then
+    /// report the first shard with no live replica (if any).
+    pub fn ready_error(&self) -> Option<String> {
+        self.refresh(true);
+        for shard in &self.shards {
+            let up = shard
+                .replicas
+                .iter()
+                .filter(|r| r.state.load(Ordering::Relaxed) == UP)
+                .count();
+            if up == 0 {
+                return Some(format!(
+                    "remote shard {} down (0/{} replicas reachable)",
+                    shard.id,
+                    shard.replicas.len()
+                ));
+            }
+        }
+        None
+    }
+
+    /// Passive connectivity snapshot for `{"op":"telemetry"}`:
+    /// `connected` (every replica up), `degraded` (some up), `down`
+    /// (none up).  Replicas never contacted are probed once first so the
+    /// snapshot is meaningful before traffic arrives.
+    pub fn status_json(&self) -> Json {
+        self.refresh(true);
+        let shards = self
+            .shards
+            .iter()
+            .map(|shard| {
+                let up = shard
+                    .replicas
+                    .iter()
+                    .filter(|r| r.state.load(Ordering::Relaxed) == UP)
+                    .count();
+                let state = if up == shard.replicas.len() {
+                    "connected"
+                } else if up > 0 {
+                    "degraded"
+                } else {
+                    "down"
+                };
+                let replicas = shard
+                    .replicas
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("addr", r.addr.as_str().into()),
+                            ("up", (r.state.load(Ordering::Relaxed) == UP).into()),
+                            ("pooled", r.pool.lock().unwrap().len().into()),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("id", shard.id.into()),
+                    ("state", state.into()),
+                    ("replicas", Json::Arr(replicas)),
+                    ("p99_us", (shard.latency.percentile_us(0.99) as usize).into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("shards", Json::Arr(shards)),
+            ("shard_timeout_ms", (self.params.shard_timeout_ms as usize).into()),
+            ("hedge_ms", (self.params.hedge_ms as usize).into()),
+            ("pool", self.params.pool.into()),
+        ])
+    }
+}
+
+/// Serialize one request line per query (shared by every shard).
+fn request_lines(queries: &[Histogram], method: Method, l: usize, np_wire: usize) -> Vec<u8> {
+    let mut lines = Vec::with_capacity(queries.len() * 64);
+    for q in queries {
+        let pairs = q
+            .indices()
+            .iter()
+            .zip(q.weights())
+            .map(|(&i, &w)| Json::Arr(vec![Json::Num(i as f64), Json::Num(w as f64)]))
+            .collect();
+        let req = Json::obj(vec![
+            ("op", "search".into()),
+            ("method", method.name().into()),
+            ("l", l.into()),
+            ("nprobe", np_wire.into()),
+            ("query", Json::Arr(pairs)),
+        ]);
+        lines.extend_from_slice(req.to_string_compact().as_bytes());
+        lines.push(b'\n');
+    }
+    lines
+}
+
+/// One attempt's blocking I/O: pipeline every request line, then read one
+/// response line per query.  Timeouts are rearmed to the remaining budget
+/// before each blocking call so a stalled node cannot wedge the worker
+/// past the deadline (the orchestrator additionally shuts the socket down
+/// when it stops caring).
+fn attempt_io(stream: &TcpStream, lines: &[u8], nq: usize, deadline: Instant) -> AttemptResult {
+    let budget = |deadline: Instant| {
+        deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(1))
+    };
+    stream.set_write_timeout(Some(budget(deadline))).ok();
+    {
+        let mut w = stream;
+        w.write_all(lines)
+            .and_then(|()| w.flush())
+            .map_err(|e| plain_fail(format!("write failed: {e}")))?;
+    }
+    let mut reader = BufReader::new(stream);
+    let mut rows = Vec::with_capacity(nq);
+    let mut line = String::new();
+    for _ in 0..nq {
+        stream.set_read_timeout(Some(budget(deadline))).ok();
+        line.clear();
+        let n = reader
+            .read_line(&mut line)
+            .map_err(|e| plain_fail(format!("read failed: {e}")))?;
+        if n == 0 {
+            return Err(plain_fail("connection closed mid-response".into()));
+        }
+        rows.push(parse_hits(line.trim())?);
+    }
+    Ok(rows)
+}
+
+fn plain_fail(msg: String) -> AttemptFail {
+    AttemptFail { msg, retry_after_ms: None }
+}
+
+/// Parse one response line into (distance, node-local id) hits.  Error
+/// payloads keep their message (and shed hint); anything unparseable is a
+/// structured "garbage response" failure, never a hang.
+fn parse_hits(line: &str) -> Result<Vec<(f32, usize)>, AttemptFail> {
+    let j = Json::parse(line)
+        .map_err(|e| plain_fail(format!("garbage response: {e}")))?;
+    if j.get("ok").and_then(Json::as_bool) != Some(true) {
+        let msg = j
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("response without ok:true");
+        return Err(AttemptFail {
+            msg: format!("node error: {msg}"),
+            retry_after_ms: j.get("retry_after_ms").and_then(Json::as_usize).map(|x| x as u64),
+        });
+    }
+    let hits = j
+        .get("hits")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| plain_fail("response without hits".into()))?;
+    let mut out = Vec::with_capacity(hits.len());
+    for h in hits {
+        let bad = || plain_fail(format!("malformed hit entry: {}", h.to_string_compact()));
+        let row = h.as_arr().ok_or_else(bad)?;
+        if row.len() < 2 {
+            return Err(bad());
+        }
+        let d = row[0].as_f64().ok_or_else(bad)? as f32;
+        let id = row[1].as_usize().ok_or_else(bad)?;
+        out.push((d, id));
+    }
+    Ok(out)
+}

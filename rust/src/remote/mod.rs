@@ -1,0 +1,37 @@
+//! Distributed corpus: remote shard nodes behind a hedged fan-out RPC.
+//!
+//! The sharded corpus ([`crate::shard`]) fans a query batch out over
+//! in-process shard engines and k-way-merges per-shard top-ℓ rows.  This
+//! module moves the fan-out across machine boundaries with **the same
+//! merge and the same bits**:
+//!
+//! * [`topology`] — [`Topology`]: the JSON manifest mapping shard id →
+//!   replica endpoints, loaded by the coordinator when
+//!   [`crate::config::RemoteParams::topology`] is set.
+//! * [`node`] — the `emdpar node` subcommand: the existing
+//!   [`crate::serve::ReactorServer`] over a [`crate::config::DatasetSpec::Slice`]
+//!   engine (one Router-partition slice, one local shard), so every wire
+//!   op — shard-local `search`, `add_docs` into the slice's `EMDX` v3
+//!   segment chain, `stats`, health — works on a node unchanged.
+//! * [`client`] — [`RemoteFleet`]: connection-pooled fan-out with
+//!   per-shard deadlines, jittered retry/backoff that honors the nodes'
+//!   `retry_after_ms` overload hints, and hedged requests (a second
+//!   replica raced after a p99-derived delay; first answer wins, the
+//!   loser's socket is shut down).  A shard that misses its deadline is
+//!   dropped from the merge and the response carries `partial: true`
+//!   instead of failing the batch.
+//!
+//! Bit-identity: a node scores its slice through the same
+//! [`crate::lc::LcEngine`] pipeline as an in-process shard, local hit ids
+//! map back through the Router partition's global id vector, and
+//! [`crate::coordinator::merge_query_rows`] merges value-ordered top-ℓ
+//! rows — so at full probe the remote route reproduces the in-process
+//! fan-out exactly, hedged or not.
+
+pub mod client;
+pub mod node;
+pub mod topology;
+
+pub use client::{RemoteBatch, RemoteFleet, HEDGE_MIN_SAMPLES};
+pub use node::{node_config, spawn_node, NodeHandle};
+pub use topology::Topology;

@@ -1,0 +1,213 @@
+//! The shard node: `emdpar node` serves one corpus slice over the same
+//! reactor + zero-copy wire path as the full server.
+//!
+//! A node is deliberately *not* a new server: it is the existing
+//! [`crate::serve::ReactorServer`] wrapped around an engine whose dataset
+//! is a [`crate::config::DatasetSpec::Slice`] — the Router-partition rows
+//! of shard `s` of `S` — and whose corpus is a single local shard.  Every
+//! protocol op therefore works on a node unchanged: `search` runs
+//! shard-locally (returning *local* ids the coordinator maps back through
+//! the partition), `add_docs` appends into the slice's own `EMDX` v3
+//! segment chain, and `stats` / `telemetry` / `ping` answer as usual.
+//!
+//! [`node_config`] performs the rewrite; [`spawn_node`] runs a node on a
+//! background thread for tests and embedded topologies, returning a
+//! [`NodeHandle`] that stops the serve loop on drop.  The `emdpar node`
+//! subcommand composes the same two pieces in the foreground.
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::config::{Config, DatasetSpec, ShardParams};
+use crate::coordinator::SearchEngine;
+use crate::core::{EmdError, EmdResult};
+use crate::emd_ensure;
+use crate::serve::ReactorServer;
+
+/// Rewrite a coordinator-style config into the node's view of shard
+/// `shard` of `of`: the dataset becomes the corresponding
+/// [`DatasetSpec::Slice`] and the corpus exactly one local shard.  The
+/// coordinator's `Router` already partitioned the id space — a node
+/// re-sharding its slice would misalign the local ids the coordinator maps
+/// back to globals.  Any `remote` block is dropped (a node never fans out).
+pub fn node_config(mut config: Config, shard: usize, of: usize) -> EmdResult<Config> {
+    emd_ensure!(of >= 1, config, "node needs a total shard count >= 1");
+    emd_ensure!(shard < of, config, "node shard {shard} out of range (serving 1 of {of})");
+    config.dataset = match config.dataset {
+        DatasetSpec::File(file) | DatasetSpec::Slice { file, .. } => {
+            DatasetSpec::Slice { file, shard, of }
+        }
+        _ => {
+            return Err(EmdError::config(
+                "emdpar node serves a slice of a file-backed dataset; synthetic \
+                 datasets have no shared base file to slice",
+            ))
+        }
+    };
+    let max_docs = config.sharded.map(|sp| sp.max_docs_per_shard).unwrap_or_else(|| {
+        ShardParams::default().max_docs_per_shard
+    });
+    config.sharded = Some(ShardParams { shards: 1, max_docs_per_shard: max_docs });
+    config.remote = None;
+    config.validate()?;
+    Ok(config)
+}
+
+/// A node serving on a background thread ([`spawn_node`]).  Dropping the
+/// handle stops the serve loop and joins the thread.
+pub struct NodeHandle {
+    server: Arc<ReactorServer>,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl NodeHandle {
+    /// The bound endpoint (ephemeral ports resolved).
+    pub fn addr(&self) -> EmdResult<SocketAddr> {
+        self.server.local_addr()
+    }
+
+    /// The node's engine (its corpus is the slice, under local ids).
+    pub fn engine(&self) -> &Arc<SearchEngine> {
+        self.server.engine()
+    }
+
+    /// The serving stack (readiness probe, admission budget).
+    pub fn server(&self) -> &Arc<ReactorServer> {
+        &self.server
+    }
+
+    /// Stop accepting, drain in-flight connections and join the loop.
+    pub fn shutdown(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(thread) = self.thread.take() {
+            let _ = thread.join();
+        }
+    }
+}
+
+impl Drop for NodeHandle {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// Build and serve shard `shard` of `of` on `addr` (port 0 for ephemeral)
+/// in a background thread.  Returns once the listener is bound — the
+/// endpoint is live when this returns.
+pub fn spawn_node(config: Config, shard: usize, of: usize, addr: &str) -> EmdResult<NodeHandle> {
+    let config = node_config(config, shard, of)?;
+    let engine = SearchEngine::from_config(config)?;
+    let server = Arc::new(ReactorServer::bind(engine, addr)?);
+    crate::log_info!(
+        "node",
+        "shard {shard}/{of}: {} docs on {}",
+        server.engine().num_docs(),
+        server.local_addr()?
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    let thread = {
+        let server = Arc::clone(&server);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            if let Err(e) = server.serve_until(&stop) {
+                crate::log_warn!("node", "serve loop exited: {e}");
+            }
+        })
+    };
+    Ok(NodeHandle { server, stop, thread: Some(thread) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+    use std::path::PathBuf;
+
+    fn write_base(name: &str) -> PathBuf {
+        let config = Config {
+            dataset: DatasetSpec::SynthText { n: 24, vocab: 120, dim: 6, seed: 11 },
+            ..Default::default()
+        };
+        let ds = config.load_dataset().unwrap();
+        let dir = std::env::temp_dir().join("emdpar_node_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        crate::data::save(&ds, &path).unwrap();
+        path
+    }
+
+    #[test]
+    fn node_config_slices_and_forces_one_local_shard() {
+        let path = write_base("cfg.bin");
+        let base = Config {
+            dataset: DatasetSpec::File(path.clone()),
+            sharded: Some(ShardParams { shards: 4, max_docs_per_shard: 123 }),
+            ..Default::default()
+        };
+        let node = node_config(base, 1, 4).unwrap();
+        assert_eq!(node.dataset, DatasetSpec::Slice { file: path, shard: 1, of: 4 });
+        let sp = node.sharded.unwrap();
+        assert_eq!(sp.shards, 1, "the coordinator's Router owns the partition");
+        assert_eq!(sp.max_docs_per_shard, 123, "append policy carries over");
+        assert!(node.remote.is_none(), "a node never fans out");
+
+        let synth = Config::default();
+        assert!(node_config(synth, 0, 2).is_err(), "synthetic bases cannot slice");
+        let out_of_range =
+            Config { dataset: DatasetSpec::File(write_base("cfg2.bin")), ..Default::default() };
+        assert!(node_config(out_of_range, 2, 2).is_err());
+    }
+
+    #[test]
+    fn spawned_node_answers_shard_local_searches() {
+        let path = write_base("serve.bin");
+        let full = Config { dataset: DatasetSpec::File(path.clone()), ..Default::default() }
+            .load_dataset()
+            .unwrap();
+        let config = Config {
+            dataset: DatasetSpec::File(path),
+            threads: 2,
+            linger_ms: 1,
+            ..Default::default()
+        };
+        let node = spawn_node(config, 0, 2, "127.0.0.1:0").unwrap();
+        assert_eq!(node.engine().num_docs(), 12, "shard 0 of 2 over 24 docs");
+        let mut c = std::net::TcpStream::connect(node.addr().unwrap()).unwrap();
+        c.write_all(b"{\"op\": \"ping\"}\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(c.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.contains("pong"), "{line}");
+        // a node search returns *local* ids: doc 0 of the slice is global 0
+        // for shard 0, and it must find itself first
+        use crate::util::json::Json;
+        let q = full.histogram(0);
+        let pairs = q
+            .indices()
+            .iter()
+            .zip(q.weights())
+            .map(|(&i, &w)| Json::Arr(vec![Json::Num(i as f64), Json::Num(w as f64)]))
+            .collect();
+        let req = Json::obj(vec![
+            ("op", "search".into()),
+            ("method", "rwmd".into()),
+            ("l", 3.into()),
+            ("query", Json::Arr(pairs)),
+        ]);
+        c.write_all(format!("{}\n", req.to_string_compact()).as_bytes()).unwrap();
+        line.clear();
+        BufReader::new(c.try_clone().unwrap()).read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{line}");
+        let hits = resp.get("hits").and_then(Json::as_arr).unwrap();
+        let first = hits[0].as_arr().unwrap();
+        assert_eq!(first[1].as_usize(), Some(0), "{line}");
+        node.shutdown();
+    }
+}

@@ -1,0 +1,183 @@
+//! The topology manifest: shard id → replica endpoints.
+//!
+//! A coordinator running with `remote.topology` set loads one of these JSON
+//! files and dispatches its `ShardFanout` stage over TCP instead of
+//! in-process shard engines.  The manifest is deliberately tiny:
+//!
+//! ```json
+//! {"shards": [
+//!   {"id": 0, "replicas": ["127.0.0.1:7001", "127.0.0.1:7101"]},
+//!   {"id": 1, "replicas": ["127.0.0.1:7002"]}
+//! ]}
+//! ```
+//!
+//! Shard ids must be dense (`0..num_shards`, each exactly once) and match
+//! the coordinator corpus' shard count — the per-shard top-ℓ merge runs in
+//! shard order, so the manifest's id space *is* the merge order.  Every
+//! shard needs at least one replica; additional replicas serve hedged
+//! requests ([`crate::remote::RemoteFleet`]).
+
+use std::path::Path;
+
+use crate::core::{EmdError, EmdResult};
+use crate::emd_ensure;
+use crate::util::json::Json;
+
+/// A validated topology: `replicas[s]` are shard `s`'s endpoints.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    replicas: Vec<Vec<String>>,
+}
+
+impl Topology {
+    /// Build from per-shard replica lists (`lists[s]` = shard `s`).
+    pub fn new(lists: Vec<Vec<String>>) -> EmdResult<Topology> {
+        emd_ensure!(!lists.is_empty(), config, "topology needs at least one shard");
+        for (s, replicas) in lists.iter().enumerate() {
+            emd_ensure!(
+                !replicas.is_empty(),
+                config,
+                "topology shard {s} needs at least one replica endpoint"
+            );
+            for addr in replicas {
+                emd_ensure!(
+                    !addr.trim().is_empty(),
+                    config,
+                    "topology shard {s} has an empty replica endpoint"
+                );
+            }
+        }
+        Ok(Topology { replicas: lists })
+    }
+
+    /// Parse the manifest object (see module docs).
+    pub fn from_json(j: &Json) -> EmdResult<Topology> {
+        let shards = j
+            .get("shards")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| EmdError::config("topology needs a 'shards' array"))?;
+        emd_ensure!(!shards.is_empty(), config, "topology needs at least one shard");
+        let mut lists: Vec<Option<Vec<String>>> = vec![None; shards.len()];
+        for entry in shards {
+            let id = entry
+                .get("id")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| EmdError::config("topology shard needs an integer 'id'"))?;
+            emd_ensure!(
+                id < lists.len(),
+                config,
+                "topology shard id {id} out of range: ids must be dense 0..{}",
+                lists.len()
+            );
+            emd_ensure!(
+                lists[id].is_none(),
+                config,
+                "topology shard id {id} appears more than once"
+            );
+            let arr = entry
+                .get("replicas")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| EmdError::config("topology shard needs a 'replicas' array"))?;
+            let mut replicas = Vec::with_capacity(arr.len());
+            for a in arr {
+                let addr = a
+                    .as_str()
+                    .ok_or_else(|| EmdError::config("topology replicas are address strings"))?;
+                replicas.push(addr.to_string());
+            }
+            lists[id] = Some(replicas);
+        }
+        // dense + each-exactly-once is guaranteed by the range/dup checks
+        Topology::new(lists.into_iter().map(|l| l.expect("dense ids")).collect())
+    }
+
+    /// Load and parse a manifest file.
+    pub fn from_file(path: &Path) -> EmdResult<Topology> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| EmdError::io(format!("cannot read topology {path:?}: {e}")))?;
+        let j = Json::parse(&text)
+            .map_err(|e| EmdError::config(format!("bad topology JSON in {path:?}: {e}")))?;
+        Topology::from_json(&j)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "shards",
+            Json::Arr(
+                self.replicas
+                    .iter()
+                    .enumerate()
+                    .map(|(id, replicas)| {
+                        Json::obj(vec![
+                            ("id", id.into()),
+                            (
+                                "replicas",
+                                Json::Arr(
+                                    replicas.iter().map(|a| Json::Str(a.clone())).collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Shard `s`'s replica endpoints (primary first).
+    pub fn replicas(&self, shard: usize) -> &[String] {
+        &self.replicas[shard]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_round_trips() {
+        let text = r#"{"shards": [
+            {"id": 1, "replicas": ["127.0.0.1:7002"]},
+            {"id": 0, "replicas": ["127.0.0.1:7001", "127.0.0.1:7101"]}
+        ]}"#;
+        let topo = Topology::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(topo.num_shards(), 2);
+        assert_eq!(topo.replicas(0), ["127.0.0.1:7001", "127.0.0.1:7101"]);
+        assert_eq!(topo.replicas(1), ["127.0.0.1:7002"]);
+        let back =
+            Topology::from_json(&Json::parse(&topo.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back, topo);
+    }
+
+    #[test]
+    fn rejects_sparse_duplicate_or_empty() {
+        for bad in [
+            r#"{"shards": []}"#,
+            r#"{"shards": [{"id": 1, "replicas": ["a:1"]}]}"#,
+            r#"{"shards": [{"id": 0, "replicas": ["a:1"]}, {"id": 0, "replicas": ["a:2"]}]}"#,
+            r#"{"shards": [{"id": 0, "replicas": []}]}"#,
+            r#"{"shards": [{"id": 0, "replicas": [" "]}]}"#,
+            r#"{"noshards": true}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Topology::from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn file_loader_reports_clean_errors() {
+        let dir = std::env::temp_dir().join("emdpar_topology_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("topo.json");
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(Topology::from_file(&path).is_err());
+        std::fs::write(&path, r#"{"shards": [{"id": 0, "replicas": ["h:1"]}]}"#).unwrap();
+        assert_eq!(Topology::from_file(&path).unwrap().num_shards(), 1);
+        assert!(Topology::from_file(&dir.join("missing.json")).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

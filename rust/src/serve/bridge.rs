@@ -203,7 +203,12 @@ pub(crate) fn spawn_dispatcher(engine: Arc<SearchEngine>) -> Sender<Pending<Job,
                                     served: res.hits.iter().map(|&(_, id)| id).collect(),
                                 });
                             }
-                            Ok(wire::search_result_line(&res, cert, resp.spans.as_deref()))
+                            Ok(wire::search_result_line(
+                                &res,
+                                cert,
+                                resp.stats.partial,
+                                resp.spans.as_deref(),
+                            ))
                         }
                         Err(e) => {
                             engine.telemetry().record_error(&key);
@@ -244,6 +249,7 @@ pub(crate) fn spawn_dispatcher(engine: Arc<SearchEngine>) -> Sender<Pending<Job,
                     match out {
                         Ok(resp) => {
                             engine.telemetry().record(&key, &resp.stats);
+                            let partial = resp.stats.partial;
                             let certs = resp.stats.certified;
                             // one grouped execute, one shared timeline: each
                             // traced member gets the whole group's spans
@@ -269,6 +275,7 @@ pub(crate) fn spawn_dispatcher(engine: Arc<SearchEngine>) -> Sender<Pending<Job,
                                     Ok(wire::search_result_line(
                                         &res,
                                         certs.get(i).copied(),
+                                        partial,
                                         tl,
                                     ))
                                 })

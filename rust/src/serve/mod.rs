@@ -113,8 +113,10 @@ impl ReactorServer {
     }
 
     /// Build the `/readyz` probe for this server: ready means the corpus
-    /// is loaded, every configured index is trained, and admission is not
-    /// saturated (traffic is not being shed right now).
+    /// is loaded, every configured index is trained, admission is not
+    /// saturated (traffic is not being shed right now), and — for a remote
+    /// fan-out coordinator — every remote shard has at least one reachable
+    /// replica.
     pub fn ready_probe(&self) -> crate::obs::http::ReadyProbe {
         let engine = Arc::clone(&self.engine);
         let admission = self.admission.clone();
@@ -128,6 +130,11 @@ impl ReactorServer {
                     admission.in_flight(),
                     admission.capacity()
                 ));
+            }
+            if let Some(fleet) = engine.remote_fleet() {
+                if let Some(why) = fleet.ready_error() {
+                    return Err(format!("not ready: {why}"));
+                }
             }
             Ok(())
         })

@@ -52,14 +52,16 @@ pub(crate) fn decode_line(line: &str) -> Decoded {
 // ---------------------------------------------------------------------------
 
 /// Serialize one search success straight into bytes:
-/// `{"certified":…,"hits":[[d,id,label],…],"ok":true,"trace":[…]}` —
-/// identical to serializing the tree the legacy server used to build
-/// (object keys in BTreeMap order).  `trace` is the per-request span
-/// timeline, present only on `"trace": true` requests, so untraced
-/// responses stay byte-for-byte what they were before tracing existed.
+/// `{"certified":…,"hits":[[d,id,label],…],"ok":true,"partial":true,`
+/// `"trace":[…]}` — identical to serializing the tree the legacy server
+/// used to build (object keys in BTreeMap order).  `partial` is emitted
+/// only when `true` (a remote fan-out dropped a shard from the merge) and
+/// `trace` only on `"trace": true` requests, so ordinary responses stay
+/// byte-for-byte what they were before either field existed.
 pub(crate) fn search_result_line(
     res: &SearchResult,
     certified: Option<bool>,
+    partial: bool,
     trace: Option<&[SpanRec]>,
 ) -> Vec<u8> {
     let mut s = String::with_capacity(24 + res.hits.len() * 24);
@@ -83,6 +85,9 @@ pub(crate) fn search_result_line(
         s.push(']');
     }
     s.push_str("],\"ok\":true");
+    if partial {
+        s.push_str(",\"partial\":true");
+    }
     if let Some(spans) = trace {
         s.push_str(",\"trace\":");
         // the timeline rides through the tree serializer: it is cold
@@ -633,32 +638,38 @@ mod tests {
             labels: vec![1, 0, 9, 65535],
         };
         for certified in [None, Some(true), Some(false)] {
-            // the tree the legacy server used to build
-            let mut map: BTreeMap<String, Json> = BTreeMap::new();
-            map.insert("ok".into(), Json::Bool(true));
-            map.insert(
-                "hits".into(),
-                Json::Arr(
-                    res.hits
-                        .iter()
-                        .zip(&res.labels)
-                        .map(|(&(d, id), &lab)| {
-                            Json::Arr(vec![
-                                Json::Num(d as f64),
-                                Json::Num(id as f64),
-                                Json::Num(lab as f64),
-                            ])
-                        })
-                        .collect(),
-                ),
-            );
-            if let Some(c) = certified {
-                map.insert("certified".into(), Json::Bool(c));
+            for partial in [false, true] {
+                // the tree the legacy server used to build
+                let mut map: BTreeMap<String, Json> = BTreeMap::new();
+                map.insert("ok".into(), Json::Bool(true));
+                map.insert(
+                    "hits".into(),
+                    Json::Arr(
+                        res.hits
+                            .iter()
+                            .zip(&res.labels)
+                            .map(|(&(d, id), &lab)| {
+                                Json::Arr(vec![
+                                    Json::Num(d as f64),
+                                    Json::Num(id as f64),
+                                    Json::Num(lab as f64),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                );
+                if let Some(c) = certified {
+                    map.insert("certified".into(), Json::Bool(c));
+                }
+                if partial {
+                    map.insert("partial".into(), Json::Bool(true));
+                }
+                let tree = Json::Obj(map).to_string_compact();
+                let streamed =
+                    String::from_utf8(search_result_line(&res, certified, partial, None))
+                        .unwrap();
+                assert_eq!(streamed, tree);
             }
-            let tree = Json::Obj(map).to_string_compact();
-            let streamed =
-                String::from_utf8(search_result_line(&res, certified, None)).unwrap();
-            assert_eq!(streamed, tree);
         }
     }
 
@@ -674,7 +685,8 @@ mod tests {
             start_us: 0,
             dur_us: 120,
         }];
-        let line = String::from_utf8(search_result_line(&res, None, Some(&spans))).unwrap();
+        let line =
+            String::from_utf8(search_result_line(&res, None, false, Some(&spans))).unwrap();
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
         let tl = j.get("trace").and_then(Json::as_arr).expect("timeline present");
@@ -685,7 +697,7 @@ mod tests {
         assert!(line.ends_with("}]}"), "{line}");
         assert_eq!(line, Json::parse(&line).unwrap().to_string_compact(), "canonical form");
         // and the untraced line is a strict prefix + '}' of the traced one
-        let plain = String::from_utf8(search_result_line(&res, None, None)).unwrap();
+        let plain = String::from_utf8(search_result_line(&res, None, false, None)).unwrap();
         assert!(line.starts_with(plain.trim_end_matches('}')), "{plain} vs {line}");
     }
 

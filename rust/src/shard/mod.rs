@@ -27,6 +27,10 @@
 //!   index + doc counts, so a restarted server reloads the same live
 //!   corpus (stale fingerprints and wrong versions rejected before
 //!   allocation).
+//! * [`segments`] — the `EMDX` **version 3** append segment: `add_docs`
+//!   persistence appends one `O(batch)` segment file instead of rewriting
+//!   the whole `EMD1` dataset; a restarted node replays the segment chain
+//!   through the deterministic append placement.
 //!
 //! The coordinator ([`crate::coordinator::SearchEngine`]) routes through a
 //! [`ShardedCorpus`] when [`crate::config::Config::sharded`] is set, exposes
@@ -36,6 +40,7 @@
 pub mod corpus;
 pub mod manifest;
 pub mod search;
+pub mod segments;
 
 pub use corpus::{AppendOutcome, DocView, Shard, ShardStat, ShardedCorpus};
 pub use manifest::{
@@ -43,3 +48,7 @@ pub use manifest::{
     MANIFEST_VERSION,
 };
 pub use search::{search, search_batch, search_batch_budgeted, ShardedBatch, ShardedSearch};
+pub use segments::{
+    append_segment, clear_segments, list_segments, load_segment, replay_segments, segments_dir,
+    Segment, SEGMENT_VERSION,
+};

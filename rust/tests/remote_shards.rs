@@ -1,0 +1,542 @@
+//! Distributed-corpus integration suite: `emdpar node` shard servers
+//! behind the hedged fan-out client, against the in-process fan-out.
+//!
+//! * bit-identity: remote fan-out at full probe returns byte-identical
+//!   hits to the in-process sharded engine across plain, indexed and
+//!   certified-cascade requests,
+//! * fault injection: a stalled primary is hedged (bit-identical result),
+//!   a replica killed on accept is retried on the survivor, a shard with
+//!   no live replica is dropped from the merge with `partial: true`
+//!   (surfaced on the wire too), and garbage / truncated responses become
+//!   structured errors instead of hangs,
+//! * segmented persistence: `add_docs` appends `EMDX` v3 segments without
+//!   rewriting the base dataset or earlier segments, restarts replay the
+//!   chain, and a full rewrite folds + clears it — on the coordinator and
+//!   on a slice-backed node.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use emdpar::prelude::{
+    spawn_node, CascadeSpec, Config, DatasetSpec, Histogram, IndexParams, Method, ReactorServer,
+    RemoteParams, SearchEngine, SearchRequest, SearchResult, ShardParams, Topology,
+};
+use emdpar::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// harness
+// ---------------------------------------------------------------------------
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("emdpar_remote_shards").join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Generate a deterministic base dataset and persist it as the shared
+/// `EMD1` file every node slices.
+fn write_base(dir: &Path, n: usize, seed: u64) -> PathBuf {
+    let ds = Config {
+        dataset: DatasetSpec::SynthText { n, vocab: 160, dim: 8, seed },
+        ..Default::default()
+    }
+    .load_dataset()
+    .unwrap();
+    let path = dir.join("base.bin");
+    emdpar::data::save(&ds, &path).unwrap();
+    path
+}
+
+fn write_topology(dir: &Path, lists: Vec<Vec<String>>) -> String {
+    let topo = Topology::new(lists).unwrap();
+    let path = dir.join("topo.json");
+    std::fs::write(&path, topo.to_json().to_string_compact()).unwrap();
+    path.to_string_lossy().into_owned()
+}
+
+fn two_shards() -> Option<ShardParams> {
+    Some(ShardParams { shards: 2, max_docs_per_shard: 1 << 20 })
+}
+
+fn remote_params(topology: String) -> RemoteParams {
+    RemoteParams { topology, shard_timeout_ms: 5000, hedge_ms: 50, pool: 2, retries: 2 }
+}
+
+/// f32 bit patterns: asserting on these is the bit-identity claim.
+fn bits(res: &SearchResult) -> Vec<(u32, usize)> {
+    res.hits.iter().map(|&(d, id)| (d.to_bits(), id)).collect()
+}
+
+fn assert_identical(local: &[SearchResult], remote: &[SearchResult], what: &str) {
+    assert_eq!(local.len(), remote.len(), "{what}: result count");
+    for (q, (a, b)) in local.iter().zip(remote).enumerate() {
+        assert_eq!(bits(a), bits(b), "{what}: query {q} hits diverge");
+        assert_eq!(a.labels, b.labels, "{what}: query {q} labels diverge");
+    }
+}
+
+/// Misbehaving replica endpoints for fault injection.
+#[derive(Clone, Copy)]
+enum FakeMode {
+    /// Accept and hold the connection open without ever answering.
+    Stall,
+    /// Accept, then immediately close (a replica dying mid-stream).
+    CloseOnAccept,
+    /// Answer every request line with a non-JSON line.
+    Garbage,
+    /// Answer with a truncated JSON fragment, then close.
+    Truncate,
+}
+
+fn fake_node(mode: FakeMode) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { return };
+            std::thread::spawn(move || handle_fake(stream, mode));
+        }
+    });
+    addr
+}
+
+fn handle_fake(stream: TcpStream, mode: FakeMode) {
+    match mode {
+        FakeMode::CloseOnAccept => drop(stream),
+        FakeMode::Stall => {
+            // drain whatever arrives but never answer; the connection dies
+            // when the client (deadline or hedge winner) shuts it down
+            let mut buf = [0u8; 1024];
+            let mut r = &stream;
+            while matches!(r.read(&mut buf), Ok(n) if n > 0) {}
+        }
+        FakeMode::Garbage => {
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut w = &stream;
+            let mut line = String::new();
+            while reader.read_line(&mut line).map(|n| n > 0).unwrap_or(false) {
+                if w.write_all(b"not json\n").and_then(|()| w.flush()).is_err() {
+                    break;
+                }
+                line.clear();
+            }
+        }
+        FakeMode::Truncate => {
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            if reader.read_line(&mut line).map(|n| n > 0).unwrap_or(false) {
+                let mut w = &stream;
+                w.write_all(b"{\"ok\":true,\"hits\":[[0.25").and_then(|()| w.flush()).ok();
+            }
+            stream.shutdown(Shutdown::Both).ok();
+        }
+    }
+}
+
+fn queries_from(path: &Path, n: usize) -> Vec<Histogram> {
+    let ds = emdpar::data::load(path).unwrap();
+    (0..n.min(ds.len())).map(|u| ds.histogram(u)).collect()
+}
+
+/// `{"op":"search",...}` request line for one query.
+fn search_line(q: &Histogram, l: usize) -> String {
+    let pairs = q
+        .indices()
+        .iter()
+        .zip(q.weights())
+        .map(|(&i, &w)| Json::Arr(vec![Json::Num(i as f64), Json::Num(w as f64)]))
+        .collect();
+    let req = Json::obj(vec![
+        ("op", "search".into()),
+        ("method", "rwmd".into()),
+        ("l", l.into()),
+        ("query", Json::Arr(pairs)),
+    ]);
+    req.to_string_compact()
+}
+
+// ---------------------------------------------------------------------------
+// bit-identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn remote_fanout_is_bit_identical_to_in_process() {
+    let dir = fresh_dir("identity");
+    let base = write_base(&dir, 40, 21);
+    let index =
+        Some(IndexParams { nlist: 4, nprobe: 4, train_iters: 5, seed: 2, min_points_per_list: 1 });
+    let node_cfg = Config {
+        dataset: DatasetSpec::File(base.clone()),
+        threads: 2,
+        linger_ms: 1,
+        index,
+        ..Default::default()
+    };
+    let n0 = spawn_node(node_cfg.clone(), 0, 2, "127.0.0.1:0").unwrap();
+    let n1 = spawn_node(node_cfg, 1, 2, "127.0.0.1:0").unwrap();
+    let topo = write_topology(
+        &dir,
+        vec![vec![n0.addr().unwrap().to_string()], vec![n1.addr().unwrap().to_string()]],
+    );
+    let mk = |index: Option<IndexParams>, remote: Option<RemoteParams>| Config {
+        dataset: DatasetSpec::File(base.clone()),
+        threads: 2,
+        sharded: two_shards(),
+        index,
+        remote,
+        ..Default::default()
+    };
+    let queries = queries_from(&base, 8);
+
+    // the same node pair serves a plain and an indexed coordinator: the
+    // wire probe width is always explicit, so a plain coordinator keeps
+    // the nodes exhaustive
+    for (what, index) in [("plain", None), ("indexed full probe", index)] {
+        let local = SearchEngine::from_config(mk(index, None)).unwrap();
+        let remote =
+            SearchEngine::from_config(mk(index, Some(remote_params(topo.clone())))).unwrap();
+
+        let plain = SearchRequest::batch(queries.clone()).method(Method::Rwmd).topl(5);
+        let a = local.execute(&plain).unwrap();
+        let b = remote.execute(&plain).unwrap();
+        assert_identical(&a.results, &b.results, what);
+        assert!(!b.stats.partial, "{what}: every shard answered");
+
+        let cascade = SearchRequest::batch(queries.clone())
+            .cascade(CascadeSpec::new(Method::Act { k: 2 }).certified(true))
+            .topl(5);
+        let a = local.execute(&cascade).unwrap();
+        let b = remote.execute(&cascade).unwrap();
+        assert_identical(&a.results, &b.results, &format!("{what} cascade"));
+        assert_eq!(a.stats.certified, b.stats.certified, "{what}: certificates diverge");
+        assert!(!b.stats.partial);
+
+        // remote connectivity surfaces as ready + connected
+        let fleet = remote.remote_fleet().expect("remote engine has a fleet");
+        assert!(fleet.ready_error().is_none(), "every shard reachable");
+        let status = fleet.status_json().to_string_compact();
+        assert!(status.contains("\"state\":\"connected\""), "{status}");
+    }
+
+    // reduced probe stays partial-free and keeps useful recall (the node
+    // trains its own index copy, so only full probe promises identity)
+    let local = SearchEngine::from_config(mk(index, None)).unwrap();
+    let remote = SearchEngine::from_config(mk(index, Some(remote_params(topo)))).unwrap();
+    let truth = local
+        .execute(&SearchRequest::batch(queries.clone()).method(Method::Rwmd).topl(5))
+        .unwrap();
+    let reduced = remote
+        .execute(&SearchRequest::batch(queries).method(Method::Rwmd).topl(5).nprobe(3))
+        .unwrap();
+    assert!(!reduced.stats.partial);
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for (t, r) in truth.results.iter().zip(&reduced.results) {
+        total += t.hits.len();
+        hit += t
+            .hits
+            .iter()
+            .filter(|(_, id)| r.hits.iter().any(|&(_, rid)| rid == *id))
+            .count();
+    }
+    assert!(
+        hit * 2 >= total,
+        "reduced-probe recall collapsed: {hit}/{total} of the exhaustive top-5"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// fault injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stalled_primary_is_hedged_bit_identically() {
+    let dir = fresh_dir("hedge");
+    let base = write_base(&dir, 30, 5);
+    let node_cfg = Config {
+        dataset: DatasetSpec::File(base.clone()),
+        threads: 2,
+        linger_ms: 1,
+        ..Default::default()
+    };
+    let n0 = spawn_node(node_cfg.clone(), 0, 2, "127.0.0.1:0").unwrap();
+    let n1 = spawn_node(node_cfg, 1, 2, "127.0.0.1:0").unwrap();
+    let stalled = fake_node(FakeMode::Stall);
+    // shard 0's primary never answers; the hedge must win on the replica
+    let topo = write_topology(
+        &dir,
+        vec![
+            vec![stalled.to_string(), n0.addr().unwrap().to_string()],
+            vec![n1.addr().unwrap().to_string()],
+        ],
+    );
+    let mk = |remote: Option<RemoteParams>| Config {
+        dataset: DatasetSpec::File(base.clone()),
+        threads: 2,
+        sharded: two_shards(),
+        remote,
+        ..Default::default()
+    };
+    let local = SearchEngine::from_config(mk(None)).unwrap();
+    let remote = SearchEngine::from_config(mk(Some(RemoteParams {
+        topology: topo,
+        shard_timeout_ms: 5000,
+        hedge_ms: 5,
+        pool: 2,
+        retries: 2,
+    })))
+    .unwrap();
+
+    let req = SearchRequest::batch(queries_from(&base, 4)).method(Method::Rwmd).topl(4);
+    let a = local.execute(&req).unwrap();
+    let b = remote.execute(&req).unwrap();
+    assert_identical(&a.results, &b.results, "hedged");
+    assert!(!b.stats.partial, "the hedge completed shard 0");
+    assert!(
+        remote.metrics().remote_hedges.load(Ordering::Relaxed) >= 1,
+        "hedge counter never fired"
+    );
+}
+
+#[test]
+fn replica_killed_on_accept_is_retried_on_the_survivor() {
+    let dir = fresh_dir("retry");
+    let base = write_base(&dir, 30, 6);
+    let node_cfg = Config {
+        dataset: DatasetSpec::File(base.clone()),
+        threads: 2,
+        linger_ms: 1,
+        ..Default::default()
+    };
+    let n0 = spawn_node(node_cfg.clone(), 0, 2, "127.0.0.1:0").unwrap();
+    let n1 = spawn_node(node_cfg, 1, 2, "127.0.0.1:0").unwrap();
+    let dying = fake_node(FakeMode::CloseOnAccept);
+    let topo = write_topology(
+        &dir,
+        vec![
+            vec![dying.to_string(), n0.addr().unwrap().to_string()],
+            vec![n1.addr().unwrap().to_string()],
+        ],
+    );
+    let mk = |remote: Option<RemoteParams>| Config {
+        dataset: DatasetSpec::File(base.clone()),
+        threads: 2,
+        sharded: two_shards(),
+        remote,
+        ..Default::default()
+    };
+    let local = SearchEngine::from_config(mk(None)).unwrap();
+    // hedging off: only the retry path can rescue shard 0
+    let remote = SearchEngine::from_config(mk(Some(RemoteParams {
+        topology: topo,
+        shard_timeout_ms: 5000,
+        hedge_ms: 0,
+        pool: 2,
+        retries: 2,
+    })))
+    .unwrap();
+
+    let req = SearchRequest::batch(queries_from(&base, 4)).method(Method::Rwmd).topl(4);
+    let a = local.execute(&req).unwrap();
+    let b = remote.execute(&req).unwrap();
+    assert_identical(&a.results, &b.results, "retried");
+    assert!(!b.stats.partial);
+    assert!(
+        remote.metrics().remote_retries.load(Ordering::Relaxed) >= 1,
+        "retry counter never fired"
+    );
+}
+
+#[test]
+fn dead_shard_drops_to_partial_and_marks_the_wire() {
+    let dir = fresh_dir("partial");
+    let base = write_base(&dir, 30, 7);
+    let node_cfg = Config {
+        dataset: DatasetSpec::File(base.clone()),
+        threads: 2,
+        linger_ms: 1,
+        ..Default::default()
+    };
+    let n0 = spawn_node(node_cfg, 0, 2, "127.0.0.1:0").unwrap();
+    let stalled = fake_node(FakeMode::Stall);
+    let topo = write_topology(
+        &dir,
+        vec![vec![n0.addr().unwrap().to_string()], vec![stalled.to_string()]],
+    );
+    let remote = SearchEngine::from_config(Config {
+        dataset: DatasetSpec::File(base.clone()),
+        threads: 2,
+        linger_ms: 1,
+        sharded: two_shards(),
+        remote: Some(RemoteParams {
+            topology: topo,
+            shard_timeout_ms: 150,
+            hedge_ms: 0,
+            pool: 1,
+            retries: 0,
+        }),
+        ..Default::default()
+    })
+    .unwrap();
+
+    let queries = queries_from(&base, 3);
+    let resp = remote
+        .execute(&SearchRequest::batch(queries.clone()).method(Method::Rwmd).topl(4))
+        .unwrap();
+    assert!(resp.stats.partial, "shard 1 missed its deadline");
+    for res in &resp.results {
+        assert!(!res.hits.is_empty(), "surviving shards still answer");
+        for &(_, id) in &res.hits {
+            assert!(id < 15, "hit {id} came from the dropped shard (shard 0 owns 0..15)");
+        }
+    }
+    assert!(remote.metrics().remote_timeouts.load(Ordering::Relaxed) >= 1);
+
+    // the degraded fleet is visible to health surfaces
+    let fleet = remote.remote_fleet().unwrap();
+    assert!(fleet.ready_error().unwrap().contains("shard 1"), "readiness names the dead shard");
+
+    // and the wire carries the partial marker
+    let server = ReactorServer::bind(remote, "127.0.0.1:0").unwrap();
+    let stream = TcpStream::connect(server.local_addr().unwrap()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    w.write_all(format!("{}\n", search_line(&queries[0], 4)).as_bytes()).unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+    assert!(line.contains("\"partial\":true"), "{line}");
+}
+
+#[test]
+fn garbage_and_truncated_responses_are_structured_errors() {
+    let dir = fresh_dir("garbage");
+    let base = write_base(&dir, 24, 8);
+    let mk = |addr: SocketAddr, name: &str| {
+        let topo_dir = dir.join(name);
+        std::fs::create_dir_all(&topo_dir).unwrap();
+        let topo = write_topology(&topo_dir, vec![vec![addr.to_string()]]);
+        SearchEngine::from_config(Config {
+            dataset: DatasetSpec::File(base.clone()),
+            threads: 2,
+            sharded: Some(ShardParams { shards: 1, max_docs_per_shard: 1 << 20 }),
+            remote: Some(RemoteParams {
+                topology: topo,
+                shard_timeout_ms: 500,
+                hedge_ms: 0,
+                pool: 1,
+                retries: 1,
+            }),
+            ..Default::default()
+        })
+        .unwrap()
+    };
+    let queries = queries_from(&base, 2);
+    let req = SearchRequest::batch(queries).method(Method::Rwmd).topl(3);
+
+    for (mode, name, expect) in [
+        (FakeMode::Garbage, "garbage", "garbage response"),
+        (FakeMode::Truncate, "truncate", "remote shards failed"),
+    ] {
+        let engine = mk(fake_node(mode), name);
+        let begin = Instant::now();
+        let err = engine.execute(&req).unwrap_err().to_string();
+        assert!(
+            begin.elapsed() < Duration::from_secs(10),
+            "{name}: error took {:?} — the client hung instead of failing",
+            begin.elapsed()
+        );
+        assert!(err.contains("remote shards failed"), "{name}: {err}");
+        assert!(err.contains(expect), "{name}: {err}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// segmented persistence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn appends_write_segments_and_never_rewrite_the_base() {
+    let dir = fresh_dir("segments");
+    let base = write_base(&dir, 24, 33);
+    let cfg = Config {
+        dataset: DatasetSpec::File(base.clone()),
+        threads: 2,
+        sharded: two_shards(),
+        ..Default::default()
+    };
+    let engine = SearchEngine::from_config(cfg.clone()).unwrap();
+    let ds = emdpar::data::load(&base).unwrap();
+    let base_bytes = std::fs::read(&base).unwrap();
+    let segdir = dir.join("base.bin.segments");
+
+    let docs: Vec<Histogram> = (0..2).map(|u| ds.histogram(u)).collect();
+    engine.add_docs(&docs, &[7, 8]).unwrap();
+    let seg0 = segdir.join("seg-000000.emdx");
+    assert!(seg0.exists(), "first append wrote no segment");
+    let seg0_bytes = std::fs::read(&seg0).unwrap();
+
+    // the regression this suite exists for: a second append must extend
+    // the chain, not rewrite segment 0 or the base dataset
+    engine.add_docs(&docs[..1], &[9]).unwrap();
+    assert!(segdir.join("seg-000001.emdx").exists(), "second append opened no new segment");
+    assert_eq!(
+        std::fs::read(&seg0).unwrap(),
+        seg0_bytes,
+        "second append rewrote segment 0"
+    );
+    assert_eq!(
+        std::fs::read(&base).unwrap(),
+        base_bytes,
+        "append rewrote the base dataset"
+    );
+    assert_eq!(engine.num_docs(), 27);
+
+    // a restart replays the chain onto the untouched base
+    let restarted = SearchEngine::from_config(cfg.clone()).unwrap();
+    assert_eq!(restarted.num_docs(), 27);
+    for g in 24..27 {
+        let a = engine.doc_histogram(g).unwrap();
+        let b = restarted.doc_histogram(g).unwrap();
+        assert_eq!(a.indices(), b.indices(), "doc {g}");
+        assert_eq!(a.weights(), b.weights(), "doc {g}");
+    }
+
+    // a full rewrite folds the segments into the base and clears the chain
+    assert!(restarted.persist_shards().unwrap());
+    assert!(!seg0.exists(), "persist_shards left stale segments behind");
+    assert_ne!(std::fs::read(&base).unwrap(), base_bytes, "rewrite absorbed the appends");
+    let folded = SearchEngine::from_config(cfg).unwrap();
+    assert_eq!(folded.num_docs(), 27);
+}
+
+#[test]
+fn node_appends_persist_in_slice_segments_and_replay() {
+    let dir = fresh_dir("node_segments");
+    let base = write_base(&dir, 24, 44);
+    let cfg = Config {
+        dataset: DatasetSpec::File(base.clone()),
+        threads: 2,
+        linger_ms: 1,
+        ..Default::default()
+    };
+    let node = spawn_node(cfg.clone(), 0, 2, "127.0.0.1:0").unwrap();
+    assert_eq!(node.engine().num_docs(), 12, "shard 0 of 2 over 24 docs");
+    let base_bytes = std::fs::read(&base).unwrap();
+
+    let ds = emdpar::data::load(&base).unwrap();
+    node.engine().add_docs(&[ds.histogram(3)], &[5]).unwrap();
+    assert_eq!(node.engine().num_docs(), 13);
+    // slice appends chain next to a per-slice sibling, never the shared base
+    let segdir = dir.join("base.bin.s0of2.segments");
+    assert!(segdir.join("seg-000000.emdx").exists(), "slice append wrote no segment");
+    assert_eq!(std::fs::read(&base).unwrap(), base_bytes, "node rewrote the shared base");
+    node.shutdown();
+
+    let node = spawn_node(cfg, 0, 2, "127.0.0.1:0").unwrap();
+    assert_eq!(node.engine().num_docs(), 13, "restart replayed the slice chain");
+    node.shutdown();
+}
